@@ -1,0 +1,29 @@
+//! Dimension-sweep bench — the series behind paper Figure 14: runtime vs
+//! the number of attributes d at fixed n (exponential blowup past
+//! d = log2 n, §4.2).
+
+use std::time::Instant;
+
+use magquilt::kpgm::Initiator;
+use magquilt::magm::MagmParams;
+use magquilt::quilt::QuiltSampler;
+
+fn main() {
+    let fast = std::env::var("MAGQUILT_BENCH_FAST").is_ok();
+    let log2n: u32 = if fast { 10 } else { 14 };
+    let n = 1usize << log2n;
+    println!("# bench: d sweep at n = 2^{log2n} (paper Fig. 14)");
+    println!("{:>4} {:>12} {:>10}", "d", "quilt_ms", "note");
+    for d in (log2n - 4)..=(log2n + 3) {
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
+        let trials = if d > log2n { 1 } else { 3 };
+        let mut best = f64::INFINITY;
+        for t in 0..trials {
+            let start = Instant::now();
+            let _ = QuiltSampler::new(params.clone()).seed(t).sample();
+            best = best.min(start.elapsed().as_secs_f64() * 1e3);
+        }
+        let note = if d == log2n { "<- d = log2 n" } else { "" };
+        println!("{d:>4} {best:>12.2} {note:>10}");
+    }
+}

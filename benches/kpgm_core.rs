@@ -1,0 +1,73 @@
+//! Hot-path microbenchmarks for Algorithm 1: quadrisection descent cost,
+//! edge-count draw, full KPGM samples. This is the inner loop that every
+//! quilt piece pays `X` times — the primary L3 optimization target.
+
+use std::time::Instant;
+
+use magquilt::kpgm::{BallDropSampler, Initiator, ThetaSeq};
+use magquilt::rng::Rng;
+
+fn fast() -> bool {
+    std::env::var("MAGQUILT_BENCH_FAST").is_ok()
+}
+
+fn main() {
+    let reps: u64 = if fast() { 1_000_000 } else { 10_000_000 };
+    println!("# bench: kpgm core (Algorithm 1 inner loop)");
+
+    // Raw RNG throughput for context.
+    let mut rng = Rng::new(1);
+    let start = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..reps {
+        acc ^= rng.next_u64();
+    }
+    let ns = start.elapsed().as_nanos() as f64 / reps as f64;
+    println!("rng.next_u64: {ns:.2} ns/call (sink {acc})");
+
+    // categorical4 (the descent's per-level op).
+    let w = Initiator::THETA1.weights();
+    let start = Instant::now();
+    let mut acc2 = 0usize;
+    for _ in 0..reps {
+        acc2 += rng.categorical4(&w);
+    }
+    let ns = start.elapsed().as_nanos() as f64 / reps as f64;
+    println!("rng.categorical4: {ns:.2} ns/call (sink {acc2})");
+
+    // Full descent at several depths.
+    for d in [10u32, 16, 20, 24] {
+        let sampler = BallDropSampler::new(ThetaSeq::homogeneous(Initiator::THETA1, d));
+        let drops = reps / d as u64;
+        let start = Instant::now();
+        let mut acc3 = 0u64;
+        for _ in 0..drops {
+            let (s, t) = sampler.drop_one(&mut rng);
+            acc3 ^= (s as u64) << 32 | t as u64;
+        }
+        let ns = start.elapsed().as_nanos() as f64 / drops as f64;
+        println!(
+            "drop_one d={d}: {ns:.1} ns/drop = {:.2} ns/level (sink {acc3})",
+            ns / d as f64
+        );
+    }
+
+    // End-to-end KPGM sample (includes dedup set).
+    for d in [12u32, 16, 18] {
+        let sampler = BallDropSampler::new(ThetaSeq::homogeneous(Initiator::THETA1, d));
+        let trials = if fast() { 2 } else { 5 };
+        let mut best = f64::INFINITY;
+        let mut edges = 0;
+        for t in 0..trials {
+            let mut r = Rng::new(t);
+            let start = Instant::now();
+            let g = sampler.sample(&mut r);
+            best = best.min(start.elapsed().as_secs_f64() * 1e3);
+            edges = g.num_edges();
+        }
+        println!(
+            "kpgm sample d={d}: {best:.2} ms for {edges} edges = {:.0} ns/edge",
+            best * 1e6 / edges.max(1) as f64
+        );
+    }
+}

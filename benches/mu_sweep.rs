@@ -1,0 +1,68 @@
+//! μ-sweep bench — the series behind paper Figures 12 and 13: relative
+//! running time ρ(μ) of the hybrid sampler, and the ablation plain-quilt
+//! vs hybrid at high μ (the §5 speedup's payoff).
+
+use std::time::Instant;
+
+use magquilt::kpgm::Initiator;
+use magquilt::magm::MagmParams;
+use magquilt::quilt::{HybridSampler, QuiltSampler};
+
+fn time_one<F: FnMut() -> usize>(trials: u32, mut f: F) -> (f64, usize) {
+    let mut best = f64::INFINITY;
+    let mut edges = 0;
+    for _ in 0..trials {
+        let start = Instant::now();
+        edges = f();
+        best = best.min(start.elapsed().as_secs_f64() * 1e3);
+    }
+    (best, edges)
+}
+
+fn main() {
+    let fast = std::env::var("MAGQUILT_BENCH_FAST").is_ok();
+    let (d, trials) = if fast { (10u32, 2u32) } else { (14, 3) };
+    let n = 1usize << d;
+    println!("# bench: mu sweep at n = 2^{d} (paper Fig. 12/13) + §5 ablation");
+    println!(
+        "{:>5} {:>12} {:>12} {:>8} {:>12} {:>10}",
+        "mu", "hybrid_ms", "quilt_ms", "rho", "edges", "hybrid_win"
+    );
+    let mut t_half = f64::NAN;
+    for &mu in &[0.1, 0.3, 0.5, 0.6, 0.7, 0.8, 0.9] {
+        let params = MagmParams::homogeneous(Initiator::THETA1, mu, n, d);
+        let p1 = params.clone();
+        let mut seed = 0u64;
+        let (hybrid_ms, edges) = time_one(trials, move || {
+            seed += 1;
+            HybridSampler::new(p1.clone()).seed(seed).sample().num_edges()
+        });
+        // Plain Algorithm 2 for the ablation. Away from mu = 0.5 this is
+        // the expensive path (B ~ n·max(mu, 1-mu)^d, so B² pieces explode
+        // symmetrically toward both mu → 0 and mu → 1) — cap it.
+        let quilt_ms = if (0.4..=0.6).contains(&mu) || fast {
+            let p2 = params.clone();
+            let mut seed = 100u64;
+            let (ms, _) = time_one(trials.min(2), move || {
+                seed += 1;
+                QuiltSampler::new(p2.clone()).seed(seed).sample().num_edges()
+            });
+            Some(ms)
+        } else {
+            None
+        };
+        if (mu - 0.5).abs() < 1e-9 {
+            t_half = hybrid_ms;
+        }
+        println!(
+            "{:>5.1} {:>12.2} {:>12} {:>8} {:>12} {:>10}",
+            mu,
+            hybrid_ms,
+            quilt_ms.map_or("-".into(), |v| format!("{v:.2}")),
+            if t_half.is_nan() { "-".into() } else { format!("{:.2}", hybrid_ms / t_half) },
+            edges,
+            quilt_ms.map_or("-".into(), |v| format!("{:.2}x", v / hybrid_ms)),
+        );
+    }
+    println!("(rho is relative to mu=0.5; hybrid_win is quilt_ms / hybrid_ms)");
+}

@@ -1,0 +1,36 @@
+//! Partition benchmark — the series behind paper Figures 5 and 6: the
+//! size B of the minimal partition and the cost of building it.
+
+use std::time::Instant;
+
+use magquilt::kpgm::Initiator;
+use magquilt::magm::{AttributeAssignment, MagmParams};
+use magquilt::quilt::Partition;
+use magquilt::rng::Rng;
+
+fn main() {
+    let fast = std::env::var("MAGQUILT_BENCH_FAST").is_ok();
+    let d_max = if fast { 14 } else { 20 };
+    println!("# bench: partition build (paper Fig. 5/6)");
+    println!("{:>5} {:>10} {:>5} {:>6} {:>12} {:>12}", "mu", "n", "d", "B", "build_ms", "ns/node");
+    for &mu in &[0.5, 0.7, 0.9] {
+        for d in (8..=d_max).step_by(4) {
+            let n = 1usize << d;
+            let params = MagmParams::homogeneous(Initiator::THETA1, mu, n, d);
+            let mut rng = Rng::new(d as u64);
+            let attrs = AttributeAssignment::sample(&params, &mut rng);
+            let start = Instant::now();
+            let p = Partition::build(attrs.configs());
+            let ms = start.elapsed().as_secs_f64() * 1e3;
+            println!(
+                "{:>5.2} {:>10} {:>5} {:>6} {:>12.2} {:>12.1}",
+                mu,
+                n,
+                d,
+                p.size(),
+                ms,
+                ms * 1e6 / n as f64
+            );
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! End-to-end sampling bench — regenerates the series behind paper
+//! Figures 10 and 11 (quilting vs naive runtime, and per-edge cost).
+//!
+//! `MAGQUILT_BENCH_FAST=1` shrinks the sweep for smoke runs.
+
+use std::time::Instant;
+
+use magquilt::coordinator::Coordinator;
+use magquilt::kpgm::Initiator;
+use magquilt::magm::{naive_sample, AttributeAssignment, MagmParams};
+use magquilt::quilt::{HybridSampler, QuiltSampler};
+use magquilt::rng::Rng;
+
+fn fast() -> bool {
+    std::env::var("MAGQUILT_BENCH_FAST").is_ok()
+}
+
+fn main() {
+    let (d_max, naive_max, trials) = if fast() { (12, 9, 2) } else { (17, 11, 3) };
+    println!("# bench: sampling (paper Fig. 10/11) — trials={trials}");
+    println!(
+        "{:>8} {:>6} {:>12} {:>12} {:>12} {:>12} {:>14} {:>14}",
+        "theta", "log2n", "quilt_ms", "hybrid_ms", "coord_ms", "naive_ms", "quilt_us/edge", "speedup"
+    );
+    for (name, theta) in [("theta1", Initiator::THETA1), ("theta2", Initiator::THETA2)] {
+        for d in (8..=d_max).step_by(2) {
+            let n = 1usize << d;
+            let params = MagmParams::homogeneous(theta, 0.5, n, d);
+
+            let mut quilt_ms = Vec::new();
+            let mut edges = 0usize;
+            for t in 0..trials {
+                let start = Instant::now();
+                let g = QuiltSampler::new(params.clone()).seed(t as u64).sample();
+                quilt_ms.push(start.elapsed().as_secs_f64() * 1e3);
+                edges = g.num_edges();
+            }
+            let quilt = median(&mut quilt_ms);
+
+            let mut hybrid_ms = Vec::new();
+            for t in 0..trials {
+                let start = Instant::now();
+                let _ = HybridSampler::new(params.clone()).seed(t as u64).sample();
+                hybrid_ms.push(start.elapsed().as_secs_f64() * 1e3);
+            }
+            let hybrid = median(&mut hybrid_ms);
+
+            let mut coord_ms = Vec::new();
+            let coord = Coordinator::new();
+            for t in 0..trials {
+                let start = Instant::now();
+                let _ = coord.sample_quilt(&params, t as u64);
+                coord_ms.push(start.elapsed().as_secs_f64() * 1e3);
+            }
+            let coordinated = median(&mut coord_ms);
+
+            let naive = if d <= naive_max {
+                let mut ms = Vec::new();
+                for t in 0..trials {
+                    let mut rng = Rng::new(t as u64);
+                    let attrs = AttributeAssignment::sample(&params, &mut rng);
+                    let start = Instant::now();
+                    let _ = naive_sample(&params, &attrs, &mut rng);
+                    ms.push(start.elapsed().as_secs_f64() * 1e3);
+                }
+                Some(median(&mut ms))
+            } else {
+                None
+            };
+
+            println!(
+                "{:>8} {:>6} {:>12.2} {:>12.2} {:>12.2} {:>12} {:>14.3} {:>14}",
+                name,
+                d,
+                quilt,
+                hybrid,
+                coordinated,
+                naive.map_or("-".into(), |v| format!("{v:.2}")),
+                quilt * 1e3 / edges.max(1) as f64,
+                naive.map_or("-".into(), |v| format!("{:.1}x", v / quilt)),
+            );
+        }
+    }
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}

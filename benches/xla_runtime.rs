@@ -1,0 +1,78 @@
+//! Runtime bench: AOT XLA kernel throughput vs the pure-Rust scalar path
+//! for the edge-probability block — the L1/L2 hot-spot measured from L3.
+//!
+//! Needs `make artifacts`; exits gracefully if they are missing.
+
+use std::time::Instant;
+
+use magquilt::kpgm::Initiator;
+use magquilt::magm::{AttributeAssignment, MagmParams};
+use magquilt::rng::Rng;
+use magquilt::runtime::{MagmKernels, XlaRuntime};
+
+fn main() {
+    let runtime = match XlaRuntime::load_default() {
+        Ok(r) => r,
+        Err(e) => {
+            println!("# bench: xla runtime SKIPPED ({e})");
+            return;
+        }
+    };
+    let fast = std::env::var("MAGQUILT_BENCH_FAST").is_ok();
+    let reps = if fast { 3 } else { 10 };
+    println!("# bench: XLA edge_prob kernels vs pure-Rust (block = manifest shape)");
+
+    for d in [8u32, 16, 24, 32] {
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 4096, d);
+        let mut rng = Rng::new(3);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        let kernels = MagmKernels::new(&runtime, params.thetas());
+        let bm = runtime.manifest().bm;
+        let bn = runtime.manifest().bn;
+        let src: Vec<u32> = (0..bm as u32).collect();
+        let dst: Vec<u32> = (bm as u32..(bm + bn) as u32).collect();
+
+        // warmup + timed XLA block
+        let _ = kernels.edge_prob_block(&attrs, &src, &dst).unwrap();
+        let start = Instant::now();
+        for _ in 0..reps {
+            let _ = kernels.edge_prob_block(&attrs, &src, &dst).unwrap();
+        }
+        let xla_ms = start.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let cells = (bm * bn) as f64;
+
+        // pure-Rust scalar evaluation of the same block
+        let start = Instant::now();
+        let mut sink = 0.0f64;
+        for &i in &src {
+            for &j in &dst {
+                sink += magquilt::magm::edge_probability(&params, &attrs, i, j);
+            }
+        }
+        let rust_ms = start.elapsed().as_secs_f64() * 1e3;
+
+        println!(
+            "d={d:>2}: xla {xla_ms:>8.2} ms ({:.1} ns/cell) | rust scalar {rust_ms:>8.2} ms ({:.1} ns/cell) | xla speedup {:.1}x (sink {sink:.1})",
+            xla_ms * 1e6 / cells,
+            rust_ms * 1e6 / cells,
+            rust_ms / xla_ms
+        );
+    }
+
+    // pairs kernel
+    let d = 16u32;
+    let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 1 << 14, d);
+    let mut rng = Rng::new(4);
+    let attrs = AttributeAssignment::sample(&params, &mut rng);
+    let kernels = MagmKernels::new(&runtime, params.thetas());
+    let bp = runtime.manifest().bp;
+    let pairs: Vec<(u32, u32)> =
+        (0..bp).map(|_| (rng.below(1 << 14) as u32, rng.below(1 << 14) as u32)).collect();
+    let _ = kernels.edge_prob_pairs(&attrs, &pairs).unwrap();
+    let start = Instant::now();
+    for _ in 0..reps {
+        let _ = kernels.edge_prob_pairs(&attrs, &pairs).unwrap();
+    }
+    let ms = start.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    println!("pairs kernel d={d}: {ms:.2} ms for {bp} pairs ({:.1} ns/pair)", ms * 1e6 / bp as f64);
+}

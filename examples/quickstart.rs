@@ -1,0 +1,35 @@
+//! Quickstart: sample a MAGM graph with the quilting sampler and print its
+//! statistics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use magquilt::coordinator::Coordinator;
+use magquilt::kpgm::Initiator;
+use magquilt::magm::MagmParams;
+use magquilt::stats::summarize;
+
+fn main() {
+    // Kim & Leskovec's theta, balanced attributes, n = 2^14 nodes.
+    let d = 14;
+    let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 1 << d, d);
+
+    println!("expected edges (analytic): {:.0}", params.expected_edges());
+
+    // Sample across the worker pool (Algorithm 2 pieces in parallel).
+    let report = Coordinator::new().sample_quilt(&params, 42);
+    println!(
+        "sampled {} edges | B = {} | {} jobs on {} workers | {:.1} ms ({:.2e} edges/s)",
+        report.graph.num_edges(),
+        report.partition_size,
+        report.num_jobs,
+        report.workers,
+        report.wall_ms,
+        report.edges_per_sec,
+    );
+
+    // Graph statistics (paper §6.1's properties).
+    let summary = summarize(&report.graph, 2000, 42);
+    print!("{}", summary.report());
+}

@@ -1,0 +1,90 @@
+//! Goodness-of-fit workload (the paper's first motivating use case):
+//! generate graphs from a fitted model and compare graph statistics of the
+//! samples against a "reference" network, plus a model log-likelihood
+//! computed through the AOT XLA kernel.
+//!
+//! The reference network here is itself a MAGM draw (playing the role of
+//! the observed social network); we then score two candidate parameter
+//! settings by (a) summary-statistic distance over repeated samples and
+//! (b) Bernoulli log-likelihood of the observed adjacency under Q — the
+//! Hunter et al. (2008) style check cited in the paper's introduction.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example social_network
+//! ```
+
+use magquilt::graph::Csr;
+use magquilt::kpgm::Initiator;
+use magquilt::magm::{AttributeAssignment, MagmParams};
+use magquilt::quilt::QuiltSampler;
+use magquilt::rng::Rng;
+use magquilt::runtime::{MagmKernels, XlaRuntime};
+use magquilt::stats::{mean, summarize};
+
+fn main() -> anyhow::Result<()> {
+    let d = 12;
+    let n = 1usize << d;
+
+    // --- The "observed" network: a MAGM draw with theta1. -------------
+    let truth = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
+    let mut rng = Rng::new(1234);
+    let observed_attrs = AttributeAssignment::sample(&truth, &mut rng);
+    let observed = QuiltSampler::new(truth.clone()).seed(99).sample_with_attrs(&observed_attrs);
+    let obs_summary = summarize(&observed, 2000, 7);
+    println!("observed network: {} nodes, {} edges", n, observed.num_edges());
+    print!("{}", obs_summary.report());
+
+    // --- Candidate models to score. ------------------------------------
+    let candidates = [
+        ("theta1 (true)", MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d)),
+        ("theta2 (wrong)", MagmParams::homogeneous(Initiator::THETA2, 0.5, n, d)),
+    ];
+
+    // (a) summary-statistic goodness of fit over repeated samples.
+    println!("\n== summary-statistic fit (10 samples per model) ==");
+    for (name, params) in &candidates {
+        let mut edge_counts = Vec::new();
+        let mut sccs = Vec::new();
+        for t in 0..10u64 {
+            let g = QuiltSampler::new(params.clone()).seed(t).sample();
+            edge_counts.push(g.num_edges() as f64);
+            let csr = Csr::from_edge_list(&g);
+            sccs.push(magquilt::graph::largest_scc_size(&csr) as f64 / n as f64);
+        }
+        let e_err = (mean(&edge_counts) - observed.num_edges() as f64).abs()
+            / observed.num_edges() as f64;
+        let s_err = (mean(&sccs) - obs_summary.scc_fraction).abs();
+        println!(
+            "{name:>15}: |E| rel err {:.3}, SCC-fraction err {:.4}",
+            e_err, s_err
+        );
+    }
+
+    // (b) log-likelihood of the observed adjacency under each model's Q,
+    //     evaluated block-wise by the AOT XLA kernel.
+    println!("\n== Bernoulli log-likelihood via XLA loglik_block kernel ==");
+    let runtime = XlaRuntime::load_default()?;
+    let block = runtime.manifest().bm;
+    for (name, params) in &candidates {
+        let kernels = MagmKernels::new(&runtime, params.thetas());
+        let csr = Csr::from_edge_list(&observed);
+        let all: Vec<u32> = (0..n as u32).collect();
+        let mut ll = 0.0f64;
+        for src in all.chunks(block) {
+            for dst in all.chunks(block) {
+                let mut adj = vec![0f32; src.len() * dst.len()];
+                for (r, &i) in src.iter().enumerate() {
+                    for &j in csr.neighbors(i) {
+                        if (dst[0]..dst[0] + dst.len() as u32).contains(&j) {
+                            adj[r * dst.len() + (j - dst[0]) as usize] = 1.0;
+                        }
+                    }
+                }
+                ll += kernels.loglik_block(&observed_attrs, src, dst, &adj)?;
+            }
+        }
+        println!("{name:>15}: log-likelihood {ll:.1}");
+    }
+    println!("\n(the true model should score highest on both criteria)");
+    Ok(())
+}

@@ -1,0 +1,154 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO text artifacts for Rust.
+
+Run once at build time (``make artifacts``). Each entry point in
+``ENTRIES`` is jitted at a fixed shape, lowered to stablehlo, converted to an
+XlaComputation and dumped as HLO **text** — not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+A ``manifest.json`` describing every artifact (entry name, file, input and
+output shapes/dtypes) is written alongside so the Rust runtime
+(rust/src/runtime/) can validate shapes before execution.
+
+Fixed shapes & padding contract with Rust
+-----------------------------------------
+All entries are lowered at d = D_PAD attribute levels. The Rust side pads:
+  * coefficient columns beyond the model's d with zeros (neutral levels,
+    see model.pad_levels),
+  * F-bit rows beyond the batch with zeros,
+  * counts / adj / mask rows with zeros,
+and slices outputs back down. Block entries use (BM, BN) = (512, 512),
+pair entries use BP = 8192.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape contract shared with rust/src/runtime/artifacts.rs.
+D_PAD = 32
+BM = 512
+BN = 512
+BP = 8192
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _entry_edge_prob_block(fs, fd, coef):
+    return (model.edge_prob_block(fs, fd, coef),)
+
+
+def _entry_edge_prob_pairs(fs, fd, coef):
+    return (model.edge_prob_pairs(fs, fd, coef),)
+
+
+def _entry_expected_degree_contrib(fs, fd, coef, counts):
+    return (model.expected_degree_contrib(fs, fd, coef, counts),)
+
+
+def _entry_loglik_block(fs, fd, coef, adj, mask):
+    return (model.loglik_block(fs, fd, coef, adj, mask),)
+
+
+# name -> (fn, input specs, output shapes (documentation only))
+ENTRIES = {
+    "edge_prob_block": (
+        _entry_edge_prob_block,
+        [_spec(BM, D_PAD), _spec(BN, D_PAD), _spec(4, D_PAD)],
+        [[BM, BN]],
+    ),
+    "edge_prob_pairs": (
+        _entry_edge_prob_pairs,
+        [_spec(BP, D_PAD), _spec(BP, D_PAD), _spec(4, D_PAD)],
+        [[BP]],
+    ),
+    "expected_degree_contrib": (
+        _entry_expected_degree_contrib,
+        [_spec(BM, D_PAD), _spec(BN, D_PAD), _spec(4, D_PAD), _spec(BN)],
+        [[BM]],
+    ),
+    "loglik_block": (
+        _entry_loglik_block,
+        [
+            _spec(BM, D_PAD),
+            _spec(BN, D_PAD),
+            _spec(4, D_PAD),
+            _spec(BM, BN),
+            _spec(BM, BN),
+        ],
+        [[]],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name):
+    """Lower one entry point to HLO text. Returns (text, manifest record)."""
+    fn, specs, out_shapes = ENTRIES[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    record = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [{"shape": list(s.shape), "dtype": "f32"} for s in specs],
+        "outputs": [{"shape": list(s), "dtype": "f32"} for s in out_shapes],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, record
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts go to its directory")
+    ap.add_argument("--only", nargs="*", help="subset of entry names")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+    names = args.only or list(ENTRIES)
+
+    records = []
+    for name in names:
+        text, record = lower_entry(name)
+        path = os.path.join(out_dir, record["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        records.append(record)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "d_pad": D_PAD,
+        "bm": BM,
+        "bn": BN,
+        "bp": BP,
+        "entries": records,
+    }
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out} ({len(records)} entries)")
+
+
+if __name__ == "__main__":
+    main()

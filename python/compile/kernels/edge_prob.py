@@ -1,0 +1,205 @@
+"""Layer-1 Pallas kernels: multiplicative-attribute edge probabilities.
+
+The MAGM edge probability (paper eq. 7) is a d-way product of gathered
+initiator entries:
+
+    Q_ij = prod_k theta^(k)[f_k(i), f_k(j)]
+
+Evaluated naively this is gather-heavy and hostile to the MXU. Because each
+factor is indexed by a *bit pair*, its log is bilinear in the bits:
+
+    log theta[a, b] = c0 + c1*a + c2*b + c3*a*b          (per level k)
+
+with  c0 = log t00, c1 = log t10 - log t00, c2 = log t01 - log t00,
+      c3 = log t11 - log t10 - log t01 + log t00.
+
+Summing over k turns the whole [M, N] block into
+
+    log Q = sum_k c0_k  +  F_src @ c1  +  (F_dst @ c2)^T  +  F_src @ diag(c3) @ F_dst^T
+
+i.e. a rank-structured correction plus ONE matmul with contraction dim d —
+exactly the shape the MXU wants. The kernels below implement this tiled.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): BlockSpec streams (bm, d)
+source tiles and (bn, d) destination tiles through VMEM, the dot runs on the
+MXU, and the rank-1 corrections + exp run on the VPU fused behind it.
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust runtime
+(xla crate / PJRT CPU) runs directly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 is the MXU systolic dimension; a (128, d<=64)
+# operand tile is 32 KB at f32, so src tile + dst tile + out tile stay well
+# under VMEM even with double buffering.
+BLOCK_M = 128
+BLOCK_N = 128
+# Pair kernel block (VPU lane-friendly multiple of 128).
+BLOCK_P = 1024
+
+
+def _block_kernel(fs_ref, fd_ref, coef_ref, o_ref):
+    """One (bm, bn) output tile of the pairwise probability block.
+
+    fs_ref: [bm, d] source bits, fd_ref: [bn, d] destination bits,
+    coef_ref: [4, d] bilinear coefficients, o_ref: [bm, bn] output.
+    """
+    fs = fs_ref[...]
+    fd = fd_ref[...]
+    coef = coef_ref[...]
+    base = jnp.sum(coef[0, :])                       # scalar: sum_k c0
+    row = fs @ coef[1, :]                            # [bm]   : F_src @ c1
+    col = fd @ coef[2, :]                            # [bn]   : F_dst @ c2
+    # MXU part: (fs * c3) @ fd^T, contraction over d.
+    cross = jax.lax.dot_general(
+        fs * coef[3, :][None, :],
+        fd,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # [bm, bn]
+    o_ref[...] = jnp.exp(base + row[:, None] + col[None, :] + cross)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def edge_prob_block(f_src, f_dst, coef, *, block_m=BLOCK_M, block_n=BLOCK_N):
+    """Dense [M, N] block of edge probabilities via the Pallas tile kernel.
+
+    Args:
+      f_src: [M, d] float32 bits (0.0/1.0). M must be a multiple of block_m.
+      f_dst: [N, d] float32 bits. N must be a multiple of block_n.
+      coef:  [4, d] float32 bilinear coefficients (theta_to_coef in model.py).
+
+    Returns:
+      [M, N] float32 probabilities.
+    """
+    m, d = f_src.shape
+    n, d2 = f_dst.shape
+    assert d == d2 and coef.shape == (4, d), (f_src.shape, f_dst.shape, coef.shape)
+    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        _block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((4, d), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(f_src, f_dst, coef)
+
+
+def _pairs_kernel(fs_ref, fd_ref, coef_ref, o_ref):
+    """One [bp] strip of elementwise pair probabilities."""
+    fs = fs_ref[...]
+    fd = fd_ref[...]
+    coef = coef_ref[...]
+    base = jnp.sum(coef[0, :])
+    logq = (
+        base
+        + fs @ coef[1, :]
+        + fd @ coef[2, :]
+        + jnp.sum(fs * coef[3, :][None, :] * fd, axis=1)
+    )
+    o_ref[...] = jnp.exp(logq)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def edge_prob_pairs(f_src, f_dst, coef, *, block_p=BLOCK_P):
+    """Elementwise probabilities for B aligned (src, dst) pairs.
+
+    Args:
+      f_src, f_dst: [B, d] float32 bits; B must be a multiple of block_p.
+      coef: [4, d] float32.
+
+    Returns:
+      [B] float32 probabilities Q for each pair.
+    """
+    b, d = f_src.shape
+    assert f_dst.shape == (b, d) and coef.shape == (4, d)
+    assert b % block_p == 0, (b, block_p)
+    return pl.pallas_call(
+        _pairs_kernel,
+        grid=(b // block_p,),
+        in_specs=[
+            pl.BlockSpec((block_p, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, d), lambda i: (i, 0)),
+            pl.BlockSpec((4, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(f_src, f_dst, coef)
+
+
+def _degree_kernel(fs_ref, fd_ref, coef_ref, cnt_ref, o_ref):
+    """Accumulate Q_tile @ counts_tile into the output strip.
+
+    Grid is (M/bm, N/bn); the j axis is a reduction: o[i] += Q(i,j) @ cnt(j).
+    """
+    j = pl.program_id(1)
+
+    fs = fs_ref[...]
+    fd = fd_ref[...]
+    coef = coef_ref[...]
+    cnt = cnt_ref[...]
+    base = jnp.sum(coef[0, :])
+    row = fs @ coef[1, :]
+    col = fd @ coef[2, :]
+    cross = jax.lax.dot_general(
+        fs * coef[3, :][None, :],
+        fd,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    q = jnp.exp(base + row[:, None] + col[None, :] + cross)
+    contrib = q @ cnt
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(j != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + contrib
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def expected_degree_contrib(
+    f_src, f_dst, coef, counts_dst, *, block_m=BLOCK_M, block_n=BLOCK_N
+):
+    """Expected out-degree contributions: (Q @ counts_dst) without
+    materializing Q in HBM.
+
+    Args:
+      f_src: [M, d] source-configuration bits.
+      f_dst: [N, d] destination-configuration bits.
+      coef:  [4, d].
+      counts_dst: [N] multiplicity of each destination configuration.
+
+    Returns:
+      [M] float32: sum_j counts[j] * Q[i, j].
+    """
+    m, d = f_src.shape
+    n, _ = f_dst.shape
+    assert m % block_m == 0 and n % block_n == 0
+    return pl.pallas_call(
+        _degree_kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((4, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(f_src, f_dst, coef, counts_dst)

@@ -1,0 +1,79 @@
+"""Pure-jnp correctness oracles for the edge-probability kernels.
+
+These implement the MAGM / KPGM edge probability *directly* from the paper's
+definition (eq. 6/7):
+
+    Q_ij = prod_{k=1..d} theta^(k)[ f_k(i), f_k(j) ]
+
+with no log-space tricks, so they are the ground truth the Pallas kernels
+(which use the bilinear log-space decomposition, see model.py) are tested
+against.
+
+Conventions
+-----------
+* ``F`` matrices hold attribute bits as float32 {0.0, 1.0}, shape [B, d].
+* ``theta`` is the per-level initiator stack, shape [d, 2, 2], float32.
+* ``coef`` (used by the kernels, produced by :func:`theta_to_coef` in
+  model.py) is shape [4, d].
+"""
+
+import jax.numpy as jnp
+
+
+def edge_prob_pairs_ref(f_src, f_dst, theta):
+    """Elementwise pair probabilities.
+
+    Args:
+      f_src: [B, d] float bits for source nodes.
+      f_dst: [B, d] float bits for target nodes.
+      theta: [d, 2, 2] per-level initiator matrices.
+
+    Returns:
+      [B] probabilities Q_ij for each pair.
+    """
+    src = f_src.astype(jnp.int32)  # [B, d]
+    dst = f_dst.astype(jnp.int32)
+    d = theta.shape[0]
+    # theta[k, src[:,k], dst[:,k]] for each k, then product over k.
+    ks = jnp.arange(d)
+    vals = theta[ks[None, :], src, dst]  # [B, d]
+    return jnp.prod(vals, axis=1)
+
+
+def edge_prob_block_ref(f_src, f_dst, theta):
+    """Dense pairwise block of edge probabilities.
+
+    Args:
+      f_src: [M, d] float bits.
+      f_dst: [N, d] float bits.
+      theta: [d, 2, 2].
+
+    Returns:
+      [M, N] with Q[i, j] = prod_k theta[k, f_src[i,k], f_dst[j,k]].
+    """
+    src = f_src.astype(jnp.int32)[:, None, :]  # [M, 1, d]
+    dst = f_dst.astype(jnp.int32)[None, :, :]  # [1, N, d]
+    ks = jnp.arange(theta.shape[0])[None, None, :]
+    vals = theta[ks, src, dst]  # [M, N, d]
+    return jnp.prod(vals, axis=2)
+
+
+def expected_degree_contrib_ref(f_src, f_dst, theta, counts_dst):
+    """Out-degree contribution of a destination block: (Q_block @ counts).
+
+    counts_dst[j] is the multiplicity of configuration j (how many nodes
+    share f_dst[j]); the result is sum_j counts[j] * Q[i, j] for each i.
+    """
+    q = edge_prob_block_ref(f_src, f_dst, theta)
+    return q @ counts_dst
+
+
+def loglik_block_ref(f_src, f_dst, theta, adj):
+    """Bernoulli log-likelihood of an adjacency block under Q.
+
+    sum_ij adj*log(Q) + (1-adj)*log(1-Q), with probabilities clipped away
+    from {0,1} for numerical sanity (matching model.loglik_block).
+    """
+    q = edge_prob_block_ref(f_src, f_dst, theta)
+    q = jnp.clip(q, 1e-12, 1.0 - 1e-12)
+    return jnp.sum(adj * jnp.log(q) + (1.0 - adj) * jnp.log1p(-q))

@@ -1,0 +1,136 @@
+"""Layer-2 JAX model: MAGM/KPGM edge-probability compute graph.
+
+This is the build-time model layer. It owns
+
+* the theta -> bilinear-coefficient transform (``theta_to_coef``) shared by
+  the Pallas kernels and the Rust runtime (Rust sends ``coef``, not theta,
+  so the transform is done once per model, not per block),
+* padding wrappers that lift the tile-aligned Pallas kernels
+  (kernels/edge_prob.py) to arbitrary shapes,
+* the AOT entry points lowered by aot.py and executed from Rust via PJRT:
+  ``edge_prob_block``, ``edge_prob_pairs``, ``expected_degree_contrib``,
+  ``loglik_block``.
+
+Everything here must stay jit-lowerable with static shapes: the Rust side
+loads fixed-shape HLO and pads its inputs (bits and coefficients pad with
+zeros, which contribute exp(0)=1 factors in probability space — i.e. padding
+levels are neutral, see ``pad_levels``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import edge_prob as ek
+
+# Floor for log(theta): theta entries are probabilities in [0, 1]; entries
+# exactly 0 would give -inf logs. exp(LOG_FLOOR * d) underflows to 0 for any
+# realistic d, so clamping preserves Q == 0 blocks to within f32.
+THETA_FLOOR = 1e-30
+
+
+def theta_to_coef(theta):
+    """Convert a [d, 2, 2] initiator stack into [4, d] bilinear coefficients.
+
+    log theta_k[a, b] = c0_k + c1_k*a + c2_k*b + c3_k*a*b  for bits a, b.
+    """
+    t = jnp.clip(jnp.asarray(theta, jnp.float32), THETA_FLOOR, 1.0)
+    l00 = jnp.log(t[:, 0, 0])
+    l01 = jnp.log(t[:, 0, 1])
+    l10 = jnp.log(t[:, 1, 0])
+    l11 = jnp.log(t[:, 1, 1])
+    return jnp.stack([l00, l10 - l00, l01 - l00, l11 - l10 - l01 + l00])
+
+
+def pad_levels(coef, d_pad):
+    """Pad [4, d] coefficients to [4, d_pad] with neutral (zero) levels.
+
+    A zero coefficient column contributes log-factor 0 for any bit pair, so
+    padded attribute levels (with arbitrary bits) do not change Q.
+    """
+    d = coef.shape[1]
+    assert d_pad >= d
+    return jnp.pad(coef, ((0, 0), (0, d_pad - d)))
+
+
+def _pad_rows(x, mult):
+    """Pad axis-0 of ``x`` up to a multiple of ``mult`` with zeros."""
+    r = x.shape[0]
+    pad = (-r) % mult
+    if pad == 0:
+        return x
+    width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, width)
+
+
+def edge_prob_block(f_src, f_dst, coef):
+    """[M, N] edge-probability block for arbitrary M, N (pads to tiles)."""
+    m, n = f_src.shape[0], f_dst.shape[0]
+    fs = _pad_rows(jnp.asarray(f_src, jnp.float32), ek.BLOCK_M)
+    fd = _pad_rows(jnp.asarray(f_dst, jnp.float32), ek.BLOCK_N)
+    q = ek.edge_prob_block(fs, fd, jnp.asarray(coef, jnp.float32))
+    return q[:m, :n]
+
+
+def edge_prob_pairs(f_src, f_dst, coef):
+    """[B] elementwise pair probabilities for arbitrary B (pads to tiles)."""
+    b = f_src.shape[0]
+    fs = _pad_rows(jnp.asarray(f_src, jnp.float32), ek.BLOCK_P)
+    fd = _pad_rows(jnp.asarray(f_dst, jnp.float32), ek.BLOCK_P)
+    return ek.edge_prob_pairs(fs, fd, jnp.asarray(coef, jnp.float32))[:b]
+
+
+def expected_degree_contrib(f_src, f_dst, coef, counts_dst):
+    """[M] expected-degree contributions sum_j counts[j] Q[i, j].
+
+    Padding destinations is safe because padded counts are 0.
+    """
+    m = f_src.shape[0]
+    fs = _pad_rows(jnp.asarray(f_src, jnp.float32), ek.BLOCK_M)
+    fd = _pad_rows(jnp.asarray(f_dst, jnp.float32), ek.BLOCK_N)
+    cnt = _pad_rows(jnp.asarray(counts_dst, jnp.float32), ek.BLOCK_N)
+    out = ek.expected_degree_contrib(fs, fd, jnp.asarray(coef, jnp.float32), cnt)
+    return out[:m]
+
+
+def loglik_block(f_src, f_dst, coef, adj, mask):
+    """Masked Bernoulli log-likelihood of an adjacency block under Q.
+
+    Args:
+      f_src: [M, d] source bits, f_dst: [N, d] destination bits.
+      coef: [4, d].
+      adj:  [M, N] float32 0/1 observed adjacency block.
+      mask: [M, N] float32 0/1; cells with mask 0 are excluded (used for
+        padding and for excluding the diagonal when self-loops are dropped).
+
+    Returns:
+      scalar float32 log-likelihood.
+    """
+    q = edge_prob_block(f_src, f_dst, coef)
+    q = jnp.clip(q, 1e-12, 1.0 - 1e-12)
+    ll = adj * jnp.log(q) + (1.0 - adj) * jnp.log1p(-q)
+    return jnp.sum(ll * mask)
+
+
+def kpgm_bits(n_nodes, d):
+    """KPGM attribute matrix: node i gets the binary representation of i.
+
+    Row i is the bit vector b(i) with b_k = bit (d-1-k) of i, matching the
+    paper's convention that the first attribute selects the coarsest
+    quadrisection. Returns [n_nodes, d] float32.
+    """
+    ids = jnp.arange(n_nodes, dtype=jnp.uint32)[:, None]
+    shifts = jnp.arange(d - 1, -1, -1, dtype=jnp.uint32)[None, :]
+    return ((ids >> shifts) & 1).astype(jnp.float32)
+
+
+def kpgm_prob_matrix(theta):
+    """Full KPGM edge-probability matrix P = kron(theta_1, ..., theta_d).
+
+    Only used at small n for Figure-1 style visualization and for tests;
+    the samplers never materialize P.
+    """
+    theta = jnp.asarray(theta, jnp.float32)
+    d = theta.shape[0]
+    n = 2**d
+    bits = kpgm_bits(n, d)
+    return edge_prob_block(bits, bits, theta_to_coef(theta))

@@ -1,0 +1,276 @@
+"""Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+This is the CORE correctness signal for Layer 1: the bilinear log-space
+decomposition used by the kernels must reproduce the direct product-of-
+gathers definition of Q (paper eq. 7) for every shape, theta range and bit
+pattern. Hypothesis sweeps shapes/d/theta; fixed tests pin the paper's
+actual parameter matrices.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import edge_prob as ek
+from compile.kernels import ref
+from compile import model
+
+RNG = np.random.default_rng(0)
+
+THETA1 = np.array([[0.15, 0.7], [0.7, 0.85]], dtype=np.float32)  # eq. 13
+THETA2 = np.array([[0.35, 0.52], [0.52, 0.95]], dtype=np.float32)
+
+
+def stack(theta2x2, d):
+    return np.broadcast_to(np.asarray(theta2x2, np.float32), (d, 2, 2)).copy()
+
+
+def rand_bits(rng, *shape):
+    return rng.integers(0, 2, size=shape).astype(np.float32)
+
+
+def rand_theta(rng, d, lo=0.05, hi=0.95):
+    return rng.uniform(lo, hi, size=(d, 2, 2)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape kernel-vs-ref checks (tile-aligned, exercising pallas_call).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("theta2", [THETA1, THETA2])
+@pytest.mark.parametrize("d", [1, 3, 8, 16])
+def test_block_kernel_matches_ref_paper_thetas(theta2, d):
+    theta = stack(theta2, d)
+    fs = rand_bits(RNG, ek.BLOCK_M, d)
+    fd = rand_bits(RNG, ek.BLOCK_N, d)
+    got = ek.edge_prob_block(jnp.asarray(fs), jnp.asarray(fd),
+                             model.theta_to_coef(theta))
+    want = ref.edge_prob_block_ref(jnp.asarray(fs), jnp.asarray(fd),
+                                   jnp.asarray(theta))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("m_tiles,n_tiles", [(1, 1), (2, 1), (1, 3), (2, 2)])
+def test_block_kernel_multi_tile_grid(m_tiles, n_tiles):
+    d = 10
+    theta = rand_theta(RNG, d)
+    fs = rand_bits(RNG, m_tiles * ek.BLOCK_M, d)
+    fd = rand_bits(RNG, n_tiles * ek.BLOCK_N, d)
+    got = ek.edge_prob_block(jnp.asarray(fs), jnp.asarray(fd),
+                             model.theta_to_coef(theta))
+    want = ref.edge_prob_block_ref(jnp.asarray(fs), jnp.asarray(fd),
+                                   jnp.asarray(theta))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("d", [1, 5, 16, 32])
+def test_pairs_kernel_matches_ref(d):
+    theta = rand_theta(RNG, d)
+    fs = rand_bits(RNG, ek.BLOCK_P, d)
+    fd = rand_bits(RNG, ek.BLOCK_P, d)
+    got = ek.edge_prob_pairs(jnp.asarray(fs), jnp.asarray(fd),
+                             model.theta_to_coef(theta))
+    want = ref.edge_prob_pairs_ref(jnp.asarray(fs), jnp.asarray(fd),
+                                   jnp.asarray(theta))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-7)
+
+
+def test_degree_kernel_matches_ref():
+    d = 12
+    theta = rand_theta(RNG, d)
+    fs = rand_bits(RNG, ek.BLOCK_M, d)
+    fd = rand_bits(RNG, 2 * ek.BLOCK_N, d)
+    counts = RNG.integers(0, 50, size=2 * ek.BLOCK_N).astype(np.float32)
+    got = ek.expected_degree_contrib(jnp.asarray(fs), jnp.asarray(fd),
+                                     model.theta_to_coef(theta),
+                                     jnp.asarray(counts))
+    want = ref.expected_degree_contrib_ref(jnp.asarray(fs), jnp.asarray(fd),
+                                           jnp.asarray(theta),
+                                           jnp.asarray(counts))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_loglik_block_matches_ref():
+    d = 8
+    theta = stack(THETA1, d)
+    m, n = 96, 64
+    fs = rand_bits(RNG, m, d)
+    fd = rand_bits(RNG, n, d)
+    adj = rand_bits(RNG, m, n)
+    mask = np.ones((m, n), np.float32)
+    got = model.loglik_block(fs, fd, model.theta_to_coef(theta), adj, mask)
+    want = ref.loglik_block_ref(jnp.asarray(fs), jnp.asarray(fd),
+                                jnp.asarray(theta), jnp.asarray(adj))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, theta ranges, bit patterns.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+    lo=st.floats(0.01, 0.4),
+    hi=st.floats(0.6, 1.0),
+)
+def test_block_kernel_hypothesis_theta_sweep(d, seed, lo, hi):
+    rng = np.random.default_rng(seed)
+    theta = rng.uniform(lo, hi, size=(d, 2, 2)).astype(np.float32)
+    fs = rand_bits(rng, ek.BLOCK_M, d)
+    fd = rand_bits(rng, ek.BLOCK_N, d)
+    got = ek.edge_prob_block(jnp.asarray(fs), jnp.asarray(fd),
+                             model.theta_to_coef(theta))
+    want = ref.edge_prob_block_ref(jnp.asarray(fs), jnp.asarray(fd),
+                                   jnp.asarray(theta))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    n=st.integers(1, 300),
+    d=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_model_block_wrapper_arbitrary_shapes(m, n, d, seed):
+    """model.edge_prob_block pads to tiles and slices back: any (m, n, d)."""
+    rng = np.random.default_rng(seed)
+    theta = rand_theta(rng, d)
+    fs = rand_bits(rng, m, d)
+    fd = rand_bits(rng, n, d)
+    got = model.edge_prob_block(fs, fd, model.theta_to_coef(theta))
+    want = ref.edge_prob_block_ref(jnp.asarray(fs), jnp.asarray(fd),
+                                   jnp.asarray(theta))
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 5000),
+    d=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_model_pairs_wrapper_arbitrary_batch(b, d, seed):
+    rng = np.random.default_rng(seed)
+    theta = rand_theta(rng, d)
+    fs = rand_bits(rng, b, d)
+    fd = rand_bits(rng, b, d)
+    got = model.edge_prob_pairs(fs, fd, model.theta_to_coef(theta))
+    want = ref.edge_prob_pairs_ref(jnp.asarray(fs), jnp.asarray(fd),
+                                   jnp.asarray(theta))
+    assert got.shape == (b,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases.
+# ---------------------------------------------------------------------------
+
+
+def test_theta_entry_zero_gives_zero_prob():
+    """theta with an exact 0 entry: clamping must still yield Q ~ 0 when the
+    zero entry is selected, and exact values elsewhere."""
+    d = 4
+    theta = stack(THETA1, d)
+    theta[2, 0, 1] = 0.0
+    coef = model.theta_to_coef(theta)
+    # pair that hits (0,1) at level 2:
+    fs = np.zeros((1, d), np.float32)
+    fd = np.zeros((1, d), np.float32)
+    fd[0, 2] = 1.0
+    q = model.edge_prob_pairs(fs, fd, coef)
+    assert float(q[0]) < 1e-20
+    # pair that avoids the zero entry is unaffected:
+    fd2 = np.zeros((1, d), np.float32)
+    q2 = model.edge_prob_pairs(fs, fd2, coef)
+    np.testing.assert_allclose(float(q2[0]), 0.15**4, rtol=1e-5)
+
+
+def test_theta_all_ones_gives_prob_one():
+    d = 8
+    theta = np.ones((d, 2, 2), np.float32)
+    coef = model.theta_to_coef(theta)
+    fs = rand_bits(RNG, 7, d)
+    fd = rand_bits(RNG, 7, d)
+    q = model.edge_prob_pairs(fs, fd, coef)
+    np.testing.assert_allclose(np.asarray(q), np.ones(7), rtol=1e-6)
+
+
+def test_pad_levels_is_neutral():
+    d, d_pad = 5, 32
+    theta = rand_theta(RNG, d)
+    coef = model.theta_to_coef(theta)
+    padded = model.pad_levels(coef, d_pad)
+    fs = rand_bits(RNG, 64, d)
+    fd = rand_bits(RNG, 64, d)
+    # bits in the padded region must be ignored (zero coefficients):
+    fs_pad = np.concatenate([fs, rand_bits(RNG, 64, d_pad - d)], axis=1)
+    fd_pad = np.concatenate([fd, rand_bits(RNG, 64, d_pad - d)], axis=1)
+    q = model.edge_prob_block(fs, fd, coef)
+    q_pad = model.edge_prob_block(fs_pad, fd_pad, padded)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q_pad),
+                               rtol=1e-5, atol=1e-8)
+
+
+def test_probabilities_in_unit_interval():
+    d = 16
+    theta = rand_theta(RNG, d, lo=0.0, hi=1.0)
+    fs = rand_bits(RNG, 200, d)
+    fd = rand_bits(RNG, 200, d)
+    q = np.asarray(model.edge_prob_block(fs, fd, model.theta_to_coef(theta)))
+    assert np.all(q >= 0.0) and np.all(q <= 1.0 + 1e-6)
+
+
+@pytest.mark.parametrize("dtype", ["float64", "bfloat16", "int32", "bool"])
+def test_model_wrappers_accept_other_dtypes(dtype):
+    """The model wrappers normalize input dtypes to f32 before the kernel."""
+    import jax.numpy as jnp_
+    d = 6
+    rng = np.random.default_rng(5)
+    theta = rand_theta(rng, d)
+    fs_f32 = rand_bits(rng, 40, d)
+    fd_f32 = rand_bits(rng, 40, d)
+    cast = jnp_.asarray(fs_f32).astype(dtype), jnp_.asarray(fd_f32).astype(dtype)
+    want = model.edge_prob_block(fs_f32, fd_f32, model.theta_to_coef(theta))
+    got = model.edge_prob_block(cast[0], cast[1], model.theta_to_coef(theta))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_block_kernel_custom_block_sizes():
+    """Non-default tile sizes cover the same numerics (grid correctness)."""
+    d = 7
+    rng = np.random.default_rng(6)
+    theta = rand_theta(rng, d)
+    fs = rand_bits(rng, 64, d)
+    fd = rand_bits(rng, 96, d)
+    coef = model.theta_to_coef(theta)
+    got = ek.edge_prob_block(jnp.asarray(fs), jnp.asarray(fd), coef,
+                             block_m=32, block_n=32)
+    want = ref.edge_prob_block_ref(jnp.asarray(fs), jnp.asarray(fd),
+                                   jnp.asarray(theta))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-7)
+
+
+def test_aot_artifacts_deterministic():
+    """Lowering the same entry twice yields byte-identical HLO text (the
+    manifest sha256 is meaningful)."""
+    from compile import aot
+    t1, r1 = aot.lower_entry("edge_prob_pairs")
+    t2, r2 = aot.lower_entry("edge_prob_pairs")
+    assert t1 == t2
+    assert r1["sha256"] == r2["sha256"]

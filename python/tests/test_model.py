@@ -1,0 +1,147 @@
+"""Layer-2 model tests: KPGM structure, Kronecker identity, AOT lowering."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+THETA1 = np.array([[0.15, 0.7], [0.7, 0.85]], dtype=np.float32)
+
+
+def stack(theta2x2, d):
+    return np.broadcast_to(np.asarray(theta2x2, np.float32), (d, 2, 2)).copy()
+
+
+def kron_power(theta2x2, d):
+    p = np.asarray(theta2x2, np.float64)
+    out = np.array([[1.0]])
+    for _ in range(d):
+        out = np.kron(out, p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KPGM identities (paper eq. 2 vs eq. 6).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 5])
+def test_kpgm_prob_matrix_equals_kronecker_power(d):
+    """model.kpgm_prob_matrix (bit-product form, eq. 6) must equal the
+    explicit Kronecker power (eq. 2)."""
+    theta = stack(THETA1, d)
+    got = np.asarray(model.kpgm_prob_matrix(theta))
+    want = kron_power(THETA1, d)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_kpgm_prob_matrix_heterogeneous_levels():
+    """Per-level theta matrices: P = theta1 (x) theta2 (x) theta3."""
+    rng = np.random.default_rng(7)
+    theta = rng.uniform(0.1, 0.9, size=(3, 2, 2)).astype(np.float32)
+    want = np.kron(np.kron(theta[0], theta[1]), theta[2])
+    got = np.asarray(model.kpgm_prob_matrix(theta))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_kpgm_bits_msb_first():
+    bits = np.asarray(model.kpgm_bits(8, 3))
+    # node 0 -> 000, node 1 -> 001, node 6 -> 110
+    np.testing.assert_array_equal(bits[0], [0, 0, 0])
+    np.testing.assert_array_equal(bits[1], [0, 0, 1])
+    np.testing.assert_array_equal(bits[6], [1, 1, 0])
+
+
+def test_magm_equals_kpgm_under_identity_configuration():
+    """Q_ij = P_{lambda_i lambda_j} (paper eq. 8): with lambda_i = i the MAGM
+    edge-probability block IS the KPGM matrix."""
+    d = 4
+    theta = stack(THETA1, d)
+    bits = model.kpgm_bits(2**d, d)
+    q = model.edge_prob_block(bits, bits, model.theta_to_coef(theta))
+    p = kron_power(THETA1, d)
+    np.testing.assert_allclose(np.asarray(q), p, rtol=1e-5)
+
+
+def test_magm_permutation_identity():
+    """Permuting configurations permutes rows/cols of P — the quilting
+    algorithm's central identity."""
+    d = 3
+    n = 2**d
+    rng = np.random.default_rng(3)
+    lam = rng.permutation(n)
+    theta = stack(THETA1, d)
+    bits_all = np.asarray(model.kpgm_bits(n, d))
+    f = bits_all[lam]  # node i has configuration lam[i]
+    q = np.asarray(model.edge_prob_block(f, f, model.theta_to_coef(theta)))
+    p = kron_power(THETA1, d)
+    np.testing.assert_allclose(q, p[np.ix_(lam, lam)], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering.
+# ---------------------------------------------------------------------------
+
+
+def test_aot_lowering_all_entries(tmp_path):
+    """Every entry lowers to parseable HLO text and the manifest matches."""
+    records = []
+    for name in aot.ENTRIES:
+        text, record = aot.lower_entry(name)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        records.append(record)
+        assert record["file"] == f"{name}.hlo.txt"
+        # input arity in the manifest matches the entry spec
+        assert len(record["inputs"]) == len(aot.ENTRIES[name][1])
+
+
+def test_aot_shapes_contract():
+    """The shape contract baked into the manifest matches aot constants."""
+    _, record = aot.lower_entry("edge_prob_block")
+    assert record["inputs"][0]["shape"] == [aot.BM, aot.D_PAD]
+    assert record["inputs"][1]["shape"] == [aot.BN, aot.D_PAD]
+    assert record["inputs"][2]["shape"] == [4, aot.D_PAD]
+    assert record["outputs"][0]["shape"] == [aot.BM, aot.BN]
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "manifest.json"
+    import sys
+    argv = sys.argv
+    sys.argv = ["aot", "--out", str(out), "--only", "edge_prob_pairs"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    manifest = json.loads(out.read_text())
+    assert manifest["d_pad"] == aot.D_PAD
+    assert len(manifest["entries"]) == 1
+    hlo = tmp_path / manifest["entries"][0]["file"]
+    assert hlo.exists() and hlo.read_text().startswith("HloModule")
+
+
+def test_aot_entry_numerics_via_jit():
+    """Executing the lowered entry's python fn at the contract shapes matches
+    the oracle (the HLO itself is re-checked from Rust in integration tests)."""
+    rng = np.random.default_rng(11)
+    d = 9
+    theta = rng.uniform(0.1, 0.9, size=(d, 2, 2)).astype(np.float32)
+    coef = model.pad_levels(model.theta_to_coef(theta), aot.D_PAD)
+    fs = np.zeros((aot.BM, aot.D_PAD), np.float32)
+    fd = np.zeros((aot.BN, aot.D_PAD), np.float32)
+    fs[:, :d] = rng.integers(0, 2, size=(aot.BM, d))
+    fd[:, :d] = rng.integers(0, 2, size=(aot.BN, d))
+    (q,) = aot.ENTRIES["edge_prob_block"][0](fs, fd, coef)
+    want = ref.edge_prob_block_ref(jnp.asarray(fs[:, :d]),
+                                   jnp.asarray(fd[:, :d]),
+                                   jnp.asarray(theta))
+    np.testing.assert_allclose(np.asarray(q), np.asarray(want),
+                               rtol=5e-5, atol=1e-7)

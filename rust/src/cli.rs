@@ -1,0 +1,405 @@
+//! Command-line interface (hand-rolled; the vendored crate set has no
+//! clap).
+//!
+//! ```text
+//! magquilt generate [--config F] [--log2-nodes N] [--attributes D]
+//!                   [--mu MU] [--theta a,b,c,d] [--sampler KIND]
+//!                   [--seed S] [--workers W] [--output PATH] [--binary]
+//!                   [--stats]
+//! magquilt stats <edge-list file>
+//! magquilt experiment <fig1|fig5|...|fig14|all> [--max-log2n N]
+//!                   [--naive-max-log2n N] [--trials T] [--seed S]
+//!                   [--out DIR]
+//! magquilt artifacts-check [--dir DIR]
+//! magquilt info
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{load_config, ModelSpec, RunSpec, SamplerKind};
+use crate::coordinator::Coordinator;
+use crate::experiments::{run_experiment, Scale, ALL_EXPERIMENTS};
+use crate::graph::{read_edge_list_binary, read_edge_list_text, write_edge_list_binary,
+                   write_edge_list_text, EdgeList};
+use crate::kpgm::Initiator;
+use crate::magm::{AttributeAssignment, MagmParams};
+use crate::rng::Rng;
+use crate::stats::summarize;
+
+/// Parsed flags: positional args plus `--key value` / `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding the program and subcommand names).
+    /// `bool_flags` lists options that take no value.
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if bool_flags.contains(&key) {
+                    args.flags.push(key.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{key} needs a value"))?;
+                    args.options.insert(key.to_string(), v.clone());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Positional argument by index.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// Option value as string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option parsed to a type.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    /// Whether a boolean flag was passed.
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Usage text.
+pub const USAGE: &str = "\
+magquilt — quilting sampler for Multiplicative Attribute Graphs
+           (Yun & Vishwanathan, AISTATS 2012)
+
+USAGE:
+    magquilt generate [--config F] [--log2-nodes N] [--attributes D]
+                      [--mu MU] [--theta a,b,c,d] [--sampler KIND]
+                      [--seed S] [--workers W] [--output PATH] [--binary]
+                      [--stats]
+    magquilt stats <edge-list file>
+    magquilt experiment <id|all> [--max-log2n N] [--naive-max-log2n N]
+                      [--trials T] [--seed S] [--out DIR]
+    magquilt artifacts-check [--dir DIR]
+    magquilt info
+
+SAMPLERS: quilt (Algorithm 2) | hybrid (§5) | naive | naive-xla
+EXPERIMENTS: fig1 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14 | all
+";
+
+/// Entry point called by main; returns the process exit code.
+pub fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd {
+        "generate" => cmd_generate(rest),
+        "stats" => cmd_stats(rest),
+        "experiment" => cmd_experiment(rest),
+        "artifacts-check" => cmd_artifacts_check(rest),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+/// Build model/run specs from a config file and/or CLI overrides.
+fn specs_from_args(args: &Args) -> Result<(ModelSpec, RunSpec)> {
+    let (mut model, mut run) = match args.get("config") {
+        Some(path) => load_config(Path::new(path))?,
+        None => (ModelSpec::default_spec(), RunSpec::default_spec()),
+    };
+    if let Some(v) = args.get_parsed::<u32>("log2-nodes")? {
+        model.log2_nodes = v;
+        if args.get("attributes").is_none() {
+            model.attributes = v;
+        }
+    }
+    if let Some(v) = args.get_parsed::<u32>("attributes")? {
+        model.attributes = v;
+    }
+    if let Some(v) = args.get_parsed::<f64>("mu")? {
+        model.mu = v;
+    }
+    if let Some(t) = args.get("theta") {
+        let parts: Vec<f64> = t
+            .split(',')
+            .map(|x| x.trim().parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|e| anyhow!("--theta: {e}"))?;
+        if parts.len() != 4 {
+            bail!("--theta needs 4 comma-separated entries (row-major 2x2)");
+        }
+        model.theta = [parts[0], parts[1], parts[2], parts[3]];
+    }
+    if let Some(v) = args.get_parsed::<u64>("seed")? {
+        run.seed = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("workers")? {
+        run.workers = v;
+    }
+    if let Some(s) = args.get("sampler") {
+        run.sampler = SamplerKind::parse(s)?;
+    }
+    if let Some(o) = args.get("output") {
+        run.output = Some(o.to_string());
+    }
+    model.validate()?;
+    Ok((model, run))
+}
+
+/// Convert a ModelSpec into library parameters.
+pub fn model_params(model: &ModelSpec) -> MagmParams {
+    MagmParams::homogeneous(
+        Initiator::new(model.theta),
+        model.mu,
+        model.num_nodes(),
+        model.attributes,
+    )
+}
+
+fn cmd_generate(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["binary", "stats"])?;
+    let (model, run) = specs_from_args(&args)?;
+    let params = model_params(&model);
+    eprintln!(
+        "model: n=2^{} d={} mu={} theta={:?} | sampler={} seed={}",
+        model.log2_nodes,
+        model.attributes,
+        model.mu,
+        model.theta,
+        run.sampler.name(),
+        run.seed
+    );
+    let start = std::time::Instant::now();
+    let graph = sample_with(&params, &run)?;
+    let ms = start.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "sampled {} edges over {} nodes in {:.1} ms ({:.0} edges/s)",
+        graph.num_edges(),
+        graph.num_nodes(),
+        ms,
+        graph.num_edges() as f64 / (ms / 1e3).max(1e-9)
+    );
+    if let Some(path) = &run.output {
+        let path = Path::new(path);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        if args.has_flag("binary") || path.extension().is_some_and(|e| e == "bin") {
+            write_edge_list_binary(&graph, path)?;
+        } else {
+            write_edge_list_text(&graph, path)?;
+        }
+        println!("wrote {}", path.display());
+    }
+    if args.has_flag("stats") {
+        let summary = summarize(&graph, 2000, run.seed);
+        print!("{}", summary.report());
+    }
+    Ok(())
+}
+
+/// Dispatch to the selected sampler.
+pub fn sample_with(params: &MagmParams, run: &RunSpec) -> Result<EdgeList> {
+    Ok(match run.sampler {
+        SamplerKind::Quilt => {
+            Coordinator::new().workers(run.workers).sample_quilt(params, run.seed).graph
+        }
+        SamplerKind::Hybrid => {
+            Coordinator::new().workers(run.workers).sample_hybrid(params, run.seed).graph
+        }
+        SamplerKind::Naive => {
+            let mut rng = Rng::new(run.seed);
+            let attrs = AttributeAssignment::sample(params, &mut rng);
+            crate::magm::naive_sample(params, &attrs, &mut rng)
+        }
+        SamplerKind::NaiveXla => {
+            let runtime =
+                crate::runtime::XlaRuntime::load_default().context("loading XLA artifacts")?;
+            let mut rng = Rng::new(run.seed);
+            let attrs = AttributeAssignment::sample(params, &mut rng);
+            crate::runtime::naive_xla_sample(&runtime, params, &attrs, &mut rng)?
+        }
+    })
+}
+
+fn cmd_stats(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    let path = args
+        .positional(0)
+        .ok_or_else(|| anyhow!("usage: magquilt stats <edge-list file>"))?;
+    let path = Path::new(path);
+    let graph = if path.extension().is_some_and(|e| e == "bin") {
+        read_edge_list_binary(path)?
+    } else {
+        read_edge_list_text(path)?
+    };
+    let summary = summarize(&graph, 2000, 0);
+    print!("{}", summary.report());
+    Ok(())
+}
+
+fn cmd_experiment(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    let id = args
+        .positional(0)
+        .ok_or_else(|| anyhow!("usage: magquilt experiment <id|all> [--max-log2n N] ..."))?;
+    let mut scale = Scale::default();
+    if let Some(v) = args.get_parsed::<u32>("max-log2n")? {
+        scale.max_log2n = v;
+    }
+    if let Some(v) = args.get_parsed::<u32>("naive-max-log2n")? {
+        scale.naive_max_log2n = v;
+    }
+    if let Some(v) = args.get_parsed::<u32>("trials")? {
+        scale.trials = v.max(1);
+    }
+    if let Some(v) = args.get_parsed::<u64>("seed")? {
+        scale.seed = v;
+    }
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("out"));
+    std::fs::create_dir_all(&out_dir)?;
+
+    let ids: Vec<&str> =
+        if id == "all" { ALL_EXPERIMENTS.to_vec() } else { vec![id] };
+    for id in ids {
+        eprintln!("== running {id} (scale: max_log2n={}, trials={}) ==", scale.max_log2n, scale.trials);
+        let start = std::time::Instant::now();
+        let results = run_experiment(id, scale)?;
+        for r in &results {
+            print!("{}", r.to_tsv());
+            let path = out_dir.join(format!("{}.tsv", r.id));
+            std::fs::write(&path, r.to_tsv())?;
+            let md = out_dir.join(format!("{}.md", r.id));
+            std::fs::write(&md, r.to_markdown())?;
+        }
+        eprintln!("== {id} done in {:.1}s ==", start.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_artifacts_check(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    let dir = args
+        .get("dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(crate::runtime::default_artifacts_dir);
+    let runtime = crate::runtime::XlaRuntime::load(&dir)?;
+    println!("platform: {}", runtime.platform());
+    println!("entries: {}", runtime.manifest().entries.len());
+
+    // Numerical smoke check: XLA edge probabilities vs the pure-Rust
+    // d-way product, on a random model.
+    let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 128, 12);
+    let mut rng = Rng::new(7);
+    let attrs = AttributeAssignment::sample(&params, &mut rng);
+    let kernels = crate::runtime::MagmKernels::new(&runtime, params.thetas());
+    let src: Vec<u32> = (0..64).collect();
+    let dst: Vec<u32> = (64..128).collect();
+    let q = kernels.edge_prob_block(&attrs, &src, &dst)?;
+    let mut max_err = 0.0f64;
+    for (r, &i) in src.iter().enumerate() {
+        for (c, &j) in dst.iter().enumerate() {
+            let want = crate::magm::edge_probability(&params, &attrs, i, j);
+            let got = q[r * dst.len() + c] as f64;
+            max_err = max_err.max((got - want).abs());
+        }
+    }
+    println!("edge_prob_block max |err| vs pure-Rust: {max_err:.3e}");
+    if max_err > 1e-5 {
+        bail!("artifacts check FAILED: max error {max_err:.3e} > 1e-5");
+    }
+    println!("artifacts check OK");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("magquilt {}", crate::VERSION);
+    println!("paper: Quilting Stochastic Kronecker Product Graphs (AISTATS 2012)");
+    println!("samplers: quilt | hybrid | naive | naive-xla");
+    println!("workers available: {}", std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn args_parse_options_and_flags() {
+        let a = Args::parse(&s(&["pos1", "--mu", "0.7", "--stats", "pos2"]), &["stats"]).unwrap();
+        assert_eq!(a.positional(0), Some("pos1"));
+        assert_eq!(a.positional(1), Some("pos2"));
+        assert_eq!(a.get("mu"), Some("0.7"));
+        assert!(a.has_flag("stats"));
+        assert_eq!(a.get_parsed::<f64>("mu").unwrap(), Some(0.7));
+    }
+
+    #[test]
+    fn args_missing_value_errors() {
+        assert!(Args::parse(&s(&["--mu"]), &[]).is_err());
+    }
+
+    #[test]
+    fn specs_from_cli_overrides() {
+        let a = Args::parse(
+            &s(&["--log2-nodes", "8", "--mu", "0.7", "--theta", "0.1,0.2,0.3,0.4",
+                 "--sampler", "hybrid", "--seed", "5"]),
+            &[],
+        )
+        .unwrap();
+        let (model, run) = specs_from_args(&a).unwrap();
+        assert_eq!(model.log2_nodes, 8);
+        assert_eq!(model.attributes, 8);
+        assert_eq!(model.mu, 0.7);
+        assert_eq!(model.theta, [0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(run.sampler, SamplerKind::Hybrid);
+        assert_eq!(run.seed, 5);
+    }
+
+    #[test]
+    fn bad_theta_rejected() {
+        let a = Args::parse(&s(&["--theta", "0.1,0.2"]), &[]).unwrap();
+        assert!(specs_from_args(&a).is_err());
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert!(run(&s(&["frobnicate"])).is_err());
+    }
+}

@@ -1,0 +1,72 @@
+//! Configuration system.
+//!
+//! The vendored crate set has no serde/toml, so [`toml`] implements the
+//! TOML subset the CLI needs (sections, scalars, arrays), and [`spec`]
+//! defines the typed model/run specifications parsed from it.
+//!
+//! ```toml
+//! [model]
+//! theta = [0.15, 0.7, 0.7, 0.85]   # row-major 2x2
+//! mu = 0.5
+//! log2_nodes = 14
+//! attributes = 14                   # d; defaults to log2_nodes
+//!
+//! [run]
+//! seed = 42
+//! workers = 4
+//! sampler = "quilt"                 # quilt | hybrid | naive | naive-xla
+//! output = "out/graph.bin"
+//! ```
+
+mod spec;
+mod toml;
+
+pub use spec::{ModelSpec, RunSpec, SamplerKind};
+pub use toml::{parse_toml, TomlValue};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed config file: section -> key -> value.
+pub type ConfigMap = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Load and parse a config file into typed specs.
+pub fn load_config(path: &Path) -> anyhow::Result<(ModelSpec, RunSpec)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let map = parse_toml(&text)?;
+    let model = ModelSpec::from_section(map.get("model"))?;
+    let run = RunSpec::from_section(map.get("run"))?;
+    Ok((model, run))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_config_end_to_end() {
+        let dir = std::env::temp_dir().join("magquilt_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.toml");
+        std::fs::write(
+            &p,
+            r#"
+[model]
+theta = [0.15, 0.7, 0.7, 0.85]
+mu = 0.5
+log2_nodes = 10
+
+[run]
+seed = 7
+sampler = "quilt"
+"#,
+        )
+        .unwrap();
+        let (model, run) = load_config(&p).unwrap();
+        assert_eq!(model.log2_nodes, 10);
+        assert_eq!(model.attributes, 10); // defaults to log2_nodes
+        assert_eq!(run.seed, 7);
+        assert_eq!(run.sampler, SamplerKind::Quilt);
+    }
+}

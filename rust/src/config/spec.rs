@@ -1,0 +1,212 @@
+//! Typed model / run specifications parsed from config files or CLI flags.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::TomlValue;
+
+/// Which sampler implementation to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Paper Algorithm 2 (quilting).
+    Quilt,
+    /// §5 hybrid (quilting + uniform blocks), the default for unbalanced mu.
+    Hybrid,
+    /// O(n²) Bernoulli baseline, pure Rust.
+    Naive,
+    /// O(n²) baseline with the probability blocks computed by the AOT XLA
+    /// kernel (the accelerated baseline).
+    NaiveXla,
+}
+
+impl SamplerKind {
+    /// Parse from the CLI / config spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "quilt" => SamplerKind::Quilt,
+            "hybrid" => SamplerKind::Hybrid,
+            "naive" => SamplerKind::Naive,
+            "naive-xla" => SamplerKind::NaiveXla,
+            _ => bail!("unknown sampler {s:?} (expected quilt|hybrid|naive|naive-xla)"),
+        })
+    }
+
+    /// Canonical spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Quilt => "quilt",
+            SamplerKind::Hybrid => "hybrid",
+            SamplerKind::Naive => "naive",
+            SamplerKind::NaiveXla => "naive-xla",
+        }
+    }
+}
+
+/// MAGM model specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Row-major 2×2 initiator, reused at every level (the paper's
+    /// experimental setup); heterogeneous levels are available through the
+    /// library API.
+    pub theta: [f64; 4],
+    /// Attribute Bernoulli parameter mu, shared across levels.
+    pub mu: f64,
+    /// Number of nodes = 2^log2_nodes.
+    pub log2_nodes: u32,
+    /// Number of attributes d (defaults to log2_nodes).
+    pub attributes: u32,
+}
+
+impl ModelSpec {
+    /// Defaults: Θ1 (Kim & Leskovec), mu = 0.5, n = 2^14, d = 14.
+    pub fn default_spec() -> Self {
+        ModelSpec { theta: [0.15, 0.7, 0.7, 0.85], mu: 0.5, log2_nodes: 14, attributes: 14 }
+    }
+
+    /// Parse from a `[model]` section (missing section = all defaults).
+    pub fn from_section(section: Option<&BTreeMap<String, TomlValue>>) -> Result<Self> {
+        let mut spec = Self::default_spec();
+        let Some(sec) = section else { return Ok(spec) };
+        if let Some(v) = sec.get("theta") {
+            let arr = v
+                .as_float_array()
+                .ok_or_else(|| anyhow!("model.theta must be a numeric array"))?;
+            if arr.len() != 4 {
+                bail!("model.theta must have 4 entries (row-major 2x2), got {}", arr.len());
+            }
+            spec.theta = [arr[0], arr[1], arr[2], arr[3]];
+        }
+        if let Some(v) = sec.get("mu") {
+            spec.mu = v.as_float().ok_or_else(|| anyhow!("model.mu must be a number"))?;
+        }
+        if let Some(v) = sec.get("log2_nodes") {
+            spec.log2_nodes =
+                v.as_int().ok_or_else(|| anyhow!("model.log2_nodes must be an integer"))? as u32;
+        }
+        spec.attributes = match sec.get("attributes") {
+            Some(v) => {
+                v.as_int().ok_or_else(|| anyhow!("model.attributes must be an integer"))? as u32
+            }
+            None => spec.log2_nodes,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Check ranges.
+    pub fn validate(&self) -> Result<()> {
+        for (i, &t) in self.theta.iter().enumerate() {
+            if !(0.0..=1.0).contains(&t) {
+                bail!("theta[{i}] = {t} outside [0, 1]");
+            }
+        }
+        if !(0.0..=1.0).contains(&self.mu) {
+            bail!("mu = {} outside [0, 1]", self.mu);
+        }
+        if self.log2_nodes == 0 || self.log2_nodes > 31 {
+            bail!("log2_nodes = {} outside [1, 31]", self.log2_nodes);
+        }
+        if self.attributes == 0 || self.attributes > 63 {
+            bail!("attributes = {} outside [1, 63]", self.attributes);
+        }
+        Ok(())
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        1usize << self.log2_nodes
+    }
+}
+
+/// Run specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpec {
+    /// RNG seed.
+    pub seed: u64,
+    /// Worker threads for the coordinator (0 = available parallelism).
+    pub workers: usize,
+    /// Sampler implementation.
+    pub sampler: SamplerKind,
+    /// Optional output path for the sampled edge list.
+    pub output: Option<String>,
+    /// Number of repeated samples (experiments average over trials).
+    pub trials: u32,
+}
+
+impl RunSpec {
+    /// Defaults: seed 42, auto workers, quilt sampler, 1 trial.
+    pub fn default_spec() -> Self {
+        RunSpec { seed: 42, workers: 0, sampler: SamplerKind::Quilt, output: None, trials: 1 }
+    }
+
+    /// Parse from a `[run]` section (missing section = all defaults).
+    pub fn from_section(section: Option<&BTreeMap<String, TomlValue>>) -> Result<Self> {
+        let mut spec = Self::default_spec();
+        let Some(sec) = section else { return Ok(spec) };
+        if let Some(v) = sec.get("seed") {
+            spec.seed = v.as_int().ok_or_else(|| anyhow!("run.seed must be an integer"))? as u64;
+        }
+        if let Some(v) = sec.get("workers") {
+            spec.workers =
+                v.as_int().ok_or_else(|| anyhow!("run.workers must be an integer"))? as usize;
+        }
+        if let Some(v) = sec.get("sampler") {
+            spec.sampler = SamplerKind::parse(
+                v.as_str().ok_or_else(|| anyhow!("run.sampler must be a string"))?,
+            )?;
+        }
+        if let Some(v) = sec.get("output") {
+            spec.output =
+                Some(v.as_str().ok_or_else(|| anyhow!("run.output must be a string"))?.to_string());
+        }
+        if let Some(v) = sec.get("trials") {
+            spec.trials =
+                v.as_int().ok_or_else(|| anyhow!("run.trials must be an integer"))? as u32;
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_toml;
+
+    #[test]
+    fn defaults_when_sections_missing() {
+        let model = ModelSpec::from_section(None).unwrap();
+        assert_eq!(model, ModelSpec::default_spec());
+        let run = RunSpec::from_section(None).unwrap();
+        assert_eq!(run, RunSpec::default_spec());
+    }
+
+    #[test]
+    fn attributes_default_to_log2_nodes() {
+        let m = parse_toml("[model]\nlog2_nodes = 9\n").unwrap();
+        let spec = ModelSpec::from_section(m.get("model")).unwrap();
+        assert_eq!(spec.attributes, 9);
+    }
+
+    #[test]
+    fn validation_rejects_bad_theta() {
+        let m = parse_toml("[model]\ntheta = [0.1, 0.2, 0.3, 1.5]\n").unwrap();
+        assert!(ModelSpec::from_section(m.get("model")).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_mu() {
+        let m = parse_toml("[model]\nmu = -0.1\n").unwrap();
+        assert!(ModelSpec::from_section(m.get("model")).is_err());
+    }
+
+    #[test]
+    fn sampler_kinds_parse() {
+        assert_eq!(SamplerKind::parse("quilt").unwrap(), SamplerKind::Quilt);
+        assert_eq!(SamplerKind::parse("hybrid").unwrap(), SamplerKind::Hybrid);
+        assert_eq!(SamplerKind::parse("naive").unwrap(), SamplerKind::Naive);
+        assert_eq!(SamplerKind::parse("naive-xla").unwrap(), SamplerKind::NaiveXla);
+        assert!(SamplerKind::parse("bogus").is_err());
+        assert_eq!(SamplerKind::Quilt.name(), "quilt");
+    }
+}

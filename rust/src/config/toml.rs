@@ -1,0 +1,222 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports exactly what our config files use: `[section]` headers,
+//! `key = value` lines, `#` comments, and values of type string (double
+//! quoted), integer, float, boolean, and flat arrays of those. No nested
+//! tables, no multi-line values, no datetimes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::ConfigMap;
+
+/// A parsed TOML value (subset).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// Double-quoted string.
+    Str(String),
+    /// 64-bit integer.
+    Int(i64),
+    /// 64-bit float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Flat array.
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// As i64 (ints only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// As f64 (ints widen).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// As string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As vector of f64 (numeric arrays).
+    pub fn as_float_array(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlValue::Array(xs) => xs.iter().map(|x| x.as_float()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parse the TOML subset into section -> key -> value.
+/// Keys before any `[section]` land in the "" section.
+pub fn parse_toml(text: &str) -> Result<ConfigMap> {
+    let mut map: ConfigMap = BTreeMap::new();
+    let mut section = String::new();
+    map.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            if section.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            map.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected `key = value`: {line}", lineno + 1);
+        };
+        let key = line[..eq].trim().to_string();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        map.get_mut(&section).unwrap().insert(key, value);
+    }
+    Ok(map)
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        if inner.contains('"') {
+            bail!("embedded quote in string");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(v) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+/// Split on commas that are not inside quotes (arrays are flat; no nesting).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let m = parse_toml("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        let root = &m[""];
+        assert_eq!(root["a"], TomlValue::Int(1));
+        assert_eq!(root["b"], TomlValue::Float(2.5));
+        assert_eq!(root["c"], TomlValue::Str("hi".into()));
+        assert_eq!(root["d"], TomlValue::Bool(true));
+    }
+
+    #[test]
+    fn parses_sections_and_arrays() {
+        let m = parse_toml("[model]\ntheta = [0.1, 0.2, 0.3, 0.4]\nn = 8\n").unwrap();
+        let model = &m["model"];
+        assert_eq!(
+            model["theta"].as_float_array().unwrap(),
+            vec![0.1, 0.2, 0.3, 0.4]
+        );
+        assert_eq!(model["n"].as_int(), Some(8));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let m = parse_toml("# top\n\n[s] # side\nx = 3 # tail\ny = \"a#b\"\n").unwrap();
+        assert_eq!(m["s"]["x"], TomlValue::Int(3));
+        assert_eq!(m["s"]["y"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(parse_toml("not a kv line\n").is_err());
+        assert!(parse_toml("x = [1, 2\n").is_err());
+        assert!(parse_toml("x = \"unterminated\n").is_err());
+        assert!(parse_toml("[]\n").is_err());
+    }
+
+    #[test]
+    fn underscore_integers() {
+        let m = parse_toml("n = 1_000_000\n").unwrap();
+        assert_eq!(m[""]["n"].as_int(), Some(1_000_000));
+    }
+}

@@ -1,0 +1,24 @@
+//! Job coordinator: plans the quilt pieces (and the hybrid's ER blocks),
+//! routes them across a bounded worker pool, and merges the edge streams
+//! into one quilted sample.
+//!
+//! The quilting algorithm is embarrassingly parallel at the piece level —
+//! each of the `B²` KPGM samples (and each ER block of the §5 hybrid) is
+//! independent given its RNG fork — so the coordinator is a classic
+//! leader/worker design:
+//!
+//! * the **leader** builds a [`JobPlan`] (piece jobs + block jobs),
+//! * **workers** (std threads) pull jobs from a shared queue and emit
+//!   per-job edge batches into a bounded channel (backpressure: workers
+//!   block when the merger falls behind),
+//! * the **merger** (the calling thread) absorbs batches into the output
+//!   edge list, then dedups (the quilting step).
+//!
+//! Determinism: every job carries a stable RNG fork id derived from the
+//! plan, so the *set* of sampled edges is independent of worker count and
+//! scheduling order; [`SampleReport::graph`] is canonicalized (sorted) by
+//! the final dedup.
+
+mod pool;
+
+pub use pool::{Coordinator, JobPlan, SampleReport};

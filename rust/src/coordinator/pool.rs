@@ -1,0 +1,346 @@
+//! The worker pool and job plan.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::graph::{EdgeList, NodeId};
+use crate::kpgm::BallDropSampler;
+use crate::magm::{AttributeAssignment, MagmParams};
+use crate::quilt::{sample_er_block, HybridPlan, HybridSampler, Partition, PieceJob, QuiltSampler};
+use crate::rng::Rng;
+
+/// Reference to a node block in a hybrid plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BlockRef {
+    /// Index into `HybridPlan::light`.
+    Light(usize),
+    /// Index into `HybridPlan::heavy`.
+    Heavy(usize),
+}
+
+/// One unit of work.
+#[derive(Debug, Clone, Copy)]
+enum Job {
+    /// A quilt piece (KPGM sample filtered to `(D_k, D_l)`).
+    Piece(PieceJob),
+    /// A uniform block `src × dst` with the configs' edge probability.
+    ErBlock { src: BlockRef, dst: BlockRef, fork_id: u64 },
+}
+
+/// The full set of jobs for one sample, plus the shared inputs workers
+/// need. Built once by the leader.
+pub struct JobPlan {
+    jobs: Vec<Job>,
+    partition: Partition,
+    hybrid: Option<HybridPlan>,
+    params: MagmParams,
+    seed: u64,
+}
+
+impl JobPlan {
+    /// Number of jobs.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Whether the plan is empty.
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Partition size B of the quilting part.
+    pub fn partition_size(&self) -> usize {
+        self.partition.size()
+    }
+}
+
+/// Result of a coordinated sampling run.
+#[derive(Debug)]
+pub struct SampleReport {
+    /// The sampled graph (deduplicated, canonical order).
+    pub graph: EdgeList,
+    /// Partition size B (of the quilted part).
+    pub partition_size: usize,
+    /// Total jobs executed.
+    pub num_jobs: usize,
+    /// Worker threads used.
+    pub workers: usize,
+    /// Wall-clock milliseconds.
+    pub wall_ms: f64,
+    /// Edges per second of wall time (post-dedup edges).
+    pub edges_per_sec: f64,
+}
+
+/// The leader/worker coordinator.
+#[derive(Debug, Clone)]
+pub struct Coordinator {
+    workers: usize,
+    channel_capacity: usize,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Coordinator {
+    /// Workers = available parallelism (capped at 16; the merger is one
+    /// more thread).
+    pub fn new() -> Self {
+        let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(16);
+        Coordinator { workers, channel_capacity: 64 }
+    }
+
+    /// Set the worker count (0 = auto).
+    pub fn workers(mut self, workers: usize) -> Self {
+        if workers > 0 {
+            self.workers = workers;
+        }
+        self
+    }
+
+    /// Bound on in-flight edge batches (backpressure knob).
+    pub fn channel_capacity(mut self, cap: usize) -> Self {
+        self.channel_capacity = cap.max(1);
+        self
+    }
+
+    /// Plan the quilting jobs (Algorithm 2 pieces only).
+    pub fn plan_quilt(
+        &self,
+        params: &MagmParams,
+        attrs: &AttributeAssignment,
+        seed: u64,
+    ) -> JobPlan {
+        let mut partition = Partition::build(attrs.configs());
+        crate::quilt::maybe_build_dense_index(&mut partition, params.depth());
+        let sampler = QuiltSampler::new(params.clone());
+        let jobs = sampler.plan(&partition).into_iter().map(Job::Piece).collect();
+        JobPlan { jobs, partition, hybrid: None, params: params.clone(), seed }
+    }
+
+    /// Plan the §5 hybrid jobs: W-subset pieces + ER blocks.
+    pub fn plan_hybrid(
+        &self,
+        params: &MagmParams,
+        attrs: &AttributeAssignment,
+        seed: u64,
+    ) -> JobPlan {
+        let hybrid = HybridSampler::new(params.clone()).seed(seed);
+        let plan = hybrid.plan(attrs);
+        let w_nodes = plan.w_nodes();
+        let mut partition = Partition::build_subset(attrs.configs(), &w_nodes);
+        crate::quilt::maybe_build_dense_index(&mut partition, params.depth());
+        let mut jobs: Vec<Job> = QuiltSampler::new(params.clone())
+            .plan(&partition)
+            .into_iter()
+            .map(Job::Piece)
+            .collect();
+        let mut er_id = 0u64;
+        for hi in 0..plan.heavy.len() {
+            for hj in 0..plan.heavy.len() {
+                jobs.push(Job::ErBlock {
+                    src: BlockRef::Heavy(hi),
+                    dst: BlockRef::Heavy(hj),
+                    fork_id: er_id,
+                });
+                er_id += 1;
+            }
+        }
+        for li in 0..plan.light.len() {
+            for hj in 0..plan.heavy.len() {
+                jobs.push(Job::ErBlock {
+                    src: BlockRef::Light(li),
+                    dst: BlockRef::Heavy(hj),
+                    fork_id: er_id,
+                });
+                er_id += 1;
+                jobs.push(Job::ErBlock {
+                    src: BlockRef::Heavy(hj),
+                    dst: BlockRef::Light(li),
+                    fork_id: er_id,
+                });
+                er_id += 1;
+            }
+        }
+        JobPlan { jobs, partition, hybrid: Some(plan), params: params.clone(), seed }
+    }
+
+    /// Sample a MAGM graph with Algorithm 2 across the pool.
+    pub fn sample_quilt(&self, params: &MagmParams, seed: u64) -> SampleReport {
+        let mut rng = Rng::new(seed);
+        let attrs = AttributeAssignment::sample(params, &mut rng);
+        let plan = self.plan_quilt(params, &attrs, seed);
+        self.run(plan)
+    }
+
+    /// Sample a MAGM graph with the §5 hybrid across the pool.
+    pub fn sample_hybrid(&self, params: &MagmParams, seed: u64) -> SampleReport {
+        let mut rng = Rng::new(seed);
+        let attrs = AttributeAssignment::sample(params, &mut rng);
+        let plan = self.plan_hybrid(params, &attrs, seed);
+        self.run(plan)
+    }
+
+    /// Execute a plan on the pool and merge the result.
+    pub fn run(&self, plan: JobPlan) -> SampleReport {
+        let start = Instant::now();
+        let n = plan.params.num_nodes();
+        let partition_size = plan.partition.size();
+        let num_jobs = plan.jobs.len();
+        let workers = self.workers.max(1);
+
+        let kpgm = BallDropSampler::new(plan.params.thetas().clone());
+        // Matches the single-threaded samplers' fork tags so coordinated
+        // and sequential sampling agree for the same seed.
+        let piece_base = Rng::new(plan.seed).fork(if plan.hybrid.is_some() {
+            0x4b1d
+        } else {
+            0x9011_7ed
+        });
+        let er_base = Rng::new(plan.seed).fork(0xe4b10c);
+
+        let next_job = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::sync_channel::<Vec<(NodeId, NodeId)>>(self.channel_capacity);
+
+        let mut graph = EdgeList::new(n);
+        std::thread::scope(|scope| {
+            let plan_ref = &plan;
+            let kpgm_ref = &kpgm;
+            let next = &next_job;
+            let piece_base_ref = &piece_base;
+            let er_base_ref = &er_base;
+            for _ in 0..workers {
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    loop {
+                        let idx = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(job) = plan_ref.jobs.get(idx) else { break };
+                        let mut local = EdgeList::new(n);
+                        match *job {
+                            Job::Piece(piece) => {
+                                let mut rng = piece_base_ref.fork(piece.fork_id);
+                                crate::quilt::sample_piece_for_coordinator(
+                                    kpgm_ref,
+                                    &plan_ref.partition,
+                                    piece,
+                                    &mut rng,
+                                    &mut local,
+                                );
+                            }
+                            Job::ErBlock { src, dst, fork_id } => {
+                                let hybrid =
+                                    plan_ref.hybrid.as_ref().expect("ER block without plan");
+                                let (ci, nodes_i) = block(hybrid, src);
+                                let (cj, nodes_j) = block(hybrid, dst);
+                                let p = crate::kpgm::edge_probability(
+                                    plan_ref.params.thetas(),
+                                    ci as NodeId,
+                                    cj as NodeId,
+                                );
+                                let mut rng = er_base_ref.fork(fork_id);
+                                sample_er_block(nodes_i, nodes_j, p, &mut rng, &mut local);
+                            }
+                        }
+                        if tx.send(local.into_edges()).is_err() {
+                            break; // merger gone
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            // Merger: absorb batches as they arrive (bounded channel gives
+            // backpressure against slow merging).
+            while let Ok(batch) = rx.recv() {
+                graph.extend(batch);
+            }
+        });
+
+        graph.dedup();
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+        let edges_per_sec = graph.num_edges() as f64 / (wall_ms / 1e3).max(1e-9);
+        SampleReport {
+            graph,
+            partition_size,
+            num_jobs,
+            workers,
+            wall_ms,
+            edges_per_sec,
+        }
+    }
+}
+
+fn block(plan: &HybridPlan, r: BlockRef) -> (u64, &[NodeId]) {
+    match r {
+        BlockRef::Light(i) => (plan.light[i].0, &plan.light[i].1),
+        BlockRef::Heavy(i) => (plan.heavy[i].0, &plan.heavy[i].1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kpgm::Initiator;
+
+    fn params(n: usize, d: u32, mu: f64) -> MagmParams {
+        MagmParams::homogeneous(Initiator::THETA1, mu, n, d)
+    }
+
+    #[test]
+    fn coordinated_equals_sequential_quilt() {
+        // Same seed: the coordinator must produce exactly the edge set of
+        // the single-threaded QuiltSampler.
+        let p = params(256, 8, 0.5);
+        let seq = QuiltSampler::new(p.clone()).seed(31).sample();
+        let rep = Coordinator::new().workers(4).sample_quilt(&p, 31);
+        let mut a = seq.into_edges();
+        let mut b = rep.graph.into_edges();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn coordinated_equals_sequential_hybrid() {
+        let p = params(300, 9, 0.85);
+        let seq = HybridSampler::new(p.clone()).seed(37).sample();
+        let rep = Coordinator::new().workers(3).sample_hybrid(&p, 37);
+        let mut a = seq.into_edges();
+        let mut b = rep.graph.into_edges();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_result() {
+        let p = params(128, 7, 0.7);
+        let r1 = Coordinator::new().workers(1).sample_hybrid(&p, 5);
+        let r8 = Coordinator::new().workers(8).sample_hybrid(&p, 5);
+        let mut a = r1.graph.into_edges();
+        let mut b = r8.graph.into_edges();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn report_metrics_populated() {
+        let p = params(128, 7, 0.5);
+        let rep = Coordinator::new().sample_quilt(&p, 1);
+        assert!(rep.wall_ms > 0.0);
+        assert!(rep.num_jobs >= rep.partition_size * rep.partition_size);
+        assert!(rep.edges_per_sec > 0.0);
+        assert!(rep.graph.validate().is_ok());
+    }
+
+    #[test]
+    fn tiny_channel_capacity_still_completes() {
+        // Backpressure path: capacity 1 forces workers to block on send.
+        let p = params(256, 8, 0.5);
+        let rep = Coordinator::new().workers(4).channel_capacity(1).sample_quilt(&p, 9);
+        assert!(rep.graph.num_edges() > 0);
+    }
+}

@@ -1,0 +1,58 @@
+//! Figure 7: attribute-configuration frequency vs rank for several μ.
+
+use crate::kpgm::Initiator;
+use crate::magm::{AttributeAssignment, MagmParams};
+use crate::rng::Rng;
+
+use super::{ExperimentResult, Scale};
+
+/// Figure 7: rank configurations by frequency and report the frequency at
+/// log-spaced ranks (the paper's log-log plot) for μ ∈ {0.5 … 0.9} at
+/// d = 15, n = 2^15 (capped by the scale).
+pub fn fig7_config_frequencies(scale: Scale) -> ExperimentResult {
+    let d = scale.max_log2n.min(15);
+    let n = 1usize << d;
+    let mut out = ExperimentResult::new(
+        "fig7",
+        "configuration frequency vs rank (log-spaced ranks), n = 2^d",
+        &["mu", "rank", "count"],
+    );
+    for &mu in &[0.5, 0.6, 0.7, 0.8, 0.9] {
+        let params = MagmParams::homogeneous(Initiator::THETA1, mu, n, d);
+        let mut rng = Rng::new(scale.seed).fork((mu * 100.0) as u64);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        let mut counts: Vec<u32> =
+            attrs.config_counts().into_iter().map(|(_, c)| c).collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // log-spaced ranks 1, 2, 4, 8, ...
+        let mut rank = 1usize;
+        while rank <= counts.len() {
+            out.push_row(vec![
+                format!("{mu:.1}"),
+                rank.to_string(),
+                counts[rank - 1].to_string(),
+            ]);
+            rank *= 2;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequencies_flat_at_half_concentrated_at_nine_tenths() {
+        let r = fig7_config_frequencies(Scale::smoke());
+        // For mu=0.9 the top rank count must dominate the mu=0.5 top rank.
+        let top = |mu: &str| -> u32 {
+            r.rows
+                .iter()
+                .find(|row| row[0] == mu && row[1] == "1")
+                .map(|row| row[2].parse().unwrap())
+                .unwrap()
+        };
+        assert!(top("0.9") > 3 * top("0.5"), "0.9: {} 0.5: {}", top("0.9"), top("0.5"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Figure 14: effect of the attribute dimension d at fixed n.
+
+use crate::kpgm::Initiator;
+use crate::magm::MagmParams;
+
+use super::scaling::time_quilt;
+use super::{ExperimentResult, Scale};
+
+/// Figure 14: runtime vs d at fixed n (the paper fixes n = 2^15 and sweeps
+/// d around log2(n); runtime is flat for d ≤ log2 n and blows up
+/// exponentially beyond — §4.2's Ω(4^{d − log2 n}) term).
+pub fn fig14_dimension_sweep(scale: Scale) -> ExperimentResult {
+    let log2n = scale.max_log2n.min(15);
+    let n = 1usize << log2n;
+    let mut out = ExperimentResult::new(
+        "fig14",
+        "runtime vs d at fixed n (mu = 0.5); d = log2(n) highlighted",
+        &["d", "log2_n", "ms", "is_log2n"],
+    );
+    // Sweep d from below log2 n to a couple past it (each step past
+    // log2 n quadruples the KPGM work, so +3 is already ~64x).
+    let d_min = log2n.saturating_sub(6).max(2);
+    let d_max = log2n + 3;
+    for d in d_min..=d_max {
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
+        let trials = if d > log2n { scale.trials.min(3) } else { scale.trials };
+        let t = time_quilt(&params, trials, scale.seed);
+        out.push_row(vec![
+            d.to_string(),
+            log2n.to_string(),
+            format!("{:.2}", t.ms),
+            (d == log2n).to_string(),
+        ]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_blows_up_past_log2n() {
+        let r = fig14_dimension_sweep(Scale::smoke());
+        let ms: Vec<(u32, f64)> = r
+            .rows
+            .iter()
+            .map(|row| (row[0].parse().unwrap(), row[2].parse().unwrap()))
+            .collect();
+        let log2n: u32 = r.rows[0][1].parse().unwrap();
+        let at_log2n = ms.iter().find(|&&(d, _)| d == log2n).unwrap().1;
+        let past = ms.iter().find(|&&(d, _)| d == log2n + 3).unwrap().1;
+        // 3 levels past log2 n multiplies KPGM balls by 2.4^3 ≈ 14 and the
+        // index space by 64; demand a clear slowdown (3x — loose enough
+        // for debug-build timing noise at smoke scale).
+        assert!(past > 3.0 * at_log2n.max(0.01), "at={at_log2n} past={past}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Experiment harnesses: regenerate every figure of the paper's evaluation
+//! (§6). The paper has no tables; Figures 5–14 are its quantitative
+//! results and Figure 1 is the edge-probability-matrix illustration
+//! (Figures 2–4 are method diagrams).
+//!
+//! Each harness returns one or more [`ExperimentResult`] tables whose rows
+//! mirror the series the paper plots; `magquilt experiment <id>` prints
+//! them as TSV and records them in markdown form for EXPERIMENTS.md.
+
+mod configs;
+mod dims;
+mod mu;
+mod probmatrix;
+mod properties;
+mod scaling;
+
+use anyhow::{bail, Result};
+
+pub use configs::fig7_config_frequencies;
+pub use dims::fig14_dimension_sweep;
+pub use mu::{fig12_relative_runtime, fig13_rho_max};
+pub use probmatrix::fig1_probability_matrices;
+pub use properties::{fig8_edge_growth, fig9_scc_fraction};
+pub use scaling::{fig10_runtime_comparison, fig11_time_per_edge, fig5_partition_balanced,
+                  fig6_partition_unbalanced};
+
+/// A regenerated figure series.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    /// Figure id, e.g. "fig5".
+    pub id: String,
+    /// Human title.
+    pub title: String,
+    /// Column names.
+    pub header: Vec<String>,
+    /// Data rows.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl ExperimentResult {
+    /// New empty result.
+    pub fn new(id: &str, title: &str, header: &[&str]) -> Self {
+        ExperimentResult {
+            id: id.to_string(),
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    /// Tab-separated rendering (with `# title` comment and header line).
+    pub fn to_tsv(&self) -> String {
+        let mut s = format!("# {} — {}\n{}\n", self.id, self.title, self.header.join("\t"));
+        for row in &self.rows {
+            s.push_str(&row.join("\t"));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// GitHub-markdown table rendering.
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("**{} — {}**\n\n", self.id, self.title);
+        s.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        s.push_str(&format!("|{}\n", "---|".repeat(self.header.len())));
+        for row in &self.rows {
+            s.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        s
+    }
+}
+
+/// Effort knobs: the paper runs to n = 2^23; the default scale keeps
+/// `experiment all` tractable on a container while preserving the shapes.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    /// Largest log2(n) for sweeps.
+    pub max_log2n: u32,
+    /// Largest log2(n) the naive O(n²) baseline is run at.
+    pub naive_max_log2n: u32,
+    /// Trials per configuration (the paper uses 10).
+    pub trials: u32,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        Scale { max_log2n: 16, naive_max_log2n: 11, trials: 10, seed: 42 }
+    }
+}
+
+impl Scale {
+    /// A fast smoke-scale for tests.
+    pub fn smoke() -> Self {
+        Scale { max_log2n: 9, naive_max_log2n: 7, trials: 2, seed: 42 }
+    }
+}
+
+/// All experiment ids in paper order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
+];
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, scale: Scale) -> Result<Vec<ExperimentResult>> {
+    Ok(match id {
+        "fig1" => fig1_probability_matrices(scale)?,
+        "fig5" => vec![fig5_partition_balanced(scale)],
+        "fig6" => vec![fig6_partition_unbalanced(scale)],
+        "fig7" => vec![fig7_config_frequencies(scale)],
+        "fig8" => vec![fig8_edge_growth(scale)],
+        "fig9" => vec![fig9_scc_fraction(scale)],
+        "fig10" => vec![fig10_runtime_comparison(scale)],
+        "fig11" => vec![fig11_time_per_edge(scale)],
+        "fig12" => vec![fig12_relative_runtime(scale)],
+        "fig13" => vec![fig13_rho_max(scale)],
+        "fig14" => vec![fig14_dimension_sweep(scale)],
+        _ => bail!("unknown experiment {id:?}; expected one of {ALL_EXPERIMENTS:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn result_rendering() {
+        let mut r = ExperimentResult::new("figX", "demo", &["a", "b"]);
+        r.push_row(vec!["1".into(), "2".into()]);
+        let tsv = r.to_tsv();
+        assert!(tsv.contains("figX") && tsv.contains("1\t2"));
+        let md = r.to_markdown();
+        assert!(md.contains("| a | b |") && md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run_experiment("fig99", Scale::smoke()).is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! Figures 12 and 13: effect of μ on running time.
+
+use crate::kpgm::Initiator;
+use crate::magm::MagmParams;
+
+use super::scaling::time_hybrid;
+use super::{ExperimentResult, Scale};
+
+const MU_GRID: [f64; 9] = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+/// Figure 12: relative running time ρ(μ) = T(μ)/T(0.5) for the (hybrid)
+/// sampler, for several n and both Θ matrices.
+pub fn fig12_relative_runtime(scale: Scale) -> ExperimentResult {
+    let mut out = ExperimentResult::new(
+        "fig12",
+        "relative runtime rho(mu) = T(mu)/T(0.5), hybrid sampler",
+        &["theta", "log2_n", "mu", "ms", "rho"],
+    );
+    let dims: Vec<u32> =
+        [scale.max_log2n.saturating_sub(4), scale.max_log2n.saturating_sub(2), scale.max_log2n]
+            .into_iter()
+            .filter(|&d| d >= 6)
+            .collect();
+    for (name, theta) in [("theta1", Initiator::THETA1), ("theta2", Initiator::THETA2)] {
+        for &d in &dims {
+            let n = 1usize << d;
+            let t_half =
+                time_hybrid(&MagmParams::homogeneous(theta, 0.5, n, d), scale.trials, scale.seed)
+                    .ms;
+            for &mu in &MU_GRID {
+                let t = time_hybrid(
+                    &MagmParams::homogeneous(theta, mu, n, d),
+                    scale.trials,
+                    scale.seed,
+                )
+                .ms;
+                out.push_row(vec![
+                    name.into(),
+                    d.to_string(),
+                    format!("{mu:.1}"),
+                    format!("{t:.2}"),
+                    format!("{:.2}", t / t_half.max(1e-9)),
+                ]);
+            }
+        }
+    }
+    out
+}
+
+/// Figure 13: ρ_max = max_μ ρ(μ) as a function of n.
+pub fn fig13_rho_max(scale: Scale) -> ExperimentResult {
+    let mut out = ExperimentResult::new(
+        "fig13",
+        "rho_max = max over mu of T(mu)/T(0.5) vs n",
+        &["theta", "log2_n", "n", "rho_max", "argmax_mu"],
+    );
+    for (name, theta) in [("theta1", Initiator::THETA1), ("theta2", Initiator::THETA2)] {
+        for d in 8..=scale.max_log2n {
+            let n = 1usize << d;
+            let t_half =
+                time_hybrid(&MagmParams::homogeneous(theta, 0.5, n, d), scale.trials, scale.seed)
+                    .ms;
+            let mut best = (0.0f64, 0.5f64);
+            for &mu in &MU_GRID {
+                let t = time_hybrid(
+                    &MagmParams::homogeneous(theta, mu, n, d),
+                    scale.trials,
+                    scale.seed,
+                )
+                .ms;
+                let rho = t / t_half.max(1e-9);
+                if rho > best.0 {
+                    best = (rho, mu);
+                }
+            }
+            out.push_row(vec![
+                name.into(),
+                d.to_string(),
+                n.to_string(),
+                format!("{:.2}", best.0),
+                format!("{:.1}", best.1),
+            ]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_rho_at_half_is_one() {
+        let r = fig12_relative_runtime(Scale::smoke());
+        for row in r.rows.iter().filter(|row| row[2] == "0.5") {
+            let rho: f64 = row[4].parse().unwrap();
+            assert!((rho - 1.0).abs() < 0.35, "rho(0.5)={rho}");
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Figures 8 and 9: properties of the generated graphs (edge growth
+//! |E| = n^c and largest-SCC fraction → 1).
+
+use crate::graph::{largest_scc_size, Csr};
+use crate::kpgm::Initiator;
+use crate::magm::MagmParams;
+use crate::quilt::QuiltSampler;
+use crate::stats::{loglog_slope, mean};
+
+use super::{ExperimentResult, Scale};
+
+/// Figure 8: |E| as a function of n at μ = 0.5 for Θ1 and Θ2; the paper
+/// reports near-linear log-log growth, i.e. |E| = n^c. The fitted c is
+/// appended as a summary row per theta.
+pub fn fig8_edge_growth(scale: Scale) -> ExperimentResult {
+    let mut out = ExperimentResult::new(
+        "fig8",
+        "edge count vs n (mu = 0.5); |E| = n^c",
+        &["theta", "log2_n", "n", "mean_edges", "fitted_c"],
+    );
+    for (name, theta) in [("theta1", Initiator::THETA1), ("theta2", Initiator::THETA2)] {
+        let mut points = Vec::new();
+        for d in 6..=scale.max_log2n {
+            let n = 1usize << d;
+            let params = MagmParams::homogeneous(theta, 0.5, n, d);
+            let mut es = Vec::new();
+            for t in 0..scale.trials {
+                let g = QuiltSampler::new(params.clone())
+                    .seed(scale.seed + t as u64)
+                    .sample();
+                es.push(g.num_edges() as f64);
+            }
+            let m = mean(&es);
+            points.push((n as f64, m));
+            out.push_row(vec![
+                name.into(),
+                d.to_string(),
+                n.to_string(),
+                format!("{m:.1}"),
+                String::new(),
+            ]);
+        }
+        let c = loglog_slope(&points);
+        out.push_row(vec![name.into(), "fit".into(), "-".into(), "-".into(), format!("{c:.3}")]);
+    }
+    out
+}
+
+/// Figure 9: fraction of nodes in the largest strongly connected component
+/// as n grows (→ 1 asymptotically per the paper).
+pub fn fig9_scc_fraction(scale: Scale) -> ExperimentResult {
+    let mut out = ExperimentResult::new(
+        "fig9",
+        "largest-SCC node fraction vs n (mu = 0.5)",
+        &["theta", "log2_n", "n", "mean_scc_fraction"],
+    );
+    for (name, theta) in [("theta1", Initiator::THETA1), ("theta2", Initiator::THETA2)] {
+        for d in 6..=scale.max_log2n {
+            let n = 1usize << d;
+            let params = MagmParams::homogeneous(theta, 0.5, n, d);
+            let mut fracs = Vec::new();
+            for t in 0..scale.trials {
+                let g = QuiltSampler::new(params.clone())
+                    .seed(scale.seed + 1000 + t as u64)
+                    .sample();
+                let csr = Csr::from_edge_list(&g);
+                fracs.push(largest_scc_size(&csr) as f64 / n as f64);
+            }
+            out.push_row(vec![
+                name.into(),
+                d.to_string(),
+                n.to_string(),
+                format!("{:.4}", mean(&fracs)),
+            ]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_growth_exponent_above_one() {
+        let r = fig8_edge_growth(Scale::smoke());
+        let fits: Vec<f64> = r
+            .rows
+            .iter()
+            .filter(|row| row[1] == "fit")
+            .map(|row| row[4].parse().unwrap())
+            .collect();
+        assert_eq!(fits.len(), 2);
+        for c in fits {
+            assert!(c > 1.0 && c < 2.2, "c={c}");
+        }
+    }
+
+    #[test]
+    fn fig9_scc_fraction_grows() {
+        let r = fig9_scc_fraction(Scale::smoke());
+        // last theta1 row >= first theta1 row (asymptotically -> 1)
+        let t1: Vec<f64> = r
+            .rows
+            .iter()
+            .filter(|row| row[0] == "theta1")
+            .map(|row| row[3].parse().unwrap())
+            .collect();
+        assert!(t1.last().unwrap() >= t1.first().unwrap());
+    }
+}

@@ -1,0 +1,207 @@
+//! Figures 5, 6 (partition size vs n) and 10, 11 (runtime vs n).
+
+use std::time::Instant;
+
+use crate::kpgm::Initiator;
+use crate::magm::{naive_sample, AttributeAssignment, MagmParams};
+use crate::quilt::{HybridSampler, Partition, QuiltSampler};
+use crate::rng::Rng;
+use crate::stats::mean;
+
+use super::{ExperimentResult, Scale};
+
+/// Figure 5: partition size B vs n at μ = 0.5, with the paper's
+/// Chernoff-style bound (eq. 12) as reference columns.
+pub fn fig5_partition_balanced(scale: Scale) -> ExperimentResult {
+    let mut out = ExperimentResult::new(
+        "fig5",
+        "partition size vs n (mu = 0.5), 10-trial mean + log2(n) reference",
+        &["log2_n", "n", "mean_B", "log2_n_bound", "p_bound_exceed"],
+    );
+    for d in 6..=scale.max_log2n {
+        let n = 1usize << d;
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
+        let mut bs = Vec::new();
+        for t in 0..scale.trials {
+            let mut rng = Rng::new(scale.seed + t as u64).fork(d as u64);
+            let attrs = AttributeAssignment::sample(&params, &mut rng);
+            bs.push(Partition::build(attrs.configs()).size() as f64);
+        }
+        // eq. 12: P(B > log2 n) <= n^2 / (e * log2(n)^{log2 n})
+        let log2n = d as f64;
+        let bound = (n as f64).powi(2) / (std::f64::consts::E * log2n.powf(log2n));
+        out.push_row(vec![
+            d.to_string(),
+            n.to_string(),
+            format!("{:.2}", mean(&bs)),
+            format!("{log2n:.0}"),
+            format!("{bound:.3e}"),
+        ]);
+    }
+    out
+}
+
+/// Figure 6: partition size vs n for unbalanced μ, with the `n·μ^d` and
+/// `log2(n)` envelopes the paper plots.
+pub fn fig6_partition_unbalanced(scale: Scale) -> ExperimentResult {
+    let mut out = ExperimentResult::new(
+        "fig6",
+        "partition size vs n for mu in {0.55, 0.60, 0.70, 0.90}",
+        &["mu", "log2_n", "n", "mean_B", "n_mu_d", "log2_n"],
+    );
+    for &mu in &[0.55, 0.60, 0.70, 0.90] {
+        for d in 6..=scale.max_log2n {
+            let n = 1usize << d;
+            let params = MagmParams::homogeneous(Initiator::THETA1, mu, n, d);
+            let mut bs = Vec::new();
+            for t in 0..scale.trials {
+                let mut rng = Rng::new(scale.seed + t as u64).fork(d as u64 * 100);
+                let attrs = AttributeAssignment::sample(&params, &mut rng);
+                bs.push(Partition::build(attrs.configs()).size() as f64);
+            }
+            out.push_row(vec![
+                format!("{mu:.2}"),
+                d.to_string(),
+                n.to_string(),
+                format!("{:.2}", mean(&bs)),
+                format!("{:.2}", n as f64 * mu.powi(d as i32)),
+                format!("{d}"),
+            ]);
+        }
+    }
+    out
+}
+
+/// Timing record for one (sampler, n) cell.
+pub(crate) struct TimedRun {
+    /// Mean wall milliseconds per sample.
+    pub ms: f64,
+    /// Mean edges per sample.
+    pub edges: f64,
+}
+
+pub(crate) fn time_quilt(params: &MagmParams, trials: u32, seed: u64) -> TimedRun {
+    let mut times = Vec::new();
+    let mut edges = Vec::new();
+    for t in 0..trials {
+        let start = Instant::now();
+        let g = QuiltSampler::new(params.clone()).seed(seed + t as u64).sample();
+        times.push(start.elapsed().as_secs_f64() * 1e3);
+        edges.push(g.num_edges() as f64);
+    }
+    TimedRun { ms: mean(&times), edges: mean(&edges) }
+}
+
+pub(crate) fn time_hybrid(params: &MagmParams, trials: u32, seed: u64) -> TimedRun {
+    let mut times = Vec::new();
+    let mut edges = Vec::new();
+    for t in 0..trials {
+        let start = Instant::now();
+        let g = HybridSampler::new(params.clone()).seed(seed + t as u64).sample();
+        times.push(start.elapsed().as_secs_f64() * 1e3);
+        edges.push(g.num_edges() as f64);
+    }
+    TimedRun { ms: mean(&times), edges: mean(&edges) }
+}
+
+pub(crate) fn time_naive(params: &MagmParams, trials: u32, seed: u64) -> TimedRun {
+    let mut times = Vec::new();
+    let mut edges = Vec::new();
+    for t in 0..trials {
+        let mut rng = Rng::new(seed + t as u64);
+        let attrs = AttributeAssignment::sample(params, &mut rng);
+        let start = Instant::now();
+        let g = naive_sample(params, &attrs, &mut rng);
+        times.push(start.elapsed().as_secs_f64() * 1e3);
+        edges.push(g.num_edges() as f64);
+    }
+    TimedRun { ms: mean(&times), edges: mean(&edges) }
+}
+
+/// Figure 10: running time of quilting vs the naive scheme as n grows,
+/// for Θ1 and Θ2. The naive sampler is only run up to
+/// `scale.naive_max_log2n` (the paper could not push it past 2^18 in 8h).
+pub fn fig10_runtime_comparison(scale: Scale) -> ExperimentResult {
+    let mut out = ExperimentResult::new(
+        "fig10",
+        "runtime (ms): quilting vs naive, mu = 0.5",
+        &["theta", "log2_n", "n", "quilt_ms", "naive_ms", "speedup"],
+    );
+    for (name, theta) in [("theta1", Initiator::THETA1), ("theta2", Initiator::THETA2)] {
+        for d in 6..=scale.max_log2n {
+            let n = 1usize << d;
+            let params = MagmParams::homogeneous(theta, 0.5, n, d);
+            let q = time_quilt(&params, scale.trials, scale.seed);
+            let (naive_ms, speedup) = if d <= scale.naive_max_log2n {
+                let nv = time_naive(&params, scale.trials.min(3), scale.seed);
+                (format!("{:.2}", nv.ms), format!("{:.1}", nv.ms / q.ms.max(1e-9)))
+            } else {
+                ("-".into(), "-".into())
+            };
+            out.push_row(vec![
+                name.into(),
+                d.to_string(),
+                n.to_string(),
+                format!("{:.2}", q.ms),
+                naive_ms,
+                speedup,
+            ]);
+        }
+    }
+    out
+}
+
+/// Figure 11: runtime **per edge**; the paper's point is that quilting's
+/// per-edge cost is ~constant in n while the naive scheme's diverges.
+pub fn fig11_time_per_edge(scale: Scale) -> ExperimentResult {
+    let mut out = ExperimentResult::new(
+        "fig11",
+        "runtime per edge (microseconds), mu = 0.5",
+        &["theta", "log2_n", "n", "quilt_us_per_edge", "naive_us_per_edge"],
+    );
+    for (name, theta) in [("theta1", Initiator::THETA1), ("theta2", Initiator::THETA2)] {
+        for d in 6..=scale.max_log2n {
+            let n = 1usize << d;
+            let params = MagmParams::homogeneous(theta, 0.5, n, d);
+            let q = time_quilt(&params, scale.trials, scale.seed);
+            let naive_col = if d <= scale.naive_max_log2n {
+                let nv = time_naive(&params, scale.trials.min(3), scale.seed);
+                format!("{:.3}", nv.ms * 1e3 / nv.edges.max(1.0))
+            } else {
+                "-".into()
+            };
+            out.push_row(vec![
+                name.into(),
+                d.to_string(),
+                n.to_string(),
+                format!("{:.3}", q.ms * 1e3 / q.edges.max(1.0)),
+                naive_col,
+            ]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_smoke_shape_holds() {
+        let r = fig5_partition_balanced(Scale::smoke());
+        assert_eq!(r.header.len(), 5);
+        assert!(!r.rows.is_empty());
+        // B should stay at or below log2(n) + small slack at mu = 0.5.
+        for row in &r.rows {
+            let d: f64 = row[0].parse().unwrap();
+            let b: f64 = row[2].parse().unwrap();
+            assert!(b <= d + 3.0, "B={b} log2n={d}");
+        }
+    }
+
+    #[test]
+    fn fig10_smoke_runs_and_quilt_wins_at_top() {
+        let r = fig10_runtime_comparison(Scale::smoke());
+        assert!(!r.rows.is_empty());
+    }
+}

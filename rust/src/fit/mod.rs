@@ -1,0 +1,322 @@
+//! Maximum-likelihood parameter fitting for the MAGM.
+//!
+//! The paper's introduction motivates sampling with model-fitting
+//! workflows (goodness of fit, growth prediction); Kim & Leskovec (2011)
+//! fit MAGM by variational EM over latent attributes. Here we implement
+//! the *observed-attribute* MLE — the inner problem of that EM and the
+//! piece needed by `examples/fit_model.rs`: given a graph and the
+//! attribute assignment, estimate the shared initiator Θ (and μ̂, which is
+//! closed-form).
+//!
+//! Key trick: with a shared 2×2 Θ across levels, the Bernoulli
+//! log-likelihood of a pair `(i, j)` depends on `(λ_i, λ_j)` only through
+//! the **agreement profile** `n(i,j) = (n00, n01, n10, n11)` — how many
+//! levels exhibit each bit pair — because
+//! `log Q_ij = Σ_ab n_ab · log θ_ab`. There are only `O(d³)` distinct
+//! profiles, so after one `O(C² d)` aggregation pass over distinct
+//! configuration pairs (C = #distinct configs), every likelihood
+//! evaluation is `O(#profiles)` and coordinate-wise optimization is cheap
+//! and exact.
+
+use crate::graph::EdgeList;
+use crate::hashutil::FastMap;
+use crate::kpgm::Initiator;
+use crate::magm::AttributeAssignment;
+
+/// Sufficient statistics: per agreement profile, total ordered pairs and
+/// observed edges.
+#[derive(Debug, Clone)]
+pub struct SufficientStats {
+    /// Packed profile key → (pair count, edge count). Key packs
+    /// (n00, n01, n10) base (d+1); n11 = d − the rest.
+    classes: FastMap<u64, (u64, u64)>,
+    depth: u32,
+}
+
+/// Pack an agreement profile (n11 is implied).
+#[inline]
+fn pack(n00: u32, n01: u32, n10: u32, base: u64) -> u64 {
+    (n00 as u64 * base + n01 as u64) * base + n10 as u64
+}
+
+impl SufficientStats {
+    /// Aggregate over all ordered node pairs (including self-pairs, which
+    /// the MAGM edge-probability matrix covers) and the observed edges.
+    ///
+    /// Cost: `O(C² d + |E| d)` where C is the number of distinct
+    /// configurations.
+    pub fn build(graph: &EdgeList, attrs: &AttributeAssignment) -> Self {
+        let d = attrs.depth();
+        let base = (d + 1) as u64;
+        let counts = attrs.config_counts();
+        let mut classes: FastMap<u64, (u64, u64)> = FastMap::default();
+
+        // Pair totals over distinct configuration pairs.
+        for &(ci, mi) in &counts {
+            for &(cj, mj) in &counts {
+                let key = profile_key(ci, cj, d, base);
+                classes.entry(key).or_insert((0, 0)).0 += mi as u64 * mj as u64;
+            }
+        }
+        // Edge counts over observed edges.
+        for &(s, t) in graph.edges() {
+            let key = profile_key(attrs.config(s), attrs.config(t), d, base);
+            classes
+                .get_mut(&key)
+                .expect("edge profile must exist among pair profiles")
+                .1 += 1;
+        }
+        SufficientStats { classes, depth: d }
+    }
+
+    /// Number of distinct profiles.
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Bernoulli log-likelihood of the graph under a shared 2×2 theta.
+    pub fn loglik(&self, theta: &Initiator) -> f64 {
+        let base = (self.depth + 1) as u64;
+        let l = [
+            theta.get(0, 0).max(1e-300).ln(),
+            theta.get(0, 1).max(1e-300).ln(),
+            theta.get(1, 0).max(1e-300).ln(),
+            theta.get(1, 1).max(1e-300).ln(),
+        ];
+        let mut total = 0.0;
+        for (&key, &(pairs, edges)) in &self.classes {
+            let n10 = (key % base) as f64;
+            let n01 = ((key / base) % base) as f64;
+            let n00 = (key / (base * base)) as f64;
+            let n11 = self.depth as f64 - n00 - n01 - n10;
+            let logq = n00 * l[0] + n01 * l[1] + n10 * l[2] + n11 * l[3];
+            let q = logq.exp().clamp(1e-12, 1.0 - 1e-12);
+            total += edges as f64 * logq + (pairs - edges) as f64 * (1.0 - q).ln();
+        }
+        total
+    }
+}
+
+/// Profile of a configuration pair.
+#[inline]
+fn profile_key(ci: u64, cj: u64, d: u32, base: u64) -> u64 {
+    // Count bit pairs across levels via bit tricks: ones where both set,
+    // where only src set, where only dst set.
+    let both = (ci & cj).count_ones();
+    let src_only = (ci & !cj).count_ones();
+    let dst_only = (!ci & cj).count_ones();
+    let n11 = both;
+    let n10 = src_only;
+    let n01 = dst_only;
+    let n00 = d - n11 - n10 - n01;
+    let _ = n11;
+    pack(n00, n01, n10, base)
+}
+
+/// Options for the coordinate-ascent fit.
+#[derive(Debug, Clone, Copy)]
+pub struct FitOptions {
+    /// Full coordinate sweeps.
+    pub max_sweeps: u32,
+    /// Stop when a sweep improves log-likelihood by less than this.
+    pub tol: f64,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        FitOptions { max_sweeps: 50, tol: 1e-6 }
+    }
+}
+
+/// Result of a fit.
+#[derive(Debug, Clone)]
+pub struct FitResult {
+    /// Estimated initiator.
+    pub theta: Initiator,
+    /// Log-likelihood at the estimate.
+    pub loglik: f64,
+    /// Sweeps performed.
+    pub sweeps: u32,
+    /// Log-likelihood after each sweep (monotone non-decreasing).
+    pub trajectory: Vec<f64>,
+}
+
+/// Closed-form MLE of μ per level: the fraction of 1-bits.
+pub fn fit_mu(attrs: &AttributeAssignment) -> Vec<f64> {
+    let n = attrs.num_nodes() as f64;
+    (0..attrs.depth())
+        .map(|k| {
+            let ones: u64 =
+                (0..attrs.num_nodes()).map(|i| attrs.bit(i as u32, k) as u64).sum();
+            ones as f64 / n
+        })
+        .collect()
+}
+
+/// Fit a shared 2×2 Θ by cyclic coordinate ascent with golden-section
+/// line search on each entry over `[1e-6, 1 − 1e-6]`.
+pub fn fit_theta(
+    graph: &EdgeList,
+    attrs: &AttributeAssignment,
+    init: Initiator,
+    opts: FitOptions,
+) -> FitResult {
+    let stats = SufficientStats::build(graph, attrs);
+    let mut entries = init.entries();
+    let mut best = stats.loglik(&Initiator::new(entries));
+    let mut trajectory = vec![best];
+    let mut sweeps = 0;
+    for _ in 0..opts.max_sweeps {
+        sweeps += 1;
+        for idx in 0..4 {
+            let eval = |v: f64| -> f64 {
+                let mut e = entries;
+                e[idx] = v;
+                stats.loglik(&Initiator::new(e))
+            };
+            entries[idx] = golden_max(eval, 1e-6, 1.0 - 1e-6, 1e-7);
+        }
+        let ll = stats.loglik(&Initiator::new(entries));
+        trajectory.push(ll);
+        if ll - best < opts.tol {
+            best = best.max(ll);
+            break;
+        }
+        best = ll;
+    }
+    FitResult { theta: Initiator::new(entries), loglik: best, sweeps, trajectory }
+}
+
+/// Golden-section maximization of a unimodal function on [lo, hi].
+fn golden_max<F: Fn(f64) -> f64>(f: F, mut lo: f64, mut hi: f64, tol: f64) -> f64 {
+    const INV_PHI: f64 = 0.618_033_988_749_894_8;
+    let mut c = hi - INV_PHI * (hi - lo);
+    let mut d = lo + INV_PHI * (hi - lo);
+    let mut fc = f(c);
+    let mut fd = f(d);
+    while (hi - lo).abs() > tol {
+        if fc > fd {
+            hi = d;
+            d = c;
+            fd = fc;
+            c = hi - INV_PHI * (hi - lo);
+            fc = f(c);
+        } else {
+            lo = c;
+            c = d;
+            fc = fd;
+            d = lo + INV_PHI * (hi - lo);
+            fd = f(d);
+        }
+    }
+    (lo + hi) / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::magm::{naive_sample, MagmParams};
+    use crate::quilt::QuiltSampler;
+    use crate::rng::Rng;
+
+    #[test]
+    fn profile_key_counts_bit_pairs() {
+        // ci = 0b1100, cj = 0b1010 over d = 4:
+        // levels (MSB..): (1,1) (1,0) (0,1) (0,0) -> n11=1 n10=1 n01=1 n00=1
+        let base = 5;
+        let key = profile_key(0b1100, 0b1010, 4, base);
+        assert_eq!(key, pack(1, 1, 1, base));
+    }
+
+    #[test]
+    fn stats_match_brute_force_loglik() {
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 24, 5);
+        let mut rng = Rng::new(331);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        let g = naive_sample(&params, &attrs, &mut rng);
+        let stats = SufficientStats::build(&g, &attrs);
+        // Brute force over all pairs.
+        let theta = Initiator::THETA2; // evaluate at a different theta
+        let mut want = 0.0;
+        let csr = crate::graph::Csr::from_edge_list(&g);
+        for i in 0..24u32 {
+            for j in 0..24u32 {
+                let q = crate::magm::edge_probability(
+                    &MagmParams::homogeneous(theta, 0.5, 24, 5),
+                    &attrs,
+                    i,
+                    j,
+                )
+                .clamp(1e-12, 1.0 - 1e-12);
+                if csr.has_edge(i, j) {
+                    want += q.ln();
+                } else {
+                    want += (1.0 - q).ln();
+                }
+            }
+        }
+        let got = stats.loglik(&theta);
+        assert!((got - want).abs() < 1e-6 * want.abs(), "{got} vs {want}");
+    }
+
+    #[test]
+    fn mu_mle_recovers_rate() {
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.7, 50_000, 6);
+        let mut rng = Rng::new(337);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        for mu in fit_mu(&attrs) {
+            assert!((mu - 0.7).abs() < 0.01, "mu={mu}");
+        }
+    }
+
+    #[test]
+    fn theta_fit_recovers_generator_parameters() {
+        // Generate a decent-size graph from known theta, fit from a
+        // neutral start, and require closeness (symmetric theta: the
+        // (0,1)/(1,0) entries are exchangeable, compare as a sorted pair).
+        let d = 11;
+        let n = 1 << d;
+        let truth = Initiator::THETA1;
+        let params = MagmParams::homogeneous(truth, 0.5, n, d);
+        let mut rng = Rng::new(347);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        let g = QuiltSampler::new(params.clone()).seed(5).sample_with_attrs(&attrs);
+        let init = Initiator::new([0.5, 0.5, 0.5, 0.5]);
+        let fit = fit_theta(&g, &attrs, init, FitOptions::default());
+        let e = fit.theta.entries();
+        let t = truth.entries();
+        assert!((e[0] - t[0]).abs() < 0.05, "theta00: {} vs {}", e[0], t[0]);
+        assert!((e[3] - t[3]).abs() < 0.05, "theta11: {} vs {}", e[3], t[3]);
+        let mut off_got = [e[1], e[2]];
+        let mut off_want = [t[1], t[2]];
+        off_got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        off_want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((off_got[0] - off_want[0]).abs() < 0.05);
+        assert!((off_got[1] - off_want[1]).abs() < 0.05);
+    }
+
+    #[test]
+    fn fit_trajectory_is_monotone() {
+        let d = 8;
+        let params = MagmParams::homogeneous(Initiator::THETA2, 0.6, 1 << d, d);
+        let mut rng = Rng::new(353);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        let g = QuiltSampler::new(params).seed(3).sample_with_attrs(&attrs);
+        let fit = fit_theta(&g, &attrs, Initiator::new([0.3; 4]), FitOptions::default());
+        for w in fit.trajectory.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "trajectory decreased: {:?}", w);
+        }
+        assert!(fit.sweeps >= 1);
+    }
+
+    #[test]
+    fn true_theta_scores_higher_than_wrong_theta() {
+        let d = 10;
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 1 << d, d);
+        let mut rng = Rng::new(359);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        let g = QuiltSampler::new(params).seed(11).sample_with_attrs(&attrs);
+        let stats = SufficientStats::build(&g, &attrs);
+        assert!(stats.loglik(&Initiator::THETA1) > stats.loglik(&Initiator::THETA2));
+    }
+}

@@ -1,0 +1,295 @@
+//! Graph algorithms used by the paper's property experiments (Fig. 9:
+//! largest-SCC fraction) and the general statistics pipeline.
+
+use super::{Csr, NodeId};
+
+/// Sizes of all strongly connected components (iterative Tarjan).
+///
+/// Iterative so it handles the million-node graphs the samplers produce
+/// without blowing the stack.
+pub fn scc_sizes(g: &Csr) -> Vec<usize> {
+    let n = g.num_nodes();
+    const UNVISITED: u32 = u32::MAX;
+    let mut index = vec![UNVISITED; n];
+    let mut lowlink = vec![0u32; n];
+    let mut on_stack = vec![false; n];
+    let mut stack: Vec<NodeId> = Vec::new();
+    let mut next_index = 0u32;
+    let mut sizes = Vec::new();
+
+    // Explicit DFS frame: (node, neighbor cursor).
+    let mut call: Vec<(NodeId, usize)> = Vec::new();
+
+    for root in 0..n as NodeId {
+        if index[root as usize] != UNVISITED {
+            continue;
+        }
+        call.push((root, 0));
+        index[root as usize] = next_index;
+        lowlink[root as usize] = next_index;
+        next_index += 1;
+        stack.push(root);
+        on_stack[root as usize] = true;
+
+        while let Some(&mut (v, ref mut cursor)) = call.last_mut() {
+            let nbrs = g.neighbors(v);
+            if *cursor < nbrs.len() {
+                let w = nbrs[*cursor];
+                *cursor += 1;
+                if index[w as usize] == UNVISITED {
+                    index[w as usize] = next_index;
+                    lowlink[w as usize] = next_index;
+                    next_index += 1;
+                    stack.push(w);
+                    on_stack[w as usize] = true;
+                    call.push((w, 0));
+                } else if on_stack[w as usize] {
+                    lowlink[v as usize] = lowlink[v as usize].min(index[w as usize]);
+                }
+            } else {
+                call.pop();
+                if let Some(&mut (parent, _)) = call.last_mut() {
+                    lowlink[parent as usize] =
+                        lowlink[parent as usize].min(lowlink[v as usize]);
+                }
+                if lowlink[v as usize] == index[v as usize] {
+                    // v roots an SCC: pop down to v.
+                    let mut size = 0usize;
+                    loop {
+                        let w = stack.pop().expect("tarjan stack underflow");
+                        on_stack[w as usize] = false;
+                        size += 1;
+                        if w == v {
+                            break;
+                        }
+                    }
+                    sizes.push(size);
+                }
+            }
+        }
+    }
+    sizes
+}
+
+/// Size of the largest strongly connected component.
+pub fn largest_scc_size(g: &Csr) -> usize {
+    scc_sizes(g).into_iter().max().unwrap_or(0)
+}
+
+/// Size of the largest weakly connected component (union-find).
+pub fn largest_wcc_size(g: &Csr) -> usize {
+    let n = g.num_nodes();
+    if n == 0 {
+        return 0;
+    }
+    let mut uf = UnionFind::new(n);
+    for v in 0..n as NodeId {
+        for &w in g.neighbors(v) {
+            uf.union(v as usize, w as usize);
+        }
+    }
+    let mut counts = vec![0usize; n];
+    for v in 0..n {
+        counts[uf.find(v)] += 1;
+    }
+    counts.into_iter().max().unwrap_or(0)
+}
+
+/// Average local (directed, treating neighbors as the union of in/out)
+/// clustering coefficient, estimated over `sample` random nodes for
+/// tractability on large graphs. Deterministic in `seed`.
+pub fn clustering_coefficient(g: &Csr, sample: usize, seed: u64) -> f64 {
+    let n = g.num_nodes();
+    if n == 0 {
+        return 0.0;
+    }
+    let t = g.transpose();
+    let mut rng = crate::rng::Rng::new(seed);
+    let count = sample.min(n);
+    let mut total = 0.0;
+    for _ in 0..count {
+        let v = rng.below(n as u64) as NodeId;
+        // Undirected neighborhood = out ∪ in, excluding self.
+        let mut nbrs: Vec<NodeId> = g
+            .neighbors(v)
+            .iter()
+            .chain(t.neighbors(v).iter())
+            .copied()
+            .filter(|&w| w != v)
+            .collect();
+        nbrs.sort_unstable();
+        nbrs.dedup();
+        let k = nbrs.len();
+        if k < 2 {
+            continue;
+        }
+        let mut links = 0usize;
+        for (i, &a) in nbrs.iter().enumerate() {
+            for &b in &nbrs[i + 1..] {
+                if g.has_edge(a, b) || g.has_edge(b, a) {
+                    links += 1;
+                }
+            }
+        }
+        total += links as f64 / (k * (k - 1) / 2) as f64;
+    }
+    total / count as f64
+}
+
+/// Union-find with path halving and union by size.
+struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n as u32).collect(), size: vec![1; n] }
+    }
+
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] as usize != x {
+            self.parent[x] = self.parent[self.parent[x] as usize];
+            x = self.parent[x] as usize;
+        }
+        x
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return;
+        }
+        if self.size[ra] < self.size[rb] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb] = ra as u32;
+        self.size[ra] += self.size[rb];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeList;
+
+    fn csr(n: usize, edges: Vec<(u32, u32)>) -> Csr {
+        Csr::from_edge_list(&EdgeList::from_edges(n, edges))
+    }
+
+    #[test]
+    fn scc_simple_cycle() {
+        let g = csr(3, vec![(0, 1), (1, 2), (2, 0)]);
+        let mut sizes = scc_sizes(&g);
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![3]);
+    }
+
+    #[test]
+    fn scc_two_components_and_bridge() {
+        // cycle {0,1} -> cycle {2,3}, plus isolated 4.
+        let g = csr(5, vec![(0, 1), (1, 0), (1, 2), (2, 3), (3, 2)]);
+        let mut sizes = scc_sizes(&g);
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![1, 2, 2]);
+        assert_eq!(largest_scc_size(&g), 2);
+    }
+
+    #[test]
+    fn scc_dag_is_all_singletons() {
+        let g = csr(4, vec![(0, 1), (0, 2), (1, 3), (2, 3)]);
+        assert_eq!(largest_scc_size(&g), 1);
+        assert_eq!(scc_sizes(&g).len(), 4);
+    }
+
+    #[test]
+    fn scc_self_loop() {
+        let g = csr(2, vec![(0, 0)]);
+        assert_eq!(scc_sizes(&g).len(), 2);
+        assert_eq!(largest_scc_size(&g), 1);
+    }
+
+    #[test]
+    fn scc_deep_path_no_stack_overflow() {
+        // 200k-node path: recursion would overflow; iterative must not.
+        let n = 200_000;
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        let g = csr(n, edges);
+        assert_eq!(scc_sizes(&g).len(), n);
+    }
+
+    #[test]
+    fn scc_matches_brute_force_on_random_graphs() {
+        // Brute force: reachability closure via BFS both ways.
+        let mut rng = crate::rng::Rng::new(99);
+        for trial in 0..20 {
+            let n = 2 + (trial % 8);
+            let mut edges = Vec::new();
+            for s in 0..n as u32 {
+                for t in 0..n as u32 {
+                    if rng.bernoulli(0.25) {
+                        edges.push((s, t));
+                    }
+                }
+            }
+            let g = csr(n, edges.clone());
+            let mut got = scc_sizes(&g);
+            got.sort_unstable();
+            let mut want = brute_scc_sizes(n, &edges);
+            want.sort_unstable();
+            assert_eq!(got, want, "trial {trial} n={n} edges={edges:?}");
+        }
+    }
+
+    fn brute_scc_sizes(n: usize, edges: &[(u32, u32)]) -> Vec<usize> {
+        let reach = |from: usize| -> Vec<bool> {
+            let mut seen = vec![false; n];
+            seen[from] = true;
+            let mut stack = vec![from];
+            while let Some(v) = stack.pop() {
+                for &(s, t) in edges {
+                    if s as usize == v && !seen[t as usize] {
+                        seen[t as usize] = true;
+                        stack.push(t as usize);
+                    }
+                }
+            }
+            seen
+        };
+        let fwd: Vec<Vec<bool>> = (0..n).map(reach).collect();
+        let mut assigned = vec![false; n];
+        let mut sizes = Vec::new();
+        for v in 0..n {
+            if assigned[v] {
+                continue;
+            }
+            let members: Vec<usize> =
+                (0..n).filter(|&w| fwd[v][w] && fwd[w][v] && !assigned[w]).collect();
+            for &m in &members {
+                assigned[m] = true;
+            }
+            sizes.push(members.len());
+        }
+        sizes
+    }
+
+    #[test]
+    fn wcc_ignores_direction() {
+        let g = csr(4, vec![(0, 1), (2, 1), (3, 3)]);
+        assert_eq!(largest_wcc_size(&g), 3);
+    }
+
+    #[test]
+    fn clustering_triangle() {
+        let g = csr(3, vec![(0, 1), (1, 2), (2, 0)]);
+        let c = clustering_coefficient(&g, 3, 1);
+        assert!((c - 1.0).abs() < 1e-9, "c={c}");
+    }
+
+    #[test]
+    fn clustering_star_is_zero() {
+        let g = csr(4, vec![(0, 1), (0, 2), (0, 3)]);
+        let c = clustering_coefficient(&g, 4, 1);
+        assert_eq!(c, 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Compressed sparse row adjacency for the analysis algorithms.
+
+use super::{EdgeList, NodeId};
+
+/// CSR adjacency: `offsets[i]..offsets[i+1]` indexes `targets` with the
+/// out-neighbors of node `i` (sorted, deduplicated).
+#[derive(Debug, Clone)]
+pub struct Csr {
+    offsets: Vec<usize>,
+    targets: Vec<NodeId>,
+}
+
+impl Csr {
+    /// Build from an edge list. Duplicates are removed; order of input does
+    /// not matter. O(|V| + |E| log deg) via per-row sort.
+    pub fn from_edge_list(g: &EdgeList) -> Self {
+        let n = g.num_nodes();
+        let mut counts = vec![0usize; n + 1];
+        for &(s, _) in g.edges() {
+            counts[s as usize + 1] += 1;
+        }
+        let mut offsets = counts;
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let mut targets = vec![0 as NodeId; g.num_edges()];
+        let mut cursor = offsets.clone();
+        for &(s, t) in g.edges() {
+            targets[cursor[s as usize]] = t;
+            cursor[s as usize] += 1;
+        }
+        // Sort + dedup each row, compacting in place.
+        let mut write = 0usize;
+        let mut new_offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            let (start, end) = (offsets[i], offsets[i + 1]);
+            let row = &mut targets[start..end];
+            row.sort_unstable();
+            let mut prev: Option<NodeId> = None;
+            let row_start = write;
+            for k in start..end {
+                let t = targets[k];
+                if prev != Some(t) {
+                    targets[write] = t;
+                    write += 1;
+                    prev = Some(t);
+                }
+            }
+            new_offsets[i] = row_start;
+        }
+        new_offsets[n] = write;
+        // new_offsets currently stores row starts; it is already monotone.
+        targets.truncate(write);
+        Csr { offsets: new_offsets, targets }
+    }
+
+    /// Transpose (reverse all edges).
+    pub fn transpose(&self) -> Csr {
+        let n = self.num_nodes();
+        let mut counts = vec![0usize; n + 1];
+        for &t in &self.targets {
+            counts[t as usize + 1] += 1;
+        }
+        let mut offsets = counts;
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let mut targets = vec![0 as NodeId; self.targets.len()];
+        let mut cursor = offsets.clone();
+        for s in 0..n {
+            for &t in self.neighbors(s as NodeId) {
+                targets[cursor[t as usize]] = s as NodeId;
+                cursor[t as usize] += 1;
+            }
+        }
+        // rows come out sorted because source ids ascend.
+        Csr { offsets, targets }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of stored (deduplicated) edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Out-neighbors of `v` (sorted).
+    #[inline]
+    pub fn neighbors(&self, v: NodeId) -> &[NodeId] {
+        &self.targets[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// Whether the edge (s, t) exists — binary search, O(log deg).
+    #[inline]
+    pub fn has_edge(&self, s: NodeId, t: NodeId) -> bool {
+        self.neighbors(s).binary_search(&t).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        let g = EdgeList::from_edges(4, vec![(0, 2), (0, 1), (1, 3), (0, 1), (3, 0)]);
+        Csr::from_edge_list(&g)
+    }
+
+    #[test]
+    fn rows_sorted_dedup() {
+        let c = sample();
+        assert_eq!(c.neighbors(0), &[1, 2]);
+        assert_eq!(c.neighbors(1), &[3]);
+        assert_eq!(c.neighbors(2), &[] as &[NodeId]);
+        assert_eq!(c.neighbors(3), &[0]);
+        assert_eq!(c.num_edges(), 4); // one duplicate removed
+    }
+
+    #[test]
+    fn has_edge() {
+        let c = sample();
+        assert!(c.has_edge(0, 2));
+        assert!(!c.has_edge(2, 0));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let c = sample();
+        let t = c.transpose();
+        assert_eq!(t.neighbors(1), &[0]);
+        assert_eq!(t.neighbors(0), &[3]);
+        let back = t.transpose();
+        for v in 0..4 {
+            assert_eq!(back.neighbors(v as NodeId), c.neighbors(v as NodeId));
+        }
+    }
+
+    #[test]
+    fn empty_graph() {
+        let c = Csr::from_edge_list(&EdgeList::new(3));
+        assert_eq!(c.num_nodes(), 3);
+        assert_eq!(c.num_edges(), 0);
+        assert_eq!(c.degree(1), 0);
+    }
+}

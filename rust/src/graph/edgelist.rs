@@ -1,0 +1,173 @@
+//! Directed edge-list representation produced by all samplers.
+
+use super::{Edge, NodeId};
+
+/// A directed graph as a flat edge list plus node count.
+///
+/// Samplers may emit duplicate edges transiently; [`EdgeList::dedup`]
+/// canonicalizes. Node ids must be `< num_nodes` (checked in debug builds
+/// and by `validate`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EdgeList {
+    num_nodes: usize,
+    edges: Vec<Edge>,
+}
+
+impl EdgeList {
+    /// Empty graph over `num_nodes` nodes.
+    pub fn new(num_nodes: usize) -> Self {
+        EdgeList { num_nodes, edges: Vec::new() }
+    }
+
+    /// With pre-allocated capacity for `cap` edges.
+    pub fn with_capacity(num_nodes: usize, cap: usize) -> Self {
+        EdgeList { num_nodes, edges: Vec::with_capacity(cap) }
+    }
+
+    /// Build from parts. Debug-asserts id bounds.
+    pub fn from_edges(num_nodes: usize, edges: Vec<Edge>) -> Self {
+        debug_assert!(edges
+            .iter()
+            .all(|&(s, t)| (s as usize) < num_nodes && (t as usize) < num_nodes));
+        EdgeList { num_nodes, edges }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    /// Number of (directed) edges currently stored.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Append one edge.
+    #[inline]
+    pub fn push(&mut self, src: NodeId, dst: NodeId) {
+        debug_assert!((src as usize) < self.num_nodes && (dst as usize) < self.num_nodes);
+        self.edges.push((src, dst));
+    }
+
+    /// Append many edges.
+    pub fn extend(&mut self, edges: impl IntoIterator<Item = Edge>) {
+        self.edges.extend(edges);
+    }
+
+    /// Merge another edge list over the same node set (the quilting step).
+    pub fn absorb(&mut self, other: EdgeList) {
+        assert_eq!(self.num_nodes, other.num_nodes, "quilted pieces must share the node set");
+        self.edges.extend(other.edges);
+    }
+
+    /// The edges as a slice.
+    #[inline]
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Consume into the raw edge vector.
+    pub fn into_edges(self) -> Vec<Edge> {
+        self.edges
+    }
+
+    /// Sort and remove duplicate edges. Returns the number removed.
+    pub fn dedup(&mut self) -> usize {
+        let before = self.edges.len();
+        self.edges.sort_unstable();
+        self.edges.dedup();
+        before - self.edges.len()
+    }
+
+    /// Count of self-loops.
+    pub fn num_self_loops(&self) -> usize {
+        self.edges.iter().filter(|&&(s, t)| s == t).count()
+    }
+
+    /// Out-degree of every node.
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_nodes];
+        for &(s, _) in &self.edges {
+            deg[s as usize] += 1;
+        }
+        deg
+    }
+
+    /// In-degree of every node.
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_nodes];
+        for &(_, t) in &self.edges {
+            deg[t as usize] += 1;
+        }
+        deg
+    }
+
+    /// Check all invariants (ids in bounds). Returns Err description.
+    pub fn validate(&self) -> Result<(), String> {
+        for (idx, &(s, t)) in self.edges.iter().enumerate() {
+            if s as usize >= self.num_nodes || t as usize >= self.num_nodes {
+                return Err(format!(
+                    "edge {idx} = ({s}, {t}) out of bounds for n = {}",
+                    self.num_nodes
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_count() {
+        let mut g = EdgeList::new(4);
+        g.push(0, 1);
+        g.push(1, 2);
+        g.push(3, 0);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.num_nodes(), 4);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn dedup_removes_duplicates() {
+        let mut g = EdgeList::from_edges(3, vec![(0, 1), (1, 2), (0, 1), (0, 1)]);
+        let removed = g.dedup();
+        assert_eq!(removed, 2);
+        assert_eq!(g.edges(), &[(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn absorb_merges() {
+        let mut a = EdgeList::from_edges(3, vec![(0, 1)]);
+        let b = EdgeList::from_edges(3, vec![(1, 2), (2, 0)]);
+        a.absorb(b);
+        assert_eq!(a.num_edges(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn absorb_different_node_sets_panics() {
+        let mut a = EdgeList::new(3);
+        let b = EdgeList::new(4);
+        a.absorb(b);
+    }
+
+    #[test]
+    fn degrees() {
+        let g = EdgeList::from_edges(3, vec![(0, 1), (0, 2), (1, 2), (2, 2)]);
+        assert_eq!(g.out_degrees(), vec![2, 1, 1]);
+        assert_eq!(g.in_degrees(), vec![0, 1, 3]);
+        assert_eq!(g.num_self_loops(), 1);
+    }
+
+    #[test]
+    fn validate_catches_out_of_bounds() {
+        let g = EdgeList { num_nodes: 2, edges: vec![(0, 5)] };
+        assert!(g.validate().is_err());
+    }
+}

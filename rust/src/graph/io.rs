@@ -1,0 +1,146 @@
+//! Edge-list IO: whitespace text (SNAP-compatible) and a compact binary
+//! format for large samples.
+
+use std::fs::File;
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::EdgeList;
+
+const BINARY_MAGIC: &[u8; 8] = b"MAGQEDG1";
+
+/// Write `src<TAB>dst` lines with a `# nodes=N edges=M` header.
+pub fn write_edge_list_text(g: &EdgeList, path: &Path) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "# nodes={} edges={}", g.num_nodes(), g.num_edges())?;
+    for &(s, t) in g.edges() {
+        writeln!(w, "{s}\t{t}")?;
+    }
+    w.flush()
+}
+
+/// Read the text format. Lines starting with `#` are comments; the
+/// `nodes=` header is honored if present, otherwise n = max id + 1.
+pub fn read_edge_list_text(path: &Path) -> io::Result<EdgeList> {
+    let r = BufReader::new(File::open(path)?);
+    let mut edges = Vec::new();
+    let mut n_hint: Option<usize> = None;
+    for line in r.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            for tok in rest.split_whitespace() {
+                if let Some(v) = tok.strip_prefix("nodes=") {
+                    n_hint = v.parse().ok();
+                }
+            }
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(a), Some(b)) = (it.next(), it.next()) else {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, format!("bad line: {line}")));
+        };
+        let s: u32 = a
+            .parse()
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("{e}: {line}")))?;
+        let t: u32 = b
+            .parse()
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("{e}: {line}")))?;
+        edges.push((s, t));
+    }
+    let max_id = edges.iter().map(|&(s, t)| s.max(t)).max().map(|m| m as usize + 1).unwrap_or(0);
+    let n = n_hint.unwrap_or(max_id).max(max_id);
+    Ok(EdgeList::from_edges(n, edges))
+}
+
+/// Binary format: magic, u64 n, u64 m, then m (u32, u32) pairs, LE.
+pub fn write_edge_list_binary(g: &EdgeList, path: &Path) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(BINARY_MAGIC)?;
+    w.write_all(&(g.num_nodes() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    for &(s, t) in g.edges() {
+        w.write_all(&s.to_le_bytes())?;
+        w.write_all(&t.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+/// Read the binary format.
+pub fn read_edge_list_binary(path: &Path) -> io::Result<EdgeList> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BINARY_MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    let m = u64::from_le_bytes(buf8) as usize;
+    let mut edges = Vec::with_capacity(m);
+    let mut buf4 = [0u8; 4];
+    for _ in 0..m {
+        r.read_exact(&mut buf4)?;
+        let s = u32::from_le_bytes(buf4);
+        r.read_exact(&mut buf4)?;
+        let t = u32::from_le_bytes(buf4);
+        edges.push((s, t));
+    }
+    Ok(EdgeList::from_edges(n, edges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EdgeList {
+        EdgeList::from_edges(5, vec![(0, 1), (3, 4), (2, 2)])
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        let g = sample();
+        write_edge_list_text(&g, &p).unwrap();
+        let back = read_edge_list_text(&p).unwrap();
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.bin");
+        let g = sample();
+        write_edge_list_binary(&g, &p).unwrap();
+        let back = read_edge_list_binary(&p).unwrap();
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn text_without_header_infers_n() {
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("noheader.txt");
+        std::fs::write(&p, "0 3\n1 2\n").unwrap();
+        let g = read_edge_list_text(&p).unwrap();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn text_bad_line_errors() {
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.txt");
+        std::fs::write(&p, "0 x\n").unwrap();
+        assert!(read_edge_list_text(&p).is_err());
+    }
+}

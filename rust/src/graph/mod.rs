@@ -1,0 +1,22 @@
+//! Graph substrate: edge lists, CSR, algorithms, IO.
+//!
+//! The samplers produce directed graphs as [`EdgeList`]s (node ids are
+//! `u32`, supporting the paper's largest runs of n = 2^23). Analyses
+//! (degree distributions, SCC fraction, clustering) run on the compressed
+//! [`Csr`] form.
+
+mod algorithms;
+mod csr;
+mod edgelist;
+mod io;
+
+pub use algorithms::{clustering_coefficient, largest_scc_size, largest_wcc_size, scc_sizes};
+pub use csr::Csr;
+pub use edgelist::EdgeList;
+pub use io::{read_edge_list_text, write_edge_list_binary, write_edge_list_text, read_edge_list_binary};
+
+/// Node identifier. u32 covers n up to 4.29e9, well past the paper's 2^23.
+pub type NodeId = u32;
+
+/// A directed edge (source, target).
+pub type Edge = (NodeId, NodeId);

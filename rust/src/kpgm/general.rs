@@ -1,0 +1,305 @@
+//! Generalized KPGM with K×K initiator matrices (paper §2: "one can use
+//! larger initiator matrices").
+//!
+//! The binary (2×2) model in the parent module is the paper's experimental
+//! setting and keeps a bit-twiddling hot path; this module lifts every
+//! piece to arbitrary K ≥ 2: node indices become base-K digit strings,
+//! the quadrisection of Algorithm 1 becomes a K²-section, and the MAGM
+//! attributes become categorical (see [`crate::magm`]'s general support
+//! and [`crate::quilt::GeneralQuiltSampler`]).
+
+use crate::graph::{EdgeList, NodeId};
+use crate::rng::Rng;
+
+/// A K×K initiator matrix with entries in `[0, 1]`, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenInitiator {
+    k: usize,
+    entries: Vec<f64>,
+}
+
+impl GenInitiator {
+    /// From row-major entries; length must be a perfect square.
+    pub fn new(entries: Vec<f64>) -> Self {
+        let k = (entries.len() as f64).sqrt().round() as usize;
+        assert_eq!(k * k, entries.len(), "initiator must be square");
+        assert!(k >= 2, "initiator must be at least 2x2");
+        for (i, &e) in entries.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&e), "entry {i} = {e} outside [0, 1]");
+        }
+        GenInitiator { k, entries }
+    }
+
+    /// Side length K.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Entry (a, b).
+    #[inline]
+    pub fn get(&self, a: usize, b: usize) -> f64 {
+        self.entries[a * self.k + b]
+    }
+
+    /// Sum of entries.
+    pub fn sum(&self) -> f64 {
+        self.entries.iter().sum()
+    }
+
+    /// Sum of squared entries.
+    pub fn sum_sq(&self) -> f64 {
+        self.entries.iter().map(|e| e * e).sum()
+    }
+}
+
+/// Per-level K×K initiator sequence; all levels must share K.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenThetaSeq {
+    levels: Vec<GenInitiator>,
+    k: usize,
+}
+
+impl GenThetaSeq {
+    /// Heterogeneous levels (same K everywhere).
+    pub fn new(levels: Vec<GenInitiator>) -> Self {
+        assert!(!levels.is_empty());
+        let k = levels[0].k();
+        assert!(levels.iter().all(|l| l.k() == k), "all levels must share K");
+        let d = levels.len() as u32;
+        assert!(
+            (k as f64).powi(d as i32) <= 2f64.powi(62),
+            "K^d must fit in a u64 configuration"
+        );
+        GenThetaSeq { levels, k }
+    }
+
+    /// The same matrix at every level.
+    pub fn homogeneous(theta: GenInitiator, d: u32) -> Self {
+        Self::new(vec![theta; d as usize])
+    }
+
+    /// Number of levels d.
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Side length K.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of nodes `K^d`.
+    pub fn num_nodes(&self) -> u64 {
+        (self.k as u64).pow(self.depth() as u32)
+    }
+
+    /// Level k (0 = most significant digit).
+    #[inline]
+    pub fn level(&self, k: usize) -> &GenInitiator {
+        &self.levels[k]
+    }
+
+    /// All levels.
+    #[inline]
+    pub fn levels(&self) -> &[GenInitiator] {
+        &self.levels
+    }
+
+    /// Expected edge (ball) count `Π_k Σ Θ^(k)`.
+    pub fn expected_edges(&self) -> f64 {
+        self.levels.iter().map(|l| l.sum()).product()
+    }
+
+    /// `Π_k Σ (Θ^(k))²` (variance term of the |E| draw).
+    pub fn sum_sq_product(&self) -> f64 {
+        self.levels.iter().map(|l| l.sum_sq()).product()
+    }
+
+    /// Edge probability for base-K digit strings `i`, `j` (most significant
+    /// digit = level 0).
+    pub fn edge_probability(&self, i: u64, j: u64) -> f64 {
+        let d = self.depth();
+        let k = self.k as u64;
+        let mut p = 1.0;
+        let mut div = k.pow(d as u32 - 1);
+        for level in &self.levels {
+            let a = ((i / div) % k) as usize;
+            let b = ((j / div) % k) as usize;
+            p *= level.get(a, b);
+            div /= k.max(1);
+            if div == 0 {
+                break;
+            }
+        }
+        p
+    }
+}
+
+/// Algorithm 1 generalized to K×K levels: the descent samples one of K²
+/// cells per level via precomputed cumulative u64 thresholds.
+#[derive(Debug, Clone)]
+pub struct GenBallDropSampler {
+    thetas: GenThetaSeq,
+    /// Per level: K²−1 cumulative thresholds over the u64 range.
+    thresholds: Vec<Vec<u64>>,
+}
+
+impl GenBallDropSampler {
+    /// New sampler.
+    pub fn new(thetas: GenThetaSeq) -> Self {
+        let thresholds = thetas
+            .levels()
+            .iter()
+            .map(|l| {
+                let k = l.k();
+                let total = l.sum();
+                let scale = (u64::MAX as f64) / total;
+                let mut cum = 0.0;
+                let mut t = Vec::with_capacity(k * k - 1);
+                for a in 0..k {
+                    for b in 0..k {
+                        if t.len() == k * k - 1 {
+                            break;
+                        }
+                        cum += l.get(a, b) * scale;
+                        t.push(cum as u64);
+                    }
+                }
+                t
+            })
+            .collect();
+        GenBallDropSampler { thetas, thresholds }
+    }
+
+    /// The parameter sequence.
+    pub fn thetas(&self) -> &GenThetaSeq {
+        &self.thetas
+    }
+
+    /// Draw |E| ~ N(m, m − v), clamped.
+    pub fn draw_edge_count(&self, rng: &mut Rng) -> u64 {
+        let m = self.thetas.expected_edges();
+        let v = self.thetas.sum_sq_product();
+        let x = rng.normal_with(m, (m - v).max(0.0).sqrt());
+        let n = self.thetas.num_nodes() as f64;
+        x.round().clamp(0.0, n * n) as u64
+    }
+
+    /// One descent: returns the (source, target) cell as base-K strings.
+    pub fn drop_one(&self, rng: &mut Rng) -> (u64, u64) {
+        let k = self.thetas.k() as u64;
+        let mut s = 0u64;
+        let mut t = 0u64;
+        for th in &self.thresholds {
+            let r = rng.next_u64();
+            // binary search over K²−1 thresholds (K small: linear is fine)
+            let mut idx = 0u64;
+            for &bound in th {
+                idx += (r >= bound) as u64;
+            }
+            s = s * k + idx / k;
+            t = t * k + idx % k;
+        }
+        (s, t)
+    }
+
+    /// Sample a graph (resampling duplicates like Algorithm 1).
+    pub fn sample(&self, rng: &mut Rng) -> EdgeList {
+        let n = self.thetas.num_nodes() as usize;
+        let x = self.draw_edge_count(rng);
+        let mut seen = crate::hashutil::fast_set_with_capacity(x as usize * 2);
+        let mut g = EdgeList::with_capacity(n, x as usize);
+        for _ in 0..x {
+            for _ in 0..64 {
+                let (s, t) = self.drop_one(rng);
+                if seen.insert(s.wrapping_mul(0x1_0000_0001).wrapping_add(t)) {
+                    g.push(s as NodeId, t as NodeId);
+                    break;
+                }
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn theta3() -> GenInitiator {
+        GenInitiator::new(vec![0.9, 0.4, 0.2, 0.4, 0.7, 0.3, 0.2, 0.3, 0.8])
+    }
+
+    #[test]
+    fn edge_probability_matches_kron_power() {
+        let t = theta3();
+        let seq = GenThetaSeq::homogeneous(t.clone(), 2);
+        // P = t (x) t: entry (i, j) with digits (i1 i0), (j1 j0).
+        for i in 0..9u64 {
+            for j in 0..9u64 {
+                let want = t.get((i / 3) as usize, (j / 3) as usize)
+                    * t.get((i % 3) as usize, (j % 3) as usize);
+                let got = seq.edge_probability(i, j);
+                assert!((got - want).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn reduces_to_binary_model() {
+        // K = 2 must agree with the specialized ThetaSeq path.
+        let g2 = GenInitiator::new(vec![0.15, 0.7, 0.7, 0.85]);
+        let gen = GenThetaSeq::homogeneous(g2, 5);
+        let bin = crate::kpgm::ThetaSeq::homogeneous(crate::kpgm::Initiator::THETA1, 5);
+        for i in 0..32u64 {
+            for j in 0..32u64 {
+                let a = gen.edge_probability(i, j);
+                let b = crate::kpgm::edge_probability(&bin, i as u32, j as u32);
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn drop_distribution_tracks_p() {
+        let seq = GenThetaSeq::homogeneous(theta3(), 2);
+        let sampler = GenBallDropSampler::new(seq.clone());
+        let mut rng = Rng::new(271);
+        let trials = 300_000;
+        let mut counts = vec![vec![0u32; 9]; 9];
+        for _ in 0..trials {
+            let (s, t) = sampler.drop_one(&mut rng);
+            counts[s as usize][t as usize] += 1;
+        }
+        let m = seq.expected_edges();
+        for i in 0..9u64 {
+            for j in 0..9u64 {
+                let want = seq.edge_probability(i, j) / m;
+                let got = counts[i as usize][j as usize] as f64 / trials as f64;
+                let sigma = (want * (1.0 - want) / trials as f64).sqrt();
+                assert!((got - want).abs() < 5.0 * sigma + 1e-4, "({i},{j}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn sample_rate_matches_expectation() {
+        let seq = GenThetaSeq::homogeneous(theta3(), 4); // n = 81
+        let sampler = GenBallDropSampler::new(seq.clone());
+        let mut rng = Rng::new(277);
+        let trials = 40;
+        let total: usize = (0..trials).map(|_| sampler.sample(&mut rng).num_edges()).sum();
+        let mean = total as f64 / trials as f64;
+        let want = seq.expected_edges(); // 4.2^4
+        assert!((mean - want).abs() / want < 0.1, "mean={mean} want={want}");
+    }
+
+    #[test]
+    #[should_panic(expected = "square")]
+    fn non_square_rejected() {
+        GenInitiator::new(vec![0.1, 0.2, 0.3]);
+    }
+}

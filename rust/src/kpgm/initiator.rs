@@ -1,0 +1,174 @@
+//! Initiator matrices and per-level parameter sequences.
+
+/// A 2×2 initiator matrix with entries in `[0, 1]`, row-major.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Initiator {
+    entries: [f64; 4],
+}
+
+impl Initiator {
+    /// Kim & Leskovec's Θ1 (paper eq. 13).
+    pub const THETA1: Initiator = Initiator { entries: [0.15, 0.7, 0.7, 0.85] };
+
+    /// Moreno & Neville's Θ2 (paper eq. 13).
+    pub const THETA2: Initiator = Initiator { entries: [0.35, 0.52, 0.52, 0.95] };
+
+    /// From row-major entries; panics outside `[0, 1]`.
+    pub fn new(entries: [f64; 4]) -> Self {
+        for (i, &e) in entries.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&e), "initiator entry {i} = {e} outside [0, 1]");
+        }
+        Initiator { entries }
+    }
+
+    /// Entry `(a, b)`, `a, b ∈ {0, 1}`.
+    #[inline]
+    pub fn get(&self, a: usize, b: usize) -> f64 {
+        debug_assert!(a < 2 && b < 2);
+        self.entries[2 * a + b]
+    }
+
+    /// Row-major entries `[θ00, θ01, θ10, θ11]`.
+    #[inline]
+    pub fn entries(&self) -> [f64; 4] {
+        self.entries
+    }
+
+    /// Sum of entries (the per-level factor of the expected edge count m).
+    #[inline]
+    pub fn sum(&self) -> f64 {
+        self.entries.iter().sum()
+    }
+
+    /// Sum of squared entries (the per-level factor of v in Algorithm 1).
+    #[inline]
+    pub fn sum_sq(&self) -> f64 {
+        self.entries.iter().map(|e| e * e).sum()
+    }
+
+    /// Transpose (swaps θ01/θ10) — used to reduce μ < 0.5 to μ > 0.5 (§4.1).
+    pub fn transpose(&self) -> Initiator {
+        Initiator { entries: [self.entries[0], self.entries[2], self.entries[1], self.entries[3]] }
+    }
+
+    /// Quadrisection weights in the categorical order (00, 01, 10, 11).
+    #[inline]
+    pub fn weights(&self) -> [f64; 4] {
+        self.entries
+    }
+}
+
+/// Per-level initiator sequence `Θ̃ = {Θ^(1), …, Θ^(d)}` (paper eq. 4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThetaSeq {
+    levels: Vec<Initiator>,
+}
+
+impl ThetaSeq {
+    /// Heterogeneous levels.
+    pub fn new(levels: Vec<Initiator>) -> Self {
+        assert!(!levels.is_empty(), "need at least one level");
+        assert!(levels.len() <= 63, "depth > 63 would overflow node ids");
+        ThetaSeq { levels }
+    }
+
+    /// The same matrix at every level (the paper's experimental setup).
+    pub fn homogeneous(theta: Initiator, d: u32) -> Self {
+        Self::new(vec![theta; d as usize])
+    }
+
+    /// Number of levels d.
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Number of KPGM nodes, `2^d`.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        1usize << self.levels.len()
+    }
+
+    /// Level `k` (0-based, 0 = most significant bit).
+    #[inline]
+    pub fn level(&self, k: usize) -> &Initiator {
+        &self.levels[k]
+    }
+
+    /// All levels.
+    #[inline]
+    pub fn levels(&self) -> &[Initiator] {
+        &self.levels
+    }
+
+    /// Expected number of edges `m = Π_k sum(Θ^(k))` (Algorithm 1 line 3).
+    pub fn expected_edges(&self) -> f64 {
+        self.levels.iter().map(|t| t.sum()).product()
+    }
+
+    /// `v = Π_k sum(Θ^(k)²)` (Algorithm 1 line 4); the |E| draw uses
+    /// variance `m − v`.
+    pub fn sum_sq_product(&self) -> f64 {
+        self.levels.iter().map(|t| t.sum_sq()).product()
+    }
+
+    /// Stack as `[d, 2, 2]` f32 row-major — the runtime's theta layout.
+    pub fn to_f32_stack(&self) -> Vec<f32> {
+        self.levels
+            .iter()
+            .flat_map(|t| t.entries().into_iter().map(|e| e as f32))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_is_row_major() {
+        let t = Initiator::new([0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(t.get(0, 0), 0.1);
+        assert_eq!(t.get(0, 1), 0.2);
+        assert_eq!(t.get(1, 0), 0.3);
+        assert_eq!(t.get(1, 1), 0.4);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside [0, 1]")]
+    fn rejects_out_of_range() {
+        Initiator::new([0.0, 0.5, 1.1, 0.2]);
+    }
+
+    #[test]
+    fn sums() {
+        let t = Initiator::new([0.1, 0.2, 0.3, 0.4]);
+        assert!((t.sum() - 1.0).abs() < 1e-12);
+        assert!((t.sum_sq() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transpose_swaps_off_diagonal() {
+        let t = Initiator::new([0.1, 0.2, 0.3, 0.4]).transpose();
+        assert_eq!(t.get(0, 1), 0.3);
+        assert_eq!(t.get(1, 0), 0.2);
+    }
+
+    #[test]
+    fn expected_edges_theta1() {
+        // sum(Θ1) = 2.4; d = 3 -> m = 2.4^3
+        let seq = ThetaSeq::homogeneous(Initiator::THETA1, 3);
+        assert!((seq.expected_edges() - 2.4f64.powi(3)).abs() < 1e-9);
+        assert_eq!(seq.num_nodes(), 8);
+        assert_eq!(seq.depth(), 3);
+    }
+
+    #[test]
+    fn f32_stack_layout() {
+        let seq = ThetaSeq::new(vec![Initiator::THETA1, Initiator::THETA2]);
+        let s = seq.to_f32_stack();
+        assert_eq!(s.len(), 8);
+        assert_eq!(s[0], 0.15f32);
+        assert_eq!(s[4], 0.35f32);
+    }
+}

@@ -1,0 +1,88 @@
+//! Stochastic Kronecker Product Graph Model (Leskovec et al. 2010).
+//!
+//! `P = Θ^(1) ⊗ Θ^(2) ⊗ … ⊗ Θ^(d)` (paper eq. 3); equivalently
+//! `P_ij = Π_k θ^(k)[b_k(i), b_k(j)]` where `b_k(i)` is the k-th most
+//! significant bit of `i` (paper eq. 6).
+//!
+//! Two samplers:
+//! * [`naive_sample`] — `O(n² d)` per-entry Bernoulli (the baseline),
+//! * [`BallDropSampler`] — paper **Algorithm 1**: draw `|E| ~ N(m, m−v)`,
+//!   then place each edge by a d-level quadrisection descent. Expected
+//!   `O(log2(n)·|E|)`.
+
+pub mod general;
+mod initiator;
+mod sampler;
+
+pub use initiator::{Initiator, ThetaSeq};
+pub use sampler::{naive_sample, BallDropSampler, DuplicatePolicy};
+
+use crate::graph::NodeId;
+
+/// Edge probability `P_ij` for node ids under the Kronecker bit convention
+/// (level k consumes the k-th most significant of the `d` bits).
+pub fn edge_probability(thetas: &ThetaSeq, i: NodeId, j: NodeId) -> f64 {
+    let d = thetas.depth();
+    let mut p = 1.0;
+    for k in 0..d {
+        let shift = (d - 1 - k) as u32;
+        let a = ((i >> shift) & 1) as usize;
+        let b = ((j >> shift) & 1) as usize;
+        p *= thetas.level(k).get(a, b);
+    }
+    p
+}
+
+/// Materialize the full `2^d × 2^d` probability matrix (tests/Fig. 1 only).
+pub fn probability_matrix(thetas: &ThetaSeq) -> Vec<Vec<f64>> {
+    let n = thetas.num_nodes();
+    (0..n)
+        .map(|i| (0..n).map(|j| edge_probability(thetas, i as NodeId, j as NodeId)).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_probability_matches_kronecker_product() {
+        // d = 2: P = theta ⊗ theta, checked entry by entry.
+        let t = Initiator::THETA1;
+        let thetas = ThetaSeq::homogeneous(t, 2);
+        let n = 4;
+        for i in 0..n {
+            for j in 0..n {
+                let want = t.get(i / 2, j / 2) * t.get(i % 2, j % 2);
+                let got = edge_probability(&thetas, i as NodeId, j as NodeId);
+                assert!((got - want).abs() < 1e-12, "({i},{j}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_levels_order() {
+        // P = A ⊗ B: level 0 (MSB) must use A.
+        let a = Initiator::new([0.1, 0.2, 0.3, 0.4]);
+        let b = Initiator::new([0.9, 0.8, 0.7, 0.6]);
+        let thetas = ThetaSeq::new(vec![a, b]);
+        // entry (2, 1): MSB bits (1, 0) -> A[1,0] = 0.3; LSB bits (0, 1) -> B[0,1] = 0.8
+        let got = edge_probability(&thetas, 2, 1);
+        assert!((got - 0.3 * 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn probability_matrix_fractal_structure() {
+        // Top-left quadrant equals theta00 * P_{d-1}.
+        let thetas = ThetaSeq::homogeneous(Initiator::THETA2, 3);
+        let sub = ThetaSeq::homogeneous(Initiator::THETA2, 2);
+        let p = probability_matrix(&thetas);
+        let q = probability_matrix(&sub);
+        let t00 = Initiator::THETA2.get(0, 0);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((p[i][j] - t00 * q[i][j]).abs() < 1e-12);
+            }
+        }
+    }
+}

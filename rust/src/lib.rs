@@ -1,0 +1,57 @@
+//! # magquilt
+//!
+//! Production reproduction of **"Quilting Stochastic Kronecker Product
+//! Graphs to Generate Multiplicative Attribute Graphs"** (Yun &
+//! Vishwanathan, AISTATS 2012).
+//!
+//! The library implements, from scratch:
+//!
+//! * the Kronecker Product Graph Model (KPGM) with the `O(log2(n)·|E|)`
+//!   ball-dropping sampler (paper Algorithm 1) — [`kpgm`],
+//! * the Multiplicative Attribute Graph Model (MAGM) with its naive
+//!   `O(n²)` baseline samplers — [`magm`],
+//! * the paper's contribution: the **quilting sampler** (Algorithm 2) and
+//!   the §5 hybrid speedup — [`quilt`],
+//! * a job coordinator that plans the `B² + R² + …` quilt pieces, routes
+//!   them across a worker pool with bounded queues and merges the edge
+//!   streams — [`coordinator`],
+//! * a PJRT runtime that loads the AOT-compiled JAX/Pallas edge-probability
+//!   kernels (`artifacts/*.hlo.txt`) and runs them from Rust — [`runtime`],
+//! * graph/RNG/statistics substrates and the experiment harnesses that
+//!   regenerate every figure of the paper's evaluation — [`graph`],
+//!   [`rng`], [`stats`], [`experiments`].
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use magquilt::magm::MagmParams;
+//! use magquilt::quilt::QuiltSampler;
+//! use magquilt::kpgm::Initiator;
+//!
+//! // Kim & Leskovec's theta, mu = 0.5, n = 2^14 nodes, d = 14 attributes.
+//! let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 1 << 14, 14);
+//! let graph = QuiltSampler::new(params).seed(42).sample();
+//! println!("sampled {} edges", graph.num_edges());
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod fit;
+pub mod graph;
+pub mod hashutil;
+pub mod kpgm;
+pub mod magm;
+pub mod metrics;
+pub mod proptest;
+pub mod quilt;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

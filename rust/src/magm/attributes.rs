@@ -1,0 +1,163 @@
+//! Attribute matrices and configurations.
+
+use crate::graph::NodeId;
+use crate::rng::Rng;
+
+use super::MagmParams;
+
+/// An attribute configuration λ: the d attribute bits of a node packed into
+/// a u64, most significant bit = attribute 1 (matching the KPGM bit
+/// convention so `Q_ij = P_{λ_i λ_j}` holds literally).
+pub type Config = u64;
+
+/// The sampled attribute assignment `F = (f(1), …, f(n))`, stored as packed
+/// configurations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AttributeAssignment {
+    configs: Vec<Config>,
+    depth: u32,
+}
+
+impl AttributeAssignment {
+    /// Sample `F` from the model: `f_k(i) ~ Bernoulli(μ_k)` independently.
+    pub fn sample(params: &MagmParams, rng: &mut Rng) -> Self {
+        let d = params.depth() as u32;
+        let mus = params.mus();
+        let configs = (0..params.num_nodes())
+            .map(|_| {
+                let mut c: Config = 0;
+                for &mu in mus {
+                    c = (c << 1) | rng.bernoulli(mu) as u64;
+                }
+                c
+            })
+            .collect();
+        AttributeAssignment { configs, depth: d }
+    }
+
+    /// Wrap pre-drawn configurations (tests / deterministic experiments).
+    pub fn from_configs(configs: Vec<Config>, depth: u32) -> Self {
+        assert!(depth <= 63);
+        debug_assert!(configs.iter().all(|&c| c < (1u64 << depth)));
+        AttributeAssignment { configs, depth }
+    }
+
+    /// Configuration λ_i.
+    #[inline]
+    pub fn config(&self, node: NodeId) -> Config {
+        self.configs[node as usize]
+    }
+
+    /// All configurations, indexed by node.
+    #[inline]
+    pub fn configs(&self) -> &[Config] {
+        &self.configs
+    }
+
+    /// Attribute bit `f_k(i)` (k is 0-based level, 0 = most significant).
+    #[inline]
+    pub fn bit(&self, node: NodeId, k: u32) -> u8 {
+        debug_assert!(k < self.depth);
+        ((self.configs[node as usize] >> (self.depth - 1 - k)) & 1) as u8
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.configs.len()
+    }
+
+    /// Number of attribute levels d.
+    #[inline]
+    pub fn depth(&self) -> u32 {
+        self.depth
+    }
+
+    /// Histogram of configuration frequencies: sorted `(config, count)`
+    /// pairs. Powers Fig. 7 and the §5 hybrid split.
+    pub fn config_counts(&self) -> Vec<(Config, u32)> {
+        let mut sorted = self.configs.clone();
+        sorted.sort_unstable();
+        let mut out: Vec<(Config, u32)> = Vec::new();
+        for &c in &sorted {
+            match out.last_mut() {
+                Some((prev, count)) if *prev == c => *count += 1,
+                _ => out.push((c, 1)),
+            }
+        }
+        out
+    }
+
+    /// Expand node `i`'s bits into an f32 row (for the XLA runtime path).
+    pub fn bits_f32_row(&self, node: NodeId, out: &mut [f32]) {
+        let d = self.depth as usize;
+        assert!(out.len() >= d);
+        for k in 0..d {
+            out[k] = self.bit(node, k as u32) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kpgm::Initiator;
+
+    #[test]
+    fn bit_extraction_msb_first() {
+        let a = AttributeAssignment::from_configs(vec![0b101], 3);
+        assert_eq!(a.bit(0, 0), 1);
+        assert_eq!(a.bit(0, 1), 0);
+        assert_eq!(a.bit(0, 2), 1);
+    }
+
+    #[test]
+    fn sample_respects_mu() {
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.8, 20_000, 4);
+        let mut rng = Rng::new(107);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        // Fraction of 1-bits at each level ≈ 0.8.
+        for k in 0..4 {
+            let ones: u64 =
+                (0..attrs.num_nodes()).map(|i| attrs.bit(i as NodeId, k) as u64).sum();
+            let frac = ones as f64 / attrs.num_nodes() as f64;
+            assert!((frac - 0.8).abs() < 0.02, "level {k}: {frac}");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_mus() {
+        let params = MagmParams::new(
+            crate::kpgm::ThetaSeq::homogeneous(Initiator::THETA1, 2),
+            vec![1.0, 0.0],
+            1000,
+        );
+        let mut rng = Rng::new(109);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        for i in 0..1000u32 {
+            assert_eq!(attrs.config(i), 0b10);
+        }
+    }
+
+    #[test]
+    fn config_counts_sum_to_n() {
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 4096, 6);
+        let mut rng = Rng::new(113);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        let counts = attrs.config_counts();
+        let total: u64 = counts.iter().map(|&(_, c)| c as u64).sum();
+        assert_eq!(total, 4096);
+        // sorted and unique configs
+        for w in counts.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn bits_f32_row_roundtrip() {
+        let a = AttributeAssignment::from_configs(vec![0b0110], 4);
+        let mut row = [0f32; 4];
+        a.bits_f32_row(0, &mut row);
+        assert_eq!(row, [0.0, 1.0, 1.0, 0.0]);
+    }
+}

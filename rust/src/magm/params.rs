@@ -1,0 +1,127 @@
+//! MAGM parameter bundle: `(Θ̃, μ̃, n)`.
+
+use crate::kpgm::{Initiator, ThetaSeq};
+
+/// Parameters of a Multiplicative Attribute Graph Model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MagmParams {
+    thetas: ThetaSeq,
+    mus: Vec<f64>,
+    num_nodes: usize,
+}
+
+impl MagmParams {
+    /// Fully heterogeneous parameters. `thetas.depth()` defines d and must
+    /// equal `mus.len()`.
+    pub fn new(thetas: ThetaSeq, mus: Vec<f64>, num_nodes: usize) -> Self {
+        assert_eq!(thetas.depth(), mus.len(), "need one mu per attribute level");
+        assert!(num_nodes > 0);
+        for (k, &mu) in mus.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&mu), "mu[{k}] = {mu} outside [0, 1]");
+        }
+        MagmParams { thetas, mus, num_nodes }
+    }
+
+    /// The paper's experimental setup: one `theta` and one `mu` at every of
+    /// the `d` levels, `num_nodes` nodes.
+    pub fn homogeneous(theta: Initiator, mu: f64, num_nodes: usize, d: u32) -> Self {
+        Self::new(ThetaSeq::homogeneous(theta, d), vec![mu; d as usize], num_nodes)
+    }
+
+    /// Per-level initiator matrices.
+    #[inline]
+    pub fn thetas(&self) -> &ThetaSeq {
+        &self.thetas
+    }
+
+    /// Per-level attribute probabilities μ̃.
+    #[inline]
+    pub fn mus(&self) -> &[f64] {
+        &self.mus
+    }
+
+    /// Number of nodes n.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    /// Number of attributes d.
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.thetas.depth()
+    }
+
+    /// Number of possible attribute configurations, `2^d`.
+    #[inline]
+    pub fn num_configs(&self) -> u64 {
+        1u64 << self.depth()
+    }
+
+    /// Probability that a node receives configuration `c`:
+    /// `Π_k μ_k^{b_k(c)} (1 − μ_k)^{1 − b_k(c)}`.
+    pub fn config_probability(&self, c: u64) -> f64 {
+        let d = self.depth();
+        let mut p = 1.0;
+        for k in 0..d {
+            let bit = (c >> (d - 1 - k)) & 1;
+            p *= if bit == 1 { self.mus[k] } else { 1.0 - self.mus[k] };
+        }
+        p
+    }
+
+    /// Expected number of edges `E|E| = Σ_{c,c'} n_c n_{c'} P_{c c'}` is
+    /// quadratic in the number of distinct configs; this returns the exact
+    /// expectation over attribute draws instead:
+    /// `E|E| = Π_k (μ_k² θ11 + μ_k(1−μ_k)(θ01 + θ10) + (1−μ_k)² θ00) · n²`.
+    pub fn expected_edges(&self) -> f64 {
+        let mut per_pair = 1.0;
+        for (k, level) in self.thetas.levels().iter().enumerate() {
+            let mu = self.mus[k];
+            per_pair *= mu * mu * level.get(1, 1)
+                + mu * (1.0 - mu) * (level.get(0, 1) + level.get(1, 0))
+                + (1.0 - mu) * (1.0 - mu) * level.get(0, 0);
+        }
+        per_pair * (self.num_nodes as f64) * (self.num_nodes as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_probability_balanced() {
+        let p = MagmParams::homogeneous(Initiator::THETA1, 0.5, 16, 4);
+        for c in 0..16 {
+            assert!((p.config_probability(c) - 1.0 / 16.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn config_probability_unbalanced() {
+        let p = MagmParams::homogeneous(Initiator::THETA1, 0.9, 4, 2);
+        // c = 3 = 0b11 -> 0.81, c = 0 -> 0.01, c = 1 = 0b01 -> 0.09
+        assert!((p.config_probability(3) - 0.81).abs() < 1e-12);
+        assert!((p.config_probability(0) - 0.01).abs() < 1e-12);
+        assert!((p.config_probability(1) - 0.09).abs() < 1e-12);
+        // probabilities sum to 1
+        let total: f64 = (0..4).map(|c| p.config_probability(c)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_edges_balanced_mu() {
+        // mu = 0.5: per-pair prob = (mean of theta)^d.
+        let p = MagmParams::homogeneous(Initiator::THETA1, 0.5, 8, 3);
+        let mean_theta: f64 = (0.15 + 0.7 + 0.7 + 0.85) / 4.0; // 0.6
+        let want = mean_theta.powi(3) * 64.0;
+        assert!((p.expected_edges() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "one mu per attribute level")]
+    fn mismatched_mu_length_panics() {
+        MagmParams::new(ThetaSeq::homogeneous(Initiator::THETA1, 3), vec![0.5; 2], 8);
+    }
+}

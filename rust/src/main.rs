@@ -1,0 +1,9 @@
+//! magquilt binary: CLI front-end over the library.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = magquilt::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,149 @@
+//! Lightweight metrics: wall-clock timers, counters, and throughput
+//! reporting used by the coordinator and the benchmark harnesses.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A monotonically increasing counter, safe to bump from worker threads.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// New counter at zero.
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Scoped wall-clock timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start now.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed duration.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed milliseconds as f64.
+    pub fn ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// A registry of named durations and counters for end-of-run reports.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    durations: Mutex<BTreeMap<String, Duration>>,
+    counters: Mutex<BTreeMap<String, u64>>,
+}
+
+impl MetricsRegistry {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate a duration under `name`.
+    pub fn record_duration(&self, name: &str, d: Duration) {
+        let mut m = self.durations.lock().unwrap();
+        *m.entry(name.to_string()).or_default() += d;
+    }
+
+    /// Accumulate a count under `name`.
+    pub fn record_count(&self, name: &str, n: u64) {
+        let mut m = self.counters.lock().unwrap();
+        *m.entry(name.to_string()).or_default() += n;
+    }
+
+    /// Fetch a recorded duration.
+    pub fn duration(&self, name: &str) -> Option<Duration> {
+        self.durations.lock().unwrap().get(name).copied()
+    }
+
+    /// Fetch a recorded count.
+    pub fn count(&self, name: &str) -> Option<u64> {
+        self.counters.lock().unwrap().get(name).copied()
+    }
+
+    /// Render a sorted human-readable report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in self.durations.lock().unwrap().iter() {
+            s.push_str(&format!("{k:<32} {:>12.3} ms\n", v.as_secs_f64() * 1e3));
+        }
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            s.push_str(&format!("{k:<32} {v:>12}\n"));
+        }
+        s
+    }
+}
+
+/// Run `f` `reps` times and return the median wall-clock duration — the
+/// primitive behind the bench harness (criterion is not in the vendored
+/// crate set).
+pub fn median_time<F: FnMut()>(reps: usize, mut f: F) -> Duration {
+    assert!(reps > 0);
+    let mut times: Vec<Duration> = (0..reps)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed()
+        })
+        .collect();
+    times.sort_unstable();
+    times[times.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let r = MetricsRegistry::new();
+        r.record_count("edges", 10);
+        r.record_count("edges", 5);
+        r.record_duration("sample", Duration::from_millis(2));
+        assert_eq!(r.count("edges"), Some(15));
+        assert!(r.duration("sample").unwrap() >= Duration::from_millis(2));
+        assert!(r.report().contains("edges"));
+    }
+
+    #[test]
+    fn median_time_runs() {
+        let mut n = 0u64;
+        let d = median_time(5, || n += 1);
+        assert_eq!(n, 5);
+        assert!(d < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal property-testing framework.
+//!
+//! The vendored crate set has no `proptest`/`quickcheck`, so this module
+//! provides the 10% we need: seeded random case generation, a configurable
+//! number of cases, greedy input shrinking for integer tuples, and failure
+//! messages that print the offending case and the seed to replay it.
+//!
+//! ```no_run
+//! use magquilt::proptest::{Config, forall};
+//!
+//! forall(Config::cases(256), |rng| {
+//!     let n = 1 + rng.below(1000);
+//!     let a = rng.below(n);
+//!     (a < n).then_some(()).ok_or_else(|| format!("a={a} n={n}"))
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Property-run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case i uses `fork(i)` of it.
+    pub seed: u64,
+}
+
+impl Config {
+    /// `cases` random cases with the default seed.
+    pub fn cases(cases: usize) -> Self {
+        Config { cases, seed: 0x5eed_cafe }
+    }
+
+    /// Override the seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Run `prop` for each case with an independent RNG. The property returns
+/// `Ok(())` or a failure description. Panics (test-failing) on the first
+/// failing case with its replay seed.
+pub fn forall<F>(config: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = Rng::new(config.seed);
+    for case in 0..config.cases {
+        let mut rng = base.fork(case as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{} (replay: seed={:#x}, fork={case}): {msg}",
+                config.cases, config.seed
+            );
+        }
+    }
+}
+
+/// Run a property over a shrinkable `u64` drawn from `[lo, hi]`: on failure
+/// greedily shrink toward `lo` to report a minimal failing value.
+pub fn forall_u64<F>(config: Config, lo: u64, hi: u64, mut prop: F)
+where
+    F: FnMut(u64, &mut Rng) -> Result<(), String>,
+{
+    assert!(lo <= hi);
+    let base = Rng::new(config.seed);
+    for case in 0..config.cases {
+        let mut rng = base.fork(case as u64);
+        let x = lo + rng.below(hi - lo + 1);
+        let mut check_rng = base.fork(case as u64 ^ 0xdead_beef);
+        if prop(x, &mut check_rng).is_err() {
+            // Shrink: bisect toward lo while still failing.
+            let mut bad = x;
+            let mut floor = lo;
+            while floor < bad {
+                let mid = floor + (bad - floor) / 2;
+                let mut rng2 = base.fork(case as u64 ^ 0xdead_beef);
+                if prop(mid, &mut rng2).is_err() {
+                    bad = mid;
+                } else {
+                    floor = mid + 1;
+                }
+            }
+            let mut rng3 = base.fork(case as u64 ^ 0xdead_beef);
+            let msg = prop(bad, &mut rng3).unwrap_err();
+            panic!(
+                "property failed; minimal x={bad} (case {case}, seed={:#x}): {msg}",
+                config.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(Config::cases(64), |rng| {
+            let a = rng.below(100);
+            if a < 100 { Ok(()) } else { Err(format!("a={a}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        forall(Config::cases(64), |rng| {
+            let a = rng.below(100);
+            if a < 50 { Ok(()) } else { Err(format!("a={a}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal x=70")]
+    fn shrinking_finds_boundary() {
+        forall_u64(Config::cases(200), 0, 1000, |x, _| {
+            if x < 70 { Ok(()) } else { Err(format!("x={x}")) }
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! Uniform (Erdős–Rényi) block sampling by geometric skipping.
+//!
+//! The §5 footnote's trick: instead of `k` i.i.d. Bernoulli(p) trials over
+//! the cells of a block, draw geometric gaps and jump straight to the next
+//! success. Cost is `O(1 + p · cells)` instead of `O(cells)`.
+
+use crate::graph::{EdgeList, NodeId};
+use crate::rng::Rng;
+
+/// Sample a uniform block: every (row, col) pair becomes an edge
+/// independently with probability `p`. Rows and cols are node-id slices
+/// (the block is the sub-matrix `rows × cols` of the adjacency matrix).
+pub fn sample_er_block(
+    rows: &[NodeId],
+    cols: &[NodeId],
+    p: f64,
+    rng: &mut Rng,
+    out: &mut EdgeList,
+) {
+    if rows.is_empty() || cols.is_empty() || p <= 0.0 {
+        return;
+    }
+    let cells = rows.len() as u64 * cols.len() as u64;
+    if p >= 1.0 {
+        for &r in rows {
+            for &c in cols {
+                out.push(r, c);
+            }
+        }
+        return;
+    }
+    let ncols = cols.len() as u64;
+    // Position of the next success in the linearized cell order.
+    let mut pos = rng.geometric(p);
+    while pos < cells {
+        let r = rows[(pos / ncols) as usize];
+        let c = cols[(pos % ncols) as usize];
+        out.push(r, c);
+        let gap = rng.geometric(p);
+        // Guard overflow when p is tiny and the geometric jump is huge.
+        pos = match pos.checked_add(1 + gap) {
+            Some(next) => next,
+            None => break,
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{forall, Config as PropConfig};
+
+    #[test]
+    fn zero_probability_empty() {
+        let mut out = EdgeList::new(10);
+        let mut rng = Rng::new(1);
+        sample_er_block(&[0, 1, 2], &[3, 4], 0.0, &mut rng, &mut out);
+        assert_eq!(out.num_edges(), 0);
+    }
+
+    #[test]
+    fn one_probability_full() {
+        let mut out = EdgeList::new(10);
+        let mut rng = Rng::new(1);
+        sample_er_block(&[0, 1], &[2, 3, 4], 1.0, &mut rng, &mut out);
+        assert_eq!(out.num_edges(), 6);
+        let mut dedup = out.clone();
+        assert_eq!(dedup.dedup(), 0);
+    }
+
+    #[test]
+    fn density_matches_p() {
+        let rows: Vec<NodeId> = (0..50).collect();
+        let cols: Vec<NodeId> = (50..150).collect();
+        let p = 0.07;
+        let mut rng = Rng::new(229);
+        let trials = 400;
+        let mut total = 0usize;
+        for _ in 0..trials {
+            let mut out = EdgeList::new(150);
+            sample_er_block(&rows, &cols, p, &mut rng, &mut out);
+            total += out.num_edges();
+        }
+        let mean = total as f64 / trials as f64;
+        let want = 50.0 * 100.0 * p; // 350
+        let sigma = (50.0 * 100.0 * p * (1.0 - p) / trials as f64).sqrt();
+        assert!((mean - want).abs() < 5.0 * sigma, "mean={mean} want={want}");
+    }
+
+    #[test]
+    fn per_cell_rate_uniform() {
+        // Each individual cell must fire at rate p (no positional bias).
+        let rows: Vec<NodeId> = vec![0, 1, 2];
+        let cols: Vec<NodeId> = vec![3, 4];
+        let p = 0.3;
+        let mut rng = Rng::new(233);
+        let trials = 30_000;
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..trials {
+            let mut out = EdgeList::new(5);
+            sample_er_block(&rows, &cols, p, &mut rng, &mut out);
+            for &e in out.edges() {
+                *counts.entry(e).or_insert(0u32) += 1;
+            }
+        }
+        for &r in &rows {
+            for &c in &cols {
+                let got = *counts.get(&(r, c)).unwrap_or(&0) as f64 / trials as f64;
+                let sigma = (p * (1.0 - p) / trials as f64).sqrt();
+                assert!((got - p).abs() < 5.0 * sigma, "cell ({r},{c}): {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_no_duplicates_and_in_block() {
+        forall(PropConfig::cases(100), |rng| {
+            let nr = 1 + rng.below(20) as usize;
+            let nc = 1 + rng.below(20) as usize;
+            let p = rng.uniform();
+            let rows: Vec<NodeId> = (0..nr as u32).collect();
+            let cols: Vec<NodeId> = (100..(100 + nc as u32)).collect();
+            let mut out = EdgeList::new(200);
+            sample_er_block(&rows, &cols, p, rng, &mut out);
+            let mut seen = std::collections::HashSet::new();
+            for &(r, c) in out.edges() {
+                if !(r < nr as u32 && (100..100 + nc as u32).contains(&c)) {
+                    return Err(format!("edge ({r},{c}) outside block"));
+                }
+                if !seen.insert((r, c)) {
+                    return Err(format!("duplicate edge ({r},{c})"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

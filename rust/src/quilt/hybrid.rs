@@ -1,0 +1,369 @@
+//! §5 hybrid speedup for unbalanced attribute distributions.
+//!
+//! When `μ` drifts from 0.5 a few attribute configurations occur very
+//! often (Fig. 7), blowing up the partition size B and hence the `B²`
+//! piece count of plain Algorithm 2. The fix:
+//!
+//! * configurations occurring **more than `B'` times** form groups
+//!   `D̂_1 … D̂_R`; every block of Q between two groups (including a group
+//!   with itself, and between a group and any other node) is *uniform*,
+//!   because Q_ij depends only on the endpoint configurations — so those
+//!   blocks are Erdős–Rényi and sampled by geometric skipping,
+//! * the remaining nodes `W` (every configuration ≤ B' occurrences) go
+//!   through Algorithm 2, whose partition size is now ≤ B'.
+//!
+//! `B'` is chosen by minimizing the paper's cost model
+//! `T(B') = B'² log2(n) |E| + (|W| + d) R + d R²` over the O(n) distinct
+//! candidate values.
+
+use crate::graph::{EdgeList, NodeId};
+use crate::kpgm::{self, BallDropSampler};
+use crate::magm::{AttributeAssignment, Config, MagmParams};
+use crate::rng::Rng;
+
+use super::{sample_er_block, sampler::sample_piece, Partition, QuiltSampler};
+
+/// The hybrid split for one attribute assignment.
+#[derive(Debug, Clone)]
+pub struct HybridPlan {
+    /// The chosen threshold.
+    pub b_prime: u32,
+    /// Light configurations (≤ B' occurrences): `(config, nodes)`.
+    pub light: Vec<(Config, Vec<NodeId>)>,
+    /// Heavy configurations (> B' occurrences): `(config, nodes)` — the
+    /// groups `D̂_1 … D̂_R`.
+    pub heavy: Vec<(Config, Vec<NodeId>)>,
+    /// The cost model value T(B') at the chosen threshold.
+    pub predicted_cost: f64,
+}
+
+impl HybridPlan {
+    /// All nodes in light configurations (the W set), in id order.
+    pub fn w_nodes(&self) -> Vec<NodeId> {
+        let mut w: Vec<NodeId> =
+            self.light.iter().flat_map(|(_, nodes)| nodes.iter().copied()).collect();
+        w.sort_unstable();
+        w
+    }
+
+    /// R, the number of heavy groups.
+    pub fn num_heavy(&self) -> usize {
+        self.heavy.len()
+    }
+}
+
+/// The paper's abstract cost model `T(B')` (§5), kept for reference and
+/// ablations; the planner minimizes [`cost_model_wall`] instead.
+pub fn cost_model_paper(
+    b_prime: f64,
+    w_size: f64,
+    r: f64,
+    log2n: f64,
+    d: f64,
+    e_edges: f64,
+) -> f64 {
+    b_prime * b_prime * log2n * e_edges + (w_size + d) * r + d * r * r
+}
+
+/// Calibrated wall-time estimate (seconds) of one hybrid split.
+///
+/// The paper's `T(B')` adds ball-drop counts and block counts as if each
+/// unit cost the same; on this implementation a ball drop costs
+/// `d · ~2.2 ns + ~10 ns` while spawning one ER block costs ~200 ns (RNG
+/// fork + setup), so the abstract model over-penalizes quilting and picks
+/// a too-small `B'` at balanced μ (measured 2.3× slowdown at n = 2^16,
+/// see EXPERIMENTS.md §Perf). Same three terms, measured constants:
+///
+/// * quilting: `B'²` pieces × `balls` drops each,
+/// * light×heavy strips: `2 · C_light · R` blocks,
+/// * heavy×heavy: `R²` blocks.
+fn cost_model_wall(b_prime: f64, c_light: f64, r: f64, d: f64, balls: f64) -> f64 {
+    const DROP_SEC_PER_LEVEL: f64 = 2.2e-9;
+    const DROP_SEC_BASE: f64 = 1.0e-8;
+    const BLOCK_SEC: f64 = 2.0e-7;
+    let c_ball = d * DROP_SEC_PER_LEVEL + DROP_SEC_BASE;
+    b_prime * b_prime * balls * c_ball + (2.0 * c_light * r + r * r) * BLOCK_SEC
+}
+
+/// Choose `B'` minimizing the calibrated cost over the distinct
+/// multiplicity values (plus the degenerate all-heavy candidate B' = 0).
+///
+/// `expected_edges` should be the **KPGM ball count** `Π_k Σθ^(k)` rather
+/// than the MAGM edge count: the quilting term pays one Algorithm-1 sample
+/// per piece over the full `2^d × 2^d` space, so for `d > log2 n` the ball
+/// count (which grows as `(Σθ)^d`) is what actually blows up — the paper's
+/// §4.2 `Ω(4^{d-d''})` observation. With `d = log2 n` the two coincide in
+/// expectation, so this refinement is conservative, not a deviation.
+pub fn choose_b_prime(
+    counts: &[(Config, u32)],
+    _num_nodes: usize,
+    depth: usize,
+    expected_edges: f64,
+) -> (u32, f64) {
+    let d = depth as f64;
+    // Sort multiplicities ascending; prefix counts give C_light/R cheaply.
+    let mut mults: Vec<u32> = counts.iter().map(|&(_, m)| m).collect();
+    mults.sort_unstable();
+    let total_configs = mults.len();
+
+    let mut candidates: Vec<u32> = mults.clone();
+    candidates.dedup();
+    candidates.push(0); // everything heavy
+
+    let mut best = (u32::MAX, f64::INFINITY);
+    for &bp in &candidates {
+        // C_light = #configs with mult <= bp; R = #configs with mult > bp.
+        let split = mults.partition_point(|&m| m <= bp);
+        let c_light = split as f64;
+        let r = (total_configs - split) as f64;
+        let t = cost_model_wall(bp as f64, c_light, r, d, expected_edges);
+        if t < best.1 {
+            best = (bp, t);
+        }
+    }
+    best
+}
+
+/// The §5 hybrid sampler.
+#[derive(Debug, Clone)]
+pub struct HybridSampler {
+    params: MagmParams,
+    seed: u64,
+    b_prime_override: Option<u32>,
+}
+
+impl HybridSampler {
+    /// New sampler; d ≤ 32 as for [`QuiltSampler`].
+    pub fn new(params: MagmParams) -> Self {
+        assert!(params.depth() <= 32, "hybrid sampling needs d <= 32");
+        HybridSampler { params, seed: 0, b_prime_override: None }
+    }
+
+    /// Set the seed (builder style).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Pin `B'` instead of optimizing `T(B')` (ablations/tests).
+    pub fn b_prime(mut self, b_prime: u32) -> Self {
+        self.b_prime_override = Some(b_prime);
+        self
+    }
+
+    /// Model parameters.
+    pub fn params(&self) -> &MagmParams {
+        &self.params
+    }
+
+    /// Build the hybrid plan for an attribute assignment.
+    pub fn plan(&self, attrs: &AttributeAssignment) -> HybridPlan {
+        let counts = attrs.config_counts();
+        let (b_prime, predicted_cost) = match self.b_prime_override {
+            Some(bp) => (bp, f64::NAN),
+            None => choose_b_prime(
+                &counts,
+                self.params.num_nodes(),
+                self.params.depth(),
+                // KPGM ball count per piece — see choose_b_prime docs.
+                self.params.thetas().expected_edges(),
+            ),
+        };
+        // Group nodes per config. counts is sorted by config; gather nodes
+        // in one pass over the assignment.
+        let mut nodes_per_config: crate::hashutil::FastMap<Config, Vec<NodeId>> =
+            crate::hashutil::fast_map_with_capacity(counts.len());
+        for (i, &c) in attrs.configs().iter().enumerate() {
+            nodes_per_config.entry(c).or_default().push(i as NodeId);
+        }
+        let mut light = Vec::new();
+        let mut heavy = Vec::new();
+        for &(c, m) in &counts {
+            let nodes = nodes_per_config.remove(&c).expect("config seen in counts");
+            if m > b_prime {
+                heavy.push((c, nodes));
+            } else {
+                light.push((c, nodes));
+            }
+        }
+        HybridPlan { b_prime, light, heavy, predicted_cost }
+    }
+
+    /// Sample attributes then the graph.
+    pub fn sample(&self) -> EdgeList {
+        let mut rng = Rng::new(self.seed);
+        let attrs = AttributeAssignment::sample(&self.params, &mut rng);
+        self.sample_with_attrs(&attrs)
+    }
+
+    /// Sample for a fixed attribute assignment.
+    pub fn sample_with_attrs(&self, attrs: &AttributeAssignment) -> EdgeList {
+        let plan = self.plan(attrs);
+        self.sample_with_plan(attrs, &plan)
+    }
+
+    /// Sample for a fixed plan (exposed for the coordinator and tests).
+    pub fn sample_with_plan(&self, attrs: &AttributeAssignment, plan: &HybridPlan) -> EdgeList {
+        let n = self.params.num_nodes();
+        let thetas = self.params.thetas();
+        let mut out = EdgeList::new(n);
+        let base = Rng::new(self.seed).fork(0x4b1d);
+
+        // --- 1. W × W by Algorithm 2 on the light subset. --------------
+        let w_nodes = plan.w_nodes();
+        if !w_nodes.is_empty() {
+            let mut partition = Partition::build_subset(attrs.configs(), &w_nodes);
+            super::sampler::maybe_build_dense(&mut partition, self.params.depth());
+            let quilt = QuiltSampler::new(self.params.clone());
+            let kpgm = BallDropSampler::new(thetas.clone());
+            for job in quilt.plan(&partition) {
+                let mut rng = base.fork(job.fork_id);
+                sample_piece(&kpgm, &partition, job, &mut rng, &mut out);
+            }
+        }
+
+        // --- 2. heavy × heavy ER blocks. --------------------------------
+        // Fork ids must not collide with the W-piece ids; offset by a tag.
+        let er_base = Rng::new(self.seed).fork(0xe4b10c);
+        let mut er_id = 0u64;
+        for (ci, nodes_i) in &plan.heavy {
+            for (cj, nodes_j) in &plan.heavy {
+                let p = kpgm::edge_probability(thetas, *ci as NodeId, *cj as NodeId);
+                let mut rng = er_base.fork(er_id);
+                er_id += 1;
+                sample_er_block(nodes_i, nodes_j, p, &mut rng, &mut out);
+            }
+        }
+
+        // --- 3. light × heavy and heavy × light ER strips. --------------
+        for (ci, nodes_i) in &plan.light {
+            for (cj, nodes_j) in &plan.heavy {
+                let p_ij = kpgm::edge_probability(thetas, *ci as NodeId, *cj as NodeId);
+                let mut rng = er_base.fork(er_id);
+                er_id += 1;
+                sample_er_block(nodes_i, nodes_j, p_ij, &mut rng, &mut out);
+                let p_ji = kpgm::edge_probability(thetas, *cj as NodeId, *ci as NodeId);
+                let mut rng = er_base.fork(er_id);
+                er_id += 1;
+                sample_er_block(nodes_j, nodes_i, p_ji, &mut rng, &mut out);
+            }
+        }
+
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kpgm::Initiator;
+    use crate::magm;
+
+    #[test]
+    fn choose_b_prime_all_unique_prefers_quilting() {
+        // Every config unique: B' = 1 covers everything with B = 1.
+        let counts: Vec<(Config, u32)> = (0..100u64).map(|c| (c, 1)).collect();
+        let (bp, _) = choose_b_prime(&counts, 100, 7, 500.0);
+        assert_eq!(bp, 1);
+    }
+
+    #[test]
+    fn choose_b_prime_one_giant_config_goes_heavy() {
+        // One config holds almost all nodes; quilting it would need B ~ n.
+        let mut counts: Vec<(Config, u32)> = vec![(0, 10_000)];
+        counts.extend((1..50u64).map(|c| (c, 1)));
+        let (bp, _) = choose_b_prime(&counts, 10_049, 14, 1e6);
+        assert!(bp < 10_000, "giant config must be heavy, bp={bp}");
+    }
+
+    #[test]
+    fn plan_splits_by_threshold() {
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 10, 3);
+        let attrs =
+            AttributeAssignment::from_configs(vec![0, 0, 0, 0, 1, 1, 2, 3, 4, 5], 3);
+        let s = HybridSampler::new(params).b_prime(2);
+        let plan = s.plan(&attrs);
+        assert_eq!(plan.b_prime, 2);
+        assert_eq!(plan.num_heavy(), 1); // config 0 occurs 4 > 2 times
+        assert_eq!(plan.heavy[0].0, 0);
+        assert_eq!(plan.heavy[0].1.len(), 4);
+        assert_eq!(plan.w_nodes().len(), 6);
+    }
+
+    #[test]
+    fn hybrid_deterministic_in_seed() {
+        let params = MagmParams::homogeneous(Initiator::THETA2, 0.8, 256, 8);
+        let g1 = HybridSampler::new(params.clone()).seed(11).sample();
+        let g2 = HybridSampler::new(params.clone()).seed(11).sample();
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn hybrid_no_duplicates_and_valid() {
+        let params = MagmParams::homogeneous(Initiator::THETA2, 0.9, 400, 9);
+        let mut g = HybridSampler::new(params).seed(13).sample();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.dedup(), 0);
+    }
+
+    #[test]
+    fn hybrid_per_edge_frequency_matches_q() {
+        // The Theorem-3-style statistical check, now with skewed mu so the
+        // heavy/light machinery actually engages.
+        let n = 16;
+        let d = 4;
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.85, n, d);
+        let mut rng = Rng::new(239);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        let sampler = HybridSampler::new(params.clone());
+        let plan = sampler.plan(&attrs);
+        assert!(plan.num_heavy() > 0, "skewed mu should produce heavy groups");
+        let trials = 3000u64;
+        let mut counts = vec![vec![0u32; n]; n];
+        for t in 0..trials {
+            let g = HybridSampler::new(params.clone())
+                .seed(t)
+                .sample_with_attrs(&attrs);
+            for &(s, tt) in g.edges() {
+                counts[s as usize][tt as usize] += 1;
+            }
+        }
+        for i in 0..n as NodeId {
+            for j in 0..n as NodeId {
+                let q = magm::edge_probability(&params, &attrs, i, j);
+                let got = counts[i as usize][j as usize] as f64 / trials as f64;
+                let sigma = (q * (1.0 - q) / trials as f64).sqrt();
+                assert!(
+                    (got - q).abs() < 5.0 * sigma + 0.02,
+                    "cell ({i},{j}): got {got:.4}, want {q:.4}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_agrees_with_quilt_in_distribution() {
+        // Same fixed attrs, mu = 0.5: hybrid (which may pick all-light)
+        // and plain quilting should produce statistically similar |E|.
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 128, 7);
+        let mut rng = Rng::new(241);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        let trials = 60;
+        let mut quilt_total = 0usize;
+        let mut hybrid_total = 0usize;
+        for t in 0..trials {
+            quilt_total += QuiltSampler::new(params.clone())
+                .seed(t)
+                .sample_with_attrs(&attrs)
+                .num_edges();
+            hybrid_total += HybridSampler::new(params.clone())
+                .seed(10_000 + t)
+                .sample_with_attrs(&attrs)
+                .num_edges();
+        }
+        let qm = quilt_total as f64 / trials as f64;
+        let hm = hybrid_total as f64 / trials as f64;
+        assert!((qm - hm).abs() / qm < 0.1, "quilt={qm} hybrid={hm}");
+    }
+}

@@ -1,0 +1,32 @@
+//! The paper's contribution: sub-quadratic MAGM sampling by quilting KPGM
+//! samples (Algorithm 2), plus the §5 hybrid speedup for unbalanced μ.
+//!
+//! Pipeline:
+//! 1. [`Partition`] the nodes into `D_1 … D_B` so that no two nodes in a
+//!    set share an attribute configuration (minimal by Theorem 2),
+//! 2. for each of the `B²` pieces `(D_k, D_l)`, sample a KPGM graph with
+//!    Algorithm 1 and keep only edges `(x, y)` whose endpoints are
+//!    configurations present in `D_k` resp. `D_l`,
+//! 3. un-permute (`λ_i → i`) and **quilt** the pieces into one edge list
+//!    (Theorem 3: the result samples `A_ij ~ Bernoulli(Q_ij)`
+//!    independently).
+//!
+//! The [`HybridSampler`] additionally splits off configurations occurring
+//! more than `B'` times; blocks involving those are uniform Erdős–Rényi
+//! sub-graphs sampled in `O(1 + p·cells)` by geometric skipping
+//! ([`er_block`]), and only the leftover `W` goes through Algorithm 2.
+
+mod er_block;
+mod general;
+mod hybrid;
+mod partition;
+mod sampler;
+
+pub use er_block::sample_er_block;
+pub use general::GeneralQuiltSampler;
+pub use hybrid::{choose_b_prime, cost_model_paper, HybridPlan, HybridSampler};
+pub use partition::Partition;
+pub use sampler::{PieceJob, QuiltSampler};
+
+pub(crate) use sampler::sample_piece as sample_piece_for_coordinator;
+pub(crate) use sampler::maybe_build_dense as maybe_build_dense_index;

@@ -1,0 +1,218 @@
+//! The node partition `D_1 … D_B` (paper §4, Theorem 2).
+//!
+//! `Z_i = {j ≤ i : λ_j = λ_i}`; node `i` goes to set `D_{|Z_i|}`. Within a
+//! set every attribute configuration appears at most once, and the number
+//! of non-empty sets `B = max_c (multiplicity of c)` is minimal by the
+//! pigeon-hole argument of Theorem 2.
+
+use crate::hashutil::FastMap;
+
+use crate::graph::NodeId;
+use crate::magm::Config;
+
+/// The partition plus, per set, the `config → node` lookup used when
+/// filtering KPGM samples (the permutation `λ_i → i` of Figure 3).
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// `sets[c]` holds the nodes with `|Z_i| = c + 1`.
+    sets: Vec<Vec<NodeId>>,
+    /// `maps[c]`: configuration → node for set c.
+    maps: Vec<FastMap<Config, NodeId>>,
+    /// Optional dense lookup (`dense[c][config] = node + 1`, 0 = absent):
+    /// the filter runs once per ball drop, and a direct index is ~5× faster
+    /// than the hash probe. Built by [`Partition::build_dense_index`] when
+    /// the configuration space is small enough to afford it.
+    dense: Vec<Vec<NodeId>>,
+}
+
+impl Partition {
+    /// Build the partition by a single left-to-right scan with a
+    /// multiplicity counter (O(n) expected).
+    pub fn build(configs: &[Config]) -> Self {
+        let mut multiplicity: FastMap<Config, u32> = crate::hashutil::fast_map_with_capacity(configs.len());
+        let mut sets: Vec<Vec<NodeId>> = Vec::new();
+        let mut maps: Vec<FastMap<Config, NodeId>> = Vec::new();
+        for (i, &c) in configs.iter().enumerate() {
+            let m = multiplicity.entry(c).or_insert(0);
+            *m += 1;
+            let idx = (*m - 1) as usize;
+            if idx == sets.len() {
+                sets.push(Vec::new());
+                maps.push(FastMap::default());
+            }
+            sets[idx].push(i as NodeId);
+            maps[idx].insert(c, i as NodeId);
+        }
+        Partition { sets, maps, dense: Vec::new() }
+    }
+
+    /// Build restricted to a subset of nodes (used by the hybrid sampler's
+    /// W set). Nodes keep their original ids.
+    pub fn build_subset(configs: &[Config], nodes: &[NodeId]) -> Self {
+        let mut multiplicity: FastMap<Config, u32> = crate::hashutil::fast_map_with_capacity(nodes.len());
+        let mut sets: Vec<Vec<NodeId>> = Vec::new();
+        let mut maps: Vec<FastMap<Config, NodeId>> = Vec::new();
+        for &i in nodes {
+            let c = configs[i as usize];
+            let m = multiplicity.entry(c).or_insert(0);
+            *m += 1;
+            let idx = (*m - 1) as usize;
+            if idx == sets.len() {
+                sets.push(Vec::new());
+                maps.push(FastMap::default());
+            }
+            sets[idx].push(i);
+            maps[idx].insert(c, i);
+        }
+        Partition { sets, maps, dense: Vec::new() }
+    }
+
+    /// Build the dense `config → node + 1` index for every set.
+    ///
+    /// `num_configs` is the configuration-space size `2^d`; call only when
+    /// `B · 2^d · 4` bytes is affordable (the quilting sampler gates at
+    /// `2^d ≤ 2^22`).
+    pub fn build_dense_index(&mut self, num_configs: usize) {
+        self.dense = self
+            .maps
+            .iter()
+            .map(|m| {
+                let mut table = vec![0 as NodeId; num_configs];
+                for (&cfg, &node) in m {
+                    table[cfg as usize] = node + 1;
+                }
+                table
+            })
+            .collect();
+    }
+
+    /// Whether the dense index is built.
+    pub fn has_dense_index(&self) -> bool {
+        !self.dense.is_empty()
+    }
+
+    /// `config → node` lookup for set `c`, using the dense index if built.
+    #[inline]
+    pub fn lookup(&self, c: usize, config: Config) -> Option<NodeId> {
+        if let Some(table) = self.dense.get(c) {
+            let v = table[config as usize];
+            if v == 0 { None } else { Some(v - 1) }
+        } else {
+            self.maps[c].get(&config).copied()
+        }
+    }
+
+    /// The partition size B.
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// Nodes of set `c` (0-based).
+    #[inline]
+    pub fn set(&self, c: usize) -> &[NodeId] {
+        &self.sets[c]
+    }
+
+    /// Configuration → node lookup for set `c`.
+    #[inline]
+    pub fn map(&self, c: usize) -> &FastMap<Config, NodeId> {
+        &self.maps[c]
+    }
+
+    /// Total number of nodes across all sets.
+    pub fn num_nodes(&self) -> usize {
+        self.sets.iter().map(|s| s.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{forall, Config as PropConfig};
+
+    #[test]
+    fn simple_partition() {
+        // configs: a a b a b -> D_1 = {0 (a), 2 (b)}, D_2 = {1, 4}, D_3 = {3}
+        let configs = vec![7u64, 7, 3, 7, 3];
+        let p = Partition::build(&configs);
+        assert_eq!(p.size(), 3);
+        assert_eq!(p.set(0), &[0, 2]);
+        assert_eq!(p.set(1), &[1, 4]);
+        assert_eq!(p.set(2), &[3]);
+        assert_eq!(p.map(1)[&7], 1);
+        assert_eq!(p.map(1)[&3], 4);
+    }
+
+    #[test]
+    fn all_unique_gives_b_one() {
+        let configs: Vec<u64> = (0..100).collect();
+        let p = Partition::build(&configs);
+        assert_eq!(p.size(), 1);
+        assert_eq!(p.set(0).len(), 100);
+    }
+
+    #[test]
+    fn all_same_gives_b_n() {
+        let configs = vec![5u64; 40];
+        let p = Partition::build(&configs);
+        assert_eq!(p.size(), 40);
+        for c in 0..40 {
+            assert_eq!(p.set(c), &[c as u32]);
+        }
+    }
+
+    #[test]
+    fn property_partition_invariants() {
+        // For random configs: (1) sets partition the nodes, (2) no config
+        // repeats inside a set, (3) B equals the max multiplicity
+        // (Theorem 2 minimality), (4) maps agree with sets.
+        forall(PropConfig::cases(200), |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let k = 1 + rng.below(20); // distinct configs
+            let configs: Vec<u64> = (0..n).map(|_| rng.below(k)).collect();
+            let p = Partition::build(&configs);
+
+            let mut seen = vec![false; n];
+            for c in 0..p.size() {
+                let mut cfgs_in_set = std::collections::HashSet::new();
+                for &i in p.set(c) {
+                    if seen[i as usize] {
+                        return Err(format!("node {i} in two sets"));
+                    }
+                    seen[i as usize] = true;
+                    if !cfgs_in_set.insert(configs[i as usize]) {
+                        return Err(format!("config repeated in set {c}"));
+                    }
+                    if p.map(c).get(&configs[i as usize]) != Some(&i) {
+                        return Err(format!("map mismatch for node {i} in set {c}"));
+                    }
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("some node missing from partition".into());
+            }
+
+            let mut mult: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+            for &c in &configs {
+                *mult.entry(c).or_default() += 1;
+            }
+            let max_mult = mult.values().copied().max().unwrap_or(0);
+            if p.size() != max_mult {
+                return Err(format!("B = {} != max multiplicity {max_mult}", p.size()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn subset_partition_restricts() {
+        let configs = vec![1u64, 1, 2, 1, 2, 3];
+        let nodes = vec![0u32, 2, 3, 4];
+        let p = Partition::build_subset(&configs, &nodes);
+        assert_eq!(p.size(), 2);
+        assert_eq!(p.num_nodes(), 4);
+        assert_eq!(p.set(0), &[0, 2]); // first occurrence of config 1 and 2
+        assert_eq!(p.set(1), &[3, 4]);
+    }
+}

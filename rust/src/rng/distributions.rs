@@ -1,0 +1,206 @@
+//! Non-uniform distributions built on the core generator.
+//!
+//! Only what the samplers need, implemented with well-known algorithms and
+//! moment-tested in the suite. All take `&mut Rng` so the Box–Muller cache
+//! lives on the Rng itself.
+
+use super::Rng;
+
+/// Box–Muller transform: two independent standard normals per call.
+#[inline]
+pub fn box_muller(rng: &mut Rng) -> (f64, f64) {
+    // u1 in (0, 1] so ln(u1) is finite.
+    let u1 = rng.uniform_open();
+    let u2 = rng.uniform();
+    let r = (-2.0 * u1.ln()).sqrt();
+    let theta = 2.0 * std::f64::consts::PI * u2;
+    (r * theta.cos(), r * theta.sin())
+}
+
+/// Geometric via inversion: number of failures before the first success.
+///
+/// For p = 1 returns 0; for p <= 0 the distribution is improper — callers
+/// must guard, we debug-assert and return u64::MAX as a sentinel in release.
+#[inline]
+pub fn geometric(rng: &mut Rng, p: f64) -> u64 {
+    debug_assert!(p > 0.0 && p <= 1.0, "geometric p out of range: {p}");
+    if p >= 1.0 {
+        return 0;
+    }
+    if p <= 0.0 {
+        return u64::MAX;
+    }
+    // floor(ln U / ln(1-p)), U in (0,1].
+    let u = rng.uniform_open();
+    let k = (u.ln() / (-p).ln_1p()).floor();
+    if k >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        k as u64
+    }
+}
+
+/// Binomial(n, p).
+///
+/// * mean <= 30: inversion by sequential CDF walk (exact, O(mean)),
+/// * otherwise: normal approximation with continuity correction, clamped to
+///   [0, n]. For the sizes this crate draws (edge counts with mean >> 10^3)
+///   the approximation error is far below sampling noise — the same
+///   approximation the paper itself uses for |E| in Algorithm 1.
+pub fn binomial(rng: &mut Rng, n: u64, p: f64) -> u64 {
+    if n == 0 || p <= 0.0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    // Exploit symmetry to keep the walk short.
+    if p > 0.5 {
+        return n - binomial(rng, n, 1.0 - p);
+    }
+    let mean = n as f64 * p;
+    if mean <= 30.0 {
+        // Inversion: walk the CDF from k = 0.
+        let q = 1.0 - p;
+        let s = p / q;
+        let mut f = q.powf(n as f64);
+        // Underflow guard: fall through to normal approx if f == 0.
+        if f > 0.0 {
+            let u = rng.uniform();
+            let mut cdf = f;
+            let mut k = 0u64;
+            while u > cdf && k < n {
+                k += 1;
+                f *= s * ((n - k + 1) as f64) / k as f64;
+                cdf += f;
+            }
+            return k;
+        }
+    }
+    let var = mean * (1.0 - p);
+    let z = rng.normal();
+    let x = (mean + var.sqrt() * z + 0.5).floor();
+    x.clamp(0.0, n as f64) as u64
+}
+
+/// Poisson(lambda).
+///
+/// * lambda < 30: Knuth's product-of-uniforms method (exact),
+/// * otherwise: normal approximation with continuity correction.
+pub fn poisson(rng: &mut Rng, lambda: f64) -> u64 {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    if lambda < 30.0 {
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.uniform_open();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+    let z = rng.normal();
+    let x = (lambda + lambda.sqrt() * z + 0.5).floor();
+    if x < 0.0 {
+        0
+    } else {
+        x as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn geometric_mean_matches() {
+        let mut rng = Rng::new(31);
+        for &p in &[0.9, 0.5, 0.1, 0.01] {
+            let n = 50_000;
+            let xs: Vec<f64> = (0..n).map(|_| geometric(&mut rng, p) as f64).collect();
+            let (mean, _) = moments(&xs);
+            let want = (1.0 - p) / p;
+            let tol = 5.0 * ((1.0 - p) / (p * p) / n as f64).sqrt();
+            assert!((mean - want).abs() < tol, "p={p} mean={mean} want={want}");
+        }
+    }
+
+    #[test]
+    fn geometric_p_one_is_zero() {
+        let mut rng = Rng::new(37);
+        for _ in 0..100 {
+            assert_eq!(geometric(&mut rng, 1.0), 0);
+        }
+    }
+
+    #[test]
+    fn binomial_small_mean_exact_region() {
+        let mut rng = Rng::new(41);
+        let (n, p) = (100u64, 0.05);
+        let trials = 60_000;
+        let xs: Vec<f64> = (0..trials).map(|_| binomial(&mut rng, n, p) as f64).collect();
+        let (mean, var) = moments(&xs);
+        assert!((mean - 5.0).abs() < 0.1, "mean={mean}");
+        assert!((var - 4.75).abs() < 0.25, "var={var}");
+    }
+
+    #[test]
+    fn binomial_large_mean_normal_region() {
+        let mut rng = Rng::new(43);
+        let (n, p) = (1_000_000u64, 0.3);
+        let trials = 5_000;
+        let xs: Vec<f64> = (0..trials).map(|_| binomial(&mut rng, n, p) as f64).collect();
+        let (mean, var) = moments(&xs);
+        let want_mean = 300_000.0;
+        let want_var = 210_000.0;
+        assert!((mean - want_mean).abs() / want_mean < 0.001, "mean={mean}");
+        assert!((var - want_var).abs() / want_var < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn binomial_edge_cases() {
+        let mut rng = Rng::new(47);
+        assert_eq!(binomial(&mut rng, 0, 0.5), 0);
+        assert_eq!(binomial(&mut rng, 10, 0.0), 0);
+        assert_eq!(binomial(&mut rng, 10, 1.0), 10);
+        for _ in 0..1000 {
+            let x = binomial(&mut rng, 5, 0.5);
+            assert!(x <= 5);
+        }
+    }
+
+    #[test]
+    fn poisson_small_and_large() {
+        let mut rng = Rng::new(53);
+        for &lam in &[0.5, 4.0, 25.0, 200.0] {
+            let trials = 40_000;
+            let xs: Vec<f64> = (0..trials).map(|_| poisson(&mut rng, lam) as f64).collect();
+            let (mean, var) = moments(&xs);
+            let tol = 6.0 * (lam / trials as f64).sqrt() + 0.02 * lam;
+            assert!((mean - lam).abs() < tol, "lam={lam} mean={mean}");
+            assert!((var - lam).abs() < 0.1 * lam + tol, "lam={lam} var={var}");
+        }
+    }
+
+    #[test]
+    fn normal_tail_fraction() {
+        // ~2.3% of mass beyond +2 sigma.
+        let mut rng = Rng::new(59);
+        let n = 200_000;
+        let beyond = (0..n).filter(|_| rng.normal() > 2.0).count();
+        let frac = beyond as f64 / n as f64;
+        assert!((frac - 0.02275).abs() < 0.003, "frac={frac}");
+    }
+}

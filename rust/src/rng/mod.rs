@@ -1,0 +1,289 @@
+//! Deterministic random-number substrate.
+//!
+//! The vendored crate set contains no `rand`, so this module implements the
+//! generators the samplers need, from scratch:
+//!
+//! * [`SplitMix64`] — seed expansion / stream derivation,
+//! * [`Xoshiro256`] — xoshiro256++ core generator (Blackman & Vigna),
+//! * distributions: uniform, [Bernoulli](Rng::bernoulli),
+//!   [Normal](Rng::normal) (Box–Muller), [Geometric](Rng::geometric)
+//!   (inversion), [Binomial](Rng::binomial) (inversion / normal tail),
+//!   [Poisson](Rng::poisson) (Knuth / PTRS-lite), and 4-way
+//!   [categorical](Rng::categorical4) draws used by the quadrisection
+//!   descent of Algorithm 1.
+//!
+//! Determinism contract: every sampler in the crate takes a `u64` seed and
+//! derives independent per-shard streams with [`Rng::fork`], so a run is
+//! reproducible for a given `(seed, plan)` regardless of worker scheduling.
+
+mod distributions;
+mod xoshiro;
+
+pub use xoshiro::{SplitMix64, Xoshiro256};
+
+/// The crate-wide RNG: xoshiro256++ plus distribution methods.
+///
+/// Cheap to fork, 32 bytes of state, passes BigCrush (per upstream authors);
+/// we additionally sanity-test moments and χ² uniformity in the test suite.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    core: Xoshiro256,
+    /// Cached second normal variate from Box–Muller.
+    normal_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Create from a seed; seeds 0 and 1 are fine (SplitMix64 expansion).
+    pub fn new(seed: u64) -> Self {
+        Rng { core: Xoshiro256::seeded(seed), normal_spare: None }
+    }
+
+    /// Derive an independent stream for shard `id`.
+    ///
+    /// Uses SplitMix64 over `(state hash, id)` so forked streams are
+    /// decorrelated from the parent and from each other; forking is
+    /// deterministic in (parent seed, id) and does NOT advance the parent.
+    pub fn fork(&self, id: u64) -> Rng {
+        let mut mix = SplitMix64::new(self.core.state_hash() ^ 0x9e37_79b9_7f4a_7c15);
+        let a = mix.next_u64();
+        let mut mix2 = SplitMix64::new(a ^ id.wrapping_mul(0xbf58_476d_1ce4_e5b9));
+        Rng { core: Xoshiro256::from_splitmix(&mut mix2), normal_spare: None }
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.core.next_u64()
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // Take the top 53 bits — xoshiro's low bits are its weakest.
+        ((self.next_u64() >> 11) as f64) * (1.0 / 9007199254740992.0)
+    }
+
+    /// Uniform in `[0, 1]` open at neither end is unnecessary; this gives
+    /// `(0, 1]`, convenient for logs.
+    #[inline]
+    pub fn uniform_open(&mut self) -> f64 {
+        1.0 - self.uniform()
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound {
+                return (m >> 64) as u64;
+            }
+            // Rejection zone: low part below threshold.
+            let t = bound.wrapping_neg() % bound;
+            if lo >= t {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.normal_spare.take() {
+            return z;
+        }
+        let (z0, z1) = distributions::box_muller(self);
+        self.normal_spare = Some(z1);
+        z0
+    }
+
+    /// Normal with the given mean and standard deviation.
+    #[inline]
+    pub fn normal_with(&mut self, mean: f64, std_dev: f64) -> f64 {
+        mean + std_dev * self.normal()
+    }
+
+    /// Geometric: number of failures before the first success for success
+    /// probability `p` (support `0, 1, 2, …`), sampled by inversion.
+    ///
+    /// This powers the ball-skipping trick of the paper's §5 footnote:
+    /// instead of k i.i.d. Bernoulli(p) trials, jump directly to the next
+    /// success index.
+    #[inline]
+    pub fn geometric(&mut self, p: f64) -> u64 {
+        distributions::geometric(self, p)
+    }
+
+    /// Binomial(n, p) — inversion for small mean, normal approximation with
+    /// continuity correction and clamping for large mean.
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        distributions::binomial(self, n, p)
+    }
+
+    /// Poisson(lambda) — Knuth for small lambda, normal approx for large.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        distributions::poisson(self, lambda)
+    }
+
+    /// Categorical draw over 4 weights (the Algorithm-1 quadrisection step).
+    /// Returns an index 0..4. Weights need not be normalized.
+    #[inline]
+    pub fn categorical4(&mut self, w: &[f64; 4]) -> usize {
+        let total = w[0] + w[1] + w[2] + w[3];
+        let mut u = self.uniform() * total;
+        for (i, &wi) in w.iter().enumerate().take(3) {
+            if u < wi {
+                return i;
+            }
+            u -= wi;
+        }
+        3
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        self.shuffle(&mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn fork_is_deterministic_and_independent() {
+        let parent = Rng::new(7);
+        let mut f1 = parent.fork(3);
+        let mut f2 = parent.fork(3);
+        let mut f3 = parent.fork(4);
+        let a: Vec<u64> = (0..8).map(|_| f1.next_u64()).collect();
+        let b: Vec<u64> = (0..8).map(|_| f2.next_u64()).collect();
+        let c: Vec<u64> = (0..8).map(|_| f3.next_u64()).collect();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn fork_does_not_advance_parent() {
+        let mut p1 = Rng::new(9);
+        let mut p2 = Rng::new(9);
+        let _ = p1.fork(0);
+        let _ = p1.fork(1);
+        assert_eq!(p1.next_u64(), p2.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut rng = Rng::new(5);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_small_bound() {
+        let mut rng = Rng::new(11);
+        let mut counts = [0u32; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[rng.below(7) as usize] += 1;
+        }
+        let expect = n as f64 / 7.0;
+        for &c in &counts {
+            assert!(((c as f64) - expect).abs() < 5.0 * expect.sqrt());
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Rng::new(13);
+        let p = 0.3;
+        let n = 100_000;
+        let hits = (0..n).filter(|_| rng.bernoulli(p)).count();
+        let got = hits as f64 / n as f64;
+        assert!((got - p).abs() < 0.01, "got={got}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(17);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn categorical4_proportions() {
+        let mut rng = Rng::new(19);
+        let w = [0.1, 0.2, 0.3, 0.4];
+        let n = 100_000;
+        let mut counts = [0u32; 4];
+        for _ in 0..n {
+            counts[rng.categorical4(&w)] += 1;
+        }
+        for i in 0..4 {
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - w[i]).abs() < 0.01, "i={i} got={got}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Rng::new(23);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,125 @@
+//! Core generators: SplitMix64 (seed expansion) and xoshiro256++.
+//!
+//! References: Vigna, "Further scramblings of Marsaglia's xorshift
+//! generators"; Blackman & Vigna, "Scrambled linear pseudorandom number
+//! generators". Implemented from the public-domain reference code.
+
+/// SplitMix64: used to expand a 64-bit seed into xoshiro state and to derive
+/// fork seeds. Passes through every 64-bit value exactly once per period.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// New stream from a seed.
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    /// Next 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — 256 bits of state, period 2^256 − 1.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 expansion (handles seed = 0 correctly: the
+    /// expanded state is never all-zero).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self::from_splitmix(&mut sm)
+    }
+
+    /// Fill state from an existing SplitMix64 stream.
+    pub fn from_splitmix(sm: &mut SplitMix64) -> Self {
+        let mut s = [0u64; 4];
+        loop {
+            for slot in &mut s {
+                *slot = sm.next_u64();
+            }
+            if s.iter().any(|&x| x != 0) {
+                break;
+            }
+        }
+        Xoshiro256 { s }
+    }
+
+    /// A cheap digest of the state, used for fork-stream derivation.
+    #[inline]
+    pub fn state_hash(&self) -> u64 {
+        self.s[0]
+            .rotate_left(1)
+            .wrapping_add(self.s[1].rotate_left(17))
+            .wrapping_add(self.s[2].rotate_left(33))
+            .wrapping_add(self.s[3].rotate_left(47))
+    }
+
+    /// Next 64-bit output (the ++ scrambler).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // First outputs for seed 0 (from the public-domain reference).
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xe220a8397b1dcdaf);
+        assert_eq!(sm.next_u64(), 0x6e789e6aa1b965f4);
+        assert_eq!(sm.next_u64(), 0x06c45d188009454f);
+    }
+
+    #[test]
+    fn xoshiro_nonzero_state_even_for_zero_seed() {
+        let mut x = Xoshiro256::seeded(0);
+        // Should produce varied output, not a fixed point.
+        let a = x.next_u64();
+        let b = x.next_u64();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn xoshiro_streams_reproducible() {
+        let mut a = Xoshiro256::seeded(123);
+        let mut b = Xoshiro256::seeded(123);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn state_hash_changes_with_state() {
+        let mut x = Xoshiro256::seeded(5);
+        let h0 = x.state_hash();
+        x.next_u64();
+        assert_ne!(h0, x.state_hash());
+    }
+}

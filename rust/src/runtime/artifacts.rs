@@ -1,0 +1,196 @@
+//! AOT artifact manifest: the shape contract between `python/compile/aot.py`
+//! and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::json::Json;
+
+/// One input or output tensor spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimensions (row-major).
+    pub shape: Vec<usize>,
+    /// dtype string ("f32").
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().map(|v| v as usize).ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    /// Entry name (e.g. "edge_prob_block").
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Input tensor specs, in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs.
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest plus the artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory containing the HLO files.
+    pub dir: PathBuf,
+    /// Padded attribute depth every entry was lowered at.
+    pub d_pad: usize,
+    /// Block sizes (source rows, destination rows, pair batch).
+    pub bm: usize,
+    /// Destination block rows.
+    pub bn: usize,
+    /// Pair batch size.
+    pub bp: usize,
+    /// Entries by name.
+    pub entries: Vec<EntrySpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version = j.get("version").and_then(Json::as_u64).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let get_dim = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .iter()
+            .map(|e| {
+                Ok(EntrySpec {
+                    name: e
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("entry missing name"))?
+                        .to_string(),
+                    file: e
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("entry missing file"))?
+                        .to_string(),
+                    inputs: e
+                        .get("inputs")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("entry missing inputs"))?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: e
+                        .get("outputs")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            d_pad: get_dim("d_pad")?,
+            bm: get_dim("bm")?,
+            bn: get_dim("bn")?,
+            bp: get_dim("bp")?,
+            entries,
+        })
+    }
+
+    /// Find an entry by name.
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("entry {name:?} not in manifest (re-run `make artifacts`)"))
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+/// Default artifacts directory: `$MAGQUILT_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("MAGQUILT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("magquilt_manifest_ok");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "d_pad": 32, "bm": 512, "bn": 512, "bp": 8192,
+               "entries": [{"name": "e", "file": "e.hlo.txt",
+                            "inputs": [{"shape": [512, 32], "dtype": "f32"}],
+                            "outputs": [{"shape": [512], "dtype": "f32"}]}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.d_pad, 32);
+        let e = m.entry("e").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![512, 32]);
+        assert_eq!(e.inputs[0].elements(), 512 * 32);
+        assert!(m.entry("nope").is_err());
+        assert!(m.hlo_path(e).ends_with("e.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join("magquilt_manifest_badver");
+        write_manifest(&dir, r#"{"version": 9, "entries": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_context_error() {
+        let dir = std::env::temp_dir().join("magquilt_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,121 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate's PJRT CPU client. One [`XlaRuntime`] owns the
+//! client plus every compiled executable from the manifest; executables are
+//! compiled once at load and reused for every call (loading + compiling is
+//! the slow part, execution is the hot path).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::hashutil::FastMap;
+
+use super::artifacts::{default_artifacts_dir, EntrySpec, Manifest};
+
+/// A loaded PJRT runtime with compiled entry points.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: FastMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("platform", &self.client.platform_name())
+            .field("entries", &self.executables.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl XlaRuntime {
+    /// Load from the default artifacts directory (`$MAGQUILT_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_artifacts_dir())
+    }
+
+    /// Load the manifest, compile every entry on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = FastMap::default();
+        for entry in &manifest.entries {
+            let path = manifest.hlo_path(entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?;
+            executables.insert(entry.name.clone(), exe);
+        }
+        Ok(XlaRuntime { client, manifest, executables })
+    }
+
+    /// The manifest (shape contract).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute an entry with f32 inputs; returns the flattened f32 outputs
+    /// (one Vec per output tensor).
+    ///
+    /// Inputs must match the manifest shapes exactly — the caller pads
+    /// (see [`super::kernels`]).
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self.manifest.entry(name)?;
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("entry {name} not compiled"))?;
+        let literals = build_literals(entry, inputs)?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .context("executable returned no outputs")?;
+        let literal = first.to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the output is a tuple.
+        let parts = literal.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            out.push(part.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Build input literals, validating lengths against the manifest.
+fn build_literals(entry: &EntrySpec, inputs: &[&[f32]]) -> Result<Vec<xla::Literal>> {
+    if inputs.len() != entry.inputs.len() {
+        bail!(
+            "{}: expected {} inputs, got {}",
+            entry.name,
+            entry.inputs.len(),
+            inputs.len()
+        );
+    }
+    let mut literals = Vec::with_capacity(inputs.len());
+    for (spec, data) in entry.inputs.iter().zip(inputs) {
+        if data.len() != spec.elements() {
+            bail!(
+                "{}: input shape {:?} needs {} elements, got {}",
+                entry.name,
+                spec.shape,
+                spec.elements(),
+                data.len()
+            );
+        }
+        let lit = xla::Literal::vec1(data);
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        literals.push(if dims.len() == 1 { lit } else { lit.reshape(&dims)? });
+    }
+    Ok(literals)
+}

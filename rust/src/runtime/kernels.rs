@@ -1,0 +1,227 @@
+//! High-level MAGM kernels on top of the raw runtime: coefficient
+//! transform, padding to the artifact shape contract, block iteration.
+//!
+//! Mirrors `python/compile/model.py`: theta is converted once per model to
+//! the `[4, d_pad]` bilinear coefficients (`log θ[a,b] = c0 + c1·a + c2·b +
+//! c3·ab`), bits/counts are zero-padded to the lowered shapes, outputs are
+//! sliced back.
+
+use anyhow::Result;
+
+use crate::graph::{EdgeList, NodeId};
+use crate::kpgm::ThetaSeq;
+use crate::magm::{AttributeAssignment, MagmParams};
+use crate::rng::Rng;
+
+use super::XlaRuntime;
+
+/// Matches model.THETA_FLOOR: keeps log finite; exp underflows to 0 anyway.
+const THETA_FLOOR: f64 = 1e-30;
+
+/// Bilinear log-space coefficients for a theta sequence, padded to `d_pad`
+/// (padding columns are zero = neutral levels).
+pub fn theta_to_coef(thetas: &ThetaSeq, d_pad: usize) -> Vec<f32> {
+    let d = thetas.depth();
+    assert!(d <= d_pad, "model depth {d} exceeds artifact d_pad {d_pad}");
+    let mut coef = vec![0f32; 4 * d_pad];
+    for (k, level) in thetas.levels().iter().enumerate() {
+        let l00 = level.get(0, 0).max(THETA_FLOOR).ln();
+        let l01 = level.get(0, 1).max(THETA_FLOOR).ln();
+        let l10 = level.get(1, 0).max(THETA_FLOOR).ln();
+        let l11 = level.get(1, 1).max(THETA_FLOOR).ln();
+        coef[k] = l00 as f32;
+        coef[d_pad + k] = (l10 - l00) as f32;
+        coef[2 * d_pad + k] = (l01 - l00) as f32;
+        coef[3 * d_pad + k] = (l11 - l10 - l01 + l00) as f32;
+    }
+    coef
+}
+
+/// MAGM kernels bound to one runtime + one model.
+pub struct MagmKernels<'rt> {
+    runtime: &'rt XlaRuntime,
+    coef: Vec<f32>,
+    depth: usize,
+}
+
+impl<'rt> MagmKernels<'rt> {
+    /// Bind a model's theta sequence to the runtime.
+    pub fn new(runtime: &'rt XlaRuntime, thetas: &ThetaSeq) -> Self {
+        let d_pad = runtime.manifest().d_pad;
+        MagmKernels { runtime, coef: theta_to_coef(thetas, d_pad), depth: thetas.depth() }
+    }
+
+    /// The artifact block size (rows per block call).
+    pub fn block_rows(&self) -> usize {
+        self.runtime.manifest().bm
+    }
+
+    /// Pack attribute bits of `nodes` into a zero-padded `[rows, d_pad]`
+    /// f32 buffer.
+    fn pack_bits(&self, attrs: &AttributeAssignment, nodes: &[NodeId], rows: usize) -> Vec<f32> {
+        let d_pad = self.runtime.manifest().d_pad;
+        assert!(nodes.len() <= rows);
+        let mut out = vec![0f32; rows * d_pad];
+        for (r, &node) in nodes.iter().enumerate() {
+            attrs.bits_f32_row(node, &mut out[r * d_pad..r * d_pad + self.depth]);
+        }
+        out
+    }
+
+    /// Edge-probability block `Q[src × dst]` via the AOT Pallas kernel.
+    /// `src.len() ≤ bm`, `dst.len() ≤ bn`; returns row-major
+    /// `src.len() × dst.len()`.
+    pub fn edge_prob_block(
+        &self,
+        attrs: &AttributeAssignment,
+        src: &[NodeId],
+        dst: &[NodeId],
+    ) -> Result<Vec<f32>> {
+        let m = self.runtime.manifest();
+        let fs = self.pack_bits(attrs, src, m.bm);
+        let fd = self.pack_bits(attrs, dst, m.bn);
+        let outs = self.runtime.execute_f32("edge_prob_block", &[&fs, &fd, &self.coef])?;
+        let full = &outs[0];
+        let mut q = Vec::with_capacity(src.len() * dst.len());
+        for r in 0..src.len() {
+            q.extend_from_slice(&full[r * m.bn..r * m.bn + dst.len()]);
+        }
+        Ok(q)
+    }
+
+    /// Elementwise probabilities for up to `bp` aligned (src, dst) pairs.
+    pub fn edge_prob_pairs(
+        &self,
+        attrs: &AttributeAssignment,
+        pairs: &[(NodeId, NodeId)],
+    ) -> Result<Vec<f32>> {
+        let m = self.runtime.manifest();
+        assert!(pairs.len() <= m.bp, "at most {} pairs per call", m.bp);
+        let srcs: Vec<NodeId> = pairs.iter().map(|&(s, _)| s).collect();
+        let dsts: Vec<NodeId> = pairs.iter().map(|&(_, t)| t).collect();
+        let fs = self.pack_bits(attrs, &srcs, m.bp);
+        let fd = self.pack_bits(attrs, &dsts, m.bp);
+        let outs = self.runtime.execute_f32("edge_prob_pairs", &[&fs, &fd, &self.coef])?;
+        Ok(outs[0][..pairs.len()].to_vec())
+    }
+
+    /// Expected out-degree contributions of a destination block:
+    /// `sum_j counts[j] Q[src_i, dst_j]` for each src row.
+    pub fn expected_degree_contrib(
+        &self,
+        attrs: &AttributeAssignment,
+        src: &[NodeId],
+        dst: &[NodeId],
+        counts_dst: &[f32],
+    ) -> Result<Vec<f32>> {
+        let m = self.runtime.manifest();
+        assert_eq!(dst.len(), counts_dst.len());
+        let fs = self.pack_bits(attrs, src, m.bm);
+        let fd = self.pack_bits(attrs, dst, m.bn);
+        let mut cnt = vec![0f32; m.bn];
+        cnt[..counts_dst.len()].copy_from_slice(counts_dst);
+        let outs = self
+            .runtime
+            .execute_f32("expected_degree_contrib", &[&fs, &fd, &self.coef, &cnt])?;
+        Ok(outs[0][..src.len()].to_vec())
+    }
+
+    /// Bernoulli log-likelihood of an adjacency block. `adj` is row-major
+    /// `src.len() × dst.len()`; the mask excludes padding automatically.
+    pub fn loglik_block(
+        &self,
+        attrs: &AttributeAssignment,
+        src: &[NodeId],
+        dst: &[NodeId],
+        adj: &[f32],
+    ) -> Result<f64> {
+        let m = self.runtime.manifest();
+        assert_eq!(adj.len(), src.len() * dst.len());
+        let fs = self.pack_bits(attrs, src, m.bm);
+        let fd = self.pack_bits(attrs, dst, m.bn);
+        let mut adj_pad = vec![0f32; m.bm * m.bn];
+        let mut mask = vec![0f32; m.bm * m.bn];
+        for r in 0..src.len() {
+            adj_pad[r * m.bn..r * m.bn + dst.len()]
+                .copy_from_slice(&adj[r * dst.len()..(r + 1) * dst.len()]);
+            mask[r * m.bn..r * m.bn + dst.len()].fill(1.0);
+        }
+        let outs = self
+            .runtime
+            .execute_f32("loglik_block", &[&fs, &fd, &self.coef, &adj_pad, &mask])?;
+        Ok(outs[0][0] as f64)
+    }
+}
+
+/// The accelerated `O(n²)` baseline: naive MAGM sampling with the Q blocks
+/// computed by the AOT XLA kernel and the Bernoulli trials done in Rust.
+///
+/// Still quadratic (it must be — it is the *baseline*), but the per-entry
+/// probability evaluation is vectorized through the MXU-shaped kernel
+/// instead of a d-way scalar product.
+pub fn naive_xla_sample(
+    runtime: &XlaRuntime,
+    params: &MagmParams,
+    attrs: &AttributeAssignment,
+    rng: &mut Rng,
+) -> Result<EdgeList> {
+    let kernels = MagmKernels::new(runtime, params.thetas());
+    let n = params.num_nodes();
+    let bm = runtime.manifest().bm;
+    let bn = runtime.manifest().bn;
+    let mut g = EdgeList::new(n);
+    let all: Vec<NodeId> = (0..n as NodeId).collect();
+    for src_chunk in all.chunks(bm) {
+        for dst_chunk in all.chunks(bn) {
+            let q = kernels.edge_prob_block(attrs, src_chunk, dst_chunk)?;
+            for (r, &i) in src_chunk.iter().enumerate() {
+                let row = &q[r * dst_chunk.len()..(r + 1) * dst_chunk.len()];
+                for (c, &j) in dst_chunk.iter().enumerate() {
+                    if rng.bernoulli(row[c] as f64) {
+                        g.push(i, j);
+                    }
+                }
+            }
+        }
+    }
+    Ok(g)
+}
+
+/// Expected out-degrees for every node, computed block-wise through the
+/// `expected_degree_contrib` kernel over the distinct-configuration
+/// representation (cost `O((#configs / b)² )` kernel calls).
+pub fn expected_out_degrees(
+    runtime: &XlaRuntime,
+    params: &MagmParams,
+    attrs: &AttributeAssignment,
+) -> Result<Vec<f64>> {
+    let kernels = MagmKernels::new(runtime, params.thetas());
+    let bm = runtime.manifest().bm;
+    let bn = runtime.manifest().bn;
+    // Distinct configurations with counts; one representative node each.
+    let counts = attrs.config_counts();
+    let mut rep: crate::hashutil::FastMap<u64, NodeId> = crate::hashutil::FastMap::default();
+    for (i, &c) in attrs.configs().iter().enumerate() {
+        rep.entry(c).or_insert(i as NodeId);
+    }
+    let reps: Vec<NodeId> = counts.iter().map(|&(c, _)| rep[&c]).collect();
+    let cnts: Vec<f32> = counts.iter().map(|&(_, m)| m as f32).collect();
+
+    // deg(config r) = sum over dst blocks of contrib.
+    let mut per_config = vec![0f64; reps.len()];
+    for (si, src_chunk) in reps.chunks(bm).enumerate() {
+        for (di, dst_chunk) in reps.chunks(bn).enumerate() {
+            let c = &cnts[di * bn..(di * bn + dst_chunk.len()).min(cnts.len())];
+            let contrib = kernels.expected_degree_contrib(attrs, src_chunk, dst_chunk, c)?;
+            for (r, v) in contrib.iter().enumerate() {
+                per_config[si * bm + r] += *v as f64;
+            }
+        }
+    }
+    // Broadcast back to nodes via their configuration.
+    let mut cfg_index: crate::hashutil::FastMap<u64, usize> = crate::hashutil::FastMap::default();
+    for (idx, &(c, _)) in counts.iter().enumerate() {
+        cfg_index.insert(c, idx);
+    }
+    Ok(attrs.configs().iter().map(|c| per_config[cfg_index[c]]).collect())
+}

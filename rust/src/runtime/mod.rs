@@ -1,0 +1,65 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas kernels.
+//!
+//! Python runs only at build time (`make artifacts`); this module gives the
+//! Rust hot path access to the lowered HLO:
+//!
+//! * [`Manifest`] — the shape contract written by `python/compile/aot.py`,
+//! * [`XlaRuntime`] — PJRT CPU client + compiled executables,
+//! * [`MagmKernels`] — model-bound wrappers (coefficient transform,
+//!   padding, block iteration),
+//! * [`naive_xla_sample`] — the accelerated `O(n²)` baseline sampler,
+//! * [`expected_out_degrees`] — analysis helper used by examples/stats.
+//!
+//! Everything degrades gracefully when `artifacts/` is missing: loading
+//! returns an error telling the user to run `make artifacts`; nothing else
+//! in the crate requires the runtime.
+
+mod artifacts;
+mod client;
+pub mod json;
+mod kernels;
+
+pub use artifacts::{default_artifacts_dir, EntrySpec, Manifest, TensorSpec};
+pub use client::XlaRuntime;
+pub use kernels::{expected_out_degrees, naive_xla_sample, theta_to_coef, MagmKernels};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kpgm::{Initiator, ThetaSeq};
+
+    #[test]
+    fn coef_transform_reconstructs_log_theta() {
+        let thetas = ThetaSeq::homogeneous(Initiator::THETA1, 3);
+        let d_pad = 8;
+        let coef = theta_to_coef(&thetas, d_pad);
+        for k in 0..3 {
+            let c0 = coef[k] as f64;
+            let c1 = coef[d_pad + k] as f64;
+            let c2 = coef[2 * d_pad + k] as f64;
+            let c3 = coef[3 * d_pad + k] as f64;
+            for a in 0..2 {
+                for b in 0..2 {
+                    let want = Initiator::THETA1.get(a, b).ln();
+                    let got = c0 + c1 * a as f64 + c2 * b as f64 + c3 * (a * b) as f64;
+                    assert!((got - want).abs() < 1e-6, "({a},{b}): {got} vs {want}");
+                }
+            }
+        }
+        // padding columns are exactly zero
+        for k in 3..d_pad {
+            for row in 0..4 {
+                assert_eq!(coef[row * d_pad + k], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn coef_transform_handles_zero_theta() {
+        let t = Initiator::new([0.0, 0.5, 0.5, 1.0]);
+        let coef = theta_to_coef(&ThetaSeq::homogeneous(t, 1), 1);
+        assert!(coef[0].is_finite());
+        // exp(c0) must underflow to 0 in f32 once multiplied out
+        assert!(coef[0] < -60.0);
+    }
+}

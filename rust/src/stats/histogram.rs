@@ -1,0 +1,117 @@
+//! Linear and logarithmic histograms for degree distributions.
+
+/// Fixed-width linear histogram over `[0, max)`.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bins: Vec<u64>,
+    width: f64,
+    max: f64,
+    overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    /// `nbins` equal-width bins covering `[0, max)`.
+    pub fn new(nbins: usize, max: f64) -> Self {
+        assert!(nbins > 0 && max > 0.0);
+        Histogram { bins: vec![0; nbins], width: max / nbins as f64, max, overflow: 0, count: 0 }
+    }
+
+    /// Record one observation.
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if x >= self.max || x < 0.0 {
+            self.overflow += 1;
+            return;
+        }
+        let idx = ((x / self.width) as usize).min(self.bins.len() - 1);
+        self.bins[idx] += 1;
+    }
+
+    /// Bin counts.
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    /// Observations outside `[0, max)`.
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Logarithmically-binned histogram for heavy-tailed data (degree
+/// distributions): bin k covers `[base^k, base^(k+1))`, bin 0 also takes
+/// the value 0.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    base: f64,
+    bins: Vec<u64>,
+    count: u64,
+}
+
+impl LogHistogram {
+    /// Base-`base` log bins (base > 1), e.g. 2.0 for doubling bins.
+    pub fn new(base: f64) -> Self {
+        assert!(base > 1.0);
+        LogHistogram { base, bins: Vec::new(), count: 0 }
+    }
+
+    /// Record a non-negative integer observation.
+    pub fn add(&mut self, x: u64) {
+        self.count += 1;
+        let idx = if x <= 1 { 0 } else { (x as f64).log(self.base).floor() as usize };
+        if idx >= self.bins.len() {
+            self.bins.resize(idx + 1, 0);
+        }
+        self.bins[idx] += 1;
+    }
+
+    /// (bin lower bound, count) pairs for non-empty bins.
+    pub fn nonzero_bins(&self) -> Vec<(u64, u64)> {
+        self.bins
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(k, &c)| (self.base.powi(k as i32) as u64, c))
+            .collect()
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_binning() {
+        let mut h = Histogram::new(4, 8.0);
+        for x in [0.0, 1.9, 2.0, 7.9, 8.0, -1.0] {
+            h.add(x);
+        }
+        assert_eq!(h.bins(), &[2, 1, 0, 1]);
+        assert_eq!(h.overflow(), 2);
+        assert_eq!(h.count(), 6);
+    }
+
+    #[test]
+    fn log_binning() {
+        let mut h = LogHistogram::new(2.0);
+        for x in [0u64, 1, 2, 3, 4, 7, 8, 100] {
+            h.add(x);
+        }
+        let bins = h.nonzero_bins();
+        // bin 0 (x<=1): {0,1}; bin 1 [2,4): {2,3}; bin 2 [4,8): {4,7};
+        // bin 3 [8,16): {8}; bin 6 [64,128): {100}
+        assert_eq!(bins, vec![(1, 2), (2, 2), (4, 2), (8, 1), (64, 1)]);
+        assert_eq!(h.count(), 8);
+    }
+}

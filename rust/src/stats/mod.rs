@@ -1,0 +1,76 @@
+//! Graph statistics: histograms, degree distributions, power-law fits,
+//! and the per-sample summary used by the experiments and examples.
+
+mod histogram;
+mod powerlaw;
+mod summary;
+
+pub use histogram::{Histogram, LogHistogram};
+pub use powerlaw::{powerlaw_alpha_mle, PowerLawFit};
+pub use summary::{GraphSummary, summarize};
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Least-squares slope of log(y) on log(x), used to estimate the growth
+/// exponent c in |E| = n^c (paper Fig. 8). Points with non-positive x or y
+/// are skipped.
+pub fn loglog_slope(points: &[(f64, f64)]) -> f64 {
+    let logs: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|&&(x, y)| x > 0.0 && y > 0.0)
+        .map(|&(x, y)| (x.ln(), y.ln()))
+        .collect();
+    if logs.len() < 2 {
+        return f64::NAN;
+    }
+    let n = logs.len() as f64;
+    let sx: f64 = logs.iter().map(|p| p.0).sum();
+    let sy: f64 = logs.iter().map(|p| p.1).sum();
+    let sxx: f64 = logs.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = logs.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std_dev(&xs) - 1.2909944).abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn loglog_slope_recovers_exponent() {
+        // y = 3 * x^1.7
+        let pts: Vec<(f64, f64)> =
+            (1..20).map(|i| (i as f64, 3.0 * (i as f64).powf(1.7))).collect();
+        assert!((loglog_slope(&pts) - 1.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loglog_slope_skips_nonpositive() {
+        let pts = vec![(0.0, 1.0), (1.0, 2.0), (2.0, 4.0), (4.0, 8.0)];
+        assert!((loglog_slope(&pts) - 1.0).abs() < 1e-9);
+    }
+}

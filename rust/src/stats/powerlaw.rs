@@ -1,0 +1,81 @@
+//! Power-law exponent estimation (Clauset–Shalizi–Newman discrete MLE).
+//!
+//! MAGM can provably produce power-law degree distributions (Kim &
+//! Leskovec 2010) — the fit here lets the examples report the exponent of
+//! generated graphs.
+
+/// Result of a power-law fit on a degree sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerLawFit {
+    /// Estimated exponent alpha ( > 1 for proper distributions).
+    pub alpha: f64,
+    /// The cutoff x_min used in the fit.
+    pub x_min: u64,
+    /// Number of observations at or above x_min.
+    pub tail_n: usize,
+}
+
+/// Discrete power-law MLE with the standard continuous approximation
+/// `alpha ≈ 1 + n / sum(ln(x_i / (x_min - 0.5)))` (CSN 2009, eq. 3.7).
+///
+/// Returns None when fewer than `min_tail` observations lie at/above
+/// `x_min`.
+pub fn powerlaw_alpha_mle(degrees: &[u64], x_min: u64, min_tail: usize) -> Option<PowerLawFit> {
+    assert!(x_min >= 1);
+    let tail: Vec<u64> = degrees.iter().copied().filter(|&d| d >= x_min).collect();
+    if tail.len() < min_tail {
+        return None;
+    }
+    let denom: f64 = tail
+        .iter()
+        .map(|&d| (d as f64 / (x_min as f64 - 0.5)).ln())
+        .sum();
+    if denom <= 0.0 {
+        return None;
+    }
+    Some(PowerLawFit {
+        alpha: 1.0 + tail.len() as f64 / denom,
+        x_min,
+        tail_n: tail.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Sample a discrete power law by inverse-CDF on the continuous
+    /// approximation: x = floor(x_min * u^(-1/(alpha-1))).
+    fn sample_powerlaw(rng: &mut Rng, alpha: f64, x_min: u64, n: usize) -> Vec<u64> {
+        (0..n)
+            .map(|_| {
+                let u = rng.uniform_open();
+                ((x_min as f64 - 0.5) * u.powf(-1.0 / (alpha - 1.0)) + 0.5) as u64
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_known_alpha() {
+        // The continuous-approximation MLE has a known O(1/x_min)
+        // discretization bias; with x_min = 8 it is well under the
+        // tolerance used here.
+        let mut rng = Rng::new(61);
+        for &alpha in &[2.0, 2.5, 3.0] {
+            let xs = sample_powerlaw(&mut rng, alpha, 8, 200_000);
+            let fit = powerlaw_alpha_mle(&xs, 8, 100).unwrap();
+            assert!(
+                (fit.alpha - alpha).abs() < 0.05,
+                "alpha={alpha} got={}",
+                fit.alpha
+            );
+        }
+    }
+
+    #[test]
+    fn too_small_tail_returns_none() {
+        let xs = vec![1u64, 1, 1, 2];
+        assert!(powerlaw_alpha_mle(&xs, 10, 5).is_none());
+    }
+}

@@ -1,0 +1,114 @@
+//! Per-graph summary used by `magquilt stats` and the examples.
+
+use crate::graph::{clustering_coefficient, largest_scc_size, largest_wcc_size, Csr, EdgeList};
+
+use super::{mean, powerlaw_alpha_mle, LogHistogram};
+
+/// Aggregate statistics of one sampled graph.
+#[derive(Debug, Clone)]
+pub struct GraphSummary {
+    /// Node count.
+    pub num_nodes: usize,
+    /// Directed edge count after dedup.
+    pub num_edges: usize,
+    /// Self-loop count.
+    pub self_loops: usize,
+    /// Mean out-degree.
+    pub mean_degree: f64,
+    /// Maximum out-degree.
+    pub max_out_degree: u32,
+    /// Maximum in-degree.
+    pub max_in_degree: u32,
+    /// Fraction of nodes in the largest strongly connected component
+    /// (paper Fig. 9's quantity).
+    pub scc_fraction: f64,
+    /// Fraction of nodes in the largest weakly connected component.
+    pub wcc_fraction: f64,
+    /// Sampled average local clustering coefficient.
+    pub clustering: f64,
+    /// Power-law MLE exponent of the out-degree tail (x_min = 4), if the
+    /// tail is large enough.
+    pub powerlaw_alpha: Option<f64>,
+    /// Log-binned (base 2) out-degree histogram: (lower bound, count).
+    pub degree_histogram: Vec<(u64, u64)>,
+}
+
+/// Compute the summary. `clustering_sample` nodes are sampled for the
+/// clustering estimate (it is the only super-linear statistic here).
+pub fn summarize(g: &EdgeList, clustering_sample: usize, seed: u64) -> GraphSummary {
+    let csr = Csr::from_edge_list(g);
+    let n = g.num_nodes();
+    let out = g.out_degrees();
+    let inn = g.in_degrees();
+    let mut hist = LogHistogram::new(2.0);
+    for &d in &out {
+        hist.add(d as u64);
+    }
+    let degs64: Vec<u64> = out.iter().map(|&d| d as u64).collect();
+    GraphSummary {
+        num_nodes: n,
+        num_edges: csr.num_edges(),
+        self_loops: g.num_self_loops(),
+        mean_degree: mean(&out.iter().map(|&d| d as f64).collect::<Vec<_>>()),
+        max_out_degree: out.iter().copied().max().unwrap_or(0),
+        max_in_degree: inn.iter().copied().max().unwrap_or(0),
+        scc_fraction: if n == 0 { 0.0 } else { largest_scc_size(&csr) as f64 / n as f64 },
+        wcc_fraction: if n == 0 { 0.0 } else { largest_wcc_size(&csr) as f64 / n as f64 },
+        clustering: clustering_coefficient(&csr, clustering_sample, seed),
+        powerlaw_alpha: powerlaw_alpha_mle(&degs64, 4, 50).map(|f| f.alpha),
+        degree_histogram: hist.nonzero_bins(),
+    }
+}
+
+impl GraphSummary {
+    /// Multi-line human-readable report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("nodes             {}\n", self.num_nodes));
+        s.push_str(&format!("edges             {}\n", self.num_edges));
+        s.push_str(&format!("self-loops        {}\n", self.self_loops));
+        s.push_str(&format!("mean out-degree   {:.3}\n", self.mean_degree));
+        s.push_str(&format!("max out/in degree {} / {}\n", self.max_out_degree, self.max_in_degree));
+        s.push_str(&format!("largest SCC       {:.4} of nodes\n", self.scc_fraction));
+        s.push_str(&format!("largest WCC       {:.4} of nodes\n", self.wcc_fraction));
+        s.push_str(&format!("clustering (est)  {:.4}\n", self.clustering));
+        match self.powerlaw_alpha {
+            Some(a) => s.push_str(&format!("power-law alpha   {a:.3}\n")),
+            None => s.push_str("power-law alpha   (tail too small)\n"),
+        }
+        s.push_str("degree histogram  ");
+        for (lo, c) in &self.degree_histogram {
+            s.push_str(&format!("[{lo}+]:{c} "));
+        }
+        s.push('\n');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_cycle() {
+        let n = 10;
+        let edges: Vec<(u32, u32)> = (0..n as u32).map(|i| (i, (i + 1) % n as u32)).collect();
+        let g = EdgeList::from_edges(n, edges);
+        let s = summarize(&g, n, 7);
+        assert_eq!(s.num_nodes, n);
+        assert_eq!(s.num_edges, n);
+        assert_eq!(s.scc_fraction, 1.0);
+        assert_eq!(s.wcc_fraction, 1.0);
+        assert_eq!(s.max_out_degree, 1);
+        assert!((s.mean_degree - 1.0).abs() < 1e-12);
+        assert!(s.report().contains("nodes"));
+    }
+
+    #[test]
+    fn summary_of_empty() {
+        let g = EdgeList::new(5);
+        let s = summarize(&g, 5, 7);
+        assert_eq!(s.num_edges, 0);
+        assert_eq!(s.scc_fraction, 1.0 / 5.0); // singletons
+    }
+}

@@ -1,0 +1,126 @@
+//! Integration: CLI command paths (library-level calls; no subprocess
+//! needed since `cli::run` is pure over argv).
+
+use std::path::PathBuf;
+
+fn args(v: &[&str]) -> Vec<String> {
+    v.iter().map(|s| s.to_string()).collect()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("magquilt_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn generate_writes_text_and_stats_reads_back() {
+    let out = tmp("g.txt");
+    magquilt::cli::run(&args(&[
+        "generate",
+        "--log2-nodes",
+        "9",
+        "--mu",
+        "0.5",
+        "--seed",
+        "3",
+        "--output",
+        out.to_str().unwrap(),
+    ]))
+    .unwrap();
+    assert!(out.exists());
+    magquilt::cli::run(&args(&["stats", out.to_str().unwrap()])).unwrap();
+}
+
+#[test]
+fn generate_binary_roundtrip() {
+    let out = tmp("g.bin");
+    magquilt::cli::run(&args(&[
+        "generate",
+        "--log2-nodes",
+        "8",
+        "--sampler",
+        "hybrid",
+        "--mu",
+        "0.8",
+        "--output",
+        out.to_str().unwrap(),
+        "--binary",
+    ]))
+    .unwrap();
+    let g = magquilt::graph::read_edge_list_binary(&out).unwrap();
+    assert_eq!(g.num_nodes(), 256);
+}
+
+#[test]
+fn generate_naive_sampler_small() {
+    magquilt::cli::run(&args(&[
+        "generate",
+        "--log2-nodes",
+        "6",
+        "--sampler",
+        "naive",
+        "--stats",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn experiment_smoke_fig5() {
+    let out_dir = tmp("exp_out");
+    magquilt::cli::run(&args(&[
+        "experiment",
+        "fig5",
+        "--max-log2n",
+        "8",
+        "--trials",
+        "2",
+        "--out",
+        out_dir.to_str().unwrap(),
+    ]))
+    .unwrap();
+    assert!(out_dir.join("fig5.tsv").exists());
+    assert!(out_dir.join("fig5.md").exists());
+}
+
+#[test]
+fn artifacts_check_passes() {
+    // Requires `make artifacts` (guaranteed by the Makefile test target).
+    magquilt::cli::run(&args(&["artifacts-check"])).unwrap();
+}
+
+#[test]
+fn info_and_help_run() {
+    magquilt::cli::run(&args(&["info"])).unwrap();
+    magquilt::cli::run(&args(&["help"])).unwrap();
+    magquilt::cli::run(&[]).unwrap();
+}
+
+#[test]
+fn bad_input_is_an_error_not_a_panic() {
+    assert!(magquilt::cli::run(&args(&["generate", "--log2-nodes", "notanumber"])).is_err());
+    assert!(magquilt::cli::run(&args(&["generate", "--sampler", "bogus"])).is_err());
+    assert!(magquilt::cli::run(&args(&["stats"])).is_err());
+    assert!(magquilt::cli::run(&args(&["stats", "/nonexistent/file"])).is_err());
+    assert!(magquilt::cli::run(&args(&["experiment", "fig99"])).is_err());
+}
+
+#[test]
+fn config_file_generate() {
+    let cfg = tmp("model.toml");
+    std::fs::write(
+        &cfg,
+        r#"
+[model]
+theta = [0.35, 0.52, 0.52, 0.95]
+mu = 0.6
+log2_nodes = 8
+
+[run]
+seed = 11
+sampler = "hybrid"
+"#,
+    )
+    .unwrap();
+    magquilt::cli::run(&args(&["generate", "--config", cfg.to_str().unwrap()])).unwrap();
+}

@@ -1,0 +1,242 @@
+//! Integration: the AOT artifacts (JAX/Pallas → HLO text) executed by the
+//! PJRT runtime must agree numerically with the pure-Rust model — the
+//! L1/L2 ↔ L3 contract.
+//!
+//! These tests need `make artifacts` to have run (the Makefile's `test`
+//! target guarantees it).
+
+use magquilt::kpgm::{Initiator, ThetaSeq};
+use magquilt::magm::{self, AttributeAssignment, MagmParams};
+use magquilt::rng::Rng;
+use magquilt::runtime::{expected_out_degrees, naive_xla_sample, MagmKernels, XlaRuntime};
+
+fn runtime() -> XlaRuntime {
+    XlaRuntime::load_default().expect("run `make artifacts` before cargo test")
+}
+
+fn model(n: usize, d: u32, mu: f64) -> (MagmParams, AttributeAssignment) {
+    let params = MagmParams::homogeneous(Initiator::THETA1, mu, n, d);
+    let mut rng = Rng::new(11);
+    let attrs = AttributeAssignment::sample(&params, &mut rng);
+    (params, attrs)
+}
+
+#[test]
+fn edge_prob_block_matches_pure_rust() {
+    let rt = runtime();
+    for d in [1u32, 7, 16, 32] {
+        let (params, attrs) = model(300, d, 0.5);
+        let kernels = MagmKernels::new(&rt, params.thetas());
+        let src: Vec<u32> = (0..100).collect();
+        let dst: Vec<u32> = (100..300).collect();
+        let q = kernels.edge_prob_block(&attrs, &src, &dst).unwrap();
+        assert_eq!(q.len(), src.len() * dst.len());
+        for (r, &i) in src.iter().enumerate() {
+            for (c, &j) in dst.iter().enumerate() {
+                let want = magm::edge_probability(&params, &attrs, i, j);
+                let got = q[r * dst.len() + c] as f64;
+                assert!(
+                    (got - want).abs() < 1e-5,
+                    "d={d} cell ({i},{j}): {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn edge_prob_pairs_matches_pure_rust() {
+    let rt = runtime();
+    let (params, attrs) = model(500, 20, 0.7);
+    let kernels = MagmKernels::new(&rt, params.thetas());
+    let mut rng = Rng::new(13);
+    let pairs: Vec<(u32, u32)> =
+        (0..2000).map(|_| (rng.below(500) as u32, rng.below(500) as u32)).collect();
+    let q = kernels.edge_prob_pairs(&attrs, &pairs).unwrap();
+    for (idx, &(i, j)) in pairs.iter().enumerate() {
+        let want = magm::edge_probability(&params, &attrs, i, j);
+        assert!((q[idx] as f64 - want).abs() < 1e-5, "pair ({i},{j})");
+    }
+}
+
+#[test]
+fn heterogeneous_thetas_through_runtime() {
+    let rt = runtime();
+    let mut rng = Rng::new(17);
+    let levels: Vec<Initiator> = (0..9)
+        .map(|_| {
+            Initiator::new([
+                rng.uniform() * 0.9 + 0.05,
+                rng.uniform() * 0.9 + 0.05,
+                rng.uniform() * 0.9 + 0.05,
+                rng.uniform() * 0.9 + 0.05,
+            ])
+        })
+        .collect();
+    let thetas = ThetaSeq::new(levels);
+    let params = MagmParams::new(thetas.clone(), vec![0.5; 9], 200);
+    let attrs = AttributeAssignment::sample(&params, &mut rng);
+    let kernels = MagmKernels::new(&rt, &thetas);
+    let src: Vec<u32> = (0..50).collect();
+    let q = kernels.edge_prob_block(&attrs, &src, &src).unwrap();
+    for (r, &i) in src.iter().enumerate() {
+        for (c, &j) in src.iter().enumerate() {
+            let want = magm::edge_probability(&params, &attrs, i, j);
+            assert!((q[r * 50 + c] as f64 - want).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn expected_degree_contrib_matches_brute_force() {
+    let rt = runtime();
+    let (params, attrs) = model(128, 7, 0.5);
+    let kernels = MagmKernels::new(&rt, params.thetas());
+    let src: Vec<u32> = (0..64).collect();
+    let dst: Vec<u32> = (64..128).collect();
+    let counts: Vec<f32> = (0..64).map(|i| (i % 5 + 1) as f32).collect();
+    let got = kernels.expected_degree_contrib(&attrs, &src, &dst, &counts).unwrap();
+    for (r, &i) in src.iter().enumerate() {
+        let want: f64 = dst
+            .iter()
+            .zip(&counts)
+            .map(|(&j, &c)| c as f64 * magm::edge_probability(&params, &attrs, i, j))
+            .sum();
+        assert!(
+            (got[r] as f64 - want).abs() < 1e-3 * want.max(1.0),
+            "row {i}: {} vs {want}",
+            got[r]
+        );
+    }
+}
+
+#[test]
+fn expected_out_degrees_sum_matches_expected_edges() {
+    let rt = runtime();
+    let (params, attrs) = model(600, 10, 0.6);
+    let deg = expected_out_degrees(&rt, &params, &attrs).unwrap();
+    assert_eq!(deg.len(), 600);
+    let total: f64 = deg.iter().sum();
+    // Brute-force sum of Q over all pairs.
+    let mut want = 0.0;
+    for i in 0..600u32 {
+        for j in 0..600u32 {
+            want += magm::edge_probability(&params, &attrs, i, j);
+        }
+    }
+    assert!((total - want).abs() / want < 1e-4, "{total} vs {want}");
+}
+
+#[test]
+fn loglik_block_matches_pure_rust() {
+    let rt = runtime();
+    let (params, attrs) = model(96, 6, 0.5);
+    let kernels = MagmKernels::new(&rt, params.thetas());
+    let src: Vec<u32> = (0..48).collect();
+    let dst: Vec<u32> = (48..96).collect();
+    let mut rng = Rng::new(23);
+    let adj: Vec<f32> =
+        (0..src.len() * dst.len()).map(|_| rng.bernoulli(0.2) as u8 as f32).collect();
+    let got = kernels.loglik_block(&attrs, &src, &dst, &adj).unwrap();
+    let mut want = 0.0f64;
+    for (r, &i) in src.iter().enumerate() {
+        for (c, &j) in dst.iter().enumerate() {
+            let q = magm::edge_probability(&params, &attrs, i, j).clamp(1e-12, 1.0 - 1e-12);
+            let a = adj[r * dst.len() + c] as f64;
+            want += a * q.ln() + (1.0 - a) * (1.0 - q).ln();
+        }
+    }
+    assert!(
+        (got - want).abs() < 1e-3 * want.abs().max(1.0),
+        "{got} vs {want}"
+    );
+}
+
+#[test]
+fn naive_xla_sampler_rate_matches_expectation() {
+    let rt = runtime();
+    let (params, attrs) = model(700, 10, 0.5);
+    // E|E| for the fixed attrs via the runtime itself (validated above).
+    let deg = expected_out_degrees(&rt, &params, &attrs).unwrap();
+    let want: f64 = deg.iter().sum();
+    let trials = 10;
+    let mut total = 0usize;
+    let mut rng = Rng::new(29);
+    for _ in 0..trials {
+        let g = naive_xla_sample(&rt, &params, &attrs, &mut rng).unwrap();
+        assert!(g.validate().is_ok());
+        total += g.num_edges();
+    }
+    let mean = total as f64 / trials as f64;
+    let sigma = (want / trials as f64).sqrt();
+    assert!((mean - want).abs() < 6.0 * sigma, "mean={mean} want={want}");
+}
+
+#[test]
+fn manifest_contract_sane() {
+    let rt = runtime();
+    let m = rt.manifest();
+    assert!(m.d_pad >= 32);
+    assert_eq!(m.entries.len(), 4);
+    for name in ["edge_prob_block", "edge_prob_pairs", "expected_degree_contrib", "loglik_block"] {
+        assert!(m.entry(name).is_ok(), "missing {name}");
+    }
+}
+
+#[test]
+fn missing_artifacts_dir_is_helpful_error() {
+    let err = XlaRuntime::load(std::path::Path::new("/nonexistent/artifacts"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn wrong_input_arity_is_rejected() {
+    let rt = runtime();
+    let err = rt.execute_f32("edge_prob_block", &[&[0f32; 4]]).unwrap_err().to_string();
+    assert!(err.contains("expected 3 inputs"), "{err}");
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let rt = runtime();
+    let bad = vec![0f32; 7];
+    let m = rt.manifest();
+    let fs = vec![0f32; m.bm * m.d_pad];
+    let fd = vec![0f32; m.bn * m.d_pad];
+    let err = rt
+        .execute_f32("edge_prob_block", &[&fs, &fd, &bad])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("elements"), "{err}");
+}
+
+#[test]
+fn unknown_entry_is_rejected() {
+    let rt = runtime();
+    assert!(rt.execute_f32("no_such_entry", &[]).is_err());
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join("magquilt_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(XlaRuntime::load(&dir).is_err());
+}
+
+#[test]
+fn manifest_pointing_at_missing_hlo_is_rejected() {
+    let dir = std::env::temp_dir().join("magquilt_missing_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "d_pad": 32, "bm": 512, "bn": 512, "bp": 8192,
+            "entries": [{"name": "ghost", "file": "ghost.hlo.txt",
+                         "inputs": [], "outputs": []}]}"#,
+    )
+    .unwrap();
+    let err = XlaRuntime::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("ghost"), "{err}");
+}

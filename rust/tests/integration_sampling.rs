@@ -1,0 +1,165 @@
+//! Integration: cross-sampler agreement and whole-pipeline invariants.
+//!
+//! The four samplers (naive, quilt, hybrid, coordinated) implement the
+//! same model; their sampled graphs must agree statistically for fixed
+//! attribute assignments, across balanced and skewed μ.
+
+use magquilt::coordinator::Coordinator;
+use magquilt::graph::{Csr, EdgeList};
+use magquilt::kpgm::Initiator;
+use magquilt::magm::{naive_sample, AttributeAssignment, MagmParams};
+use magquilt::quilt::{HybridSampler, Partition, QuiltSampler};
+use magquilt::rng::Rng;
+use magquilt::stats::summarize;
+
+fn mean_edges<F: FnMut(u64) -> EdgeList>(trials: u64, mut f: F) -> f64 {
+    let mut total = 0usize;
+    for t in 0..trials {
+        total += f(t).num_edges();
+    }
+    total as f64 / trials as f64
+}
+
+#[test]
+fn all_samplers_agree_on_mean_edge_count() {
+    for &mu in &[0.5, 0.8] {
+        let n = 128;
+        let d = 7;
+        let params = MagmParams::homogeneous(Initiator::THETA1, mu, n, d);
+        let mut rng = Rng::new(31);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+
+        let trials = 40;
+        let p1 = params.clone();
+        let a1 = attrs.clone();
+        let naive = mean_edges(trials, move |t| {
+            let mut r = Rng::new(1000 + t);
+            naive_sample(&p1, &a1, &mut r)
+        });
+        let p2 = params.clone();
+        let a2 = attrs.clone();
+        let quilt =
+            mean_edges(trials, move |t| QuiltSampler::new(p2.clone()).seed(t).sample_with_attrs(&a2));
+        let p3 = params.clone();
+        let a3 = attrs.clone();
+        let hybrid = mean_edges(trials, move |t| {
+            HybridSampler::new(p3.clone()).seed(t).sample_with_attrs(&a3)
+        });
+
+        // naive is exact Bernoulli; quilting inherits Algorithm 1's
+        // normal-approximation, allow 8% relative.
+        assert!((quilt - naive).abs() / naive < 0.08, "mu={mu}: quilt {quilt} vs naive {naive}");
+        assert!(
+            (hybrid - naive).abs() / naive < 0.08,
+            "mu={mu}: hybrid {hybrid} vs naive {naive}"
+        );
+    }
+}
+
+#[test]
+fn coordinator_matches_sequential_at_scale() {
+    let d = 12;
+    let params = MagmParams::homogeneous(Initiator::THETA2, 0.5, 1 << d, d);
+    let report = Coordinator::new().sample_quilt(&params, 77);
+    let seq = QuiltSampler::new(params).seed(77).sample();
+    let mut a = report.graph.into_edges();
+    let mut b = seq.into_edges();
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn partition_size_stays_near_log2n_at_mu_half() {
+    // Theorem 4 (statistically): B <= log2 n whp; in practice much lower
+    // (paper Fig. 5). Check over several sizes/seeds with slack.
+    for d in [10u32, 12, 14] {
+        let n = 1usize << d;
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
+        for seed in 0..5 {
+            let mut rng = Rng::new(seed);
+            let attrs = AttributeAssignment::sample(&params, &mut rng);
+            let b = Partition::build(attrs.configs()).size();
+            assert!(b as u32 <= d + 2, "d={d} seed={seed}: B={b}");
+        }
+    }
+}
+
+#[test]
+fn partition_grows_like_n_mu_d_at_high_mu() {
+    // Fig. 6's regime: at mu = 0.9 the all-ones config dominates and
+    // B ≈ n mu^d.
+    let d = 10u32;
+    let n = 1usize << d;
+    let params = MagmParams::homogeneous(Initiator::THETA1, 0.9, n, d);
+    let mut rng = Rng::new(3);
+    let attrs = AttributeAssignment::sample(&params, &mut rng);
+    let b = Partition::build(attrs.configs()).size() as f64;
+    let approx = n as f64 * 0.9f64.powi(d as i32);
+    assert!(b > 0.5 * approx && b < 2.0 * approx, "B={b} vs n mu^d = {approx:.1}");
+}
+
+#[test]
+fn generated_graph_statistics_are_consistent() {
+    let d = 12;
+    let n = 1usize << d;
+    let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
+    let g = QuiltSampler::new(params.clone()).seed(8).sample();
+    let s = summarize(&g, 500, 9);
+    assert_eq!(s.num_nodes, n);
+    assert!(s.num_edges > 0);
+    assert!(s.scc_fraction > 0.0 && s.scc_fraction <= 1.0);
+    assert!(s.wcc_fraction >= s.scc_fraction);
+    assert!((s.mean_degree - s.num_edges as f64 / n as f64).abs() < 1e-9);
+    // |E| should be within a factor ~2 of the analytic expectation over
+    // attribute draws.
+    let expect = params.expected_edges();
+    let ratio = s.num_edges as f64 / expect;
+    assert!(ratio > 0.4 && ratio < 2.5, "edges {} vs E {expect}", s.num_edges);
+}
+
+#[test]
+fn scc_fraction_increases_with_n() {
+    // Paper Fig. 9's shape: fraction of nodes in the largest SCC grows.
+    let frac = |d: u32| -> f64 {
+        let n = 1usize << d;
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
+        let g = QuiltSampler::new(params).seed(19).sample();
+        let csr = Csr::from_edge_list(&g);
+        magquilt::graph::largest_scc_size(&csr) as f64 / n as f64
+    };
+    let small = frac(7);
+    let large = frac(13);
+    assert!(
+        large > small,
+        "SCC fraction should grow with n: {small:.3} -> {large:.3}"
+    );
+    assert!(large > 0.5, "large-n SCC fraction should approach 1: {large:.3}");
+}
+
+#[test]
+fn hybrid_handles_extreme_mu_zero_and_one() {
+    for &mu in &[0.0, 1.0] {
+        let params = MagmParams::homogeneous(Initiator::THETA1, mu, 256, 8);
+        let g = HybridSampler::new(params.clone()).seed(1).sample();
+        assert!(g.validate().is_ok());
+        // all nodes share one config -> Q is constant = theta^d on that
+        // config; check edge density roughly.
+        let c: u64 = if mu == 1.0 { (1 << 8) - 1 } else { 0 };
+        let p = magquilt::kpgm::edge_probability(params.thetas(), c as u32, c as u32);
+        let want = p * 256.0 * 256.0;
+        let got = g.num_edges() as f64;
+        let sigma = (want.max(1.0)).sqrt();
+        assert!((got - want).abs() < 6.0 * sigma + 3.0, "mu={mu}: {got} vs {want}");
+    }
+}
+
+#[test]
+fn quilt_sampler_single_node_and_tiny_graphs() {
+    for n in [1usize, 2, 3] {
+        let params = MagmParams::homogeneous(Initiator::THETA2, 0.5, n, 4);
+        let g = QuiltSampler::new(params).seed(5).sample();
+        assert_eq!(g.num_nodes(), n);
+        assert!(g.validate().is_ok());
+    }
+}
