@@ -1,5 +1,7 @@
 //! Partition benchmark — the series behind paper Figures 5 and 6: the
-//! size B of the minimal partition and the cost of building it.
+//! size B of the minimal partition and the cost of building it, plus the
+//! conditioned-piece setup costs (per-set prefix tries and the shared
+//! product DAG with its per-piece restricted masses).
 
 use std::time::Instant;
 
@@ -11,8 +13,11 @@ use magquilt::rng::Rng;
 fn main() {
     let fast = std::env::var("MAGQUILT_BENCH_FAST").is_ok();
     let d_max = if fast { 14 } else { 20 };
-    println!("# bench: partition build (paper Fig. 5/6)");
-    println!("{:>5} {:>10} {:>5} {:>6} {:>12} {:>12}", "mu", "n", "d", "B", "build_ms", "ns/node");
+    println!("# bench: partition + conditioned-piece setup (paper Fig. 5/6)");
+    println!(
+        "{:>5} {:>10} {:>5} {:>6} {:>12} {:>12} {:>10} {:>10} {:>12}",
+        "mu", "n", "d", "B", "build_ms", "ns/node", "trie_ms", "dag_ms", "pair_nodes"
+    );
     for &mu in &[0.5, 0.7, 0.9] {
         for d in (8..=d_max).step_by(4) {
             let n = 1usize << d;
@@ -20,16 +25,28 @@ fn main() {
             let mut rng = Rng::new(d as u64);
             let attrs = AttributeAssignment::sample(&params, &mut rng);
             let start = Instant::now();
-            let p = Partition::build(attrs.configs());
+            let mut p = Partition::build(attrs.configs());
             let ms = start.elapsed().as_secs_f64() * 1e3;
+
+            let start = Instant::now();
+            p.build_tries(d as usize);
+            let trie_ms = start.elapsed().as_secs_f64() * 1e3;
+
+            let start = Instant::now();
+            let cond = p.conditioned_sampler(params.thetas());
+            let dag_ms = start.elapsed().as_secs_f64() * 1e3;
+
             println!(
-                "{:>5.2} {:>10} {:>5} {:>6} {:>12.2} {:>12.1}",
+                "{:>5.2} {:>10} {:>5} {:>6} {:>12.2} {:>12.1} {:>10.2} {:>10.2} {:>12}",
                 mu,
                 n,
                 d,
                 p.size(),
                 ms,
-                ms * 1e6 / n as f64
+                ms * 1e6 / n as f64,
+                trie_ms,
+                dag_ms,
+                cond.num_pair_nodes()
             );
         }
     }

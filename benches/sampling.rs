@@ -1,5 +1,7 @@
 //! End-to-end sampling bench — regenerates the series behind paper
-//! Figures 10 and 11 (quilting vs naive runtime, and per-edge cost).
+//! Figures 10 and 11 (quilting vs naive runtime, and per-edge cost), plus
+//! the conditioned-vs-rejection piece sweep over partition size B
+//! (summary emitted to `BENCH_quilt.json` for the perf trajectory).
 //!
 //! `MAGQUILT_BENCH_FAST=1` shrinks the sweep for smoke runs.
 
@@ -8,11 +10,82 @@ use std::time::Instant;
 use magquilt::coordinator::Coordinator;
 use magquilt::kpgm::Initiator;
 use magquilt::magm::{naive_sample, AttributeAssignment, MagmParams};
-use magquilt::quilt::{HybridSampler, QuiltSampler};
+use magquilt::quilt::{HybridSampler, PieceMode, QuiltSampler};
 use magquilt::rng::Rng;
 
 fn fast() -> bool {
     std::env::var("MAGQUILT_BENCH_FAST").is_ok()
+}
+
+/// Attribute assignment with exactly `b`-fold multiplicity for each of
+/// `c_distinct` random distinct configs: partition size is exactly B = b.
+fn attrs_with_b(b: usize, c_distinct: usize, d: usize, seed: u64) -> AttributeAssignment {
+    let mut rng = Rng::new(seed);
+    let mut set = std::collections::HashSet::new();
+    while set.len() < c_distinct {
+        set.insert(rng.below(1u64 << d));
+    }
+    let mut cfgs: Vec<u64> = set.into_iter().collect();
+    cfgs.sort_unstable();
+    let mut configs = Vec::with_capacity(b * c_distinct);
+    for &c in &cfgs {
+        configs.extend(std::iter::repeat(c).take(b));
+    }
+    AttributeAssignment::from_configs(configs, d as u32)
+}
+
+/// Conditioned-vs-rejection piece benchmark sweeping partition size B.
+fn piece_mode_sweep() {
+    let d = 12usize;
+    let (bs, c_distinct, trials): (&[usize], usize, u64) =
+        if fast() { (&[4, 16], 64, 2) } else { (&[4, 16, 64], 192, 3) };
+    println!("\n# bench: conditioned vs rejection pieces (theta1, d={d}, B sweep)");
+    println!(
+        "{:>4} {:>8} {:>8} {:>12} {:>12} {:>10}",
+        "B", "n", "edges", "cond_ms", "rej_ms", "speedup"
+    );
+    let mut rows = Vec::new();
+    for &b in bs {
+        let n = b * c_distinct;
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d as u32);
+        let attrs = attrs_with_b(b, c_distinct, d, b as u64);
+        let time_mode = |mode: PieceMode| -> (f64, usize) {
+            let mut ms = Vec::new();
+            let mut edges = 0usize;
+            for t in 0..trials {
+                let start = Instant::now();
+                let g = QuiltSampler::new(params.clone())
+                    .piece_mode(mode)
+                    .seed(t)
+                    .sample_with_attrs(&attrs);
+                ms.push(start.elapsed().as_secs_f64() * 1e3);
+                edges = g.num_edges();
+            }
+            (median(&mut ms), edges)
+        };
+        let (cond, cond_edges) = time_mode(PieceMode::Conditioned);
+        let (rej, rej_edges) = time_mode(PieceMode::Rejection);
+        let speedup = rej / cond.max(1e-9);
+        println!(
+            "{:>4} {:>8} {:>8} {:>12.2} {:>12.2} {:>9.1}x",
+            b, n, cond_edges, cond, rej, speedup
+        );
+        rows.push(format!(
+            "    {{\"b\": {b}, \"n\": {n}, \"edges_conditioned\": {cond_edges}, \
+             \"edges_rejection\": {rej_edges}, \
+             \"conditioned_ms\": {cond:.3}, \"rejection_ms\": {rej:.3}, \
+             \"speedup\": {speedup:.2}}}"
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"quilt_piece_modes\",\n  \"theta\": \"theta1\",\n  \
+         \"mu\": 0.5,\n  \"d\": {d},\n  \"trials\": {trials},\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_quilt.json", &json) {
+        Ok(()) => println!("wrote BENCH_quilt.json"),
+        Err(e) => eprintln!("could not write BENCH_quilt.json: {e}"),
+    }
 }
 
 fn main() {
@@ -81,6 +154,7 @@ fn main() {
             );
         }
     }
+    piece_mode_sweep();
 }
 
 fn median(xs: &mut [f64]) -> f64 {

@@ -4,8 +4,8 @@
 //! ```text
 //! magquilt generate [--config F] [--log2-nodes N] [--attributes D]
 //!                   [--mu MU] [--theta a,b,c,d] [--sampler KIND]
-//!                   [--seed S] [--workers W] [--output PATH] [--binary]
-//!                   [--stats]
+//!                   [--piece-mode MODE] [--seed S] [--workers W]
+//!                   [--output PATH] [--binary] [--stats]
 //! magquilt stats <edge-list file>
 //! magquilt experiment <fig1|fig5|...|fig14|all> [--max-log2n N]
 //!                   [--naive-max-log2n N] [--trials T] [--seed S]
@@ -19,7 +19,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::{load_config, ModelSpec, RunSpec, SamplerKind};
+use crate::config::{load_config, parse_piece_mode, ModelSpec, RunSpec, SamplerKind};
 use crate::coordinator::Coordinator;
 use crate::experiments::{run_experiment, Scale, ALL_EXPERIMENTS};
 use crate::graph::{read_edge_list_binary, read_edge_list_text, write_edge_list_binary,
@@ -98,8 +98,8 @@ magquilt — quilting sampler for Multiplicative Attribute Graphs
 USAGE:
     magquilt generate [--config F] [--log2-nodes N] [--attributes D]
                       [--mu MU] [--theta a,b,c,d] [--sampler KIND]
-                      [--seed S] [--workers W] [--output PATH] [--binary]
-                      [--stats]
+                      [--piece-mode MODE] [--seed S] [--workers W]
+                      [--output PATH] [--binary] [--stats]
     magquilt stats <edge-list file>
     magquilt experiment <id|all> [--max-log2n N] [--naive-max-log2n N]
                       [--trials T] [--seed S] [--out DIR]
@@ -107,6 +107,7 @@ USAGE:
     magquilt info
 
 SAMPLERS: quilt (Algorithm 2) | hybrid (§5) | naive | naive-xla
+PIECE MODES: conditioned (rejection-free, default) | rejection (paper-literal)
 EXPERIMENTS: fig1 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14 | all
 ";
 
@@ -169,6 +170,9 @@ fn specs_from_args(args: &Args) -> Result<(ModelSpec, RunSpec)> {
     if let Some(s) = args.get("sampler") {
         run.sampler = SamplerKind::parse(s)?;
     }
+    if let Some(s) = args.get("piece-mode") {
+        run.piece_mode = parse_piece_mode(s)?;
+    }
     if let Some(o) = args.get("output") {
         run.output = Some(o.to_string());
     }
@@ -191,12 +195,13 @@ fn cmd_generate(raw: &[String]) -> Result<()> {
     let (model, run) = specs_from_args(&args)?;
     let params = model_params(&model);
     eprintln!(
-        "model: n=2^{} d={} mu={} theta={:?} | sampler={} seed={}",
+        "model: n=2^{} d={} mu={} theta={:?} | sampler={} pieces={} seed={}",
         model.log2_nodes,
         model.attributes,
         model.mu,
         model.theta,
         run.sampler.name(),
+        run.piece_mode.name(),
         run.seed
     );
     let start = std::time::Instant::now();
@@ -230,14 +235,36 @@ fn cmd_generate(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Warn when balls were abandoned after exhausting duplicate resamples
+/// (saturated blocks; the count used to be silently lost).
+fn warn_dropped(report: &crate::coordinator::SampleReport) {
+    if report.dropped_resamples > 0 {
+        eprintln!(
+            "warning: {} ball(s) abandoned after exhausting duplicate resamples \
+             (saturated blocks)",
+            report.dropped_resamples
+        );
+    }
+}
+
 /// Dispatch to the selected sampler.
 pub fn sample_with(params: &MagmParams, run: &RunSpec) -> Result<EdgeList> {
     Ok(match run.sampler {
         SamplerKind::Quilt => {
-            Coordinator::new().workers(run.workers).sample_quilt(params, run.seed).graph
+            let report = Coordinator::new()
+                .workers(run.workers)
+                .piece_mode(run.piece_mode)
+                .sample_quilt(params, run.seed);
+            warn_dropped(&report);
+            report.graph
         }
         SamplerKind::Hybrid => {
-            Coordinator::new().workers(run.workers).sample_hybrid(params, run.seed).graph
+            let report = Coordinator::new()
+                .workers(run.workers)
+                .piece_mode(run.piece_mode)
+                .sample_hybrid(params, run.seed);
+            warn_dropped(&report);
+            report.graph
         }
         SamplerKind::Naive => {
             let mut rng = Rng::new(run.seed);
@@ -379,7 +406,7 @@ mod tests {
     fn specs_from_cli_overrides() {
         let a = Args::parse(
             &s(&["--log2-nodes", "8", "--mu", "0.7", "--theta", "0.1,0.2,0.3,0.4",
-                 "--sampler", "hybrid", "--seed", "5"]),
+                 "--sampler", "hybrid", "--piece-mode", "rejection", "--seed", "5"]),
             &[],
         )
         .unwrap();
@@ -389,7 +416,14 @@ mod tests {
         assert_eq!(model.mu, 0.7);
         assert_eq!(model.theta, [0.1, 0.2, 0.3, 0.4]);
         assert_eq!(run.sampler, SamplerKind::Hybrid);
+        assert_eq!(run.piece_mode, crate::quilt::PieceMode::Rejection);
         assert_eq!(run.seed, 5);
+    }
+
+    #[test]
+    fn bad_piece_mode_rejected() {
+        let a = Args::parse(&s(&["--piece-mode", "bogus"]), &[]).unwrap();
+        assert!(specs_from_args(&a).is_err());
     }
 
     #[test]

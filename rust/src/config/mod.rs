@@ -15,13 +15,14 @@
 //! seed = 42
 //! workers = 4
 //! sampler = "quilt"                 # quilt | hybrid | naive | naive-xla
+//! piece_mode = "conditioned"        # conditioned | rejection
 //! output = "out/graph.bin"
 //! ```
 
 mod spec;
 mod toml;
 
-pub use spec::{ModelSpec, RunSpec, SamplerKind};
+pub use spec::{parse_piece_mode, ModelSpec, RunSpec, SamplerKind};
 pub use toml::{parse_toml, TomlValue};
 
 use std::collections::BTreeMap;

@@ -4,7 +4,15 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::quilt::PieceMode;
+
 use super::TomlValue;
+
+/// Parse a quilt-piece mode from the CLI / config spelling.
+pub fn parse_piece_mode(s: &str) -> Result<PieceMode> {
+    PieceMode::parse(s)
+        .ok_or_else(|| anyhow!("unknown piece mode {s:?} (expected conditioned|rejection)"))
+}
 
 /// Which sampler implementation to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,6 +136,9 @@ pub struct RunSpec {
     pub workers: usize,
     /// Sampler implementation.
     pub sampler: SamplerKind,
+    /// How quilt pieces place balls (conditioned = rejection-free default;
+    /// rejection = the paper's literal sample-then-filter, for A/B runs).
+    pub piece_mode: PieceMode,
     /// Optional output path for the sampled edge list.
     pub output: Option<String>,
     /// Number of repeated samples (experiments average over trials).
@@ -135,9 +146,17 @@ pub struct RunSpec {
 }
 
 impl RunSpec {
-    /// Defaults: seed 42, auto workers, quilt sampler, 1 trial.
+    /// Defaults: seed 42, auto workers, quilt sampler with conditioned
+    /// pieces, 1 trial.
     pub fn default_spec() -> Self {
-        RunSpec { seed: 42, workers: 0, sampler: SamplerKind::Quilt, output: None, trials: 1 }
+        RunSpec {
+            seed: 42,
+            workers: 0,
+            sampler: SamplerKind::Quilt,
+            piece_mode: PieceMode::Conditioned,
+            output: None,
+            trials: 1,
+        }
     }
 
     /// Parse from a `[run]` section (missing section = all defaults).
@@ -154,6 +173,11 @@ impl RunSpec {
         if let Some(v) = sec.get("sampler") {
             spec.sampler = SamplerKind::parse(
                 v.as_str().ok_or_else(|| anyhow!("run.sampler must be a string"))?,
+            )?;
+        }
+        if let Some(v) = sec.get("piece_mode") {
+            spec.piece_mode = parse_piece_mode(
+                v.as_str().ok_or_else(|| anyhow!("run.piece_mode must be a string"))?,
             )?;
         }
         if let Some(v) = sec.get("output") {
@@ -198,6 +222,15 @@ mod tests {
     fn validation_rejects_bad_mu() {
         let m = parse_toml("[model]\nmu = -0.1\n").unwrap();
         assert!(ModelSpec::from_section(m.get("model")).is_err());
+    }
+
+    #[test]
+    fn piece_mode_parses_from_config() {
+        let m = parse_toml("[run]\npiece_mode = \"rejection\"\n").unwrap();
+        let spec = RunSpec::from_section(m.get("run")).unwrap();
+        assert_eq!(spec.piece_mode, PieceMode::Rejection);
+        assert_eq!(RunSpec::default_spec().piece_mode, PieceMode::Conditioned);
+        assert!(parse_piece_mode("bogus").is_err());
     }
 
     #[test]

@@ -8,6 +8,9 @@
 //! leader/worker design:
 //!
 //! * the **leader** builds a [`JobPlan`] (piece jobs + block jobs),
+//!   ordered by estimated cost — for conditioned plans the per-piece
+//!   **restricted mass** `m_kl`, not the uniform full-space ball count —
+//!   so the heaviest pieces start first and the pool drains evenly,
 //! * **workers** (std threads) pull jobs from a shared queue and emit
 //!   per-job edge batches into a bounded channel (backpressure: workers
 //!   block when the merger falls behind),

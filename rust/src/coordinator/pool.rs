@@ -1,13 +1,14 @@
 //! The worker pool and job plan.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::graph::{EdgeList, NodeId};
-use crate::kpgm::BallDropSampler;
+use crate::kpgm::{BallDropSampler, ConditionedBallDropSampler};
 use crate::magm::{AttributeAssignment, MagmParams};
-use crate::quilt::{sample_er_block, HybridPlan, HybridSampler, Partition, PieceJob, QuiltSampler};
+use crate::quilt::{sample_er_block, HybridPlan, HybridSampler, Partition, PieceBackend,
+                   PieceJob, PieceMode, QuiltSampler};
 use crate::rng::Rng;
 
 /// Reference to a node block in a hybrid plan.
@@ -36,6 +37,9 @@ pub struct JobPlan {
     hybrid: Option<HybridPlan>,
     params: MagmParams,
     seed: u64,
+    mode: PieceMode,
+    /// The shared product DAG for [`PieceMode::Conditioned`] plans.
+    conditioner: Option<ConditionedBallDropSampler>,
 }
 
 impl JobPlan {
@@ -52,6 +56,53 @@ impl JobPlan {
     /// Partition size B of the quilting part.
     pub fn partition_size(&self) -> usize {
         self.partition.size()
+    }
+
+    /// The piece mode this plan was built for.
+    pub fn piece_mode(&self) -> PieceMode {
+        self.mode
+    }
+
+    /// Expected work of one job, used to order the queue (largest first)
+    /// so the pool keeps all workers busy to the end.
+    ///
+    /// * Conditioned pieces cost their **restricted mass** `m_kl` (the
+    ///   balls actually dropped) — not the full-space `X`, which would
+    ///   treat every piece as equally heavy.
+    /// * Rejection pieces all drop the same full-space `X`.
+    /// * ER blocks cost their expected success count `p · cells`.
+    fn estimated_cost(&self, job: &Job) -> f64 {
+        match *job {
+            Job::Piece(p) => match self.conditioner.as_ref().and_then(|c| c.piece(p.k, p.l)) {
+                Some(piece) => 1.0 + piece.restricted_mass(),
+                // Rejection pieces (and dense over-budget blocks) all
+                // drop the same full-space X.
+                None => 1.0 + self.params.thetas().expected_edges(),
+            },
+            Job::ErBlock { src, dst, .. } => {
+                let Some(hybrid) = self.hybrid.as_ref() else { return 1.0 };
+                let (ci, nodes_i) = block(hybrid, src);
+                let (cj, nodes_j) = block(hybrid, dst);
+                let p = crate::kpgm::edge_probability(
+                    self.params.thetas(),
+                    ci as NodeId,
+                    cj as NodeId,
+                );
+                1.0 + p * nodes_i.len() as f64 * nodes_j.len() as f64
+            }
+        }
+    }
+
+    /// Sort jobs by descending estimated cost (stable: ties keep plan
+    /// order). Fork ids travel with their jobs, so the sampled edge set
+    /// is unchanged — only the schedule improves.
+    fn order_by_cost(&mut self) {
+        let costs: Vec<f64> = self.jobs.iter().map(|j| self.estimated_cost(j)).collect();
+        let mut order: Vec<usize> = (0..self.jobs.len()).collect();
+        order.sort_by(|&a, &b| {
+            costs[b].partial_cmp(&costs[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        self.jobs = order.into_iter().map(|i| self.jobs[i]).collect();
     }
 }
 
@@ -70,6 +121,9 @@ pub struct SampleReport {
     pub wall_ms: f64,
     /// Edges per second of wall time (post-dedup edges).
     pub edges_per_sec: f64,
+    /// Balls abandoned after exhausting duplicate resamples (previously
+    /// lost silently; 0 in healthy runs, non-zero signals saturation).
+    pub dropped_resamples: u64,
 }
 
 /// The leader/worker coordinator.
@@ -77,6 +131,7 @@ pub struct SampleReport {
 pub struct Coordinator {
     workers: usize,
     channel_capacity: usize,
+    piece_mode: PieceMode,
 }
 
 impl Default for Coordinator {
@@ -90,7 +145,7 @@ impl Coordinator {
     /// more thread).
     pub fn new() -> Self {
         let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(16);
-        Coordinator { workers, channel_capacity: 64 }
+        Coordinator { workers, channel_capacity: 64, piece_mode: PieceMode::default() }
     }
 
     /// Set the worker count (0 = auto).
@@ -107,6 +162,13 @@ impl Coordinator {
         self
     }
 
+    /// Set the quilt-piece mode (defaults to [`PieceMode::Conditioned`],
+    /// matching the sequential samplers).
+    pub fn piece_mode(mut self, mode: PieceMode) -> Self {
+        self.piece_mode = mode;
+        self
+    }
+
     /// Plan the quilting jobs (Algorithm 2 pieces only).
     pub fn plan_quilt(
         &self,
@@ -116,9 +178,30 @@ impl Coordinator {
     ) -> JobPlan {
         let mut partition = Partition::build(attrs.configs());
         crate::quilt::maybe_build_dense_index(&mut partition, params.depth());
+        let conditioner = self.build_conditioner(&mut partition, params);
         let sampler = QuiltSampler::new(params.clone());
         let jobs = sampler.plan(&partition).into_iter().map(Job::Piece).collect();
-        JobPlan { jobs, partition, hybrid: None, params: params.clone(), seed }
+        let mut plan = JobPlan {
+            jobs,
+            partition,
+            hybrid: None,
+            params: params.clone(),
+            seed,
+            mode: self.piece_mode,
+            conditioner,
+        };
+        plan.order_by_cost();
+        plan
+    }
+
+    /// Build tries + the shared product DAG when running conditioned.
+    fn build_conditioner(
+        &self,
+        partition: &mut Partition,
+        params: &MagmParams,
+    ) -> Option<ConditionedBallDropSampler> {
+        (self.piece_mode == PieceMode::Conditioned)
+            .then(|| partition.conditioned_sampler(params.thetas()))
     }
 
     /// Plan the §5 hybrid jobs: W-subset pieces + ER blocks.
@@ -133,6 +216,7 @@ impl Coordinator {
         let w_nodes = plan.w_nodes();
         let mut partition = Partition::build_subset(attrs.configs(), &w_nodes);
         crate::quilt::maybe_build_dense_index(&mut partition, params.depth());
+        let conditioner = self.build_conditioner(&mut partition, params);
         let mut jobs: Vec<Job> = QuiltSampler::new(params.clone())
             .plan(&partition)
             .into_iter()
@@ -165,7 +249,17 @@ impl Coordinator {
                 er_id += 1;
             }
         }
-        JobPlan { jobs, partition, hybrid: Some(plan), params: params.clone(), seed }
+        let mut job_plan = JobPlan {
+            jobs,
+            partition,
+            hybrid: Some(plan),
+            params: params.clone(),
+            seed,
+            mode: self.piece_mode,
+            conditioner,
+        };
+        job_plan.order_by_cost();
+        job_plan
     }
 
     /// Sample a MAGM graph with Algorithm 2 across the pool.
@@ -203,6 +297,7 @@ impl Coordinator {
         let er_base = Rng::new(plan.seed).fork(0xe4b10c);
 
         let next_job = AtomicUsize::new(0);
+        let dropped_total = AtomicU64::new(0);
         let (tx, rx) = mpsc::sync_channel::<Vec<(NodeId, NodeId)>>(self.channel_capacity);
 
         let mut graph = EdgeList::new(n);
@@ -210,6 +305,7 @@ impl Coordinator {
             let plan_ref = &plan;
             let kpgm_ref = &kpgm;
             let next = &next_job;
+            let dropped_ref = &dropped_total;
             let piece_base_ref = &piece_base;
             let er_base_ref = &er_base;
             for _ in 0..workers {
@@ -221,14 +317,23 @@ impl Coordinator {
                         let mut local = EdgeList::new(n);
                         match *job {
                             Job::Piece(piece) => {
+                                let backend = match plan_ref.conditioner.as_ref() {
+                                    Some(cond) => {
+                                        PieceBackend::Conditioned { cond, kpgm: kpgm_ref }
+                                    }
+                                    None => PieceBackend::Rejection(kpgm_ref),
+                                };
                                 let mut rng = piece_base_ref.fork(piece.fork_id);
-                                crate::quilt::sample_piece_for_coordinator(
-                                    kpgm_ref,
+                                let dropped = crate::quilt::sample_piece_for_coordinator(
+                                    backend,
                                     &plan_ref.partition,
                                     piece,
                                     &mut rng,
                                     &mut local,
                                 );
+                                if dropped > 0 {
+                                    dropped_ref.fetch_add(dropped, Ordering::Relaxed);
+                                }
                             }
                             Job::ErBlock { src, dst, fork_id } => {
                                 let hybrid =
@@ -268,6 +373,7 @@ impl Coordinator {
             workers,
             wall_ms,
             edges_per_sec,
+            dropped_resamples: dropped_total.into_inner(),
         }
     }
 }
@@ -334,6 +440,45 @@ mod tests {
         assert!(rep.num_jobs >= rep.partition_size * rep.partition_size);
         assert!(rep.edges_per_sec > 0.0);
         assert!(rep.graph.validate().is_ok());
+        // Healthy (unsaturated) runs abandon essentially no balls.
+        assert!(rep.dropped_resamples <= 2, "dropped {}", rep.dropped_resamples);
+    }
+
+    #[test]
+    fn rejection_mode_coordinated_equals_sequential() {
+        let p = params(256, 8, 0.5);
+        let seq =
+            QuiltSampler::new(p.clone()).piece_mode(PieceMode::Rejection).seed(41).sample();
+        let rep =
+            Coordinator::new().workers(4).piece_mode(PieceMode::Rejection).sample_quilt(&p, 41);
+        let mut a = seq.into_edges();
+        let mut b = rep.graph.into_edges();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cost_ordering_keeps_edge_set() {
+        // The plan sorts pieces by restricted mass; the sampled edges must
+        // be schedule-independent regardless.
+        let p = params(200, 8, 0.7);
+        let mut rng = Rng::new(3);
+        let attrs = AttributeAssignment::sample(&p, &mut rng);
+        let coord = Coordinator::new().workers(2);
+        let plan = coord.plan_quilt(&p, &attrs, 3);
+        assert_eq!(plan.piece_mode(), PieceMode::Conditioned);
+        assert!(!plan.is_empty());
+        // Costs must be non-increasing along the job queue.
+        let costs: Vec<f64> = plan.jobs.iter().map(|j| plan.estimated_cost(j)).collect();
+        assert!(costs.windows(2).all(|w| w[0] >= w[1]), "jobs not cost-ordered: {costs:?}");
+        let rep = coord.run(plan);
+        let seq = QuiltSampler::new(p).seed(3).sample_with_attrs(&attrs);
+        let mut a = seq.into_edges();
+        let mut b = rep.graph.into_edges();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
     }
 
     #[test]

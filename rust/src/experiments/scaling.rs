@@ -4,7 +4,7 @@ use std::time::Instant;
 
 use crate::kpgm::Initiator;
 use crate::magm::{naive_sample, AttributeAssignment, MagmParams};
-use crate::quilt::{HybridSampler, Partition, QuiltSampler};
+use crate::quilt::{HybridSampler, Partition, PieceMode, QuiltSampler};
 use crate::rng::Rng;
 use crate::stats::mean;
 
@@ -81,11 +81,20 @@ pub(crate) struct TimedRun {
 }
 
 pub(crate) fn time_quilt(params: &MagmParams, trials: u32, seed: u64) -> TimedRun {
+    time_quilt_mode(params, trials, seed, PieceMode::Conditioned)
+}
+
+pub(crate) fn time_quilt_mode(
+    params: &MagmParams,
+    trials: u32,
+    seed: u64,
+    mode: PieceMode,
+) -> TimedRun {
     let mut times = Vec::new();
     let mut edges = Vec::new();
     for t in 0..trials {
         let start = Instant::now();
-        let g = QuiltSampler::new(params.clone()).seed(seed + t as u64).sample();
+        let g = QuiltSampler::new(params.clone()).piece_mode(mode).seed(seed + t as u64).sample();
         times.push(start.elapsed().as_secs_f64() * 1e3);
         edges.push(g.num_edges() as f64);
     }
@@ -124,14 +133,16 @@ pub(crate) fn time_naive(params: &MagmParams, trials: u32, seed: u64) -> TimedRu
 pub fn fig10_runtime_comparison(scale: Scale) -> ExperimentResult {
     let mut out = ExperimentResult::new(
         "fig10",
-        "runtime (ms): quilting vs naive, mu = 0.5",
-        &["theta", "log2_n", "n", "quilt_ms", "naive_ms", "speedup"],
+        "runtime (ms): quilting (conditioned + rejection pieces) vs naive, mu = 0.5",
+        &["theta", "log2_n", "n", "quilt_ms", "quilt_rej_ms", "cond_speedup", "naive_ms", "speedup"],
     );
     for (name, theta) in [("theta1", Initiator::THETA1), ("theta2", Initiator::THETA2)] {
         for d in 6..=scale.max_log2n {
             let n = 1usize << d;
             let params = MagmParams::homogeneous(theta, 0.5, n, d);
             let q = time_quilt(&params, scale.trials, scale.seed);
+            let rej =
+                time_quilt_mode(&params, scale.trials.min(3), scale.seed, PieceMode::Rejection);
             let (naive_ms, speedup) = if d <= scale.naive_max_log2n {
                 let nv = time_naive(&params, scale.trials.min(3), scale.seed);
                 (format!("{:.2}", nv.ms), format!("{:.1}", nv.ms / q.ms.max(1e-9)))
@@ -143,6 +154,8 @@ pub fn fig10_runtime_comparison(scale: Scale) -> ExperimentResult {
                 d.to_string(),
                 n.to_string(),
                 format!("{:.2}", q.ms),
+                format!("{:.2}", rej.ms),
+                format!("{:.1}", rej.ms / q.ms.max(1e-9)),
                 naive_ms,
                 speedup,
             ]);

@@ -1,0 +1,656 @@
+//! Conditioned (block-restricted) ball dropping: a rejection-free variant
+//! of Algorithm 1 for quilt pieces.
+//!
+//! The quilting sampler (paper Algorithm 2) keeps, from each full-space
+//! KPGM sample, only the edges whose endpoints are configurations present
+//! in a partition-set pair `(D_k, D_l)`. Sampling the full `2^d × 2^d`
+//! space and filtering costs `O(B² · d · |E_KPGM|)` while the retained
+//! output is only `O(|E|)`: the acceptance rate collapses as `B` grows.
+//!
+//! This module removes the rejection loop. Following the conditioning view
+//! of the ball-dropping process (Yun & Vishwanathan, arXiv:1202.6001) the
+//! quadrisection descent is restricted to the *reachable* configuration
+//! pairs: at every level the four `θ`-quadrant weights are renormalized by
+//! the probability mass of the block cells below each quadrant, so each
+//! leaf `(x, y) ∈ C_k × C_l` is reached with probability exactly
+//! `P[x, y] / m_kl` where `m_kl = Σ_{(x,y) ∈ C_k × C_l} P[x, y]` is the
+//! restricted mass. The per-piece edge count is then drawn from
+//! `Poisson(m_kl)` clamped to `|C_k|·|C_l|` cells — the sparse limit of
+//! the full-space process's retained count, which keeps the conditioned
+//! path cell-by-cell consistent with Algorithm 1's (see
+//! [`PieceSampler::draw_edge_count`]).
+//!
+//! Data structures:
+//!
+//! * [`ConfigForest`] — a hash-consed binary prefix trie over attribute
+//!   configurations. Isomorphic suffix sets are merged into *classes*
+//!   (one interner per level), so the `B` nested sets of a quilt partition
+//!   share almost all of their structure. Each registered set is a
+//!   [`ConfigTrie`]: a root class plus per-level reachability bitmasks.
+//! * [`ConditionedBallDropSampler`] — the product DAG over (row-class,
+//!   col-class) pairs reachable from any of the `B²` piece roots, built
+//!   once per partition. Every pair node stores the four child links and
+//!   cumulative u64 quadrant thresholds (the same one-`next_u64`-per-level
+//!   trick as [`super::BallDropSampler::drop_one`]), and the restricted
+//!   mass / squared mass are aggregated bottom-up in the same pass.
+//!   Because classes are shared, the `B²` pieces price in roughly one
+//!   product DAG, not `B²` of them.
+//!
+//! Complexity: setup is `O(d · Σ_k |C_k|)` for the forest plus the product
+//! DAG size (bounded by the reachable class pairs, which hash-consing
+//! keeps near the largest single piece); each drop is `O(d)` with zero
+//! rejections; each piece draws `≈ m_kl` balls, so total sampling work is
+//! `O(d · |E|)` instead of `O(B² · d · |E_KPGM|)`.
+
+use crate::hashutil::FastMap;
+use crate::rng::Rng;
+
+use super::ThetaSeq;
+
+/// Sentinel for "no child" in class and pair-node links.
+const NONE: u32 = u32::MAX;
+
+/// Reachability bitmasks are materialized for prefix lengths up to this
+/// (memory `Σ_ℓ 2^ℓ` bits ≈ 16 KB per set at the gate); deeper levels are
+/// answered by the trie itself.
+const MASK_LEVEL_GATE: usize = 16;
+
+/// One hash-consed trie class: the children are class ids at the next
+/// level ([`NONE`] = no configuration has that bit here).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ClassNode {
+    children: [u32; 2],
+}
+
+/// Hash-consed prefix-trie arena shared by all sets of one partition.
+///
+/// A *class* at level `ℓ` stands for a distinct set of length-`(d−ℓ)`
+/// suffixes; two prefixes (possibly from different sets) with identical
+/// suffix sets share one class. Level `d` holds the single empty-suffix
+/// leaf class.
+#[derive(Debug, Clone)]
+pub struct ConfigForest {
+    depth: usize,
+    /// `levels[ℓ]` = classes at prefix length `ℓ`, `ℓ ∈ 0..=depth`.
+    levels: Vec<Vec<ClassNode>>,
+    /// Per-level interner: packed `(child0, child1)` → class id.
+    interners: Vec<FastMap<u64, u32>>,
+}
+
+impl ConfigForest {
+    /// Empty forest for `depth`-bit configurations (`1 ≤ depth ≤ 63`).
+    pub fn new(depth: usize) -> Self {
+        assert!((1..=63).contains(&depth), "depth {depth} outside [1, 63]");
+        let mut levels = vec![Vec::new(); depth + 1];
+        // The unique empty-suffix leaf class.
+        levels[depth].push(ClassNode { children: [NONE, NONE] });
+        ConfigForest { depth, levels, interners: vec![FastMap::default(); depth + 1] }
+    }
+
+    /// Number of attribute levels d.
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Total classes across all levels (a measure of structure sharing).
+    pub fn num_classes(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    /// Children of class `id` at `level`.
+    #[inline]
+    fn class(&self, level: usize, id: u32) -> [u32; 2] {
+        self.levels[level][id as usize].children
+    }
+
+    /// Register a set of configurations (sorted, distinct, `< 2^depth`) and
+    /// return its trie handle. Identical sets return identical roots.
+    pub fn register_set(&mut self, sorted_configs: &[u64]) -> ConfigTrie {
+        debug_assert!(sorted_configs.windows(2).all(|w| w[0] < w[1]), "configs must be sorted and distinct");
+        debug_assert!(
+            sorted_configs.iter().all(|&c| self.depth == 63 || c < (1u64 << self.depth)),
+            "config outside the 2^depth space"
+        );
+        let root = self.intern_slice(0, sorted_configs);
+
+        // Per-level live-prefix bitmasks (prefix value = top ℓ bits).
+        let mask_levels = self.depth.min(MASK_LEVEL_GATE);
+        let mut masks: Vec<Vec<u64>> =
+            (0..=mask_levels).map(|l| vec![0u64; (1usize << l).div_ceil(64)]).collect();
+        for &c in sorted_configs {
+            for (l, mask) in masks.iter_mut().enumerate() {
+                let prefix = (c >> (self.depth - l)) as usize;
+                mask[prefix >> 6] |= 1u64 << (prefix & 63);
+            }
+        }
+        ConfigTrie { root, num_configs: sorted_configs.len(), masks }
+    }
+
+    /// Hash-consing recursion: class of the suffix set `slice` below a
+    /// prefix of length `level`.
+    fn intern_slice(&mut self, level: usize, slice: &[u64]) -> u32 {
+        if level == self.depth {
+            return 0; // the leaf class
+        }
+        let bit = self.depth - 1 - level;
+        let split = slice.partition_point(|&c| (c >> bit) & 1 == 0);
+        let c0 = if split == 0 { NONE } else { self.intern_slice(level + 1, &slice[..split]) };
+        let c1 = if split == slice.len() {
+            NONE
+        } else {
+            self.intern_slice(level + 1, &slice[split..])
+        };
+        let key = ((c0 as u64) << 32) | c1 as u64;
+        if let Some(&id) = self.interners[level].get(&key) {
+            return id;
+        }
+        let id = self.levels[level].len() as u32;
+        self.levels[level].push(ClassNode { children: [c0, c1] });
+        self.interners[level].insert(key, id);
+        id
+    }
+}
+
+/// One registered configuration set: root class into a [`ConfigForest`]
+/// plus per-level reachability bitmasks.
+#[derive(Debug, Clone)]
+pub struct ConfigTrie {
+    root: u32,
+    num_configs: usize,
+    /// `masks[ℓ]` = bitset of live prefixes of length `ℓ` (gated).
+    masks: Vec<Vec<u64>>,
+}
+
+impl ConfigTrie {
+    /// Root class id (level 0) in the owning forest.
+    #[inline]
+    pub fn root(&self) -> u32 {
+        self.root
+    }
+
+    /// Number of configurations in the set.
+    #[inline]
+    pub fn num_configs(&self) -> usize {
+        self.num_configs
+    }
+
+    /// Number of levels with a materialized reachability mask.
+    ///
+    /// The masks are a diagnostic/query surface ([`Self::is_live`]); the
+    /// conditioned descent itself walks the hash-consed classes, not the
+    /// masks.
+    pub fn mask_levels(&self) -> usize {
+        self.masks.len()
+    }
+
+    /// Whether `prefix` (of bit-length `level`) is a prefix of some
+    /// configuration in the set; `None` if the level has no mask.
+    pub fn is_live(&self, level: usize, prefix: u64) -> Option<bool> {
+        let mask = self.masks.get(level)?;
+        let p = prefix as usize;
+        Some((mask[p >> 6] >> (p & 63)) & 1 == 1)
+    }
+}
+
+/// Draw `X ~ N(mean, var)` rounded and clamped to `[0, max_cells]` —
+/// Algorithm 1 lines 3–5 with the clamp centralized so the full-space
+/// sampler (`max_cells = n²`) and the block-restricted sampler
+/// (`max_cells = |D_k|·|D_l|`) share it.
+#[inline]
+pub(crate) fn draw_count_clamped(rng: &mut Rng, mean: f64, var: f64, max_cells: f64) -> u64 {
+    let x = rng.normal_with(mean, var.max(0.0).sqrt());
+    x.round().clamp(0.0, max_cells) as u64
+}
+
+/// Scale four weights to cumulative u64 thresholds: a uniform draw `r`
+/// selects quadrant `(r >= t0) + (r >= t1) + (r >= t2)`. Shared by the
+/// full-space descent ([`super::BallDropSampler`]) and the conditioned
+/// descent so their rounding behavior stays identical.
+pub(crate) fn cumulative_thresholds(w: &[f64; 4], total: f64) -> [u64; 3] {
+    let scale = (u64::MAX as f64) / total;
+    let c0 = w[0] * scale;
+    let c1 = c0 + w[1] * scale;
+    let c2 = c1 + w[2] * scale;
+    [c0 as u64, c1 as u64, c2 as u64]
+}
+
+/// Cumulative u64 thresholds over four weights plus the heaviest quadrant
+/// (used as a fallback when a raw draw lands exactly on a zero-width
+/// boundary or in float-rounding slack past the last cumulative bound).
+fn quadrant_thresholds(w: &[f64; 4], total: f64) -> ([u64; 3], u8) {
+    if total <= 0.0 {
+        return ([u64::MAX; 3], 0);
+    }
+    let mut fallback = 0u8;
+    for q in 1..4 {
+        if w[q] > w[fallback as usize] {
+            fallback = q as u8;
+        }
+    }
+    (cumulative_thresholds(w, total), fallback)
+}
+
+/// One node of the product DAG: a reachable (row-class, col-class) pair.
+#[derive(Debug, Clone, Copy)]
+struct PairNode {
+    /// Quadrant `(a, b)` (row-major index `2a + b`) → pair id at the next
+    /// level; [`NONE`] = no retained cell below that quadrant.
+    children: [u32; 4],
+    /// Cumulative quadrant thresholds over `θ_ℓ[a,b] ·` downstream mass.
+    thresholds: [u64; 3],
+    /// Heaviest live quadrant (boundary-draw fallback).
+    fallback: u8,
+}
+
+/// Per-piece root into the product DAG plus its restricted aggregates.
+#[derive(Debug, Clone, Copy)]
+struct PieceRoot {
+    node: u32,
+    /// `m_kl = Σ_{(x,y) ∈ C_k × C_l} P[x, y]`.
+    mass: f64,
+    /// `v_kl = Σ_{(x,y) ∈ C_k × C_l} P[x, y]²`.
+    mass_sq: f64,
+    /// `|C_k| · |C_l|` — the hard cap on distinct edges in the block.
+    num_cells: u64,
+}
+
+/// Rejection-free ball dropper over the `B²` blocks of a quilt partition.
+///
+/// Built once per partition from the per-set tries; [`Self::piece`] hands
+/// out lightweight per-block samplers that share the product DAG.
+///
+/// Dense-block budget: the product DAG of a block is bounded by
+/// `O(d · |C_k|·|C_l|)` pair nodes, so conditioning a near-full block
+/// (cells comparable to `4^d`) would cost more to set up than the plain
+/// descent spends dropping — while on exactly those blocks the full-space
+/// acceptance rate `|C_k|·|C_l| / 4^d` is already high. A `cell_budget`
+/// therefore excludes blocks with more cells than the budget from the DAG
+/// ([`Self::piece`] returns `None` there and callers keep Algorithm 1);
+/// the sparse blocks — the ones whose acceptance collapses as `B` grows —
+/// are all conditioned. The split is a pure function of the partition and
+/// the budget, so seeded runs stay reproducible.
+#[derive(Debug, Clone)]
+pub struct ConditionedBallDropSampler {
+    depth: usize,
+    num_sets: usize,
+    /// `levels[ℓ]` = reachable pair nodes at level `ℓ`, `ℓ ∈ 0..depth`.
+    levels: Vec<Vec<PairNode>>,
+    /// Row-major `num_sets × num_sets` piece roots (`None` = over budget).
+    roots: Vec<Option<PieceRoot>>,
+}
+
+impl ConditionedBallDropSampler {
+    /// Build the product DAG for all `sets.len()²` block pairs, with no
+    /// dense-block budget (every piece is conditioned).
+    pub fn build(thetas: &ThetaSeq, forest: &ConfigForest, sets: &[ConfigTrie]) -> Self {
+        Self::build_budgeted(thetas, forest, sets, u64::MAX)
+    }
+
+    /// Build the product DAG for every block pair whose cell count
+    /// `|C_k|·|C_l|` is at most `cell_budget`; larger blocks are left out
+    /// ([`Self::piece`] returns `None`) and should use the full-space
+    /// descent, which is efficient precisely on those dense blocks.
+    ///
+    /// `sets` must have been registered in `forest`, and `thetas.depth()`
+    /// must equal the forest depth.
+    pub fn build_budgeted(
+        thetas: &ThetaSeq,
+        forest: &ConfigForest,
+        sets: &[ConfigTrie],
+        cell_budget: u64,
+    ) -> Self {
+        let depth = thetas.depth();
+        assert_eq!(forest.depth(), depth, "forest depth must match the theta sequence");
+        let b = sets.len();
+
+        // ---- Discovery (top-down): distinct reachable class pairs. ----
+        let mut pair_classes: Vec<Vec<(u32, u32)>> = Vec::with_capacity(depth + 1);
+        let mut children: Vec<Vec<[u32; 4]>> = Vec::with_capacity(depth);
+        let mut interner: FastMap<u64, u32> = FastMap::default();
+        let mut root_nodes: Vec<Option<u32>> = Vec::with_capacity(b * b);
+        let mut level0: Vec<(u32, u32)> = Vec::new();
+        for k in 0..b {
+            for l in 0..b {
+                let cells = sets[k].num_configs() as u64 * sets[l].num_configs() as u64;
+                if cells > cell_budget {
+                    root_nodes.push(None);
+                    continue;
+                }
+                let (rk, rl) = (sets[k].root(), sets[l].root());
+                let key = ((rk as u64) << 32) | rl as u64;
+                let id = *interner.entry(key).or_insert_with(|| {
+                    level0.push((rk, rl));
+                    (level0.len() - 1) as u32
+                });
+                root_nodes.push(Some(id));
+            }
+        }
+        pair_classes.push(level0);
+        for level in 0..depth {
+            interner.clear();
+            let mut next: Vec<(u32, u32)> = Vec::new();
+            let mut ch_level: Vec<[u32; 4]> = Vec::with_capacity(pair_classes[level].len());
+            for &(cr, cc) in &pair_classes[level] {
+                let rn = forest.class(level, cr);
+                let cn = forest.class(level, cc);
+                let mut ch = [NONE; 4];
+                for (q, slot) in ch.iter_mut().enumerate() {
+                    let rchild = rn[q >> 1];
+                    let cchild = cn[q & 1];
+                    if rchild != NONE && cchild != NONE {
+                        let key = ((rchild as u64) << 32) | cchild as u64;
+                        *slot = *interner.entry(key).or_insert_with(|| {
+                            next.push((rchild, cchild));
+                            (next.len() - 1) as u32
+                        });
+                    }
+                }
+                ch_level.push(ch);
+            }
+            children.push(ch_level);
+            pair_classes.push(next);
+        }
+
+        // ---- Masses + thresholds (bottom-up, single pass). ----
+        let mut levels: Vec<Vec<PairNode>> = vec![Vec::new(); depth];
+        let mut mass_next: Vec<f64> = vec![1.0; pair_classes[depth].len()];
+        let mut mass_sq_next: Vec<f64> = vec![1.0; pair_classes[depth].len()];
+        for level in (0..depth).rev() {
+            let w_level = thetas.level(level).weights();
+            let n_nodes = pair_classes[level].len();
+            let mut nodes = Vec::with_capacity(n_nodes);
+            let mut mass_cur = Vec::with_capacity(n_nodes);
+            let mut mass_sq_cur = Vec::with_capacity(n_nodes);
+            for ch in &children[level] {
+                let mut w = [0.0f64; 4];
+                let mut wsq = [0.0f64; 4];
+                for q in 0..4 {
+                    if ch[q] != NONE {
+                        w[q] = w_level[q] * mass_next[ch[q] as usize];
+                        wsq[q] = w_level[q] * w_level[q] * mass_sq_next[ch[q] as usize];
+                    }
+                }
+                let total = w[0] + w[1] + w[2] + w[3];
+                let (thresholds, fallback) = quadrant_thresholds(&w, total);
+                nodes.push(PairNode { children: *ch, thresholds, fallback });
+                mass_cur.push(total);
+                mass_sq_cur.push(wsq[0] + wsq[1] + wsq[2] + wsq[3]);
+            }
+            levels[level] = nodes;
+            mass_next = mass_cur;
+            mass_sq_next = mass_sq_cur;
+        }
+
+        let mut roots = Vec::with_capacity(b * b);
+        for k in 0..b {
+            for l in 0..b {
+                roots.push(root_nodes[k * b + l].map(|node| PieceRoot {
+                    node,
+                    mass: mass_next[node as usize],
+                    mass_sq: mass_sq_next[node as usize],
+                    num_cells: sets[k].num_configs() as u64 * sets[l].num_configs() as u64,
+                }));
+            }
+        }
+        ConditionedBallDropSampler { depth, num_sets: b, levels, roots }
+    }
+
+    /// Number of attribute levels d.
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Number of partition sets B (pieces are `B²`).
+    #[inline]
+    pub fn num_sets(&self) -> usize {
+        self.num_sets
+    }
+
+    /// Total pair nodes in the shared product DAG (setup-cost metric).
+    pub fn num_pair_nodes(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    /// The sampler for block `(D_k, D_l)` (0-based set indices), or
+    /// `None` if the block exceeded the build's cell budget (dense block:
+    /// callers should use the full-space descent there).
+    #[inline]
+    pub fn piece(&self, k: usize, l: usize) -> Option<PieceSampler<'_>> {
+        assert!(k < self.num_sets && l < self.num_sets, "piece ({k},{l}) out of range");
+        self.roots[k * self.num_sets + l].map(|root| PieceSampler { dag: self, root })
+    }
+}
+
+/// Rejection-free sampler for one block `(D_k, D_l)`.
+#[derive(Debug, Clone, Copy)]
+pub struct PieceSampler<'a> {
+    dag: &'a ConditionedBallDropSampler,
+    root: PieceRoot,
+}
+
+impl PieceSampler<'_> {
+    /// The restricted mass `m_kl` (expected edges of the block).
+    #[inline]
+    pub fn restricted_mass(&self) -> f64 {
+        self.root.mass
+    }
+
+    /// The restricted squared mass `v_kl` (variance term).
+    #[inline]
+    pub fn restricted_mass_sq(&self) -> f64 {
+        self.root.mass_sq
+    }
+
+    /// `|C_k| · |C_l|`: the number of cells (distinct possible edges).
+    #[inline]
+    pub fn num_cells(&self) -> u64 {
+        self.root.num_cells
+    }
+
+    /// Draw the block edge count `X_kl ~ Poisson(m_kl)` clamped to the
+    /// block's cell count.
+    ///
+    /// Poisson — not the paper's `N(m, m − v)` — because the quantity
+    /// being replaced is the *retained* count of the full-space process:
+    /// a `Binomial(X, m_kl / m)` thinning of a huge `X`, whose sparse
+    /// limit is exactly `Poisson(m_kl)`. When the caller then drops
+    /// `X_kl` i.i.d. balls and **collapses** duplicates, Poisson thinning
+    /// makes every cell's hit count an independent `Poisson(P[x, y])`, so
+    /// each cell is included independently with probability `1 − e^{−P}`
+    /// — the same marginal as the rejection path (a normal draw, or
+    /// resample-to-distinct placement, would systematically over-include
+    /// cells of small high-mass blocks). For large `m_kl` the Poisson
+    /// draw is itself normal-approximated, converging to Algorithm 1's
+    /// count draw. The clamp to `|C_k|·|C_l|` only binds on saturated
+    /// blocks, where it bounds worst-case work.
+    pub fn draw_edge_count(&self, rng: &mut Rng) -> u64 {
+        rng.poisson(self.root.mass).min(self.root.num_cells)
+    }
+
+    /// One conditioned quadrisection descent: returns the configuration
+    /// pair `(x, y) ∈ C_k × C_l` with probability `P[x, y] / m_kl`.
+    ///
+    /// Must not be called on a zero-mass block (no reachable cells);
+    /// [`Self::draw_edge_count`] returns 0 there.
+    #[inline]
+    pub fn drop_one(&self, rng: &mut Rng) -> (u64, u64) {
+        debug_assert!(self.root.mass > 0.0, "drop_one on a zero-mass block");
+        let mut idx = self.root.node as usize;
+        let mut s: u64 = 0;
+        let mut t: u64 = 0;
+        for level in &self.dag.levels {
+            let node = &level[idx];
+            let r = rng.next_u64();
+            let mut q = (r >= node.thresholds[0]) as usize
+                + (r >= node.thresholds[1]) as usize
+                + (r >= node.thresholds[2]) as usize;
+            if node.children[q] == NONE {
+                q = node.fallback as usize;
+            }
+            s = (s << 1) | (q >> 1) as u64;
+            t = (t << 1) | (q & 1) as u64;
+            idx = node.children[q] as usize;
+        }
+        (s, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kpgm::{edge_probability, Initiator};
+
+    fn forest_with(depth: usize, sets: &[&[u64]]) -> (ConfigForest, Vec<ConfigTrie>) {
+        let mut forest = ConfigForest::new(depth);
+        let tries = sets.iter().map(|s| forest.register_set(s)).collect();
+        (forest, tries)
+    }
+
+    #[test]
+    fn identical_sets_share_roots_and_classes() {
+        let (forest, tries) = forest_with(4, &[&[1, 5, 9], &[1, 5, 9], &[1, 5]]);
+        assert_eq!(tries[0].root(), tries[1].root());
+        assert_ne!(tries[0].root(), tries[2].root());
+        // Sharing keeps the arena near one trie's size, not three.
+        assert!(forest.num_classes() <= 2 * 4 * 3 + 5);
+    }
+
+    #[test]
+    fn masks_reflect_live_prefixes() {
+        let (_, tries) = forest_with(3, &[&[0b001, 0b101]]);
+        let t = &tries[0];
+        assert_eq!(t.is_live(0, 0), Some(true));
+        assert_eq!(t.is_live(1, 0), Some(true)); // prefix 0 of 001
+        assert_eq!(t.is_live(1, 1), Some(true)); // prefix 1 of 101
+        assert_eq!(t.is_live(2, 0b00), Some(true));
+        assert_eq!(t.is_live(2, 0b01), Some(false));
+        assert_eq!(t.is_live(2, 0b10), Some(true));
+        assert_eq!(t.is_live(3, 0b001), Some(true));
+        assert_eq!(t.is_live(3, 0b011), Some(false));
+        assert_eq!(t.num_configs(), 2);
+    }
+
+    #[test]
+    fn full_space_mass_matches_algorithm_one() {
+        // Conditioning on the full configuration space must reproduce the
+        // unconditioned m and v of Algorithm 1 exactly.
+        let d = 4;
+        let thetas = ThetaSeq::homogeneous(Initiator::THETA1, d as u32);
+        let all: Vec<u64> = (0..1u64 << d).collect();
+        let (forest, tries) = forest_with(d, &[&all]);
+        let cond = ConditionedBallDropSampler::build(&thetas, &forest, &tries);
+        let piece = cond.piece(0, 0).expect("within budget");
+        assert!((piece.restricted_mass() - thetas.expected_edges()).abs() < 1e-9);
+        assert!((piece.restricted_mass_sq() - thetas.sum_sq_product()).abs() < 1e-9);
+        assert_eq!(piece.num_cells(), 1 << (2 * d));
+    }
+
+    #[test]
+    fn restricted_mass_matches_bruteforce() {
+        let d = 5;
+        let thetas = ThetaSeq::homogeneous(Initiator::THETA2, d as u32);
+        let a: Vec<u64> = vec![0, 3, 7, 12, 21, 30];
+        let b: Vec<u64> = vec![1, 3, 8, 21, 31];
+        let (forest, tries) = forest_with(d, &[&a, &b]);
+        let cond = ConditionedBallDropSampler::build(&thetas, &forest, &tries);
+        let piece = cond.piece(0, 1).expect("within budget");
+        let mut want = 0.0;
+        let mut want_sq = 0.0;
+        for &x in &a {
+            for &y in &b {
+                let p = edge_probability(&thetas, x as u32, y as u32);
+                want += p;
+                want_sq += p * p;
+            }
+        }
+        assert!((piece.restricted_mass() - want).abs() < 1e-12, "m: {} vs {want}", piece.restricted_mass());
+        assert!((piece.restricted_mass_sq() - want_sq).abs() < 1e-12);
+        assert_eq!(piece.num_cells(), (a.len() * b.len()) as u64);
+    }
+
+    #[test]
+    fn drop_distribution_matches_restricted_conditional() {
+        // Empirical per-cell frequency of drop_one must equal P / m_kl.
+        let d = 3;
+        let thetas = ThetaSeq::homogeneous(Initiator::THETA2, d as u32);
+        let a: Vec<u64> = vec![0b000, 0b010, 0b101, 0b111];
+        let b: Vec<u64> = vec![0b001, 0b100, 0b110];
+        let (forest, tries) = forest_with(d, &[&a, &b]);
+        let cond = ConditionedBallDropSampler::build(&thetas, &forest, &tries);
+        let piece = cond.piece(0, 1).expect("within budget");
+        let m = piece.restricted_mass();
+        let trials = 300_000u32;
+        let mut rng = Rng::new(401);
+        let mut counts: FastMap<(u64, u64), u32> = FastMap::default();
+        for _ in 0..trials {
+            let cell = piece.drop_one(&mut rng);
+            assert!(a.contains(&cell.0), "row {} outside C_k", cell.0);
+            assert!(b.contains(&cell.1), "col {} outside C_l", cell.1);
+            *counts.entry(cell).or_insert(0) += 1;
+        }
+        for &x in &a {
+            for &y in &b {
+                let want = edge_probability(&thetas, x as u32, y as u32) / m;
+                let got = *counts.get(&(x, y)).unwrap_or(&0) as f64 / trials as f64;
+                let sigma = (want * (1.0 - want) / trials as f64).sqrt();
+                assert!(
+                    (got - want).abs() < 5.0 * sigma + 1e-4,
+                    "cell ({x},{y}): got {got:.5}, want {want:.5}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn edge_count_clamps_to_block_cells() {
+        // Saturated θ on a tiny block: the count draw must cap at the cell
+        // count, not the full-space n².
+        let thetas = ThetaSeq::homogeneous(Initiator::new([1.0, 1.0, 1.0, 1.0]), 3);
+        let a: Vec<u64> = vec![0, 1];
+        let b: Vec<u64> = vec![5];
+        let (forest, tries) = forest_with(3, &[&a, &b]);
+        let cond = ConditionedBallDropSampler::build(&thetas, &forest, &tries);
+        let piece = cond.piece(0, 1).expect("within budget");
+        assert_eq!(piece.num_cells(), 2);
+        let mut rng = Rng::new(409);
+        for _ in 0..200 {
+            assert!(piece.draw_edge_count(&mut rng) <= 2);
+        }
+    }
+
+    #[test]
+    fn cell_budget_excludes_dense_blocks() {
+        // Budget 6 cells: the 3×3 block is excluded, 3×1 and 1×1 stay.
+        let thetas = ThetaSeq::homogeneous(Initiator::THETA1, 3);
+        let big: Vec<u64> = vec![0, 3, 6];
+        let small: Vec<u64> = vec![5];
+        let (forest, tries) = forest_with(3, &[&big, &small]);
+        let cond = ConditionedBallDropSampler::build_budgeted(&thetas, &forest, &tries, 6);
+        assert!(cond.piece(0, 0).is_none(), "9-cell block must be over budget");
+        assert!(cond.piece(0, 1).is_some());
+        assert!(cond.piece(1, 0).is_some());
+        assert!(cond.piece(1, 1).is_some());
+        // Unbudgeted build conditions everything.
+        let all = ConditionedBallDropSampler::build(&thetas, &forest, &tries);
+        assert!(all.piece(0, 0).is_some());
+    }
+
+    #[test]
+    fn asymmetric_pieces_use_their_own_sets() {
+        // piece(k, l) conditions rows on set k and cols on set l.
+        let d = 2;
+        let thetas = ThetaSeq::homogeneous(Initiator::THETA1, d as u32);
+        let a: Vec<u64> = vec![0b00];
+        let b: Vec<u64> = vec![0b11];
+        let (forest, tries) = forest_with(d, &[&a, &b]);
+        let cond = ConditionedBallDropSampler::build(&thetas, &forest, &tries);
+        let mut rng = Rng::new(419);
+        assert_eq!(cond.piece(0, 1).unwrap().drop_one(&mut rng), (0b00, 0b11));
+        assert_eq!(cond.piece(1, 0).unwrap().drop_one(&mut rng), (0b11, 0b00));
+        let p01 = cond.piece(0, 1).unwrap().restricted_mass();
+        let want = edge_probability(&thetas, 0b00, 0b11);
+        assert!((p01 - want).abs() < 1e-12);
+    }
+}

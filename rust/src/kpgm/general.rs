@@ -179,13 +179,12 @@ impl GenBallDropSampler {
         &self.thetas
     }
 
-    /// Draw |E| ~ N(m, m − v), clamped.
+    /// Draw |E| ~ N(m, m − v), clamped to the full `n²` cell space.
     pub fn draw_edge_count(&self, rng: &mut Rng) -> u64 {
         let m = self.thetas.expected_edges();
         let v = self.thetas.sum_sq_product();
-        let x = rng.normal_with(m, (m - v).max(0.0).sqrt());
         let n = self.thetas.num_nodes() as f64;
-        x.round().clamp(0.0, n * n) as u64
+        super::draw_count_clamped(rng, m, m - v, n * n)
     }
 
     /// One descent: returns the (source, target) cell as base-K strings.

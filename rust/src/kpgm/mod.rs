@@ -4,16 +4,23 @@
 //! `P_ij = Π_k θ^(k)[b_k(i), b_k(j)]` where `b_k(i)` is the k-th most
 //! significant bit of `i` (paper eq. 6).
 //!
-//! Two samplers:
+//! Three samplers:
 //! * [`naive_sample`] — `O(n² d)` per-entry Bernoulli (the baseline),
 //! * [`BallDropSampler`] — paper **Algorithm 1**: draw `|E| ~ N(m, m−v)`,
 //!   then place each edge by a d-level quadrisection descent. Expected
 //!   `O(log2(n)·|E|)`.
+//! * [`ConditionedBallDropSampler`] — Algorithm 1 restricted to a block
+//!   of retained configuration pairs: every descent is renormalized by
+//!   downstream reachable mass so no ball is ever discarded (the
+//!   rejection-free engine behind the quilting pieces).
 
+mod conditioned;
 pub mod general;
 mod initiator;
 mod sampler;
 
+pub use conditioned::{ConditionedBallDropSampler, ConfigForest, ConfigTrie, PieceSampler};
+pub(crate) use conditioned::draw_count_clamped;
 pub use initiator::{Initiator, ThetaSeq};
 pub use sampler::{naive_sample, BallDropSampler, DuplicatePolicy};
 

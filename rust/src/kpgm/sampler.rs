@@ -54,11 +54,7 @@ pub struct BallDropSampler {
 fn level_thresholds(weights: &[f64; 4]) -> [u64; 3] {
     let total: f64 = weights.iter().sum();
     debug_assert!(total > 0.0, "all-zero initiator level");
-    let scale = (u64::MAX as f64) / total;
-    let c0 = weights[0] * scale;
-    let c1 = c0 + weights[1] * scale;
-    let c2 = c1 + weights[2] * scale;
-    [c0 as u64, c1 as u64, c2 as u64]
+    super::conditioned::cumulative_thresholds(weights, total)
 }
 
 impl BallDropSampler {
@@ -85,14 +81,19 @@ impl BallDropSampler {
     }
 
     /// Draw the number of edges `X ~ N(m, m − v)` (Algorithm 1 lines 3–5),
-    /// clamped to `[0, n²]`.
+    /// clamped to `[0, n²]` — the full-space cell count.
     pub fn draw_edge_count(&self, rng: &mut Rng) -> u64 {
+        let n = self.thetas.num_nodes() as f64;
+        self.draw_edge_count_capped(rng, n * n)
+    }
+
+    /// As [`Self::draw_edge_count`] but clamped to an explicit `max_cells`
+    /// (callers sampling a restricted block must cap at the block's cell
+    /// count, not the full-space `n²`, or the draw overcounts).
+    pub fn draw_edge_count_capped(&self, rng: &mut Rng, max_cells: f64) -> u64 {
         let m = self.thetas.expected_edges();
         let v = self.thetas.sum_sq_product();
-        let var = (m - v).max(0.0);
-        let x = rng.normal_with(m, var.sqrt());
-        let n = self.thetas.num_nodes() as f64;
-        x.round().clamp(0.0, n * n) as u64
+        super::draw_count_clamped(rng, m, m - v, max_cells)
     }
 
     /// One quadrisection descent (Algorithm 1 lines 7–16): returns the
@@ -120,9 +121,18 @@ impl BallDropSampler {
     /// Sample exactly `x` ball drops (post-dedup size may be smaller under
     /// [`DuplicatePolicy::Collapse`]).
     pub fn sample_with_count(&self, x: u64, rng: &mut Rng) -> EdgeList {
+        self.sample_with_count_reporting(x, rng).0
+    }
+
+    /// As [`Self::sample_with_count`], also returning how many balls were
+    /// abandoned because `max_attempts` resamples all hit duplicates
+    /// (always 0 under [`DuplicatePolicy::Collapse`], where duplicates
+    /// merge by design rather than being retried).
+    pub fn sample_with_count_reporting(&self, x: u64, rng: &mut Rng) -> (EdgeList, u64) {
         let n = self.thetas.num_nodes();
         let mut g = EdgeList::with_capacity(n, x as usize);
         let mut seen: FastSet<u64> = fast_set_with_capacity(x as usize * 2);
+        let mut dropped = 0u64;
         for _ in 0..x {
             match self.policy {
                 DuplicatePolicy::Collapse => {
@@ -132,21 +142,24 @@ impl BallDropSampler {
                     }
                 }
                 DuplicatePolicy::Resample => {
-                    for attempt in 0..self.max_attempts {
+                    let mut placed = false;
+                    for _ in 0..self.max_attempts {
                         let (s, t) = self.drop_one(rng);
                         if seen.insert(edge_key(s, t)) {
                             g.push(s, t);
+                            placed = true;
                             break;
                         }
-                        // Give up on pathological saturation; drop the ball.
-                        if attempt + 1 == self.max_attempts {
-                            break;
-                        }
+                    }
+                    // Pathological saturation: the ball is abandoned, and
+                    // (unlike the old silent drop) reported to the caller.
+                    if !placed {
+                        dropped += 1;
                     }
                 }
             }
         }
-        g
+        (g, dropped)
     }
 }
 
@@ -257,6 +270,19 @@ mod tests {
         let want = thetas.expected_edges(); // 2.4^8 ≈ 1100
         // Resampling keeps distinct edges so the count is ≈ the draw.
         assert!((mean - want).abs() / want < 0.1, "mean={mean} want={want}");
+    }
+
+    #[test]
+    fn exhausted_resamples_are_counted() {
+        // 2×2 saturated space, 100 requested balls: at most 4 can place;
+        // every other ball must be reported as an abandoned resample.
+        let t = Initiator::new([1.0, 1.0, 1.0, 1.0]);
+        let s = BallDropSampler::new(ThetaSeq::homogeneous(t, 1));
+        let mut rng = Rng::new(131);
+        let (g, dropped) = s.sample_with_count_reporting(100, &mut rng);
+        assert!(g.num_edges() <= 4);
+        assert_eq!(g.num_edges() as u64 + dropped, 100, "every ball places or reports");
+        assert!(dropped >= 96);
     }
 
     #[test]

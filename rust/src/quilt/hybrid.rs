@@ -21,7 +21,8 @@ use crate::kpgm::{self, BallDropSampler};
 use crate::magm::{AttributeAssignment, Config, MagmParams};
 use crate::rng::Rng;
 
-use super::{sample_er_block, sampler::sample_piece, Partition, QuiltSampler};
+use super::sampler::{sample_piece, PieceBackend, PieceMode};
+use super::{sample_er_block, Partition, QuiltSampler};
 
 /// The hybrid split for one attribute assignment.
 #[derive(Debug, Clone)]
@@ -130,18 +131,25 @@ pub struct HybridSampler {
     params: MagmParams,
     seed: u64,
     b_prime_override: Option<u32>,
+    mode: PieceMode,
 }
 
 impl HybridSampler {
     /// New sampler; d ≤ 32 as for [`QuiltSampler`].
     pub fn new(params: MagmParams) -> Self {
         assert!(params.depth() <= 32, "hybrid sampling needs d <= 32");
-        HybridSampler { params, seed: 0, b_prime_override: None }
+        HybridSampler { params, seed: 0, b_prime_override: None, mode: PieceMode::default() }
     }
 
     /// Set the seed (builder style).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Set the quilt-piece mode for the W×W part (builder style).
+    pub fn piece_mode(mut self, mode: PieceMode) -> Self {
+        self.mode = mode;
         self
     }
 
@@ -204,9 +212,23 @@ impl HybridSampler {
 
     /// Sample for a fixed plan (exposed for the coordinator and tests).
     pub fn sample_with_plan(&self, attrs: &AttributeAssignment, plan: &HybridPlan) -> EdgeList {
+        self.sample_with_plan_reporting(attrs, plan).0
+    }
+
+    /// As [`Self::sample_with_plan`], also returning the number of balls
+    /// the W×W quilting abandoned after exhausting duplicate resamples.
+    /// Conditioned pieces collapse duplicates and abandon nothing, but
+    /// over-budget dense blocks fall back to the rejection descent, so
+    /// the count can be non-zero even in conditioned mode.
+    pub fn sample_with_plan_reporting(
+        &self,
+        attrs: &AttributeAssignment,
+        plan: &HybridPlan,
+    ) -> (EdgeList, u64) {
         let n = self.params.num_nodes();
         let thetas = self.params.thetas();
         let mut out = EdgeList::new(n);
+        let mut dropped = 0u64;
         let base = Rng::new(self.seed).fork(0x4b1d);
 
         // --- 1. W × W by Algorithm 2 on the light subset. --------------
@@ -214,11 +236,17 @@ impl HybridSampler {
         if !w_nodes.is_empty() {
             let mut partition = Partition::build_subset(attrs.configs(), &w_nodes);
             super::sampler::maybe_build_dense(&mut partition, self.params.depth());
-            let quilt = QuiltSampler::new(self.params.clone());
+            let conditioner = (self.mode == PieceMode::Conditioned)
+                .then(|| partition.conditioned_sampler(thetas));
             let kpgm = BallDropSampler::new(thetas.clone());
+            let quilt = QuiltSampler::new(self.params.clone());
             for job in quilt.plan(&partition) {
+                let backend = match &conditioner {
+                    Some(cond) => PieceBackend::Conditioned { cond, kpgm: &kpgm },
+                    None => PieceBackend::Rejection(&kpgm),
+                };
                 let mut rng = base.fork(job.fork_id);
-                sample_piece(&kpgm, &partition, job, &mut rng, &mut out);
+                dropped += sample_piece(backend, &partition, job, &mut rng, &mut out);
             }
         }
 
@@ -250,7 +278,7 @@ impl HybridSampler {
         }
 
         out.dedup();
-        out
+        (out, dropped)
     }
 }
 

@@ -4,9 +4,11 @@
 //! Pipeline:
 //! 1. [`Partition`] the nodes into `D_1 … D_B` so that no two nodes in a
 //!    set share an attribute configuration (minimal by Theorem 2),
-//! 2. for each of the `B²` pieces `(D_k, D_l)`, sample a KPGM graph with
-//!    Algorithm 1 and keep only edges `(x, y)` whose endpoints are
-//!    configurations present in `D_k` resp. `D_l`,
+//! 2. for each of the `B²` pieces `(D_k, D_l)`, sample the block's edges —
+//!    by default with the rejection-free **conditioned** quadrisection
+//!    descent restricted to the configurations present in `D_k` resp.
+//!    `D_l` ([`PieceMode::Conditioned`]), or with the paper's literal
+//!    sample-then-filter Algorithm 1 ([`PieceMode::Rejection`]),
 //! 3. un-permute (`λ_i → i`) and **quilt** the pieces into one edge list
 //!    (Theorem 3: the result samples `A_ij ~ Bernoulli(Q_ij)`
 //!    independently).
@@ -26,7 +28,8 @@ pub use er_block::sample_er_block;
 pub use general::GeneralQuiltSampler;
 pub use hybrid::{choose_b_prime, cost_model_paper, HybridPlan, HybridSampler};
 pub use partition::Partition;
-pub use sampler::{PieceJob, QuiltSampler};
+pub use sampler::{PieceJob, PieceMode, QuiltSampler};
 
 pub(crate) use sampler::sample_piece as sample_piece_for_coordinator;
 pub(crate) use sampler::maybe_build_dense as maybe_build_dense_index;
+pub(crate) use sampler::PieceBackend;

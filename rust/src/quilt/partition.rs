@@ -8,6 +8,7 @@
 use crate::hashutil::FastMap;
 
 use crate::graph::NodeId;
+use crate::kpgm::{ConditionedBallDropSampler, ConfigForest, ConfigTrie, ThetaSeq};
 use crate::magm::Config;
 
 /// The partition plus, per set, the `config → node` lookup used when
@@ -23,6 +24,13 @@ pub struct Partition {
     /// than the hash probe. Built by [`Partition::build_dense_index`] when
     /// the configuration space is small enough to afford it.
     dense: Vec<Vec<NodeId>>,
+    /// Optional hash-consed prefix-trie arena over the sets' configs (one
+    /// [`ConfigTrie`] per set), built by [`Partition::build_tries`]. The
+    /// trie classes power the rejection-free conditioned piece sampler;
+    /// the per-level reachability bitmasks each trie carries are a
+    /// diagnostic surface (tests/tooling), not consulted by the descent.
+    forest: Option<ConfigForest>,
+    tries: Vec<ConfigTrie>,
 }
 
 impl Partition {
@@ -43,7 +51,7 @@ impl Partition {
             sets[idx].push(i as NodeId);
             maps[idx].insert(c, i as NodeId);
         }
-        Partition { sets, maps, dense: Vec::new() }
+        Partition { sets, maps, dense: Vec::new(), forest: None, tries: Vec::new() }
     }
 
     /// Build restricted to a subset of nodes (used by the hybrid sampler's
@@ -64,7 +72,68 @@ impl Partition {
             sets[idx].push(i);
             maps[idx].insert(c, i);
         }
-        Partition { sets, maps, dense: Vec::new() }
+        Partition { sets, maps, dense: Vec::new(), forest: None, tries: Vec::new() }
+    }
+
+    /// Build the per-set prefix tries (and per-level reachability masks)
+    /// over the `depth`-bit configuration space. Idempotent
+    /// ([`Partition::conditioned_sampler`] calls it automatically). Cost
+    /// `O(d · n)`, with hash-consing sharing suffix structure across the
+    /// nested sets.
+    pub fn build_tries(&mut self, depth: usize) {
+        if let Some(forest) = &self.forest {
+            debug_assert_eq!(
+                forest.depth(),
+                depth,
+                "build_tries called again with a different depth"
+            );
+            return;
+        }
+        let mut forest = ConfigForest::new(depth);
+        self.tries = self
+            .maps
+            .iter()
+            .map(|m| {
+                let mut cfgs: Vec<Config> = m.keys().copied().collect();
+                cfgs.sort_unstable();
+                forest.register_set(&cfgs)
+            })
+            .collect();
+        self.forest = Some(forest);
+    }
+
+    /// Whether [`Partition::build_tries`] has run.
+    pub fn has_tries(&self) -> bool {
+        self.forest.is_some()
+    }
+
+    /// The shared trie arena (if built).
+    pub fn config_forest(&self) -> Option<&ConfigForest> {
+        self.forest.as_ref()
+    }
+
+    /// The prefix trie of set `c` (panics if tries are not built).
+    pub fn trie(&self, c: usize) -> &ConfigTrie {
+        assert!(self.forest.is_some(), "call build_tries first");
+        &self.tries[c]
+    }
+
+    /// Build the rejection-free conditioned ball dropper for the pieces of
+    /// this partition (builds the tries first if needed).
+    ///
+    /// Dense blocks — more cells than the expected full-space ball count —
+    /// are excluded from the product DAG (their conditioning setup would
+    /// outweigh the drops it saves, and the plain descent's acceptance
+    /// rate is high exactly there); callers fall back to Algorithm 1 for
+    /// those. The split depends only on the partition and `thetas`, so
+    /// seeded runs stay reproducible.
+    pub fn conditioned_sampler(&mut self, thetas: &ThetaSeq) -> ConditionedBallDropSampler {
+        self.build_tries(thetas.depth());
+        let forest = self.forest.as_ref().expect("tries built above");
+        // Floor keeps small blocks conditioned even for sparse θ; ceiling
+        // guards the f64 → u64 cast for huge d.
+        let budget = thetas.expected_edges().clamp(65536.0, 1e18) as u64;
+        ConditionedBallDropSampler::build_budgeted(thetas, forest, &self.tries, budget)
     }
 
     /// Build the dense `config → node + 1` index for every set.
@@ -203,6 +272,33 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn tries_cover_set_configs() {
+        // configs: a a b a b -> set sizes 2, 2, 1 (see simple_partition).
+        let configs = vec![0b111u64, 0b111, 0b011, 0b111, 0b011];
+        let mut p = Partition::build(&configs);
+        assert!(!p.has_tries());
+        p.build_tries(3);
+        assert!(p.has_tries());
+        assert_eq!(p.trie(0).num_configs(), 2);
+        assert_eq!(p.trie(1).num_configs(), 2);
+        assert_eq!(p.trie(2).num_configs(), 1);
+        // Sets 0 and 1 hold the same config set {0b011, 0b111}: hash
+        // consing must give them the same root class.
+        assert_eq!(p.trie(0).root(), p.trie(1).root());
+        // Reachability for {0b011, 0b111}: length-2 prefixes 01 and 11
+        // are live, 00 and 10 dead.
+        assert_eq!(p.trie(0).is_live(2, 0b01), Some(true));
+        assert_eq!(p.trie(0).is_live(2, 0b11), Some(true));
+        assert_eq!(p.trie(0).is_live(2, 0b00), Some(false));
+        assert_eq!(p.trie(0).is_live(2, 0b10), Some(false));
+        assert_eq!(p.trie(2).is_live(3, 0b111), Some(true));
+        assert_eq!(p.trie(2).is_live(3, 0b011), Some(false));
+        // Idempotent.
+        p.build_tries(3);
+        assert_eq!(p.config_forest().unwrap().depth(), 3);
     }
 
     #[test]

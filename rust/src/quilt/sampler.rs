@@ -8,28 +8,95 @@
 //! Theorem 3: the quilted adjacency entries are independent
 //! `Bernoulli(Q_ij)`.
 //!
+//! Piece modes
+//! -----------
+//! The paper's literal reading ([`PieceMode::Rejection`]) drops
+//! `X ≈ |E_KPGM|` balls over the full `2^d × 2^d` space for **each** of
+//! the `B²` pieces and filters against the `(D_k, D_l)` maps —
+//! `O(B² · d · |E_KPGM|)` work for `O(|E|)` retained output, with the
+//! acceptance rate collapsing as `B` grows.
+//!
+//! The default ([`PieceMode::Conditioned`]) is the rejection-free
+//! *conditioned quadrisection descent*
+//! ([`crate::kpgm::ConditionedBallDropSampler`]): the per-set prefix
+//! tries restrict every level of the descent to quadrants with retained
+//! cells below them, renormalized by downstream reachable mass, so each
+//! ball lands on a retained cell of the block with probability 1 and per
+//! cell `(x, y)` with probability exactly `P[x, y] / m_kl`. The per-piece
+//! edge count is drawn from the *restricted* mass
+//! `m_kl = Σ_{(x,y) ∈ C_k × C_l} P[x, y]` (aggregated bottom-up in the
+//! shared product DAG, not by an `O(|C_k|·|C_l|)` cell scan at sample
+//! time), clamped to the block's `|D_k|·|D_l|` cells. Total sampling work
+//! drops from `O(B² · d · |E_KPGM|)` to `O(d · |E|)` plus the one-off
+//! `O(d · n)`-ish trie/DAG setup.
+//!
+//! One pragmatic bound: a *dense* block (more cells than the full-space
+//! ball count, e.g. `D_1 × D_1` at balanced μ) keeps the plain descent
+//! even in conditioned mode — its product DAG would cost more to build
+//! than the rejections it avoids, and the full-space acceptance rate
+//! `cells / 4^d` is high exactly there. Sparse blocks, where acceptance
+//! collapses, are always conditioned. See
+//! [`crate::kpgm::ConditionedBallDropSampler`].
+//!
 //! Implementation notes
 //! --------------------
-//! * Pieces stream: each ball drop is filtered immediately against the two
-//!   `config → node` maps, so the raw KPGM sample (which covers the whole
+//! * Pieces stream: ball drops are appended directly to the shared output;
+//!   the raw KPGM sample (which in rejection mode covers the whole
 //!   `2^d × 2^d` space) is never materialized.
 //! * Duplicate semantics follow the Algorithm-1 *pseudo-code* (`E ← E ∪
 //!   {(S,T)}`, i.e. set union): duplicates collapse. Because distinct
 //!   pieces write disjoint `(D_k, D_l)` blocks of A, one global dedup at
 //!   the end is equivalent to per-piece set semantics.
+//! * Conditioned pieces drop i.i.d. balls and collapse duplicates (exact
+//!   Poisson thinning per cell); the rejection path keeps Algorithm 1's
+//!   full-space resample-on-duplicate, and balls it abandons after
+//!   `MAX_ATTEMPTS` are counted and surfaced (they used to vanish
+//!   silently); see
+//!   [`crate::coordinator::SampleReport::dropped_resamples`].
 //! * Each piece gets an RNG forked from the base seed by its piece id, so
 //!   results are reproducible and pieces can run on any worker in any
 //!   order (see [`crate::coordinator`]).
 
 use crate::graph::EdgeList;
 use crate::hashutil::{fast_set_with_capacity, FastSet};
-use crate::kpgm::BallDropSampler;
+use crate::kpgm::{BallDropSampler, ConditionedBallDropSampler, PieceSampler};
 use crate::magm::{AttributeAssignment, MagmParams};
 use crate::rng::Rng;
 
 use super::Partition;
 
-/// One quilt piece: KPGM-sample then filter to `(D_k, D_l)`.
+/// How quilt pieces place their balls.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PieceMode {
+    /// Conditioned quadrisection descent: every drop lands on a retained
+    /// cell (no filter-discard loop). The default.
+    #[default]
+    Conditioned,
+    /// Full-space Algorithm 1 plus filtering (the paper's literal
+    /// procedure); kept for A/B validation and ablations.
+    Rejection,
+}
+
+impl PieceMode {
+    /// Parse from the CLI / config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "conditioned" => Some(PieceMode::Conditioned),
+            "rejection" => Some(PieceMode::Rejection),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PieceMode::Conditioned => "conditioned",
+            PieceMode::Rejection => "rejection",
+        }
+    }
+}
+
+/// One quilt piece: KPGM-sample restricted (or filtered) to `(D_k, D_l)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PieceJob {
     /// Source partition set index (0-based).
@@ -45,18 +112,26 @@ pub struct PieceJob {
 pub struct QuiltSampler {
     params: MagmParams,
     seed: u64,
+    mode: PieceMode,
 }
 
 impl QuiltSampler {
     /// New sampler; d ≤ 32 (the KPGM index space is `2^d`).
     pub fn new(params: MagmParams) -> Self {
         assert!(params.depth() <= 32, "quilting needs d <= 32 (KPGM ids are u32)");
-        QuiltSampler { params, seed: 0 }
+        QuiltSampler { params, seed: 0, mode: PieceMode::default() }
     }
 
     /// Set the seed (builder style).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Set the piece mode (builder style; defaults to
+    /// [`PieceMode::Conditioned`]).
+    pub fn piece_mode(mut self, mode: PieceMode) -> Self {
+        self.mode = mode;
         self
     }
 
@@ -74,18 +149,32 @@ impl QuiltSampler {
 
     /// Sample a graph for a fixed attribute assignment.
     pub fn sample_with_attrs(&self, attrs: &AttributeAssignment) -> EdgeList {
+        self.sample_with_attrs_reporting(attrs).0
+    }
+
+    /// As [`Self::sample_with_attrs`], also returning the number of balls
+    /// abandoned after exhausting duplicate resamples (previously lost
+    /// silently).
+    pub fn sample_with_attrs_reporting(&self, attrs: &AttributeAssignment) -> (EdgeList, u64) {
         let mut partition = Partition::build(attrs.configs());
         maybe_build_dense(&mut partition, self.params.depth());
         let jobs = self.plan(&partition);
         let base = Rng::new(self.seed).fork(0x9011_7ed);
-        let kpgm = BallDropSampler::new(self.params.thetas().clone());
         let mut out = EdgeList::new(self.params.num_nodes());
+        let mut dropped = 0u64;
+        let kpgm = BallDropSampler::new(self.params.thetas().clone());
+        let conditioner = (self.mode == PieceMode::Conditioned)
+            .then(|| partition.conditioned_sampler(self.params.thetas()));
         for job in jobs {
+            let backend = match &conditioner {
+                Some(cond) => PieceBackend::Conditioned { cond, kpgm: &kpgm },
+                None => PieceBackend::Rejection(&kpgm),
+            };
             let mut rng = base.fork(job.fork_id);
-            sample_piece(&kpgm, &partition, job, &mut rng, &mut out);
+            dropped += sample_piece(backend, &partition, job, &mut rng, &mut out);
         }
         out.dedup();
-        out
+        (out, dropped)
     }
 
     /// The `B²` piece jobs for a partition (the coordinator distributes
@@ -110,6 +199,10 @@ impl QuiltSampler {
 /// (e.g. θ1 at d = 15 — the smallest d with X ≳ 2^20 — gives 0.7%).
 const FULL_DEDUP_MAX_DROPS: u64 = 1 << 20;
 
+/// Resample budget per ball on the rejection path before it is abandoned
+/// (and counted); the conditioned path collapses duplicates instead.
+const MAX_ATTEMPTS: u32 = 64;
+
 /// Build the dense config→node index when the configuration space is small
 /// enough (`B · 2^d · 4` bytes; gate at 2^22 configs ≈ 16 MB per set).
 pub(crate) fn maybe_build_dense(partition: &mut Partition, depth: usize) {
@@ -118,23 +211,95 @@ pub(crate) fn maybe_build_dense(partition: &mut Partition, depth: usize) {
     }
 }
 
-/// Run one piece: draw the KPGM edge count, stream ball drops with
-/// Algorithm 1's resample-on-duplicate semantics, filter against the
-/// `(D_k, D_l)` maps, un-permute, append.
+/// The shared sampling machinery a piece runs against, dispatched by
+/// [`PieceMode`]. Workers hold it by reference (both variants are `Sync`).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum PieceBackend<'a> {
+    /// Full-space Algorithm 1 + filter.
+    Rejection(&'a BallDropSampler),
+    /// Conditioned product-DAG descent; `kpgm` handles the dense blocks
+    /// the budgeted DAG excludes (full-space acceptance is high there).
+    Conditioned { cond: &'a ConditionedBallDropSampler, kpgm: &'a BallDropSampler },
+}
+
+/// Run one piece with the given backend; returns the number of balls
+/// abandoned after exhausting duplicate resamples.
 pub(crate) fn sample_piece(
+    backend: PieceBackend<'_>,
+    partition: &Partition,
+    job: PieceJob,
+    rng: &mut Rng,
+    out: &mut EdgeList,
+) -> u64 {
+    match backend {
+        PieceBackend::Rejection(kpgm) => sample_piece_rejection(kpgm, partition, job, rng, out),
+        PieceBackend::Conditioned { cond, kpgm } => match cond.piece(job.k, job.l) {
+            Some(piece) => sample_piece_conditioned(&piece, partition, job, rng, out),
+            None => sample_piece_rejection(kpgm, partition, job, rng, out),
+        },
+    }
+}
+
+/// Conditioned piece: draw the block edge count `x ~ Poisson(m_kl)`, drop
+/// `x` i.i.d. conditioned balls, and **collapse** duplicates (the
+/// Algorithm-1 pseudo-code's set union, which the global dedup already
+/// implements for cross-piece edges).
+///
+/// Collapse — not resample — is load-bearing for A/B parity: with i.i.d.
+/// `Poisson(m_kl)` drops, Poisson thinning makes every block cell receive
+/// an independent `Poisson(P[x,y])` hit count, so each cell is included
+/// independently with probability `1 − e^{−P}` — the same marginal the
+/// rejection path realizes (its within-block duplicates re-drop over the
+/// full space and almost surely leave the block). Resampling to a fresh
+/// *block* cell would instead force-distinct the placements and
+/// over-include cells of saturated blocks.
+///
+/// Never abandons a ball (duplicates merge by design), so the returned
+/// `dropped_resamples` contribution is always 0.
+pub(crate) fn sample_piece_conditioned(
+    piece: &PieceSampler<'_>,
+    partition: &Partition,
+    job: PieceJob,
+    rng: &mut Rng,
+    out: &mut EdgeList,
+) -> u64 {
+    let x = piece.draw_edge_count(rng);
+    if x == 0 {
+        return 0;
+    }
+    let mut seen: FastSet<u64> = fast_set_with_capacity(x as usize * 2);
+    for _ in 0..x {
+        let (s, t) = piece.drop_one(rng);
+        if seen.insert((s << 32) | t) {
+            // Conditioning guarantees the cell is retained: the lookups
+            // cannot miss.
+            let i = partition.lookup(job.k, s).expect("conditioned drop outside D_k");
+            let j = partition.lookup(job.l, t).expect("conditioned drop outside D_l");
+            out.push(i, j);
+        }
+    }
+    0
+}
+
+/// Rejection piece (the paper's literal Algorithm 2 step): draw the
+/// full-space KPGM edge count, stream ball drops with Algorithm 1's
+/// resample-on-duplicate semantics, filter against the `(D_k, D_l)` maps,
+/// un-permute, append.
+pub(crate) fn sample_piece_rejection(
     kpgm: &BallDropSampler,
     partition: &Partition,
     job: PieceJob,
     rng: &mut Rng,
     out: &mut EdgeList,
-) {
+) -> u64 {
     let x = kpgm.draw_edge_count(rng);
-    const MAX_ATTEMPTS: u32 = 64;
+    let mut dropped = 0u64;
     if x <= FULL_DEDUP_MAX_DROPS {
         // Faithful Algorithm 1: re-drop until the ball lands on a fresh
         // cell of the full 2^d × 2^d space.
         let mut seen: FastSet<u64> = fast_set_with_capacity(x as usize * 2);
         for _ in 0..x {
+            let mut resolved = false;
             for _ in 0..MAX_ATTEMPTS {
                 let (s, t) = kpgm.drop_one(rng);
                 if seen.insert(((s as u64) << 32) | t as u64) {
@@ -144,8 +309,12 @@ pub(crate) fn sample_piece(
                     ) {
                         out.push(i, j);
                     }
+                    resolved = true;
                     break;
                 }
+            }
+            if !resolved {
+                dropped += 1;
             }
         }
     } else {
@@ -154,6 +323,7 @@ pub(crate) fn sample_piece(
         // discarded cells collapse silently.
         let mut seen: FastSet<u64> = FastSet::default();
         for _ in 0..x {
+            let mut resolved = false;
             for _ in 0..MAX_ATTEMPTS {
                 let (s, t) = kpgm.drop_one(rng);
                 match (
@@ -163,15 +333,23 @@ pub(crate) fn sample_piece(
                     (Some(i), Some(j)) => {
                         if seen.insert(((i as u64) << 32) | j as u64) {
                             out.push(i, j);
+                            resolved = true;
                             break;
                         }
                         // retained duplicate: re-drop
                     }
-                    _ => break, // discarded ball, consumed
+                    _ => {
+                        resolved = true; // discarded ball, consumed
+                        break;
+                    }
                 }
+            }
+            if !resolved {
+                dropped += 1;
             }
         }
     }
+    dropped
 }
 
 #[cfg(test)]
@@ -208,6 +386,15 @@ mod tests {
     }
 
     #[test]
+    fn rejection_mode_deterministic_too() {
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 256, 8);
+        let g1 = QuiltSampler::new(params.clone()).piece_mode(PieceMode::Rejection).seed(7).sample();
+        let g2 = QuiltSampler::new(params).piece_mode(PieceMode::Rejection).seed(7).sample();
+        assert_eq!(g1, g2);
+        assert!(g1.validate().is_ok());
+    }
+
+    #[test]
     fn no_duplicate_edges_after_sample() {
         let params = MagmParams::homogeneous(Initiator::THETA2, 0.5, 512, 9);
         let mut g = QuiltSampler::new(params).seed(3).sample();
@@ -220,6 +407,14 @@ mod tests {
         let g = QuiltSampler::new(params).seed(5).sample();
         assert!(g.validate().is_ok());
         assert_eq!(g.num_nodes(), 300);
+    }
+
+    #[test]
+    fn piece_mode_parses() {
+        assert_eq!(PieceMode::parse("conditioned"), Some(PieceMode::Conditioned));
+        assert_eq!(PieceMode::parse("rejection"), Some(PieceMode::Rejection));
+        assert_eq!(PieceMode::parse("bogus"), None);
+        assert_eq!(PieceMode::default().name(), "conditioned");
     }
 
     #[test]
@@ -249,6 +444,81 @@ mod tests {
             (mean - want).abs() / want < 0.05,
             "mean={mean} want={want}"
         );
+    }
+
+    #[test]
+    fn restricted_mass_sums_to_full_expectation() {
+        // Σ_{k,l} m_kl over all B² pieces must equal Σ_{i,j} P[λ_i, λ_j]
+        // exactly: the blocks tile the adjacency matrix.
+        let n = 64;
+        let d = 6;
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.6, n, d);
+        let mut rng = Rng::new(227);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        let mut partition = Partition::build(attrs.configs());
+        partition.build_tries(d as usize);
+        let cond = partition.conditioned_sampler(params.thetas());
+        let b = partition.size();
+        let mut total_mass = 0.0;
+        let mut total_cells = 0u64;
+        for k in 0..b {
+            for l in 0..b {
+                let piece = cond.piece(k, l).expect("small blocks are all conditioned");
+                total_mass += piece.restricted_mass();
+                total_cells += piece.num_cells();
+            }
+        }
+        let mut want = 0.0;
+        for i in 0..n as NodeId {
+            for j in 0..n as NodeId {
+                want += magm::edge_probability(&params, &attrs, i, j);
+            }
+        }
+        assert!(
+            (total_mass - want).abs() / want < 1e-9,
+            "sum m_kl = {total_mass}, full expectation = {want}"
+        );
+        assert_eq!(total_cells, (n * n) as u64, "blocks must tile all n² cells");
+    }
+
+    #[test]
+    fn conditioned_marginals_match_rejection() {
+        // The A/B parity claim behind deprecating the rejection path: for
+        // fixed attributes the two modes must have identical per-cell
+        // marginals (both equal P[λ_i, λ_j] to first order).
+        let n = 16;
+        let d = 4;
+        let params = MagmParams::homogeneous(Initiator::THETA2, 0.5, n, d);
+        let mut rng = Rng::new(233);
+        let attrs = AttributeAssignment::sample(&params, &mut rng);
+        let trials = 3000u64;
+        let mut cond_counts = vec![vec![0u32; n]; n];
+        let mut rej_counts = vec![vec![0u32; n]; n];
+        for t in 0..trials {
+            let g = QuiltSampler::new(params.clone()).seed(t).sample_with_attrs(&attrs);
+            for &(s, tt) in g.edges() {
+                cond_counts[s as usize][tt as usize] += 1;
+            }
+            let g = QuiltSampler::new(params.clone())
+                .piece_mode(PieceMode::Rejection)
+                .seed(t)
+                .sample_with_attrs(&attrs);
+            for &(s, tt) in g.edges() {
+                rej_counts[s as usize][tt as usize] += 1;
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let c = cond_counts[i][j] as f64 / trials as f64;
+                let r = rej_counts[i][j] as f64 / trials as f64;
+                let p = r.clamp(1e-4, 1.0 - 1e-4);
+                let sigma = (2.0 * p * (1.0 - p) / trials as f64).sqrt();
+                assert!(
+                    (c - r).abs() < 6.0 * sigma + 0.01,
+                    "cell ({i},{j}): conditioned {c:.4} vs rejection {r:.4}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -316,5 +586,25 @@ mod tests {
         let g = QuiltSampler::new(params).seed(2).sample();
         assert_eq!(g.num_nodes(), 16);
         assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn both_modes_work_in_saturated_blocks() {
+        // θ near 1 saturates blocks; the conditioned clamp to |D_k|·|D_l|
+        // plus the resample budget must terminate and report drops.
+        let params = MagmParams::homogeneous(
+            Initiator::new([0.95, 0.95, 0.95, 0.95]),
+            0.5,
+            16,
+            4,
+        );
+        for mode in [PieceMode::Conditioned, PieceMode::Rejection] {
+            let sampler = QuiltSampler::new(params.clone()).piece_mode(mode).seed(11);
+            let mut rng = Rng::new(11);
+            let attrs = AttributeAssignment::sample(sampler.params(), &mut rng);
+            let (mut g, _dropped) = sampler.sample_with_attrs_reporting(&attrs);
+            assert!(g.num_edges() <= 16 * 16);
+            assert_eq!(g.dedup(), 0);
+        }
     }
 }
