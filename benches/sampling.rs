@@ -1,9 +1,11 @@
 //! End-to-end sampling bench — regenerates the series behind paper
-//! Figures 10 and 11 (quilting vs naive runtime, and per-edge cost), plus
-//! the conditioned-vs-rejection piece sweep over partition size B
-//! (summary emitted to `BENCH_quilt.json` for the perf trajectory).
+//! Figures 10 and 11 (quilting vs naive runtime, and per-edge cost), the
+//! conditioned-vs-rejection piece sweep over partition size B, and the
+//! shard-count sweep of the coordinator's streaming merge (per-shard
+//! merge stats included). Summaries are emitted to `BENCH_quilt.json`
+//! for the perf trajectory.
 //!
-//! `MAGQUILT_BENCH_FAST=1` shrinks the sweep for smoke runs.
+//! `MAGQUILT_BENCH_FAST=1` shrinks the sweeps for smoke runs.
 
 use std::time::Instant;
 
@@ -35,7 +37,8 @@ fn attrs_with_b(b: usize, c_distinct: usize, d: usize, seed: u64) -> AttributeAs
 }
 
 /// Conditioned-vs-rejection piece benchmark sweeping partition size B.
-fn piece_mode_sweep() {
+/// Returns the JSON rows for `BENCH_quilt.json`.
+fn piece_mode_sweep() -> String {
     let d = 12usize;
     let (bs, c_distinct, trials): (&[usize], usize, u64) =
         if fast() { (&[4, 16], 64, 2) } else { (&[4, 16, 64], 192, 3) };
@@ -77,15 +80,75 @@ fn piece_mode_sweep() {
              \"speedup\": {speedup:.2}}}"
         ));
     }
-    let json = format!(
-        "{{\n  \"bench\": \"quilt_piece_modes\",\n  \"theta\": \"theta1\",\n  \
-         \"mu\": 0.5,\n  \"d\": {d},\n  \"trials\": {trials},\n  \"results\": [\n{}\n  ]\n}}\n",
+    format!(
+        "  \"piece_modes\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
+         \"trials\": {trials},\n    \"results\": [\n{}\n    ]\n  }}",
         rows.join(",\n")
+    )
+}
+
+/// Shard-count sweep of the coordinator's streaming merge: same model,
+/// same seed, S ∈ {1, 2, 4, 8} — the edge set is identical by
+/// construction, so the sweep isolates merge throughput and per-shard
+/// residency. Returns the JSON rows for `BENCH_quilt.json`.
+fn shard_sweep() -> String {
+    let (d, shard_counts, trials): (u32, &[usize], u64) =
+        if fast() { (12, &[1, 4], 2) } else { (15, &[1, 2, 4, 8], 3) };
+    let n = 1usize << d;
+    let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
+    println!("\n# bench: coordinator shard sweep (theta1, d={d}, n=2^{d})");
+    println!(
+        "{:>4} {:>8} {:>10} {:>14} {:>14} {:>12}",
+        "S", "edges", "wall_ms", "edges/s", "peak_resident", "dups_dropped"
     );
-    match std::fs::write("BENCH_quilt.json", &json) {
-        Ok(()) => println!("wrote BENCH_quilt.json"),
-        Err(e) => eprintln!("could not write BENCH_quilt.json: {e}"),
+    let mut rows = Vec::new();
+    for &s in shard_counts {
+        let coord = Coordinator::new().shards(s);
+        let mut ms = Vec::new();
+        let mut last = None;
+        for t in 0..trials {
+            let start = Instant::now();
+            let rep = coord.sample_quilt(&params, t);
+            ms.push(start.elapsed().as_secs_f64() * 1e3);
+            last = Some(rep);
+        }
+        let wall = median(&mut ms);
+        let rep = last.expect("at least one trial");
+        let edges = rep.graph.num_edges();
+        let eps = edges as f64 / (wall / 1e3).max(1e-9);
+        let peak_max = rep.shard_stats.iter().map(|st| st.peak_resident).max().unwrap_or(0);
+        let dups: u64 = rep.shard_stats.iter().map(|st| st.duplicates_dropped).sum();
+        let batches: u64 = rep.shard_stats.iter().map(|st| st.batches).sum();
+        println!(
+            "{:>4} {:>8} {:>10.2} {:>14.0} {:>14} {:>12}",
+            s, edges, wall, eps, peak_max, dups
+        );
+        let per_shard: Vec<String> = rep
+            .shard_stats
+            .iter()
+            .map(|st| {
+                format!(
+                    "{{\"shard\": {}, \"edges\": {}, \"batches\": {}, \"max_batch\": {}, \
+                     \"duplicates_dropped\": {}, \"peak_resident\": {}}}",
+                    st.shard, st.edges, st.batches, st.max_batch, st.duplicates_dropped,
+                    st.peak_resident
+                )
+            })
+            .collect();
+        rows.push(format!(
+            "      {{\"shards\": {s}, \"workers\": {}, \"edges\": {edges}, \
+             \"wall_ms\": {wall:.3}, \"edges_per_sec\": {eps:.0}, \
+             \"batches_total\": {batches}, \"duplicates_dropped\": {dups}, \
+             \"peak_resident_max\": {peak_max},\n       \"per_shard\": [{}]}}",
+            rep.workers,
+            per_shard.join(", ")
+        ));
     }
+    format!(
+        "  \"shard_sweep\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
+         \"trials\": {trials},\n    \"results\": [\n{}\n    ]\n  }}",
+        rows.join(",\n")
+    )
 }
 
 fn main() {
@@ -154,7 +217,13 @@ fn main() {
             );
         }
     }
-    piece_mode_sweep();
+    let piece_rows = piece_mode_sweep();
+    let shard_rows = shard_sweep();
+    let json = format!("{{\n  \"bench\": \"quilt\",\n{piece_rows},\n{shard_rows}\n}}\n");
+    match std::fs::write("BENCH_quilt.json", &json) {
+        Ok(()) => println!("wrote BENCH_quilt.json"),
+        Err(e) => eprintln!("could not write BENCH_quilt.json: {e}"),
+    }
 }
 
 fn median(xs: &mut [f64]) -> f64 {

@@ -5,7 +5,9 @@
 //! magquilt generate [--config F] [--log2-nodes N] [--attributes D]
 //!                   [--mu MU] [--theta a,b,c,d] [--sampler KIND]
 //!                   [--piece-mode MODE] [--seed S] [--workers W]
-//!                   [--output PATH] [--binary] [--stats]
+//!                   [--shards S] [--sink KIND] [--output PATH]
+//!                   [--binary] [--stats]
+//! magquilt sample …         (alias of generate; accepts --out for --output)
 //! magquilt stats <edge-list file>
 //! magquilt experiment <fig1|fig5|...|fig14|all> [--max-log2n N]
 //!                   [--naive-max-log2n N] [--trials T] [--seed S]
@@ -23,7 +25,7 @@ use crate::config::{load_config, parse_piece_mode, ModelSpec, RunSpec, SamplerKi
 use crate::coordinator::Coordinator;
 use crate::experiments::{run_experiment, Scale, ALL_EXPERIMENTS};
 use crate::graph::{read_edge_list_binary, read_edge_list_text, write_edge_list_binary,
-                   write_edge_list_text, EdgeList};
+                   write_edge_list_text, BinaryFileSink, CountingSink, EdgeList};
 use crate::kpgm::Initiator;
 use crate::magm::{AttributeAssignment, MagmParams};
 use crate::rng::Rng;
@@ -99,7 +101,9 @@ USAGE:
     magquilt generate [--config F] [--log2-nodes N] [--attributes D]
                       [--mu MU] [--theta a,b,c,d] [--sampler KIND]
                       [--piece-mode MODE] [--seed S] [--workers W]
-                      [--output PATH] [--binary] [--stats]
+                      [--shards S] [--sink KIND] [--output PATH]
+                      [--binary] [--stats]
+    magquilt sample   … (alias of generate; --out is accepted for --output)
     magquilt stats <edge-list file>
     magquilt experiment <id|all> [--max-log2n N] [--naive-max-log2n N]
                       [--trials T] [--seed S] [--out DIR]
@@ -108,6 +112,8 @@ USAGE:
 
 SAMPLERS: quilt (Algorithm 2) | hybrid (§5) | naive | naive-xla
 PIECE MODES: conditioned (rejection-free, default) | rejection (paper-literal)
+SINKS: collect (in-memory, default) | counting (degrees only, no graph)
+       | binary (stream shards straight to the binary file at --output)
 EXPERIMENTS: fig1 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14 | all
 ";
 
@@ -119,7 +125,7 @@ pub fn run(argv: &[String]) -> Result<()> {
     };
     let rest = &argv[1..];
     match cmd {
-        "generate" => cmd_generate(rest),
+        "generate" | "sample" => cmd_generate(rest),
         "stats" => cmd_stats(rest),
         "experiment" => cmd_experiment(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
@@ -167,13 +173,16 @@ fn specs_from_args(args: &Args) -> Result<(ModelSpec, RunSpec)> {
     if let Some(v) = args.get_parsed::<usize>("workers")? {
         run.workers = v;
     }
+    if let Some(v) = args.get_parsed::<usize>("shards")? {
+        run.shards = v;
+    }
     if let Some(s) = args.get("sampler") {
         run.sampler = SamplerKind::parse(s)?;
     }
     if let Some(s) = args.get("piece-mode") {
         run.piece_mode = parse_piece_mode(s)?;
     }
-    if let Some(o) = args.get("output") {
+    if let Some(o) = args.get("output").or_else(|| args.get("out")) {
         run.output = Some(o.to_string());
     }
     model.validate()?;
@@ -194,18 +203,30 @@ fn cmd_generate(raw: &[String]) -> Result<()> {
     let args = Args::parse(raw, &["binary", "stats"])?;
     let (model, run) = specs_from_args(&args)?;
     let params = model_params(&model);
+    let sink = args.get("sink").unwrap_or("collect");
     eprintln!(
-        "model: n=2^{} d={} mu={} theta={:?} | sampler={} pieces={} seed={}",
+        "model: n=2^{} d={} mu={} theta={:?} | sampler={} pieces={} seed={} sink={}",
         model.log2_nodes,
         model.attributes,
         model.mu,
         model.theta,
         run.sampler.name(),
         run.piece_mode.name(),
-        run.seed
+        run.seed,
+        sink,
     );
+    match sink {
+        "collect" => cmd_generate_collect(&args, &params, &run),
+        "counting" => cmd_generate_counting(&params, &run),
+        "binary" => cmd_generate_binary(&args, &params, &run),
+        other => bail!("unknown sink {other:?} (expected collect|counting|binary)"),
+    }
+}
+
+/// The default path: collect the graph in memory, optionally write/stat it.
+fn cmd_generate_collect(args: &Args, params: &MagmParams, run: &RunSpec) -> Result<()> {
     let start = std::time::Instant::now();
-    let graph = sample_with(&params, &run)?;
+    let graph = sample_with(params, run)?;
     let ms = start.elapsed().as_secs_f64() * 1e3;
     println!(
         "sampled {} edges over {} nodes in {:.1} ms ({:.0} edges/s)",
@@ -216,11 +237,7 @@ fn cmd_generate(raw: &[String]) -> Result<()> {
     );
     if let Some(path) = &run.output {
         let path = Path::new(path);
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)?;
-            }
-        }
+        ensure_parent_dir(path)?;
         if args.has_flag("binary") || path.extension().is_some_and(|e| e == "bin") {
             write_edge_list_binary(&graph, path)?;
         } else {
@@ -235,14 +252,102 @@ fn cmd_generate(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Degrees-and-counts-only run: the graph is never held in memory.
+fn cmd_generate_counting(params: &MagmParams, run: &RunSpec) -> Result<()> {
+    if run.output.is_some() {
+        bail!("--sink counting never writes a graph; drop --output or use --sink binary");
+    }
+    let coord = coordinator_for(run)?;
+    let (counts, stats) = match run.sampler {
+        SamplerKind::Quilt => {
+            coord.sample_quilt_with_sink(params, run.seed, CountingSink::new())?
+        }
+        SamplerKind::Hybrid => {
+            coord.sample_hybrid_with_sink(params, run.seed, CountingSink::new())?
+        }
+        _ => unreachable!("coordinator_for rejects other samplers"),
+    };
+    warn_dropped(stats.dropped_resamples);
+    println!(
+        "sampled {} edges over {} nodes in {:.1} ms ({:.0} edges/s, {} workers, {} shards)",
+        counts.num_edges, counts.num_nodes, stats.wall_ms, stats.edges_per_sec,
+        stats.workers, stats.num_shards
+    );
+    let mean = if counts.num_nodes == 0 {
+        0.0
+    } else {
+        counts.num_edges as f64 / counts.num_nodes as f64
+    };
+    println!(
+        "self-loops {} | max out/in degree {} / {} | mean out-degree {mean:.3}",
+        counts.self_loops,
+        counts.max_out_degree(),
+        counts.max_in_degree(),
+    );
+    Ok(())
+}
+
+/// Stream the sample straight into the binary edge-list file.
+fn cmd_generate_binary(args: &Args, params: &MagmParams, run: &RunSpec) -> Result<()> {
+    if args.has_flag("stats") {
+        bail!("--stats needs the collect sink; run `magquilt stats <file>` on the output");
+    }
+    let path = run
+        .output
+        .as_deref()
+        .ok_or_else(|| anyhow!("--sink binary needs --output (or --out) <path>"))?;
+    let path = Path::new(path);
+    ensure_parent_dir(path)?;
+    let coord = coordinator_for(run)?;
+    let sink = BinaryFileSink::create(path);
+    let (written, stats) = match run.sampler {
+        SamplerKind::Quilt => coord.sample_quilt_with_sink(params, run.seed, sink)?,
+        SamplerKind::Hybrid => coord.sample_hybrid_with_sink(params, run.seed, sink)?,
+        _ => unreachable!("coordinator_for rejects other samplers"),
+    };
+    warn_dropped(stats.dropped_resamples);
+    println!(
+        "wrote {} ({} edges, {:.1} ms, {} workers, {} shards)",
+        path.display(),
+        written,
+        stats.wall_ms,
+        stats.workers,
+        stats.num_shards
+    );
+    Ok(())
+}
+
+fn ensure_parent_dir(path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    Ok(())
+}
+
+/// A coordinator configured from the run spec; the streaming sinks only
+/// make sense for the coordinated samplers.
+fn coordinator_for(run: &RunSpec) -> Result<Coordinator> {
+    match run.sampler {
+        SamplerKind::Quilt | SamplerKind::Hybrid => Ok(Coordinator::new()
+            .workers(run.workers)
+            .shards(run.shards)
+            .piece_mode(run.piece_mode)),
+        other => bail!(
+            "sink counting|binary needs the quilt or hybrid sampler, not {}",
+            other.name()
+        ),
+    }
+}
+
 /// Warn when balls were abandoned after exhausting duplicate resamples
 /// (saturated blocks; the count used to be silently lost).
-fn warn_dropped(report: &crate::coordinator::SampleReport) {
-    if report.dropped_resamples > 0 {
+fn warn_dropped(dropped_resamples: u64) {
+    if dropped_resamples > 0 {
         eprintln!(
-            "warning: {} ball(s) abandoned after exhausting duplicate resamples \
-             (saturated blocks)",
-            report.dropped_resamples
+            "warning: {dropped_resamples} ball(s) abandoned after exhausting duplicate \
+             resamples (saturated blocks)"
         );
     }
 }
@@ -253,17 +358,19 @@ pub fn sample_with(params: &MagmParams, run: &RunSpec) -> Result<EdgeList> {
         SamplerKind::Quilt => {
             let report = Coordinator::new()
                 .workers(run.workers)
+                .shards(run.shards)
                 .piece_mode(run.piece_mode)
                 .sample_quilt(params, run.seed);
-            warn_dropped(&report);
+            warn_dropped(report.dropped_resamples);
             report.graph
         }
         SamplerKind::Hybrid => {
             let report = Coordinator::new()
                 .workers(run.workers)
+                .shards(run.shards)
                 .piece_mode(run.piece_mode)
                 .sample_hybrid(params, run.seed);
-            warn_dropped(&report);
+            warn_dropped(report.dropped_resamples);
             report.graph
         }
         SamplerKind::Naive => {
@@ -406,7 +513,8 @@ mod tests {
     fn specs_from_cli_overrides() {
         let a = Args::parse(
             &s(&["--log2-nodes", "8", "--mu", "0.7", "--theta", "0.1,0.2,0.3,0.4",
-                 "--sampler", "hybrid", "--piece-mode", "rejection", "--seed", "5"]),
+                 "--sampler", "hybrid", "--piece-mode", "rejection", "--seed", "5",
+                 "--shards", "6"]),
             &[],
         )
         .unwrap();
@@ -418,6 +526,30 @@ mod tests {
         assert_eq!(run.sampler, SamplerKind::Hybrid);
         assert_eq!(run.piece_mode, crate::quilt::PieceMode::Rejection);
         assert_eq!(run.seed, 5);
+        assert_eq!(run.shards, 6);
+    }
+
+    #[test]
+    fn out_is_an_alias_for_output() {
+        let a = Args::parse(&s(&["--out", "graph.bin"]), &[]).unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.output.as_deref(), Some("graph.bin"));
+        // --output wins when both are given.
+        let a = Args::parse(&s(&["--out", "a.bin", "--output", "b.bin"]), &[]).unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.output.as_deref(), Some("b.bin"));
+    }
+
+    #[test]
+    fn bad_sink_rejected() {
+        assert!(run(&s(&["generate", "--log2-nodes", "6", "--sink", "bogus"])).is_err());
+        // Streaming sinks need the coordinated samplers.
+        assert!(run(&s(&[
+            "generate", "--log2-nodes", "6", "--sampler", "naive", "--sink", "counting"
+        ]))
+        .is_err());
+        // Binary sink without an output path is an error.
+        assert!(run(&s(&["generate", "--log2-nodes", "6", "--sink", "binary"])).is_err());
     }
 
     #[test]

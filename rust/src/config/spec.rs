@@ -134,6 +134,10 @@ pub struct RunSpec {
     pub seed: u64,
     /// Worker threads for the coordinator (0 = available parallelism).
     pub workers: usize,
+    /// Shard mergers for the coordinator's streaming merge (0 = auto,
+    /// matching the worker count). The sampled edge set is identical for
+    /// every shard count.
+    pub shards: usize,
     /// Sampler implementation.
     pub sampler: SamplerKind,
     /// How quilt pieces place balls (conditioned = rejection-free default;
@@ -146,12 +150,13 @@ pub struct RunSpec {
 }
 
 impl RunSpec {
-    /// Defaults: seed 42, auto workers, quilt sampler with conditioned
-    /// pieces, 1 trial.
+    /// Defaults: seed 42, auto workers, auto shards, quilt sampler with
+    /// conditioned pieces, 1 trial.
     pub fn default_spec() -> Self {
         RunSpec {
             seed: 42,
             workers: 0,
+            shards: 0,
             sampler: SamplerKind::Quilt,
             piece_mode: PieceMode::Conditioned,
             output: None,
@@ -169,6 +174,10 @@ impl RunSpec {
         if let Some(v) = sec.get("workers") {
             spec.workers =
                 v.as_int().ok_or_else(|| anyhow!("run.workers must be an integer"))? as usize;
+        }
+        if let Some(v) = sec.get("shards") {
+            spec.shards =
+                v.as_int().ok_or_else(|| anyhow!("run.shards must be an integer"))? as usize;
         }
         if let Some(v) = sec.get("sampler") {
             spec.sampler = SamplerKind::parse(
@@ -231,6 +240,17 @@ mod tests {
         assert_eq!(spec.piece_mode, PieceMode::Rejection);
         assert_eq!(RunSpec::default_spec().piece_mode, PieceMode::Conditioned);
         assert!(parse_piece_mode("bogus").is_err());
+    }
+
+    #[test]
+    fn shards_parse_from_config() {
+        let m = parse_toml("[run]\nshards = 8\nworkers = 4\n").unwrap();
+        let spec = RunSpec::from_section(m.get("run")).unwrap();
+        assert_eq!(spec.shards, 8);
+        assert_eq!(spec.workers, 4);
+        assert_eq!(RunSpec::default_spec().shards, 0);
+        let bad = parse_toml("[run]\nshards = \"many\"\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Job coordinator: plans the quilt pieces (and the hybrid's ER blocks),
 //! routes them across a bounded worker pool, and merges the edge streams
-//! into one quilted sample.
+//! with a **sharded streaming merge** into any [`crate::graph::EdgeSink`].
 //!
 //! The quilting algorithm is embarrassingly parallel at the piece level —
 //! each of the `B²` KPGM samples (and each ER block of the §5 hybrid) is
@@ -11,17 +11,32 @@
 //!   ordered by estimated cost — for conditioned plans the per-piece
 //!   **restricted mass** `m_kl`, not the uniform full-space ball count —
 //!   so the heaviest pieces start first and the pool drains evenly,
-//! * **workers** (std threads) pull jobs from a shared queue and emit
-//!   per-job edge batches into a bounded channel (backpressure: workers
-//!   block when the merger falls behind),
-//! * the **merger** (the calling thread) absorbs batches into the output
-//!   edge list, then dedups (the quilting step).
+//! * **workers** (std threads) pull jobs from a shared queue and route
+//!   each job's edges *by source-node range* to one of `S` **shard
+//!   mergers** over bounded channels (backpressure: workers block when a
+//!   merger falls behind),
+//! * each **shard merger** ([`crate::graph::ShardMerger`]) folds arriving
+//!   batches into one sorted, deduplicated run incrementally, so the
+//!   pre-dedup edge multiset is never materialized in a single buffer:
+//!   per-shard residency is bounded by the post-dedup shard size plus
+//!   batch-sized merge overhead (at most two batches),
+//! * finished shards are handed to the **sink** in ascending index order;
+//!   since shards partition the source range, their concatenation is the
+//!   globally sorted, deduplicated edge list — there is no final sort.
+//!
+//! Sinks ([`crate::graph::EdgeSink`]) decouple merging from destination:
+//! collect in memory ([`crate::graph::CollectSink`], the default used by
+//! [`Coordinator::run`]), accumulate degrees only
+//! ([`crate::graph::CountingSink`]), or stream straight to the binary
+//! edge-list format ([`crate::graph::BinaryFileSink`]) for samples larger
+//! than RAM.
 //!
 //! Determinism: every job carries a stable RNG fork id derived from the
-//! plan, so the *set* of sampled edges is independent of worker count and
-//! scheduling order; [`SampleReport::graph`] is canonicalized (sorted) by
-//! the final dedup.
+//! plan, so the *set* of sampled edges is independent of worker count,
+//! shard count, and scheduling order; the delivered edge list is
+//! bit-for-bit the sequential samplers' (sorted, deduplicated) output
+//! for the same seed.
 
 mod pool;
 
-pub use pool::{Coordinator, JobPlan, SampleReport};
+pub use pool::{Coordinator, JobPlan, RunStats, SampleReport};

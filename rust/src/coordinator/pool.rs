@@ -1,10 +1,12 @@
-//! The worker pool and job plan.
+//! The worker pool, job plan, and sharded streaming merge.
 
+use std::io;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::graph::{EdgeList, NodeId};
+use crate::graph::{CollectSink, Edge, EdgeList, EdgeSink, NodeId, ShardMergeStats,
+                   ShardMerger, ShardSpec};
 use crate::kpgm::{BallDropSampler, ConditionedBallDropSampler};
 use crate::magm::{AttributeAssignment, MagmParams};
 use crate::quilt::{sample_er_block, HybridPlan, HybridSampler, Partition, PieceBackend,
@@ -106,7 +108,31 @@ impl JobPlan {
     }
 }
 
-/// Result of a coordinated sampling run.
+/// Sink-agnostic statistics of one coordinated sampling run.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    /// Partition size B (of the quilted part).
+    pub partition_size: usize,
+    /// Total jobs executed.
+    pub num_jobs: usize,
+    /// Worker threads used.
+    pub workers: usize,
+    /// Shard mergers used.
+    pub num_shards: usize,
+    /// Post-dedup edge count delivered to the sink.
+    pub num_edges: u64,
+    /// Wall-clock milliseconds.
+    pub wall_ms: f64,
+    /// Edges per second of wall time (post-dedup edges).
+    pub edges_per_sec: f64,
+    /// Balls abandoned after exhausting duplicate resamples (previously
+    /// lost silently; 0 in healthy runs, non-zero signals saturation).
+    pub dropped_resamples: u64,
+    /// Per-shard merge statistics (one entry per shard, in index order).
+    pub shard_stats: Vec<ShardMergeStats>,
+}
+
+/// Result of a coordinated sampling run collected in memory.
 #[derive(Debug)]
 pub struct SampleReport {
     /// The sampled graph (deduplicated, canonical order).
@@ -117,6 +143,8 @@ pub struct SampleReport {
     pub num_jobs: usize,
     /// Worker threads used.
     pub workers: usize,
+    /// Shard mergers used.
+    pub num_shards: usize,
     /// Wall-clock milliseconds.
     pub wall_ms: f64,
     /// Edges per second of wall time (post-dedup edges).
@@ -124,7 +152,12 @@ pub struct SampleReport {
     /// Balls abandoned after exhausting duplicate resamples (previously
     /// lost silently; 0 in healthy runs, non-zero signals saturation).
     pub dropped_resamples: u64,
+    /// Per-shard merge statistics (one entry per shard, in index order).
+    pub shard_stats: Vec<ShardMergeStats>,
 }
+
+/// Upper bound on shard mergers (each is a thread).
+const MAX_SHARDS: usize = 256;
 
 /// The leader/worker coordinator.
 #[derive(Debug, Clone)]
@@ -132,6 +165,8 @@ pub struct Coordinator {
     workers: usize,
     channel_capacity: usize,
     piece_mode: PieceMode,
+    /// Shard-merger count; 0 = auto (match the worker count).
+    shards: usize,
 }
 
 impl Default for Coordinator {
@@ -141,11 +176,11 @@ impl Default for Coordinator {
 }
 
 impl Coordinator {
-    /// Workers = available parallelism (capped at 16; the merger is one
-    /// more thread).
+    /// Workers = available parallelism (capped at 16; shard mergers are
+    /// additional threads, one per shard).
     pub fn new() -> Self {
         let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(16);
-        Coordinator { workers, channel_capacity: 64, piece_mode: PieceMode::default() }
+        Coordinator { workers, channel_capacity: 64, piece_mode: PieceMode::default(), shards: 0 }
     }
 
     /// Set the worker count (0 = auto).
@@ -156,7 +191,15 @@ impl Coordinator {
         self
     }
 
-    /// Bound on in-flight edge batches (backpressure knob).
+    /// Set the shard-merger count (0 = auto, matching the worker count).
+    /// The sampled edge set is identical for every shard count; only the
+    /// merge parallelism and per-shard memory change.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Bound on in-flight edge batches **per shard** (backpressure knob).
     pub fn channel_capacity(mut self, cap: usize) -> Self {
         self.channel_capacity = cap.max(1);
         self
@@ -278,13 +321,88 @@ impl Coordinator {
         self.run(plan)
     }
 
-    /// Execute a plan on the pool and merge the result.
+    /// As [`Self::sample_quilt`], delivering the edges to `sink` instead
+    /// of collecting them in memory.
+    pub fn sample_quilt_with_sink<K: EdgeSink>(
+        &self,
+        params: &MagmParams,
+        seed: u64,
+        sink: K,
+    ) -> io::Result<(K::Output, RunStats)> {
+        let mut rng = Rng::new(seed);
+        let attrs = AttributeAssignment::sample(params, &mut rng);
+        let plan = self.plan_quilt(params, &attrs, seed);
+        self.run_with_sink(plan, sink)
+    }
+
+    /// As [`Self::sample_hybrid`], delivering the edges to `sink`.
+    pub fn sample_hybrid_with_sink<K: EdgeSink>(
+        &self,
+        params: &MagmParams,
+        seed: u64,
+        sink: K,
+    ) -> io::Result<(K::Output, RunStats)> {
+        let mut rng = Rng::new(seed);
+        let attrs = AttributeAssignment::sample(params, &mut rng);
+        let plan = self.plan_hybrid(params, &attrs, seed);
+        self.run_with_sink(plan, sink)
+    }
+
+    /// Execute a plan on the pool, collecting the merged graph in memory.
     pub fn run(&self, plan: JobPlan) -> SampleReport {
+        let (graph, stats) = self
+            .run_with_sink(plan, CollectSink::new())
+            .expect("in-memory collect sink cannot fail");
+        SampleReport {
+            graph,
+            partition_size: stats.partition_size,
+            num_jobs: stats.num_jobs,
+            workers: stats.workers,
+            num_shards: stats.num_shards,
+            wall_ms: stats.wall_ms,
+            edges_per_sec: stats.edges_per_sec,
+            dropped_resamples: stats.dropped_resamples,
+            shard_stats: stats.shard_stats,
+        }
+    }
+
+    /// Execute a plan with the sharded streaming merge, delivering the
+    /// finished shards to `sink`.
+    ///
+    /// Data flow: workers pull jobs from the shared queue, sample each
+    /// job's edges, and route them **by source-node range** to `S` shard
+    /// mergers over bounded channels (backpressure per shard). Each
+    /// [`ShardMerger`] folds arriving batches into one sorted,
+    /// deduplicated run, so no thread ever holds the pre-dedup edge
+    /// multiset: per-shard residency is bounded by the post-dedup shard
+    /// size plus batch-sized merge overhead (at most two batches inside
+    /// the merger, see [`crate::graph::ShardMergeStats::peak_resident`],
+    /// plus up to `channel_capacity` batches queued in the shard's
+    /// bounded channel). Finished shards are handed to the
+    /// sink in ascending index order — their concatenation is the
+    /// globally sorted edge list, with no final sort or dedup pass.
+    ///
+    /// Determinism: jobs carry the same RNG fork ids as the sequential
+    /// samplers, and routing/merging only rearranges edges, so the
+    /// delivered edge list is bit-for-bit the sequential samplers'
+    /// (sorted, deduplicated) output for the same seed — for every
+    /// shard count and worker count.
+    pub fn run_with_sink<K: EdgeSink>(
+        &self,
+        plan: JobPlan,
+        mut sink: K,
+    ) -> io::Result<(K::Output, RunStats)> {
         let start = Instant::now();
         let n = plan.params.num_nodes();
         let partition_size = plan.partition.size();
         let num_jobs = plan.jobs.len();
         let workers = self.workers.max(1);
+        // Each shard is a merger thread; cap so a pathological --shards
+        // cannot spawn unbounded threads.
+        let requested = if self.shards == 0 { workers } else { self.shards };
+        let spec = ShardSpec::new(n, requested.min(MAX_SHARDS));
+        let num_shards = spec.num_shards();
+        sink.begin(n, num_shards)?;
 
         let kpgm = BallDropSampler::new(plan.params.thetas().clone());
         // Matches the single-threaded samplers' fork tags so coordinated
@@ -298,9 +416,16 @@ impl Coordinator {
 
         let next_job = AtomicUsize::new(0);
         let dropped_total = AtomicU64::new(0);
-        let (tx, rx) = mpsc::sync_channel::<Vec<(NodeId, NodeId)>>(self.channel_capacity);
+        let mut txs = Vec::with_capacity(num_shards);
+        let mut rxs = Vec::with_capacity(num_shards);
+        for _ in 0..num_shards {
+            let (tx, rx) = mpsc::sync_channel::<Vec<Edge>>(self.channel_capacity);
+            txs.push(tx);
+            rxs.push(rx);
+        }
 
-        let mut graph = EdgeList::new(n);
+        let mut shard_stats: Vec<ShardMergeStats> = Vec::with_capacity(num_shards);
+        let mut sink_result: io::Result<()> = Ok(());
         std::thread::scope(|scope| {
             let plan_ref = &plan;
             let kpgm_ref = &kpgm;
@@ -308,8 +433,25 @@ impl Coordinator {
             let dropped_ref = &dropped_total;
             let piece_base_ref = &piece_base;
             let er_base_ref = &er_base;
+
+            // Shard mergers: each drains its own channel, folding batches
+            // into a sorted, deduplicated run as they arrive.
+            let merger_handles: Vec<_> = rxs
+                .into_iter()
+                .enumerate()
+                .map(|(si, rx)| {
+                    scope.spawn(move || {
+                        let mut merger = ShardMerger::new(si);
+                        while let Ok(batch) = rx.recv() {
+                            merger.absorb(batch);
+                        }
+                        merger.finish()
+                    })
+                })
+                .collect();
+
             for _ in 0..workers {
-                let tx = tx.clone();
+                let txs = txs.clone();
                 scope.spawn(move || {
                     loop {
                         let idx = next.fetch_add(1, Ordering::Relaxed);
@@ -349,32 +491,61 @@ impl Coordinator {
                                 sample_er_block(nodes_i, nodes_j, p, &mut rng, &mut local);
                             }
                         }
-                        if tx.send(local.into_edges()).is_err() {
-                            break; // merger gone
+                        // Route the job's edges to their shards (bounded
+                        // channels give backpressure against slow merging).
+                        if num_shards == 1 {
+                            if txs[0].send(local.into_edges()).is_err() {
+                                break; // merger gone
+                            }
+                            continue;
+                        }
+                        let mut parts: Vec<Vec<Edge>> = vec![Vec::new(); num_shards];
+                        for e in local.into_edges() {
+                            parts[spec.shard_of(e.0)].push(e);
+                        }
+                        let mut disconnected = false;
+                        for (si, part) in parts.into_iter().enumerate() {
+                            if !part.is_empty() && txs[si].send(part).is_err() {
+                                disconnected = true;
+                                break;
+                            }
+                        }
+                        if disconnected {
+                            break;
                         }
                     }
                 });
             }
-            drop(tx);
-            // Merger: absorb batches as they arrive (bounded channel gives
-            // backpressure against slow merging).
-            while let Ok(batch) = rx.recv() {
-                graph.extend(batch);
+            drop(txs);
+
+            // Consume finished shards in index order; a later shard that
+            // finishes early stays buffered in its merger thread until its
+            // turn, and its memory is released as soon as the sink takes it.
+            for handle in merger_handles {
+                let (run, stats) = handle.join().expect("shard merger panicked");
+                let index = stats.shard;
+                shard_stats.push(stats);
+                if sink_result.is_ok() {
+                    sink_result = sink.consume_shard(index, run);
+                }
             }
         });
+        sink_result?;
 
-        graph.dedup();
+        let num_edges: u64 = shard_stats.iter().map(|s| s.edges as u64).sum();
         let wall_ms = start.elapsed().as_secs_f64() * 1e3;
-        let edges_per_sec = graph.num_edges() as f64 / (wall_ms / 1e3).max(1e-9);
-        SampleReport {
-            graph,
+        let stats = RunStats {
             partition_size,
             num_jobs,
             workers,
+            num_shards,
+            num_edges,
             wall_ms,
-            edges_per_sec,
+            edges_per_sec: num_edges as f64 / (wall_ms / 1e3).max(1e-9),
             dropped_resamples: dropped_total.into_inner(),
-        }
+            shard_stats,
+        };
+        Ok((sink.finish()?, stats))
     }
 }
 
@@ -388,6 +559,7 @@ fn block(plan: &HybridPlan, r: BlockRef) -> (u64, &[NodeId]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::{BinaryFileSink, CountingSink};
     use crate::kpgm::Initiator;
 
     fn params(n: usize, d: u32, mu: f64) -> MagmParams {
@@ -487,5 +659,99 @@ mod tests {
         let p = params(256, 8, 0.5);
         let rep = Coordinator::new().workers(4).channel_capacity(1).sample_quilt(&p, 9);
         assert!(rep.graph.num_edges() > 0);
+    }
+
+    #[test]
+    fn shard_worker_sweep_equals_sequential() {
+        // The equivalence matrix: S ∈ {1, 3, 8} × workers ∈ {1, 4} must
+        // reproduce the sequential samplers' edge lists bit-for-bit —
+        // including order, since concatenated disjoint sorted shards are
+        // the globally sorted list the sequential dedup produces.
+        let pq = params(256, 8, 0.5);
+        let seq_quilt = QuiltSampler::new(pq.clone()).seed(17).sample();
+        let ph = params(300, 9, 0.85);
+        let seq_hybrid = HybridSampler::new(ph.clone()).seed(23).sample();
+        for shards in [1usize, 3, 8] {
+            for workers in [1usize, 4] {
+                let coord = Coordinator::new().workers(workers).shards(shards);
+                let rep = coord.sample_quilt(&pq, 17);
+                assert_eq!(rep.num_shards, shards);
+                assert_eq!(rep.graph, seq_quilt, "quilt S={shards} workers={workers}");
+                let rep = coord.sample_hybrid(&ph, 23);
+                assert_eq!(rep.graph, seq_hybrid, "hybrid S={shards} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_output_is_sorted_without_final_pass() {
+        let p = params(512, 9, 0.5);
+        let rep = Coordinator::new().workers(4).shards(6).sample_quilt(&p, 13);
+        assert!(
+            rep.graph.edges().windows(2).all(|w| w[0] < w[1]),
+            "concatenated shards must be strictly sorted"
+        );
+    }
+
+    #[test]
+    fn shard_stats_respect_streaming_memory_bound() {
+        // The acceptance claim: no shard ever holds more than its
+        // post-dedup size plus batch-sized merge overhead (the in-flight
+        // batch and the merge's resize-by-batch scratch) — the pre-dedup
+        // edge multiset is never materialized in a single buffer.
+        let p = params(512, 9, 0.5);
+        let rep = Coordinator::new().workers(4).shards(4).sample_quilt(&p, 13);
+        assert_eq!(rep.shard_stats.len(), 4);
+        let total: usize = rep.shard_stats.iter().map(|s| s.edges).sum();
+        assert_eq!(total, rep.graph.num_edges());
+        for s in &rep.shard_stats {
+            assert!(
+                s.peak_resident <= s.edges + 2 * s.max_batch,
+                "shard {}: peak {} > {} + 2 * {}",
+                s.shard,
+                s.peak_resident,
+                s.edges,
+                s.max_batch
+            );
+        }
+    }
+
+    #[test]
+    fn counting_sink_matches_collected_graph() {
+        let p = params(256, 8, 0.6);
+        let coord = Coordinator::new().workers(3).shards(3);
+        let rep = coord.sample_quilt(&p, 29);
+        let (counts, stats) =
+            coord.sample_quilt_with_sink(&p, 29, CountingSink::new()).unwrap();
+        assert_eq!(counts.num_edges, rep.graph.num_edges() as u64);
+        assert_eq!(counts.self_loops, rep.graph.num_self_loops() as u64);
+        assert_eq!(counts.out_degrees, rep.graph.out_degrees());
+        assert_eq!(counts.in_degrees, rep.graph.in_degrees());
+        assert_eq!(stats.num_edges, counts.num_edges);
+    }
+
+    #[test]
+    fn binary_file_sink_matches_collect_sink() {
+        let dir = std::env::temp_dir().join("magquilt_pool_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("coordinated.bin");
+        let p = params(300, 9, 0.85);
+        let coord = Coordinator::new().workers(4).shards(5);
+        let rep = coord.sample_hybrid(&p, 41);
+        let (written, _) = coord
+            .sample_hybrid_with_sink(&p, 41, BinaryFileSink::create(&path))
+            .unwrap();
+        assert_eq!(written, rep.graph.num_edges() as u64);
+        let back = crate::graph::read_edge_list_binary(&path).unwrap();
+        assert_eq!(back, rep.graph);
+    }
+
+    #[test]
+    fn auto_shards_defaults_to_workers() {
+        let p = params(128, 7, 0.5);
+        let rep = Coordinator::new().workers(3).sample_quilt(&p, 1);
+        assert_eq!(rep.num_shards, 3);
+        let rep = Coordinator::new().workers(3).shards(2).sample_quilt(&p, 1);
+        assert_eq!(rep.num_shards, 2);
     }
 }

@@ -86,18 +86,19 @@ impl EdgeList {
         self.edges.iter().filter(|&&(s, t)| s == t).count()
     }
 
-    /// Out-degree of every node.
-    pub fn out_degrees(&self) -> Vec<u32> {
-        let mut deg = vec![0u32; self.num_nodes];
+    /// Out-degree of every node. `u64`: a `u32` accumulator silently
+    /// wraps for hub nodes at multi-billion-edge scale.
+    pub fn out_degrees(&self) -> Vec<u64> {
+        let mut deg = vec![0u64; self.num_nodes];
         for &(s, _) in &self.edges {
             deg[s as usize] += 1;
         }
         deg
     }
 
-    /// In-degree of every node.
-    pub fn in_degrees(&self) -> Vec<u32> {
-        let mut deg = vec![0u32; self.num_nodes];
+    /// In-degree of every node (`u64`, see [`Self::out_degrees`]).
+    pub fn in_degrees(&self) -> Vec<u64> {
+        let mut deg = vec![0u64; self.num_nodes];
         for &(_, t) in &self.edges {
             deg[t as usize] += 1;
         }

@@ -2,12 +2,63 @@
 //! format for large samples.
 
 use std::fs::File;
-use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
-use super::EdgeList;
+use super::{Edge, EdgeList};
 
 const BINARY_MAGIC: &[u8; 8] = b"MAGQEDG1";
+/// Header bytes: magic (8) + n (u64) + m (u64).
+const BINARY_HEADER_LEN: u64 = 24;
+/// Byte offset of the edge count in the header (for back-patching).
+const BINARY_EDGE_COUNT_OFFSET: u64 = 16;
+/// Bytes per stored edge: two little-endian u32s.
+const BINARY_EDGE_LEN: u64 = 8;
+/// Largest node count accepted from an (untrusted) binary header:
+/// `ModelSpec` caps models at 2^31 nodes, so anything larger is corrupt.
+const MAX_BINARY_NODES: u64 = 1 << 31;
+
+/// Incremental writer for the `MAGQEDG1` binary format, used by
+/// [`super::BinaryFileSink`] to stream sorted shards to disk without ever
+/// holding the whole edge list. The header's edge count is written as a
+/// `u64::MAX` placeholder and back-patched by
+/// [`BinaryEdgeWriter::finalize`] — a run that dies mid-stream leaves a
+/// file whose claimed count exceeds the file size, so
+/// [`read_edge_list_binary`] rejects the partial output instead of
+/// parsing it as a valid (empty or truncated) graph.
+#[derive(Debug)]
+pub struct BinaryEdgeWriter {
+    writer: BufWriter<File>,
+}
+
+impl BinaryEdgeWriter {
+    /// Create/truncate `path` and write the header with the placeholder
+    /// edge count.
+    pub fn create(path: &Path, num_nodes: usize) -> io::Result<Self> {
+        let mut writer = BufWriter::new(File::create(path)?);
+        writer.write_all(BINARY_MAGIC)?;
+        writer.write_all(&(num_nodes as u64).to_le_bytes())?;
+        writer.write_all(&u64::MAX.to_le_bytes())?;
+        Ok(BinaryEdgeWriter { writer })
+    }
+
+    /// Append a run of edges.
+    pub fn write_edges(&mut self, edges: &[Edge]) -> io::Result<()> {
+        for &(s, t) in edges {
+            self.writer.write_all(&s.to_le_bytes())?;
+            self.writer.write_all(&t.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Flush and back-patch the header with the true edge count.
+    pub fn finalize(self, num_edges: u64) -> io::Result<()> {
+        let mut file = self.writer.into_inner().map_err(|e| e.into_error())?;
+        file.seek(SeekFrom::Start(BINARY_EDGE_COUNT_OFFSET))?;
+        file.write_all(&num_edges.to_le_bytes())?;
+        file.sync_all()
+    }
+}
 
 /// Write `src<TAB>dst` lines with a `# nodes=N edges=M` header.
 pub fn write_edge_list_text(g: &EdgeList, path: &Path) -> io::Result<()> {
@@ -58,20 +109,22 @@ pub fn read_edge_list_text(path: &Path) -> io::Result<EdgeList> {
 
 /// Binary format: magic, u64 n, u64 m, then m (u32, u32) pairs, LE.
 pub fn write_edge_list_binary(g: &EdgeList, path: &Path) -> io::Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(BINARY_MAGIC)?;
-    w.write_all(&(g.num_nodes() as u64).to_le_bytes())?;
-    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
-    for &(s, t) in g.edges() {
-        w.write_all(&s.to_le_bytes())?;
-        w.write_all(&t.to_le_bytes())?;
-    }
-    w.flush()
+    let mut w = BinaryEdgeWriter::create(path, g.num_nodes())?;
+    w.write_edges(g.edges())?;
+    w.finalize(g.num_edges() as u64)
 }
 
 /// Read the binary format.
+///
+/// The header is untrusted input: the claimed edge count is checked
+/// against the actual file size before any allocation (a 24-byte corrupt
+/// file must not trigger a multi-GB `Vec::with_capacity`), and every edge
+/// id is validated against `n` before the list is returned — also in
+/// release builds, where `EdgeList::from_edges` only debug-asserts.
 pub fn read_edge_list_binary(path: &Path) -> io::Result<EdgeList> {
-    let mut r = BufReader::new(File::open(path)?);
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != BINARY_MAGIC {
@@ -79,19 +132,41 @@ pub fn read_edge_list_binary(path: &Path) -> io::Result<EdgeList> {
     }
     let mut buf8 = [0u8; 8];
     r.read_exact(&mut buf8)?;
-    let n = u64::from_le_bytes(buf8) as usize;
+    let n = u64::from_le_bytes(buf8);
     r.read_exact(&mut buf8)?;
-    let m = u64::from_le_bytes(buf8) as usize;
-    let mut edges = Vec::with_capacity(m);
+    let m = u64::from_le_bytes(buf8);
+    // Files written by this tool never exceed ModelSpec's log2_nodes <= 31;
+    // beyond that the header is corrupt (and an unchecked n would drive
+    // O(n) allocations in every downstream consumer).
+    if n > MAX_BINARY_NODES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("node count {n} exceeds the supported maximum {MAX_BINARY_NODES}"),
+        ));
+    }
+    let max_edges = file_len.saturating_sub(BINARY_HEADER_LEN) / BINARY_EDGE_LEN;
+    if m > max_edges {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("header claims {m} edges but the file has room for {max_edges}"),
+        ));
+    }
+    let mut edges = Vec::with_capacity(m as usize);
     let mut buf4 = [0u8; 4];
     for _ in 0..m {
         r.read_exact(&mut buf4)?;
         let s = u32::from_le_bytes(buf4);
         r.read_exact(&mut buf4)?;
         let t = u32::from_le_bytes(buf4);
+        if u64::from(s) >= n || u64::from(t) >= n {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("edge ({s}, {t}) out of bounds for n = {n}"),
+            ));
+        }
         edges.push((s, t));
     }
-    Ok(EdgeList::from_edges(n, edges))
+    Ok(EdgeList::from_edges(n as usize, edges))
 }
 
 #[cfg(test)]
@@ -133,6 +208,98 @@ mod tests {
         let g = read_edge_list_text(&p).unwrap();
         assert_eq!(g.num_nodes(), 4);
         assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn binary_oversized_header_count_rejected_without_allocation() {
+        // A tiny file whose header claims u64::MAX edges must be rejected
+        // up front (the old code passed the count to Vec::with_capacity).
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("corrupt_count.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(BINARY_MAGIC);
+        bytes.extend_from_slice(&5u64.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_edge_list_binary(&p).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn binary_out_of_bounds_edge_rejected() {
+        // Edge ids >= n must be an error in release builds too (from_edges
+        // only debug-asserts).
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("corrupt_edge.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(BINARY_MAGIC);
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&5u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_edge_list_binary(&p).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn binary_absurd_node_count_rejected() {
+        // A 24-byte corrupt header must not drive O(n) allocations in
+        // downstream consumers (degree vectors, CSR offsets).
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, n) in [("corrupt_nodes_max.bin", u64::MAX), ("corrupt_nodes_33.bin", 1 << 33)]
+        {
+            let p = dir.join(name);
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(BINARY_MAGIC);
+            bytes.extend_from_slice(&n.to_le_bytes());
+            bytes.extend_from_slice(&0u64.to_le_bytes());
+            std::fs::write(&p, &bytes).unwrap();
+            let err = read_edge_list_binary(&p).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "n = {n}");
+        }
+        // The cap itself is fine: an empty graph at the maximum size reads.
+        let p = dir.join("max_nodes_ok.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(BINARY_MAGIC);
+        bytes.extend_from_slice(&MAX_BINARY_NODES.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let g = read_edge_list_binary(&p).unwrap();
+        assert_eq!(g.num_nodes(), MAX_BINARY_NODES as usize);
+        assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn binary_writer_streams_and_patches_count() {
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("streamed.bin");
+        let mut w = BinaryEdgeWriter::create(&p, 4).unwrap();
+        w.write_edges(&[(0, 1)]).unwrap();
+        w.write_edges(&[(2, 3), (3, 0)]).unwrap();
+        w.finalize(3).unwrap();
+        let g = read_edge_list_binary(&p).unwrap();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.edges(), &[(0, 1), (2, 3), (3, 0)]);
+    }
+
+    #[test]
+    fn binary_writer_unfinalized_file_is_rejected() {
+        // A run that dies before finalize (crash, disk full) must not
+        // leave a file that parses as a valid graph: the placeholder
+        // count fails the size check.
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("unfinalized.bin");
+        let mut w = BinaryEdgeWriter::create(&p, 4).unwrap();
+        w.write_edges(&[(0, 1), (2, 3)]).unwrap();
+        drop(w); // BufWriter flushes on drop; finalize never runs
+        let err = read_edge_list_binary(&p).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
     }
 
     #[test]

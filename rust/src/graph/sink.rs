@@ -1,0 +1,574 @@
+//! Edge sinks and the sharded streaming merge.
+//!
+//! The coordinator used to funnel every pre-dedup edge batch through one
+//! merger thread into a single `Vec` and sort/dedup at the very end, so
+//! peak memory scaled with the *pre*-dedup edge count and the merger
+//! serialized all workers. This module replaces that with a **sharded**
+//! design:
+//!
+//! * node ids are split into `S` disjoint source ranges ([`ShardSpec`]);
+//!   workers route each sampled edge to the shard of its source node,
+//! * each shard runs a [`ShardMerger`] that keeps its edges as one sorted,
+//!   deduplicated run and merges every arriving batch **incrementally**
+//!   (in place, backward, O(run + batch)); resident memory per shard is
+//!   bounded by the post-dedup shard size plus batch-sized overhead (the
+//!   in-flight batch and the merge's resize-by-batch scratch, ≤ two
+//!   batches) — the pre-dedup multiset is never materialized anywhere,
+//! * because shards partition the source range and each run is sorted by
+//!   `(src, dst)`, concatenating the finished shards in index order *is*
+//!   the globally sorted, deduplicated edge list — no final sort.
+//!
+//! Where the concatenation goes is abstracted by the [`EdgeSink`] trait:
+//!
+//! * [`CollectSink`] — in-memory [`EdgeList`] (the default, what
+//!   `Coordinator::run` uses),
+//! * [`CountingSink`] — degree vectors and an edge count only, for stats
+//!   runs that never need to hold the graph,
+//! * [`BinaryFileSink`] — streams the shards straight into the
+//!   `MAGQEDG1` binary format, writing each shard as it finishes and
+//!   back-patching the header edge count at the end, so samples larger
+//!   than RAM can go directly to disk.
+//!
+//! Sinks consume shards strictly in ascending index order; a shard's
+//! memory is released as soon as it is consumed.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::{Edge, EdgeList, NodeId};
+
+/// Disjoint source-node ranges used to route edges to shard mergers.
+///
+/// Shard `i` owns sources `[i·w, (i+1)·w)` for width `w = ⌈n / S⌉`; the
+/// last shard absorbs any remainder. Routing by *source* keeps duplicate
+/// edges (same `(src, dst)` sampled by different pieces) on the same
+/// shard, so per-shard dedup is global dedup.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardSpec {
+    num_shards: usize,
+    shard_width: u64,
+}
+
+impl ShardSpec {
+    /// Split `num_nodes` sources into `num_shards` ranges (both clamped
+    /// to at least 1).
+    pub fn new(num_nodes: usize, num_shards: usize) -> Self {
+        let s = num_shards.max(1);
+        let width = (num_nodes as u64).max(1).div_ceil(s as u64).max(1);
+        ShardSpec { num_shards: s, shard_width: width }
+    }
+
+    /// Number of shards S.
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    /// The shard owning source node `src`.
+    #[inline]
+    pub fn shard_of(&self, src: NodeId) -> usize {
+        ((src as u64 / self.shard_width) as usize).min(self.num_shards - 1)
+    }
+}
+
+/// Per-shard merge statistics, reported by the coordinator so benches and
+/// tests can verify the streaming-memory claim.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShardMergeStats {
+    /// Shard index.
+    pub shard: usize,
+    /// Final post-dedup edge count of the shard.
+    pub edges: usize,
+    /// Batches absorbed (non-empty sends from workers).
+    pub batches: u64,
+    /// Largest single batch absorbed (edges).
+    pub max_batch: usize,
+    /// Duplicate edges collapsed during merging (within and across
+    /// batches).
+    pub duplicates_dropped: u64,
+    /// Peak resident edges **inside the merger**, counting the merge's
+    /// transient scratch: the maximum over time of run + incoming batch,
+    /// including the moment the run is resized by the batch length while
+    /// the batch is still alive. By construction
+    /// `<= edges + 2 · max_batch` — bounded by the post-dedup shard plus
+    /// batch-sized overhead, never by the pre-dedup multiset.
+    ///
+    /// Scope: batches queued in the shard's bounded channel are *not*
+    /// visible to the merger and are not counted here; the coordinator's
+    /// `channel_capacity` (default 64 batches per shard) bounds that
+    /// separately via backpressure.
+    pub peak_resident: usize,
+}
+
+/// Incremental sorted-run merger for one shard.
+///
+/// Holds the shard's edges as a single sorted, deduplicated run and folds
+/// each arriving batch in with an in-place backward merge: `O(run + batch)`
+/// time per batch, and never more than `run + 2 · batch` edges resident
+/// (the run grows by the batch length during the merge while the batch is
+/// still alive).
+#[derive(Debug, Default)]
+pub struct ShardMerger {
+    run: Vec<Edge>,
+    stats: ShardMergeStats,
+}
+
+impl ShardMerger {
+    /// Empty merger for shard `shard`.
+    pub fn new(shard: usize) -> Self {
+        ShardMerger { run: Vec::new(), stats: ShardMergeStats { shard, ..Default::default() } }
+    }
+
+    /// Absorb one (unsorted, possibly duplicated) batch of edges.
+    pub fn absorb(&mut self, mut batch: Vec<Edge>) {
+        if batch.is_empty() {
+            return;
+        }
+        let raw = batch.len();
+        self.stats.batches += 1;
+        self.stats.max_batch = self.stats.max_batch.max(raw);
+        self.stats.peak_resident = self.stats.peak_resident.max(self.run.len() + raw);
+        batch.sort_unstable();
+        batch.dedup();
+        // The merge grows `run` by up to batch.len() while the batch is
+        // still alive — count that transient honestly.
+        self.stats.peak_resident =
+            self.stats.peak_resident.max(self.run.len() + 2 * batch.len());
+        let merged_away = merge_sorted_into(&mut self.run, &batch);
+        self.stats.duplicates_dropped += (raw - batch.len() + merged_away) as u64;
+        self.stats.edges = self.run.len();
+    }
+
+    /// Current post-dedup edge count.
+    pub fn len(&self) -> usize {
+        self.run.len()
+    }
+
+    /// Whether the shard is still empty.
+    pub fn is_empty(&self) -> bool {
+        self.run.is_empty()
+    }
+
+    /// Finish: the sorted, deduplicated run plus its merge statistics.
+    pub fn finish(mut self) -> (Vec<Edge>, ShardMergeStats) {
+        self.stats.edges = self.run.len();
+        self.stats.peak_resident = self.stats.peak_resident.max(self.run.len());
+        (self.run, self.stats)
+    }
+}
+
+/// Merge the sorted, deduplicated `batch` into the sorted, deduplicated
+/// `run`, in place (backward, from the ends). Returns the number of
+/// cross-duplicates collapsed. `run` grows by at most `batch.len()`.
+fn merge_sorted_into(run: &mut Vec<Edge>, batch: &[Edge]) -> usize {
+    if batch.is_empty() {
+        return 0;
+    }
+    if run.is_empty() {
+        run.extend_from_slice(batch);
+        return 0;
+    }
+    // Fast path: the batch lies entirely after the run (common when jobs
+    // write localized blocks).
+    if *run.last().expect("non-empty") < batch[0] {
+        run.extend_from_slice(batch);
+        return 0;
+    }
+    let r = run.len();
+    let b = batch.len();
+    run.resize(r + b, (0, 0));
+    // Backward merge. Invariant: w >= i + j + 1 while j >= 0, so writes
+    // never clobber unread run elements; equal keys consume both inputs
+    // for one write (the dedup), which only widens the gap.
+    let mut i = r as isize - 1;
+    let mut j = b as isize - 1;
+    let mut w = (r + b) as isize - 1;
+    while i >= 0 && j >= 0 {
+        let a = run[i as usize];
+        let c = batch[j as usize];
+        match a.cmp(&c) {
+            std::cmp::Ordering::Equal => {
+                run[w as usize] = a;
+                i -= 1;
+                j -= 1;
+            }
+            std::cmp::Ordering::Greater => {
+                run[w as usize] = a;
+                i -= 1;
+            }
+            std::cmp::Ordering::Less => {
+                run[w as usize] = c;
+                j -= 1;
+            }
+        }
+        w -= 1;
+    }
+    while j >= 0 {
+        run[w as usize] = batch[j as usize];
+        j -= 1;
+        w -= 1;
+    }
+    // If w == i the remaining run prefix is already in place and the
+    // buffer is exactly full (no duplicates); otherwise shift the merged
+    // suffix down over the gap left by collapsed duplicates.
+    if w != i {
+        while i >= 0 {
+            run[w as usize] = run[i as usize];
+            i -= 1;
+            w -= 1;
+        }
+        let start = (w + 1) as usize;
+        let len = r + b - start;
+        run.copy_within(start.., 0);
+        run.truncate(len);
+    }
+    debug_assert!(run.windows(2).all(|p| p[0] < p[1]), "merged run not strictly sorted");
+    r + b - run.len()
+}
+
+/// Where the coordinator's sharded merge delivers the finished graph.
+///
+/// The coordinator calls [`begin`](EdgeSink::begin) once, then
+/// [`consume_shard`](EdgeSink::consume_shard) for every shard **in
+/// ascending index order** — each shard is sorted, deduplicated, and
+/// strictly after every previously consumed shard in `(src, dst)` order —
+/// and finally [`finish`](EdgeSink::finish).
+pub trait EdgeSink {
+    /// What the sink yields once every shard has been consumed.
+    type Output;
+
+    /// Called once before any shard is delivered.
+    fn begin(&mut self, num_nodes: usize, num_shards: usize) -> io::Result<()>;
+
+    /// Consume finished shard `index`. The sink owns `edges` and should
+    /// drop (or stream out) the buffer promptly — this is where the
+    /// memory of a finished shard is released.
+    fn consume_shard(&mut self, index: usize, edges: Vec<Edge>) -> io::Result<()>;
+
+    /// All shards delivered; produce the output.
+    fn finish(self) -> io::Result<Self::Output>;
+}
+
+/// In-memory sink: concatenates the shards into one [`EdgeList`] (already
+/// globally sorted and deduplicated — no post-processing).
+#[derive(Debug, Default)]
+pub struct CollectSink {
+    num_nodes: usize,
+    edges: Vec<Edge>,
+}
+
+impl CollectSink {
+    /// New empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EdgeSink for CollectSink {
+    type Output = EdgeList;
+
+    fn begin(&mut self, num_nodes: usize, _num_shards: usize) -> io::Result<()> {
+        self.num_nodes = num_nodes;
+        Ok(())
+    }
+
+    fn consume_shard(&mut self, _index: usize, mut edges: Vec<Edge>) -> io::Result<()> {
+        if self.edges.is_empty() {
+            self.edges = edges;
+        } else {
+            self.edges.append(&mut edges);
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> io::Result<EdgeList> {
+        Ok(EdgeList::from_edges(self.num_nodes, self.edges))
+    }
+}
+
+/// Degree/count aggregate produced by [`CountingSink`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DegreeCounts {
+    /// Node count.
+    pub num_nodes: usize,
+    /// Post-dedup edge count.
+    pub num_edges: u64,
+    /// Self-loop count.
+    pub self_loops: u64,
+    /// Out-degree of every node.
+    pub out_degrees: Vec<u64>,
+    /// In-degree of every node.
+    pub in_degrees: Vec<u64>,
+}
+
+impl DegreeCounts {
+    /// Largest out-degree.
+    pub fn max_out_degree(&self) -> u64 {
+        self.out_degrees.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Largest in-degree.
+    pub fn max_in_degree(&self) -> u64 {
+        self.in_degrees.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Statistics-only sink: accumulates degrees and counts, dropping each
+/// shard's edges immediately — the graph itself is never held.
+#[derive(Debug, Default)]
+pub struct CountingSink {
+    counts: Option<DegreeCounts>,
+}
+
+impl CountingSink {
+    /// New empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EdgeSink for CountingSink {
+    type Output = DegreeCounts;
+
+    fn begin(&mut self, num_nodes: usize, _num_shards: usize) -> io::Result<()> {
+        self.counts = Some(DegreeCounts {
+            num_nodes,
+            num_edges: 0,
+            self_loops: 0,
+            out_degrees: vec![0u64; num_nodes],
+            in_degrees: vec![0u64; num_nodes],
+        });
+        Ok(())
+    }
+
+    fn consume_shard(&mut self, _index: usize, edges: Vec<Edge>) -> io::Result<()> {
+        let counts = self.counts.as_mut().expect("begin not called");
+        counts.num_edges += edges.len() as u64;
+        for (s, t) in edges {
+            counts.out_degrees[s as usize] += 1;
+            counts.in_degrees[t as usize] += 1;
+            if s == t {
+                counts.self_loops += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> io::Result<DegreeCounts> {
+        self.counts
+            .ok_or_else(|| io::Error::other("CountingSink finished before begin"))
+    }
+}
+
+/// Streams shards straight into the `MAGQEDG1` binary edge-list format.
+///
+/// `begin` writes the header with a placeholder edge count; every shard is
+/// appended as it finishes (the shard order makes the file globally
+/// sorted); `finish` seeks back and patches the true count. Peak memory is
+/// one shard, not the graph.
+#[derive(Debug)]
+pub struct BinaryFileSink {
+    path: PathBuf,
+    writer: Option<super::io::BinaryEdgeWriter>,
+    num_edges: u64,
+}
+
+impl BinaryFileSink {
+    /// Sink writing to `path` (created/truncated at `begin`).
+    pub fn create(path: impl AsRef<Path>) -> Self {
+        BinaryFileSink { path: path.as_ref().to_path_buf(), writer: None, num_edges: 0 }
+    }
+}
+
+impl EdgeSink for BinaryFileSink {
+    /// Number of edges written.
+    type Output = u64;
+
+    fn begin(&mut self, num_nodes: usize, _num_shards: usize) -> io::Result<()> {
+        self.writer = Some(super::io::BinaryEdgeWriter::create(&self.path, num_nodes)?);
+        Ok(())
+    }
+
+    fn consume_shard(&mut self, _index: usize, edges: Vec<Edge>) -> io::Result<()> {
+        let w = self.writer.as_mut().expect("begin not called");
+        w.write_edges(&edges)?;
+        self.num_edges += edges.len() as u64;
+        Ok(())
+    }
+
+    fn finish(mut self) -> io::Result<u64> {
+        let w = self
+            .writer
+            .take()
+            .ok_or_else(|| io::Error::other("BinaryFileSink finished before begin"))?;
+        w.finalize(self.num_edges)?;
+        Ok(self.num_edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn edges_of(pairs: &[(u32, u32)]) -> Vec<Edge> {
+        pairs.to_vec()
+    }
+
+    #[test]
+    fn shard_spec_partitions_sources() {
+        let spec = ShardSpec::new(10, 3);
+        assert_eq!(spec.num_shards(), 3);
+        let shards: Vec<usize> = (0..10u32).map(|s| spec.shard_of(s)).collect();
+        // Non-decreasing, starts at 0, ends at S-1, covers disjoint ranges.
+        assert!(shards.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(shards[0], 0);
+        assert_eq!(*shards.last().unwrap(), 2);
+    }
+
+    #[test]
+    fn shard_spec_more_shards_than_nodes() {
+        let spec = ShardSpec::new(2, 8);
+        assert_eq!(spec.shard_of(0), 0);
+        assert_eq!(spec.shard_of(1), 1);
+    }
+
+    #[test]
+    fn shard_spec_single_shard_takes_all() {
+        let spec = ShardSpec::new(1000, 1);
+        for s in [0u32, 17, 999] {
+            assert_eq!(spec.shard_of(s), 0);
+        }
+    }
+
+    #[test]
+    fn merge_into_empty_run() {
+        let mut run = Vec::new();
+        assert_eq!(merge_sorted_into(&mut run, &edges_of(&[(1, 2), (3, 4)])), 0);
+        assert_eq!(run, edges_of(&[(1, 2), (3, 4)]));
+    }
+
+    #[test]
+    fn merge_disjoint_appends() {
+        let mut run = edges_of(&[(0, 1), (1, 0)]);
+        assert_eq!(merge_sorted_into(&mut run, &edges_of(&[(2, 0), (2, 1)])), 0);
+        assert_eq!(run, edges_of(&[(0, 1), (1, 0), (2, 0), (2, 1)]));
+    }
+
+    #[test]
+    fn merge_interleaved_with_duplicates() {
+        let mut run = edges_of(&[(0, 1), (2, 2), (5, 0)]);
+        let dropped = merge_sorted_into(&mut run, &edges_of(&[(0, 0), (2, 2), (5, 0), (7, 7)]));
+        assert_eq!(dropped, 2);
+        assert_eq!(run, edges_of(&[(0, 0), (0, 1), (2, 2), (5, 0), (7, 7)]));
+    }
+
+    #[test]
+    fn merge_batch_entirely_before_run() {
+        let mut run = edges_of(&[(5, 5), (6, 6)]);
+        assert_eq!(merge_sorted_into(&mut run, &edges_of(&[(1, 1), (2, 2)])), 0);
+        assert_eq!(run, edges_of(&[(1, 1), (2, 2), (5, 5), (6, 6)]));
+    }
+
+    #[test]
+    fn merge_all_duplicates_collapses() {
+        let mut run = edges_of(&[(1, 1), (2, 2)]);
+        let dropped = merge_sorted_into(&mut run, &edges_of(&[(1, 1), (2, 2)]));
+        assert_eq!(dropped, 2);
+        assert_eq!(run, edges_of(&[(1, 1), (2, 2)]));
+    }
+
+    #[test]
+    fn merge_randomized_matches_sort_dedup() {
+        let mut rng = Rng::new(91);
+        for case in 0..200 {
+            let mut run: Vec<Edge> = (0..rng.below(40))
+                .map(|_| (rng.below(16) as u32, rng.below(16) as u32))
+                .collect();
+            run.sort_unstable();
+            run.dedup();
+            let mut batch: Vec<Edge> = (0..rng.below(40))
+                .map(|_| (rng.below(16) as u32, rng.below(16) as u32))
+                .collect();
+            batch.sort_unstable();
+            batch.dedup();
+            let mut want: Vec<Edge> = run.iter().chain(batch.iter()).copied().collect();
+            want.sort_unstable();
+            want.dedup();
+            let before = run.len() + batch.len();
+            let dropped = merge_sorted_into(&mut run, &batch);
+            assert_eq!(run, want, "case {case}");
+            assert_eq!(dropped, before - want.len(), "case {case}");
+        }
+    }
+
+    #[test]
+    fn shard_merger_tracks_stats_and_memory_bound() {
+        let mut m = ShardMerger::new(3);
+        m.absorb(edges_of(&[(4, 1), (0, 1), (4, 1)])); // one within-batch dup
+        m.absorb(edges_of(&[(0, 1), (2, 2)])); // one cross-batch dup
+        m.absorb(Vec::new()); // ignored
+        let (run, stats) = m.finish();
+        assert_eq!(run, edges_of(&[(0, 1), (2, 2), (4, 1)]));
+        assert_eq!(stats.shard, 3);
+        assert_eq!(stats.edges, 3);
+        assert_eq!(stats.batches, 2);
+        assert_eq!(stats.max_batch, 3);
+        assert_eq!(stats.duplicates_dropped, 2);
+        // The streaming-memory claim: never more resident than the final
+        // run plus batch-sized merge overhead.
+        assert!(stats.peak_resident <= stats.edges + 2 * stats.max_batch);
+    }
+
+    #[test]
+    fn collect_sink_concatenates_shards() {
+        let mut sink = CollectSink::new();
+        sink.begin(8, 2).unwrap();
+        sink.consume_shard(0, edges_of(&[(0, 3), (1, 1)])).unwrap();
+        sink.consume_shard(1, edges_of(&[(4, 0), (7, 7)])).unwrap();
+        let g = sink.finish().unwrap();
+        assert_eq!(g.num_nodes(), 8);
+        assert_eq!(g.edges(), &[(0, 3), (1, 1), (4, 0), (7, 7)]);
+    }
+
+    #[test]
+    fn counting_sink_matches_collected_degrees() {
+        let shard0 = edges_of(&[(0, 1), (0, 2), (1, 1)]);
+        let shard1 = edges_of(&[(2, 0), (3, 1)]);
+
+        let mut collect = CollectSink::new();
+        collect.begin(4, 2).unwrap();
+        collect.consume_shard(0, shard0.clone()).unwrap();
+        collect.consume_shard(1, shard1.clone()).unwrap();
+        let g = collect.finish().unwrap();
+
+        let mut count = CountingSink::new();
+        count.begin(4, 2).unwrap();
+        count.consume_shard(0, shard0).unwrap();
+        count.consume_shard(1, shard1).unwrap();
+        let c = count.finish().unwrap();
+
+        assert_eq!(c.num_edges, g.num_edges() as u64);
+        assert_eq!(c.self_loops, g.num_self_loops() as u64);
+        assert_eq!(c.out_degrees, g.out_degrees());
+        assert_eq!(c.in_degrees, g.in_degrees());
+        assert_eq!(c.max_out_degree(), 2);
+        assert_eq!(c.max_in_degree(), 3);
+    }
+
+    #[test]
+    fn binary_file_sink_roundtrips() {
+        let dir = std::env::temp_dir().join("magquilt_sink_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sink.bin");
+        let mut sink = BinaryFileSink::create(&path);
+        sink.begin(6, 2).unwrap();
+        sink.consume_shard(0, edges_of(&[(0, 5), (2, 2)])).unwrap();
+        sink.consume_shard(1, edges_of(&[(3, 0), (5, 4)])).unwrap();
+        let written = sink.finish().unwrap();
+        assert_eq!(written, 4);
+        let g = super::super::read_edge_list_binary(&path).unwrap();
+        assert_eq!(g.num_nodes(), 6);
+        assert_eq!(g.edges(), &[(0, 5), (2, 2), (3, 0), (5, 4)]);
+    }
+}

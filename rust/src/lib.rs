@@ -13,8 +13,10 @@
 //! * the paper's contribution: the **quilting sampler** (Algorithm 2) and
 //!   the §5 hybrid speedup — [`quilt`],
 //! * a job coordinator that plans the `B² + R² + …` quilt pieces, routes
-//!   them across a worker pool with bounded queues and merges the edge
-//!   streams — [`coordinator`],
+//!   them across a worker pool with bounded queues, and merges the edge
+//!   streams through a sharded streaming merge into pluggable
+//!   [`graph::EdgeSink`]s (in-memory, degree-counting, or direct-to-disk)
+//!   — [`coordinator`],
 //! * a PJRT runtime that loads the AOT-compiled JAX/Pallas edge-probability
 //!   kernels (`artifacts/*.hlo.txt`) and runs them from Rust — [`runtime`],
 //! * graph/RNG/statistics substrates and the experiment harnesses that

@@ -37,12 +37,24 @@ pub fn sample_er_block(
         let c = cols[(pos % ncols) as usize];
         out.push(r, c);
         let gap = rng.geometric(p);
-        // Guard overflow when p is tiny and the geometric jump is huge.
-        pos = match pos.checked_add(1 + gap) {
+        pos = match next_success(pos, gap) {
             Some(next) => next,
             None => break,
         };
     }
+}
+
+/// Advance from success position `pos` by a geometric `gap`:
+/// `pos + 1 + gap`, or `None` past the end of the index space.
+///
+/// Both additions must be checked: `geometric` returns `u64::MAX` as its
+/// improper-distribution sentinel for vanishingly small `p`, so the naive
+/// `pos.checked_add(1 + gap)` computes `1 + gap` *unchecked* first — it
+/// panics in debug builds and wraps to 0 in release, leaving `pos`
+/// unchanged and re-emitting the same cell forever.
+#[inline]
+fn next_success(pos: u64, gap: u64) -> Option<u64> {
+    gap.checked_add(1).and_then(|g| pos.checked_add(g))
 }
 
 #[cfg(test)]
@@ -110,6 +122,34 @@ mod tests {
                 assert!((got - p).abs() < 5.0 * sigma, "cell ({r},{c}): {got}");
             }
         }
+    }
+
+    #[test]
+    fn next_success_overflow_regression() {
+        // The geometric sentinel for improper p: gap = u64::MAX must stop
+        // the walk, not wrap `1 + gap` to 0 and duplicate the last cell.
+        assert_eq!(next_success(5, u64::MAX), None);
+        assert_eq!(next_success(u64::MAX - 1, u64::MAX), None);
+        // Position overflow with a small gap also stops.
+        assert_eq!(next_success(u64::MAX - 1, 1), None);
+        assert_eq!(next_success(u64::MAX, 0), None);
+        // Normal stepping is pos + 1 + gap.
+        assert_eq!(next_success(5, 0), Some(6));
+        assert_eq!(next_success(5, 3), Some(9));
+        assert_eq!(next_success(u64::MAX - 2, 1), Some(u64::MAX));
+    }
+
+    #[test]
+    fn tiny_probability_terminates() {
+        // p > 0 but so small every geometric draw hits the u64::MAX
+        // sentinel: the sampler must return (almost surely empty), not
+        // spin on a wrapped position.
+        let rows: Vec<NodeId> = (0..64).collect();
+        let cols: Vec<NodeId> = (64..128).collect();
+        let mut rng = Rng::new(5);
+        let mut out = EdgeList::new(128);
+        sample_er_block(&rows, &cols, f64::MIN_POSITIVE, &mut rng, &mut out);
+        assert_eq!(out.num_edges(), 0);
     }
 
     #[test]

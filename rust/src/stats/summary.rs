@@ -15,10 +15,11 @@ pub struct GraphSummary {
     pub self_loops: usize,
     /// Mean out-degree.
     pub mean_degree: f64,
-    /// Maximum out-degree.
-    pub max_out_degree: u32,
+    /// Maximum out-degree (`u64`: degree accumulation must not wrap at
+    /// multi-billion-edge scale).
+    pub max_out_degree: u64,
     /// Maximum in-degree.
-    pub max_in_degree: u32,
+    pub max_in_degree: u64,
     /// Fraction of nodes in the largest strongly connected component
     /// (paper Fig. 9's quantity).
     pub scc_fraction: f64,
@@ -42,9 +43,8 @@ pub fn summarize(g: &EdgeList, clustering_sample: usize, seed: u64) -> GraphSumm
     let inn = g.in_degrees();
     let mut hist = LogHistogram::new(2.0);
     for &d in &out {
-        hist.add(d as u64);
+        hist.add(d);
     }
-    let degs64: Vec<u64> = out.iter().map(|&d| d as u64).collect();
     GraphSummary {
         num_nodes: n,
         num_edges: csr.num_edges(),
@@ -55,7 +55,7 @@ pub fn summarize(g: &EdgeList, clustering_sample: usize, seed: u64) -> GraphSumm
         scc_fraction: if n == 0 { 0.0 } else { largest_scc_size(&csr) as f64 / n as f64 },
         wcc_fraction: if n == 0 { 0.0 } else { largest_wcc_size(&csr) as f64 / n as f64 },
         clustering: clustering_coefficient(&csr, clustering_sample, seed),
-        powerlaw_alpha: powerlaw_alpha_mle(&degs64, 4, 50).map(|f| f.alpha),
+        powerlaw_alpha: powerlaw_alpha_mle(&out, 4, 50).map(|f| f.alpha),
         degree_histogram: hist.nonzero_bins(),
     }
 }

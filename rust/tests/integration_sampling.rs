@@ -70,6 +70,70 @@ fn coordinator_matches_sequential_at_scale() {
 }
 
 #[test]
+fn sharded_coordinator_equivalence_property() {
+    // Property sweep behind the sharded streaming merge: for several
+    // seeds, every (shards, workers) combination reproduces the
+    // sequential samplers' sorted edge list bit-for-bit, and the merge
+    // never holds more than the post-dedup shard plus batch-sized
+    // merge overhead.
+    let d = 10;
+    let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 1 << d, d);
+    let skewed = MagmParams::homogeneous(Initiator::THETA1, 0.85, 1 << d, d);
+    for seed in [3u64, 101] {
+        let seq_quilt = QuiltSampler::new(params.clone()).seed(seed).sample();
+        let seq_hybrid = HybridSampler::new(skewed.clone()).seed(seed).sample();
+        for shards in [1usize, 3, 8] {
+            for workers in [1usize, 4] {
+                let coord = Coordinator::new().workers(workers).shards(shards);
+                let rep = coord.sample_quilt(&params, seed);
+                assert_eq!(
+                    rep.graph, seq_quilt,
+                    "quilt seed={seed} S={shards} workers={workers}"
+                );
+                for s in &rep.shard_stats {
+                    assert!(
+                        s.peak_resident <= s.edges + 2 * s.max_batch,
+                        "seed={seed} S={shards}: shard {} peak {} > {} + 2 * {}",
+                        s.shard, s.peak_resident, s.edges, s.max_batch
+                    );
+                }
+                let rep = coord.sample_hybrid(&skewed, seed);
+                assert_eq!(
+                    rep.graph, seq_hybrid,
+                    "hybrid seed={seed} S={shards} workers={workers}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn binary_and_counting_sinks_agree_with_collect() {
+    use magquilt::graph::{BinaryFileSink, CountingSink};
+    let d = 10;
+    let params = MagmParams::homogeneous(Initiator::THETA2, 0.5, 1 << d, d);
+    let coord = Coordinator::new().workers(4).shards(4);
+    let rep = coord.sample_quilt(&params, 55);
+
+    let dir = std::env::temp_dir().join("magquilt_sink_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("quilt.bin");
+    let (written, _) = coord
+        .sample_quilt_with_sink(&params, 55, BinaryFileSink::create(&path))
+        .unwrap();
+    assert_eq!(written, rep.graph.num_edges() as u64);
+    let reread = magquilt::graph::read_edge_list_binary(&path).unwrap();
+    assert_eq!(reread, rep.graph, "BinaryFileSink re-read must equal CollectSink");
+
+    let (counts, _) = coord
+        .sample_quilt_with_sink(&params, 55, CountingSink::new())
+        .unwrap();
+    assert_eq!(counts.num_edges, rep.graph.num_edges() as u64);
+    assert_eq!(counts.out_degrees, rep.graph.out_degrees());
+    assert_eq!(counts.in_degrees, rep.graph.in_degrees());
+}
+
+#[test]
 fn partition_size_stays_near_log2n_at_mu_half() {
     // Theorem 4 (statistically): B <= log2 n whp; in practice much lower
     // (paper Fig. 5). Check over several sizes/seeds with slack.
