@@ -1,9 +1,10 @@
 //! End-to-end sampling bench — regenerates the series behind paper
 //! Figures 10 and 11 (quilting vs naive runtime, and per-edge cost), the
-//! conditioned-vs-rejection piece sweep over partition size B, and the
+//! conditioned-vs-rejection piece sweep over partition size B, the
 //! shard-count sweep of the coordinator's streaming merge (per-shard
-//! merge stats included). Summaries are emitted to `BENCH_quilt.json`
-//! for the perf trajectory.
+//! merge stats included), and the setup-pipeline sweep over setup-thread
+//! counts (per-phase attrs/partition/trie/DAG timings). Summaries are
+//! emitted to `BENCH_quilt.json` for the perf trajectory.
 //!
 //! `MAGQUILT_BENCH_FAST=1` shrinks the sweeps for smoke runs.
 
@@ -12,7 +13,7 @@ use std::time::Instant;
 use magquilt::coordinator::Coordinator;
 use magquilt::kpgm::Initiator;
 use magquilt::magm::{naive_sample, AttributeAssignment, MagmParams};
-use magquilt::quilt::{HybridSampler, PieceMode, QuiltSampler};
+use magquilt::quilt::{HybridSampler, Partition, PieceMode, QuiltSampler};
 use magquilt::rng::Rng;
 
 fn fast() -> bool {
@@ -151,6 +152,77 @@ fn shard_sweep() -> String {
     )
 }
 
+/// Setup-pipeline sweep over setup-thread counts: per-phase wall-clock
+/// for chunked attribute sampling, the prefix-sum partition build, the
+/// sharded trie build + merge, and the conditioned product-DAG build.
+/// The outputs are bit-for-bit identical across thread counts (asserted
+/// by the test suite); this sweep measures where the leader's prologue
+/// time goes as threads scale. Returns the JSON rows for
+/// `BENCH_quilt.json`.
+fn setup_sweep() -> String {
+    let (d, thread_counts, trials): (u32, &[usize], u64) =
+        if fast() { (13, &[1, 4], 2) } else { (16, &[1, 2, 4, 8], 3) };
+    let n = 1usize << d;
+    let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
+    println!("\n# bench: setup pipeline sweep (theta1, d={d}, n=2^{d}, chunked attrs)");
+    println!(
+        "{:>8} {:>10} {:>13} {:>10} {:>10} {:>10}",
+        "threads", "attrs_ms", "partition_ms", "trie_ms", "dag_ms", "total_ms"
+    );
+    let mut rows = Vec::new();
+    for &t in thread_counts {
+        let mut attrs_ms = Vec::new();
+        let mut partition_ms = Vec::new();
+        let mut trie_ms = Vec::new();
+        let mut dag_ms = Vec::new();
+        let mut pair_nodes = 0usize;
+        for trial in 0..trials {
+            let start = Instant::now();
+            let attrs = AttributeAssignment::sample_chunked(&params, &Rng::new(trial), t);
+            attrs_ms.push(start.elapsed().as_secs_f64() * 1e3);
+
+            let start = Instant::now();
+            let mut p = Partition::build_parallel(attrs.configs(), t);
+            partition_ms.push(start.elapsed().as_secs_f64() * 1e3);
+
+            let start = Instant::now();
+            p.build_tries_parallel(d as usize, t);
+            trie_ms.push(start.elapsed().as_secs_f64() * 1e3);
+
+            let start = Instant::now();
+            let cond = p.conditioned_sampler_threaded(params.thetas(), t);
+            dag_ms.push(start.elapsed().as_secs_f64() * 1e3);
+            pair_nodes = cond.num_pair_nodes();
+        }
+        let (a, pm, tm, dm) = (
+            median(&mut attrs_ms),
+            median(&mut partition_ms),
+            median(&mut trie_ms),
+            median(&mut dag_ms),
+        );
+        println!(
+            "{:>8} {:>10.2} {:>13.2} {:>10.2} {:>10.2} {:>10.2}",
+            t,
+            a,
+            pm,
+            tm,
+            dm,
+            a + pm + tm + dm
+        );
+        rows.push(format!(
+            "      {{\"setup_threads\": {t}, \"attrs_ms\": {a:.3}, \
+             \"partition_ms\": {pm:.3}, \"trie_ms\": {tm:.3}, \"dag_ms\": {dm:.3}, \
+             \"total_ms\": {:.3}, \"pair_nodes\": {pair_nodes}}}",
+            a + pm + tm + dm
+        ));
+    }
+    format!(
+        "  \"setup_sweep\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
+         \"trials\": {trials}, \"attr_mode\": \"chunked\",\n    \"results\": [\n{}\n    ]\n  }}",
+        rows.join(",\n")
+    )
+}
+
 fn main() {
     let (d_max, naive_max, trials) = if fast() { (12, 9, 2) } else { (17, 11, 3) };
     println!("# bench: sampling (paper Fig. 10/11) — trials={trials}");
@@ -219,7 +291,9 @@ fn main() {
     }
     let piece_rows = piece_mode_sweep();
     let shard_rows = shard_sweep();
-    let json = format!("{{\n  \"bench\": \"quilt\",\n{piece_rows},\n{shard_rows}\n}}\n");
+    let setup_rows = setup_sweep();
+    let json =
+        format!("{{\n  \"bench\": \"quilt\",\n{piece_rows},\n{shard_rows},\n{setup_rows}\n}}\n");
     match std::fs::write("BENCH_quilt.json", &json) {
         Ok(()) => println!("wrote BENCH_quilt.json"),
         Err(e) => eprintln!("could not write BENCH_quilt.json: {e}"),

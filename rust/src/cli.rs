@@ -5,8 +5,8 @@
 //! magquilt generate [--config F] [--log2-nodes N] [--attributes D]
 //!                   [--mu MU] [--theta a,b,c,d] [--sampler KIND]
 //!                   [--piece-mode MODE] [--seed S] [--workers W]
-//!                   [--shards S] [--sink KIND] [--output PATH]
-//!                   [--binary] [--stats]
+//!                   [--shards S] [--setup-threads T] [--attr-mode MODE]
+//!                   [--sink KIND] [--output PATH] [--binary] [--stats]
 //! magquilt sample …         (alias of generate; accepts --out for --output)
 //! magquilt stats <edge-list file>
 //! magquilt experiment <fig1|fig5|...|fig14|all> [--max-log2n N]
@@ -21,7 +21,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::{load_config, parse_piece_mode, ModelSpec, RunSpec, SamplerKind};
+use crate::config::{load_config, parse_attr_mode, parse_piece_mode, ModelSpec, RunSpec,
+                    SamplerKind};
 use crate::coordinator::Coordinator;
 use crate::experiments::{run_experiment, Scale, ALL_EXPERIMENTS};
 use crate::graph::{read_edge_list_binary, read_edge_list_text, write_edge_list_binary,
@@ -101,8 +102,8 @@ USAGE:
     magquilt generate [--config F] [--log2-nodes N] [--attributes D]
                       [--mu MU] [--theta a,b,c,d] [--sampler KIND]
                       [--piece-mode MODE] [--seed S] [--workers W]
-                      [--shards S] [--sink KIND] [--output PATH]
-                      [--binary] [--stats]
+                      [--shards S] [--setup-threads T] [--attr-mode MODE]
+                      [--sink KIND] [--output PATH] [--binary] [--stats]
     magquilt sample   … (alias of generate; --out is accepted for --output)
     magquilt stats <edge-list file>
     magquilt experiment <id|all> [--max-log2n N] [--naive-max-log2n N]
@@ -112,6 +113,8 @@ USAGE:
 
 SAMPLERS: quilt (Algorithm 2) | hybrid (§5) | naive | naive-xla
 PIECE MODES: conditioned (rejection-free, default) | rejection (paper-literal)
+ATTR MODES: sequential (legacy stream, default) | chunked (parallel setup,
+       bit-for-bit stable across any --setup-threads count)
 SINKS: collect (in-memory, default) | counting (degrees only, no graph)
        | binary (stream shards straight to the binary file at --output)
 EXPERIMENTS: fig1 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14 | all
@@ -176,6 +179,12 @@ fn specs_from_args(args: &Args) -> Result<(ModelSpec, RunSpec)> {
     if let Some(v) = args.get_parsed::<usize>("shards")? {
         run.shards = v;
     }
+    if let Some(v) = args.get_parsed::<usize>("setup-threads")? {
+        run.setup_threads = v;
+    }
+    if let Some(s) = args.get("attr-mode") {
+        run.attr_mode = parse_attr_mode(s)?;
+    }
     if let Some(s) = args.get("sampler") {
         run.sampler = SamplerKind::parse(s)?;
     }
@@ -205,13 +214,14 @@ fn cmd_generate(raw: &[String]) -> Result<()> {
     let params = model_params(&model);
     let sink = args.get("sink").unwrap_or("collect");
     eprintln!(
-        "model: n=2^{} d={} mu={} theta={:?} | sampler={} pieces={} seed={} sink={}",
+        "model: n=2^{} d={} mu={} theta={:?} | sampler={} pieces={} attrs={} seed={} sink={}",
         model.log2_nodes,
         model.attributes,
         model.mu,
         model.theta,
         run.sampler.name(),
         run.piece_mode.name(),
+        run.attr_mode.name(),
         run.seed,
         sink,
     );
@@ -268,6 +278,7 @@ fn cmd_generate_counting(params: &MagmParams, run: &RunSpec) -> Result<()> {
         _ => unreachable!("coordinator_for rejects other samplers"),
     };
     warn_dropped(stats.dropped_resamples);
+    print_setup(&stats.setup);
     println!(
         "sampled {} edges over {} nodes in {:.1} ms ({:.0} edges/s, {} workers, {} shards)",
         counts.num_edges, counts.num_nodes, stats.wall_ms, stats.edges_per_sec,
@@ -306,6 +317,7 @@ fn cmd_generate_binary(args: &Args, params: &MagmParams, run: &RunSpec) -> Resul
         _ => unreachable!("coordinator_for rejects other samplers"),
     };
     warn_dropped(stats.dropped_resamples);
+    print_setup(&stats.setup);
     println!(
         "wrote {} ({} edges, {:.1} ms, {} workers, {} shards)",
         path.display(),
@@ -333,12 +345,28 @@ fn coordinator_for(run: &RunSpec) -> Result<Coordinator> {
         SamplerKind::Quilt | SamplerKind::Hybrid => Ok(Coordinator::new()
             .workers(run.workers)
             .shards(run.shards)
+            .setup_threads(run.setup_threads)
+            .attr_mode(run.attr_mode)
             .piece_mode(run.piece_mode)),
         other => bail!(
             "sink counting|binary needs the quilt or hybrid sampler, not {}",
             other.name()
         ),
     }
+}
+
+/// One-line setup-pipeline timing breakdown (leader-side phases).
+fn print_setup(setup: &crate::coordinator::SetupStats) {
+    println!(
+        "setup: attrs {:.1} ms | partition {:.1} ms | tries {:.1} ms | dag {:.1} ms \
+         ({} setup threads, {} attrs)",
+        setup.attrs_ms,
+        setup.partition_ms,
+        setup.trie_ms,
+        setup.dag_ms,
+        setup.setup_threads,
+        setup.attr_mode.name(),
+    );
 }
 
 /// Warn when balls were abandoned after exhausting duplicate resamples
@@ -356,36 +384,51 @@ fn warn_dropped(dropped_resamples: u64) {
 pub fn sample_with(params: &MagmParams, run: &RunSpec) -> Result<EdgeList> {
     Ok(match run.sampler {
         SamplerKind::Quilt => {
-            let report = Coordinator::new()
-                .workers(run.workers)
-                .shards(run.shards)
-                .piece_mode(run.piece_mode)
-                .sample_quilt(params, run.seed);
+            let report = coordinator_for(run)?.sample_quilt(params, run.seed);
             warn_dropped(report.dropped_resamples);
+            print_setup(&report.setup);
             report.graph
         }
         SamplerKind::Hybrid => {
-            let report = Coordinator::new()
-                .workers(run.workers)
-                .shards(run.shards)
-                .piece_mode(run.piece_mode)
-                .sample_hybrid(params, run.seed);
+            let report = coordinator_for(run)?.sample_hybrid(params, run.seed);
             warn_dropped(report.dropped_resamples);
+            print_setup(&report.setup);
             report.graph
         }
         SamplerKind::Naive => {
             let mut rng = Rng::new(run.seed);
-            let attrs = AttributeAssignment::sample(params, &mut rng);
+            let attrs = AttributeAssignment::sample_with_mode(
+                params,
+                &mut rng,
+                run.attr_mode,
+                resolved_setup_threads(run),
+            );
             crate::magm::naive_sample(params, &attrs, &mut rng)
         }
         SamplerKind::NaiveXla => {
             let runtime =
                 crate::runtime::XlaRuntime::load_default().context("loading XLA artifacts")?;
             let mut rng = Rng::new(run.seed);
-            let attrs = AttributeAssignment::sample(params, &mut rng);
+            let attrs = AttributeAssignment::sample_with_mode(
+                params,
+                &mut rng,
+                run.attr_mode,
+                resolved_setup_threads(run),
+            );
             crate::runtime::naive_xla_sample(&runtime, params, &attrs, &mut rng)?
         }
     })
+}
+
+/// Resolve `--setup-threads 0` (auto) for the non-coordinated samplers
+/// the same way the coordinator does for its pool: match the available
+/// parallelism, capped at 16.
+fn resolved_setup_threads(run: &RunSpec) -> usize {
+    if run.setup_threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(16)
+    } else {
+        run.setup_threads
+    }
 }
 
 fn cmd_stats(raw: &[String]) -> Result<()> {
@@ -527,6 +570,22 @@ mod tests {
         assert_eq!(run.piece_mode, crate::quilt::PieceMode::Rejection);
         assert_eq!(run.seed, 5);
         assert_eq!(run.shards, 6);
+    }
+
+    #[test]
+    fn setup_threads_and_attr_mode_from_cli() {
+        let a = Args::parse(&s(&["--setup-threads", "4", "--attr-mode", "chunked"]), &[]).unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.setup_threads, 4);
+        assert_eq!(run.attr_mode, crate::magm::AttrSampleMode::Chunked);
+        // Defaults: auto threads, legacy sequential stream.
+        let a = Args::parse(&s(&[]), &[]).unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.setup_threads, 0);
+        assert_eq!(run.attr_mode, crate::magm::AttrSampleMode::Sequential);
+        // Bad mode rejected.
+        let a = Args::parse(&s(&["--attr-mode", "bogus"]), &[]).unwrap();
+        assert!(specs_from_args(&a).is_err());
     }
 
     #[test]

@@ -14,6 +14,8 @@
 //! [run]
 //! seed = 42
 //! workers = 4
+//! setup_threads = 0                 # setup pipeline threads; 0 = auto
+//! attr_mode = "sequential"          # sequential | chunked
 //! sampler = "quilt"                 # quilt | hybrid | naive | naive-xla
 //! piece_mode = "conditioned"        # conditioned | rejection
 //! output = "out/graph.bin"
@@ -22,7 +24,7 @@
 mod spec;
 mod toml;
 
-pub use spec::{parse_piece_mode, ModelSpec, RunSpec, SamplerKind};
+pub use spec::{parse_attr_mode, parse_piece_mode, ModelSpec, RunSpec, SamplerKind};
 pub use toml::{parse_toml, TomlValue};
 
 use std::collections::BTreeMap;

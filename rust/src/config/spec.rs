@@ -4,6 +4,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::magm::AttrSampleMode;
 use crate::quilt::PieceMode;
 
 use super::TomlValue;
@@ -12,6 +13,12 @@ use super::TomlValue;
 pub fn parse_piece_mode(s: &str) -> Result<PieceMode> {
     PieceMode::parse(s)
         .ok_or_else(|| anyhow!("unknown piece mode {s:?} (expected conditioned|rejection)"))
+}
+
+/// Parse an attribute-sampling mode from the CLI / config spelling.
+pub fn parse_attr_mode(s: &str) -> Result<AttrSampleMode> {
+    AttrSampleMode::parse(s)
+        .ok_or_else(|| anyhow!("unknown attr mode {s:?} (expected sequential|chunked)"))
 }
 
 /// Which sampler implementation to run.
@@ -138,6 +145,12 @@ pub struct RunSpec {
     /// matching the worker count). The sampled edge set is identical for
     /// every shard count.
     pub shards: usize,
+    /// Setup-pipeline threads (0 = auto, matching the worker count). The
+    /// built plan and sampled graph are identical for every count.
+    pub setup_threads: usize,
+    /// How attribute sampling consumes randomness (sequential = legacy
+    /// stream, seed-compatible; chunked = parallel, thread-count-stable).
+    pub attr_mode: AttrSampleMode,
     /// Sampler implementation.
     pub sampler: SamplerKind,
     /// How quilt pieces place balls (conditioned = rejection-free default;
@@ -150,13 +163,16 @@ pub struct RunSpec {
 }
 
 impl RunSpec {
-    /// Defaults: seed 42, auto workers, auto shards, quilt sampler with
-    /// conditioned pieces, 1 trial.
+    /// Defaults: seed 42, auto workers, auto shards, auto setup threads,
+    /// sequential attributes, quilt sampler with conditioned pieces,
+    /// 1 trial.
     pub fn default_spec() -> Self {
         RunSpec {
             seed: 42,
             workers: 0,
             shards: 0,
+            setup_threads: 0,
+            attr_mode: AttrSampleMode::Sequential,
             sampler: SamplerKind::Quilt,
             piece_mode: PieceMode::Conditioned,
             output: None,
@@ -178,6 +194,17 @@ impl RunSpec {
         if let Some(v) = sec.get("shards") {
             spec.shards =
                 v.as_int().ok_or_else(|| anyhow!("run.shards must be an integer"))? as usize;
+        }
+        if let Some(v) = sec.get("setup_threads") {
+            spec.setup_threads = v
+                .as_int()
+                .ok_or_else(|| anyhow!("run.setup_threads must be an integer"))?
+                as usize;
+        }
+        if let Some(v) = sec.get("attr_mode") {
+            spec.attr_mode = parse_attr_mode(
+                v.as_str().ok_or_else(|| anyhow!("run.attr_mode must be a string"))?,
+            )?;
         }
         if let Some(v) = sec.get("sampler") {
             spec.sampler = SamplerKind::parse(
@@ -250,6 +277,19 @@ mod tests {
         assert_eq!(spec.workers, 4);
         assert_eq!(RunSpec::default_spec().shards, 0);
         let bad = parse_toml("[run]\nshards = \"many\"\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
+    }
+
+    #[test]
+    fn setup_threads_and_attr_mode_parse_from_config() {
+        let m = parse_toml("[run]\nsetup_threads = 4\nattr_mode = \"chunked\"\n").unwrap();
+        let spec = RunSpec::from_section(m.get("run")).unwrap();
+        assert_eq!(spec.setup_threads, 4);
+        assert_eq!(spec.attr_mode, AttrSampleMode::Chunked);
+        assert_eq!(RunSpec::default_spec().setup_threads, 0);
+        assert_eq!(RunSpec::default_spec().attr_mode, AttrSampleMode::Sequential);
+        assert!(parse_attr_mode("bogus").is_err());
+        let bad = parse_toml("[run]\nattr_mode = \"bogus\"\n").unwrap();
         assert!(RunSpec::from_section(bad.get("run")).is_err());
     }
 

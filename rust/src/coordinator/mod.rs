@@ -1,10 +1,40 @@
-//! Job coordinator: plans the quilt pieces (and the hybrid's ER blocks),
-//! routes them across a bounded worker pool, and merges the edge streams
-//! with a **sharded streaming merge** into any [`crate::graph::EdgeSink`].
+//! Job coordinator: a **two-phase** engine — a parallel, deterministic
+//! *setup pipeline* followed by pooled *piece sampling* with a sharded
+//! streaming merge into any [`crate::graph::EdgeSink`].
+//!
+//! # Phase 1 — setup pipeline
+//!
+//! Before the first ball drops, the run needs the attribute assignment,
+//! the partition `D_1 … D_B`, the per-set prefix tries, and (in
+//! conditioned mode) the shared product DAG. Naively these are a serial
+//! `O(d · n)` prologue on the leader while every worker idles — the
+//! dominant wall-clock cost at paper scale. The coordinator instead runs
+//! each phase on `--setup-threads` scoped threads (0 = auto, matching the
+//! worker count), and every phase is **bit-for-bit deterministic in the
+//! seed** for any thread count:
+//!
+//! * **attributes** — [`crate::magm::AttrSampleMode::Chunked`] draws
+//!   fixed-size node chunks from stable per-chunk RNG forks (the legacy
+//!   sequential stream stays available — and default — for
+//!   seed-compatibility with existing goldens),
+//! * **partition** — [`crate::quilt::Partition::build_parallel`] replaces
+//!   the left-to-right multiplicity scan with per-chunk histograms + an
+//!   exclusive prefix-sum, reproducing every node's occurrence rank
+//!   `|Z_i|` exactly,
+//! * **tries** — [`crate::quilt::Partition::build_tries_parallel`] builds
+//!   per-set tries into sharded [`crate::kpgm::ConfigForest`] arenas and
+//!   merges them with a final hash-consing pass into the serial arena,
+//! * **product DAG** — the bottom-up restricted-mass aggregation of
+//!   [`crate::kpgm::ConditionedBallDropSampler`] parallelizes per level.
+//!
+//! Per-phase wall-clock lands in [`SetupStats`] (on [`RunStats`] /
+//! [`SampleReport`]), surfacing where setup time goes.
+//!
+//! # Phase 2 — piece sampling and merge
 //!
 //! The quilting algorithm is embarrassingly parallel at the piece level —
 //! each of the `B²` KPGM samples (and each ER block of the §5 hybrid) is
-//! independent given its RNG fork — so the coordinator is a classic
+//! independent given its RNG fork — so sampling is a classic
 //! leader/worker design:
 //!
 //! * the **leader** builds a [`JobPlan`] (piece jobs + block jobs),
@@ -33,10 +63,10 @@
 //!
 //! Determinism: every job carries a stable RNG fork id derived from the
 //! plan, so the *set* of sampled edges is independent of worker count,
-//! shard count, and scheduling order; the delivered edge list is
-//! bit-for-bit the sequential samplers' (sorted, deduplicated) output
-//! for the same seed.
+//! shard count, setup-thread count, and scheduling order; the delivered
+//! edge list is bit-for-bit the sequential samplers' (sorted,
+//! deduplicated) output for the same seed and attribute mode.
 
 mod pool;
 
-pub use pool::{Coordinator, JobPlan, RunStats, SampleReport};
+pub use pool::{Coordinator, JobPlan, RunStats, SampleReport, SetupStats};

@@ -8,7 +8,7 @@ use std::time::Instant;
 use crate::graph::{CollectSink, Edge, EdgeList, EdgeSink, NodeId, ShardMergeStats,
                    ShardMerger, ShardSpec};
 use crate::kpgm::{BallDropSampler, ConditionedBallDropSampler};
-use crate::magm::{AttributeAssignment, MagmParams};
+use crate::magm::{AttrSampleMode, AttributeAssignment, MagmParams};
 use crate::quilt::{sample_er_block, HybridPlan, HybridSampler, Partition, PieceBackend,
                    PieceJob, PieceMode, QuiltSampler};
 use crate::rng::Rng;
@@ -31,6 +31,41 @@ enum Job {
     ErBlock { src: BlockRef, dst: BlockRef, fork_id: u64 },
 }
 
+/// Wall-clock timings and knobs of the leader's **setup pipeline** — the
+/// phases that run before the first piece job is dispatched (attribute
+/// sampling, partition build, trie build, product-DAG build). Every phase
+/// is deterministic in the seed: the thread count changes only these
+/// timings, never the plan or the sampled graph.
+#[derive(Debug, Clone, Copy)]
+pub struct SetupStats {
+    /// Attribute sampling milliseconds.
+    pub attrs_ms: f64,
+    /// Partition build milliseconds (includes the dense index and, for
+    /// hybrid plans, the §5 light/heavy split).
+    pub partition_ms: f64,
+    /// Per-set prefix-trie build (+ shard merge) milliseconds.
+    pub trie_ms: f64,
+    /// Conditioned product-DAG build milliseconds.
+    pub dag_ms: f64,
+    /// Setup threads used (resolved; never 0).
+    pub setup_threads: usize,
+    /// How the attribute assignment consumed randomness.
+    pub attr_mode: AttrSampleMode,
+}
+
+impl Default for SetupStats {
+    fn default() -> Self {
+        SetupStats {
+            attrs_ms: 0.0,
+            partition_ms: 0.0,
+            trie_ms: 0.0,
+            dag_ms: 0.0,
+            setup_threads: 1,
+            attr_mode: AttrSampleMode::Sequential,
+        }
+    }
+}
+
 /// The full set of jobs for one sample, plus the shared inputs workers
 /// need. Built once by the leader.
 pub struct JobPlan {
@@ -42,6 +77,10 @@ pub struct JobPlan {
     mode: PieceMode,
     /// The shared product DAG for [`PieceMode::Conditioned`] plans.
     conditioner: Option<ConditionedBallDropSampler>,
+    /// Setup-pipeline timings recorded while building the plan
+    /// (`attrs_ms` is filled by the `sample_*` entry points, which own
+    /// attribute sampling).
+    setup: SetupStats,
 }
 
 impl JobPlan {
@@ -63,6 +102,11 @@ impl JobPlan {
     /// The piece mode this plan was built for.
     pub fn piece_mode(&self) -> PieceMode {
         self.mode
+    }
+
+    /// Setup-pipeline timings recorded while building this plan.
+    pub fn setup(&self) -> &SetupStats {
+        &self.setup
     }
 
     /// Expected work of one job, used to order the queue (largest first)
@@ -130,6 +174,8 @@ pub struct RunStats {
     pub dropped_resamples: u64,
     /// Per-shard merge statistics (one entry per shard, in index order).
     pub shard_stats: Vec<ShardMergeStats>,
+    /// Setup-pipeline phase timings (leader-side, before job dispatch).
+    pub setup: SetupStats,
 }
 
 /// Result of a coordinated sampling run collected in memory.
@@ -154,6 +200,8 @@ pub struct SampleReport {
     pub dropped_resamples: u64,
     /// Per-shard merge statistics (one entry per shard, in index order).
     pub shard_stats: Vec<ShardMergeStats>,
+    /// Setup-pipeline phase timings (leader-side, before job dispatch).
+    pub setup: SetupStats,
 }
 
 /// Upper bound on shard mergers (each is a thread).
@@ -167,6 +215,10 @@ pub struct Coordinator {
     piece_mode: PieceMode,
     /// Shard-merger count; 0 = auto (match the worker count).
     shards: usize,
+    /// Setup-pipeline thread count; 0 = auto (match the worker count).
+    setup_threads: usize,
+    /// How attribute sampling consumes randomness.
+    attr_mode: AttrSampleMode,
 }
 
 impl Default for Coordinator {
@@ -180,7 +232,14 @@ impl Coordinator {
     /// additional threads, one per shard).
     pub fn new() -> Self {
         let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(16);
-        Coordinator { workers, channel_capacity: 64, piece_mode: PieceMode::default(), shards: 0 }
+        Coordinator {
+            workers,
+            channel_capacity: 64,
+            piece_mode: PieceMode::default(),
+            shards: 0,
+            setup_threads: 0,
+            attr_mode: AttrSampleMode::default(),
+        }
     }
 
     /// Set the worker count (0 = auto).
@@ -212,16 +271,62 @@ impl Coordinator {
         self
     }
 
+    /// Set the setup-pipeline thread count (0 = auto, matching the worker
+    /// count). Every setup phase is bit-for-bit deterministic in the
+    /// seed, so this knob changes only wall-clock — never the plan or the
+    /// sampled graph.
+    pub fn setup_threads(mut self, threads: usize) -> Self {
+        self.setup_threads = threads;
+        self
+    }
+
+    /// Set the attribute sampling mode. Defaults to
+    /// [`AttrSampleMode::Sequential`] for seed-compatibility with goldens
+    /// recorded before the chunked pipeline; [`AttrSampleMode::Chunked`]
+    /// is required for the attribute phase to parallelize.
+    pub fn attr_mode(mut self, mode: AttrSampleMode) -> Self {
+        self.attr_mode = mode;
+        self
+    }
+
+    /// Resolved setup-thread count (0 = auto → worker count).
+    fn effective_setup_threads(&self) -> usize {
+        if self.setup_threads == 0 { self.workers.max(1) } else { self.setup_threads }
+    }
+
+    /// Sample the attribute assignment per the configured mode, returning
+    /// it with the phase's wall-clock milliseconds.
+    fn sample_attrs(&self, params: &MagmParams, seed: u64) -> (AttributeAssignment, f64) {
+        let start = Instant::now();
+        let mut rng = Rng::new(seed);
+        let attrs = AttributeAssignment::sample_with_mode(
+            params,
+            &mut rng,
+            self.attr_mode,
+            self.effective_setup_threads(),
+        );
+        (attrs, start.elapsed().as_secs_f64() * 1e3)
+    }
+
     /// Plan the quilting jobs (Algorithm 2 pieces only).
+    ///
+    /// Runs the setup pipeline on the configured setup threads: parallel
+    /// prefix-sum partition build, sharded trie build, and per-level
+    /// parallel DAG aggregation — each phase timed into
+    /// [`JobPlan::setup`], each bit-for-bit identical to its serial
+    /// counterpart.
     pub fn plan_quilt(
         &self,
         params: &MagmParams,
         attrs: &AttributeAssignment,
         seed: u64,
     ) -> JobPlan {
-        let mut partition = Partition::build(attrs.configs());
+        let st = self.effective_setup_threads();
+        let start = Instant::now();
+        let mut partition = Partition::build_parallel(attrs.configs(), st);
         crate::quilt::maybe_build_dense_index(&mut partition, params.depth());
-        let conditioner = self.build_conditioner(&mut partition, params);
+        let partition_ms = start.elapsed().as_secs_f64() * 1e3;
+        let (conditioner, trie_ms, dag_ms) = self.build_conditioner(&mut partition, params, st);
         let sampler = QuiltSampler::new(params.clone());
         let jobs = sampler.plan(&partition).into_iter().map(Job::Piece).collect();
         let mut plan = JobPlan {
@@ -232,19 +337,37 @@ impl Coordinator {
             seed,
             mode: self.piece_mode,
             conditioner,
+            setup: SetupStats {
+                attrs_ms: 0.0,
+                partition_ms,
+                trie_ms,
+                dag_ms,
+                setup_threads: st,
+                attr_mode: self.attr_mode,
+            },
         };
         plan.order_by_cost();
         plan
     }
 
-    /// Build tries + the shared product DAG when running conditioned.
+    /// Build tries + the shared product DAG when running conditioned,
+    /// timing the two phases separately. Returns `(dag, trie_ms, dag_ms)`.
     fn build_conditioner(
         &self,
         partition: &mut Partition,
         params: &MagmParams,
-    ) -> Option<ConditionedBallDropSampler> {
-        (self.piece_mode == PieceMode::Conditioned)
-            .then(|| partition.conditioned_sampler(params.thetas()))
+        setup_threads: usize,
+    ) -> (Option<ConditionedBallDropSampler>, f64, f64) {
+        if self.piece_mode != PieceMode::Conditioned {
+            return (None, 0.0, 0.0);
+        }
+        let start = Instant::now();
+        partition.build_tries_parallel(params.depth(), setup_threads);
+        let trie_ms = start.elapsed().as_secs_f64() * 1e3;
+        let start = Instant::now();
+        let dag = partition.conditioned_sampler_threaded(params.thetas(), setup_threads);
+        let dag_ms = start.elapsed().as_secs_f64() * 1e3;
+        (Some(dag), trie_ms, dag_ms)
     }
 
     /// Plan the §5 hybrid jobs: W-subset pieces + ER blocks.
@@ -254,12 +377,15 @@ impl Coordinator {
         attrs: &AttributeAssignment,
         seed: u64,
     ) -> JobPlan {
+        let st = self.effective_setup_threads();
+        let start = Instant::now();
         let hybrid = HybridSampler::new(params.clone()).seed(seed);
         let plan = hybrid.plan(attrs);
         let w_nodes = plan.w_nodes();
-        let mut partition = Partition::build_subset(attrs.configs(), &w_nodes);
+        let mut partition = Partition::build_subset_parallel(attrs.configs(), &w_nodes, st);
         crate::quilt::maybe_build_dense_index(&mut partition, params.depth());
-        let conditioner = self.build_conditioner(&mut partition, params);
+        let partition_ms = start.elapsed().as_secs_f64() * 1e3;
+        let (conditioner, trie_ms, dag_ms) = self.build_conditioner(&mut partition, params, st);
         let mut jobs: Vec<Job> = QuiltSampler::new(params.clone())
             .plan(&partition)
             .into_iter()
@@ -300,6 +426,14 @@ impl Coordinator {
             seed,
             mode: self.piece_mode,
             conditioner,
+            setup: SetupStats {
+                attrs_ms: 0.0,
+                partition_ms,
+                trie_ms,
+                dag_ms,
+                setup_threads: st,
+                attr_mode: self.attr_mode,
+            },
         };
         job_plan.order_by_cost();
         job_plan
@@ -307,17 +441,17 @@ impl Coordinator {
 
     /// Sample a MAGM graph with Algorithm 2 across the pool.
     pub fn sample_quilt(&self, params: &MagmParams, seed: u64) -> SampleReport {
-        let mut rng = Rng::new(seed);
-        let attrs = AttributeAssignment::sample(params, &mut rng);
-        let plan = self.plan_quilt(params, &attrs, seed);
+        let (attrs, attrs_ms) = self.sample_attrs(params, seed);
+        let mut plan = self.plan_quilt(params, &attrs, seed);
+        plan.setup.attrs_ms = attrs_ms;
         self.run(plan)
     }
 
     /// Sample a MAGM graph with the §5 hybrid across the pool.
     pub fn sample_hybrid(&self, params: &MagmParams, seed: u64) -> SampleReport {
-        let mut rng = Rng::new(seed);
-        let attrs = AttributeAssignment::sample(params, &mut rng);
-        let plan = self.plan_hybrid(params, &attrs, seed);
+        let (attrs, attrs_ms) = self.sample_attrs(params, seed);
+        let mut plan = self.plan_hybrid(params, &attrs, seed);
+        plan.setup.attrs_ms = attrs_ms;
         self.run(plan)
     }
 
@@ -329,9 +463,9 @@ impl Coordinator {
         seed: u64,
         sink: K,
     ) -> io::Result<(K::Output, RunStats)> {
-        let mut rng = Rng::new(seed);
-        let attrs = AttributeAssignment::sample(params, &mut rng);
-        let plan = self.plan_quilt(params, &attrs, seed);
+        let (attrs, attrs_ms) = self.sample_attrs(params, seed);
+        let mut plan = self.plan_quilt(params, &attrs, seed);
+        plan.setup.attrs_ms = attrs_ms;
         self.run_with_sink(plan, sink)
     }
 
@@ -342,9 +476,9 @@ impl Coordinator {
         seed: u64,
         sink: K,
     ) -> io::Result<(K::Output, RunStats)> {
-        let mut rng = Rng::new(seed);
-        let attrs = AttributeAssignment::sample(params, &mut rng);
-        let plan = self.plan_hybrid(params, &attrs, seed);
+        let (attrs, attrs_ms) = self.sample_attrs(params, seed);
+        let mut plan = self.plan_hybrid(params, &attrs, seed);
+        plan.setup.attrs_ms = attrs_ms;
         self.run_with_sink(plan, sink)
     }
 
@@ -363,6 +497,7 @@ impl Coordinator {
             edges_per_sec: stats.edges_per_sec,
             dropped_resamples: stats.dropped_resamples,
             shard_stats: stats.shard_stats,
+            setup: stats.setup,
         }
     }
 
@@ -544,6 +679,7 @@ impl Coordinator {
             edges_per_sec: num_edges as f64 / (wall_ms / 1e3).max(1e-9),
             dropped_resamples: dropped_total.into_inner(),
             shard_stats,
+            setup: plan.setup,
         };
         Ok((sink.finish()?, stats))
     }
@@ -744,6 +880,79 @@ mod tests {
         assert_eq!(written, rep.graph.num_edges() as u64);
         let back = crate::graph::read_edge_list_binary(&path).unwrap();
         assert_eq!(back, rep.graph);
+    }
+
+    #[test]
+    fn setup_threads_do_not_change_result() {
+        // The whole setup pipeline is deterministic in the seed: any
+        // setup-thread count must yield the exact same graph.
+        let p = params(256, 8, 0.5);
+        let base = Coordinator::new().workers(2).sample_quilt(&p, 19);
+        for st in [1usize, 2, 8] {
+            let rep = Coordinator::new().workers(2).setup_threads(st).sample_quilt(&p, 19);
+            assert_eq!(rep.graph, base.graph, "setup_threads={st}");
+            assert_eq!(rep.setup.setup_threads, st);
+            let rep = Coordinator::new().workers(2).setup_threads(st).sample_hybrid(&p, 19);
+            let bh = Coordinator::new().workers(2).sample_hybrid(&p, 19);
+            assert_eq!(rep.graph, bh.graph, "hybrid setup_threads={st}");
+        }
+    }
+
+    #[test]
+    fn chunked_setup_pipeline_equivalence_sweep() {
+        // n above 2 × the partition chunk so the prefix-sum build and the
+        // sharded trie merge actually engage; a sparse theta keeps piece
+        // sampling near-empty so the test isolates the setup pipeline.
+        let theta = Initiator::new([0.05, 0.15, 0.15, 0.25]);
+        let p = MagmParams::homogeneous(theta, 0.5, 20_000, 14);
+        let mut graphs = Vec::new();
+        for st in [1usize, 2, 8] {
+            let rep = Coordinator::new()
+                .workers(2)
+                .setup_threads(st)
+                .attr_mode(AttrSampleMode::Chunked)
+                .sample_quilt(&p, 11);
+            assert_eq!(rep.setup.attr_mode, AttrSampleMode::Chunked);
+            graphs.push(rep.graph);
+        }
+        assert_eq!(graphs[0], graphs[1]);
+        assert_eq!(graphs[0], graphs[2]);
+        // And the coordinated result equals the sequential sampler fed
+        // the same chunked assignment.
+        let attrs = AttributeAssignment::sample_chunked(&p, &Rng::new(11), 1);
+        let seq = QuiltSampler::new(p).seed(11).sample_with_attrs(&attrs);
+        assert_eq!(graphs[0], seq);
+    }
+
+    #[test]
+    fn chunked_hybrid_matches_sequential() {
+        let p = params(300, 9, 0.85);
+        let coord =
+            Coordinator::new().workers(3).setup_threads(4).attr_mode(AttrSampleMode::Chunked);
+        let rep = coord.sample_hybrid(&p, 23);
+        let attrs = AttributeAssignment::sample_chunked(&p, &Rng::new(23), 1);
+        let seq = HybridSampler::new(p).seed(23).sample_with_attrs(&attrs);
+        assert_eq!(rep.graph, seq);
+    }
+
+    #[test]
+    fn setup_stats_populated() {
+        let p = params(256, 8, 0.5);
+        let rep = Coordinator::new().workers(3).sample_quilt(&p, 7);
+        // Conditioned mode builds tries + DAG; every phase was timed.
+        assert!(rep.setup.attrs_ms > 0.0);
+        assert!(rep.setup.partition_ms > 0.0);
+        assert!(rep.setup.trie_ms > 0.0);
+        assert!(rep.setup.dag_ms > 0.0);
+        assert_eq!(rep.setup.setup_threads, 3, "auto setup threads follow workers");
+        assert_eq!(rep.setup.attr_mode, AttrSampleMode::Sequential);
+        // Rejection mode skips the conditioner entirely.
+        let rep = Coordinator::new()
+            .workers(2)
+            .piece_mode(PieceMode::Rejection)
+            .sample_quilt(&p, 7);
+        assert_eq!(rep.setup.trie_ms, 0.0);
+        assert_eq!(rep.setup.dag_ms, 0.0);
     }
 
     #[test]

@@ -55,6 +55,11 @@ const NONE: u32 = u32::MAX;
 /// answered by the trie itself.
 const MASK_LEVEL_GATE: usize = 16;
 
+/// Pair nodes per work chunk in the threaded bottom-up mass aggregation.
+/// Fixed (independent of the thread count): small levels collapse to one
+/// chunk and run inline with zero spawn overhead.
+const AGG_CHUNK: usize = 2048;
+
 /// One hash-consed trie class: the children are class ids at the next
 /// level ([`NONE`] = no configuration has that bit here).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,7 +73,13 @@ struct ClassNode {
 /// suffixes; two prefixes (possibly from different sets) with identical
 /// suffix sets share one class. Level `d` holds the single empty-suffix
 /// leaf class.
-#[derive(Debug, Clone)]
+///
+/// Forests can be built **sharded**: register disjoint groups of sets
+/// into private per-shard forests (in parallel), then merge them with
+/// [`ConfigForest::adopt_trie`] — the merge re-interns classes in the
+/// exact order serial registration would have created them, so the
+/// merged arena is bit-for-bit the serial one.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ConfigForest {
     depth: usize,
     /// `levels[ℓ]` = classes at prefix length `ℓ`, `ℓ ∈ 0..=depth`.
@@ -150,11 +161,78 @@ impl ConfigForest {
         self.interners[level].insert(key, id);
         id
     }
+
+    /// Re-intern a trie registered in `src` into `self`, returning the
+    /// equivalent trie rooted in `self`'s arena.
+    ///
+    /// New classes are created in the same DFS post-order (children
+    /// before parent, 0-child first) as [`Self::register_set`]'s
+    /// recursion, so adopting per-shard forests **in set order**
+    /// reproduces the serial arena exactly — class ids included. The
+    /// `memo` caches `src → self` class ids and must be reused for every
+    /// trie adopted from the same `src` (shared substructure is then
+    /// walked once).
+    pub fn adopt_trie(
+        &mut self,
+        src: &ConfigForest,
+        trie: &ConfigTrie,
+        memo: &mut AdoptMemo,
+    ) -> ConfigTrie {
+        assert_eq!(self.depth, src.depth, "forest depths must match");
+        let root = self.adopt_class(src, 0, trie.root, memo);
+        ConfigTrie { root, num_configs: trie.num_configs, masks: trie.masks.clone() }
+    }
+
+    /// Recursive re-intern of one `src` class (children first).
+    fn adopt_class(
+        &mut self,
+        src: &ConfigForest,
+        level: usize,
+        id: u32,
+        memo: &mut AdoptMemo,
+    ) -> u32 {
+        if level == self.depth {
+            return 0; // the shared empty-suffix leaf class
+        }
+        if let Some(&g) = memo.levels[level].get(&id) {
+            return g;
+        }
+        let [c0, c1] = src.class(level, id);
+        let g0 = if c0 == NONE { NONE } else { self.adopt_class(src, level + 1, c0, memo) };
+        let g1 = if c1 == NONE { NONE } else { self.adopt_class(src, level + 1, c1, memo) };
+        let key = ((g0 as u64) << 32) | g1 as u64;
+        let g = match self.interners[level].get(&key) {
+            Some(&existing) => existing,
+            None => {
+                let g = self.levels[level].len() as u32;
+                self.levels[level].push(ClassNode { children: [g0, g1] });
+                self.interners[level].insert(key, g);
+                g
+            }
+        };
+        memo.levels[level].insert(id, g);
+        g
+    }
+}
+
+/// Per-source-forest memo for [`ConfigForest::adopt_trie`]: source class
+/// id → adopted class id, one map per level. Create one per shard forest
+/// and reuse it across all of that shard's tries.
+#[derive(Debug)]
+pub struct AdoptMemo {
+    levels: Vec<FastMap<u32, u32>>,
+}
+
+impl AdoptMemo {
+    /// Empty memo for a `depth`-level source forest.
+    pub fn new(depth: usize) -> Self {
+        AdoptMemo { levels: vec![FastMap::default(); depth + 1] }
+    }
 }
 
 /// One registered configuration set: root class into a [`ConfigForest`]
 /// plus per-level reachability bitmasks.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ConfigTrie {
     root: u32,
     num_configs: usize,
@@ -232,7 +310,7 @@ fn quadrant_thresholds(w: &[f64; 4], total: f64) -> ([u64; 3], u8) {
 }
 
 /// One node of the product DAG: a reachable (row-class, col-class) pair.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 struct PairNode {
     /// Quadrant `(a, b)` (row-major index `2a + b`) → pair id at the next
     /// level; [`NONE`] = no retained cell below that quadrant.
@@ -244,7 +322,7 @@ struct PairNode {
 }
 
 /// Per-piece root into the product DAG plus its restricted aggregates.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 struct PieceRoot {
     node: u32,
     /// `m_kl = Σ_{(x,y) ∈ C_k × C_l} P[x, y]`.
@@ -270,7 +348,7 @@ struct PieceRoot {
 /// the sparse blocks — the ones whose acceptance collapses as `B` grows —
 /// are all conditioned. The split is a pure function of the partition and
 /// the budget, so seeded runs stay reproducible.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ConditionedBallDropSampler {
     depth: usize,
     num_sets: usize,
@@ -299,6 +377,26 @@ impl ConditionedBallDropSampler {
         forest: &ConfigForest,
         sets: &[ConfigTrie],
         cell_budget: u64,
+    ) -> Self {
+        Self::build_budgeted_threaded(thetas, forest, sets, cell_budget, 1)
+    }
+
+    /// As [`Self::build_budgeted`], parallelizing the bottom-up restricted
+    /// mass aggregation across up to `threads` setup threads.
+    ///
+    /// Within one level every pair node depends only on the next level's
+    /// (already final) masses, so the level's nodes split into fixed
+    /// [`AGG_CHUNK`]-sized chunks computed concurrently and reassembled
+    /// in index order — the identical float operations in the identical
+    /// order per node, hence a bit-for-bit identical DAG for every thread
+    /// count. The top-down pair discovery is a hash-interning scan and
+    /// stays serial (it is a small fraction of the build).
+    pub fn build_budgeted_threaded(
+        thetas: &ThetaSeq,
+        forest: &ConfigForest,
+        sets: &[ConfigTrie],
+        cell_budget: u64,
+        threads: usize,
     ) -> Self {
         let depth = thetas.depth();
         assert_eq!(forest.depth(), depth, "forest depth must match the theta sequence");
@@ -352,30 +450,48 @@ impl ConditionedBallDropSampler {
             pair_classes.push(next);
         }
 
-        // ---- Masses + thresholds (bottom-up, single pass). ----
+        // ---- Masses + thresholds (bottom-up, parallel per level). ----
         let mut levels: Vec<Vec<PairNode>> = vec![Vec::new(); depth];
         let mut mass_next: Vec<f64> = vec![1.0; pair_classes[depth].len()];
         let mut mass_sq_next: Vec<f64> = vec![1.0; pair_classes[depth].len()];
         for level in (0..depth).rev() {
             let w_level = thetas.level(level).weights();
             let n_nodes = pair_classes[level].len();
+            let chunks: Vec<&[[u32; 4]]> = if threads > 1 {
+                children[level].chunks(AGG_CHUNK).collect()
+            } else {
+                vec![children[level].as_slice()]
+            };
+            let mass_ref = &mass_next;
+            let mass_sq_ref = &mass_sq_next;
+            let parts = crate::parallel::map_indexed(chunks, threads, |_, chunk| {
+                let mut nodes = Vec::with_capacity(chunk.len());
+                let mut mass = Vec::with_capacity(chunk.len());
+                let mut mass_sq = Vec::with_capacity(chunk.len());
+                for ch in chunk {
+                    let mut w = [0.0f64; 4];
+                    let mut wsq = [0.0f64; 4];
+                    for q in 0..4 {
+                        if ch[q] != NONE {
+                            w[q] = w_level[q] * mass_ref[ch[q] as usize];
+                            wsq[q] = w_level[q] * w_level[q] * mass_sq_ref[ch[q] as usize];
+                        }
+                    }
+                    let total = w[0] + w[1] + w[2] + w[3];
+                    let (thresholds, fallback) = quadrant_thresholds(&w, total);
+                    nodes.push(PairNode { children: *ch, thresholds, fallback });
+                    mass.push(total);
+                    mass_sq.push(wsq[0] + wsq[1] + wsq[2] + wsq[3]);
+                }
+                (nodes, mass, mass_sq)
+            });
             let mut nodes = Vec::with_capacity(n_nodes);
             let mut mass_cur = Vec::with_capacity(n_nodes);
             let mut mass_sq_cur = Vec::with_capacity(n_nodes);
-            for ch in &children[level] {
-                let mut w = [0.0f64; 4];
-                let mut wsq = [0.0f64; 4];
-                for q in 0..4 {
-                    if ch[q] != NONE {
-                        w[q] = w_level[q] * mass_next[ch[q] as usize];
-                        wsq[q] = w_level[q] * w_level[q] * mass_sq_next[ch[q] as usize];
-                    }
-                }
-                let total = w[0] + w[1] + w[2] + w[3];
-                let (thresholds, fallback) = quadrant_thresholds(&w, total);
-                nodes.push(PairNode { children: *ch, thresholds, fallback });
-                mass_cur.push(total);
-                mass_sq_cur.push(wsq[0] + wsq[1] + wsq[2] + wsq[3]);
+            for (nd, m, msq) in parts {
+                nodes.extend(nd);
+                mass_cur.extend(m);
+                mass_sq_cur.extend(msq);
             }
             levels[level] = nodes;
             mass_next = mass_cur;
@@ -515,6 +631,70 @@ mod tests {
         assert_ne!(tries[0].root(), tries[2].root());
         // Sharing keeps the arena near one trie's size, not three.
         assert!(forest.num_classes() <= 2 * 4 * 3 + 5);
+    }
+
+    #[test]
+    fn adopted_forest_matches_serial_registration() {
+        // Serial registration in set order vs a 2-shard build (stride
+        // assignment: shard 0 gets sets 0 and 2, shard 1 gets 1 and 3)
+        // merged by adopt_trie in set order: the arenas — ids included —
+        // and the tries must be identical.
+        let d = 4;
+        let sets: Vec<Vec<u64>> = vec![vec![1, 5, 9], vec![2, 5], vec![1, 5, 9], vec![0, 7, 13]];
+        let mut serial = ConfigForest::new(d);
+        let serial_tries: Vec<ConfigTrie> = sets.iter().map(|s| serial.register_set(s)).collect();
+
+        let mut shard0 = ConfigForest::new(d);
+        let mut shard1 = ConfigForest::new(d);
+        let s0 = vec![shard0.register_set(&sets[0]), shard0.register_set(&sets[2])];
+        let s1 = vec![shard1.register_set(&sets[1]), shard1.register_set(&sets[3])];
+
+        let mut merged = ConfigForest::new(d);
+        let mut m0 = AdoptMemo::new(d);
+        let mut m1 = AdoptMemo::new(d);
+        let merged_tries = vec![
+            merged.adopt_trie(&shard0, &s0[0], &mut m0),
+            merged.adopt_trie(&shard1, &s1[0], &mut m1),
+            merged.adopt_trie(&shard0, &s0[1], &mut m0),
+            merged.adopt_trie(&shard1, &s1[1], &mut m1),
+        ];
+        assert_eq!(merged, serial);
+        assert_eq!(merged_tries, serial_tries);
+        // Hash consing across shards: identical sets share one root.
+        assert_eq!(merged_tries[0].root(), merged_tries[2].root());
+    }
+
+    #[test]
+    fn threaded_dag_build_matches_serial() {
+        // Sets large enough that mid-levels exceed AGG_CHUNK pair nodes,
+        // so the threaded build genuinely splits per-level work; the DAG
+        // must still be bit-for-bit the serial one.
+        let d = 12;
+        let thetas = ThetaSeq::homogeneous(Initiator::THETA2, d as u32);
+        let mut rng = crate::rng::Rng::new(71);
+        let mut cfgs = std::collections::BTreeSet::new();
+        while cfgs.len() < 1500 {
+            cfgs.insert(rng.below(1u64 << d));
+        }
+        let a: Vec<u64> = cfgs.iter().copied().collect();
+        let b: Vec<u64> = a.iter().copied().filter(|&c| c % 3 != 0).collect();
+        let (forest, tries) = forest_with(d, &[&a, &b]);
+        let serial = ConditionedBallDropSampler::build(&thetas, &forest, &tries);
+        assert!(
+            serial.num_pair_nodes() > 4 * AGG_CHUNK,
+            "test DAG too small to exercise chunking: {}",
+            serial.num_pair_nodes()
+        );
+        for threads in [2usize, 4, 8] {
+            let par = ConditionedBallDropSampler::build_budgeted_threaded(
+                &thetas,
+                &forest,
+                &tries,
+                u64::MAX,
+                threads,
+            );
+            assert_eq!(par, serial, "threads={threads}");
+        }
     }
 
     #[test]

@@ -19,7 +19,8 @@ pub mod general;
 mod initiator;
 mod sampler;
 
-pub use conditioned::{ConditionedBallDropSampler, ConfigForest, ConfigTrie, PieceSampler};
+pub use conditioned::{AdoptMemo, ConditionedBallDropSampler, ConfigForest, ConfigTrie,
+                      PieceSampler};
 pub(crate) use conditioned::draw_count_clamped;
 pub use initiator::{Initiator, ThetaSeq};
 pub use sampler::{naive_sample, BallDropSampler, DuplicatePolicy};

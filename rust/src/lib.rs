@@ -49,6 +49,7 @@ pub mod hashutil;
 pub mod kpgm;
 pub mod magm;
 pub mod metrics;
+pub mod parallel;
 pub mod proptest;
 pub mod quilt;
 pub mod rng;

@@ -1,6 +1,7 @@
 //! Attribute matrices and configurations.
 
 use crate::graph::NodeId;
+use crate::hashutil::{fast_map_with_capacity, FastMap};
 use crate::rng::Rng;
 
 use super::MagmParams;
@@ -9,6 +10,55 @@ use super::MagmParams;
 /// a u64, most significant bit = attribute 1 (matching the KPGM bit
 /// convention so `Q_ij = P_{λ_i λ_j}` holds literally).
 pub type Config = u64;
+
+/// How attribute sampling consumes randomness.
+///
+/// The MAGM definition makes `f(i)` i.i.d. per node, so any stream layout
+/// yields the model; the layout only decides which *specific* assignment
+/// a seed maps to, and whether sampling can parallelize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AttrSampleMode {
+    /// One left-to-right stream drawn from the caller's RNG — the legacy
+    /// layout, seed-compatible with goldens recorded before the chunked
+    /// pipeline existed. Inherently single-threaded.
+    #[default]
+    Sequential,
+    /// Fixed-size node chunks ([`ATTR_CHUNK`]), chunk `c` drawn from a
+    /// stable fork `rng.fork(tag).fork(c)`. The assignment is a pure
+    /// function of the seed — bit-for-bit identical for every thread
+    /// count — and chunks sample in parallel. Draws a *different*
+    /// (equally distributed) assignment than `Sequential` for the same
+    /// seed.
+    Chunked,
+}
+
+impl AttrSampleMode {
+    /// Parse from the CLI / config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sequential" => Some(AttrSampleMode::Sequential),
+            "chunked" => Some(AttrSampleMode::Chunked),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttrSampleMode::Sequential => "sequential",
+            AttrSampleMode::Chunked => "chunked",
+        }
+    }
+}
+
+/// Nodes per chunk in [`AttrSampleMode::Chunked`]. Fixed — never derived
+/// from the thread count — so the RNG stream layout (and hence the
+/// assignment) depends only on the seed.
+pub const ATTR_CHUNK: usize = 4096;
+
+/// Fork tag separating the chunked attribute streams from every other
+/// consumer of the base seed.
+const ATTR_FORK_TAG: u64 = 0xa77c_0de5;
 
 /// The sampled attribute assignment `F = (f(1), …, f(n))`, stored as packed
 /// configurations.
@@ -32,6 +82,45 @@ impl AttributeAssignment {
                 c
             })
             .collect();
+        AttributeAssignment { configs, depth: d }
+    }
+
+    /// Sample `F` with the given mode. `threads` only affects wall-clock
+    /// — never the result — and is ignored by the sequential mode.
+    pub fn sample_with_mode(
+        params: &MagmParams,
+        rng: &mut Rng,
+        mode: AttrSampleMode,
+        threads: usize,
+    ) -> Self {
+        match mode {
+            AttrSampleMode::Sequential => Self::sample(params, rng),
+            AttrSampleMode::Chunked => Self::sample_chunked(params, rng, threads),
+        }
+    }
+
+    /// Chunked sampling ([`AttrSampleMode::Chunked`]): nodes split into
+    /// fixed [`ATTR_CHUNK`]-sized chunks, chunk `c` drawn from
+    /// `rng.fork(tag).fork(c)`. Forking never advances `rng`, so the
+    /// parent stream is untouched, and chunk streams are independent of
+    /// how chunks are distributed over threads — the assignment is
+    /// bit-for-bit reproducible for any `threads`.
+    pub fn sample_chunked(params: &MagmParams, rng: &Rng, threads: usize) -> Self {
+        let d = params.depth() as u32;
+        let mus = params.mus();
+        let base = rng.fork(ATTR_FORK_TAG);
+        let mut configs = vec![0 as Config; params.num_nodes()];
+        let chunks: Vec<&mut [Config]> = configs.chunks_mut(ATTR_CHUNK).collect();
+        crate::parallel::map_indexed(chunks, threads, |ci, chunk| {
+            let mut rng = base.fork(ci as u64);
+            for slot in chunk {
+                let mut c: Config = 0;
+                for &mu in mus {
+                    c = (c << 1) | rng.bernoulli(mu) as u64;
+                }
+                *slot = c;
+            }
+        });
         AttributeAssignment { configs, depth: d }
     }
 
@@ -75,16 +164,18 @@ impl AttributeAssignment {
 
     /// Histogram of configuration frequencies: sorted `(config, count)`
     /// pairs. Powers Fig. 7 and the §5 hybrid split.
+    ///
+    /// Single hash pass plus a sort of the **unique** configs only — the
+    /// number of distinct configurations is typically far below `n`, so
+    /// this avoids the `O(n log n)` sort (and the 8·n-byte clone) of all
+    /// `n` configs.
     pub fn config_counts(&self) -> Vec<(Config, u32)> {
-        let mut sorted = self.configs.clone();
-        sorted.sort_unstable();
-        let mut out: Vec<(Config, u32)> = Vec::new();
-        for &c in &sorted {
-            match out.last_mut() {
-                Some((prev, count)) if *prev == c => *count += 1,
-                _ => out.push((c, 1)),
-            }
+        let mut counts: FastMap<Config, u32> = fast_map_with_capacity(self.configs.len().min(1024));
+        for &c in &self.configs {
+            *counts.entry(c).or_insert(0) += 1;
         }
+        let mut out: Vec<(Config, u32)> = counts.into_iter().collect();
+        out.sort_unstable();
         out
     }
 
@@ -151,6 +242,59 @@ mod tests {
         for w in counts.windows(2) {
             assert!(w[0].0 < w[1].0);
         }
+    }
+
+    #[test]
+    fn chunked_identical_across_thread_counts() {
+        // Several full chunks plus a ragged tail, so the test covers both
+        // the interior chunks and the boundary.
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.6, 3 * ATTR_CHUNK + 17, 8);
+        let t1 = AttributeAssignment::sample_chunked(&params, &Rng::new(5), 1);
+        let t2 = AttributeAssignment::sample_chunked(&params, &Rng::new(5), 2);
+        let t8 = AttributeAssignment::sample_chunked(&params, &Rng::new(5), 8);
+        assert_eq!(t1, t2);
+        assert_eq!(t1, t8);
+    }
+
+    #[test]
+    fn chunked_respects_mu() {
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.8, 20_000, 4);
+        let attrs = AttributeAssignment::sample_chunked(&params, &Rng::new(107), 4);
+        for k in 0..4 {
+            let ones: u64 =
+                (0..attrs.num_nodes()).map(|i| attrs.bit(i as NodeId, k) as u64).sum();
+            let frac = ones as f64 / attrs.num_nodes() as f64;
+            assert!((frac - 0.8).abs() < 0.02, "level {k}: {frac}");
+        }
+    }
+
+    #[test]
+    fn sample_with_mode_dispatches() {
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 1000, 6);
+        // Sequential mode is exactly the legacy stream.
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let legacy = AttributeAssignment::sample(&params, &mut r1);
+        let seq =
+            AttributeAssignment::sample_with_mode(&params, &mut r2, AttrSampleMode::Sequential, 8);
+        assert_eq!(legacy, seq);
+        // Both modes left their RNGs in the same state...
+        assert_eq!(r1.next_u64(), r2.next_u64());
+        // ...and chunked mode never advances the parent at all (forks only).
+        let mut r3 = Rng::new(3);
+        let chunked =
+            AttributeAssignment::sample_with_mode(&params, &mut r3, AttrSampleMode::Chunked, 2);
+        assert_eq!(r3.next_u64(), Rng::new(3).next_u64());
+        assert_ne!(legacy, chunked, "modes draw different assignments for the same seed");
+    }
+
+    #[test]
+    fn attr_mode_parses() {
+        assert_eq!(AttrSampleMode::parse("sequential"), Some(AttrSampleMode::Sequential));
+        assert_eq!(AttrSampleMode::parse("chunked"), Some(AttrSampleMode::Chunked));
+        assert_eq!(AttrSampleMode::parse("bogus"), None);
+        assert_eq!(AttrSampleMode::default().name(), "sequential");
+        assert_eq!(AttrSampleMode::Chunked.name(), "chunked");
     }
 
     #[test]

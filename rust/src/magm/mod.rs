@@ -12,7 +12,7 @@ pub mod general;
 mod params;
 mod sampler;
 
-pub use attributes::{AttributeAssignment, Config};
+pub use attributes::{AttrSampleMode, AttributeAssignment, Config, ATTR_CHUNK};
 pub use general::GenMagmParams;
 pub use params::MagmParams;
 pub use sampler::naive_sample;

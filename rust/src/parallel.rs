@@ -1,0 +1,104 @@
+//! Minimal deterministic fork–join helper for the setup pipeline.
+//!
+//! The vendored crate set has no rayon, so the parallel setup phases
+//! (chunked attribute sampling, the prefix-sum partition build, the
+//! sharded trie build, and the product-DAG mass aggregation) share this
+//! one primitive: map a closure over an indexed work list on
+//! `std::thread::scope` threads.
+//!
+//! Determinism contract: work item `i` is processed by thread
+//! `i % threads` and results are reassembled **by index**, so the output
+//! vector is a pure function of the input — never of the thread count or
+//! the OS schedule. Callers additionally keep their chunk sizes fixed
+//! (independent of the thread count), which is what makes the whole
+//! setup pipeline bit-for-bit reproducible for any `--setup-threads`.
+
+/// Hard cap on spawned threads per fork–join, whatever the caller asks
+/// for: `std::thread::scope` aborts the process if a spawn fails, so an
+/// oversized `--setup-threads` must not translate into thousands of
+/// simultaneous OS threads (workers are capped at 16 and shard mergers at
+/// 256 for the same reason).
+const MAX_PARALLEL_THREADS: usize = 256;
+
+/// Map `f` over `items` on up to `threads` scoped threads (capped at
+/// [`MAX_PARALLEL_THREADS`] and at the item count), preserving index
+/// order in the returned vector; `f` receives `(index, item)`.
+///
+/// `threads <= 1` — or a work list with at most one item — runs inline
+/// without spawning anything, so sequential callers pay no overhead.
+pub fn map_indexed<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n).min(MAX_PARALLEL_THREADS);
+    if threads <= 1 {
+        return items.into_iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let mut buckets: Vec<Vec<(usize, T)>> =
+        (0..threads).map(|_| Vec::with_capacity(n / threads + 1)).collect();
+    for (i, it) in items.into_iter().enumerate() {
+        buckets[i % threads].push((i, it));
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                scope.spawn(move || {
+                    bucket.into_iter().map(|(i, it)| (i, f(i, it))).collect::<Vec<(usize, R)>>()
+                })
+            })
+            .collect();
+        for handle in handles {
+            for (i, r) in handle.join().expect("parallel worker panicked") {
+                out[i] = Some(r);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("every index filled exactly once")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let items: Vec<u64> = (0..37).collect();
+            let out = map_indexed(items, threads, |i, x| i as u64 * 1000 + x * x);
+            assert_eq!(out.len(), 37);
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i as u64 * 1000 + (i * i) as u64, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item() {
+        let out: Vec<u32> = map_indexed(Vec::<u32>::new(), 4, |_, x| x);
+        assert!(out.is_empty());
+        let out = map_indexed(vec![7u32], 4, |i, x| x + i as u32);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn mutable_slices_as_items() {
+        // The chunked-attribute pattern: hand out disjoint &mut chunks.
+        let mut data = vec![0u64; 100];
+        let chunks: Vec<&mut [u64]> = data.chunks_mut(7).collect();
+        map_indexed(chunks, 3, |ci, chunk| {
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                *slot = (ci * 7 + k) as u64;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+}

@@ -1,15 +1,55 @@
-//! The node partition `D_1 … D_B` (paper §4, Theorem 2).
+//! The node partition `D_1 … D_B` (paper §4, Theorem 2) and its
+//! parallel, deterministic construction.
 //!
 //! `Z_i = {j ≤ i : λ_j = λ_i}`; node `i` goes to set `D_{|Z_i|}`. Within a
 //! set every attribute configuration appears at most once, and the number
 //! of non-empty sets `B = max_c (multiplicity of c)` is minimal by the
 //! pigeon-hole argument of Theorem 2.
+//!
+//! The partition is the first half of the run's **setup pipeline** (the
+//! second is piece sampling, see [`crate::coordinator`]). Two builds are
+//! provided, with asserted-identical output:
+//!
+//! * [`Partition::build`] — the textbook single left-to-right scan with a
+//!   multiplicity counter (`O(n)` expected, serial);
+//! * [`Partition::build_parallel`] — a prefix-sum reformulation for the
+//!   worker pool: nodes split into fixed [`PARTITION_CHUNK`]-sized chunks,
+//!   each chunk histograms its configs in parallel, an exclusive
+//!   prefix-sum across chunk histograms recovers the rank each config
+//!   starts at in each chunk, and a second parallel pass turns that into
+//!   every node's occurrence rank `|Z_i| − 1` — exactly the value the
+//!   sequential counter would have produced. Set membership, set order,
+//!   and the per-set maps are therefore **bit-for-bit identical** to the
+//!   sequential scan for every thread count.
+//!
+//! The same two-phase story applies downstream: [`Partition::build_tries`]
+//! has a sharded sibling ([`Partition::build_tries_parallel`]) that
+//! registers sets into per-shard [`ConfigForest`] arenas concurrently and
+//! merges them with a final hash-consing pass
+//! ([`ConfigForest::adopt_trie`]) into the *serial* arena, and
+//! [`Partition::conditioned_sampler_threaded`] parallelizes the product
+//! DAG's bottom-up mass aggregation per level.
 
-use crate::hashutil::FastMap;
+use crate::hashutil::{fast_map_with_capacity, FastMap};
 
 use crate::graph::NodeId;
-use crate::kpgm::{ConditionedBallDropSampler, ConfigForest, ConfigTrie, ThetaSeq};
+use crate::kpgm::{AdoptMemo, ConditionedBallDropSampler, ConfigForest, ConfigTrie, ThetaSeq};
 use crate::magm::Config;
+
+/// Nodes per chunk in [`Partition::build_parallel`]. Fixed — never
+/// derived from the thread count — so chunk histograms and prefix sums
+/// are a pure function of the input (the chunking is invisible in the
+/// output either way, but a fixed size also keeps the *work split*
+/// reproducible run to run).
+const PARTITION_CHUNK: usize = 8192;
+
+/// A set only gets a dense `config → node + 1` table when it would be at
+/// least `1/DENSE_MIN_LOAD_DIV` full. The old all-sets rule allocated
+/// `B · 2^d · 4` bytes — 16 MB *per set* at the d = 22 gate, even for
+/// singleton sets; gating per set bounds total dense memory by
+/// `DENSE_MIN_LOAD_DIV · 4 · Σ_c |D_c| = 256·n` bytes while the big
+/// early sets, which absorb almost all lookups, stay dense.
+const DENSE_MIN_LOAD_DIV: usize = 64;
 
 /// The partition plus, per set, the `config → node` lookup used when
 /// filtering KPGM samples (the permutation `λ_i → i` of Figure 3).
@@ -54,6 +94,122 @@ impl Partition {
         Partition { sets, maps, dense: Vec::new(), forest: None, tries: Vec::new() }
     }
 
+    /// Parallel [`Partition::build`] over `threads` setup threads.
+    ///
+    /// Three passes replace the sequential multiplicity scan: per-chunk
+    /// config histograms (parallel), an exclusive prefix-sum across the
+    /// chunk histograms (serial, `O(unique configs)` per chunk), and a
+    /// per-chunk rank assignment (parallel) whose chunk-start offsets come
+    /// from the prefix sums — node `i`'s rank equals the number of earlier
+    /// nodes with its config, exactly as in the sequential scan. Output is
+    /// identical for every `threads`; `threads <= 1` or small inputs
+    /// delegate to the sequential build.
+    pub fn build_parallel(configs: &[Config], threads: usize) -> Self {
+        if threads <= 1 || configs.len() < 2 * PARTITION_CHUNK {
+            return Self::build(configs);
+        }
+        Self::build_ranked(configs, configs.len(), |i| i as NodeId, threads)
+    }
+
+    /// Parallel [`Partition::build_subset`] (same prefix-sum pipeline over
+    /// the subset's node list; nodes keep their original ids).
+    pub fn build_subset_parallel(configs: &[Config], nodes: &[NodeId], threads: usize) -> Self {
+        if threads <= 1 || nodes.len() < 2 * PARTITION_CHUNK {
+            return Self::build_subset(configs, nodes);
+        }
+        Self::build_ranked(configs, nodes.len(), |i| nodes[i], threads)
+    }
+
+    /// The prefix-sum pipeline shared by [`Partition::build_parallel`] and
+    /// [`Partition::build_subset_parallel`]: logical index `i ∈ 0..len`
+    /// names node `node_at(i)`, scanned in logical order.
+    fn build_ranked<F>(configs: &[Config], len: usize, node_at: F, threads: usize) -> Self
+    where
+        F: Fn(usize) -> NodeId + Sync,
+    {
+        let node_at = &node_at;
+        let num_chunks = len.div_ceil(PARTITION_CHUNK);
+
+        // Phase 1 (parallel): per-chunk config histograms.
+        let chunk_ids: Vec<usize> = (0..num_chunks).collect();
+        let histograms: Vec<FastMap<Config, u32>> =
+            crate::parallel::map_indexed(chunk_ids, threads, |_, ci| {
+                let lo = ci * PARTITION_CHUNK;
+                let hi = (lo + PARTITION_CHUNK).min(len);
+                let mut h: FastMap<Config, u32> = fast_map_with_capacity(hi - lo);
+                for i in lo..hi {
+                    *h.entry(configs[node_at(i) as usize]).or_insert(0) += 1;
+                }
+                h
+            });
+
+        // Phase 2 (serial, O(unique per chunk)): exclusive prefix sums —
+        // the occurrence rank each config starts at in each chunk.
+        let mut total: FastMap<Config, u32> = fast_map_with_capacity(len);
+        let mut starts: Vec<FastMap<Config, u32>> = Vec::with_capacity(num_chunks);
+        for h in &histograms {
+            let mut s: FastMap<Config, u32> = fast_map_with_capacity(h.len());
+            for (&c, &cnt) in h {
+                let t = total.entry(c).or_insert(0);
+                s.insert(c, *t);
+                *t += cnt;
+            }
+            starts.push(s);
+        }
+        let b = total.values().copied().max().unwrap_or(0) as usize;
+        // |D_r| = number of configs with multiplicity > r (exact
+        // capacities for phase 4's pushes).
+        let mut set_sizes = vec![0usize; b];
+        for &m in total.values() {
+            for size in set_sizes.iter_mut().take(m as usize) {
+                *size += 1;
+            }
+        }
+
+        // Phase 3 (parallel): every node's occurrence rank = its chunk's
+        // start for the config plus the within-chunk running count.
+        let rank_jobs: Vec<FastMap<Config, u32>> = starts;
+        let chunk_ranks: Vec<Vec<u32>> =
+            crate::parallel::map_indexed(rank_jobs, threads, |ci, mut next| {
+                let lo = ci * PARTITION_CHUNK;
+                let hi = (lo + PARTITION_CHUNK).min(len);
+                let mut ranks = Vec::with_capacity(hi - lo);
+                for i in lo..hi {
+                    let r = next
+                        .get_mut(&configs[node_at(i) as usize])
+                        .expect("config counted in phase 1");
+                    ranks.push(*r);
+                    *r += 1;
+                }
+                ranks
+            });
+
+        // Phase 4 (serial, pure pushes): fill the sets in logical order —
+        // the same node order the sequential scan produces.
+        let mut sets: Vec<Vec<NodeId>> =
+            set_sizes.iter().map(|&s| Vec::with_capacity(s)).collect();
+        let mut i = 0usize;
+        for ranks in &chunk_ranks {
+            for &r in ranks {
+                sets[r as usize].push(node_at(i));
+                i += 1;
+            }
+        }
+
+        // Phase 5 (parallel over sets): the config → node lookup maps.
+        let set_refs: Vec<&Vec<NodeId>> = sets.iter().collect();
+        let maps: Vec<FastMap<Config, NodeId>> =
+            crate::parallel::map_indexed(set_refs, threads, |_, set| {
+                let mut m: FastMap<Config, NodeId> = fast_map_with_capacity(set.len());
+                for &node in set.iter() {
+                    m.insert(configs[node as usize], node);
+                }
+                m
+            });
+
+        Partition { sets, maps, dense: Vec::new(), forest: None, tries: Vec::new() }
+    }
+
     /// Build restricted to a subset of nodes (used by the hybrid sampler's
     /// W set). Nodes keep their original ids.
     pub fn build_subset(configs: &[Config], nodes: &[NodeId]) -> Self {
@@ -81,6 +237,17 @@ impl Partition {
     /// `O(d · n)`, with hash-consing sharing suffix structure across the
     /// nested sets.
     pub fn build_tries(&mut self, depth: usize) {
+        self.build_tries_parallel(depth, 1);
+    }
+
+    /// Parallel [`Partition::build_tries`]: set `c` is registered into the
+    /// private forest of shard `c % shards` (shards build concurrently),
+    /// then the shard tries are re-interned into one arena **in set
+    /// order** by [`ConfigForest::adopt_trie`]. Adoption creates classes
+    /// in exactly the order serial registration would have, so the merged
+    /// forest — class ids included — and the tries are bit-for-bit the
+    /// serial build's for every thread count. Idempotent.
+    pub fn build_tries_parallel(&mut self, depth: usize, threads: usize) {
         if let Some(forest) = &self.forest {
             debug_assert_eq!(
                 forest.depth(),
@@ -89,16 +256,44 @@ impl Partition {
             );
             return;
         }
-        let mut forest = ConfigForest::new(depth);
-        self.tries = self
-            .maps
-            .iter()
-            .map(|m| {
+        // Sorted config list per set (parallel; the sort is per set).
+        let map_refs: Vec<&FastMap<Config, NodeId>> = self.maps.iter().collect();
+        let cfg_lists: Vec<Vec<Config>> =
+            crate::parallel::map_indexed(map_refs, threads, |_, m| {
                 let mut cfgs: Vec<Config> = m.keys().copied().collect();
                 cfgs.sort_unstable();
-                forest.register_set(&cfgs)
-            })
-            .collect();
+                cfgs
+            });
+        let shards = threads.max(1).min(cfg_lists.len().max(1));
+        if shards <= 1 {
+            let mut forest = ConfigForest::new(depth);
+            self.tries = cfg_lists.iter().map(|cfgs| forest.register_set(cfgs)).collect();
+            self.forest = Some(forest);
+            return;
+        }
+        // Shard build (parallel): shard s registers sets s, s+shards, …
+        let cfg_ref = &cfg_lists;
+        let shard_ids: Vec<usize> = (0..shards).collect();
+        let shard_forests: Vec<(ConfigForest, Vec<ConfigTrie>)> =
+            crate::parallel::map_indexed(shard_ids, threads, |_, s| {
+                let mut forest = ConfigForest::new(depth);
+                let tries = cfg_ref
+                    .iter()
+                    .skip(s)
+                    .step_by(shards)
+                    .map(|cfgs| forest.register_set(cfgs))
+                    .collect();
+                (forest, tries)
+            });
+        // Merge (serial hash-consing pass, in set order).
+        let mut forest = ConfigForest::new(depth);
+        let mut memos: Vec<AdoptMemo> = (0..shards).map(|_| AdoptMemo::new(depth)).collect();
+        let mut tries = Vec::with_capacity(cfg_lists.len());
+        for idx in 0..cfg_lists.len() {
+            let (src, shard_tries) = &shard_forests[idx % shards];
+            tries.push(forest.adopt_trie(src, &shard_tries[idx / shards], &mut memos[idx % shards]));
+        }
+        self.tries = tries;
         self.forest = Some(forest);
     }
 
@@ -128,24 +323,48 @@ impl Partition {
     /// those. The split depends only on the partition and `thetas`, so
     /// seeded runs stay reproducible.
     pub fn conditioned_sampler(&mut self, thetas: &ThetaSeq) -> ConditionedBallDropSampler {
-        self.build_tries(thetas.depth());
+        self.conditioned_sampler_threaded(thetas, 1)
+    }
+
+    /// As [`Partition::conditioned_sampler`] with `threads` setup threads
+    /// for the trie build and the DAG's per-level bottom-up mass
+    /// aggregation. The sampler is identical for every thread count.
+    pub fn conditioned_sampler_threaded(
+        &mut self,
+        thetas: &ThetaSeq,
+        threads: usize,
+    ) -> ConditionedBallDropSampler {
+        self.build_tries_parallel(thetas.depth(), threads);
         let forest = self.forest.as_ref().expect("tries built above");
         // Floor keeps small blocks conditioned even for sparse θ; ceiling
         // guards the f64 → u64 cast for huge d.
         let budget = thetas.expected_edges().clamp(65536.0, 1e18) as u64;
-        ConditionedBallDropSampler::build_budgeted(thetas, forest, &self.tries, budget)
+        ConditionedBallDropSampler::build_budgeted_threaded(
+            thetas,
+            forest,
+            &self.tries,
+            budget,
+            threads,
+        )
     }
 
-    /// Build the dense `config → node + 1` index for every set.
+    /// Build the dense `config → node + 1` index for the sets that can
+    /// afford it.
     ///
-    /// `num_configs` is the configuration-space size `2^d`; call only when
-    /// `B · 2^d · 4` bytes is affordable (the quilting sampler gates at
-    /// `2^d ≤ 2^22`).
+    /// `num_configs` is the configuration-space size `2^d`. Each set gets
+    /// a table only when it would be at least `1/64` full
+    /// ([`DENSE_MIN_LOAD_DIV`]); sparser sets — the long tail of small
+    /// `D_c` when `B` is large — keep their hash map, bounding total
+    /// dense memory by `256·n` bytes instead of `B · 2^d · 4` (which at
+    /// the d = 22 gate was 16 MB per set, singletons included).
     pub fn build_dense_index(&mut self, num_configs: usize) {
         self.dense = self
             .maps
             .iter()
             .map(|m| {
+                if m.len().saturating_mul(DENSE_MIN_LOAD_DIV) < num_configs {
+                    return Vec::new(); // sparse set: keep the hash map
+                }
                 let mut table = vec![0 as NodeId; num_configs];
                 for (&cfg, &node) in m {
                     table[cfg as usize] = node + 1;
@@ -155,20 +374,28 @@ impl Partition {
             .collect();
     }
 
-    /// Whether the dense index is built.
+    /// Whether the dense index is built (individual sets may still answer
+    /// from their hash map — see [`Partition::build_dense_index`]).
     pub fn has_dense_index(&self) -> bool {
         !self.dense.is_empty()
     }
 
-    /// `config → node` lookup for set `c`, using the dense index if built.
+    /// Number of sets with a materialized dense table (diagnostics).
+    pub fn num_dense_sets(&self) -> usize {
+        self.dense.iter().filter(|t| !t.is_empty()).count()
+    }
+
+    /// `config → node` lookup for set `c`, using the set's dense table if
+    /// one was built.
     #[inline]
     pub fn lookup(&self, c: usize, config: Config) -> Option<NodeId> {
         if let Some(table) = self.dense.get(c) {
-            let v = table[config as usize];
-            if v == 0 { None } else { Some(v - 1) }
-        } else {
-            self.maps[c].get(&config).copied()
+            if !table.is_empty() {
+                let v = table[config as usize];
+                return if v == 0 { None } else { Some(v - 1) };
+            }
         }
+        self.maps[c].get(&config).copied()
     }
 
     /// The partition size B.
@@ -299,6 +526,98 @@ mod tests {
         // Idempotent.
         p.build_tries(3);
         assert_eq!(p.config_forest().unwrap().depth(), 3);
+    }
+
+    /// The full equality the parallel builds promise: same sets (same
+    /// node order), same maps.
+    fn assert_same_partition(a: &Partition, b: &Partition) {
+        assert_eq!(a.size(), b.size());
+        for c in 0..a.size() {
+            assert_eq!(a.set(c), b.set(c), "set {c} differs");
+            assert_eq!(a.map(c), b.map(c), "map {c} differs");
+        }
+    }
+
+    /// Random configs big enough to span several [`PARTITION_CHUNK`]s,
+    /// with skew so multiplicities (and hence B) are non-trivial.
+    fn chunky_configs(n: usize, distinct: u64, seed: u64) -> Vec<u64> {
+        let mut rng = crate::rng::Rng::new(seed);
+        (0..n).map(|_| rng.below(distinct) * rng.below(distinct) % distinct).collect()
+    }
+
+    #[test]
+    fn parallel_build_matches_sequential_across_thread_counts() {
+        let configs = chunky_configs(3 * PARTITION_CHUNK + 111, 5000, 41);
+        let serial = Partition::build(&configs);
+        for threads in [1usize, 2, 8] {
+            let par = Partition::build_parallel(&configs, threads);
+            assert_same_partition(&par, &serial);
+        }
+    }
+
+    #[test]
+    fn parallel_subset_build_matches_sequential() {
+        let configs = chunky_configs(5 * PARTITION_CHUNK, 3000, 43);
+        let nodes: Vec<NodeId> =
+            (0..configs.len() as NodeId).filter(|i| i % 7 != 0).collect();
+        let serial = Partition::build_subset(&configs, &nodes);
+        for threads in [2usize, 8] {
+            let par = Partition::build_subset_parallel(&configs, &nodes, threads);
+            assert_same_partition(&par, &serial);
+        }
+    }
+
+    #[test]
+    fn parallel_tries_match_serial_forest_exactly() {
+        // The sharded build + adopt merge must reproduce the serial arena
+        // bit-for-bit: same forest (levels AND class ids), same tries.
+        let configs = chunky_configs(2 * PARTITION_CHUNK, 600, 47);
+        let depth = 13;
+        let mut serial = Partition::build(&configs);
+        serial.build_tries(depth);
+        for threads in [2usize, 3, 8] {
+            let mut par = Partition::build_parallel(&configs, threads);
+            par.build_tries_parallel(depth, threads);
+            assert_eq!(
+                par.config_forest().unwrap(),
+                serial.config_forest().unwrap(),
+                "forest differs at threads={threads}"
+            );
+            for c in 0..serial.size() {
+                assert_eq!(par.trie(c), serial.trie(c), "trie {c} at threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_conditioned_sampler_matches_serial() {
+        let configs = chunky_configs(2 * PARTITION_CHUNK, 400, 53);
+        let thetas = ThetaSeq::homogeneous(crate::kpgm::Initiator::THETA1, 12);
+        let serial = Partition::build(&configs).conditioned_sampler(&thetas);
+        let threaded =
+            Partition::build_parallel(&configs, 4).conditioned_sampler_threaded(&thetas, 4);
+        assert_eq!(serial, threaded);
+    }
+
+    #[test]
+    fn dense_index_gates_per_set() {
+        // One big set (every config once) and a long tail of tiny sets
+        // (config 0 repeated): only the big set affords a dense table.
+        let num_configs = 1usize << 12;
+        let mut configs: Vec<u64> = (0..num_configs as u64).collect();
+        configs.extend(std::iter::repeat(0u64).take(40));
+        let mut p = Partition::build(&configs);
+        assert_eq!(p.size(), 41);
+        p.build_dense_index(num_configs);
+        assert!(p.has_dense_index());
+        // Set 0 holds 2^12 configs (dense); sets 1..41 hold one config
+        // each (1 · 64 < 4096: hash map).
+        assert_eq!(p.num_dense_sets(), 1);
+        // Lookups agree with the maps on every set either way.
+        assert_eq!(p.lookup(0, 77), Some(77));
+        assert_eq!(p.lookup(1, 0), Some(num_configs as NodeId));
+        assert_eq!(p.lookup(1, 77), None);
+        assert_eq!(p.lookup(40, 0), Some((num_configs + 39) as NodeId));
     }
 
     #[test]

@@ -204,7 +204,10 @@ const FULL_DEDUP_MAX_DROPS: u64 = 1 << 20;
 const MAX_ATTEMPTS: u32 = 64;
 
 /// Build the dense config→node index when the configuration space is small
-/// enough (`B · 2^d · 4` bytes; gate at 2^22 configs ≈ 16 MB per set).
+/// enough. Two gates: this one caps a single table at `2^22 · 4` = 16 MB,
+/// and [`Partition::build_dense_index`] additionally skips sets that would
+/// be under 1/64 full, so the total dense memory is bounded by `256·n`
+/// bytes — not `B · 2^d · 4` — even when `B` is large.
 pub(crate) fn maybe_build_dense(partition: &mut Partition, depth: usize) {
     if depth <= 22 {
         partition.build_dense_index(1usize << depth);
