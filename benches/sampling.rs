@@ -130,9 +130,10 @@ fn shard_sweep() -> String {
             .map(|st| {
                 format!(
                     "{{\"shard\": {}, \"edges\": {}, \"batches\": {}, \"max_batch\": {}, \
-                     \"duplicates_dropped\": {}, \"peak_resident\": {}}}",
+                     \"duplicates_dropped\": {}, \"peak_resident\": {}, \
+                     \"deferred\": {}, \"spill_runs\": {}, \"spill_bytes\": {}}}",
                     st.shard, st.edges, st.batches, st.max_batch, st.duplicates_dropped,
-                    st.peak_resident
+                    st.peak_resident, st.deferred, st.spill_runs, st.spill_bytes
                 )
             })
             .collect();
@@ -148,6 +149,61 @@ fn shard_sweep() -> String {
     format!(
         "  \"shard_sweep\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
          \"trials\": {trials},\n    \"results\": [\n{}\n    ]\n  }}",
+        rows.join(",\n")
+    )
+}
+
+/// Forced-spill sweep of the binary sink: same model, zero in-memory
+/// budget, S ∈ {2, 4, 8} — every shard that finishes ahead of the file
+/// frontier detours through a spill file, so the sweep measures what the
+/// out-of-order/spill path costs against the in-order collect baseline.
+/// Returns the JSON rows for `BENCH_quilt.json`.
+fn spill_sweep() -> String {
+    use magquilt::graph::BinaryFileSink;
+    let (d, shard_counts, trials): (u32, &[usize], u64) =
+        if fast() { (12, &[4], 2) } else { (15, &[2, 4, 8], 3) };
+    let n = 1usize << d;
+    let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
+    let dir = std::env::temp_dir().join("magquilt_bench_spill");
+    std::fs::create_dir_all(&dir).unwrap();
+    println!("\n# bench: forced-spill binary sink sweep (theta1, d={d}, n=2^{d}, budget 0)");
+    println!(
+        "{:>4} {:>10} {:>10} {:>14} {:>12} {:>14}",
+        "S", "edges", "wall_ms", "deferred", "spilled", "spill_bytes"
+    );
+    let mut rows = Vec::new();
+    for &s in shard_counts {
+        let coord = Coordinator::new().shards(s);
+        let path = dir.join(format!("spill_{s}.bin"));
+        let mut ms = Vec::new();
+        let mut last = None;
+        for t in 0..trials {
+            let sink = BinaryFileSink::create(&path).spill_dir(&dir).spill_budget(0);
+            let start = Instant::now();
+            let (written, stats) = coord
+                .sample_quilt_with_sink(&params, t, sink)
+                .expect("binary sink bench run failed");
+            ms.push(start.elapsed().as_secs_f64() * 1e3);
+            last = Some((written, stats));
+        }
+        let wall = median(&mut ms);
+        let (written, stats) = last.expect("at least one trial");
+        let sp = stats.spill;
+        println!(
+            "{:>4} {:>10} {:>10.2} {:>14} {:>12} {:>14}",
+            s, written, wall, sp.deferred_shards, sp.spilled_shards, sp.spill_bytes
+        );
+        rows.push(format!(
+            "      {{\"shards\": {s}, \"workers\": {}, \"edges\": {written}, \
+             \"wall_ms\": {wall:.3}, \"deferred_shards\": {}, \"spilled_shards\": {}, \
+             \"spill_runs\": {}, \"spill_bytes\": {}}}",
+            stats.workers, sp.deferred_shards, sp.spilled_shards, sp.spill_runs, sp.spill_bytes
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+    format!(
+        "  \"spill_sweep\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
+         \"trials\": {trials}, \"spill_budget\": 0,\n    \"results\": [\n{}\n    ]\n  }}",
         rows.join(",\n")
     )
 }
@@ -291,9 +347,11 @@ fn main() {
     }
     let piece_rows = piece_mode_sweep();
     let shard_rows = shard_sweep();
+    let spill_rows = spill_sweep();
     let setup_rows = setup_sweep();
-    let json =
-        format!("{{\n  \"bench\": \"quilt\",\n{piece_rows},\n{shard_rows},\n{setup_rows}\n}}\n");
+    let json = format!(
+        "{{\n  \"bench\": \"quilt\",\n{piece_rows},\n{shard_rows},\n{spill_rows},\n{setup_rows}\n}}\n"
+    );
     match std::fs::write("BENCH_quilt.json", &json) {
         Ok(()) => println!("wrote BENCH_quilt.json"),
         Err(e) => eprintln!("could not write BENCH_quilt.json: {e}"),

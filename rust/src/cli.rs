@@ -6,7 +6,8 @@
 //!                   [--mu MU] [--theta a,b,c,d] [--sampler KIND]
 //!                   [--piece-mode MODE] [--seed S] [--workers W]
 //!                   [--shards S] [--setup-threads T] [--attr-mode MODE]
-//!                   [--sink KIND] [--output PATH] [--binary] [--stats]
+//!                   [--sink KIND] [--output PATH] [--spill-dir DIR]
+//!                   [--spill-budget BYTES] [--binary] [--stats]
 //! magquilt sample …         (alias of generate; accepts --out for --output)
 //! magquilt stats <edge-list file>
 //! magquilt experiment <fig1|fig5|...|fig14|all> [--max-log2n N]
@@ -103,7 +104,8 @@ USAGE:
                       [--mu MU] [--theta a,b,c,d] [--sampler KIND]
                       [--piece-mode MODE] [--seed S] [--workers W]
                       [--shards S] [--setup-threads T] [--attr-mode MODE]
-                      [--sink KIND] [--output PATH] [--binary] [--stats]
+                      [--sink KIND] [--output PATH] [--spill-dir DIR]
+                      [--spill-budget BYTES] [--binary] [--stats]
     magquilt sample   … (alias of generate; --out is accepted for --output)
     magquilt stats <edge-list file>
     magquilt experiment <id|all> [--max-log2n N] [--naive-max-log2n N]
@@ -116,7 +118,11 @@ PIECE MODES: conditioned (rejection-free, default) | rejection (paper-literal)
 ATTR MODES: sequential (legacy stream, default) | chunked (parallel setup,
        bit-for-bit stable across any --setup-threads count)
 SINKS: collect (in-memory, default) | counting (degrees only, no graph)
-       | binary (stream shards straight to the binary file at --output)
+       | binary (stream shards straight to the binary file at --output;
+         a shard finishing ahead of the file frontier is held within
+         --spill-budget BYTES of memory [default 256 MiB] then spilled to
+         temp files in --spill-dir [default: next to the output] and
+         concatenated into its slot when the frontier catches up)
 EXPERIMENTS: fig1 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14 | all
 ";
 
@@ -193,6 +199,12 @@ fn specs_from_args(args: &Args) -> Result<(ModelSpec, RunSpec)> {
     }
     if let Some(o) = args.get("output").or_else(|| args.get("out")) {
         run.output = Some(o.to_string());
+    }
+    if let Some(d) = args.get("spill-dir") {
+        run.spill_dir = Some(d.to_string());
+    }
+    if let Some(b) = args.get_parsed::<u64>("spill-budget")? {
+        run.spill_budget = Some(b);
     }
     model.validate()?;
     Ok((model, run))
@@ -310,7 +322,13 @@ fn cmd_generate_binary(args: &Args, params: &MagmParams, run: &RunSpec) -> Resul
     let path = Path::new(path);
     ensure_parent_dir(path)?;
     let coord = coordinator_for(run)?;
-    let sink = BinaryFileSink::create(path);
+    let mut sink = BinaryFileSink::create(path);
+    if let Some(dir) = &run.spill_dir {
+        sink = sink.spill_dir(dir);
+    }
+    if let Some(bytes) = run.spill_budget {
+        sink = sink.spill_budget(bytes);
+    }
     let (written, stats) = match run.sampler {
         SamplerKind::Quilt => coord.sample_quilt_with_sink(params, run.seed, sink)?,
         SamplerKind::Hybrid => coord.sample_hybrid_with_sink(params, run.seed, sink)?,
@@ -318,6 +336,13 @@ fn cmd_generate_binary(args: &Args, params: &MagmParams, run: &RunSpec) -> Resul
     };
     warn_dropped(stats.dropped_resamples);
     print_setup(&stats.setup);
+    println!(
+        "spill: {} shard(s) spilled, {} bytes in {} run(s); {} shard(s) deferred in memory",
+        stats.spill.spilled_shards,
+        stats.spill.spill_bytes,
+        stats.spill.spill_runs,
+        stats.spill.deferred_shards - stats.spill.spilled_shards,
+    );
     println!(
         "wrote {} ({} edges, {:.1} ms, {} workers, {} shards)",
         path.display(),
@@ -597,6 +622,22 @@ mod tests {
         let a = Args::parse(&s(&["--out", "a.bin", "--output", "b.bin"]), &[]).unwrap();
         let (_, run) = specs_from_args(&a).unwrap();
         assert_eq!(run.output.as_deref(), Some("b.bin"));
+    }
+
+    #[test]
+    fn spill_flags_from_cli() {
+        let a = Args::parse(&s(&["--spill-dir", "/tmp/sp", "--spill-budget", "0"]), &[]).unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.spill_dir.as_deref(), Some("/tmp/sp"));
+        assert_eq!(run.spill_budget, Some(0));
+        // Defaults: the sink decides.
+        let a = Args::parse(&s(&[]), &[]).unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.spill_dir, None);
+        assert_eq!(run.spill_budget, None);
+        // Non-numeric budget rejected.
+        let a = Args::parse(&s(&["--spill-budget", "lots"]), &[]).unwrap();
+        assert!(specs_from_args(&a).is_err());
     }
 
     #[test]

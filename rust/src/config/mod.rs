@@ -14,12 +14,20 @@
 //! [run]
 //! seed = 42
 //! workers = 4
+//! shards = 0                        # shard mergers; 0 = auto (= workers)
 //! setup_threads = 0                 # setup pipeline threads; 0 = auto
 //! attr_mode = "sequential"          # sequential | chunked
 //! sampler = "quilt"                 # quilt | hybrid | naive | naive-xla
 //! piece_mode = "conditioned"        # conditioned | rejection
 //! output = "out/graph.bin"
+//! spill_dir = "/tmp/magquilt"       # binary-sink spill files (default:
+//!                                   # next to the output)
+//! spill_budget = 268435456          # bytes of out-of-order shards held
+//!                                   # in memory before spilling (0 =
+//!                                   # spill everything out of order)
 //! ```
+//!
+//! A complete annotated example lives at `examples/configs/spill_to_disk.toml`.
 
 mod spec;
 mod toml;
@@ -71,5 +79,24 @@ sampler = "quilt"
         assert_eq!(model.attributes, 10); // defaults to log2_nodes
         assert_eq!(run.seed, 7);
         assert_eq!(run.sampler, SamplerKind::Quilt);
+    }
+
+    #[test]
+    fn shipped_example_configs_parse() {
+        // The annotated configs under examples/configs are documentation
+        // that must stay loadable.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/configs");
+        let mut checked = 0;
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.extension().is_some_and(|e| e == "toml") {
+                load_config(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                checked += 1;
+            }
+        }
+        assert!(checked >= 1, "no example configs found in {}", dir.display());
+        let (_, run) = load_config(&dir.join("spill_to_disk.toml")).unwrap();
+        assert_eq!(run.spill_dir.as_deref(), Some("/tmp/magquilt-spill"));
+        assert_eq!(run.spill_budget, Some(256 << 20));
     }
 }

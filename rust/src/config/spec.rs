@@ -158,6 +158,14 @@ pub struct RunSpec {
     pub piece_mode: PieceMode,
     /// Optional output path for the sampled edge list.
     pub output: Option<String>,
+    /// Directory for the binary sink's out-of-order spill files (None =
+    /// next to the output file).
+    pub spill_dir: Option<String>,
+    /// In-memory budget in bytes for shards that finish ahead of the
+    /// binary sink's file frontier before they spill to disk (None =
+    /// the sink default, 256 MiB; 0 forces every out-of-order shard to
+    /// spill).
+    pub spill_budget: Option<u64>,
     /// Number of repeated samples (experiments average over trials).
     pub trials: u32,
 }
@@ -165,7 +173,7 @@ pub struct RunSpec {
 impl RunSpec {
     /// Defaults: seed 42, auto workers, auto shards, auto setup threads,
     /// sequential attributes, quilt sampler with conditioned pieces,
-    /// 1 trial.
+    /// default spill budget next to the output, 1 trial.
     pub fn default_spec() -> Self {
         RunSpec {
             seed: 42,
@@ -176,6 +184,8 @@ impl RunSpec {
             sampler: SamplerKind::Quilt,
             piece_mode: PieceMode::Conditioned,
             output: None,
+            spill_dir: None,
+            spill_budget: None,
             trials: 1,
         }
     }
@@ -219,6 +229,18 @@ impl RunSpec {
         if let Some(v) = sec.get("output") {
             spec.output =
                 Some(v.as_str().ok_or_else(|| anyhow!("run.output must be a string"))?.to_string());
+        }
+        if let Some(v) = sec.get("spill_dir") {
+            spec.spill_dir = Some(
+                v.as_str().ok_or_else(|| anyhow!("run.spill_dir must be a string"))?.to_string(),
+            );
+        }
+        if let Some(v) = sec.get("spill_budget") {
+            let b = v.as_int().ok_or_else(|| anyhow!("run.spill_budget must be an integer"))?;
+            if b < 0 {
+                bail!("run.spill_budget must be >= 0 bytes, got {b}");
+            }
+            spec.spill_budget = Some(b as u64);
         }
         if let Some(v) = sec.get("trials") {
             spec.trials =
@@ -290,6 +312,21 @@ mod tests {
         assert_eq!(RunSpec::default_spec().attr_mode, AttrSampleMode::Sequential);
         assert!(parse_attr_mode("bogus").is_err());
         let bad = parse_toml("[run]\nattr_mode = \"bogus\"\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
+    }
+
+    #[test]
+    fn spill_knobs_parse_from_config() {
+        let m = parse_toml("[run]\nspill_dir = \"/tmp/spill\"\nspill_budget = 0\n").unwrap();
+        let spec = RunSpec::from_section(m.get("run")).unwrap();
+        assert_eq!(spec.spill_dir.as_deref(), Some("/tmp/spill"));
+        assert_eq!(spec.spill_budget, Some(0));
+        // Defaults: sink decides (dir next to the output, 256 MiB budget).
+        assert_eq!(RunSpec::default_spec().spill_dir, None);
+        assert_eq!(RunSpec::default_spec().spill_budget, None);
+        let bad = parse_toml("[run]\nspill_budget = -5\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
+        let bad = parse_toml("[run]\nspill_dir = 7\n").unwrap();
         assert!(RunSpec::from_section(bad.get("run")).is_err());
     }
 

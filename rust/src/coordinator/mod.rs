@@ -50,8 +50,16 @@
 //!   pre-dedup edge multiset is never materialized in a single buffer:
 //!   per-shard residency is bounded by the post-dedup shard size plus
 //!   batch-sized merge overhead (at most two batches),
-//! * finished shards are handed to the **sink** in ascending index order;
-//!   since shards partition the source range, their concatenation is the
+//! * each shard counts its **contributing jobs** (a job's sources are
+//!   confined to its `D_k` / block node list, a contiguous shard span),
+//!   and a merger is closed — delivering its finished run mid-run — the
+//!   moment its last contributing job completes,
+//! * finished shards are handed to the **sink** in **completion order**
+//!   through the shard-addressable protocol
+//!   (`begin_shard`/`accept_shard`/`finalize`): an early-finishing late
+//!   shard is consumed — and its merger's memory released — immediately,
+//!   never buffered waiting for its turn; since shards partition the
+//!   source range, stitching them at their index slots yields the
 //!   globally sorted, deduplicated edge list — there is no final sort.
 //!
 //! Sinks ([`crate::graph::EdgeSink`]) decouple merging from destination:
@@ -59,7 +67,10 @@
 //! [`Coordinator::run`]), accumulate degrees only
 //! ([`crate::graph::CountingSink`]), or stream straight to the binary
 //! edge-list format ([`crate::graph::BinaryFileSink`]) for samples larger
-//! than RAM.
+//! than RAM — the binary sink defers out-of-order shards within a memory
+//! budget and spills them to temp files (`--spill-dir`, `--spill-budget`)
+//! past it, keeping sink-side residency bounded under any completion
+//! skew.
 //!
 //! Determinism: every job carries a stable RNG fork id derived from the
 //! plan, so the *set* of sampled edges is independent of worker count,

@@ -2,11 +2,11 @@
 
 use std::io;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
-use crate::graph::{CollectSink, Edge, EdgeList, EdgeSink, NodeId, ShardMergeStats,
-                   ShardMerger, ShardSpec};
+use crate::graph::{summarize_spill, CollectSink, Edge, EdgeList, EdgeSink, NodeId,
+                   ShardMergeStats, ShardMerger, ShardSpec, SpillSummary};
 use crate::kpgm::{BallDropSampler, ConditionedBallDropSampler};
 use crate::magm::{AttrSampleMode, AttributeAssignment, MagmParams};
 use crate::quilt::{sample_er_block, HybridPlan, HybridSampler, Partition, PieceBackend,
@@ -29,6 +29,17 @@ enum Job {
     Piece(PieceJob),
     /// A uniform block `src × dst` with the configs' edge probability.
     ErBlock { src: BlockRef, dst: BlockRef, fork_id: u64 },
+}
+
+/// Message to a shard merger: an edge batch, or proof that no further
+/// batch can arrive because the shard's last contributing job finished —
+/// which lets the merger deliver its run mid-run instead of waiting for
+/// every worker to exit.
+enum ShardMsg {
+    /// One job's edges for this shard.
+    Batch(Vec<Edge>),
+    /// No job that can route to this shard remains; finish now.
+    Close,
 }
 
 /// Wall-clock timings and knobs of the leader's **setup pipeline** — the
@@ -161,7 +172,8 @@ pub struct RunStats {
     pub num_jobs: usize,
     /// Worker threads used.
     pub workers: usize,
-    /// Shard mergers used.
+    /// Shard mergers used — the *effective* count after clamping the
+    /// request to the merger cap and the node count.
     pub num_shards: usize,
     /// Post-dedup edge count delivered to the sink.
     pub num_edges: u64,
@@ -172,8 +184,11 @@ pub struct RunStats {
     /// Balls abandoned after exhausting duplicate resamples (previously
     /// lost silently; 0 in healthy runs, non-zero signals saturation).
     pub dropped_resamples: u64,
-    /// Per-shard merge statistics (one entry per shard, in index order).
+    /// Per-shard merge statistics (one entry per shard, in index order),
+    /// including the sink-side deferral/spill columns.
     pub shard_stats: Vec<ShardMergeStats>,
+    /// Aggregate out-of-order deferral/spill picture across shards.
+    pub spill: SpillSummary,
     /// Setup-pipeline phase timings (leader-side, before job dispatch).
     pub setup: SetupStats,
 }
@@ -189,7 +204,7 @@ pub struct SampleReport {
     pub num_jobs: usize,
     /// Worker threads used.
     pub workers: usize,
-    /// Shard mergers used.
+    /// Shard mergers used (effective count, see [`RunStats::num_shards`]).
     pub num_shards: usize,
     /// Wall-clock milliseconds.
     pub wall_ms: f64,
@@ -200,6 +215,8 @@ pub struct SampleReport {
     pub dropped_resamples: u64,
     /// Per-shard merge statistics (one entry per shard, in index order).
     pub shard_stats: Vec<ShardMergeStats>,
+    /// Aggregate out-of-order deferral/spill picture across shards.
+    pub spill: SpillSummary,
     /// Setup-pipeline phase timings (leader-side, before job dispatch).
     pub setup: SetupStats,
 }
@@ -252,7 +269,11 @@ impl Coordinator {
 
     /// Set the shard-merger count (0 = auto, matching the worker count).
     /// The sampled edge set is identical for every shard count; only the
-    /// merge parallelism and per-shard memory change.
+    /// merge parallelism and per-shard memory change. Values beyond the
+    /// merger cap (256) or the node count are clamped at run time — with
+    /// a warning, and the effective count reported in
+    /// [`RunStats::num_shards`] — since extra mergers would only be empty
+    /// threads.
     pub fn shards(mut self, shards: usize) -> Self {
         self.shards = shards;
         self
@@ -497,6 +518,7 @@ impl Coordinator {
             edges_per_sec: stats.edges_per_sec,
             dropped_resamples: stats.dropped_resamples,
             shard_stats: stats.shard_stats,
+            spill: stats.spill,
             setup: stats.setup,
         }
     }
@@ -513,15 +535,31 @@ impl Coordinator {
     /// size plus batch-sized merge overhead (at most two batches inside
     /// the merger, see [`crate::graph::ShardMergeStats::peak_resident`],
     /// plus up to `channel_capacity` batches queued in the shard's
-    /// bounded channel). Finished shards are handed to the
-    /// sink in ascending index order — their concatenation is the
-    /// globally sorted edge list, with no final sort or dedup pass.
+    /// bounded channel). Every job's *source span* — the contiguous
+    /// shard range its sources can route to (piece sources come from
+    /// `D_k`, ER-block sources from the block's node list) — is counted
+    /// per shard up front, and a shard's merger is **closed as soon as
+    /// its last contributing job completes**: it delivers its finished
+    /// run mid-run, while other workers are still sampling. Finished
+    /// shards are handed to the sink **in completion order** through the
+    /// shard-addressable protocol (`begin_shard`/`accept_shard`) — an
+    /// early-finishing shard is consumed (and its merger's memory
+    /// released) immediately instead of sitting buffered until every
+    /// earlier shard catches up; sinks that need index order
+    /// ([`crate::graph::BinaryFileSink`]) defer or spill per their
+    /// budget and stitch at the file frontier, so the output is still
+    /// the globally sorted edge list with no final sort or dedup pass.
     ///
     /// Determinism: jobs carry the same RNG fork ids as the sequential
     /// samplers, and routing/merging only rearranges edges, so the
     /// delivered edge list is bit-for-bit the sequential samplers'
     /// (sorted, deduplicated) output for the same seed — for every
-    /// shard count and worker count.
+    /// shard count, worker count, and completion order.
+    ///
+    /// A sampled edge whose source id falls outside the node range is an
+    /// upstream sampler bug; the routing path fails the run with
+    /// [`io::ErrorKind::InvalidData`] rather than absorbing the id into
+    /// the last shard.
     pub fn run_with_sink<K: EdgeSink>(
         &self,
         plan: JobPlan,
@@ -533,11 +571,70 @@ impl Coordinator {
         let num_jobs = plan.jobs.len();
         let workers = self.workers.max(1);
         // Each shard is a merger thread; cap so a pathological --shards
-        // cannot spawn unbounded threads.
+        // cannot spawn unbounded threads — and say so, instead of
+        // silently running with fewer mergers than asked for.
         let requested = if self.shards == 0 { workers } else { self.shards };
+        if requested > MAX_SHARDS {
+            eprintln!(
+                "warning: {requested} shards requested but the merger cap is {MAX_SHARDS}; \
+                 running with {MAX_SHARDS}"
+            );
+        }
         let spec = ShardSpec::new(n, requested.min(MAX_SHARDS));
         let num_shards = spec.num_shards();
+        if self.shards != 0 && num_shards < requested.min(MAX_SHARDS) {
+            eprintln!(
+                "warning: {requested} shards requested for {n} nodes; running with \
+                 {num_shards} (shards beyond the node count would stay empty)"
+            );
+        }
         sink.begin(n, num_shards)?;
+        let n64 = n as u64;
+
+        // Per-job *source span*: the contiguous shard range a job's edges
+        // can route to. Piece (k, l) sources come from D_k and ER-block
+        // sources from the block's node list, and shard_of is monotone in
+        // the node id, so [shard_of(min), shard_of(max)] over the source
+        // set covers every edge the job can emit. Shards count their
+        // contributing jobs; when a shard's count hits zero its merger is
+        // closed and delivers immediately — mid-run — instead of holding
+        // its finished run until the last worker exits.
+        let source_span = |nodes: &[NodeId]| -> Option<(usize, usize)> {
+            let lo = *nodes.iter().min()?;
+            let hi = *nodes.iter().max().expect("non-empty after min");
+            Some((spec.shard_of(lo), spec.shard_of(hi)))
+        };
+        let piece_spans: Vec<Option<(usize, usize)>> = (0..plan.partition.size())
+            .map(|k| source_span(plan.partition.set(k)))
+            .collect();
+        let (light_spans, heavy_spans): (Vec<_>, Vec<_>) = match plan.hybrid.as_ref() {
+            Some(h) => (
+                h.light.iter().map(|(_, nodes)| source_span(nodes)).collect(),
+                h.heavy.iter().map(|(_, nodes)| source_span(nodes)).collect(),
+            ),
+            None => (Vec::new(), Vec::new()),
+        };
+        let job_spans: Vec<Option<(usize, usize)>> = plan
+            .jobs
+            .iter()
+            .map(|job| match *job {
+                Job::Piece(p) => piece_spans[p.k],
+                Job::ErBlock { src, .. } => match src {
+                    BlockRef::Light(i) => light_spans[i],
+                    BlockRef::Heavy(i) => heavy_spans[i],
+                },
+            })
+            .collect();
+        let mut span_counts = vec![0usize; num_shards];
+        for span in &job_spans {
+            if let Some((lo, hi)) = *span {
+                for s in lo..=hi {
+                    span_counts[s] += 1;
+                }
+            }
+        }
+        let remaining: Vec<AtomicUsize> =
+            span_counts.iter().map(|&c| AtomicUsize::new(c)).collect();
 
         let kpgm = BallDropSampler::new(plan.params.thetas().clone());
         // Matches the single-threaded samplers' fork tags so coordinated
@@ -554,13 +651,29 @@ impl Coordinator {
         let mut txs = Vec::with_capacity(num_shards);
         let mut rxs = Vec::with_capacity(num_shards);
         for _ in 0..num_shards {
-            let (tx, rx) = mpsc::sync_channel::<Vec<Edge>>(self.channel_capacity);
+            let (tx, rx) = mpsc::sync_channel::<ShardMsg>(self.channel_capacity);
             txs.push(tx);
             rxs.push(rx);
+        }
+        // A shard no planned job can reach delivers (empty) right away.
+        for (s, count) in span_counts.iter().enumerate() {
+            if *count == 0 {
+                let _ = txs[s].send(ShardMsg::Close);
+            }
         }
 
         let mut shard_stats: Vec<ShardMergeStats> = Vec::with_capacity(num_shards);
         let mut sink_result: io::Result<()> = Ok(());
+        // First out-of-range source id a worker caught while routing
+        // (an upstream sampler bug — fails the run instead of being
+        // absorbed into the last shard). `aborted` is the cancellation
+        // signal the other workers poll between jobs, so a
+        // guaranteed-to-fail run stops sampling instead of burning the
+        // rest of the job queue before reporting.
+        let route_error: Mutex<Option<String>> = Mutex::new(None);
+        let aborted = std::sync::atomic::AtomicBool::new(false);
+        // Finished shards arrive here in completion order.
+        let (done_tx, done_rx) = mpsc::channel::<(Vec<Edge>, ShardMergeStats)>();
         std::thread::scope(|scope| {
             let plan_ref = &plan;
             let kpgm_ref = &kpgm;
@@ -568,27 +681,41 @@ impl Coordinator {
             let dropped_ref = &dropped_total;
             let piece_base_ref = &piece_base;
             let er_base_ref = &er_base;
+            let route_error_ref = &route_error;
+            let aborted_ref = &aborted;
+            let spans_ref = &job_spans;
+            let remaining_ref = &remaining;
 
             // Shard mergers: each drains its own channel, folding batches
-            // into a sorted, deduplicated run as they arrive.
+            // into a sorted, deduplicated run as they arrive, and reports
+            // its finished run the moment it is closed (its last
+            // contributing job completed) or its channel hangs up.
             let merger_handles: Vec<_> = rxs
                 .into_iter()
                 .enumerate()
                 .map(|(si, rx)| {
+                    let done_tx = done_tx.clone();
                     scope.spawn(move || {
                         let mut merger = ShardMerger::new(si);
-                        while let Ok(batch) = rx.recv() {
-                            merger.absorb(batch);
+                        loop {
+                            match rx.recv() {
+                                Ok(ShardMsg::Batch(batch)) => merger.absorb(batch),
+                                Ok(ShardMsg::Close) | Err(_) => break,
+                            }
                         }
-                        merger.finish()
+                        let _ = done_tx.send(merger.finish());
                     })
                 })
                 .collect();
+            drop(done_tx);
 
             for _ in 0..workers {
                 let txs = txs.clone();
                 scope.spawn(move || {
                     loop {
+                        if aborted_ref.load(Ordering::Relaxed) {
+                            break;
+                        }
                         let idx = next.fetch_add(1, Ordering::Relaxed);
                         let Some(job) = plan_ref.jobs.get(idx) else { break };
                         let mut local = EdgeList::new(n);
@@ -626,46 +753,124 @@ impl Coordinator {
                                 sample_er_block(nodes_i, nodes_j, p, &mut rng, &mut local);
                             }
                         }
-                        // Route the job's edges to their shards (bounded
-                        // channels give backpressure against slow merging).
+                        // Route the job's edges to their shards in one
+                        // pass (bounded channels give backpressure
+                        // against slow merging), validating both ids as
+                        // they are routed: a sampler emitting an
+                        // out-of-range id must fail the run, not have
+                        // the source clamped into the last shard.
+                        let run = local.into_edges();
+                        let mut bad: Option<Edge> = None;
+                        let mut closed_shard: Option<usize> = None;
                         if num_shards == 1 {
-                            if txs[0].send(local.into_edges()).is_err() {
-                                break; // merger gone
+                            bad = run
+                                .iter()
+                                .find(|&&(s, t)| s as u64 >= n64 || t as u64 >= n64)
+                                .copied();
+                            if bad.is_none() && txs[0].send(ShardMsg::Batch(run)).is_err() {
+                                closed_shard = Some(0);
                             }
-                            continue;
-                        }
-                        let mut parts: Vec<Vec<Edge>> = vec![Vec::new(); num_shards];
-                        for e in local.into_edges() {
-                            parts[spec.shard_of(e.0)].push(e);
-                        }
-                        let mut disconnected = false;
-                        for (si, part) in parts.into_iter().enumerate() {
-                            if !part.is_empty() && txs[si].send(part).is_err() {
-                                disconnected = true;
-                                break;
+                        } else {
+                            let mut parts: Vec<Vec<Edge>> = vec![Vec::new(); num_shards];
+                            for e in run {
+                                match spec.checked_shard_of(e.0) {
+                                    Some(si) if (e.1 as u64) < n64 => {
+                                        debug_assert!(
+                                            spans_ref[idx]
+                                                .is_some_and(|(lo, hi)| (lo..=hi)
+                                                    .contains(&si)),
+                                            "edge {e:?} routed outside job {idx}'s span"
+                                        );
+                                        parts[si].push(e);
+                                    }
+                                    _ => {
+                                        bad = Some(e);
+                                        break;
+                                    }
+                                }
+                            }
+                            if bad.is_none() {
+                                for (si, part) in parts.into_iter().enumerate() {
+                                    if !part.is_empty()
+                                        && txs[si].send(ShardMsg::Batch(part)).is_err()
+                                    {
+                                        closed_shard = Some(si);
+                                        break;
+                                    }
+                                }
                             }
                         }
-                        if disconnected {
+                        // A send can only fail if that merger already got
+                        // its Close — i.e. the span accounting thought no
+                        // contributing job remained. Silently dropping
+                        // the batch would truncate the output; fail loud.
+                        let error = match (bad, closed_shard) {
+                            (Some((s, t)), _) => Some(format!(
+                                "sampler emitted edge ({s}, {t}) with an id out of \
+                                 range for {n} nodes"
+                            )),
+                            (None, Some(si)) => Some(format!(
+                                "edge batch for shard {si} arrived after its merger \
+                                 closed (job span accounting violated)"
+                            )),
+                            (None, None) => None,
+                        };
+                        if let Some(error) = error {
+                            route_error_ref
+                                .lock()
+                                .expect("route-error mutex poisoned")
+                                .get_or_insert(error);
+                            aborted_ref.store(true, Ordering::Relaxed);
                             break;
+                        }
+                        // Every edge of this job is delivered: release
+                        // its claim on the shards its sources can touch.
+                        // The thread whose decrement empties a shard's
+                        // count closes that merger — all contributing
+                        // sends happened-before the close.
+                        if let Some((lo, hi)) = spans_ref[idx] {
+                            for s in lo..=hi {
+                                if remaining_ref[s].fetch_sub(1, Ordering::AcqRel) == 1 {
+                                    let _ = txs[s].send(ShardMsg::Close);
+                                }
+                            }
                         }
                     }
                 });
             }
             drop(txs);
 
-            // Consume finished shards in index order; a later shard that
-            // finishes early stays buffered in its merger thread until its
-            // turn, and its memory is released as soon as the sink takes it.
-            for handle in merger_handles {
-                let (run, stats) = handle.join().expect("shard merger panicked");
+            // Consume finished shards the moment they finish — completion
+            // order, not index order. The sink places each run at its
+            // slot (or defers/spills it per its budget), so an
+            // early-finishing late shard releases its memory immediately
+            // instead of sitting in its merger until its turn.
+            while let Ok((run, mut stats)) = done_rx.recv() {
                 let index = stats.shard;
-                shard_stats.push(stats);
                 if sink_result.is_ok() {
-                    sink_result = sink.consume_shard(index, run);
+                    sink_result = sink
+                        .begin_shard(index, run.len())
+                        .and_then(|()| sink.accept_shard(index, run))
+                        .map(|disposition| stats.record_disposition(disposition));
+                    if sink_result.is_err() {
+                        // The run is doomed (e.g. the output disk filled):
+                        // stop the workers instead of sampling the rest of
+                        // the job queue before reporting.
+                        aborted.store(true, Ordering::Relaxed);
+                    }
                 }
+                shard_stats.push(stats);
+            }
+            for handle in merger_handles {
+                handle.join().expect("shard merger panicked");
             }
         });
+        if let Some(msg) = route_error.into_inner().expect("route-error mutex poisoned") {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, msg));
+        }
         sink_result?;
+        // Stats were pushed in completion order; report them per shard.
+        shard_stats.sort_by_key(|s| s.shard);
 
         let num_edges: u64 = shard_stats.iter().map(|s| s.edges as u64).sum();
         let wall_ms = start.elapsed().as_secs_f64() * 1e3;
@@ -678,10 +883,11 @@ impl Coordinator {
             wall_ms,
             edges_per_sec: num_edges as f64 / (wall_ms / 1e3).max(1e-9),
             dropped_resamples: dropped_total.into_inner(),
+            spill: summarize_spill(&shard_stats),
             shard_stats,
             setup: plan.setup,
         };
-        Ok((sink.finish()?, stats))
+        Ok((sink.finalize()?, stats))
     }
 }
 
@@ -962,5 +1168,85 @@ mod tests {
         assert_eq!(rep.num_shards, 3);
         let rep = Coordinator::new().workers(3).shards(2).sample_quilt(&p, 1);
         assert_eq!(rep.num_shards, 2);
+    }
+
+    #[test]
+    fn tiny_graph_clamps_effective_shards() {
+        // More shards than nodes used to run (and report stats for)
+        // empty trailing mergers; the effective count is min(S, n) and
+        // the sampled graph is unchanged.
+        let p = params(4, 3, 0.5);
+        let rep = Coordinator::new().workers(2).shards(8).sample_quilt(&p, 3);
+        assert_eq!(rep.num_shards, 4);
+        assert_eq!(rep.shard_stats.len(), 4);
+        let seq = QuiltSampler::new(p).seed(3).sample();
+        assert_eq!(rep.graph, seq);
+    }
+
+    #[test]
+    fn collect_runs_report_zero_spill() {
+        // The in-memory sink may defer out-of-order shards (held in
+        // `pending` until the frontier reaches them) but never touches
+        // disk: the spill columns must stay zero.
+        let p = params(256, 8, 0.5);
+        let rep = Coordinator::new().workers(4).shards(4).sample_quilt(&p, 9);
+        assert_eq!(rep.spill.spilled_shards, 0);
+        assert_eq!(rep.spill.spill_runs, 0);
+        assert_eq!(rep.spill.spill_bytes, 0);
+        assert!(rep.shard_stats.iter().all(|s| s.spill_runs == 0 && s.spill_bytes == 0));
+    }
+
+    #[test]
+    fn forced_spill_out_of_order_equivalence_sweep() {
+        // The acceptance matrix for the out-of-order/spill path: with a
+        // zero in-memory budget every shard that finishes ahead of the
+        // file frontier goes through a spill file, and the binary,
+        // collect, and counting outputs must still be bit-for-bit the
+        // sequential sampler's — for S × workers × both piece modes.
+        let dir = std::env::temp_dir().join("magquilt_pool_spill_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = params(256, 8, 0.5);
+        for mode in [PieceMode::Conditioned, PieceMode::Rejection] {
+            let seq = QuiltSampler::new(p.clone()).piece_mode(mode).seed(61).sample();
+            for shards in [1usize, 3, 8] {
+                for workers in [1usize, 4] {
+                    let tag = format!("{mode:?} S={shards} workers={workers}");
+                    let coord =
+                        Coordinator::new().workers(workers).shards(shards).piece_mode(mode);
+                    let rep = coord.sample_quilt(&p, 61);
+                    assert_eq!(rep.graph, seq, "collect {tag}");
+                    // Merger residency bound is unchanged by delivery order.
+                    for s in &rep.shard_stats {
+                        assert!(
+                            s.peak_resident <= s.edges + 2 * s.max_batch,
+                            "residency {tag} shard {}",
+                            s.shard
+                        );
+                    }
+                    let path = dir.join(format!(
+                        "sweep_{}_{shards}_{workers}.bin",
+                        if mode == PieceMode::Conditioned { "cond" } else { "rej" }
+                    ));
+                    let sink =
+                        BinaryFileSink::create(&path).spill_dir(&dir).spill_budget(0);
+                    let (written, stats) = coord.sample_quilt_with_sink(&p, 61, sink).unwrap();
+                    assert_eq!(written, seq.num_edges() as u64, "binary count {tag}");
+                    let back = crate::graph::read_edge_list_binary(&path).unwrap();
+                    assert_eq!(back, seq, "binary re-read {tag}");
+                    // Spill accounting is consistent between the summary
+                    // and the per-shard columns.
+                    assert_eq!(
+                        stats.spill.spilled_shards,
+                        stats.shard_stats.iter().filter(|s| s.spill_runs > 0).count(),
+                        "spill summary {tag}"
+                    );
+                    let (counts, _) =
+                        coord.sample_quilt_with_sink(&p, 61, CountingSink::new()).unwrap();
+                    assert_eq!(counts.num_edges, seq.num_edges() as u64, "counting {tag}");
+                    assert_eq!(counts.out_degrees, seq.out_degrees(), "out-degrees {tag}");
+                    assert_eq!(counts.in_degrees, seq.in_degrees(), "in-degrees {tag}");
+                }
+            }
+        }
     }
 }

@@ -13,7 +13,19 @@ const BINARY_HEADER_LEN: u64 = 24;
 /// Byte offset of the edge count in the header (for back-patching).
 const BINARY_EDGE_COUNT_OFFSET: u64 = 16;
 /// Bytes per stored edge: two little-endian u32s.
-const BINARY_EDGE_LEN: u64 = 8;
+pub(super) const BINARY_EDGE_LEN: u64 = 8;
+
+/// Write edges in the `MAGQEDG1` record layout (consecutive `(src, dst)`
+/// pairs of little-endian u32s). The single encoder for the format:
+/// both the binary file body and spill runs go through here, so the
+/// layout cannot drift between them.
+pub(super) fn write_edge_records(w: &mut impl Write, edges: &[Edge]) -> io::Result<()> {
+    for &(s, t) in edges {
+        w.write_all(&s.to_le_bytes())?;
+        w.write_all(&t.to_le_bytes())?;
+    }
+    Ok(())
+}
 /// Largest node count accepted from an (untrusted) binary header:
 /// `ModelSpec` caps models at 2^31 nodes, so anything larger is corrupt.
 const MAX_BINARY_NODES: u64 = 1 << 31;
@@ -44,16 +56,24 @@ impl BinaryEdgeWriter {
 
     /// Append a run of edges.
     pub fn write_edges(&mut self, edges: &[Edge]) -> io::Result<()> {
-        for &(s, t) in edges {
-            self.writer.write_all(&s.to_le_bytes())?;
-            self.writer.write_all(&t.to_le_bytes())?;
-        }
-        Ok(())
+        write_edge_records(&mut self.writer, edges)
     }
 
     /// Flush and back-patch the header with the true edge count.
+    ///
+    /// Ordering matters: the edge records are flushed **and synced**
+    /// before the placeholder count is overwritten, and the patch is
+    /// synced again. The patched count is what makes the file pass
+    /// [`read_edge_list_binary`] validation, so it must never become
+    /// durable ahead of the data it vouches for — a crash with the old
+    /// patch-then-sync order could persist the count while trailing
+    /// records were still in the page cache, leaving a short-but-valid
+    /// file. With this order a crash at any point leaves either the
+    /// `u64::MAX` placeholder (rejected by the size check) or a fully
+    /// synced file.
     pub fn finalize(self, num_edges: u64) -> io::Result<()> {
         let mut file = self.writer.into_inner().map_err(|e| e.into_error())?;
+        file.sync_all()?;
         file.seek(SeekFrom::Start(BINARY_EDGE_COUNT_OFFSET))?;
         file.write_all(&num_edges.to_le_bytes())?;
         file.sync_all()
@@ -300,6 +320,54 @@ mod tests {
         drop(w); // BufWriter flushes on drop; finalize never runs
         let err = read_edge_list_binary(&p).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn finalize_crash_points_never_yield_a_valid_partial_file() {
+        // Simulate the on-disk image at each crash point of the
+        // write-stream-finalize sequence and assert only the fully
+        // finalized image validates. The dangerous point is (c): with the
+        // count patched but records missing, the size check is the only
+        // defense — which is why finalize syncs data before patching.
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let edges: [Edge; 3] = [(0, 1), (1, 2), (2, 0)];
+        let mut full = Vec::new();
+        full.extend_from_slice(BINARY_MAGIC);
+        full.extend_from_slice(&3u64.to_le_bytes());
+        full.extend_from_slice(&u64::MAX.to_le_bytes());
+        for &(s, t) in &edges {
+            full.extend_from_slice(&s.to_le_bytes());
+            full.extend_from_slice(&t.to_le_bytes());
+        }
+
+        // (a) Crash after the header, before any record: placeholder
+        // count, no data.
+        let p = dir.join("crash_header_only.bin");
+        std::fs::write(&p, &full[..BINARY_HEADER_LEN as usize]).unwrap();
+        assert!(read_edge_list_binary(&p).is_err());
+
+        // (b) Crash after all records, before the back-patch: the
+        // placeholder still exceeds the file size.
+        let p = dir.join("crash_before_patch.bin");
+        std::fs::write(&p, &full).unwrap();
+        assert!(read_edge_list_binary(&p).is_err());
+
+        // (c) Count patched but the tail record lost (the partial-write
+        // scenario the sync-before-patch order prevents): claimed count
+        // exceeds what the file holds, so validation rejects it.
+        let mut patched = full.clone();
+        patched[BINARY_EDGE_COUNT_OFFSET as usize..BINARY_HEADER_LEN as usize]
+            .copy_from_slice(&(edges.len() as u64).to_le_bytes());
+        let p = dir.join("crash_truncated_records.bin");
+        std::fs::write(&p, &patched[..patched.len() - BINARY_EDGE_LEN as usize]).unwrap();
+        assert!(read_edge_list_binary(&p).is_err());
+
+        // (d) The fully finalized image reads back exactly.
+        let p = dir.join("finalized_ok.bin");
+        std::fs::write(&p, &patched).unwrap();
+        let g = read_edge_list_binary(&p).unwrap();
+        assert_eq!(g.edges(), &edges);
     }
 
     #[test]

@@ -15,26 +15,54 @@
 //!   in-flight batch and the merge's resize-by-batch scratch, ≤ two
 //!   batches) — the pre-dedup multiset is never materialized anywhere,
 //! * because shards partition the source range and each run is sorted by
-//!   `(src, dst)`, concatenating the finished shards in index order *is*
-//!   the globally sorted, deduplicated edge list — no final sort.
+//!   `(src, dst)`, stitching the finished shards together in index order
+//!   *is* the globally sorted, deduplicated edge list — no final sort.
 //!
-//! Where the concatenation goes is abstracted by the [`EdgeSink`] trait:
+//! # The shard-addressable sink protocol
 //!
-//! * [`CollectSink`] — in-memory [`EdgeList`] (the default, what
-//!   `Coordinator::run` uses),
-//! * [`CountingSink`] — degree vectors and an edge count only, for stats
-//!   runs that never need to hold the graph,
-//! * [`BinaryFileSink`] — streams the shards straight into the
-//!   `MAGQEDG1` binary format, writing each shard as it finishes and
-//!   back-patching the header edge count at the end, so samples larger
-//!   than RAM can go directly to disk.
+//! Where the stitched edges go is abstracted by the [`EdgeSink`] trait.
+//! Shards are delivered **in completion order, not index order**: under
+//! source-range skew a late-indexed shard routinely finishes first, and
+//! forcing index order would leave its entire run buffered in its merger
+//! until every earlier shard caught up — reintroducing the residency
+//! spike the streaming merge exists to avoid. The protocol is:
 //!
-//! Sinks consume shards strictly in ascending index order; a shard's
-//! memory is released as soon as it is consumed.
+//! 1. [`begin(num_nodes, num_shards)`](EdgeSink::begin) — once, before
+//!    any shard.
+//! 2. Per finished shard, in *any* order:
+//!    [`begin_shard(index, edge_count_hint)`](EdgeSink::begin_shard)
+//!    announcing the shard's exact final edge count, then
+//!    [`accept_shard(index, run)`](EdgeSink::accept_shard) handing over
+//!    the sorted, deduplicated run. Each index is delivered exactly once.
+//!    The sink reports how it handled the shard via
+//!    [`ShardDisposition`]: written through, held in memory, or spilled
+//!    to a temp file.
+//! 3. [`finalize()`](EdgeSink::finalize) — every shard delivered;
+//!    produce the output.
+//!
+//! The three sinks handle out-of-order delivery with different budgets:
+//!
+//! * [`CollectSink`] — appends each frontier arrival at its offset in
+//!   the one output vector (freeing the run's buffer) and holds only the
+//!   runs that genuinely arrived early, yielding the [`EdgeList`]
+//!   (already globally sorted) with no second full-size copy.
+//! * [`CountingSink`] — order-indifferent for free: degrees and counts
+//!   commute, every run is folded and dropped on arrival; the graph is
+//!   never held.
+//! * [`BinaryFileSink`] — the file is inherently sequential, so an
+//!   out-of-order shard is *deferred*: held in memory while the deferred
+//!   total fits the [spill budget](BinaryFileSink::spill_budget), spilled
+//!   to a temp [`SpillRun`] file otherwise. When
+//!   the file frontier reaches a deferred shard it is concatenated into
+//!   its slot (spill files stream back in bounded chunks and are deleted)
+//!   — so sink-side memory never exceeds the budget plus one in-flight
+//!   run, no matter how extreme the completion skew.
 
+use std::collections::BTreeMap;
 use std::io;
 use std::path::{Path, PathBuf};
 
+use super::spill::{unique_spill_path, SpillRun, SpillWriter, SPILL_EDGE_LEN, SPILL_READ_CHUNK};
 use super::{Edge, EdgeList, NodeId};
 
 /// Disjoint source-node ranges used to route edges to shard mergers.
@@ -43,32 +71,89 @@ use super::{Edge, EdgeList, NodeId};
 /// last shard absorbs any remainder. Routing by *source* keeps duplicate
 /// edges (same `(src, dst)` sampled by different pieces) on the same
 /// shard, so per-shard dedup is global dedup.
+///
+/// `S` is clamped to `min(S, n)`: a shard count beyond the node count
+/// would only manufacture empty trailing shards (and misleading
+/// `shard_stats` rows) since width is already 1. [`Self::num_shards`]
+/// always reports the *effective* count.
 #[derive(Debug, Clone, Copy)]
 pub struct ShardSpec {
     num_shards: usize,
     shard_width: u64,
+    num_nodes: u64,
 }
 
 impl ShardSpec {
-    /// Split `num_nodes` sources into `num_shards` ranges (both clamped
-    /// to at least 1).
+    /// Split `num_nodes` sources into `num_shards` ranges (shard count
+    /// clamped to `[1, max(num_nodes, 1)]`).
     pub fn new(num_nodes: usize, num_shards: usize) -> Self {
-        let s = num_shards.max(1);
-        let width = (num_nodes as u64).max(1).div_ceil(s as u64).max(1);
-        ShardSpec { num_shards: s, shard_width: width }
+        let n = (num_nodes as u64).max(1);
+        let s = (num_shards.max(1) as u64).min(n);
+        let width = n.div_ceil(s).max(1);
+        ShardSpec { num_shards: s as usize, shard_width: width, num_nodes: n }
     }
 
-    /// Number of shards S.
+    /// Effective number of shards S (after clamping).
     #[inline]
     pub fn num_shards(&self) -> usize {
         self.num_shards
     }
 
+    /// The source-node count the spec routes over.
+    #[inline]
+    pub fn num_nodes(&self) -> u64 {
+        self.num_nodes
+    }
+
     /// The shard owning source node `src`.
+    ///
+    /// `src` must be a valid node id: an id at or beyond `num_nodes` is
+    /// an upstream sampler bug, and silently clamping it into the last
+    /// shard (as this method once did) masks it. Debug builds panic;
+    /// release callers that handle untrusted ids use
+    /// [`Self::checked_shard_of`].
     #[inline]
     pub fn shard_of(&self, src: NodeId) -> usize {
+        debug_assert!(
+            (src as u64) < self.num_nodes,
+            "source id {src} out of range for {} nodes",
+            self.num_nodes
+        );
         ((src as u64 / self.shard_width) as usize).min(self.num_shards - 1)
     }
+
+    /// The shard owning `src`, or `None` when `src` is not a valid node
+    /// id — the error-propagating form the worker routing path uses.
+    #[inline]
+    pub fn checked_shard_of(&self, src: NodeId) -> Option<usize> {
+        if (src as u64) < self.num_nodes {
+            Some(((src as u64 / self.shard_width) as usize).min(self.num_shards - 1))
+        } else {
+            None
+        }
+    }
+}
+
+/// How a sink handled one delivered shard — fed back into that shard's
+/// [`ShardMergeStats`] so tests, benches, and the CLI can see whether the
+/// out-of-order machinery engaged and what it cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardDisposition {
+    /// Consumed immediately (written through, counted, or slotted);
+    /// no deferred copy exists anywhere.
+    Streamed,
+    /// Arrived ahead of the file frontier and is held in memory within
+    /// the spill budget.
+    Deferred {
+        /// Bytes held.
+        bytes: u64,
+    },
+    /// Arrived ahead of the file frontier over budget and was streamed
+    /// to a temp spill file.
+    Spilled {
+        /// Bytes written to the spill file.
+        bytes: u64,
+    },
 }
 
 /// Per-shard merge statistics, reported by the coordinator so benches and
@@ -98,6 +183,54 @@ pub struct ShardMergeStats {
     /// `channel_capacity` (default 64 batches per shard) bounds that
     /// separately via backpressure.
     pub peak_resident: usize,
+    /// Whether the sink deferred this shard (it finished ahead of the
+    /// output frontier) — in memory or on disk.
+    pub deferred: bool,
+    /// Spill runs the sink wrote for this shard (0 or 1).
+    pub spill_runs: u64,
+    /// Bytes the sink spilled to disk for this shard.
+    pub spill_bytes: u64,
+}
+
+impl ShardMergeStats {
+    /// Record how the sink disposed of this shard's run.
+    pub fn record_disposition(&mut self, disposition: ShardDisposition) {
+        match disposition {
+            ShardDisposition::Streamed => {}
+            ShardDisposition::Deferred { .. } => self.deferred = true,
+            ShardDisposition::Spilled { bytes } => {
+                self.deferred = true;
+                self.spill_runs += 1;
+                self.spill_bytes += bytes;
+            }
+        }
+    }
+}
+
+/// Aggregate spill/deferral picture of one run, summed over
+/// [`ShardMergeStats`] — what the CLI prints as the `spill:` line.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpillSummary {
+    /// Shards the sink deferred (finished ahead of the output frontier).
+    pub deferred_shards: usize,
+    /// Shards that went to a temp spill file.
+    pub spilled_shards: usize,
+    /// Spill runs written.
+    pub spill_runs: u64,
+    /// Bytes written to spill files.
+    pub spill_bytes: u64,
+}
+
+/// Sum the spill/deferral columns of a run's shard stats.
+pub fn summarize_spill(stats: &[ShardMergeStats]) -> SpillSummary {
+    let mut sum = SpillSummary::default();
+    for s in stats {
+        sum.deferred_shards += s.deferred as usize;
+        sum.spilled_shards += (s.spill_runs > 0) as usize;
+        sum.spill_runs += s.spill_runs;
+        sum.spill_bytes += s.spill_bytes;
+    }
+    sum
 }
 
 /// Incremental sorted-run merger for one shard.
@@ -228,33 +361,56 @@ fn merge_sorted_into(run: &mut Vec<Edge>, batch: &[Edge]) -> usize {
 
 /// Where the coordinator's sharded merge delivers the finished graph.
 ///
-/// The coordinator calls [`begin`](EdgeSink::begin) once, then
-/// [`consume_shard`](EdgeSink::consume_shard) for every shard **in
-/// ascending index order** — each shard is sorted, deduplicated, and
-/// strictly after every previously consumed shard in `(src, dst)` order —
-/// and finally [`finish`](EdgeSink::finish).
+/// See the [module docs](self) for the full protocol. In short: one
+/// [`begin`](EdgeSink::begin), then per finished shard — **in completion
+/// order, which under skew is not index order** —
+/// [`begin_shard`](EdgeSink::begin_shard) followed by
+/// [`accept_shard`](EdgeSink::accept_shard), and one
+/// [`finalize`](EdgeSink::finalize) once every shard index in
+/// `0..num_shards` has been delivered exactly once. Each delivered run is
+/// sorted, deduplicated, and disjoint from (strictly ordered against)
+/// every other shard's run in `(src, dst)` order.
 pub trait EdgeSink {
-    /// What the sink yields once every shard has been consumed.
+    /// What the sink yields once every shard has been delivered.
     type Output;
 
     /// Called once before any shard is delivered.
     fn begin(&mut self, num_nodes: usize, num_shards: usize) -> io::Result<()>;
 
-    /// Consume finished shard `index`. The sink owns `edges` and should
-    /// drop (or stream out) the buffer promptly — this is where the
-    /// memory of a finished shard is released.
-    fn consume_shard(&mut self, index: usize, edges: Vec<Edge>) -> io::Result<()>;
+    /// Announce that shard `index` is about to be delivered with exactly
+    /// `edge_count_hint` edges — sizing information for placement or
+    /// spill decisions. Always immediately followed by
+    /// [`accept_shard`](EdgeSink::accept_shard) with the same index.
+    fn begin_shard(&mut self, index: usize, edge_count_hint: usize) -> io::Result<()> {
+        let _ = (index, edge_count_hint);
+        Ok(())
+    }
+
+    /// Deliver finished shard `index`. The sink owns `run` and should
+    /// consume, place, or spill it promptly — this is where a finished
+    /// shard's memory is released. Returns how the run was disposed of.
+    fn accept_shard(&mut self, index: usize, run: Vec<Edge>) -> io::Result<ShardDisposition>;
 
     /// All shards delivered; produce the output.
-    fn finish(self) -> io::Result<Self::Output>;
+    fn finalize(self) -> io::Result<Self::Output>;
 }
 
-/// In-memory sink: concatenates the shards into one [`EdgeList`] (already
-/// globally sorted and deduplicated — no post-processing).
+/// In-memory sink: appends each shard at its offset in one growing edge
+/// vector (already globally sorted and deduplicated — no
+/// post-processing). A shard arriving at the frontier — every
+/// lower-indexed shard already placed — is appended immediately and its
+/// buffer freed; an out-of-order shard waits in `pending` until the
+/// frontier reaches it, so peak memory is the edge list plus only the
+/// runs that genuinely arrived early, never a second full-size copy.
 #[derive(Debug, Default)]
 pub struct CollectSink {
     num_nodes: usize,
+    num_shards: usize,
+    /// Every shard below this index is already appended to `edges`.
+    next_shard: usize,
     edges: Vec<Edge>,
+    /// Out-of-order runs waiting for the frontier, keyed by index.
+    pending: BTreeMap<usize, Vec<Edge>>,
 }
 
 impl CollectSink {
@@ -267,21 +423,52 @@ impl CollectSink {
 impl EdgeSink for CollectSink {
     type Output = EdgeList;
 
-    fn begin(&mut self, num_nodes: usize, _num_shards: usize) -> io::Result<()> {
+    fn begin(&mut self, num_nodes: usize, num_shards: usize) -> io::Result<()> {
         self.num_nodes = num_nodes;
+        self.num_shards = num_shards.max(1);
         Ok(())
     }
 
-    fn consume_shard(&mut self, _index: usize, mut edges: Vec<Edge>) -> io::Result<()> {
-        if self.edges.is_empty() {
-            self.edges = edges;
-        } else {
-            self.edges.append(&mut edges);
+    fn begin_shard(&mut self, index: usize, edge_count_hint: usize) -> io::Result<()> {
+        // A frontier arrival is appended in place: grow the buffer once,
+        // up front, instead of mid-append.
+        if index == self.next_shard {
+            self.edges.reserve(edge_count_hint);
         }
         Ok(())
     }
 
-    fn finish(self) -> io::Result<EdgeList> {
+    fn accept_shard(&mut self, index: usize, run: Vec<Edge>) -> io::Result<ShardDisposition> {
+        if index >= self.num_shards {
+            return Err(io::Error::other(format!("shard index {index} out of range")));
+        }
+        if index < self.next_shard || self.pending.contains_key(&index) {
+            return Err(io::Error::other(format!("shard {index} delivered twice")));
+        }
+        if index > self.next_shard {
+            let bytes = run.len() as u64 * SPILL_EDGE_LEN;
+            self.pending.insert(index, run);
+            return Ok(ShardDisposition::Deferred { bytes });
+        }
+        // At the frontier: the current length IS shard `index`'s offset
+        // (the sizes of every earlier shard, already appended).
+        self.edges.extend_from_slice(&run);
+        drop(run);
+        self.next_shard += 1;
+        while let Some(next) = self.pending.remove(&self.next_shard) {
+            self.edges.extend_from_slice(&next);
+            self.next_shard += 1;
+        }
+        Ok(ShardDisposition::Streamed)
+    }
+
+    fn finalize(self) -> io::Result<EdgeList> {
+        if self.next_shard < self.num_shards {
+            return Err(io::Error::other(format!(
+                "shard {} never delivered ({} of {} placed)",
+                self.next_shard, self.next_shard, self.num_shards
+            )));
+        }
         Ok(EdgeList::from_edges(self.num_nodes, self.edges))
     }
 }
@@ -314,10 +501,13 @@ impl DegreeCounts {
 }
 
 /// Statistics-only sink: accumulates degrees and counts, dropping each
-/// shard's edges immediately — the graph itself is never held.
+/// shard's edges immediately — the graph itself is never held. Degree
+/// sums commute, so shards are consumed in whatever order they finish at
+/// zero extra cost.
 #[derive(Debug, Default)]
 pub struct CountingSink {
     counts: Option<DegreeCounts>,
+    seen: Vec<bool>,
 }
 
 impl CountingSink {
@@ -330,7 +520,7 @@ impl CountingSink {
 impl EdgeSink for CountingSink {
     type Output = DegreeCounts;
 
-    fn begin(&mut self, num_nodes: usize, _num_shards: usize) -> io::Result<()> {
+    fn begin(&mut self, num_nodes: usize, num_shards: usize) -> io::Result<()> {
         self.counts = Some(DegreeCounts {
             num_nodes,
             num_edges: 0,
@@ -338,45 +528,156 @@ impl EdgeSink for CountingSink {
             out_degrees: vec![0u64; num_nodes],
             in_degrees: vec![0u64; num_nodes],
         });
+        self.seen = vec![false; num_shards.max(1)];
         Ok(())
     }
 
-    fn consume_shard(&mut self, _index: usize, edges: Vec<Edge>) -> io::Result<()> {
+    fn accept_shard(&mut self, index: usize, run: Vec<Edge>) -> io::Result<ShardDisposition> {
         let counts = self.counts.as_mut().expect("begin not called");
-        counts.num_edges += edges.len() as u64;
-        for (s, t) in edges {
+        let seen = self
+            .seen
+            .get_mut(index)
+            .ok_or_else(|| io::Error::other(format!("shard index {index} out of range")))?;
+        if std::mem::replace(seen, true) {
+            return Err(io::Error::other(format!("shard {index} delivered twice")));
+        }
+        counts.num_edges += run.len() as u64;
+        for (s, t) in run {
             counts.out_degrees[s as usize] += 1;
             counts.in_degrees[t as usize] += 1;
             if s == t {
                 counts.self_loops += 1;
             }
         }
-        Ok(())
+        Ok(ShardDisposition::Streamed)
     }
 
-    fn finish(self) -> io::Result<DegreeCounts> {
+    fn finalize(self) -> io::Result<DegreeCounts> {
         self.counts
-            .ok_or_else(|| io::Error::other("CountingSink finished before begin"))
+            .ok_or_else(|| io::Error::other("CountingSink finalized before begin"))
     }
+}
+
+/// Default in-memory budget for out-of-order shards in
+/// [`BinaryFileSink`]: 256 MiB of deferred edges before spilling.
+pub const DEFAULT_SPILL_BUDGET: u64 = 256 << 20;
+
+/// A shard held back because the file frontier has not reached it yet.
+#[derive(Debug)]
+enum PendingShard {
+    /// Held in memory (within the spill budget).
+    Memory(Vec<Edge>),
+    /// Streamed to a temp spill file.
+    Spilled(SpillRun),
 }
 
 /// Streams shards straight into the `MAGQEDG1` binary edge-list format.
 ///
-/// `begin` writes the header with a placeholder edge count; every shard is
-/// appended as it finishes (the shard order makes the file globally
-/// sorted); `finish` seeks back and patches the true count. Peak memory is
-/// one shard, not the graph.
+/// `begin` writes the header with a placeholder edge count; each shard
+/// that arrives at the file frontier (all lower-indexed shards already
+/// written) is appended directly, which keeps the file globally sorted.
+/// A shard that finishes *ahead* of the frontier is deferred: held in
+/// memory while the deferred total fits [`Self::spill_budget`], spilled
+/// to a temp file in [`Self::spill_dir`] otherwise, and concatenated into
+/// its slot (streamed back in bounded chunks, spill file deleted) once
+/// the frontier catches up. `finalize` back-patches the true edge count
+/// after the data is durable. Peak sink-side memory is the spill budget
+/// plus one in-flight shard — never the graph.
 #[derive(Debug)]
 pub struct BinaryFileSink {
     path: PathBuf,
+    spill_dir: Option<PathBuf>,
+    spill_budget: u64,
     writer: Option<super::io::BinaryEdgeWriter>,
+    num_shards: usize,
+    /// Every shard below this index has been written to the file.
+    next_shard: usize,
+    /// Finished shards waiting for the frontier, keyed by index.
+    pending: BTreeMap<usize, PendingShard>,
+    /// Bytes of `PendingShard::Memory` runs currently held.
+    deferred_bytes: u64,
     num_edges: u64,
 }
 
 impl BinaryFileSink {
-    /// Sink writing to `path` (created/truncated at `begin`).
+    /// Sink writing to `path` (created/truncated at `begin`), with the
+    /// default [spill budget](DEFAULT_SPILL_BUDGET) and spill files
+    /// placed next to the output.
     pub fn create(path: impl AsRef<Path>) -> Self {
-        BinaryFileSink { path: path.as_ref().to_path_buf(), writer: None, num_edges: 0 }
+        BinaryFileSink {
+            path: path.as_ref().to_path_buf(),
+            spill_dir: None,
+            spill_budget: DEFAULT_SPILL_BUDGET,
+            writer: None,
+            num_shards: 0,
+            next_shard: 0,
+            pending: BTreeMap::new(),
+            deferred_bytes: 0,
+            num_edges: 0,
+        }
+    }
+
+    /// Directory for temp spill files (created if missing). Defaults to
+    /// the output file's parent directory.
+    pub fn spill_dir(mut self, dir: impl AsRef<Path>) -> Self {
+        self.spill_dir = Some(dir.as_ref().to_path_buf());
+        self
+    }
+
+    /// In-memory budget (bytes) for shards that finish ahead of the file
+    /// frontier; beyond it they spill to disk. `0` forces every
+    /// out-of-order shard to spill — the knob the forced-spill tests and
+    /// the CI smoke leg use.
+    pub fn spill_budget(mut self, bytes: u64) -> Self {
+        self.spill_budget = bytes;
+        self
+    }
+
+    /// Resolve (and create) the directory spill files go to.
+    fn resolved_spill_dir(&self) -> io::Result<PathBuf> {
+        let dir = match &self.spill_dir {
+            Some(d) => d.clone(),
+            None => match self.path.parent() {
+                Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+                _ => PathBuf::from("."),
+            },
+        };
+        std::fs::create_dir_all(&dir)?;
+        Ok(dir)
+    }
+
+    /// Append one run to the file.
+    fn write_run(&mut self, run: &[Edge]) -> io::Result<()> {
+        let w = self.writer.as_mut().expect("begin not called");
+        w.write_edges(run)?;
+        self.num_edges += run.len() as u64;
+        Ok(())
+    }
+
+    /// Advance the frontier over every contiguous pending shard.
+    fn drain_pending(&mut self) -> io::Result<()> {
+        while let Some(shard) = self.pending.remove(&self.next_shard) {
+            match shard {
+                PendingShard::Memory(run) => {
+                    self.deferred_bytes =
+                        self.deferred_bytes.saturating_sub(run.len() as u64 * SPILL_EDGE_LEN);
+                    self.write_run(&run)?;
+                }
+                PendingShard::Spilled(spill) => {
+                    let writer = self.writer.as_mut().expect("begin not called");
+                    let mut written = 0u64;
+                    spill.for_each_chunk(SPILL_READ_CHUNK, |chunk| {
+                        writer.write_edges(chunk)?;
+                        written += chunk.len() as u64;
+                        Ok(())
+                    })?;
+                    self.num_edges += written;
+                    // Dropping the SpillRun removes the temp file.
+                }
+            }
+            self.next_shard += 1;
+        }
+        Ok(())
     }
 }
 
@@ -384,23 +685,54 @@ impl EdgeSink for BinaryFileSink {
     /// Number of edges written.
     type Output = u64;
 
-    fn begin(&mut self, num_nodes: usize, _num_shards: usize) -> io::Result<()> {
+    fn begin(&mut self, num_nodes: usize, num_shards: usize) -> io::Result<()> {
         self.writer = Some(super::io::BinaryEdgeWriter::create(&self.path, num_nodes)?);
+        self.num_shards = num_shards.max(1);
         Ok(())
     }
 
-    fn consume_shard(&mut self, _index: usize, edges: Vec<Edge>) -> io::Result<()> {
-        let w = self.writer.as_mut().expect("begin not called");
-        w.write_edges(&edges)?;
-        self.num_edges += edges.len() as u64;
-        Ok(())
+    fn accept_shard(&mut self, index: usize, run: Vec<Edge>) -> io::Result<ShardDisposition> {
+        if index >= self.num_shards {
+            return Err(io::Error::other(format!("shard index {index} out of range")));
+        }
+        if index < self.next_shard || self.pending.contains_key(&index) {
+            return Err(io::Error::other(format!("shard {index} delivered twice")));
+        }
+        if index == self.next_shard {
+            self.write_run(&run)?;
+            drop(run);
+            self.next_shard += 1;
+            self.drain_pending()?;
+            return Ok(ShardDisposition::Streamed);
+        }
+        // Ahead of the frontier: defer in memory while the budget lasts,
+        // spill to disk past it.
+        let bytes = run.len() as u64 * SPILL_EDGE_LEN;
+        if self.deferred_bytes + bytes <= self.spill_budget {
+            self.deferred_bytes += bytes;
+            self.pending.insert(index, PendingShard::Memory(run));
+            return Ok(ShardDisposition::Deferred { bytes });
+        }
+        let dir = self.resolved_spill_dir()?;
+        let mut writer = SpillWriter::create(unique_spill_path(&dir, &format!("shard{index}")))?;
+        writer.write_edges(&run)?;
+        drop(run);
+        self.pending.insert(index, PendingShard::Spilled(writer.finish()?));
+        Ok(ShardDisposition::Spilled { bytes })
     }
 
-    fn finish(mut self) -> io::Result<u64> {
+    fn finalize(mut self) -> io::Result<u64> {
+        self.drain_pending()?;
+        if self.next_shard < self.num_shards {
+            return Err(io::Error::other(format!(
+                "shard {} never delivered ({} of {} written)",
+                self.next_shard, self.next_shard, self.num_shards
+            )));
+        }
         let w = self
             .writer
             .take()
-            .ok_or_else(|| io::Error::other("BinaryFileSink finished before begin"))?;
+            .ok_or_else(|| io::Error::other("BinaryFileSink finalized before begin"))?;
         w.finalize(self.num_edges)?;
         Ok(self.num_edges)
     }
@@ -415,6 +747,12 @@ mod tests {
         pairs.to_vec()
     }
 
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("magquilt_sink_test").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn shard_spec_partitions_sources() {
         let spec = ShardSpec::new(10, 3);
@@ -427,8 +765,11 @@ mod tests {
     }
 
     #[test]
-    fn shard_spec_more_shards_than_nodes() {
+    fn shard_spec_clamps_to_node_count() {
+        // More shards than nodes would only add empty trailing shards;
+        // the effective count is min(S, n) and is what num_shards reports.
         let spec = ShardSpec::new(2, 8);
+        assert_eq!(spec.num_shards(), 2);
         assert_eq!(spec.shard_of(0), 0);
         assert_eq!(spec.shard_of(1), 1);
     }
@@ -439,6 +780,23 @@ mod tests {
         for s in [0u32, 17, 999] {
             assert_eq!(spec.shard_of(s), 0);
         }
+    }
+
+    #[test]
+    fn shard_spec_checked_rejects_out_of_range_src() {
+        let spec = ShardSpec::new(10, 3);
+        assert_eq!(spec.checked_shard_of(9), Some(2));
+        assert_eq!(spec.checked_shard_of(10), None);
+        assert_eq!(spec.checked_shard_of(u32::MAX), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    #[cfg(debug_assertions)]
+    fn shard_of_debug_asserts_bad_src() {
+        // The old behavior silently clamped src >= n into the last shard,
+        // masking upstream sampler bugs.
+        ShardSpec::new(10, 3).shard_of(10);
     }
 
     #[test]
@@ -518,35 +876,98 @@ mod tests {
         // The streaming-memory claim: never more resident than the final
         // run plus batch-sized merge overhead.
         assert!(stats.peak_resident <= stats.edges + 2 * stats.max_batch);
+        // Spill columns are sink-side; mergers never set them.
+        assert!(!stats.deferred);
+        assert_eq!(stats.spill_runs, 0);
+        assert_eq!(stats.spill_bytes, 0);
     }
 
     #[test]
-    fn collect_sink_concatenates_shards() {
+    fn record_disposition_tracks_spill_columns() {
+        let mut stats = ShardMergeStats::default();
+        stats.record_disposition(ShardDisposition::Streamed);
+        assert!(!stats.deferred);
+        stats.record_disposition(ShardDisposition::Deferred { bytes: 64 });
+        assert!(stats.deferred);
+        assert_eq!(stats.spill_runs, 0);
+        stats.record_disposition(ShardDisposition::Spilled { bytes: 128 });
+        assert_eq!(stats.spill_runs, 1);
+        assert_eq!(stats.spill_bytes, 128);
+        let sum = summarize_spill(&[stats.clone(), ShardMergeStats::default()]);
+        assert_eq!(sum.deferred_shards, 1);
+        assert_eq!(sum.spilled_shards, 1);
+        assert_eq!(sum.spill_runs, 1);
+        assert_eq!(sum.spill_bytes, 128);
+    }
+
+    #[test]
+    fn collect_sink_stitches_shards_in_index_order() {
         let mut sink = CollectSink::new();
         sink.begin(8, 2).unwrap();
-        sink.consume_shard(0, edges_of(&[(0, 3), (1, 1)])).unwrap();
-        sink.consume_shard(1, edges_of(&[(4, 0), (7, 7)])).unwrap();
-        let g = sink.finish().unwrap();
+        sink.accept_shard(0, edges_of(&[(0, 3), (1, 1)])).unwrap();
+        sink.accept_shard(1, edges_of(&[(4, 0), (7, 7)])).unwrap();
+        let g = sink.finalize().unwrap();
         assert_eq!(g.num_nodes(), 8);
         assert_eq!(g.edges(), &[(0, 3), (1, 1), (4, 0), (7, 7)]);
     }
 
     #[test]
-    fn counting_sink_matches_collected_degrees() {
+    fn collect_sink_out_of_order_placement() {
+        // Delivery order 2, 0, 1 must stitch identically to 0, 1, 2: a
+        // frontier arrival appends at its offset immediately, an early
+        // arrival waits in `pending` (deferred) until the frontier
+        // reaches it.
+        let shards =
+            [edges_of(&[(0, 1)]), edges_of(&[(3, 0), (4, 4)]), edges_of(&[(6, 2), (7, 0)])];
+        let mut sink = CollectSink::new();
+        sink.begin(8, 3).unwrap();
+        sink.begin_shard(2, shards[2].len()).unwrap();
+        assert_eq!(
+            sink.accept_shard(2, shards[2].clone()).unwrap(),
+            ShardDisposition::Deferred { bytes: 16 }
+        );
+        sink.begin_shard(0, shards[0].len()).unwrap();
+        assert_eq!(
+            sink.accept_shard(0, shards[0].clone()).unwrap(),
+            ShardDisposition::Streamed
+        );
+        sink.begin_shard(1, shards[1].len()).unwrap();
+        assert_eq!(
+            sink.accept_shard(1, shards[1].clone()).unwrap(),
+            ShardDisposition::Streamed
+        );
+        let g = sink.finalize().unwrap();
+        assert_eq!(g.edges(), &[(0, 1), (3, 0), (4, 4), (6, 2), (7, 0)]);
+    }
+
+    #[test]
+    fn collect_sink_rejects_duplicate_and_missing_shards() {
+        let mut sink = CollectSink::new();
+        sink.begin(4, 2).unwrap();
+        sink.accept_shard(0, edges_of(&[(0, 0)])).unwrap();
+        assert!(sink.accept_shard(0, edges_of(&[(1, 1)])).is_err());
+        assert!(sink.accept_shard(5, Vec::new()).is_err());
+        // Shard 1 never arrives: finalize must fail, not return half a graph.
+        assert!(sink.finalize().is_err());
+    }
+
+    #[test]
+    fn counting_sink_matches_collected_degrees_any_order() {
         let shard0 = edges_of(&[(0, 1), (0, 2), (1, 1)]);
         let shard1 = edges_of(&[(2, 0), (3, 1)]);
 
         let mut collect = CollectSink::new();
         collect.begin(4, 2).unwrap();
-        collect.consume_shard(0, shard0.clone()).unwrap();
-        collect.consume_shard(1, shard1.clone()).unwrap();
-        let g = collect.finish().unwrap();
+        collect.accept_shard(0, shard0.clone()).unwrap();
+        collect.accept_shard(1, shard1.clone()).unwrap();
+        let g = collect.finalize().unwrap();
 
+        // Counting consumes out of order for free — degree sums commute.
         let mut count = CountingSink::new();
         count.begin(4, 2).unwrap();
-        count.consume_shard(0, shard0).unwrap();
-        count.consume_shard(1, shard1).unwrap();
-        let c = count.finish().unwrap();
+        assert_eq!(count.accept_shard(1, shard1).unwrap(), ShardDisposition::Streamed);
+        assert_eq!(count.accept_shard(0, shard0).unwrap(), ShardDisposition::Streamed);
+        let c = count.finalize().unwrap();
 
         assert_eq!(c.num_edges, g.num_edges() as u64);
         assert_eq!(c.self_loops, g.num_self_loops() as u64);
@@ -557,18 +978,126 @@ mod tests {
     }
 
     #[test]
-    fn binary_file_sink_roundtrips() {
-        let dir = std::env::temp_dir().join("magquilt_sink_test");
-        std::fs::create_dir_all(&dir).unwrap();
+    fn counting_sink_rejects_duplicate_shards() {
+        let mut count = CountingSink::new();
+        count.begin(4, 2).unwrap();
+        count.accept_shard(1, edges_of(&[(0, 1)])).unwrap();
+        assert!(count.accept_shard(1, edges_of(&[(0, 2)])).is_err());
+        assert!(count.accept_shard(9, Vec::new()).is_err());
+    }
+
+    #[test]
+    fn binary_file_sink_roundtrips_in_order() {
+        let dir = tmp_dir("in_order");
         let path = dir.join("sink.bin");
         let mut sink = BinaryFileSink::create(&path);
         sink.begin(6, 2).unwrap();
-        sink.consume_shard(0, edges_of(&[(0, 5), (2, 2)])).unwrap();
-        sink.consume_shard(1, edges_of(&[(3, 0), (5, 4)])).unwrap();
-        let written = sink.finish().unwrap();
+        sink.accept_shard(0, edges_of(&[(0, 5), (2, 2)])).unwrap();
+        sink.accept_shard(1, edges_of(&[(3, 0), (5, 4)])).unwrap();
+        let written = sink.finalize().unwrap();
         assert_eq!(written, 4);
         let g = super::super::read_edge_list_binary(&path).unwrap();
         assert_eq!(g.num_nodes(), 6);
         assert_eq!(g.edges(), &[(0, 5), (2, 2), (3, 0), (5, 4)]);
+    }
+
+    #[test]
+    fn binary_file_sink_defers_out_of_order_within_budget() {
+        let dir = tmp_dir("deferred");
+        let path = dir.join("sink.bin");
+        let mut sink = BinaryFileSink::create(&path).spill_dir(&dir);
+        sink.begin(6, 3).unwrap();
+        // Shard 2 first: deferred in memory (default budget is plenty).
+        assert_eq!(
+            sink.accept_shard(2, edges_of(&[(4, 0), (5, 5)])).unwrap(),
+            ShardDisposition::Deferred { bytes: 16 }
+        );
+        assert_eq!(
+            sink.accept_shard(1, edges_of(&[(2, 1)])).unwrap(),
+            ShardDisposition::Deferred { bytes: 8 }
+        );
+        // Shard 0 unblocks the frontier and drains 1 then 2 behind it.
+        assert_eq!(
+            sink.accept_shard(0, edges_of(&[(0, 1)])).unwrap(),
+            ShardDisposition::Streamed
+        );
+        let written = sink.finalize().unwrap();
+        assert_eq!(written, 4);
+        let g = super::super::read_edge_list_binary(&path).unwrap();
+        assert_eq!(g.edges(), &[(0, 1), (2, 1), (4, 0), (5, 5)]);
+    }
+
+    #[test]
+    fn binary_file_sink_spills_over_budget_and_cleans_up() {
+        // The acceptance shape: the highest shard finishes first with a
+        // zero budget — it must spill, the file must still come out
+        // bit-for-bit in index order, and the spill temp must be gone.
+        let dir = tmp_dir("forced_spill");
+        let spill_dir = dir.join("spill");
+        let path = dir.join("sink.bin");
+        let mut sink = BinaryFileSink::create(&path).spill_dir(&spill_dir).spill_budget(0);
+        sink.begin(8, 3).unwrap();
+        let d = sink.accept_shard(2, edges_of(&[(6, 1), (7, 3)])).unwrap();
+        assert_eq!(d, ShardDisposition::Spilled { bytes: 16 });
+        assert_eq!(std::fs::read_dir(&spill_dir).unwrap().count(), 1, "spill file exists");
+        assert_eq!(
+            sink.accept_shard(1, edges_of(&[(3, 3)])).unwrap(),
+            ShardDisposition::Spilled { bytes: 8 }
+        );
+        assert_eq!(
+            sink.accept_shard(0, edges_of(&[(0, 2), (1, 0)])).unwrap(),
+            ShardDisposition::Streamed
+        );
+        let written = sink.finalize().unwrap();
+        assert_eq!(written, 5);
+        let g = super::super::read_edge_list_binary(&path).unwrap();
+        assert_eq!(g.edges(), &[(0, 2), (1, 0), (3, 3), (6, 1), (7, 3)]);
+        assert_eq!(std::fs::read_dir(&spill_dir).unwrap().count(), 0, "spill files removed");
+    }
+
+    #[test]
+    fn binary_file_sink_mixed_defer_and_spill() {
+        // Budget fits exactly one small shard: the second out-of-order
+        // arrival goes to disk while the first stays in memory.
+        let dir = tmp_dir("mixed");
+        let path = dir.join("sink.bin");
+        let mut sink = BinaryFileSink::create(&path).spill_dir(&dir).spill_budget(8);
+        sink.begin(8, 4).unwrap();
+        assert_eq!(
+            sink.accept_shard(1, edges_of(&[(2, 2)])).unwrap(),
+            ShardDisposition::Deferred { bytes: 8 }
+        );
+        assert_eq!(
+            sink.accept_shard(3, edges_of(&[(7, 7)])).unwrap(),
+            ShardDisposition::Spilled { bytes: 8 }
+        );
+        assert_eq!(
+            sink.accept_shard(2, edges_of(&[(4, 1), (5, 0)])).unwrap(),
+            ShardDisposition::Spilled { bytes: 16 }
+        );
+        assert_eq!(
+            sink.accept_shard(0, edges_of(&[(0, 0)])).unwrap(),
+            ShardDisposition::Streamed
+        );
+        let written = sink.finalize().unwrap();
+        assert_eq!(written, 5);
+        let g = super::super::read_edge_list_binary(&path).unwrap();
+        assert_eq!(g.edges(), &[(0, 0), (2, 2), (4, 1), (5, 0), (7, 7)]);
+    }
+
+    #[test]
+    fn binary_file_sink_rejects_duplicate_and_missing_shards() {
+        let dir = tmp_dir("protocol");
+        let mut sink = BinaryFileSink::create(dir.join("dup.bin"));
+        sink.begin(4, 3).unwrap();
+        sink.accept_shard(0, edges_of(&[(0, 1)])).unwrap();
+        assert!(sink.accept_shard(0, edges_of(&[(1, 1)])).is_err(), "re-delivery at frontier");
+        sink.accept_shard(2, edges_of(&[(3, 1)])).unwrap();
+        assert!(sink.accept_shard(2, edges_of(&[(3, 2)])).is_err(), "re-delivery of pending");
+        assert!(sink.accept_shard(7, Vec::new()).is_err(), "index out of range");
+        // Shard 1 missing: finalize must fail, and the unfinalized file
+        // must not read back as a valid graph.
+        assert!(sink.finalize().is_err());
+        assert!(super::super::read_edge_list_binary(&dir.join("dup.bin")).is_err());
     }
 }

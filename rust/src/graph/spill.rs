@@ -1,0 +1,250 @@
+//! Temp-file spill runs for out-of-order shard delivery.
+//!
+//! When a shard finishes before its slot in the output file is reachable
+//! (an earlier shard is still merging) and the sink's in-memory budget is
+//! exhausted, the shard's sorted run is *spilled*: streamed to a private
+//! temp file and read back — in bounded chunks — once the file frontier
+//! catches up. [`SpillWriter`] writes a run, [`SpillRun`] reads it back
+//! and deletes the file when dropped.
+//!
+//! The on-disk layout is the `MAGQEDG1` **record** format — consecutive
+//! `(src, dst)` pairs of little-endian `u32`s, 8 bytes per edge — with no
+//! header: a spill file is private to the process that wrote it, its edge
+//! count lives in the in-memory [`SpillRun`], and keeping the records
+//! header-free lets the drain loop concatenate them into the final binary
+//! file without any translation.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::io::{write_edge_records, BINARY_EDGE_LEN};
+use super::Edge;
+
+/// Bytes per stored edge: two little-endian u32s (the `MAGQEDG1` record,
+/// shared with the binary file body so the layouts cannot drift).
+pub const SPILL_EDGE_LEN: u64 = BINARY_EDGE_LEN;
+
+/// Edges read back per chunk when draining a spill run (1 MiB buffers).
+pub const SPILL_READ_CHUNK: usize = 128 * 1024;
+
+/// A process-unique spill path inside `dir`, tagged for debuggability
+/// (the tag names the shard). Uniqueness combines the pid with a
+/// process-wide counter so concurrent sinks sharing a spill dir never
+/// collide.
+pub fn unique_spill_path(dir: &Path, tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    dir.join(format!("magquilt-spill-{}-{seq}-{tag}.run", std::process::id()))
+}
+
+/// Streaming writer for one spill run.
+pub struct SpillWriter {
+    writer: BufWriter<File>,
+    path: PathBuf,
+    num_edges: u64,
+}
+
+impl std::fmt::Debug for SpillWriter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpillWriter")
+            .field("path", &self.path)
+            .field("num_edges", &self.num_edges)
+            .finish()
+    }
+}
+
+impl SpillWriter {
+    /// Create/truncate the spill file at `path`.
+    pub fn create(path: impl AsRef<Path>) -> io::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let writer = BufWriter::new(File::create(&path)?);
+        Ok(SpillWriter { writer, path, num_edges: 0 })
+    }
+
+    /// Append a run of edges.
+    pub fn write_edges(&mut self, edges: &[Edge]) -> io::Result<()> {
+        write_edge_records(&mut self.writer, edges)?;
+        self.num_edges += edges.len() as u64;
+        Ok(())
+    }
+
+    /// Edges written so far.
+    pub fn num_edges(&self) -> u64 {
+        self.num_edges
+    }
+
+    /// Flush and seal the run for reading back.
+    pub fn finish(mut self) -> io::Result<SpillRun> {
+        self.writer.flush()?;
+        Ok(SpillRun { path: self.path.clone(), num_edges: self.num_edges, keep: false })
+    }
+}
+
+/// A sealed spill run: a temp file of `num_edges` records. The file is
+/// removed when the run is dropped (read it first).
+pub struct SpillRun {
+    path: PathBuf,
+    num_edges: u64,
+    /// Test hook: leak the file instead of removing it on drop.
+    keep: bool,
+}
+
+impl std::fmt::Debug for SpillRun {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpillRun")
+            .field("path", &self.path)
+            .field("num_edges", &self.num_edges)
+            .finish()
+    }
+}
+
+impl SpillRun {
+    /// Edge count of the run.
+    pub fn num_edges(&self) -> u64 {
+        self.num_edges
+    }
+
+    /// On-disk size of the run.
+    pub fn bytes(&self) -> u64 {
+        self.num_edges * SPILL_EDGE_LEN
+    }
+
+    /// Where the run lives.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Stream the records back in chunks of at most `max_chunk_edges`,
+    /// verifying the file still holds exactly the sealed record count —
+    /// a short read means the spill file was truncated or tampered with,
+    /// and silently delivering fewer edges would corrupt the output.
+    pub fn for_each_chunk(
+        &self,
+        max_chunk_edges: usize,
+        mut f: impl FnMut(&[Edge]) -> io::Result<()>,
+    ) -> io::Result<()> {
+        let chunk = max_chunk_edges.max(1);
+        let mut reader = File::open(&self.path)?;
+        let mut remaining = self.num_edges;
+        let mut bytes = vec![0u8; chunk * SPILL_EDGE_LEN as usize];
+        let mut edges: Vec<Edge> = Vec::with_capacity(chunk);
+        while remaining > 0 {
+            let take = remaining.min(chunk as u64) as usize;
+            let buf = &mut bytes[..take * SPILL_EDGE_LEN as usize];
+            reader.read_exact(buf).map_err(|e| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("spill run {} truncated: {e}", self.path.display()),
+                )
+            })?;
+            edges.clear();
+            for rec in buf.chunks_exact(SPILL_EDGE_LEN as usize) {
+                let s = u32::from_le_bytes(rec[..4].try_into().expect("4-byte slice"));
+                let t = u32::from_le_bytes(rec[4..].try_into().expect("4-byte slice"));
+                edges.push((s, t));
+            }
+            f(&edges)?;
+            remaining -= take as u64;
+        }
+        Ok(())
+    }
+
+    #[cfg(test)]
+    fn keep_file(mut self) -> PathBuf {
+        self.keep = true;
+        self.path.clone()
+    }
+}
+
+impl Drop for SpillRun {
+    fn drop(&mut self) {
+        if !self.keep {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join("magquilt_spill_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_in_chunks() {
+        let path = unique_spill_path(&tmp_dir(), "shard2");
+        let mut w = SpillWriter::create(&path).unwrap();
+        let edges: Vec<Edge> = (0..1000u32).map(|i| (i, i.wrapping_mul(7) % 500)).collect();
+        w.write_edges(&edges[..400]).unwrap();
+        w.write_edges(&edges[400..]).unwrap();
+        assert_eq!(w.num_edges(), 1000);
+        let run = w.finish().unwrap();
+        assert_eq!(run.num_edges(), 1000);
+        assert_eq!(run.bytes(), 8000);
+        let mut back = Vec::new();
+        let mut chunks = 0;
+        run.for_each_chunk(128, |c| {
+            assert!(c.len() <= 128);
+            chunks += 1;
+            back.extend_from_slice(c);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(back, edges);
+        assert_eq!(chunks, 8); // ceil(1000 / 128)
+    }
+
+    #[test]
+    fn drop_removes_file() {
+        let path = unique_spill_path(&tmp_dir(), "shard0");
+        let mut w = SpillWriter::create(&path).unwrap();
+        w.write_edges(&[(1, 2)]).unwrap();
+        let run = w.finish().unwrap();
+        assert!(path.exists());
+        drop(run);
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn truncated_run_is_an_error_not_short_data() {
+        let path = unique_spill_path(&tmp_dir(), "shard1");
+        let mut w = SpillWriter::create(&path).unwrap();
+        w.write_edges(&[(1, 2), (3, 4), (5, 6)]).unwrap();
+        let run = w.finish().unwrap();
+        let kept = run.keep_file();
+        // Re-seal a run claiming 3 edges over a file truncated to 1.
+        let f = std::fs::OpenOptions::new().write(true).open(&kept).unwrap();
+        f.set_len(SPILL_EDGE_LEN).unwrap();
+        drop(f);
+        let run = SpillRun { path: kept, num_edges: 3, keep: false };
+        let err = run.for_each_chunk(16, |_| Ok(())).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn unique_paths_do_not_collide() {
+        let dir = tmp_dir();
+        let a = unique_spill_path(&dir, "shard0");
+        let b = unique_spill_path(&dir, "shard0");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn empty_run_reads_nothing() {
+        let path = unique_spill_path(&tmp_dir(), "empty");
+        let run = SpillWriter::create(&path).unwrap().finish().unwrap();
+        let mut called = false;
+        run.for_each_chunk(8, |_| {
+            called = true;
+            Ok(())
+        })
+        .unwrap();
+        assert!(!called);
+    }
+}

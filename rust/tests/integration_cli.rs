@@ -88,6 +88,48 @@ fn sample_alias_streams_binary_sink_and_stats_reads_back() {
 }
 
 #[test]
+fn sample_binary_with_forced_spill_matches_collect() {
+    // The CLI spill knobs end-to-end: a zero budget routes every
+    // out-of-order shard through a spill file in --spill-dir, and the
+    // final file is still bit-for-bit the collected graph.
+    let out = tmp("spilled.bin");
+    let spill_dir = tmp("spill_dir");
+    std::fs::create_dir_all(&spill_dir).unwrap();
+    magquilt::cli::run(&args(&[
+        "sample",
+        "--log2-nodes",
+        "9",
+        "--sampler",
+        "quilt",
+        "--workers",
+        "4",
+        "--shards",
+        "8",
+        "--seed",
+        "7",
+        "--sink",
+        "binary",
+        "--spill-budget",
+        "0",
+        "--spill-dir",
+        spill_dir.to_str().unwrap(),
+        "--out",
+        out.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let streamed = magquilt::graph::read_edge_list_binary(&out).unwrap();
+    let mut model = magquilt::config::ModelSpec::default_spec();
+    model.log2_nodes = 9;
+    model.attributes = 9;
+    let mut run = magquilt::config::RunSpec::default_spec();
+    run.seed = 7;
+    let collected = magquilt::cli::sample_with(&magquilt::cli::model_params(&model), &run).unwrap();
+    assert_eq!(streamed, collected);
+    // Spill temp files are removed once concatenated.
+    assert_eq!(std::fs::read_dir(&spill_dir).unwrap().count(), 0);
+}
+
+#[test]
 fn counting_sink_runs_without_holding_graph() {
     magquilt::cli::run(&args(&[
         "generate",

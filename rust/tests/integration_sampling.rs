@@ -134,6 +134,57 @@ fn binary_and_counting_sinks_agree_with_collect() {
 }
 
 #[test]
+fn forced_spill_binary_sink_equivalence_sweep() {
+    // Satellite of the out-of-order sink rework: with a zero in-memory
+    // budget every shard that finishes ahead of the binary file frontier
+    // detours through a spill file, and the re-read output must still be
+    // bit-for-bit the sequential samplers' — for quilt and hybrid alike.
+    use magquilt::graph::BinaryFileSink;
+    let d = 10;
+    let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, 1 << d, d);
+    let skewed = MagmParams::homogeneous(Initiator::THETA1, 0.85, 1 << d, d);
+    let seq_quilt = QuiltSampler::new(params.clone()).seed(19).sample();
+    let seq_hybrid = HybridSampler::new(skewed.clone()).seed(19).sample();
+    let dir = std::env::temp_dir().join("magquilt_spill_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    for shards in [1usize, 3, 8] {
+        for workers in [1usize, 4] {
+            let coord = Coordinator::new().workers(workers).shards(shards);
+            let path = dir.join(format!("quilt_{shards}_{workers}.bin"));
+            let sink = BinaryFileSink::create(&path).spill_dir(&dir).spill_budget(0);
+            let (written, stats) = coord.sample_quilt_with_sink(&params, 19, sink).unwrap();
+            assert_eq!(written, seq_quilt.num_edges() as u64);
+            let back = magquilt::graph::read_edge_list_binary(&path).unwrap();
+            assert_eq!(back, seq_quilt, "quilt S={shards} workers={workers}");
+            // Sink-side accounting stays consistent; the merger-side
+            // residency bound is unaffected by delivery order.
+            assert_eq!(
+                stats.spill.spilled_shards,
+                stats.shard_stats.iter().filter(|s| s.spill_runs > 0).count()
+            );
+            for s in &stats.shard_stats {
+                assert!(s.peak_resident <= s.edges + 2 * s.max_batch);
+            }
+
+            let path = dir.join(format!("hybrid_{shards}_{workers}.bin"));
+            let sink = BinaryFileSink::create(&path).spill_dir(&dir).spill_budget(0);
+            let (written, _) = coord.sample_hybrid_with_sink(&skewed, 19, sink).unwrap();
+            assert_eq!(written, seq_hybrid.num_edges() as u64);
+            let back = magquilt::graph::read_edge_list_binary(&path).unwrap();
+            assert_eq!(back, seq_hybrid, "hybrid S={shards} workers={workers}");
+        }
+    }
+    // No spill temp files may survive the runs.
+    let leftovers = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().file_name().to_string_lossy().starts_with("magquilt-spill-")
+        })
+        .count();
+    assert_eq!(leftovers, 0, "spill temp files leaked");
+}
+
+#[test]
 fn partition_size_stays_near_log2n_at_mu_half() {
     // Theorem 4 (statistically): B <= log2 n whp; in practice much lower
     // (paper Fig. 5). Check over several sizes/seeds with slack.
