@@ -2,15 +2,19 @@
 //! Figures 10 and 11 (quilting vs naive runtime, and per-edge cost), the
 //! conditioned-vs-rejection piece sweep over partition size B, the
 //! shard-count sweep of the coordinator's streaming merge (per-shard
-//! merge stats included), and the setup-pipeline sweep over setup-thread
-//! counts (per-phase attrs/partition/trie/DAG timings). Summaries are
-//! emitted to `BENCH_quilt.json` for the perf trajectory.
+//! merge stats included), the setup-pipeline sweep over setup-thread
+//! counts (per-phase attrs/partition/trie/DAG timings), and the
+//! distributed-runtime sweep over worker counts (partitioned sampling +
+//! segment merge). Summaries are emitted to `BENCH_quilt.json` for the
+//! perf trajectory.
 //!
 //! `MAGQUILT_BENCH_FAST=1` shrinks the sweeps for smoke runs.
 
 use std::time::Instant;
 
+use magquilt::config::{ModelSpec, RunSpec};
 use magquilt::coordinator::Coordinator;
+use magquilt::dist::{self, ShardPlan};
 use magquilt::kpgm::Initiator;
 use magquilt::magm::{naive_sample, AttributeAssignment, MagmParams};
 use magquilt::quilt::{HybridSampler, Partition, PieceMode, QuiltSampler};
@@ -279,6 +283,90 @@ fn setup_sweep() -> String {
     )
 }
 
+/// Distributed-runtime sweep: the same model and seed split across
+/// W ∈ {1, 2, 4} workers (run concurrently in-process — each worker is a
+/// pure function of the plan, so threads measure the same partitioned
+/// work the per-host processes do) plus the deterministic segment merge.
+/// The output is bit-for-bit the single-process file (asserted by the
+/// test suite); this sweep measures what the partition + merge cost.
+/// Returns the JSON rows for `BENCH_quilt.json`.
+fn dist_sweep() -> String {
+    let (d, worker_counts, shards, trials): (u32, &[usize], usize, u64) =
+        if fast() { (12, &[1, 2], 8, 2) } else { (15, &[1, 2, 4], 16, 3) };
+    let mut model = ModelSpec::default_spec();
+    model.log2_nodes = d;
+    model.attributes = d;
+    let dir = std::env::temp_dir().join("magquilt_bench_dist");
+    println!("\n# bench: distributed runtime sweep (theta1, d={d}, n=2^{d}, S={shards})");
+    println!(
+        "{:>3} {:>10} {:>12} {:>10} {:>10} {:>9} {:>12}",
+        "W", "edges", "workers_ms", "merge_ms", "total_ms", "ovf_runs", "ovf_edges"
+    );
+    let mut rows = Vec::new();
+    for &w in worker_counts {
+        let mut run = RunSpec::default_spec();
+        run.shards = shards;
+        // Bound per-worker thread pools so W workers do not oversubscribe.
+        run.workers = 2;
+        let mut workers_ms = Vec::new();
+        let mut merge_ms = Vec::new();
+        let mut last = None;
+        for t in 0..trials {
+            run.seed = t;
+            let plan = ShardPlan::new(&model, &run, w).expect("bench plan");
+            let _ = std::fs::remove_dir_all(&dir);
+            std::fs::create_dir_all(&dir).unwrap();
+            let start = Instant::now();
+            std::thread::scope(|scope| {
+                let plan = &plan;
+                let dir = &dir;
+                let handles: Vec<_> = (0..plan.num_workers())
+                    .map(|i| scope.spawn(move || dist::run_worker(plan, i, dir).unwrap()))
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+            });
+            workers_ms.push(start.elapsed().as_secs_f64() * 1e3);
+            let out = std::env::temp_dir().join("magquilt_bench_dist_merged.bin");
+            let start = Instant::now();
+            let report = dist::merge_segments(&dir, &plan, &out, true).expect("bench merge");
+            merge_ms.push(start.elapsed().as_secs_f64() * 1e3);
+            let _ = std::fs::remove_file(&out);
+            last = Some(report);
+        }
+        let (wm, mm) = (median(&mut workers_ms), median(&mut merge_ms));
+        let report = last.expect("at least one trial");
+        let ovf_edges: usize = report.shards.iter().map(|s| s.overflow_edges).sum();
+        println!(
+            "{:>3} {:>10} {:>12.2} {:>10.2} {:>10.2} {:>9} {:>12}",
+            w,
+            report.total_edges,
+            wm,
+            mm,
+            wm + mm,
+            report.overflow_runs(),
+            ovf_edges
+        );
+        rows.push(format!(
+            "      {{\"dist_workers\": {w}, \"shards\": {shards}, \"edges\": {}, \
+             \"workers_ms\": {wm:.3}, \"merge_ms\": {mm:.3}, \"total_ms\": {:.3}, \
+             \"overflow_runs\": {}, \"overflow_edges\": {ovf_edges}, \
+             \"cross_worker_duplicates\": {}}}",
+            report.total_edges,
+            wm + mm,
+            report.overflow_runs(),
+            report.duplicates_dropped()
+        ));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    format!(
+        "  \"dist_sweep\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
+         \"shards\": {shards}, \"trials\": {trials},\n    \"results\": [\n{}\n    ]\n  }}",
+        rows.join(",\n")
+    )
+}
+
 fn main() {
     let (d_max, naive_max, trials) = if fast() { (12, 9, 2) } else { (17, 11, 3) };
     println!("# bench: sampling (paper Fig. 10/11) — trials={trials}");
@@ -349,9 +437,9 @@ fn main() {
     let shard_rows = shard_sweep();
     let spill_rows = spill_sweep();
     let setup_rows = setup_sweep();
-    let json = format!(
-        "{{\n  \"bench\": \"quilt\",\n{piece_rows},\n{shard_rows},\n{spill_rows},\n{setup_rows}\n}}\n"
-    );
+    let dist_rows = dist_sweep();
+    let sections = [piece_rows, shard_rows, spill_rows, setup_rows, dist_rows].join(",\n");
+    let json = format!("{{\n  \"bench\": \"quilt\",\n{sections}\n}}\n");
     match std::fs::write("BENCH_quilt.json", &json) {
         Ok(()) => println!("wrote BENCH_quilt.json"),
         Err(e) => eprintln!("could not write BENCH_quilt.json: {e}"),

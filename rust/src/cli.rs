@@ -8,8 +8,13 @@
 //!                   [--shards S] [--setup-threads T] [--attr-mode MODE]
 //!                   [--sink KIND] [--output PATH] [--spill-dir DIR]
 //!                   [--spill-budget BYTES] [--binary] [--stats]
-//! magquilt sample …         (alias of generate; accepts --out for --output)
-//! magquilt stats <edge-list file>
+//! magquilt sample …         (alias of generate; accepts --out for --output;
+//!                   add --dist-workers W for a multi-process run)
+//! magquilt shard-plan [model/run flags] --dist-workers W [--plan-out F]
+//! magquilt shard-worker --plan F --worker I [--segment-dir DIR]
+//! magquilt merge-segments --segments DIR [--plan F] --out PATH
+//!                   [--remove-segments]
+//! magquilt stats <edge-list file | segment dir>
 //! magquilt experiment <fig1|fig5|...|fig14|all> [--max-log2n N]
 //!                   [--naive-max-log2n N] [--trials T] [--seed S]
 //!                   [--out DIR]
@@ -25,9 +30,10 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::config::{load_config, parse_attr_mode, parse_piece_mode, ModelSpec, RunSpec,
                     SamplerKind};
 use crate::coordinator::Coordinator;
+use crate::dist::{self, ShardPlan};
 use crate::experiments::{run_experiment, Scale, ALL_EXPERIMENTS};
 use crate::graph::{read_edge_list_binary, read_edge_list_text, write_edge_list_binary,
-                   write_edge_list_text, BinaryFileSink, CountingSink, EdgeList};
+                   write_edge_list_text, BinaryFileSink, CountingSink, EdgeList, BINARY_MAGIC};
 use crate::kpgm::Initiator;
 use crate::magm::{AttributeAssignment, MagmParams};
 use crate::rng::Rng;
@@ -107,7 +113,14 @@ USAGE:
                       [--sink KIND] [--output PATH] [--spill-dir DIR]
                       [--spill-budget BYTES] [--binary] [--stats]
     magquilt sample   … (alias of generate; --out is accepted for --output)
-    magquilt stats <edge-list file>
+    magquilt sample   --dist-workers W --out PATH [--segment-dir DIR] …
+                      (distributed: spawn W local worker processes, merge
+                      their segments — bit-for-bit the single-process file)
+    magquilt shard-plan [model/run flags] --dist-workers W [--plan-out F]
+    magquilt shard-worker --plan F --worker I [--segment-dir DIR]
+    magquilt merge-segments --segments DIR [--plan F] --out PATH
+                      [--remove-segments]
+    magquilt stats <edge-list file | segment dir>
     magquilt experiment <id|all> [--max-log2n N] [--naive-max-log2n N]
                       [--trials T] [--seed S] [--out DIR]
     magquilt artifacts-check [--dir DIR]
@@ -115,14 +128,23 @@ USAGE:
 
 SAMPLERS: quilt (Algorithm 2) | hybrid (§5) | naive | naive-xla
 PIECE MODES: conditioned (rejection-free, default) | rejection (paper-literal)
-ATTR MODES: sequential (legacy stream, default) | chunked (parallel setup,
-       bit-for-bit stable across any --setup-threads count)
+ATTR MODES: sequential (legacy stream; the single-process default)
+       | chunked (parallel setup, bit-for-bit stable across any
+         --setup-threads count; the default inside --dist-workers runs)
 SINKS: collect (in-memory, default) | counting (degrees only, no graph)
        | binary (stream shards straight to the binary file at --output;
          a shard finishing ahead of the file frontier is held within
          --spill-budget BYTES of memory [default 256 MiB] then spilled to
          temp files in --spill-dir [default: next to the output] and
          concatenated into its slot when the frontier catches up)
+DISTRIBUTED: one plan manifest seals the run (`shard-plan`); each worker
+       process owns a contiguous shard range and writes per-shard MAGQEDG1
+       segment files plus overflow runs for foreign shards
+       (`shard-worker`, safe to run on separate hosts against a shared or
+       collected --segment-dir); `merge-segments` folds them into one
+       output identical to the single-process sampler; `stats <dir>`
+       inspects a segment directory before merging. `sample
+       --dist-workers W` runs plan → workers → merge locally.
 EXPERIMENTS: fig1 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14 | all
 ";
 
@@ -135,6 +157,9 @@ pub fn run(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd {
         "generate" | "sample" => cmd_generate(rest),
+        "shard-plan" => cmd_shard_plan(rest),
+        "shard-worker" => cmd_shard_worker(rest),
+        "merge-segments" => cmd_merge_segments(rest),
         "stats" => cmd_stats(rest),
         "experiment" => cmd_experiment(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
@@ -189,7 +214,7 @@ fn specs_from_args(args: &Args) -> Result<(ModelSpec, RunSpec)> {
         run.setup_threads = v;
     }
     if let Some(s) = args.get("attr-mode") {
-        run.attr_mode = parse_attr_mode(s)?;
+        run.attr_mode = Some(parse_attr_mode(s)?);
     }
     if let Some(s) = args.get("sampler") {
         run.sampler = SamplerKind::parse(s)?;
@@ -205,6 +230,12 @@ fn specs_from_args(args: &Args) -> Result<(ModelSpec, RunSpec)> {
     }
     if let Some(b) = args.get_parsed::<u64>("spill-budget")? {
         run.spill_budget = Some(b);
+    }
+    if let Some(w) = args.get_parsed::<usize>("dist-workers")? {
+        run.dist_workers = w;
+    }
+    if let Some(d) = args.get("segment-dir") {
+        run.segment_dir = Some(d.to_string());
     }
     model.validate()?;
     Ok((model, run))
@@ -233,16 +264,182 @@ fn cmd_generate(raw: &[String]) -> Result<()> {
         model.theta,
         run.sampler.name(),
         run.piece_mode.name(),
-        run.attr_mode.name(),
+        run.attr_mode.map_or("auto", |m| m.name()),
         run.seed,
-        sink,
+        if run.dist_workers > 0 { "dist-segments" } else { sink },
     );
+    if run.dist_workers > 0 {
+        return cmd_generate_dist(&args, &model, &run);
+    }
     match sink {
         "collect" => cmd_generate_collect(&args, &params, &run),
         "counting" => cmd_generate_counting(&params, &run),
         "binary" => cmd_generate_binary(&args, &params, &run),
         other => bail!("unknown sink {other:?} (expected collect|counting|binary)"),
     }
+}
+
+/// Distributed driver: build the plan, spawn one local `shard-worker`
+/// process per worker, monitor them, merge their segments into the
+/// output, and drain the segment directory. The result is bit-for-bit
+/// the single-process binary sink's file for the same plan.
+fn cmd_generate_dist(args: &Args, model: &ModelSpec, run: &RunSpec) -> Result<()> {
+    if let Some(sink) = args.get("sink") {
+        if sink != "binary" {
+            bail!("--dist-workers writes the binary format; --sink {sink} is not supported");
+        }
+    }
+    if args.has_flag("stats") {
+        bail!("--stats needs the collect sink; run `magquilt stats <file>` on the output");
+    }
+    let out = run
+        .output
+        .as_deref()
+        .ok_or_else(|| anyhow!("--dist-workers needs --output (or --out) <path>"))?;
+    let out = Path::new(out);
+    ensure_parent_dir(out)?;
+    let plan = ShardPlan::new(model, run, run.dist_workers)?;
+    let segment_dir = match &run.segment_dir {
+        Some(d) => PathBuf::from(d),
+        None => {
+            let mut os = out.as_os_str().to_os_string();
+            os.push(".segments");
+            PathBuf::from(os)
+        }
+    };
+    let exe =
+        std::env::current_exe().context("locating the magquilt binary to spawn workers")?;
+    eprintln!(
+        "dist: plan {} | {} worker process(es) x {} shard(s), segments in {}",
+        plan.hash_hex(),
+        plan.num_workers(),
+        plan.num_shards,
+        segment_dir.display()
+    );
+    let start = std::time::Instant::now();
+    let report = dist::run_distributed(&plan, &segment_dir, out, &exe)?;
+    let ms = start.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "dist: merged {} shard(s) from {} worker(s); {} overflow run(s), \
+         {} cross-worker duplicate(s) collapsed",
+        report.merge.shards.len(),
+        report.workers,
+        report.merge.overflow_runs(),
+        report.merge.duplicates_dropped(),
+    );
+    println!(
+        "wrote {} ({} edges, {:.1} ms total)",
+        out.display(),
+        report.merge.total_edges,
+        ms
+    );
+    Ok(())
+}
+
+/// Generate (and print) a plan manifest for a multi-host run, plus the
+/// exact per-host worker commands — the runbook in executable form.
+fn cmd_shard_plan(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    let (model, run) = specs_from_args(&args)?;
+    if run.dist_workers == 0 {
+        bail!("shard-plan needs --dist-workers W (or run.dist_workers in --config)");
+    }
+    let plan = ShardPlan::new(&model, &run, run.dist_workers)?;
+    let out = PathBuf::from(args.get("plan-out").unwrap_or("plan.toml"));
+    ensure_parent_dir(&out)?;
+    plan.save(&out)?;
+    println!(
+        "wrote {} (plan {}, {} worker(s) x {} shard(s), sampler={}, attrs={})",
+        out.display(),
+        plan.hash_hex(),
+        plan.num_workers(),
+        plan.num_shards,
+        plan.sampler.name(),
+        plan.attr_mode.name(),
+    );
+    println!("# run one worker per host (any order, reruns are safe):");
+    for w in 0..plan.num_workers() {
+        let (lo, hi) = plan.worker_range(w).expect("range");
+        println!(
+            "#   magquilt shard-worker --plan {} --worker {w} --segment-dir segs/   \
+             # shards [{lo}, {hi})",
+            out.display()
+        );
+    }
+    println!("# then collect the segment files and:");
+    println!(
+        "#   magquilt merge-segments --segments segs/ --plan {} --out graph.bin",
+        out.display()
+    );
+    Ok(())
+}
+
+/// Execute one worker's slice of a plan (the per-host command of a
+/// multi-host run, and what `sample --dist-workers` spawns locally).
+fn cmd_shard_worker(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    let plan_path = args
+        .get("plan")
+        .ok_or_else(|| anyhow!("usage: magquilt shard-worker --plan F --worker I"))?;
+    let plan_path = Path::new(plan_path);
+    let worker: usize = args
+        .get_parsed("worker")?
+        .ok_or_else(|| anyhow!("usage: magquilt shard-worker --plan F --worker I"))?;
+    let plan = ShardPlan::load(plan_path)?;
+    let segment_dir = match args.get("segment-dir") {
+        Some(d) => PathBuf::from(d),
+        None => match plan_path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => PathBuf::from("."),
+        },
+    };
+    let report = dist::run_worker(&plan, worker, &segment_dir)?;
+    warn_dropped(report.stats.dropped_resamples);
+    print_setup(&report.stats.setup);
+    println!(
+        "worker {}: shards [{}, {}), ran {} of {} job(s); {} owned segment(s) \
+         ({} edges), {} overflow run(s) ({} edges) in {:.1} ms",
+        report.worker,
+        report.owned.0,
+        report.owned.1,
+        report.jobs_run,
+        report.jobs_total,
+        report.summary.owned_segments,
+        report.summary.owned_edges,
+        report.summary.overflow_files,
+        report.summary.overflow_edges,
+        report.stats.wall_ms,
+    );
+    Ok(())
+}
+
+/// Fold a segment directory into the final `MAGQEDG1` file.
+fn cmd_merge_segments(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["remove-segments"])?;
+    let dir = args
+        .get("segments")
+        .ok_or_else(|| anyhow!("usage: magquilt merge-segments --segments DIR --out PATH"))?;
+    let dir = Path::new(dir);
+    let out = args
+        .get("out")
+        .or_else(|| args.get("output"))
+        .ok_or_else(|| anyhow!("usage: magquilt merge-segments --segments DIR --out PATH"))?;
+    let out = Path::new(out);
+    ensure_parent_dir(out)?;
+    let plan_path = match args.get("plan") {
+        Some(p) => PathBuf::from(p),
+        None => dir.join(dist::PLAN_FILE),
+    };
+    let plan = ShardPlan::load(&plan_path)?;
+    let report = dist::merge_segments(dir, &plan, out, args.has_flag("remove-segments"))?;
+    println!(
+        "merged {} shard(s): {} overflow run(s), {} cross-worker duplicate(s) collapsed",
+        report.shards.len(),
+        report.overflow_runs(),
+        report.duplicates_dropped(),
+    );
+    println!("wrote {} ({} edges)", out.display(), report.total_edges);
+    Ok(())
 }
 
 /// The default path: collect the graph in memory, optionally write/stat it.
@@ -371,7 +568,7 @@ fn coordinator_for(run: &RunSpec) -> Result<Coordinator> {
             .workers(run.workers)
             .shards(run.shards)
             .setup_threads(run.setup_threads)
-            .attr_mode(run.attr_mode)
+            .attr_mode(run.effective_attr_mode())
             .piece_mode(run.piece_mode)),
         other => bail!(
             "sink counting|binary needs the quilt or hybrid sampler, not {}",
@@ -425,7 +622,7 @@ pub fn sample_with(params: &MagmParams, run: &RunSpec) -> Result<EdgeList> {
             let attrs = AttributeAssignment::sample_with_mode(
                 params,
                 &mut rng,
-                run.attr_mode,
+                run.effective_attr_mode(),
                 resolved_setup_threads(run),
             );
             crate::magm::naive_sample(params, &attrs, &mut rng)
@@ -437,7 +634,7 @@ pub fn sample_with(params: &MagmParams, run: &RunSpec) -> Result<EdgeList> {
             let attrs = AttributeAssignment::sample_with_mode(
                 params,
                 &mut rng,
-                run.attr_mode,
+                run.effective_attr_mode(),
                 resolved_setup_threads(run),
             );
             crate::runtime::naive_xla_sample(&runtime, params, &attrs, &mut rng)?
@@ -460,15 +657,74 @@ fn cmd_stats(raw: &[String]) -> Result<()> {
     let args = Args::parse(raw, &[])?;
     let path = args
         .positional(0)
-        .ok_or_else(|| anyhow!("usage: magquilt stats <edge-list file>"))?;
+        .ok_or_else(|| anyhow!("usage: magquilt stats <edge-list file | segment dir>"))?;
     let path = Path::new(path);
-    let graph = if path.extension().is_some_and(|e| e == "bin") {
-        read_edge_list_binary(path)?
-    } else {
-        read_edge_list_text(path)?
-    };
+    if path.is_dir() {
+        return cmd_stats_segments(&args, path);
+    }
+    let graph = read_graph_sniffed(path)?;
     let summary = summarize(&graph, 2000, 0);
     print!("{}", summary.report());
+    Ok(())
+}
+
+/// Read an edge list, recognizing the binary format by its magic bytes
+/// instead of the file extension — segment files (`.seg`/`.ovf`) and
+/// arbitrarily named outputs read the same way as `.bin`.
+fn read_graph_sniffed(path: &Path) -> Result<EdgeList> {
+    use std::io::Read;
+    let mut magic = [0u8; 8];
+    let is_binary = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_exact(&mut magic)
+        .map(|()| &magic == BINARY_MAGIC)
+        .unwrap_or(false); // shorter than a header: try the text reader
+    Ok(if is_binary { read_edge_list_binary(path)? } else { read_edge_list_text(path)? })
+}
+
+/// Pre-merge inspection of a distributed run's segment directory: loads
+/// the plan (from `--plan` or `<dir>/plan.toml`), validates every
+/// segment/overflow file (name, plan hash, header, sortedness, source
+/// spans, truncation), and prints the per-shard picture a merge would
+/// produce — without writing anything. Mixed plan hashes, incomplete
+/// runs, and corrupt files are hard errors.
+fn cmd_stats_segments(args: &Args, dir: &Path) -> Result<()> {
+    let plan_path = match args.get("plan") {
+        Some(p) => PathBuf::from(p),
+        None => dir.join(dist::PLAN_FILE),
+    };
+    let plan = ShardPlan::load(&plan_path)?;
+    let report = dist::validate_segments(dir, &plan)?;
+    println!(
+        "segment dir {} | plan {} | {} worker(s) x {} shard(s)",
+        dir.display(),
+        plan.hash_hex(),
+        plan.num_workers(),
+        plan.num_shards,
+    );
+    println!(
+        "{:>6} {:>6} {:>12} {:>9} {:>12} {:>8} {:>12}",
+        "shard", "owner", "seg_edges", "ovf_runs", "ovf_edges", "dups", "merged"
+    );
+    for row in &report.shards {
+        println!(
+            "{:>6} {:>6} {:>12} {:>9} {:>12} {:>8} {:>12}",
+            row.shard,
+            plan.owner_of_shard(row.shard),
+            row.owner_edges,
+            row.overflow_runs,
+            row.overflow_edges,
+            row.duplicates_dropped,
+            row.merged_edges,
+        );
+    }
+    println!(
+        "all segments valid: {} edge(s) after merge, {} overflow run(s), \
+         {} cross-worker duplicate(s)",
+        report.total_edges,
+        report.overflow_runs(),
+        report.duplicates_dropped(),
+    );
     Ok(())
 }
 
@@ -602,15 +858,54 @@ mod tests {
         let a = Args::parse(&s(&["--setup-threads", "4", "--attr-mode", "chunked"]), &[]).unwrap();
         let (_, run) = specs_from_args(&a).unwrap();
         assert_eq!(run.setup_threads, 4);
-        assert_eq!(run.attr_mode, crate::magm::AttrSampleMode::Chunked);
-        // Defaults: auto threads, legacy sequential stream.
+        assert_eq!(run.attr_mode, Some(crate::magm::AttrSampleMode::Chunked));
+        // Defaults: auto threads, unset mode (single-process resolves it
+        // to the legacy sequential stream).
         let a = Args::parse(&s(&[]), &[]).unwrap();
         let (_, run) = specs_from_args(&a).unwrap();
         assert_eq!(run.setup_threads, 0);
-        assert_eq!(run.attr_mode, crate::magm::AttrSampleMode::Sequential);
+        assert_eq!(run.attr_mode, None);
+        assert_eq!(run.effective_attr_mode(), crate::magm::AttrSampleMode::Sequential);
         // Bad mode rejected.
         let a = Args::parse(&s(&["--attr-mode", "bogus"]), &[]).unwrap();
         assert!(specs_from_args(&a).is_err());
+    }
+
+    #[test]
+    fn dist_flags_from_cli() {
+        let a =
+            Args::parse(&s(&["--dist-workers", "3", "--segment-dir", "/tmp/segs"]), &[]).unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.dist_workers, 3);
+        assert_eq!(run.segment_dir.as_deref(), Some("/tmp/segs"));
+        // Defaults: single-process.
+        let a = Args::parse(&s(&[]), &[]).unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.dist_workers, 0);
+        assert_eq!(run.segment_dir, None);
+    }
+
+    #[test]
+    fn dist_command_misuse_is_an_error() {
+        // Distributed sampling writes the binary format to --out.
+        assert!(run(&s(&["sample", "--log2-nodes", "6", "--dist-workers", "2"])).is_err());
+        assert!(run(&s(&[
+            "sample", "--log2-nodes", "6", "--dist-workers", "2", "--sink", "counting",
+            "--out", "/tmp/x.bin"
+        ]))
+        .is_err());
+        // The naive samplers cannot be distributed.
+        assert!(run(&s(&[
+            "sample", "--log2-nodes", "6", "--sampler", "naive", "--dist-workers", "2",
+            "--out", "/tmp/x.bin"
+        ]))
+        .is_err());
+        // Subcommand usage errors.
+        assert!(run(&s(&["shard-plan", "--log2-nodes", "6"])).is_err(), "needs --dist-workers");
+        assert!(run(&s(&["shard-worker"])).is_err());
+        assert!(run(&s(&["shard-worker", "--plan", "/nonexistent/plan.toml", "--worker", "0"]))
+            .is_err());
+        assert!(run(&s(&["merge-segments", "--segments", "/tmp"])).is_err(), "needs --out");
     }
 
     #[test]

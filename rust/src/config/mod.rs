@@ -25,9 +25,14 @@
 //! spill_budget = 268435456          # bytes of out-of-order shards held
 //!                                   # in memory before spilling (0 =
 //!                                   # spill everything out of order)
+//! dist_workers = 0                  # worker processes (0 = single-process;
+//!                                   # > 0 runs the distributed pipeline)
+//! segment_dir = "/tmp/mq-segments"  # distributed segment files (default:
+//!                                   # <output>.segments)
 //! ```
 //!
-//! A complete annotated example lives at `examples/configs/spill_to_disk.toml`.
+//! Complete annotated examples live at `examples/configs/spill_to_disk.toml`
+//! and `examples/configs/distributed.toml`.
 
 mod spec;
 mod toml;
@@ -98,5 +103,11 @@ sampler = "quilt"
         let (_, run) = load_config(&dir.join("spill_to_disk.toml")).unwrap();
         assert_eq!(run.spill_dir.as_deref(), Some("/tmp/magquilt-spill"));
         assert_eq!(run.spill_budget, Some(256 << 20));
+        let (_, run) = load_config(&dir.join("distributed.toml")).unwrap();
+        assert_eq!(run.dist_workers, 4);
+        assert_eq!(run.shards, 32);
+        assert_eq!(run.segment_dir.as_deref(), Some("/tmp/magquilt-segments"));
+        // attr_mode left unset: distributed plans resolve it to chunked.
+        assert_eq!(run.attr_mode, None);
     }
 }

@@ -150,7 +150,11 @@ pub struct RunSpec {
     pub setup_threads: usize,
     /// How attribute sampling consumes randomness (sequential = legacy
     /// stream, seed-compatible; chunked = parallel, thread-count-stable).
-    pub attr_mode: AttrSampleMode,
+    /// `None` = not specified: single-process runs keep the sequential
+    /// legacy default (golden compatibility), distributed runs default to
+    /// chunked (no goldens to protect, and the parallel setup pipeline
+    /// should engage on every worker host).
+    pub attr_mode: Option<AttrSampleMode>,
     /// Sampler implementation.
     pub sampler: SamplerKind,
     /// How quilt pieces place balls (conditioned = rejection-free default;
@@ -166,28 +170,49 @@ pub struct RunSpec {
     /// the sink default, 256 MiB; 0 forces every out-of-order shard to
     /// spill).
     pub spill_budget: Option<u64>,
+    /// Distributed mode: number of worker **processes** to split the run
+    /// across (0 = off, run single-process). Each worker owns a
+    /// contiguous shard range and writes per-shard segment files that a
+    /// deterministic merge concatenates — bit-for-bit the single-process
+    /// output.
+    pub dist_workers: usize,
+    /// Directory for distributed segment files and the plan manifest
+    /// (None = `<output>.segments` next to the output file).
+    pub segment_dir: Option<String>,
     /// Number of repeated samples (experiments average over trials).
     pub trials: u32,
 }
 
 impl RunSpec {
     /// Defaults: seed 42, auto workers, auto shards, auto setup threads,
-    /// sequential attributes, quilt sampler with conditioned pieces,
-    /// default spill budget next to the output, 1 trial.
+    /// context-default attributes (sequential single-process, chunked
+    /// distributed), quilt sampler with conditioned pieces, default spill
+    /// budget next to the output, single-process, 1 trial.
     pub fn default_spec() -> Self {
         RunSpec {
             seed: 42,
             workers: 0,
             shards: 0,
             setup_threads: 0,
-            attr_mode: AttrSampleMode::Sequential,
+            attr_mode: None,
             sampler: SamplerKind::Quilt,
             piece_mode: PieceMode::Conditioned,
             output: None,
             spill_dir: None,
             spill_budget: None,
+            dist_workers: 0,
+            segment_dir: None,
             trials: 1,
         }
+    }
+
+    /// The attribute mode a **single-process** run uses when the spec
+    /// leaves it unset: the legacy sequential stream, seed-compatible
+    /// with goldens recorded before the chunked pipeline existed.
+    /// (Distributed plans default to [`AttrSampleMode::Chunked`] instead
+    /// — see `dist::ShardPlan`.)
+    pub fn effective_attr_mode(&self) -> AttrSampleMode {
+        self.attr_mode.unwrap_or(AttrSampleMode::Sequential)
     }
 
     /// Parse from a `[run]` section (missing section = all defaults).
@@ -212,9 +237,9 @@ impl RunSpec {
                 as usize;
         }
         if let Some(v) = sec.get("attr_mode") {
-            spec.attr_mode = parse_attr_mode(
+            spec.attr_mode = Some(parse_attr_mode(
                 v.as_str().ok_or_else(|| anyhow!("run.attr_mode must be a string"))?,
-            )?;
+            )?);
         }
         if let Some(v) = sec.get("sampler") {
             spec.sampler = SamplerKind::parse(
@@ -241,6 +266,18 @@ impl RunSpec {
                 bail!("run.spill_budget must be >= 0 bytes, got {b}");
             }
             spec.spill_budget = Some(b as u64);
+        }
+        if let Some(v) = sec.get("dist_workers") {
+            let w = v.as_int().ok_or_else(|| anyhow!("run.dist_workers must be an integer"))?;
+            if w < 0 {
+                bail!("run.dist_workers must be >= 0, got {w}");
+            }
+            spec.dist_workers = w as usize;
+        }
+        if let Some(v) = sec.get("segment_dir") {
+            spec.segment_dir = Some(
+                v.as_str().ok_or_else(|| anyhow!("run.segment_dir must be a string"))?.to_string(),
+            );
         }
         if let Some(v) = sec.get("trials") {
             spec.trials =
@@ -307,11 +344,28 @@ mod tests {
         let m = parse_toml("[run]\nsetup_threads = 4\nattr_mode = \"chunked\"\n").unwrap();
         let spec = RunSpec::from_section(m.get("run")).unwrap();
         assert_eq!(spec.setup_threads, 4);
-        assert_eq!(spec.attr_mode, AttrSampleMode::Chunked);
+        assert_eq!(spec.attr_mode, Some(AttrSampleMode::Chunked));
         assert_eq!(RunSpec::default_spec().setup_threads, 0);
-        assert_eq!(RunSpec::default_spec().attr_mode, AttrSampleMode::Sequential);
+        // Unset = context default: sequential for single-process runs.
+        assert_eq!(RunSpec::default_spec().attr_mode, None);
+        assert_eq!(RunSpec::default_spec().effective_attr_mode(), AttrSampleMode::Sequential);
         assert!(parse_attr_mode("bogus").is_err());
         let bad = parse_toml("[run]\nattr_mode = \"bogus\"\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
+    }
+
+    #[test]
+    fn dist_knobs_parse_from_config() {
+        let m = parse_toml("[run]\ndist_workers = 4\nsegment_dir = \"/tmp/segs\"\n").unwrap();
+        let spec = RunSpec::from_section(m.get("run")).unwrap();
+        assert_eq!(spec.dist_workers, 4);
+        assert_eq!(spec.segment_dir.as_deref(), Some("/tmp/segs"));
+        // Defaults: single-process, segments next to the output.
+        assert_eq!(RunSpec::default_spec().dist_workers, 0);
+        assert_eq!(RunSpec::default_spec().segment_dir, None);
+        let bad = parse_toml("[run]\ndist_workers = -2\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
+        let bad = parse_toml("[run]\nsegment_dir = 9\n").unwrap();
         assert!(RunSpec::from_section(bad.get("run")).is_err());
     }
 

@@ -80,4 +80,4 @@
 
 mod pool;
 
-pub use pool::{Coordinator, JobPlan, RunStats, SampleReport, SetupStats};
+pub use pool::{Coordinator, JobPlan, RunStats, SampleReport, SetupStats, MAX_SHARDS};

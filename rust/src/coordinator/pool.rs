@@ -161,6 +161,58 @@ impl JobPlan {
         });
         self.jobs = order.into_iter().map(|i| self.jobs[i]).collect();
     }
+
+    /// Per-job *source span*: the contiguous shard range job `i`'s edges
+    /// can route to under `spec`, or `None` for a job with no source
+    /// nodes. Piece `(k, l)` sources come from `D_k` and ER-block sources
+    /// from the block's node list, and `shard_of` is monotone in the node
+    /// id, so `[shard_of(min), shard_of(max)]` over the source set covers
+    /// every edge the job can emit.
+    ///
+    /// This is the contract the distributed runtime's job-ownership rule
+    /// is built on: every process recomputes the same spans from the same
+    /// plan, so span-based assignment needs no communication.
+    pub fn job_source_spans(&self, spec: &ShardSpec) -> Vec<Option<(usize, usize)>> {
+        let source_span = |nodes: &[NodeId]| -> Option<(usize, usize)> {
+            let lo = *nodes.iter().min()?;
+            let hi = *nodes.iter().max().expect("non-empty after min");
+            Some((spec.shard_of(lo), spec.shard_of(hi)))
+        };
+        let piece_spans: Vec<Option<(usize, usize)>> =
+            (0..self.partition.size()).map(|k| source_span(self.partition.set(k))).collect();
+        let (light_spans, heavy_spans): (Vec<_>, Vec<_>) = match self.hybrid.as_ref() {
+            Some(h) => (
+                h.light.iter().map(|(_, nodes)| source_span(nodes)).collect(),
+                h.heavy.iter().map(|(_, nodes)| source_span(nodes)).collect(),
+            ),
+            None => (Vec::new(), Vec::new()),
+        };
+        self.jobs
+            .iter()
+            .map(|job| match *job {
+                Job::Piece(p) => piece_spans[p.k],
+                Job::ErBlock { src, .. } => match src {
+                    BlockRef::Light(i) => light_spans[i],
+                    BlockRef::Heavy(i) => heavy_spans[i],
+                },
+            })
+            .collect()
+    }
+
+    /// Keep only the jobs whose index satisfies `keep` (indices refer to
+    /// the current job order, matching [`Self::job_source_spans`]).
+    /// Fork ids travel with their jobs, so the retained jobs sample
+    /// exactly the edges they would have in the full plan — the
+    /// distributed runtime uses this to carve one deterministic plan into
+    /// per-process slices whose union is the whole sample.
+    pub fn retain_jobs(&mut self, mut keep: impl FnMut(usize) -> bool) {
+        let mut i = 0;
+        self.jobs.retain(|_| {
+            let k = keep(i);
+            i += 1;
+            k
+        });
+    }
 }
 
 /// Sink-agnostic statistics of one coordinated sampling run.
@@ -221,8 +273,10 @@ pub struct SampleReport {
     pub setup: SetupStats,
 }
 
-/// Upper bound on shard mergers (each is a thread).
-const MAX_SHARDS: usize = 256;
+/// Upper bound on shard mergers (each is a thread). Public because the
+/// distributed planner must clamp its shard count the same way every
+/// worker process will.
+pub const MAX_SHARDS: usize = 256;
 
 /// The leader/worker coordinator.
 #[derive(Debug, Clone)]
@@ -591,40 +645,12 @@ impl Coordinator {
         sink.begin(n, num_shards)?;
         let n64 = n as u64;
 
-        // Per-job *source span*: the contiguous shard range a job's edges
-        // can route to. Piece (k, l) sources come from D_k and ER-block
-        // sources from the block's node list, and shard_of is monotone in
-        // the node id, so [shard_of(min), shard_of(max)] over the source
-        // set covers every edge the job can emit. Shards count their
-        // contributing jobs; when a shard's count hits zero its merger is
-        // closed and delivers immediately — mid-run — instead of holding
-        // its finished run until the last worker exits.
-        let source_span = |nodes: &[NodeId]| -> Option<(usize, usize)> {
-            let lo = *nodes.iter().min()?;
-            let hi = *nodes.iter().max().expect("non-empty after min");
-            Some((spec.shard_of(lo), spec.shard_of(hi)))
-        };
-        let piece_spans: Vec<Option<(usize, usize)>> = (0..plan.partition.size())
-            .map(|k| source_span(plan.partition.set(k)))
-            .collect();
-        let (light_spans, heavy_spans): (Vec<_>, Vec<_>) = match plan.hybrid.as_ref() {
-            Some(h) => (
-                h.light.iter().map(|(_, nodes)| source_span(nodes)).collect(),
-                h.heavy.iter().map(|(_, nodes)| source_span(nodes)).collect(),
-            ),
-            None => (Vec::new(), Vec::new()),
-        };
-        let job_spans: Vec<Option<(usize, usize)>> = plan
-            .jobs
-            .iter()
-            .map(|job| match *job {
-                Job::Piece(p) => piece_spans[p.k],
-                Job::ErBlock { src, .. } => match src {
-                    BlockRef::Light(i) => light_spans[i],
-                    BlockRef::Heavy(i) => heavy_spans[i],
-                },
-            })
-            .collect();
+        // Per-job *source span* ([`JobPlan::job_source_spans`]): shards
+        // count their contributing jobs; when a shard's count hits zero
+        // its merger is closed and delivers immediately — mid-run —
+        // instead of holding its finished run until the last worker
+        // exits.
+        let job_spans = plan.job_source_spans(&spec);
         let mut span_counts = vec![0usize; num_shards];
         for span in &job_spans {
             if let Some((lo, hi)) = *span {

@@ -1,0 +1,457 @@
+//! Deterministic segment merge: stitch a segment directory back into one
+//! `MAGQEDG1` file, bit-for-bit identical to the single-process sampler.
+//!
+//! For every shard `s`, the inputs are the owner's `.seg` file (always
+//! present — a worker writes even empty owned shards, so absence means an
+//! incomplete run) plus zero or more foreign `.ovf` files (edges that
+//! wide-span jobs owned by other workers sampled into `s`'s source
+//! range). Each input is a sorted, deduplicated run; folding them through
+//! the same [`ShardMerger`] the coordinator uses yields the sorted,
+//! deduplicated **union** — and set union is order-independent, so the
+//! result equals what the single process's shard merger produced from the
+//! same batches. Writing the shards in index order through
+//! [`BinaryEdgeWriter`] and back-patching one header then reproduces the
+//! single-process `BinaryFileSink` file byte for byte.
+//!
+//! Everything is validated before it is trusted: file names must carry
+//! the plan's hash (mixed plan hashes are refused), headers must agree
+//! with the plan's node count, runs must be strictly sorted, every source
+//! id must fall inside its shard's range, and `read_edge_list_binary`
+//! already rejects truncated or unfinalized files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::{read_edge_list_binary, BinaryEdgeWriter, Edge, ShardMerger, ShardSpec};
+
+use super::plan::ShardPlan;
+use super::worker::{parse_segment_file_name, SegmentKind};
+
+/// The segment files found for one shard.
+#[derive(Debug, Clone, Default)]
+pub struct ShardSegments {
+    /// The owner's segment file, once discovered.
+    pub owner: Option<PathBuf>,
+    /// Foreign overflow files, keyed by producing worker (deterministic
+    /// fold order for stable stats; the merged *set* is order-free).
+    pub overflow: BTreeMap<usize, PathBuf>,
+}
+
+/// Everything discovered in a segment directory for one plan.
+#[derive(Debug)]
+pub struct SegmentCatalog {
+    /// Per-shard files, indexed by shard.
+    pub shards: Vec<ShardSegments>,
+}
+
+impl SegmentCatalog {
+    /// Total overflow files across shards.
+    pub fn overflow_files(&self) -> usize {
+        self.shards.iter().map(|s| s.overflow.len()).sum()
+    }
+}
+
+/// Scan `dir` for the plan's segment files, validating names, hashes, and
+/// topology. Rejects: files from a different plan hash (mixing two runs'
+/// segments silently corrupts the output), leftover in-flight temp files
+/// (a worker crashed or is still running), duplicate owner segments, a
+/// `.seg` written by a non-owner, a `.ovf` claimed by the shard's own
+/// owner, and unrecognized file names.
+pub fn scan_segments(dir: &Path, plan: &ShardPlan) -> Result<SegmentCatalog> {
+    let hash = plan.hash_hex();
+    let mut shards: Vec<ShardSegments> = vec![ShardSegments::default(); plan.num_shards];
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("reading segment directory {}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name == super::PLAN_FILE {
+            continue;
+        }
+        if name.starts_with("magquilt-tmp-") {
+            bail!(
+                "in-flight temp file {name} in {} — a worker is still running or crashed \
+                 mid-write; finish or rerun the workers before merging",
+                dir.display()
+            );
+        }
+        let Some(info) = parse_segment_file_name(&name) else {
+            bail!("unrecognized file {name} in segment directory {}", dir.display());
+        };
+        if info.hash_hex != hash {
+            bail!(
+                "segment {name} was produced under plan {} but this plan hashes to {hash} — \
+                 refusing to merge mixed plans",
+                info.hash_hex
+            );
+        }
+        if info.shard >= plan.num_shards {
+            bail!("segment {name} names shard {} but the plan has {}", info.shard, plan.num_shards);
+        }
+        if info.worker >= plan.num_workers() {
+            bail!(
+                "segment {name} names worker {} but the plan has {}",
+                info.worker,
+                plan.num_workers()
+            );
+        }
+        let owner = plan.owner_of_shard(info.shard);
+        let slot = &mut shards[info.shard];
+        match info.kind {
+            SegmentKind::Owned => {
+                if info.worker != owner {
+                    bail!(
+                        "segment {name}: shard {} is owned by worker {owner}, not {}",
+                        info.shard,
+                        info.worker
+                    );
+                }
+                if slot.owner.replace(entry.path()).is_some() {
+                    bail!("duplicate owner segment for shard {}", info.shard);
+                }
+            }
+            SegmentKind::Overflow => {
+                if info.worker == owner {
+                    bail!(
+                        "overflow {name}: worker {owner} owns shard {} and must not \
+                         overflow into it",
+                        info.shard
+                    );
+                }
+                if slot.overflow.insert(info.worker, entry.path()).is_some() {
+                    bail!(
+                        "duplicate overflow for shard {} from worker {}",
+                        info.shard,
+                        info.worker
+                    );
+                }
+            }
+        }
+    }
+    Ok(SegmentCatalog { shards })
+}
+
+/// Read one segment/overflow file for `shard`, enforcing the contract:
+/// header node count matches the plan, the run is strictly sorted (sorted
+/// *and* deduplicated), and every source id falls inside the shard's
+/// range. Truncated or unfinalized files are already rejected by
+/// [`read_edge_list_binary`].
+fn read_validated_run(
+    path: &Path,
+    plan: &ShardPlan,
+    spec: &ShardSpec,
+    shard: usize,
+) -> Result<Vec<Edge>> {
+    let g = read_edge_list_binary(path)
+        .with_context(|| format!("reading segment {}", path.display()))?;
+    if g.num_nodes() != plan.model.num_nodes() {
+        bail!(
+            "segment {} claims {} nodes but the plan's model has {}",
+            path.display(),
+            g.num_nodes(),
+            plan.model.num_nodes()
+        );
+    }
+    let edges = g.into_edges();
+    if !edges.windows(2).all(|w| w[0] < w[1]) {
+        bail!("segment {} is not strictly sorted (corrupt run)", path.display());
+    }
+    for &(s, _) in &edges {
+        if spec.checked_shard_of(s) != Some(shard) {
+            bail!(
+                "segment {} holds source {s} outside shard {shard}'s range",
+                path.display()
+            );
+        }
+    }
+    Ok(edges)
+}
+
+/// One merged shard's numbers, for reports and `magquilt stats`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MergedShardReport {
+    /// Shard index.
+    pub shard: usize,
+    /// Edges in the owner segment.
+    pub owner_edges: usize,
+    /// Overflow runs folded in.
+    pub overflow_runs: usize,
+    /// Edges across those overflow runs (pre-dedup).
+    pub overflow_edges: usize,
+    /// Cross-file duplicates collapsed (the same edge sampled by jobs on
+    /// different workers — the dedup the single process did in-merger).
+    pub duplicates_dropped: u64,
+    /// Final merged edge count written for this shard.
+    pub merged_edges: usize,
+}
+
+/// The outcome of a full merge (or a validate-only inspection pass).
+#[derive(Debug, Default)]
+pub struct MergeReport {
+    /// Per-shard rows, in index order.
+    pub shards: Vec<MergedShardReport>,
+    /// Total edges in the final file.
+    pub total_edges: u64,
+}
+
+impl MergeReport {
+    /// Total overflow runs folded across shards.
+    pub fn overflow_runs(&self) -> usize {
+        self.shards.iter().map(|s| s.overflow_runs).sum()
+    }
+
+    /// Total cross-file duplicates collapsed.
+    pub fn duplicates_dropped(&self) -> u64 {
+        self.shards.iter().map(|s| s.duplicates_dropped).sum()
+    }
+}
+
+/// Fold one shard's owner + overflow runs into the final sorted,
+/// deduplicated run.
+fn merge_shard(
+    plan: &ShardPlan,
+    spec: &ShardSpec,
+    shard: usize,
+    segs: &ShardSegments,
+) -> Result<(Vec<Edge>, MergedShardReport)> {
+    let owner_path = segs.owner.as_ref().ok_or_else(|| {
+        anyhow!(
+            "no owner segment for shard {shard} (worker {} incomplete?)",
+            plan.owner_of_shard(shard)
+        )
+    })?;
+    let mut report = MergedShardReport { shard, ..Default::default() };
+    let mut merger = ShardMerger::new(shard);
+    let owner_run = read_validated_run(owner_path, plan, spec, shard)?;
+    report.owner_edges = owner_run.len();
+    merger.absorb(owner_run);
+    for path in segs.overflow.values() {
+        let run = read_validated_run(path, plan, spec, shard)?;
+        report.overflow_runs += 1;
+        report.overflow_edges += run.len();
+        merger.absorb(run);
+    }
+    let (run, stats) = merger.finish();
+    report.duplicates_dropped = stats.duplicates_dropped;
+    report.merged_edges = run.len();
+    Ok((run, report))
+}
+
+/// Validate a segment directory without writing anything: the read-only
+/// pass behind `magquilt stats <segment-dir>`. Performs the full scan +
+/// per-file validation + merge accounting (so the reported per-shard
+/// counts are exactly what a real merge would write), but keeps only the
+/// numbers. Fails on anything [`merge_segments`] would fail on.
+pub fn validate_segments(dir: &Path, plan: &ShardPlan) -> Result<MergeReport> {
+    let catalog = scan_segments(dir, plan)?;
+    let spec = plan.shard_spec();
+    let mut report = MergeReport::default();
+    for (shard, segs) in catalog.shards.iter().enumerate() {
+        let (run, row) = merge_shard(plan, &spec, shard, segs)?;
+        report.total_edges += run.len() as u64;
+        report.shards.push(row);
+    }
+    Ok(report)
+}
+
+/// Merge a complete segment directory into the final `MAGQEDG1` file at
+/// `out` — byte-identical to the single-process binary sink's output for
+/// the same plan. With `remove_inputs`, consumed segment/overflow files
+/// are deleted after the output is finalized (durable), leaving the
+/// directory drained.
+pub fn merge_segments(
+    dir: &Path,
+    plan: &ShardPlan,
+    out: &Path,
+    remove_inputs: bool,
+) -> Result<MergeReport> {
+    plan.validate()?;
+    let catalog = scan_segments(dir, plan)?;
+    // Fail on a missing owner segment *before* truncating the output.
+    for (shard, segs) in catalog.shards.iter().enumerate() {
+        if segs.owner.is_none() {
+            bail!(
+                "no owner segment for shard {shard} (worker {} incomplete?)",
+                plan.owner_of_shard(shard)
+            );
+        }
+    }
+    let spec = plan.shard_spec();
+    let mut writer = BinaryEdgeWriter::create(out, plan.model.num_nodes())
+        .with_context(|| format!("creating output {}", out.display()))?;
+    let mut report = MergeReport::default();
+    for (shard, segs) in catalog.shards.iter().enumerate() {
+        let (run, row) = merge_shard(plan, &spec, shard, segs)?;
+        writer.write_edges(&run).with_context(|| format!("writing shard {shard}"))?;
+        report.total_edges += run.len() as u64;
+        report.shards.push(row);
+    }
+    writer
+        .finalize(report.total_edges)
+        .with_context(|| format!("finalizing output {}", out.display()))?;
+    if remove_inputs {
+        for segs in &catalog.shards {
+            if let Some(p) = &segs.owner {
+                std::fs::remove_file(p)
+                    .with_context(|| format!("removing consumed segment {}", p.display()))?;
+            }
+            for p in segs.overflow.values() {
+                std::fs::remove_file(p)
+                    .with_context(|| format!("removing consumed overflow {}", p.display()))?;
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelSpec, RunSpec};
+    use crate::dist::worker::{overflow_file_name, segment_file_name};
+    use crate::graph::write_edge_list_binary;
+    use crate::graph::EdgeList;
+
+    fn plan_for(log2n: u32, shards: usize, workers: usize) -> ShardPlan {
+        let mut model = ModelSpec::default_spec();
+        model.log2_nodes = log2n;
+        model.attributes = log2n;
+        let mut run = RunSpec::default_spec();
+        run.shards = shards;
+        ShardPlan::new(&model, &run, workers).unwrap()
+    }
+
+    fn write_run(dir: &Path, name: &str, n: usize, edges: &[Edge]) {
+        write_edge_list_binary(&EdgeList::from_edges(n, edges.to_vec()), &dir.join(name))
+            .unwrap();
+    }
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("magquilt_merge_test").join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn merge_folds_owner_and_overflow_with_dedup() {
+        // n=16, S=4 (width 4), W=2: worker 0 owns shards {0,1}, worker 1
+        // owns {2,3}. Worker 0's wide job spilled edges into shard 2 —
+        // including one duplicate of an edge worker 1 sampled itself.
+        let plan = plan_for(4, 4, 2);
+        let hash = plan.hash_hex();
+        let dir = fresh_dir("fold");
+        let n = 16;
+        write_run(&dir, &segment_file_name(&hash, 0, 0), n, &[(0, 3), (2, 2)]);
+        write_run(&dir, &segment_file_name(&hash, 1, 0), n, &[(5, 1)]);
+        write_run(&dir, &segment_file_name(&hash, 2, 1), n, &[(8, 0), (9, 9)]);
+        write_run(&dir, &segment_file_name(&hash, 3, 1), n, &[]);
+        write_run(&dir, &overflow_file_name(&hash, 2, 0), n, &[(8, 0), (8, 7)]);
+        let out = dir.join("merged.bin");
+        let report = merge_segments(&dir, &plan, &out, true).unwrap();
+        assert_eq!(report.total_edges, 6);
+        assert_eq!(report.overflow_runs(), 1);
+        assert_eq!(report.duplicates_dropped(), 1, "cross-worker duplicate collapsed");
+        let g = read_edge_list_binary(&out).unwrap();
+        assert_eq!(g.edges(), &[(0, 3), (2, 2), (5, 1), (8, 0), (8, 7), (9, 9)]);
+        // remove_inputs drained everything but the output.
+        let left: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(left, vec!["merged.bin".to_string()]);
+    }
+
+    #[test]
+    fn missing_owner_segment_fails() {
+        let plan = plan_for(4, 2, 2);
+        let hash = plan.hash_hex();
+        let dir = fresh_dir("missing");
+        write_run(&dir, &segment_file_name(&hash, 0, 0), 16, &[(0, 1)]);
+        // Shard 1's owner segment absent.
+        let err = merge_segments(&dir, &plan, &dir.join("out.bin"), false).unwrap_err();
+        assert!(err.to_string().contains("no owner segment for shard 1"), "{err}");
+        assert!(!dir.join("out.bin").exists(), "must fail before touching the output");
+    }
+
+    #[test]
+    fn mixed_plan_hashes_are_rejected() {
+        let plan = plan_for(4, 2, 2);
+        let hash = plan.hash_hex();
+        let dir = fresh_dir("mixed");
+        write_run(&dir, &segment_file_name(&hash, 0, 0), 16, &[]);
+        write_run(&dir, &segment_file_name(&hash, 1, 1), 16, &[]);
+        // A stray segment from some other plan.
+        write_run(&dir, &segment_file_name("deadbeefdeadbeef", 0, 0), 16, &[]);
+        let err = scan_segments(&dir, &plan).unwrap_err();
+        assert!(err.to_string().contains("mixed plans"), "{err}");
+    }
+
+    #[test]
+    fn scan_rejects_malformed_topology() {
+        let plan = plan_for(4, 2, 2);
+        let hash = plan.hash_hex();
+        // Owner segment from the wrong worker.
+        let dir = fresh_dir("wrong_owner");
+        write_run(&dir, &segment_file_name(&hash, 0, 1), 16, &[]);
+        assert!(scan_segments(&dir, &plan).unwrap_err().to_string().contains("owned by"));
+        // Overflow from the shard's own owner.
+        let dir = fresh_dir("self_overflow");
+        write_run(&dir, &overflow_file_name(&hash, 0, 0), 16, &[]);
+        assert!(scan_segments(&dir, &plan).unwrap_err().to_string().contains("must not"));
+        // Unknown file name.
+        let dir = fresh_dir("unknown");
+        std::fs::write(dir.join("notes.txt"), "x").unwrap();
+        assert!(scan_segments(&dir, &plan).unwrap_err().to_string().contains("unrecognized"));
+        // Leftover temp file.
+        let dir = fresh_dir("tmpfile");
+        std::fs::write(dir.join("magquilt-tmp-1-0-0-seg.part"), "x").unwrap();
+        assert!(scan_segments(&dir, &plan).unwrap_err().to_string().contains("in-flight"));
+        // Shard index beyond the plan.
+        let dir = fresh_dir("shard_oob");
+        write_run(&dir, &segment_file_name(&hash, 7, 0), 16, &[]);
+        assert!(scan_segments(&dir, &plan).is_err());
+    }
+
+    #[test]
+    fn out_of_span_source_is_rejected() {
+        // n=16, S=2: shard 0 owns sources 0..8. A segment for shard 0
+        // holding source 12 is corrupt and must not merge.
+        let plan = plan_for(4, 2, 2);
+        let hash = plan.hash_hex();
+        let dir = fresh_dir("span");
+        write_run(&dir, &segment_file_name(&hash, 0, 0), 16, &[(12, 0)]);
+        write_run(&dir, &segment_file_name(&hash, 1, 1), 16, &[]);
+        let err = merge_segments(&dir, &plan, &dir.join("out.bin"), false).unwrap_err();
+        assert!(err.to_string().contains("outside shard"), "{err}");
+    }
+
+    #[test]
+    fn wrong_node_count_is_rejected() {
+        let plan = plan_for(4, 2, 2);
+        let hash = plan.hash_hex();
+        let dir = fresh_dir("nodes");
+        write_run(&dir, &segment_file_name(&hash, 0, 0), 8, &[(0, 1)]);
+        write_run(&dir, &segment_file_name(&hash, 1, 1), 16, &[]);
+        let err = merge_segments(&dir, &plan, &dir.join("out.bin"), false).unwrap_err();
+        assert!(err.to_string().contains("nodes"), "{err}");
+    }
+
+    #[test]
+    fn validate_matches_merge_numbers() {
+        let plan = plan_for(4, 2, 2);
+        let hash = plan.hash_hex();
+        let dir = fresh_dir("validate");
+        write_run(&dir, &segment_file_name(&hash, 0, 0), 16, &[(0, 1), (3, 3)]);
+        write_run(&dir, &segment_file_name(&hash, 1, 1), 16, &[(9, 2)]);
+        write_run(&dir, &overflow_file_name(&hash, 1, 0), 16, &[(9, 2), (10, 0)]);
+        let inspect = validate_segments(&dir, &plan).unwrap();
+        let merged = merge_segments(&dir, &plan, &dir.join("out.bin"), false).unwrap();
+        assert_eq!(inspect.total_edges, merged.total_edges);
+        assert_eq!(inspect.shards, merged.shards);
+        assert_eq!(inspect.duplicates_dropped(), 1);
+    }
+}

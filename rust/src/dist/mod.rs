@@ -1,0 +1,273 @@
+//! Distributed sampling runtime: shard-range ownership, segment files,
+//! and a deterministic concat.
+//!
+//! The quilting decomposition is embarrassingly partitionable — every
+//! KPGM piece and ER block is independent given its RNG fork — and the
+//! heavy work concentrates in small high-multiplicity attribute sets
+//! whose source spans are *narrow*. This module turns that into a
+//! multi-process (and multi-host) runtime: `W` worker processes each own
+//! a contiguous range of the `S` source shards, sample only the jobs
+//! whose span starts in their range, and write per-shard `MAGQEDG1`
+//! segment files; a deterministic merge folds the segments (plus the
+//! overflow runs that wide-span jobs scatter into foreign shards) into
+//! one output file **bit-for-bit identical** to the single-process
+//! sampler's.
+//!
+//! No inter-worker communication exists anywhere: the whole contract is
+//! the [`ShardPlan`] manifest (everything output-determining, sealed by a
+//! content hash) plus the segment-directory file-name scheme. That is
+//! what makes multi-host execution trivial — see the runbook below.
+//!
+//! # Pipeline
+//!
+//! ```text
+//! shard-plan ──► plan.toml ──► shard-worker 0 ─┐
+//!                          ──► shard-worker 1 ─┤──► segment dir ──► merge-segments ──► out.bin
+//!                          ──► shard-worker …  ─┘
+//! ```
+//!
+//! `magquilt sample --dist-workers W --out g.bin` runs the whole pipeline
+//! on one machine: it builds the plan, spawns `W` local `shard-worker`
+//! processes, monitors them, merges, and drains the segment directory.
+//! Each stage is equally usable standalone.
+//!
+//! # Plan manifest (`plan.toml`)
+//!
+//! A TOML-subset file with three sections (see [`plan::ShardPlan`]):
+//! `[plan]` — format version, content hash, shard count `S`, and the
+//! per-worker shard ranges (`shard_starts[w] .. shard_ends[w]`);
+//! `[model]` and `[run]` — the config-file schema. The hash digests the
+//! output-determining fields only (model, seed, sampler, piece/attr mode,
+//! `S`, ranges) — never the per-host thread knobs — and every segment
+//! file embeds it, so segments from different plans can never be stitched
+//! together. Inside a plan the attribute mode defaults to **chunked**
+//! (there are no sequential-stream goldens to protect in dist mode, and
+//! chunked is what parallelizes each worker's setup pipeline); the
+//! resolved mode is recorded in the manifest so every worker agrees.
+//!
+//! # Segment files
+//!
+//! Every file a worker writes is a complete, self-validating `MAGQEDG1`
+//! edge list (magic, `u64` node count, back-patched `u64` edge count,
+//! sorted deduplicated `(u32, u32)` LE records — see [`crate::graph`]):
+//!
+//! * `seg-<hash>-s<shard:05>-w<worker:04>.seg` — the owner's run for a
+//!   shard in its range. Written for **every** owned shard, even empty
+//!   ones: a missing owner segment means an incomplete run, and the merge
+//!   refuses to guess.
+//! * `ovf-<hash>-s<shard:05>-w<worker:04>.ovf` — edges a wide-span job
+//!   owned by `worker` sampled into a *foreign* shard's source range,
+//!   keyed by that destination shard. Written only when non-empty.
+//!
+//! Files are written under a pid + run-nonce temp name and atomically
+//! renamed, so any number of workers — across hosts on a shared
+//! filesystem — can safely share one directory, and a crash never leaves
+//! a plausible-looking partial file under a final name.
+//!
+//! # Why the concat is exact
+//!
+//! Shard `s`'s single-process result is the sorted deduplicated union of
+//! every batch routed to it. Distributed, those same batches (same RNG
+//! forks, same jobs) are split between the owner's segment and the
+//! foreign overflow runs — each itself a sorted deduplicated union of a
+//! subset. Folding them back through the same [`crate::graph::ShardMerger`]
+//! rebuilds the union, and union is associative and order-free, so the
+//! merged run is identical — and writing the shards in index order
+//! through [`crate::graph::BinaryEdgeWriter`] reproduces the
+//! single-process file byte for byte.
+//!
+//! # Multi-host runbook
+//!
+//! ```text
+//! # 1. One plan, anywhere:
+//! magquilt shard-plan --log2-nodes 23 --seed 7 --dist-workers 4 \
+//!          --shards 64 --plan-out plan.toml
+//! # 2. Ship plan.toml to every host; run one worker per host:
+//! host0$ magquilt shard-worker --plan plan.toml --worker 0 --segment-dir segs/
+//! host1$ magquilt shard-worker --plan plan.toml --worker 1 --segment-dir segs/
+//! ...
+//! # 3. Collect the segment files onto one host (scp/rsync; names are
+//! #    collision-free by construction) and merge:
+//! magquilt merge-segments --segments segs/ --plan plan.toml --out graph.bin
+//! # 4. Optional pre-merge inspection (counts, spans, truncation, hashes):
+//! magquilt stats segs/
+//! ```
+//!
+//! Workers are stateless: a crashed worker is rerun with the same
+//! command and atomically overwrites its own files.
+
+pub mod merge;
+pub mod plan;
+pub mod worker;
+
+pub use merge::{merge_segments, scan_segments, validate_segments, MergeReport,
+                MergedShardReport, SegmentCatalog};
+pub use plan::{ShardPlan, PLAN_FORMAT};
+pub use worker::{job_owners, overflow_file_name, parse_segment_file_name, run_worker,
+                 segment_file_name, SegmentFileInfo, SegmentKind, SegmentSink, SegmentSummary,
+                 WorkerReport};
+
+use std::path::Path;
+use std::process::{Command, Stdio};
+
+use anyhow::{bail, Context, Result};
+
+/// File name of the plan manifest inside a segment directory.
+pub const PLAN_FILE: &str = "plan.toml";
+
+/// Outcome of a full local distributed run.
+#[derive(Debug)]
+pub struct DistReport {
+    /// Worker processes spawned.
+    pub workers: usize,
+    /// The merge outcome (totals + per-shard rows).
+    pub merge: MergeReport,
+}
+
+/// Remove artifacts a previous attempt at **this same plan** may have
+/// left in the directory: segment/overflow files carrying this plan's
+/// hash, in-flight temp files, and a stale manifest. Segment files from a
+/// *different* plan are never deleted — they may be another run's
+/// collected (not yet merged) multi-host work — and instead fail the run
+/// up front, before any sampling time is spent.
+fn clean_stale_artifacts(dir: &Path, plan: &ShardPlan) -> Result<()> {
+    if !dir.exists() {
+        return Ok(());
+    }
+    let hash = plan.hash_hex();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy().into_owned();
+        if let Some(info) = parse_segment_file_name(&name) {
+            if info.hash_hex != hash {
+                bail!(
+                    "segment dir {} holds {name} from plan {} — refusing to overwrite another \
+                     run's segments; merge or remove them, or pick a different --segment-dir",
+                    dir.display(),
+                    info.hash_hex
+                );
+            }
+            std::fs::remove_file(entry.path())
+                .with_context(|| format!("removing stale {name}"))?;
+        } else if name == PLAN_FILE || name.starts_with("magquilt-tmp-") {
+            std::fs::remove_file(entry.path())
+                .with_context(|| format!("removing stale {name}"))?;
+        }
+    }
+    Ok(())
+}
+
+/// Run a whole distributed sample on this machine: write the plan
+/// manifest into `segment_dir`, spawn one `shard-worker` process per
+/// worker (using `worker_exe`, normally the current `magquilt` binary),
+/// wait for all of them, merge the segments into `out`, and drain the
+/// segment directory.
+///
+/// Worker stdout/stderr are inherited, so per-worker progress lines
+/// interleave with the driver's. Any worker failing (or dying on a
+/// signal) fails the run; its segments are left in place for inspection
+/// and are cleaned up by the next attempt.
+pub fn run_distributed(
+    plan: &ShardPlan,
+    segment_dir: &Path,
+    out: &Path,
+    worker_exe: &Path,
+) -> Result<DistReport> {
+    plan.validate()?;
+    std::fs::create_dir_all(segment_dir)
+        .with_context(|| format!("creating segment dir {}", segment_dir.display()))?;
+    clean_stale_artifacts(segment_dir, plan)?;
+    let plan_path = segment_dir.join(PLAN_FILE);
+    plan.save(&plan_path)?;
+
+    let mut children = Vec::new();
+    for w in 0..plan.num_workers() {
+        let spawned = Command::new(worker_exe)
+            .arg("shard-worker")
+            .arg("--plan")
+            .arg(&plan_path)
+            .arg("--worker")
+            .arg(w.to_string())
+            .arg("--segment-dir")
+            .arg(segment_dir)
+            .stdin(Stdio::null())
+            .spawn()
+            .with_context(|| {
+                format!("spawning worker {w} ({} shard-worker)", worker_exe.display())
+            });
+        match spawned {
+            Ok(child) => children.push((w, child)),
+            Err(e) => {
+                // Don't leak the workers already running.
+                for (_, mut child) in children {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+                return Err(e);
+            }
+        }
+    }
+    let mut failed = Vec::new();
+    for (w, mut child) in children {
+        let status = child.wait().with_context(|| format!("waiting for worker {w}"))?;
+        if !status.success() {
+            failed.push(format!("worker {w}: {status}"));
+        }
+    }
+    if !failed.is_empty() {
+        bail!(
+            "{} of {} workers failed ({}); segments left in {} for inspection",
+            failed.len(),
+            plan.num_workers(),
+            failed.join(", "),
+            segment_dir.display()
+        );
+    }
+
+    let merge = merge_segments(segment_dir, plan, out, true)?;
+    std::fs::remove_file(&plan_path).ok();
+    // Remove the directory if we own all of it (ignore failure: the user
+    // may have pointed --segment-dir at a shared location).
+    std::fs::remove_dir(segment_dir).ok();
+    Ok(DistReport { workers: plan.num_workers(), merge })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_stale_artifacts_only_touches_this_plans_files() {
+        let dir = std::env::temp_dir().join("magquilt_dist_clean_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let plan = ShardPlan::new(
+            &crate::config::ModelSpec::default_spec(),
+            &crate::config::RunSpec::default_spec(),
+            2,
+        )
+        .unwrap();
+        let hash = plan.hash_hex();
+        std::fs::write(dir.join(PLAN_FILE), "stale").unwrap();
+        std::fs::write(dir.join(segment_file_name(&hash, 0, 0)), "stale").unwrap();
+        std::fs::write(dir.join(overflow_file_name(&hash, 1, 1)), "stale").unwrap();
+        std::fs::write(dir.join("magquilt-tmp-1-x-0-seg.part"), "stale").unwrap();
+        std::fs::write(dir.join("keep.txt"), "user data").unwrap();
+        clean_stale_artifacts(&dir, &plan).unwrap();
+        let left: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(left, vec!["keep.txt".to_string()]);
+
+        // Another plan's segments are sacred: the driver must refuse, not
+        // silently destroy a different run's collected (unmerged) work.
+        let foreign = dir.join("seg-deadbeefdeadbeef-s00000-w0000.seg");
+        std::fs::write(&foreign, "another run").unwrap();
+        let err = clean_stale_artifacts(&dir, &plan).unwrap_err();
+        assert!(err.to_string().contains("refusing to overwrite"), "{err}");
+        assert!(foreign.exists(), "foreign segment must survive");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

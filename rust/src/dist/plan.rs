@@ -1,0 +1,528 @@
+//! The shard plan: the sealed contract every process of a distributed
+//! run derives its work from.
+//!
+//! A [`ShardPlan`] fixes everything that determines the sampled output —
+//! the model, the seed, the sampler and piece/attribute modes, the shard
+//! count `S`, and the per-worker contiguous shard ranges. Workers never
+//! communicate: each one reloads the plan, re-runs the (bit-for-bit
+//! deterministic) setup pipeline, recomputes every job's source span, and
+//! keeps exactly the jobs the ownership rule assigns to it. The plan is
+//! serialized to a small TOML manifest (`plan.toml`) whose `[model]` and
+//! `[run]` sections reuse the config-file schema, plus a `[plan]` section
+//! carrying the shard topology and a content hash.
+//!
+//! # The plan hash
+//!
+//! [`ShardPlan::hash_hex`] digests the *output-determining* fields (model,
+//! seed, sampler, piece/attr mode, shard count, worker ranges) — not the
+//! wall-clock knobs (`workers`, `setup_threads`), which may legitimately
+//! differ per host. Every segment file a worker writes embeds the hash in
+//! its name, so the merge step can refuse to stitch segments produced
+//! under different plans, and `parse` refuses a manifest whose stored
+//! hash does not match its fields (a hand-edited plan must be regenerated
+//! with `magquilt shard-plan`, not patched).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{parse_attr_mode, parse_piece_mode, parse_toml, ModelSpec, RunSpec,
+                    SamplerKind, TomlValue};
+use crate::coordinator::MAX_SHARDS;
+use crate::graph::ShardSpec;
+use crate::magm::AttrSampleMode;
+use crate::quilt::PieceMode;
+
+/// Manifest format version this build writes and accepts.
+pub const PLAN_FORMAT: i64 = 1;
+
+/// FNV-1a 64 over a canonical byte string — deliberately dependency-free
+/// and platform-stable, so plans hashed on one host validate on another.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Required key lookup inside one parsed manifest section.
+fn required<'a>(
+    sec: &'a BTreeMap<String, TomlValue>,
+    section: &str,
+    key: &str,
+) -> Result<&'a TomlValue> {
+    sec.get(key).ok_or_else(|| anyhow!("plan manifest: missing {section}.{key}"))
+}
+
+/// Required non-negative integer array inside the `[plan]` section.
+fn required_index_array(
+    sec: &BTreeMap<String, TomlValue>,
+    key: &str,
+) -> Result<Vec<usize>> {
+    match required(sec, "plan", key)? {
+        TomlValue::Array(xs) => xs
+            .iter()
+            .map(|x| {
+                x.as_int()
+                    .filter(|&v| v >= 0)
+                    .map(|v| v as usize)
+                    .ok_or_else(|| anyhow!("plan.{key} must hold non-negative integers"))
+            })
+            .collect(),
+        _ => bail!("plan.{key} must be an array"),
+    }
+}
+
+/// The distributed run contract. See the [module docs](self).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPlan {
+    /// The MAGM model every worker samples from.
+    pub model: ModelSpec,
+    /// RNG seed (workers derive the same per-job forks the sequential
+    /// samplers use).
+    pub seed: u64,
+    /// Sampler (distributed mode supports the coordinated samplers:
+    /// quilt and hybrid).
+    pub sampler: SamplerKind,
+    /// How quilt pieces place balls.
+    pub piece_mode: PieceMode,
+    /// How the attribute assignment consumes randomness. Recorded
+    /// explicitly — resolved at plan time — so every worker draws the
+    /// identical assignment. Distributed plans default to
+    /// [`AttrSampleMode::Chunked`]: there are no legacy goldens to
+    /// protect, and chunked is what lets every worker's setup pipeline
+    /// parallelize.
+    pub attr_mode: AttrSampleMode,
+    /// Worker threads per process (0 = auto per host; wall-clock only).
+    pub workers: usize,
+    /// Setup-pipeline threads per process (0 = auto; wall-clock only).
+    pub setup_threads: usize,
+    /// Effective shard count S (already clamped to the merger cap and
+    /// the node count, so every process agrees without re-clamping).
+    pub num_shards: usize,
+    /// Per-worker contiguous shard ranges `[start, end)`, ascending and
+    /// partitioning `0..num_shards`. Worker `w` owns `ranges[w]`.
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Build a plan from a model + run spec for `dist_workers` processes.
+    ///
+    /// Shard count: `run.shards` if set, else `4 × dist_workers` (a few
+    /// shards per worker keeps the merge parallel and the segment files
+    /// conveniently sized) — clamped to the merger cap and the node
+    /// count. The worker count is then clamped to the shard count (a
+    /// worker owning zero shards would own zero jobs).
+    pub fn new(model: &ModelSpec, run: &RunSpec, dist_workers: usize) -> Result<ShardPlan> {
+        model.validate()?;
+        match run.sampler {
+            SamplerKind::Quilt | SamplerKind::Hybrid => {}
+            other => bail!(
+                "distributed sampling needs the quilt or hybrid sampler, not {}",
+                other.name()
+            ),
+        }
+        if dist_workers == 0 {
+            bail!("a distributed plan needs at least 1 worker");
+        }
+        let n = model.num_nodes();
+        let requested = if run.shards == 0 { dist_workers.saturating_mul(4) } else { run.shards };
+        let num_shards = requested.min(MAX_SHARDS).min(n).max(1);
+        // Clamps are surfaced, never silent — the same invariant the
+        // single-process run_with_sink maintains (PR 4). Workers see the
+        // pre-clamped count, so their own warning can never fire.
+        if run.shards > MAX_SHARDS {
+            eprintln!(
+                "warning: {requested} shards requested but the merger cap is {MAX_SHARDS}; \
+                 planning {num_shards}"
+            );
+        } else if run.shards != 0 && num_shards < requested {
+            eprintln!(
+                "warning: {requested} shards requested for {n} nodes; planning {num_shards} \
+                 (shards beyond the node count would stay empty)"
+            );
+        }
+        let w = dist_workers.min(num_shards);
+        if w < dist_workers {
+            eprintln!(
+                "warning: {dist_workers} workers requested for {num_shards} shard(s); \
+                 planning {w} (a worker must own at least one shard)"
+            );
+        }
+        // Balanced contiguous ranges: worker w owns [wS/W, (w+1)S/W).
+        let ranges: Vec<(usize, usize)> = (0..w)
+            .map(|i| (i * num_shards / w, (i + 1) * num_shards / w))
+            .collect();
+        Ok(ShardPlan {
+            model: model.clone(),
+            seed: run.seed,
+            sampler: run.sampler,
+            piece_mode: run.piece_mode,
+            attr_mode: run.attr_mode.unwrap_or(AttrSampleMode::Chunked),
+            workers: run.workers,
+            setup_threads: run.setup_threads,
+            num_shards,
+            ranges,
+        })
+    }
+
+    /// Number of worker processes.
+    pub fn num_workers(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The shard range `[start, end)` worker `w` owns.
+    pub fn worker_range(&self, w: usize) -> Result<(usize, usize)> {
+        self.ranges.get(w).copied().ok_or_else(|| {
+            anyhow!("worker index {w} out of range for {} workers", self.num_workers())
+        })
+    }
+
+    /// The worker owning shard `s`. Ranges are contiguous and ascending,
+    /// so this is a binary search.
+    pub fn owner_of_shard(&self, s: usize) -> usize {
+        debug_assert!(s < self.num_shards, "shard {s} out of range");
+        match self.ranges.binary_search_by(|&(start, _)| start.cmp(&s)) {
+            Ok(w) => w,
+            Err(w) => w - 1,
+        }
+    }
+
+    /// The source-range spec every process routes with. `num_shards` is
+    /// pre-clamped, so this reconstructs identically everywhere.
+    pub fn shard_spec(&self) -> ShardSpec {
+        ShardSpec::new(self.model.num_nodes(), self.num_shards)
+    }
+
+    /// Canonical byte string of the output-determining fields.
+    fn canonical(&self) -> String {
+        format!(
+            "magquilt-plan-v{PLAN_FORMAT}|theta={:?}|mu={:?}|log2_nodes={}|attributes={}\
+             |seed={}|sampler={}|piece_mode={}|attr_mode={}|shards={}|ranges={:?}",
+            self.model.theta,
+            self.model.mu,
+            self.model.log2_nodes,
+            self.model.attributes,
+            self.seed,
+            self.sampler.name(),
+            self.piece_mode.name(),
+            self.attr_mode.name(),
+            self.num_shards,
+            self.ranges,
+        )
+    }
+
+    /// 64-bit content hash of the output-determining fields.
+    pub fn hash64(&self) -> u64 {
+        fnv1a64(self.canonical().as_bytes())
+    }
+
+    /// The hash as the 16-hex-digit tag embedded in segment file names.
+    pub fn hash_hex(&self) -> String {
+        format!("{:016x}", self.hash64())
+    }
+
+    /// Serialize to the plan manifest (TOML subset, self-describing).
+    pub fn to_toml(&self) -> String {
+        let starts: Vec<String> = self.ranges.iter().map(|r| r.0.to_string()).collect();
+        let ends: Vec<String> = self.ranges.iter().map(|r| r.1.to_string()).collect();
+        format!(
+            "# magquilt distributed shard plan (generated by `magquilt shard-plan`;\n\
+             # the hash seals the output-determining fields — regenerate, don't edit)\n\
+             \n\
+             [plan]\n\
+             format = {PLAN_FORMAT}\n\
+             hash = \"{hash}\"\n\
+             shards = {shards}\n\
+             shard_starts = [{starts}]\n\
+             shard_ends = [{ends}]\n\
+             \n\
+             [model]\n\
+             theta = [{t0:?}, {t1:?}, {t2:?}, {t3:?}]\n\
+             mu = {mu:?}\n\
+             log2_nodes = {log2n}\n\
+             attributes = {attrs}\n\
+             \n\
+             [run]\n\
+             seed = {seed}\n\
+             sampler = \"{sampler}\"\n\
+             piece_mode = \"{piece}\"\n\
+             attr_mode = \"{attr}\"\n\
+             workers = {workers}\n\
+             setup_threads = {setup}\n",
+            hash = self.hash_hex(),
+            shards = self.num_shards,
+            starts = starts.join(", "),
+            ends = ends.join(", "),
+            t0 = self.model.theta[0],
+            t1 = self.model.theta[1],
+            t2 = self.model.theta[2],
+            t3 = self.model.theta[3],
+            mu = self.model.mu,
+            log2n = self.model.log2_nodes,
+            attrs = self.model.attributes,
+            seed = self.seed,
+            sampler = self.sampler.name(),
+            piece = self.piece_mode.name(),
+            attr = self.attr_mode.name(),
+            workers = self.workers,
+            setup = self.setup_threads,
+        )
+    }
+
+    /// Parse a plan manifest, validating structure and the sealed hash.
+    pub fn parse(text: &str) -> Result<ShardPlan> {
+        let map = parse_toml(text)?;
+        let plan_sec = map.get("plan").ok_or_else(|| anyhow!("plan manifest: missing [plan]"))?;
+        let format = required(plan_sec, "plan", "format")?
+            .as_int()
+            .ok_or_else(|| anyhow!("plan.format must be an integer"))?;
+        if format != PLAN_FORMAT {
+            bail!("plan format {format} not supported (this build reads format {PLAN_FORMAT})");
+        }
+        let stored_hash = required(plan_sec, "plan", "hash")?
+            .as_str()
+            .ok_or_else(|| anyhow!("plan.hash must be a string"))?
+            .to_string();
+        let num_shards = required(plan_sec, "plan", "shards")?
+            .as_int()
+            .ok_or_else(|| anyhow!("plan.shards must be an integer"))? as usize;
+        let starts = required_index_array(plan_sec, "shard_starts")?;
+        let ends = required_index_array(plan_sec, "shard_ends")?;
+        if starts.len() != ends.len() || starts.is_empty() {
+            bail!(
+                "plan worker ranges malformed: {} starts vs {} ends",
+                starts.len(),
+                ends.len()
+            );
+        }
+        let ranges: Vec<(usize, usize)> = starts.into_iter().zip(ends).collect();
+
+        let model = ModelSpec::from_section(map.get("model"))?;
+        let run_sec =
+            map.get("run").ok_or_else(|| anyhow!("plan manifest: missing [run]"))?;
+        let seed = required(run_sec, "run", "seed")?
+            .as_int()
+            .ok_or_else(|| anyhow!("run.seed must be an integer"))? as u64;
+        let sampler = SamplerKind::parse(
+            required(run_sec, "run", "sampler")?
+                .as_str()
+                .ok_or_else(|| anyhow!("run.sampler must be a string"))?,
+        )?;
+        let piece_mode = parse_piece_mode(
+            required(run_sec, "run", "piece_mode")?
+                .as_str()
+                .ok_or_else(|| anyhow!("run.piece_mode must be a string"))?,
+        )?;
+        let attr_mode = parse_attr_mode(
+            required(run_sec, "run", "attr_mode")?
+                .as_str()
+                .ok_or_else(|| anyhow!("run.attr_mode must be a string"))?,
+        )?;
+        // Per-host knobs are hash-exempt (editing them is the supported
+        // way to tune a host), so they must be validated on their own: a
+        // negative value would wrap to ~2^64 threads.
+        let workers = required(run_sec, "run", "workers")?
+            .as_int()
+            .filter(|&v| v >= 0)
+            .ok_or_else(|| anyhow!("run.workers must be a non-negative integer"))?
+            as usize;
+        let setup_threads = required(run_sec, "run", "setup_threads")?
+            .as_int()
+            .filter(|&v| v >= 0)
+            .ok_or_else(|| anyhow!("run.setup_threads must be a non-negative integer"))?
+            as usize;
+
+        let plan = ShardPlan {
+            model,
+            seed,
+            sampler,
+            piece_mode,
+            attr_mode,
+            workers,
+            setup_threads,
+            num_shards,
+            ranges,
+        };
+        plan.validate()?;
+        if plan.hash_hex() != stored_hash {
+            bail!(
+                "plan hash mismatch: manifest says {stored_hash} but the fields hash to {} \
+                 (edited by hand? regenerate with `magquilt shard-plan`)",
+                plan.hash_hex()
+            );
+        }
+        Ok(plan)
+    }
+
+    /// Structural validation (ranges partition `0..S`, sampler legal).
+    pub fn validate(&self) -> Result<()> {
+        self.model.validate()?;
+        match self.sampler {
+            SamplerKind::Quilt | SamplerKind::Hybrid => {}
+            other => bail!("distributed plan carries unsupported sampler {}", other.name()),
+        }
+        if self.num_shards == 0 || self.num_shards > MAX_SHARDS {
+            bail!("plan shard count {} outside [1, {MAX_SHARDS}]", self.num_shards);
+        }
+        if self.num_shards > self.model.num_nodes() {
+            bail!(
+                "plan has {} shards for {} nodes (shards beyond the node count stay empty)",
+                self.num_shards,
+                self.model.num_nodes()
+            );
+        }
+        let mut expect = 0usize;
+        for (w, &(start, end)) in self.ranges.iter().enumerate() {
+            if start != expect || end < start {
+                bail!(
+                    "worker {w} range [{start}, {end}) does not continue the partition at {expect}"
+                );
+            }
+            expect = end;
+        }
+        if expect != self.num_shards {
+            bail!(
+                "worker ranges cover {expect} shards but the plan has {}",
+                self.num_shards
+            );
+        }
+        Ok(())
+    }
+
+    /// Write the manifest to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_toml())
+            .with_context(|| format!("writing plan manifest {}", path.display()))
+    }
+
+    /// Load and validate a manifest from `path`.
+    pub fn load(path: &Path) -> Result<ShardPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan manifest {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing plan manifest {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(log2n: u32) -> ModelSpec {
+        let mut m = ModelSpec::default_spec();
+        m.log2_nodes = log2n;
+        m.attributes = log2n;
+        m
+    }
+
+    #[test]
+    fn plan_roundtrips_through_toml() {
+        let mut run = RunSpec::default_spec();
+        run.seed = 17;
+        run.shards = 6;
+        run.sampler = SamplerKind::Hybrid;
+        run.piece_mode = PieceMode::Rejection;
+        let plan = ShardPlan::new(&model(9), &run, 4).unwrap();
+        let text = plan.to_toml();
+        let back = ShardPlan::parse(&text).unwrap();
+        assert_eq!(back, plan, "parse(to_toml(plan)) must be the identical plan");
+        assert_eq!(back.hash_hex(), plan.hash_hex());
+    }
+
+    #[test]
+    fn plan_defaults_to_chunked_attrs() {
+        // Dist mode has no legacy goldens to protect: unset attr_mode
+        // resolves to chunked so every worker's setup pipeline
+        // parallelizes. An explicit choice is honored and recorded.
+        let run = RunSpec::default_spec();
+        assert_eq!(run.attr_mode, None);
+        let plan = ShardPlan::new(&model(8), &run, 2).unwrap();
+        assert_eq!(plan.attr_mode, AttrSampleMode::Chunked);
+        let mut run = RunSpec::default_spec();
+        run.attr_mode = Some(AttrSampleMode::Sequential);
+        let plan = ShardPlan::new(&model(8), &run, 2).unwrap();
+        assert_eq!(plan.attr_mode, AttrSampleMode::Sequential);
+        // And the manifest round-trips the recorded mode.
+        assert_eq!(ShardPlan::parse(&plan.to_toml()).unwrap().attr_mode, plan.attr_mode);
+    }
+
+    #[test]
+    fn ranges_partition_shards() {
+        for (w, s) in [(1usize, 8usize), (2, 8), (3, 8), (4, 6), (8, 8)] {
+            let mut run = RunSpec::default_spec();
+            run.shards = s;
+            let plan = ShardPlan::new(&model(10), &run, w).unwrap();
+            assert_eq!(plan.num_shards, s);
+            assert_eq!(plan.num_workers(), w.min(s));
+            // Every shard owned by exactly the worker whose range holds it.
+            for shard in 0..s {
+                let owner = plan.owner_of_shard(shard);
+                let (start, end) = plan.worker_range(owner).unwrap();
+                assert!((start..end).contains(&shard), "shard {shard} owner {owner}");
+            }
+            plan.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn auto_shards_scale_with_workers_and_clamp() {
+        let plan = ShardPlan::new(&model(10), &RunSpec::default_spec(), 3).unwrap();
+        assert_eq!(plan.num_shards, 12, "auto = 4 x dist_workers");
+        // Tiny graph: shards clamp to n, workers clamp to shards.
+        let plan = ShardPlan::new(&model(1), &RunSpec::default_spec(), 5).unwrap();
+        assert_eq!(plan.num_shards, 2);
+        assert_eq!(plan.num_workers(), 2);
+    }
+
+    #[test]
+    fn hash_ignores_wall_clock_knobs_but_seals_output_fields() {
+        let mut run = RunSpec::default_spec();
+        run.shards = 4;
+        let base = ShardPlan::new(&model(9), &run, 2).unwrap();
+        // workers / setup_threads never change the sampled output, so two
+        // plans differing only there produce interchangeable segments.
+        run.workers = 7;
+        run.setup_threads = 3;
+        let same = ShardPlan::new(&model(9), &run, 2).unwrap();
+        assert_eq!(base.hash_hex(), same.hash_hex());
+        // The seed does change the output.
+        run.seed = 43;
+        let other = ShardPlan::new(&model(9), &run, 2).unwrap();
+        assert_ne!(base.hash_hex(), other.hash_hex());
+    }
+
+    #[test]
+    fn tampered_manifest_is_rejected() {
+        let plan = ShardPlan::new(&model(8), &RunSpec::default_spec(), 2).unwrap();
+        let text = plan.to_toml().replace("seed = 42", "seed = 43");
+        let err = ShardPlan::parse(&text).unwrap_err();
+        assert!(err.to_string().contains("hash mismatch"), "{err}");
+        // Garbage and missing sections are structured errors too.
+        assert!(ShardPlan::parse("[plan]\nformat = 1\n").is_err());
+        assert!(ShardPlan::parse("").is_err());
+        let future = plan.to_toml().replace("format = 1", "format = 99");
+        assert!(ShardPlan::parse(&future).unwrap_err().to_string().contains("format"));
+    }
+
+    #[test]
+    fn negative_host_knobs_are_rejected() {
+        // workers/setup_threads are hash-exempt (per-host tuning is the
+        // supported edit), so a negative value is caught by validation,
+        // not the seal — it must not wrap into ~2^64 threads.
+        let plan = ShardPlan::new(&model(8), &RunSpec::default_spec(), 2).unwrap();
+        let text = plan.to_toml().replace("workers = 0", "workers = -1");
+        let err = ShardPlan::parse(&text).unwrap_err();
+        assert!(err.to_string().contains("non-negative"), "{err}");
+        let text = plan.to_toml().replace("setup_threads = 0", "setup_threads = -3");
+        assert!(ShardPlan::parse(&text).is_err());
+    }
+
+    #[test]
+    fn naive_samplers_are_rejected() {
+        let mut run = RunSpec::default_spec();
+        run.sampler = SamplerKind::Naive;
+        assert!(ShardPlan::new(&model(8), &run, 2).is_err());
+    }
+}

@@ -1,0 +1,418 @@
+//! The distributed worker: one process, one contiguous shard range.
+//!
+//! `magquilt shard-worker --plan plan.toml --worker i` reloads the
+//! [`ShardPlan`], re-runs the full deterministic setup pipeline
+//! (attributes → partition → tries → product DAG — bit-for-bit identical
+//! on every host), recomputes every job's source span, keeps exactly the
+//! jobs the **ownership rule** assigns to worker `i`, and executes them
+//! through the ordinary pooled coordinator. The only distributed part is
+//! the sink: a [`SegmentSink`] that writes each finished shard to its own
+//! `MAGQEDG1` file instead of one growing output.
+//!
+//! # Ownership rule
+//!
+//! A job belongs to the worker owning the **first shard of its source
+//! span** (`owner_of_shard(span.lo)`; the rare job with no source nodes
+//! belongs to worker 0). Since spans are recomputed identically from the
+//! plan by every process, each job is assigned to exactly one worker with
+//! no coordination. The heavy jobs — small high-multiplicity attribute
+//! sets — have narrow spans and land wholly inside one worker's range;
+//! wide-span jobs (`D_1`, light ER blocks) necessarily sample some edges
+//! whose source shard belongs to *another* worker. Those edges route to
+//! this process's merger for the foreign shard as usual and emerge as an
+//! **overflow segment** for that shard, which the merge step folds into
+//! the owner's segment later.
+//!
+//! # What a worker writes into the segment directory
+//!
+//! * one `seg-<hash>-s<shard>-w<worker>.seg` per **owned** shard (even
+//!   when empty — emptiness is information; a *missing* owner segment
+//!   means an incomplete run and fails the merge), and
+//! * one `ovf-<hash>-s<shard>-w<worker>.ovf` per **foreign** shard this
+//!   worker sampled any edges for.
+//!
+//! Both are complete `MAGQEDG1` files (header + sorted deduplicated
+//! records), written to a pid+nonce temp name and atomically renamed, so
+//! a crashed worker can never leave a half-written file under a final
+//! name — and any number of workers can share the directory.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SamplerKind;
+use crate::coordinator::{Coordinator, RunStats};
+use crate::graph::{unique_temp_path, BinaryEdgeWriter, Edge, EdgeSink, ShardDisposition};
+use crate::kpgm::Initiator;
+use crate::magm::{AttributeAssignment, MagmParams};
+use crate::rng::Rng;
+
+use super::plan::ShardPlan;
+
+/// File name of the owner segment for `shard` written by `worker`.
+pub fn segment_file_name(hash_hex: &str, shard: usize, worker: usize) -> String {
+    format!("seg-{hash_hex}-s{shard:05}-w{worker:04}.seg")
+}
+
+/// File name of the overflow segment for foreign `shard` written by
+/// `worker`.
+pub fn overflow_file_name(hash_hex: &str, shard: usize, worker: usize) -> String {
+    format!("ovf-{hash_hex}-s{shard:05}-w{worker:04}.ovf")
+}
+
+/// What kind of segment a file in the segment directory holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentKind {
+    /// The owner's post-merge run for a shard it owns.
+    Owned,
+    /// A foreign worker's edges for a shard it does not own.
+    Overflow,
+}
+
+/// Parsed identity of one segment-directory file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentFileInfo {
+    /// Owned segment or overflow run.
+    pub kind: SegmentKind,
+    /// The plan hash embedded in the name.
+    pub hash_hex: String,
+    /// Shard index the records belong to.
+    pub shard: usize,
+    /// Worker process that wrote the file.
+    pub worker: usize,
+}
+
+/// Parse a segment-directory file name produced by [`segment_file_name`]
+/// / [`overflow_file_name`]. Returns `None` for anything else.
+pub fn parse_segment_file_name(name: &str) -> Option<SegmentFileInfo> {
+    let (kind, rest) = if let Some(r) = name.strip_prefix("seg-") {
+        (SegmentKind::Owned, r.strip_suffix(".seg")?)
+    } else if let Some(r) = name.strip_prefix("ovf-") {
+        (SegmentKind::Overflow, r.strip_suffix(".ovf")?)
+    } else {
+        return None;
+    };
+    let mut parts = rest.split('-');
+    let hash = parts.next()?;
+    if hash.len() != 16 || !hash.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    let shard = parts.next()?.strip_prefix('s')?.parse().ok()?;
+    let worker = parts.next()?.strip_prefix('w')?.parse().ok()?;
+    if parts.next().is_some() {
+        return None;
+    }
+    Some(SegmentFileInfo { kind, hash_hex: hash.to_string(), shard, worker })
+}
+
+/// What one worker produced: the counters the driver and tests assert on.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SegmentSummary {
+    /// Owned shards written as segment files (== the owned range width).
+    pub owned_segments: usize,
+    /// Edges across the owned segments.
+    pub owned_edges: u64,
+    /// Overflow files written for foreign shards.
+    pub overflow_files: usize,
+    /// Edges across the overflow files.
+    pub overflow_edges: u64,
+}
+
+/// [`crate::graph::EdgeSink`] that lands every finished shard in its own
+/// `MAGQEDG1` file: owned shards as `.seg`, non-empty foreign shards as
+/// `.ovf`. Order-indifferent by construction (each shard has its own
+/// file), so shards are consumed the moment they finish — no deferral, no
+/// spill.
+#[derive(Debug)]
+pub struct SegmentSink {
+    dir: PathBuf,
+    hash_hex: String,
+    worker: usize,
+    /// Owned shard range `[start, end)`.
+    owned: (usize, usize),
+    num_nodes: usize,
+    expected_shards: usize,
+    summary: SegmentSummary,
+}
+
+impl SegmentSink {
+    /// Sink for `worker` owning `owned`, writing into `dir` under the
+    /// plan hash `hash_hex`; the run must deliver exactly
+    /// `expected_shards` shards.
+    pub fn new(
+        dir: impl AsRef<Path>,
+        hash_hex: String,
+        worker: usize,
+        owned: (usize, usize),
+        expected_shards: usize,
+    ) -> Self {
+        SegmentSink {
+            dir: dir.as_ref().to_path_buf(),
+            hash_hex,
+            worker,
+            owned,
+            num_nodes: 0,
+            expected_shards,
+            summary: SegmentSummary::default(),
+        }
+    }
+
+    /// Write `run` as a complete `MAGQEDG1` file at `dir/name`, via a
+    /// pid+nonce temp name and an atomic rename.
+    fn write_segment(&self, name: &str, run: &[Edge]) -> io::Result<()> {
+        let tmp = unique_temp_path(&self.dir, "seg", "part");
+        let mut w = BinaryEdgeWriter::create(&tmp, self.num_nodes)?;
+        w.write_edges(run)?;
+        w.finalize(run.len() as u64)?;
+        let result = std::fs::rename(&tmp, self.dir.join(name));
+        if result.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        result
+    }
+}
+
+impl EdgeSink for SegmentSink {
+    type Output = SegmentSummary;
+
+    fn begin(&mut self, num_nodes: usize, num_shards: usize) -> io::Result<()> {
+        if num_shards != self.expected_shards {
+            return Err(io::Error::other(format!(
+                "coordinator resolved {num_shards} shards but the plan fixed {} — \
+                 plan and run disagree",
+                self.expected_shards
+            )));
+        }
+        self.num_nodes = num_nodes;
+        std::fs::create_dir_all(&self.dir)
+    }
+
+    fn accept_shard(&mut self, index: usize, run: Vec<Edge>) -> io::Result<ShardDisposition> {
+        if index >= self.expected_shards {
+            return Err(io::Error::other(format!("shard index {index} out of range")));
+        }
+        if (self.owned.0..self.owned.1).contains(&index) {
+            self.write_segment(&segment_file_name(&self.hash_hex, index, self.worker), &run)?;
+            self.summary.owned_segments += 1;
+            self.summary.owned_edges += run.len() as u64;
+        } else if !run.is_empty() {
+            // A foreign shard only gets a file when a wide-span owned job
+            // actually sampled edges there; an empty foreign delivery is
+            // the common case and writes nothing.
+            self.write_segment(&overflow_file_name(&self.hash_hex, index, self.worker), &run)?;
+            self.summary.overflow_files += 1;
+            self.summary.overflow_edges += run.len() as u64;
+        }
+        Ok(ShardDisposition::Streamed)
+    }
+
+    fn finalize(self) -> io::Result<SegmentSummary> {
+        let owned_width = self.owned.1 - self.owned.0;
+        if self.summary.owned_segments != owned_width {
+            return Err(io::Error::other(format!(
+                "worker {} wrote {} of its {owned_width} owned segments",
+                self.worker, self.summary.owned_segments
+            )));
+        }
+        Ok(self.summary)
+    }
+}
+
+/// What [`run_worker`] reports back to the driver / CLI.
+#[derive(Debug)]
+pub struct WorkerReport {
+    /// This worker's index.
+    pub worker: usize,
+    /// Owned shard range `[start, end)`.
+    pub owned: (usize, usize),
+    /// Jobs in the full plan (identical on every worker).
+    pub jobs_total: usize,
+    /// Jobs this worker owned and executed.
+    pub jobs_run: usize,
+    /// Files + edge counters of what was written.
+    pub summary: SegmentSummary,
+    /// The underlying coordinated-run statistics.
+    pub stats: RunStats,
+}
+
+/// Model parameters for a plan's model spec.
+pub fn plan_params(plan: &ShardPlan) -> MagmParams {
+    MagmParams::homogeneous(
+        Initiator::new(plan.model.theta),
+        plan.model.mu,
+        plan.model.num_nodes(),
+        plan.model.attributes,
+    )
+}
+
+/// Setup-thread count for attribute sampling (wall-clock only — chunked
+/// draws are bit-for-bit identical for any count).
+fn resolved_threads(plan: &ShardPlan) -> usize {
+    if plan.setup_threads != 0 {
+        plan.setup_threads
+    } else if plan.workers != 0 {
+        plan.workers
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(16)
+    }
+}
+
+/// Build the full (unfiltered) deterministic job plan every worker
+/// derives from `plan` — the shared object the ownership rule partitions.
+pub fn build_job_plan(
+    plan: &ShardPlan,
+    coord: &Coordinator,
+) -> (crate::coordinator::JobPlan, AttributeAssignment) {
+    let params = plan_params(plan);
+    let mut rng = Rng::new(plan.seed);
+    let attrs = AttributeAssignment::sample_with_mode(
+        &params,
+        &mut rng,
+        plan.attr_mode,
+        resolved_threads(plan),
+    );
+    let job_plan = match plan.sampler {
+        SamplerKind::Hybrid => coord.plan_hybrid(&params, &attrs, plan.seed),
+        _ => coord.plan_quilt(&params, &attrs, plan.seed),
+    };
+    (job_plan, attrs)
+}
+
+/// The owner worker of every job in `job_plan` under `plan`'s ownership
+/// rule: the worker owning the first shard of the job's source span (a
+/// job with no source nodes emits nothing and belongs to worker 0).
+pub fn job_owners(plan: &ShardPlan, job_plan: &crate::coordinator::JobPlan) -> Vec<usize> {
+    let spec = plan.shard_spec();
+    job_plan
+        .job_source_spans(&spec)
+        .into_iter()
+        .map(|span| span.map(|(lo, _)| plan.owner_of_shard(lo)).unwrap_or(0))
+        .collect()
+}
+
+/// A coordinator configured exactly as `plan` prescribes.
+pub fn plan_coordinator(plan: &ShardPlan) -> Coordinator {
+    Coordinator::new()
+        .workers(plan.workers)
+        .shards(plan.num_shards)
+        .setup_threads(plan.setup_threads)
+        .attr_mode(plan.attr_mode)
+        .piece_mode(plan.piece_mode)
+}
+
+/// Execute worker `worker`'s slice of `plan`, writing segment and
+/// overflow files into `segment_dir`. The whole deterministic prologue
+/// runs here (identically on every host); only the owned jobs sample.
+pub fn run_worker(plan: &ShardPlan, worker: usize, segment_dir: &Path) -> Result<WorkerReport> {
+    plan.validate()?;
+    let owned = plan.worker_range(worker)?;
+    let coord = plan_coordinator(plan);
+    let (mut job_plan, _attrs) = build_job_plan(plan, &coord);
+    let owners = job_owners(plan, &job_plan);
+    let jobs_total = job_plan.len();
+    job_plan.retain_jobs(|i| owners[i] == worker);
+    let jobs_run = job_plan.len();
+    let sink = SegmentSink::new(
+        segment_dir,
+        plan.hash_hex(),
+        worker,
+        owned,
+        plan.num_shards,
+    );
+    let (summary, stats) = coord
+        .run_with_sink(job_plan, sink)
+        .with_context(|| format!("worker {worker} sampling its job slice"))?;
+    if stats.num_shards != plan.num_shards {
+        bail!(
+            "worker {worker} ran with {} shards but the plan fixed {}",
+            stats.num_shards,
+            plan.num_shards
+        );
+    }
+    Ok(WorkerReport { worker, owned, jobs_total, jobs_run, summary, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_names_roundtrip() {
+        let hash = "00ff00ff00ff00ff";
+        let seg = segment_file_name(hash, 3, 1);
+        assert_eq!(seg, "seg-00ff00ff00ff00ff-s00003-w0001.seg");
+        let info = parse_segment_file_name(&seg).unwrap();
+        assert_eq!(info.kind, SegmentKind::Owned);
+        assert_eq!((info.shard, info.worker), (3, 1));
+        assert_eq!(info.hash_hex, hash);
+        let ovf = overflow_file_name(hash, 250, 0);
+        let info = parse_segment_file_name(&ovf).unwrap();
+        assert_eq!(info.kind, SegmentKind::Overflow);
+        assert_eq!((info.shard, info.worker), (250, 0));
+    }
+
+    #[test]
+    fn foreign_names_are_rejected() {
+        for name in [
+            "plan.toml",
+            "seg-xyz-s00001-w0000.seg",
+            "seg-00ff00ff00ff00ff-s1-w0.bin",
+            "ovf-00ff00ff00ff00ff-s00001.ovf",
+            "magquilt-tmp-12-00ff00ff00ff00ff-0-seg.part",
+            "seg-00ff00ff00ff00ff-s00001-w0000-extra.seg",
+        ] {
+            assert!(parse_segment_file_name(name).is_none(), "{name}");
+        }
+    }
+
+    #[test]
+    fn segment_sink_routes_owned_and_overflow() {
+        let dir = std::env::temp_dir().join("magquilt_segment_sink_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let hash = "0123456789abcdef".to_string();
+        let mut sink = SegmentSink::new(&dir, hash.clone(), 1, (1, 3), 4);
+        sink.begin(16, 4).unwrap();
+        // Foreign empty: no file. Foreign non-empty: overflow file.
+        sink.accept_shard(0, Vec::new()).unwrap();
+        sink.accept_shard(3, vec![(12, 0), (13, 5)]).unwrap();
+        // Owned shards always get a segment, even empty.
+        sink.accept_shard(1, vec![(4, 4)]).unwrap();
+        sink.accept_shard(2, Vec::new()).unwrap();
+        let summary = sink.finalize().unwrap();
+        assert_eq!(summary.owned_segments, 2);
+        assert_eq!(summary.owned_edges, 1);
+        assert_eq!(summary.overflow_files, 1);
+        assert_eq!(summary.overflow_edges, 2);
+        assert!(dir.join(segment_file_name(&hash, 1, 1)).exists());
+        assert!(dir.join(segment_file_name(&hash, 2, 1)).exists());
+        assert!(dir.join(overflow_file_name(&hash, 3, 1)).exists());
+        assert!(!dir.join(overflow_file_name(&hash, 0, 1)).exists());
+        // Segments are complete, individually valid MAGQEDG1 files.
+        let seg = crate::graph::read_edge_list_binary(&dir.join(segment_file_name(&hash, 1, 1)))
+            .unwrap();
+        assert_eq!(seg.num_nodes(), 16);
+        assert_eq!(seg.edges(), &[(4, 4)]);
+        // No temp files left behind.
+        let leftovers = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().starts_with("magquilt-tmp-")
+            })
+            .count();
+        assert_eq!(leftovers, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segment_sink_missing_owned_shard_fails_finalize() {
+        let dir = std::env::temp_dir().join("magquilt_segment_sink_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut sink = SegmentSink::new(&dir, "0123456789abcdef".into(), 0, (0, 2), 2);
+        sink.begin(8, 2).unwrap();
+        sink.accept_shard(0, vec![(0, 1)]).unwrap();
+        // Shard 1 never delivered: the summary must not pretend success.
+        assert!(sink.finalize().is_err());
+    }
+}

@@ -7,7 +7,10 @@ use std::path::Path;
 
 use super::{Edge, EdgeList};
 
-const BINARY_MAGIC: &[u8; 8] = b"MAGQEDG1";
+/// Magic bytes opening every `MAGQEDG1` file — public so callers (the
+/// CLI's format sniffing) can recognize the format without relying on
+/// file extensions.
+pub const BINARY_MAGIC: &[u8; 8] = b"MAGQEDG1";
 /// Header bytes: magic (8) + n (u64) + m (u64).
 const BINARY_HEADER_LEN: u64 = 24;
 /// Byte offset of the edge count in the header (for back-patching).

@@ -15,11 +15,12 @@ mod spill;
 pub use algorithms::{clustering_coefficient, largest_scc_size, largest_wcc_size, scc_sizes};
 pub use csr::Csr;
 pub use edgelist::EdgeList;
-pub use io::{read_edge_list_text, write_edge_list_binary, write_edge_list_text, read_edge_list_binary};
+pub use io::{read_edge_list_binary, read_edge_list_text, write_edge_list_binary,
+             write_edge_list_text, BinaryEdgeWriter, BINARY_MAGIC};
 pub use sink::{summarize_spill, BinaryFileSink, CollectSink, CountingSink, DegreeCounts,
                EdgeSink, ShardDisposition, ShardMergeStats, ShardMerger, ShardSpec,
                SpillSummary, DEFAULT_SPILL_BUDGET};
-pub use spill::{unique_spill_path, SpillRun, SpillWriter};
+pub use spill::{run_nonce, unique_spill_path, unique_temp_path, SpillRun, SpillWriter};
 
 /// Node identifier. u32 covers n up to 4.29e9, well past the paper's 2^23.
 pub type NodeId = u32;

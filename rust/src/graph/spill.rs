@@ -18,6 +18,7 @@ use std::fs::File;
 use std::io::{self, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use super::io::{write_edge_records, BINARY_EDGE_LEN};
 use super::Edge;
@@ -29,14 +30,46 @@ pub const SPILL_EDGE_LEN: u64 = BINARY_EDGE_LEN;
 /// Edges read back per chunk when draining a spill run (1 MiB buffers).
 pub const SPILL_READ_CHUNK: usize = 128 * 1024;
 
-/// A process-unique spill path inside `dir`, tagged for debuggability
-/// (the tag names the shard). Uniqueness combines the pid with a
-/// process-wide counter so concurrent sinks sharing a spill dir never
-/// collide.
-pub fn unique_spill_path(dir: &Path, tag: &str) -> PathBuf {
+/// A per-process run nonce mixed into every temp-file name. The pid alone
+/// is not enough once multiple worker *processes* share one spill or
+/// segment directory: pids recycle between runs, and on a shared
+/// filesystem two hosts can hold the same pid simultaneously. The nonce
+/// folds in the process start time, so a recycled pid still gets fresh
+/// names and a crashed run's leftovers can never be mistaken for (or
+/// clobbered by) a live run's files.
+pub fn run_nonce() -> u64 {
+    static NONCE: OnceLock<u64> = OnceLock::new();
+    *NONCE.get_or_init(|| {
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        // SplitMix64-style finalization over (pid, start-time nanos).
+        let mut h = t ^ (u64::from(std::process::id())).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        h = (h ^ (h >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        h ^ (h >> 31)
+    })
+}
+
+/// A process-unique temp path inside `dir`: pid + run nonce + a
+/// process-wide counter, tagged for debuggability. Safe for any number of
+/// processes (even across hosts on a shared filesystem) to use against
+/// the same directory — the shared naming scheme behind spill runs and
+/// the distributed runtime's in-flight segment files.
+pub fn unique_temp_path(dir: &Path, tag: &str, ext: &str) -> PathBuf {
     static SEQ: AtomicU64 = AtomicU64::new(0);
     let seq = SEQ.fetch_add(1, Ordering::Relaxed);
-    dir.join(format!("magquilt-spill-{}-{seq}-{tag}.run", std::process::id()))
+    dir.join(format!(
+        "magquilt-tmp-{}-{:016x}-{seq}-{tag}.{ext}",
+        std::process::id(),
+        run_nonce(),
+    ))
+}
+
+/// A process-unique spill path inside `dir` (the tag names the shard).
+pub fn unique_spill_path(dir: &Path, tag: &str) -> PathBuf {
+    unique_temp_path(dir, tag, "run")
 }
 
 /// Streaming writer for one spill run.
@@ -233,6 +266,20 @@ mod tests {
         let a = unique_spill_path(&dir, "shard0");
         let b = unique_spill_path(&dir, "shard0");
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn temp_names_carry_pid_and_run_nonce() {
+        // Multiple worker processes share one --spill-dir / segment dir:
+        // names must embed both the pid and the per-run nonce so a
+        // recycled pid (or a second host on a shared filesystem) cannot
+        // collide with this run's files.
+        assert_eq!(run_nonce(), run_nonce(), "nonce is stable within a process");
+        let p = unique_temp_path(&tmp_dir(), "seg3", "part");
+        let name = p.file_name().unwrap().to_str().unwrap();
+        assert!(name.contains(&std::process::id().to_string()), "pid in {name}");
+        assert!(name.contains(&format!("{:016x}", run_nonce())), "nonce in {name}");
+        assert!(name.ends_with("-seg3.part"), "tag + extension in {name}");
     }
 
     #[test]

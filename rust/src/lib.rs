@@ -17,6 +17,10 @@
 //!   streams through a sharded streaming merge into pluggable
 //!   [`graph::EdgeSink`]s (in-memory, degree-counting, or direct-to-disk)
 //!   — [`coordinator`],
+//! * a distributed runtime that splits one run across worker processes —
+//!   shard-range ownership, per-shard `MAGQEDG1` segment files, and a
+//!   deterministic merge whose output is bit-for-bit the single-process
+//!   sampler's — [`dist`],
 //! * a PJRT runtime that loads the AOT-compiled JAX/Pallas edge-probability
 //!   kernels (`artifacts/*.hlo.txt`) and runs them from Rust — [`runtime`],
 //! * graph/RNG/statistics substrates and the experiment harnesses that
@@ -42,6 +46,7 @@
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod dist;
 pub mod experiments;
 pub mod fit;
 pub mod graph;

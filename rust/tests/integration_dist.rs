@@ -1,0 +1,391 @@
+//! Integration: the distributed sampling runtime end-to-end.
+//!
+//! The library-level tests drive the real worker + merge code paths
+//! in-process (every worker is just a function of the plan, so spawning
+//! OS processes adds nothing but flakiness there); the CLI tests at the
+//! bottom spawn the actual `magquilt` binary to cover the
+//! driver/subcommand surface, including true multi-process execution.
+
+use std::path::{Path, PathBuf};
+
+use magquilt::config::{ModelSpec, RunSpec, SamplerKind};
+use magquilt::coordinator::Coordinator;
+use magquilt::dist::{self, ShardPlan};
+use magquilt::graph::{read_edge_list_binary, BinaryFileSink, EdgeList};
+use magquilt::kpgm::Initiator;
+use magquilt::magm::{AttrSampleMode, AttributeAssignment, MagmParams};
+use magquilt::quilt::{HybridSampler, PieceMode, QuiltSampler};
+use magquilt::rng::Rng;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("magquilt_dist_test").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn model(log2n: u32, mu: f64) -> ModelSpec {
+    let mut m = ModelSpec::default_spec();
+    m.log2_nodes = log2n;
+    m.attributes = log2n;
+    m.mu = mu;
+    m
+}
+
+fn params_of(model: &ModelSpec) -> MagmParams {
+    MagmParams::homogeneous(
+        Initiator::new(model.theta),
+        model.mu,
+        model.num_nodes(),
+        model.attributes,
+    )
+}
+
+/// Run every worker of `plan` in-process, then merge into `out`.
+fn run_pipeline(plan: &ShardPlan, dir: &Path, out: &Path) -> dist::MergeReport {
+    for w in 0..plan.num_workers() {
+        let report = dist::run_worker(plan, w, dir).unwrap();
+        assert_eq!(report.worker, w);
+        assert_eq!(
+            report.summary.owned_segments,
+            report.owned.1 - report.owned.0,
+            "worker {w} wrote every owned shard"
+        );
+    }
+    dist::merge_segments(dir, plan, out, true).unwrap()
+}
+
+/// The sequential baseline a distributed run must reproduce bit-for-bit:
+/// the plain single-threaded sampler fed the plan's (chunked) attributes.
+fn sequential_baseline(plan: &ShardPlan) -> EdgeList {
+    let params = params_of(&plan.model);
+    let attrs = match plan.attr_mode {
+        AttrSampleMode::Chunked => {
+            AttributeAssignment::sample_chunked(&params, &Rng::new(plan.seed), 1)
+        }
+        AttrSampleMode::Sequential => {
+            AttributeAssignment::sample(&params, &mut Rng::new(plan.seed))
+        }
+    };
+    match plan.sampler {
+        SamplerKind::Hybrid => HybridSampler::new(params)
+            .piece_mode(plan.piece_mode)
+            .seed(plan.seed)
+            .sample_with_attrs(&attrs),
+        _ => QuiltSampler::new(params)
+            .piece_mode(plan.piece_mode)
+            .seed(plan.seed)
+            .sample_with_attrs(&attrs),
+    }
+}
+
+#[test]
+fn distributed_equals_sequential_bit_for_bit() {
+    // The acceptance matrix: W ∈ {1, 2, 4} worker processes × both
+    // samplers × both piece modes must reproduce the sequential samplers'
+    // output exactly — same edges, same order — and the merged binary
+    // must be byte-identical to the single-process binary sink's file.
+    for (sampler, mu, seed) in
+        [(SamplerKind::Quilt, 0.5, 17u64), (SamplerKind::Hybrid, 0.85, 23)]
+    {
+        let m = model(8, mu);
+        let mut run = RunSpec::default_spec();
+        run.sampler = sampler;
+        run.seed = seed;
+        run.shards = 5; // deliberately uneven across {1, 2, 4} workers
+        for mode in [PieceMode::Conditioned, PieceMode::Rejection] {
+            run.piece_mode = mode;
+            let mut single_bytes: Option<Vec<u8>> = None;
+            for workers in [1usize, 2, 4] {
+                let tag = format!("{}_{mode:?}_{workers}", run.sampler.name());
+                let plan = ShardPlan::new(&m, &run, workers).unwrap();
+                assert_eq!(plan.num_workers(), workers);
+                let dir = tmp(&format!("eq_{tag}"));
+                let out = dir.join("merged.bin");
+                run_pipeline(&plan, &dir, &out);
+                let merged = read_edge_list_binary(&out).unwrap();
+                let seq = sequential_baseline(&plan);
+                assert_eq!(merged, seq, "{tag} vs sequential");
+
+                // Byte-for-byte against the single-process binary sink.
+                let single = single_bytes.get_or_insert_with(|| {
+                    let path = dir.join("single.bin");
+                    let coord = Coordinator::new()
+                        .shards(plan.num_shards)
+                        .attr_mode(plan.attr_mode)
+                        .piece_mode(plan.piece_mode);
+                    let params = params_of(&m);
+                    let sink = BinaryFileSink::create(&path);
+                    match sampler {
+                        SamplerKind::Hybrid => {
+                            coord.sample_hybrid_with_sink(&params, seed, sink).unwrap()
+                        }
+                        _ => coord.sample_quilt_with_sink(&params, seed, sink).unwrap(),
+                    };
+                    std::fs::read(&path).unwrap()
+                });
+                assert_eq!(
+                    &std::fs::read(&out).unwrap(),
+                    single,
+                    "{tag} merged file vs single-process bytes"
+                );
+                // The merge drained its inputs.
+                let leftover = std::fs::read_dir(&dir)
+                    .unwrap()
+                    .filter(|e| {
+                        let n = e.as_ref().unwrap().file_name();
+                        let n = n.to_string_lossy().into_owned();
+                        n.ends_with(".seg") || n.ends_with(".ovf")
+                    })
+                    .count();
+                assert_eq!(leftover, 0, "{tag} segment dir drained");
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_overflow_routes_cross_worker_edges() {
+    // With several narrow worker ranges, the multiplicity-1 set D_1 (and
+    // any other wide-span job) necessarily samples edges whose source
+    // shard belongs to another worker: those must surface as overflow
+    // files and still merge to the exact sequential output. The RNG is
+    // deterministic, so once a seed exercises the path it does forever.
+    let m = model(8, 0.5);
+    let mut run = RunSpec::default_spec();
+    run.shards = 8;
+    let mut saw_overflow = false;
+    for seed in [17u64, 18, 19] {
+        run.seed = seed;
+        let plan = ShardPlan::new(&m, &run, 4).unwrap();
+        let dir = tmp(&format!("overflow_{seed}"));
+        // Count overflow files before the merge consumes them.
+        for w in 0..plan.num_workers() {
+            dist::run_worker(&plan, w, &dir).unwrap();
+        }
+        let ovf_files = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().ends_with(".ovf")
+            })
+            .count();
+        let out = dir.join("merged.bin");
+        let report = dist::merge_segments(&dir, &plan, &out, true).unwrap();
+        assert_eq!(report.overflow_runs(), ovf_files);
+        assert_eq!(read_edge_list_binary(&out).unwrap(), sequential_baseline(&plan), "seed {seed}");
+        if ovf_files > 0 {
+            saw_overflow = true;
+        }
+    }
+    assert!(saw_overflow, "no seed exercised the overflow path — widen the sweep");
+}
+
+#[test]
+fn every_job_is_owned_exactly_once() {
+    // The span-ownership rule must partition the job set: each worker's
+    // filtered slice is disjoint from the others and their union is the
+    // whole plan — for both samplers and any worker count.
+    for (sampler, mu) in [(SamplerKind::Quilt, 0.5), (SamplerKind::Hybrid, 0.85)] {
+        let m = model(8, mu);
+        let mut run = RunSpec::default_spec();
+        run.sampler = sampler;
+        run.shards = 6;
+        for workers in [1usize, 2, 3, 4] {
+            let plan = ShardPlan::new(&m, &run, workers).unwrap();
+            let coord = dist::worker::plan_coordinator(&plan);
+            let (job_plan, _) = dist::worker::build_job_plan(&plan, &coord);
+            let owners = dist::job_owners(&plan, &job_plan);
+            assert_eq!(owners.len(), job_plan.len());
+            assert!(
+                owners.iter().all(|&o| o < plan.num_workers()),
+                "owner out of range ({} workers)",
+                plan.num_workers()
+            );
+            // Each job has exactly one owner by construction; the
+            // per-worker slice sizes must sum back to the plan.
+            let mut per_worker = vec![0usize; plan.num_workers()];
+            for &o in &owners {
+                per_worker[o] += 1;
+            }
+            assert_eq!(per_worker.iter().sum::<usize>(), job_plan.len(), "{sampler:?} W={workers}");
+            if workers == 1 {
+                assert_eq!(per_worker[0], job_plan.len(), "single worker owns everything");
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_manifest_roundtrips_through_disk() {
+    let m = model(9, 0.5);
+    let mut run = RunSpec::default_spec();
+    run.seed = 99;
+    run.shards = 7;
+    run.piece_mode = PieceMode::Rejection;
+    let plan = ShardPlan::new(&m, &run, 3).unwrap();
+    let dir = tmp("plan_roundtrip");
+    let path = dir.join("plan.toml");
+    plan.save(&path).unwrap();
+    let back = ShardPlan::load(&path).unwrap();
+    assert_eq!(back, plan);
+    // The reloaded plan produces the identical job assignment.
+    let coord = dist::worker::plan_coordinator(&plan);
+    let (jobs_a, _) = dist::worker::build_job_plan(&plan, &coord);
+    let (jobs_b, _) = dist::worker::build_job_plan(&back, &coord);
+    assert_eq!(dist::job_owners(&plan, &jobs_a), dist::job_owners(&back, &jobs_b));
+}
+
+#[test]
+fn stats_inspects_segment_directory_and_rejects_mixed_hashes() {
+    let m = model(8, 0.5);
+    let mut run = RunSpec::default_spec();
+    run.seed = 7;
+    run.shards = 4;
+    let plan = ShardPlan::new(&m, &run, 2).unwrap();
+    let dir = tmp("stats_dir");
+    plan.save(&dir.join(dist::PLAN_FILE)).unwrap();
+    for w in 0..plan.num_workers() {
+        dist::run_worker(&plan, w, &dir).unwrap();
+    }
+    // The stats CLI reads the directory (plan discovered at plan.toml).
+    magquilt::cli::run(&["stats".to_string(), dir.to_str().unwrap().to_string()]).unwrap();
+    // Validation numbers agree with a real merge (output outside the
+    // segment dir — the scan owns every name inside it).
+    let inspect = dist::validate_segments(&dir, &plan).unwrap();
+    let out = tmp("stats_dir_out").join("merged.bin");
+    let merged = dist::merge_segments(&dir, &plan, &out, false).unwrap();
+    assert_eq!(inspect.total_edges, merged.total_edges);
+    // Drop in a segment from a different plan: inspection must refuse.
+    let mut other_run = run.clone();
+    other_run.seed = 8;
+    let other = ShardPlan::new(&m, &other_run, 2).unwrap();
+    let stray = dir.join(dist::segment_file_name(&other.hash_hex(), 0, 0));
+    std::fs::write(&stray, b"whatever").unwrap();
+    assert!(dist::validate_segments(&dir, &plan).is_err(), "mixed plan hashes accepted");
+    assert!(
+        magquilt::cli::run(&["stats".to_string(), dir.to_str().unwrap().to_string()]).is_err()
+    );
+}
+
+#[test]
+fn stats_reads_binary_by_magic_not_extension() {
+    // A segment file is a complete MAGQEDG1 edge list under a .seg name:
+    // stats must recognize it by magic bytes.
+    let m = model(7, 0.5);
+    let mut run = RunSpec::default_spec();
+    run.shards = 2;
+    let plan = ShardPlan::new(&m, &run, 1).unwrap();
+    let dir = tmp("magic_sniff");
+    for w in 0..plan.num_workers() {
+        dist::run_worker(&plan, w, &dir).unwrap();
+    }
+    let seg = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .find(|p| p.extension().is_some_and(|e| e == "seg"))
+        .expect("worker wrote a segment");
+    magquilt::cli::run(&["stats".to_string(), seg.to_str().unwrap().to_string()]).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// True multi-process coverage: spawn the real magquilt binary.
+// ---------------------------------------------------------------------
+
+fn magquilt_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_magquilt")
+}
+
+fn run_bin(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(magquilt_bin())
+        .args(args)
+        .output()
+        .expect("spawning magquilt")
+}
+
+fn assert_success(out: &std::process::Output, what: &str) {
+    assert!(
+        out.status.success(),
+        "{what} failed: {}\n--- stdout\n{}\n--- stderr\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
+
+#[test]
+fn cli_driver_spawns_workers_and_matches_single_process() {
+    let dir = tmp("cli_driver");
+    let dist_out = dir.join("dist.bin");
+    let seg_dir = dir.join("segs");
+    let single_out = dir.join("single.bin");
+    let out = run_bin(&[
+        "sample", "--log2-nodes", "8", "--seed", "7", "--shards", "6",
+        "--dist-workers", "2",
+        "--segment-dir", seg_dir.to_str().unwrap(),
+        "--out", dist_out.to_str().unwrap(),
+    ]);
+    assert_success(&out, "dist driver");
+    // The single-process baseline with the dist default attribute mode.
+    let out = run_bin(&[
+        "sample", "--log2-nodes", "8", "--seed", "7", "--shards", "6",
+        "--attr-mode", "chunked", "--sink", "binary",
+        "--out", single_out.to_str().unwrap(),
+    ]);
+    assert_success(&out, "single-process baseline");
+    assert_eq!(
+        std::fs::read(&dist_out).unwrap(),
+        std::fs::read(&single_out).unwrap(),
+        "distributed output must be byte-identical to the single-process file"
+    );
+    // The driver drained (and removed) its segment directory.
+    assert!(
+        !seg_dir.exists() || std::fs::read_dir(&seg_dir).unwrap().next().is_none(),
+        "segment dir not drained"
+    );
+    // And the output validates through stats.
+    assert_success(&run_bin(&["stats", dist_out.to_str().unwrap()]), "stats re-read");
+}
+
+#[test]
+fn cli_standalone_worker_and_merge_pipeline() {
+    // The multi-host runbook, executed locally: shard-plan, one
+    // shard-worker invocation per worker, stats on the directory, then
+    // merge-segments — against the driver's output for the same plan.
+    let dir = tmp("cli_runbook");
+    let plan_path = dir.join("plan.toml");
+    let seg_dir = dir.join("segs");
+    std::fs::create_dir_all(&seg_dir).unwrap();
+    let out = run_bin(&[
+        "shard-plan", "--log2-nodes", "8", "--seed", "11", "--shards", "5",
+        "--dist-workers", "2", "--plan-out", plan_path.to_str().unwrap(),
+    ]);
+    assert_success(&out, "shard-plan");
+    for w in ["0", "1"] {
+        let out = run_bin(&[
+            "shard-worker", "--plan", plan_path.to_str().unwrap(),
+            "--worker", w, "--segment-dir", seg_dir.to_str().unwrap(),
+        ]);
+        assert_success(&out, &format!("shard-worker {w}"));
+    }
+    // Pre-merge inspection over an explicit plan path.
+    let out = run_bin(&[
+        "stats", seg_dir.to_str().unwrap(), "--plan", plan_path.to_str().unwrap(),
+    ]);
+    assert_success(&out, "stats segment dir");
+    let merged = dir.join("merged.bin");
+    let out = run_bin(&[
+        "merge-segments", "--segments", seg_dir.to_str().unwrap(),
+        "--plan", plan_path.to_str().unwrap(),
+        "--out", merged.to_str().unwrap(), "--remove-segments",
+    ]);
+    assert_success(&out, "merge-segments");
+    assert_eq!(std::fs::read_dir(&seg_dir).unwrap().count(), 0, "--remove-segments drained");
+    // Equal to the all-in-one driver for the same spec.
+    let driver_out = dir.join("driver.bin");
+    let out = run_bin(&[
+        "sample", "--log2-nodes", "8", "--seed", "11", "--shards", "5",
+        "--dist-workers", "2", "--out", driver_out.to_str().unwrap(),
+    ]);
+    assert_success(&out, "driver");
+    assert_eq!(std::fs::read(&merged).unwrap(), std::fs::read(&driver_out).unwrap());
+}

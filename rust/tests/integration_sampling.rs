@@ -174,11 +174,12 @@ fn forced_spill_binary_sink_equivalence_sweep() {
             assert_eq!(back, seq_hybrid, "hybrid S={shards} workers={workers}");
         }
     }
-    // No spill temp files may survive the runs.
+    // No spill temp files may survive the runs (spill runs live under the
+    // shared pid+nonce temp naming scheme, `magquilt-tmp-*`).
     let leftovers = std::fs::read_dir(&dir)
         .unwrap()
         .filter(|e| {
-            e.as_ref().unwrap().file_name().to_string_lossy().starts_with("magquilt-spill-")
+            e.as_ref().unwrap().file_name().to_string_lossy().starts_with("magquilt-tmp-")
         })
         .count();
     assert_eq!(leftovers, 0, "spill temp files leaked");
