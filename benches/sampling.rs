@@ -3,10 +3,11 @@
 //! conditioned-vs-rejection piece sweep over partition size B, the
 //! shard-count sweep of the coordinator's streaming merge (per-shard
 //! merge stats included), the setup-pipeline sweep over setup-thread
-//! counts (per-phase attrs/partition/trie/DAG timings), and the
+//! counts (per-phase attrs/partition/trie/trie-merge/DAG timings), the
 //! distributed-runtime sweep over worker counts (partitioned sampling +
-//! segment merge). Summaries are emitted to `BENCH_quilt.json` for the
-//! perf trajectory.
+//! segment merge), and the segment-merge sweep over merge-thread counts
+//! (one fixed segment directory, T ∈ {1, 2, 4, 8}). Summaries are
+//! emitted to `BENCH_quilt.json` for the perf trajectory.
 //!
 //! `MAGQUILT_BENCH_FAST=1` shrinks the sweeps for smoke runs.
 
@@ -226,14 +227,15 @@ fn setup_sweep() -> String {
     let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
     println!("\n# bench: setup pipeline sweep (theta1, d={d}, n=2^{d}, chunked attrs)");
     println!(
-        "{:>8} {:>10} {:>13} {:>10} {:>10} {:>10}",
-        "threads", "attrs_ms", "partition_ms", "trie_ms", "dag_ms", "total_ms"
+        "{:>8} {:>10} {:>13} {:>10} {:>13} {:>10} {:>10}",
+        "threads", "attrs_ms", "partition_ms", "trie_ms", "trie_merge_ms", "dag_ms", "total_ms"
     );
     let mut rows = Vec::new();
     for &t in thread_counts {
         let mut attrs_ms = Vec::new();
         let mut partition_ms = Vec::new();
         let mut trie_ms = Vec::new();
+        let mut trie_merge_ms = Vec::new();
         let mut dag_ms = Vec::new();
         let mut pair_nodes = 0usize;
         for trial in 0..trials {
@@ -248,31 +250,34 @@ fn setup_sweep() -> String {
             let start = Instant::now();
             p.build_tries_parallel(d as usize, t);
             trie_ms.push(start.elapsed().as_secs_f64() * 1e3);
+            trie_merge_ms.push(p.trie_merge_ms());
 
             let start = Instant::now();
             let cond = p.conditioned_sampler_threaded(params.thetas(), t);
             dag_ms.push(start.elapsed().as_secs_f64() * 1e3);
             pair_nodes = cond.num_pair_nodes();
         }
-        let (a, pm, tm, dm) = (
+        let (a, pm, tm, tmm, dm) = (
             median(&mut attrs_ms),
             median(&mut partition_ms),
             median(&mut trie_ms),
+            median(&mut trie_merge_ms),
             median(&mut dag_ms),
         );
         println!(
-            "{:>8} {:>10.2} {:>13.2} {:>10.2} {:>10.2} {:>10.2}",
+            "{:>8} {:>10.2} {:>13.2} {:>10.2} {:>13.2} {:>10.2} {:>10.2}",
             t,
             a,
             pm,
             tm,
+            tmm,
             dm,
             a + pm + tm + dm
         );
         rows.push(format!(
             "      {{\"setup_threads\": {t}, \"attrs_ms\": {a:.3}, \
-             \"partition_ms\": {pm:.3}, \"trie_ms\": {tm:.3}, \"dag_ms\": {dm:.3}, \
-             \"total_ms\": {:.3}, \"pair_nodes\": {pair_nodes}}}",
+             \"partition_ms\": {pm:.3}, \"trie_ms\": {tm:.3}, \"trie_merge_ms\": {tmm:.3}, \
+             \"dag_ms\": {dm:.3}, \"total_ms\": {:.3}, \"pair_nodes\": {pair_nodes}}}",
             a + pm + tm + dm
         ));
     }
@@ -367,6 +372,86 @@ fn dist_sweep() -> String {
     )
 }
 
+/// Segment-merge sweep over merge-thread counts: one fixed segment
+/// directory (W workers run once), merged with T ∈ {1, 2, 4, 8} merge
+/// threads. The merged file is byte-identical for every T (asserted by
+/// the test suite), so the sweep isolates the merge wall-clock — the
+/// per-shard validate + fold + dedup that the worker threads parallelize.
+/// Returns the JSON rows for `BENCH_quilt.json`.
+fn merge_sweep() -> String {
+    let (d, shards, workers, thread_counts, trials): (u32, usize, usize, &[usize], u64) =
+        if fast() { (12, 8, 2, &[1, 2], 2) } else { (15, 16, 4, &[1, 2, 4, 8], 3) };
+    let mut model = ModelSpec::default_spec();
+    model.log2_nodes = d;
+    model.attributes = d;
+    let mut run = RunSpec::default_spec();
+    run.shards = shards;
+    // Bound per-worker thread pools so the one-off segment build does not
+    // oversubscribe; the merge timing below never samples.
+    run.workers = 2;
+    let plan = ShardPlan::new(&model, &run, workers).expect("bench plan");
+    let dir = std::env::temp_dir().join("magquilt_bench_merge");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::thread::scope(|scope| {
+        let plan = &plan;
+        let dir = &dir;
+        let handles: Vec<_> = (0..plan.num_workers())
+            .map(|i| scope.spawn(move || dist::run_worker(plan, i, dir).unwrap()))
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    println!(
+        "\n# bench: segment merge sweep (theta1, d={d}, n=2^{d}, W={workers}, S={shards})"
+    );
+    println!(
+        "{:>3} {:>10} {:>10} {:>14} {:>10} {:>9}",
+        "T", "edges", "merge_ms", "edges/s", "deferred", "spilled"
+    );
+    let mut rows = Vec::new();
+    for &t in thread_counts {
+        let out = std::env::temp_dir().join(format!("magquilt_bench_merge_t{t}.bin"));
+        let mut ms = Vec::new();
+        let mut last = None;
+        for _ in 0..trials {
+            let opts = dist::MergeOptions { merge_threads: t, ..Default::default() };
+            let report =
+                dist::merge_segments_with(&dir, &plan, &out, &opts).expect("bench merge");
+            ms.push(report.merge_ms);
+            last = Some(report);
+        }
+        let _ = std::fs::remove_file(&out);
+        let wall = median(&mut ms);
+        let report = last.expect("at least one trial");
+        let eps = report.total_edges as f64 / (wall / 1e3).max(1e-9);
+        println!(
+            "{:>3} {:>10} {:>10.2} {:>14.0} {:>10} {:>9}",
+            t, report.total_edges, wall, eps, report.deferred_shards, report.spilled_shards
+        );
+        rows.push(format!(
+            "      {{\"merge_threads\": {t}, \"resolved_threads\": {}, \"edges\": {}, \
+             \"merge_ms\": {wall:.3}, \"edges_per_sec\": {eps:.0}, \
+             \"deferred_shards\": {}, \"spilled_shards\": {}, \"overflow_runs\": {}, \
+             \"cross_worker_duplicates\": {}}}",
+            report.merge_threads,
+            report.total_edges,
+            report.deferred_shards,
+            report.spilled_shards,
+            report.overflow_runs(),
+            report.duplicates_dropped()
+        ));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    format!(
+        "  \"merge_sweep\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
+         \"workers\": {workers}, \"shards\": {shards}, \"trials\": {trials},\n    \
+         \"results\": [\n{}\n    ]\n  }}",
+        rows.join(",\n")
+    )
+}
+
 fn main() {
     let (d_max, naive_max, trials) = if fast() { (12, 9, 2) } else { (17, 11, 3) };
     println!("# bench: sampling (paper Fig. 10/11) — trials={trials}");
@@ -438,7 +523,9 @@ fn main() {
     let spill_rows = spill_sweep();
     let setup_rows = setup_sweep();
     let dist_rows = dist_sweep();
-    let sections = [piece_rows, shard_rows, spill_rows, setup_rows, dist_rows].join(",\n");
+    let merge_rows = merge_sweep();
+    let sections =
+        [piece_rows, shard_rows, spill_rows, setup_rows, dist_rows, merge_rows].join(",\n");
     let json = format!("{{\n  \"bench\": \"quilt\",\n{sections}\n}}\n");
     match std::fs::write("BENCH_quilt.json", &json) {
         Ok(()) => println!("wrote BENCH_quilt.json"),

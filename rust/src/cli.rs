@@ -13,6 +13,7 @@
 //! magquilt shard-plan [model/run flags] --dist-workers W [--plan-out F]
 //! magquilt shard-worker --plan F --worker I [--segment-dir DIR]
 //! magquilt merge-segments --segments DIR [--plan F] --out PATH
+//!                   [--merge-threads T] [--spill-budget BYTES]
 //!                   [--remove-segments]
 //! magquilt stats <edge-list file | segment dir>
 //! magquilt experiment <fig1|fig5|...|fig14|all> [--max-log2n N]
@@ -119,6 +120,7 @@ USAGE:
     magquilt shard-plan [model/run flags] --dist-workers W [--plan-out F]
     magquilt shard-worker --plan F --worker I [--segment-dir DIR]
     magquilt merge-segments --segments DIR [--plan F] --out PATH
+                      [--merge-threads T] [--spill-budget BYTES]
                       [--remove-segments]
     magquilt stats <edge-list file | segment dir>
     magquilt experiment <id|all> [--max-log2n N] [--naive-max-log2n N]
@@ -142,9 +144,11 @@ DISTRIBUTED: one plan manifest seals the run (`shard-plan`); each worker
        segment files plus overflow runs for foreign shards
        (`shard-worker`, safe to run on separate hosts against a shared or
        collected --segment-dir); `merge-segments` folds them into one
-       output identical to the single-process sampler; `stats <dir>`
-       inspects a segment directory before merging. `sample
-       --dist-workers W` runs plan → workers → merge locally.
+       output identical to the single-process sampler, merging shards on
+       --merge-threads T worker threads (0 = auto; byte-identical for
+       every count); `stats <dir>` inspects a segment directory before
+       merging. `sample --dist-workers W` runs plan → workers → merge
+       locally.
 EXPERIMENTS: fig1 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14 | all
 ";
 
@@ -237,6 +241,9 @@ fn specs_from_args(args: &Args) -> Result<(ModelSpec, RunSpec)> {
     if let Some(d) = args.get("segment-dir") {
         run.segment_dir = Some(d.to_string());
     }
+    if let Some(t) = args.get_parsed::<usize>("merge-threads")? {
+        run.merge_threads = t;
+    }
     model.validate()?;
     Ok((model, run))
 }
@@ -326,6 +333,13 @@ fn cmd_generate_dist(args: &Args, model: &ModelSpec, run: &RunSpec) -> Result<()
         report.workers,
         report.merge.overflow_runs(),
         report.merge.duplicates_dropped(),
+    );
+    println!(
+        "merge: {:.1} ms on {} merge thread(s) ({} deferred, {} spilled)",
+        report.merge.merge_ms,
+        report.merge.merge_threads,
+        report.merge.deferred_shards,
+        report.merge.spilled_shards,
     );
     println!(
         "wrote {} ({} edges, {:.1} ms total)",
@@ -431,12 +445,29 @@ fn cmd_merge_segments(raw: &[String]) -> Result<()> {
         None => dir.join(dist::PLAN_FILE),
     };
     let plan = ShardPlan::load(&plan_path)?;
-    let report = dist::merge_segments(dir, &plan, out, args.has_flag("remove-segments"))?;
+    let mut opts = dist::MergeOptions {
+        remove_inputs: args.has_flag("remove-segments"),
+        merge_threads: plan.merge_threads,
+        ..Default::default()
+    };
+    // Per-host overrides: the plan records a default, but the merge host
+    // is often not a worker host — neither knob changes a byte of output.
+    if let Some(t) = args.get_parsed::<usize>("merge-threads")? {
+        opts.merge_threads = t;
+    }
+    if let Some(b) = args.get_parsed::<u64>("spill-budget")? {
+        opts.spill_budget = b;
+    }
+    let report = dist::merge_segments_with(dir, &plan, out, &opts)?;
     println!(
         "merged {} shard(s): {} overflow run(s), {} cross-worker duplicate(s) collapsed",
         report.shards.len(),
         report.overflow_runs(),
         report.duplicates_dropped(),
+    );
+    println!(
+        "merge: {:.1} ms on {} merge thread(s) ({} deferred, {} spilled)",
+        report.merge_ms, report.merge_threads, report.deferred_shards, report.spilled_shards,
     );
     println!("wrote {} ({} edges)", out.display(), report.total_edges);
     Ok(())
@@ -580,11 +611,12 @@ fn coordinator_for(run: &RunSpec) -> Result<Coordinator> {
 /// One-line setup-pipeline timing breakdown (leader-side phases).
 fn print_setup(setup: &crate::coordinator::SetupStats) {
     println!(
-        "setup: attrs {:.1} ms | partition {:.1} ms | tries {:.1} ms | dag {:.1} ms \
-         ({} setup threads, {} attrs)",
+        "setup: attrs {:.1} ms | partition {:.1} ms | tries {:.1} ms (merge {:.1} ms) \
+         | dag {:.1} ms ({} setup threads, {} attrs)",
         setup.attrs_ms,
         setup.partition_ms,
         setup.trie_ms,
+        setup.trie_merge_ms,
         setup.dag_ms,
         setup.setup_threads,
         setup.attr_mode.name(),
@@ -873,16 +905,24 @@ mod tests {
 
     #[test]
     fn dist_flags_from_cli() {
-        let a =
-            Args::parse(&s(&["--dist-workers", "3", "--segment-dir", "/tmp/segs"]), &[]).unwrap();
+        let a = Args::parse(
+            &s(&["--dist-workers", "3", "--segment-dir", "/tmp/segs", "--merge-threads", "4"]),
+            &[],
+        )
+        .unwrap();
         let (_, run) = specs_from_args(&a).unwrap();
         assert_eq!(run.dist_workers, 3);
         assert_eq!(run.segment_dir.as_deref(), Some("/tmp/segs"));
-        // Defaults: single-process.
+        assert_eq!(run.merge_threads, 4);
+        // Defaults: single-process, auto merge threads.
         let a = Args::parse(&s(&[]), &[]).unwrap();
         let (_, run) = specs_from_args(&a).unwrap();
         assert_eq!(run.dist_workers, 0);
         assert_eq!(run.segment_dir, None);
+        assert_eq!(run.merge_threads, 0);
+        // Non-numeric count rejected.
+        let a = Args::parse(&s(&["--merge-threads", "lots"]), &[]).unwrap();
+        assert!(specs_from_args(&a).is_err());
     }
 
     #[test]

@@ -179,6 +179,9 @@ pub struct RunSpec {
     /// Directory for distributed segment files and the plan manifest
     /// (None = `<output>.segments` next to the output file).
     pub segment_dir: Option<String>,
+    /// Merge worker threads for the distributed segment merge (0 = auto;
+    /// the merged file is byte-identical for every thread count).
+    pub merge_threads: usize,
     /// Number of repeated samples (experiments average over trials).
     pub trials: u32,
 }
@@ -202,6 +205,7 @@ impl RunSpec {
             spill_budget: None,
             dist_workers: 0,
             segment_dir: None,
+            merge_threads: 0,
             trials: 1,
         }
     }
@@ -278,6 +282,13 @@ impl RunSpec {
             spec.segment_dir = Some(
                 v.as_str().ok_or_else(|| anyhow!("run.segment_dir must be a string"))?.to_string(),
             );
+        }
+        if let Some(v) = sec.get("merge_threads") {
+            let w = v.as_int().ok_or_else(|| anyhow!("run.merge_threads must be an integer"))?;
+            if w < 0 {
+                bail!("run.merge_threads must be >= 0, got {w}");
+            }
+            spec.merge_threads = w as usize;
         }
         if let Some(v) = sec.get("trials") {
             spec.trials =
@@ -356,16 +367,23 @@ mod tests {
 
     #[test]
     fn dist_knobs_parse_from_config() {
-        let m = parse_toml("[run]\ndist_workers = 4\nsegment_dir = \"/tmp/segs\"\n").unwrap();
+        let m = parse_toml(
+            "[run]\ndist_workers = 4\nsegment_dir = \"/tmp/segs\"\nmerge_threads = 8\n",
+        )
+        .unwrap();
         let spec = RunSpec::from_section(m.get("run")).unwrap();
         assert_eq!(spec.dist_workers, 4);
         assert_eq!(spec.segment_dir.as_deref(), Some("/tmp/segs"));
-        // Defaults: single-process, segments next to the output.
+        assert_eq!(spec.merge_threads, 8);
+        // Defaults: single-process, segments next to the output, auto merge.
         assert_eq!(RunSpec::default_spec().dist_workers, 0);
         assert_eq!(RunSpec::default_spec().segment_dir, None);
+        assert_eq!(RunSpec::default_spec().merge_threads, 0);
         let bad = parse_toml("[run]\ndist_workers = -2\n").unwrap();
         assert!(RunSpec::from_section(bad.get("run")).is_err());
         let bad = parse_toml("[run]\nsegment_dir = 9\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
+        let bad = parse_toml("[run]\nmerge_threads = -1\n").unwrap();
         assert!(RunSpec::from_section(bad.get("run")).is_err());
     }
 

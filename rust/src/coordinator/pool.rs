@@ -56,6 +56,10 @@ pub struct SetupStats {
     pub partition_ms: f64,
     /// Per-set prefix-trie build (+ shard merge) milliseconds.
     pub trie_ms: f64,
+    /// Of [`SetupStats::trie_ms`], the shard-merge phase alone: the
+    /// pairwise tree-merge folding per-shard arenas into the serial one
+    /// (0 for serial builds and non-conditioned plans).
+    pub trie_merge_ms: f64,
     /// Conditioned product-DAG build milliseconds.
     pub dag_ms: f64,
     /// Setup threads used (resolved; never 0).
@@ -70,6 +74,7 @@ impl Default for SetupStats {
             attrs_ms: 0.0,
             partition_ms: 0.0,
             trie_ms: 0.0,
+            trie_merge_ms: 0.0,
             dag_ms: 0.0,
             setup_threads: 1,
             attr_mode: AttrSampleMode::Sequential,
@@ -401,7 +406,8 @@ impl Coordinator {
         let mut partition = Partition::build_parallel(attrs.configs(), st);
         crate::quilt::maybe_build_dense_index(&mut partition, params.depth());
         let partition_ms = start.elapsed().as_secs_f64() * 1e3;
-        let (conditioner, trie_ms, dag_ms) = self.build_conditioner(&mut partition, params, st);
+        let (conditioner, trie_ms, trie_merge_ms, dag_ms) =
+            self.build_conditioner(&mut partition, params, st);
         let sampler = QuiltSampler::new(params.clone());
         let jobs = sampler.plan(&partition).into_iter().map(Job::Piece).collect();
         let mut plan = JobPlan {
@@ -416,6 +422,7 @@ impl Coordinator {
                 attrs_ms: 0.0,
                 partition_ms,
                 trie_ms,
+                trie_merge_ms,
                 dag_ms,
                 setup_threads: st,
                 attr_mode: self.attr_mode,
@@ -426,15 +433,17 @@ impl Coordinator {
     }
 
     /// Build tries + the shared product DAG when running conditioned,
-    /// timing the two phases separately. Returns `(dag, trie_ms, dag_ms)`.
+    /// timing the phases separately. Returns
+    /// `(dag, trie_ms, trie_merge_ms, dag_ms)` — `trie_merge_ms` is the
+    /// shard-merge slice of `trie_ms`.
     fn build_conditioner(
         &self,
         partition: &mut Partition,
         params: &MagmParams,
         setup_threads: usize,
-    ) -> (Option<ConditionedBallDropSampler>, f64, f64) {
+    ) -> (Option<ConditionedBallDropSampler>, f64, f64, f64) {
         if self.piece_mode != PieceMode::Conditioned {
-            return (None, 0.0, 0.0);
+            return (None, 0.0, 0.0, 0.0);
         }
         let start = Instant::now();
         partition.build_tries_parallel(params.depth(), setup_threads);
@@ -442,7 +451,7 @@ impl Coordinator {
         let start = Instant::now();
         let dag = partition.conditioned_sampler_threaded(params.thetas(), setup_threads);
         let dag_ms = start.elapsed().as_secs_f64() * 1e3;
-        (Some(dag), trie_ms, dag_ms)
+        (Some(dag), trie_ms, partition.trie_merge_ms(), dag_ms)
     }
 
     /// Plan the §5 hybrid jobs: W-subset pieces + ER blocks.
@@ -460,7 +469,8 @@ impl Coordinator {
         let mut partition = Partition::build_subset_parallel(attrs.configs(), &w_nodes, st);
         crate::quilt::maybe_build_dense_index(&mut partition, params.depth());
         let partition_ms = start.elapsed().as_secs_f64() * 1e3;
-        let (conditioner, trie_ms, dag_ms) = self.build_conditioner(&mut partition, params, st);
+        let (conditioner, trie_ms, trie_merge_ms, dag_ms) =
+            self.build_conditioner(&mut partition, params, st);
         let mut jobs: Vec<Job> = QuiltSampler::new(params.clone())
             .plan(&partition)
             .into_iter()
@@ -505,6 +515,7 @@ impl Coordinator {
                 attrs_ms: 0.0,
                 partition_ms,
                 trie_ms,
+                trie_merge_ms,
                 dag_ms,
                 setup_threads: st,
                 attr_mode: self.attr_mode,

@@ -9,34 +9,79 @@
 //! the same [`ShardMerger`] the coordinator uses yields the sorted,
 //! deduplicated **union** — and set union is order-independent, so the
 //! result equals what the single process's shard merger produced from the
-//! same batches. Writing the shards in index order through
-//! [`BinaryEdgeWriter`] and back-patching one header then reproduces the
-//! single-process `BinaryFileSink` file byte for byte.
+//! same batches.
 //!
-//! Everything is validated before it is trusted: file names must carry
-//! the plan's hash (mixed plan hashes are refused), headers must agree
-//! with the plan's node count, runs must be strictly sorted, every source
-//! id must fall inside its shard's range, and `read_edge_list_binary`
-//! already rejects truncated or unfinalized files.
+//! Shards are independent by construction, so the fold itself runs on
+//! `merge_threads` worker threads (0 = auto): each thread pulls the next
+//! unmerged shard off a shared counter, merges it, and hands the finished
+//! run to the delivery loop, which is the single-process
+//! [`BinaryFileSink`] — the frontier-ordered, spill-budgeted protocol
+//! that writes shard `s` the moment shards `0..s` are on disk, holds
+//! early finishers in memory within the spill budget, and streams the
+//! rest through temp spill files. The final file is therefore
+//! byte-identical to the serial merge (and to the single-process sink)
+//! for **any** thread count: delivery order changes only where a run
+//! waits, never where it lands.
+//!
+//! Everything is validated before it is trusted, and each segment is
+//! opened exactly twice-but-cheaply: once in the scan pass (24-byte
+//! header: magic, node count vs the plan, claimed edge count vs file
+//! size) and once in the merge pass (one chunked streaming read of the
+//! body). File names must carry the plan's hash (mixed plan hashes are
+//! refused), runs must be strictly sorted, and every source id must fall
+//! inside its shard's range.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::graph::{read_edge_list_binary, BinaryEdgeWriter, Edge, ShardMerger, ShardSpec};
+use crate::graph::{
+    read_binary_body, read_binary_header, BinaryFileSink, BinaryHeader, Edge, EdgeSink,
+    ShardDisposition, ShardMerger, ShardSpec, DEFAULT_SPILL_BUDGET,
+};
 
 use super::plan::ShardPlan;
 use super::worker::{parse_segment_file_name, SegmentKind};
+
+/// Hard cap on merge worker threads, mirroring the coordinator's shard
+/// cap: `std::thread::scope` aborts the process if a spawn fails, so an
+/// oversized `--merge-threads` must not translate into thousands of OS
+/// threads.
+const MAX_MERGE_THREADS: usize = 256;
+
+/// One segment file the scan pass validated: its path plus the header it
+/// vouched for. Carrying the header to the merge means the body read can
+/// pre-size buffers from the known edge count and skip re-validating
+/// anything the scan already checked.
+#[derive(Debug, Clone)]
+pub struct SegmentMeta {
+    /// Where the file lives.
+    pub path: PathBuf,
+    /// Its validated `MAGQEDG1` header (node and edge counts).
+    pub header: BinaryHeader,
+}
 
 /// The segment files found for one shard.
 #[derive(Debug, Clone, Default)]
 pub struct ShardSegments {
     /// The owner's segment file, once discovered.
-    pub owner: Option<PathBuf>,
+    pub owner: Option<SegmentMeta>,
     /// Foreign overflow files, keyed by producing worker (deterministic
     /// fold order for stable stats; the merged *set* is order-free).
-    pub overflow: BTreeMap<usize, PathBuf>,
+    pub overflow: BTreeMap<usize, SegmentMeta>,
+}
+
+impl ShardSegments {
+    /// Pre-dedup edge total across this shard's files, from the validated
+    /// headers — the capacity hint for the shard's merger.
+    fn header_edges(&self) -> u64 {
+        self.owner.as_ref().map_or(0, |m| m.header.num_edges)
+            + self.overflow.values().map(|m| m.header.num_edges).sum::<u64>()
+    }
 }
 
 /// Everything discovered in a segment directory for one plan.
@@ -53,12 +98,15 @@ impl SegmentCatalog {
     }
 }
 
-/// Scan `dir` for the plan's segment files, validating names, hashes, and
-/// topology. Rejects: files from a different plan hash (mixing two runs'
-/// segments silently corrupts the output), leftover in-flight temp files
-/// (a worker crashed or is still running), duplicate owner segments, a
-/// `.seg` written by a non-owner, a `.ovf` claimed by the shard's own
-/// owner, and unrecognized file names.
+/// Scan `dir` for the plan's segment files, validating names, hashes,
+/// topology, and every file's 24-byte header (magic, node count against
+/// the plan, claimed edge count against the file size). Rejects: files
+/// from a different plan hash (mixing two runs' segments silently
+/// corrupts the output), leftover in-flight temp files (a worker crashed
+/// or is still running), duplicate owner segments, a `.seg` written by a
+/// non-owner, a `.ovf` claimed by the shard's own owner, and unrecognized
+/// file names. The returned catalog carries the validated headers so the
+/// merge opens each body exactly once, without re-validation.
 pub fn scan_segments(dir: &Path, plan: &ShardPlan) -> Result<SegmentCatalog> {
     let hash = plan.hash_hex();
     let mut shards: Vec<ShardSegments> = vec![ShardSegments::default(); plan.num_shards];
@@ -99,6 +147,17 @@ pub fn scan_segments(dir: &Path, plan: &ShardPlan) -> Result<SegmentCatalog> {
             );
         }
         let owner = plan.owner_of_shard(info.shard);
+        let path = entry.path();
+        let header = read_binary_header(&path)
+            .with_context(|| format!("validating segment {}", path.display()))?;
+        if header.num_nodes != plan.model.num_nodes() as u64 {
+            bail!(
+                "segment {name} claims {} nodes but the plan's model has {}",
+                header.num_nodes,
+                plan.model.num_nodes()
+            );
+        }
+        let meta = SegmentMeta { path, header };
         let slot = &mut shards[info.shard];
         match info.kind {
             SegmentKind::Owned => {
@@ -109,7 +168,7 @@ pub fn scan_segments(dir: &Path, plan: &ShardPlan) -> Result<SegmentCatalog> {
                         info.worker
                     );
                 }
-                if slot.owner.replace(entry.path()).is_some() {
+                if slot.owner.replace(meta).is_some() {
                     bail!("duplicate owner segment for shard {}", info.shard);
                 }
             }
@@ -121,7 +180,7 @@ pub fn scan_segments(dir: &Path, plan: &ShardPlan) -> Result<SegmentCatalog> {
                         info.shard
                     );
                 }
-                if slot.overflow.insert(info.worker, entry.path()).is_some() {
+                if slot.overflow.insert(info.worker, meta).is_some() {
                     bail!(
                         "duplicate overflow for shard {} from worker {}",
                         info.shard,
@@ -134,36 +193,22 @@ pub fn scan_segments(dir: &Path, plan: &ShardPlan) -> Result<SegmentCatalog> {
     Ok(SegmentCatalog { shards })
 }
 
-/// Read one segment/overflow file for `shard`, enforcing the contract:
-/// header node count matches the plan, the run is strictly sorted (sorted
-/// *and* deduplicated), and every source id falls inside the shard's
-/// range. Truncated or unfinalized files are already rejected by
-/// [`read_edge_list_binary`].
-fn read_validated_run(
-    path: &Path,
-    plan: &ShardPlan,
-    spec: &ShardSpec,
-    shard: usize,
-) -> Result<Vec<Edge>> {
-    let g = read_edge_list_binary(path)
-        .with_context(|| format!("reading segment {}", path.display()))?;
-    if g.num_nodes() != plan.model.num_nodes() {
-        bail!(
-            "segment {} claims {} nodes but the plan's model has {}",
-            path.display(),
-            g.num_nodes(),
-            plan.model.num_nodes()
-        );
-    }
-    let edges = g.into_edges();
+/// Read the body of one scan-validated segment for `shard`, enforcing the
+/// run contract: strictly sorted (sorted *and* deduplicated) and every
+/// source id inside the shard's range. Bounds checks against the plan's
+/// node count and truncation-since-scan detection happen inside
+/// [`read_binary_body`].
+fn read_validated_run(meta: &SegmentMeta, spec: &ShardSpec, shard: usize) -> Result<Vec<Edge>> {
+    let edges = read_binary_body(&meta.path, &meta.header)
+        .with_context(|| format!("reading segment {}", meta.path.display()))?;
     if !edges.windows(2).all(|w| w[0] < w[1]) {
-        bail!("segment {} is not strictly sorted (corrupt run)", path.display());
+        bail!("segment {} is not strictly sorted (corrupt run)", meta.path.display());
     }
     for &(s, _) in &edges {
         if spec.checked_shard_of(s) != Some(shard) {
             bail!(
                 "segment {} holds source {s} outside shard {shard}'s range",
-                path.display()
+                meta.path.display()
             );
         }
     }
@@ -191,10 +236,20 @@ pub struct MergedShardReport {
 /// The outcome of a full merge (or a validate-only inspection pass).
 #[derive(Debug, Default)]
 pub struct MergeReport {
-    /// Per-shard rows, in index order.
+    /// Per-shard rows, in index order (regardless of completion order).
     pub shards: Vec<MergedShardReport>,
     /// Total edges in the final file.
     pub total_edges: u64,
+    /// Merge worker threads actually used (resolved; never 0).
+    pub merge_threads: usize,
+    /// Wall-clock milliseconds for the whole scan + merge + finalize.
+    pub merge_ms: f64,
+    /// Shards that finished ahead of the file frontier and were held in
+    /// memory within the spill budget.
+    pub deferred_shards: usize,
+    /// Shards that finished ahead of the frontier over budget and went
+    /// through a temp spill file.
+    pub spilled_shards: usize,
 }
 
 impl MergeReport {
@@ -209,27 +264,67 @@ impl MergeReport {
     }
 }
 
+/// Knobs for [`merge_segments_with`].
+#[derive(Debug, Clone)]
+pub struct MergeOptions {
+    /// Merge worker threads; `0` resolves to the available parallelism
+    /// (capped at 16), and the count is always clamped to the shard
+    /// count.
+    pub merge_threads: usize,
+    /// In-memory budget (bytes) for shards that finish ahead of the file
+    /// frontier; beyond it they spill to temp files next to the output.
+    /// `0` forces every out-of-order shard to spill.
+    pub spill_budget: u64,
+    /// Delete consumed segment/overflow files after the output is
+    /// finalized (durable), leaving the directory drained.
+    pub remove_inputs: bool,
+}
+
+impl Default for MergeOptions {
+    fn default() -> Self {
+        MergeOptions {
+            merge_threads: 0,
+            spill_budget: DEFAULT_SPILL_BUDGET,
+            remove_inputs: false,
+        }
+    }
+}
+
+/// Resolve the worker-thread count: explicit request, or the machine's
+/// available parallelism (capped — merge threads are I/O-heavy), always
+/// clamped to the shard count ([`MAX_MERGE_THREADS`] as the hard
+/// ceiling).
+fn resolved_merge_threads(requested: usize, num_shards: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(16)
+    } else {
+        requested
+    };
+    t.clamp(1, num_shards.max(1)).min(MAX_MERGE_THREADS)
+}
+
 /// Fold one shard's owner + overflow runs into the final sorted,
-/// deduplicated run.
+/// deduplicated run. The merger is pre-sized from the scan-validated
+/// header counts (pre-dedup total, a safe upper bound).
 fn merge_shard(
     plan: &ShardPlan,
     spec: &ShardSpec,
     shard: usize,
     segs: &ShardSegments,
 ) -> Result<(Vec<Edge>, MergedShardReport)> {
-    let owner_path = segs.owner.as_ref().ok_or_else(|| {
+    let owner_meta = segs.owner.as_ref().ok_or_else(|| {
         anyhow!(
             "no owner segment for shard {shard} (worker {} incomplete?)",
             plan.owner_of_shard(shard)
         )
     })?;
     let mut report = MergedShardReport { shard, ..Default::default() };
-    let mut merger = ShardMerger::new(shard);
-    let owner_run = read_validated_run(owner_path, plan, spec, shard)?;
+    let mut merger = ShardMerger::with_capacity(shard, segs.header_edges() as usize);
+    let owner_run = read_validated_run(owner_meta, spec, shard)?;
     report.owner_edges = owner_run.len();
     merger.absorb(owner_run);
-    for path in segs.overflow.values() {
-        let run = read_validated_run(path, plan, spec, shard)?;
+    for meta in segs.overflow.values() {
+        let run = read_validated_run(meta, spec, shard)?;
         report.overflow_runs += 1;
         report.overflow_edges += run.len();
         merger.absorb(run);
@@ -246,29 +341,46 @@ fn merge_shard(
 /// counts are exactly what a real merge would write), but keeps only the
 /// numbers. Fails on anything [`merge_segments`] would fail on.
 pub fn validate_segments(dir: &Path, plan: &ShardPlan) -> Result<MergeReport> {
+    let start = Instant::now();
     let catalog = scan_segments(dir, plan)?;
     let spec = plan.shard_spec();
-    let mut report = MergeReport::default();
+    let mut report = MergeReport { merge_threads: 1, ..Default::default() };
     for (shard, segs) in catalog.shards.iter().enumerate() {
         let (run, row) = merge_shard(plan, &spec, shard, segs)?;
         report.total_edges += run.len() as u64;
         report.shards.push(row);
     }
+    report.merge_ms = start.elapsed().as_secs_f64() * 1e3;
     Ok(report)
 }
 
 /// Merge a complete segment directory into the final `MAGQEDG1` file at
-/// `out` — byte-identical to the single-process binary sink's output for
-/// the same plan. With `remove_inputs`, consumed segment/overflow files
-/// are deleted after the output is finalized (durable), leaving the
-/// directory drained.
+/// `out` using the plan's `merge_threads` — byte-identical to the
+/// single-process binary sink's output for the same plan. With
+/// `remove_inputs`, consumed segment/overflow files are deleted after the
+/// output is finalized (durable), leaving the directory drained.
 pub fn merge_segments(
     dir: &Path,
     plan: &ShardPlan,
     out: &Path,
     remove_inputs: bool,
 ) -> Result<MergeReport> {
+    let opts =
+        MergeOptions { merge_threads: plan.merge_threads, remove_inputs, ..Default::default() };
+    merge_segments_with(dir, plan, out, &opts)
+}
+
+/// [`merge_segments`] with explicit [`MergeOptions`] — the entry point
+/// when the thread count or spill budget comes from the command line
+/// rather than the plan manifest.
+pub fn merge_segments_with(
+    dir: &Path,
+    plan: &ShardPlan,
+    out: &Path,
+    opts: &MergeOptions,
+) -> Result<MergeReport> {
     plan.validate()?;
+    let start = Instant::now();
     let catalog = scan_segments(dir, plan)?;
     // Fail on a missing owner segment *before* truncating the output.
     for (shard, segs) in catalog.shards.iter().enumerate() {
@@ -280,30 +392,108 @@ pub fn merge_segments(
         }
     }
     let spec = plan.shard_spec();
-    let mut writer = BinaryEdgeWriter::create(out, plan.model.num_nodes())
+    let threads = resolved_merge_threads(opts.merge_threads, plan.num_shards);
+    let mut sink = BinaryFileSink::create(out).spill_budget(opts.spill_budget);
+    sink.begin(plan.model.num_nodes(), plan.num_shards)
         .with_context(|| format!("creating output {}", out.display()))?;
-    let mut report = MergeReport::default();
-    for (shard, segs) in catalog.shards.iter().enumerate() {
-        let (run, row) = merge_shard(plan, &spec, shard, segs)?;
-        writer.write_edges(&run).with_context(|| format!("writing shard {shard}"))?;
-        report.total_edges += run.len() as u64;
-        report.shards.push(row);
-    }
-    writer
-        .finalize(report.total_edges)
-        .with_context(|| format!("finalizing output {}", out.display()))?;
-    if remove_inputs {
-        for segs in &catalog.shards {
-            if let Some(p) = &segs.owner {
-                std::fs::remove_file(p)
-                    .with_context(|| format!("removing consumed segment {}", p.display()))?;
+    let mut report = MergeReport { merge_threads: threads, ..Default::default() };
+
+    if threads <= 1 {
+        // Serial: merge and write in index order, always at the frontier.
+        for (shard, segs) in catalog.shards.iter().enumerate() {
+            let (run, row) = merge_shard(plan, &spec, shard, segs)?;
+            sink.begin_shard(shard, run.len())?;
+            sink.accept_shard(shard, run)
+                .with_context(|| format!("writing shard {shard}"))?;
+            report.shards.push(row);
+        }
+    } else {
+        // Parallel: workers pull shard indices off a shared counter and
+        // send finished runs to this (delivery) thread in completion
+        // order; the sink's frontier/spill machinery restores index
+        // order on disk.
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        type ShardResult = (usize, Result<(Vec<Edge>, MergedShardReport)>);
+        std::thread::scope(|scope| -> Result<()> {
+            let (tx, rx) = mpsc::sync_channel::<ShardResult>(threads);
+            for _ in 0..threads {
+                let tx = tx.clone();
+                let (next, abort, catalog, spec) = (&next, &abort, &catalog, &spec);
+                scope.spawn(move || loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let shard = next.fetch_add(1, Ordering::Relaxed);
+                    if shard >= catalog.shards.len() {
+                        break;
+                    }
+                    let res = merge_shard(plan, spec, shard, &catalog.shards[shard]);
+                    if tx.send((shard, res)).is_err() {
+                        break;
+                    }
+                });
             }
-            for p in segs.overflow.values() {
-                std::fs::remove_file(p)
-                    .with_context(|| format!("removing consumed overflow {}", p.display()))?;
+            drop(tx);
+            let mut first_err: Option<anyhow::Error> = None;
+            for (shard, res) in rx {
+                if first_err.is_some() {
+                    continue; // drain so workers can exit
+                }
+                match res {
+                    Ok((run, row)) => {
+                        let delivered = sink
+                            .begin_shard(shard, run.len())
+                            .and_then(|()| sink.accept_shard(shard, run));
+                        match delivered {
+                            Ok(ShardDisposition::Streamed) => {}
+                            Ok(ShardDisposition::Deferred { .. }) => {
+                                report.deferred_shards += 1;
+                            }
+                            Ok(ShardDisposition::Spilled { .. }) => {
+                                report.spilled_shards += 1;
+                            }
+                            Err(e) => {
+                                abort.store(true, Ordering::Relaxed);
+                                first_err = Some(
+                                    anyhow::Error::new(e)
+                                        .context(format!("writing shard {shard}")),
+                                );
+                                continue;
+                            }
+                        }
+                        report.shards.push(row);
+                    }
+                    Err(e) => {
+                        abort.store(true, Ordering::Relaxed);
+                        first_err = Some(e);
+                    }
+                }
+            }
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })?;
+        report.shards.sort_by_key(|r| r.shard);
+    }
+
+    report.total_edges = sink
+        .finalize()
+        .with_context(|| format!("finalizing output {}", out.display()))?;
+    if opts.remove_inputs {
+        for segs in &catalog.shards {
+            if let Some(m) = &segs.owner {
+                std::fs::remove_file(&m.path)
+                    .with_context(|| format!("removing consumed segment {}", m.path.display()))?;
+            }
+            for m in segs.overflow.values() {
+                std::fs::remove_file(&m.path)
+                    .with_context(|| format!("removing consumed overflow {}", m.path.display()))?;
             }
         }
     }
+    report.merge_ms = start.elapsed().as_secs_f64() * 1e3;
     Ok(report)
 }
 
@@ -312,6 +502,7 @@ mod tests {
     use super::*;
     use crate::config::{ModelSpec, RunSpec};
     use crate::dist::worker::{overflow_file_name, segment_file_name};
+    use crate::graph::read_edge_list_binary;
     use crate::graph::write_edge_list_binary;
     use crate::graph::EdgeList;
 
@@ -355,6 +546,7 @@ mod tests {
         assert_eq!(report.total_edges, 6);
         assert_eq!(report.overflow_runs(), 1);
         assert_eq!(report.duplicates_dropped(), 1, "cross-worker duplicate collapsed");
+        assert!(report.merge_threads >= 1);
         let g = read_edge_list_binary(&out).unwrap();
         assert_eq!(g.edges(), &[(0, 3), (2, 2), (5, 1), (8, 0), (8, 7), (9, 9)]);
         // remove_inputs drained everything but the output.
@@ -363,6 +555,125 @@ mod tests {
             .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
             .collect();
         assert_eq!(left, vec!["merged.bin".to_string()]);
+    }
+
+    /// Forced-overflow topology (S=8, W=4): every shard gets an owner run
+    /// plus an overflow run from a neighboring worker, sharing one
+    /// duplicate edge.
+    fn build_overflow_dir(tag: &str) -> (ShardPlan, PathBuf) {
+        let plan = plan_for(4, 8, 4);
+        let hash = plan.hash_hex();
+        let dir = fresh_dir(tag);
+        let n = 16;
+        for shard in 0..8u32 {
+            let owner = plan.owner_of_shard(shard as usize);
+            let base = 2 * shard; // shard width is 2 sources
+            write_run(
+                &dir,
+                &segment_file_name(&hash, shard as usize, owner),
+                n,
+                &[(base, 0), (base, 5), (base + 1, 2)],
+            );
+            let foreign = (owner + 1) % plan.num_workers();
+            write_run(
+                &dir,
+                &overflow_file_name(&hash, shard as usize, foreign),
+                n,
+                &[(base, 5), (base, 9), (base + 1, 0)],
+            );
+        }
+        (plan, dir)
+    }
+
+    #[test]
+    fn parallel_merge_is_byte_identical_to_serial() {
+        // The tentpole contract: for any merge-thread count, the output
+        // file is byte-for-byte the serial merge's file, and the report
+        // rows are identical — including under a zero spill budget that
+        // forces every out-of-order delivery through a spill file.
+        let (plan, dir) = build_overflow_dir("threads");
+        let serial_out = dir.parent().unwrap().join("threads_serial.bin");
+        let serial = merge_segments_with(
+            &dir,
+            &plan,
+            &serial_out,
+            &MergeOptions { merge_threads: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(serial.merge_threads, 1);
+        assert_eq!(serial.total_edges, 8 * 5);
+        assert_eq!(serial.duplicates_dropped(), 8);
+        let serial_bytes = std::fs::read(&serial_out).unwrap();
+        for (threads, budget) in [(2, DEFAULT_SPILL_BUDGET), (8, DEFAULT_SPILL_BUDGET), (8, 0)] {
+            // Budget 0 forces the spill path whenever a shard finishes
+            // early; repeat a few times so the completion-order race
+            // actually exercises out-of-order deliveries.
+            for round in 0..3 {
+                let out = dir
+                    .parent()
+                    .unwrap()
+                    .join(format!("threads_t{threads}_b{budget}_{round}.bin"));
+                let report = merge_segments_with(
+                    &dir,
+                    &plan,
+                    &out,
+                    &MergeOptions {
+                        merge_threads: threads,
+                        spill_budget: budget,
+                        remove_inputs: false,
+                    },
+                )
+                .unwrap();
+                assert_eq!(report.merge_threads, threads.min(8));
+                assert_eq!(
+                    std::fs::read(&out).unwrap(),
+                    serial_bytes,
+                    "T={threads} budget={budget} round={round}"
+                );
+                assert_eq!(report.shards, serial.shards, "rows in index order");
+                assert_eq!(report.total_edges, serial.total_edges);
+                // Spills only ever happen out of order, and with budget 0
+                // anything deferred must have spilled.
+                if budget == 0 {
+                    assert_eq!(report.deferred_shards, 0, "budget 0 defers nothing in memory");
+                }
+                // No spill temp files survive the merge.
+                let leftovers = std::fs::read_dir(dir.parent().unwrap())
+                    .unwrap()
+                    .filter(|e| {
+                        e.as_ref()
+                            .unwrap()
+                            .file_name()
+                            .to_string_lossy()
+                            .starts_with("magquilt-tmp-")
+                    })
+                    .count();
+                assert_eq!(leftovers, 0, "spill files drained");
+            }
+        }
+    }
+
+    #[test]
+    fn scan_caches_validated_headers() {
+        // The scan pass records each file's validated header so the merge
+        // never re-opens a header; truncating a body *after* the scan
+        // must still fail loud at merge time.
+        let plan = plan_for(4, 2, 2);
+        let hash = plan.hash_hex();
+        let dir = fresh_dir("cache");
+        write_run(&dir, &segment_file_name(&hash, 0, 0), 16, &[(0, 1), (1, 2), (3, 3)]);
+        write_run(&dir, &segment_file_name(&hash, 1, 1), 16, &[(9, 2)]);
+        let catalog = scan_segments(&dir, &plan).unwrap();
+        let owner0 = catalog.shards[0].owner.as_ref().unwrap();
+        assert_eq!(owner0.header.num_edges, 3);
+        assert_eq!(owner0.header.num_nodes, 16);
+        assert_eq!(catalog.shards[1].owner.as_ref().unwrap().header.num_edges, 1);
+        // Truncate shard 0's body behind the catalog's back.
+        let f = std::fs::OpenOptions::new().write(true).open(&owner0.path).unwrap();
+        f.set_len(24 + 8).unwrap(); // header + one record
+        drop(f);
+        let err = merge_segments(&dir, &plan, &dir.join("out.bin"), false).unwrap_err();
+        assert!(err.to_string().contains("reading segment"), "{err}");
     }
 
     #[test]
@@ -414,6 +725,10 @@ mod tests {
         let dir = fresh_dir("shard_oob");
         write_run(&dir, &segment_file_name(&hash, 7, 0), 16, &[]);
         assert!(scan_segments(&dir, &plan).is_err());
+        // A correctly named file with a corrupt header fails at scan.
+        let dir = fresh_dir("bad_header");
+        std::fs::write(dir.join(segment_file_name(&hash, 0, 0)), b"NOTMAGIC").unwrap();
+        assert!(scan_segments(&dir, &plan).unwrap_err().to_string().contains("validating"));
     }
 
     #[test]
@@ -446,8 +761,8 @@ mod tests {
         let hash = plan.hash_hex();
         let dir = fresh_dir("validate");
         write_run(&dir, &segment_file_name(&hash, 0, 0), 16, &[(0, 1), (3, 3)]);
-        write_run(&dir, &segment_file_name(&hash, 1, 1), 16, &[(9, 2)]);
         write_run(&dir, &overflow_file_name(&hash, 1, 0), 16, &[(9, 2), (10, 0)]);
+        write_run(&dir, &segment_file_name(&hash, 1, 1), 16, &[(9, 2)]);
         let inspect = validate_segments(&dir, &plan).unwrap();
         let merged = merge_segments(&dir, &plan, &dir.join("out.bin"), false).unwrap();
         assert_eq!(inspect.total_edges, merged.total_edges);

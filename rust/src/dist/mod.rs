@@ -11,7 +11,10 @@
 //! segment files; a deterministic merge folds the segments (plus the
 //! overflow runs that wide-span jobs scatter into foreign shards) into
 //! one output file **bit-for-bit identical** to the single-process
-//! sampler's.
+//! sampler's. The merge itself runs shards on `merge_threads` worker
+//! threads (another hash-exempt per-host knob, 0 = auto) and delivers
+//! them through the spill-budgeted ordered sink, so it scales with the
+//! host without changing a byte of the output — see [`merge`].
 //!
 //! No inter-worker communication exists anywhere: the whole contract is
 //! the [`ShardPlan`] manifest (everything output-determining, sealed by a
@@ -87,8 +90,11 @@
 //! host1$ magquilt shard-worker --plan plan.toml --worker 1 --segment-dir segs/
 //! ...
 //! # 3. Collect the segment files onto one host (scp/rsync; names are
-//! #    collision-free by construction) and merge:
-//! magquilt merge-segments --segments segs/ --plan plan.toml --out graph.bin
+//! #    collision-free by construction) and merge. --merge-threads is a
+//! #    per-host knob (0 = auto): the output is byte-identical for any
+//! #    count, so size it to the merge host alone:
+//! magquilt merge-segments --segments segs/ --plan plan.toml \
+//!          --merge-threads 8 --out graph.bin
 //! # 4. Optional pre-merge inspection (counts, spans, truncation, hashes):
 //! magquilt stats segs/
 //! ```
@@ -100,8 +106,9 @@ pub mod merge;
 pub mod plan;
 pub mod worker;
 
-pub use merge::{merge_segments, scan_segments, validate_segments, MergeReport,
-                MergedShardReport, SegmentCatalog};
+pub use merge::{merge_segments, merge_segments_with, scan_segments, validate_segments,
+                MergeOptions, MergeReport, MergedShardReport, SegmentCatalog, SegmentMeta,
+                ShardSegments};
 pub use plan::{ShardPlan, PLAN_FORMAT};
 pub use worker::{job_owners, overflow_file_name, parse_segment_file_name, run_worker,
                  segment_file_name, SegmentFileInfo, SegmentKind, SegmentSink, SegmentSummary,

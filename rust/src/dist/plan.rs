@@ -15,8 +15,8 @@
 //!
 //! [`ShardPlan::hash_hex`] digests the *output-determining* fields (model,
 //! seed, sampler, piece/attr mode, shard count, worker ranges) — not the
-//! wall-clock knobs (`workers`, `setup_threads`), which may legitimately
-//! differ per host. Every segment file a worker writes embeds the hash in
+//! wall-clock knobs (`workers`, `setup_threads`, `merge_threads`), which
+//! may legitimately differ per host. Every segment file a worker writes embeds the hash in
 //! its name, so the merge step can refuse to stitch segments produced
 //! under different plans, and `parse` refuses a manifest whose stored
 //! hash does not match its fields (a hand-edited plan must be regenerated
@@ -99,6 +99,9 @@ pub struct ShardPlan {
     pub workers: usize,
     /// Setup-pipeline threads per process (0 = auto; wall-clock only).
     pub setup_threads: usize,
+    /// Merge worker threads for `merge-segments` (0 = auto; wall-clock
+    /// only — the merged file is byte-identical for any count).
+    pub merge_threads: usize,
     /// Effective shard count S (already clamped to the merger cap and
     /// the node count, so every process agrees without re-clamping).
     pub num_shards: usize,
@@ -163,6 +166,7 @@ impl ShardPlan {
             attr_mode: run.attr_mode.unwrap_or(AttrSampleMode::Chunked),
             workers: run.workers,
             setup_threads: run.setup_threads,
+            merge_threads: run.merge_threads,
             num_shards,
             ranges,
         })
@@ -251,7 +255,8 @@ impl ShardPlan {
              piece_mode = \"{piece}\"\n\
              attr_mode = \"{attr}\"\n\
              workers = {workers}\n\
-             setup_threads = {setup}\n",
+             setup_threads = {setup}\n\
+             merge_threads = {merge}\n",
             hash = self.hash_hex(),
             shards = self.num_shards,
             starts = starts.join(", "),
@@ -269,6 +274,7 @@ impl ShardPlan {
             attr = self.attr_mode.name(),
             workers = self.workers,
             setup = self.setup_threads,
+            merge = self.merge_threads,
         )
     }
 
@@ -334,6 +340,16 @@ impl ShardPlan {
             .filter(|&v| v >= 0)
             .ok_or_else(|| anyhow!("run.setup_threads must be a non-negative integer"))?
             as usize;
+        // Optional (manifests written before the parallel merge lack it):
+        // another hash-exempt per-host knob, defaulting to 0 = auto.
+        let merge_threads = match run_sec.get("merge_threads") {
+            None => 0,
+            Some(v) => v
+                .as_int()
+                .filter(|&x| x >= 0)
+                .ok_or_else(|| anyhow!("run.merge_threads must be a non-negative integer"))?
+                as usize,
+        };
 
         let plan = ShardPlan {
             model,
@@ -343,6 +359,7 @@ impl ShardPlan {
             attr_mode,
             workers,
             setup_threads,
+            merge_threads,
             num_shards,
             ranges,
         };
@@ -481,10 +498,12 @@ mod tests {
         let mut run = RunSpec::default_spec();
         run.shards = 4;
         let base = ShardPlan::new(&model(9), &run, 2).unwrap();
-        // workers / setup_threads never change the sampled output, so two
-        // plans differing only there produce interchangeable segments.
+        // workers / setup_threads / merge_threads never change the sampled
+        // output, so two plans differing only there produce
+        // interchangeable segments.
         run.workers = 7;
         run.setup_threads = 3;
+        run.merge_threads = 5;
         let same = ShardPlan::new(&model(9), &run, 2).unwrap();
         assert_eq!(base.hash_hex(), same.hash_hex());
         // The seed does change the output.
@@ -517,6 +536,20 @@ mod tests {
         assert!(err.to_string().contains("non-negative"), "{err}");
         let text = plan.to_toml().replace("setup_threads = 0", "setup_threads = -3");
         assert!(ShardPlan::parse(&text).is_err());
+        let text = plan.to_toml().replace("merge_threads = 0", "merge_threads = -2");
+        let err = ShardPlan::parse(&text).unwrap_err();
+        assert!(err.to_string().contains("non-negative"), "{err}");
+    }
+
+    #[test]
+    fn manifests_without_merge_threads_still_parse() {
+        // Plans written before the parallel merge omit the knob; it is
+        // hash-exempt, so older manifests keep loading with auto threads.
+        let plan = ShardPlan::new(&model(8), &RunSpec::default_spec(), 2).unwrap();
+        let text = plan.to_toml().replace("merge_threads = 0\n", "");
+        let back = ShardPlan::parse(&text).unwrap();
+        assert_eq!(back.merge_threads, 0);
+        assert_eq!(back.hash_hex(), plan.hash_hex());
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub(super) fn write_edge_records(w: &mut impl Write, edges: &[Edge]) -> io::Resu
 /// Largest node count accepted from an (untrusted) binary header:
 /// `ModelSpec` caps models at 2^31 nodes, so anything larger is corrupt.
 const MAX_BINARY_NODES: u64 = 1 << 31;
+/// Edges decoded per read when streaming a binary body (1 MiB buffers) —
+/// the record loop issues one large `read_exact` per chunk instead of
+/// two 4-byte reads per edge.
+const READ_CHUNK_EDGES: usize = 128 * 1024;
 
 /// Incremental writer for the `MAGQEDG1` binary format, used by
 /// [`super::BinaryFileSink`] to stream sorted shards to disk without ever
@@ -137,17 +141,24 @@ pub fn write_edge_list_binary(g: &EdgeList, path: &Path) -> io::Result<()> {
     w.finalize(g.num_edges() as u64)
 }
 
-/// Read the binary format.
+/// The validated header of a `MAGQEDG1` file: node and edge counts whose
+/// invariants (magic, node-count cap, edge count vs file size) have
+/// already been checked against the file they came from.
 ///
-/// The header is untrusted input: the claimed edge count is checked
-/// against the actual file size before any allocation (a 24-byte corrupt
-/// file must not trigger a multi-GB `Vec::with_capacity`), and every edge
-/// id is validated against `n` before the list is returned — also in
-/// release builds, where `EdgeList::from_edges` only debug-asserts.
-pub fn read_edge_list_binary(path: &Path) -> io::Result<EdgeList> {
-    let file = File::open(path)?;
-    let file_len = file.metadata()?.len();
-    let mut r = BufReader::new(file);
+/// Produced by [`read_binary_header`]; carrying it to [`read_binary_body`]
+/// lets a caller validate a directory of files in one scan pass and read
+/// the bodies later without re-opening or re-validating any header — the
+/// distributed merge's single-streaming-pass contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BinaryHeader {
+    /// Node count n from the header.
+    pub num_nodes: u64,
+    /// Edge count m from the header (validated against the file size).
+    pub num_edges: u64,
+}
+
+/// Validate the 24-byte header of an open file against its length.
+fn read_header(r: &mut impl Read, file_len: u64) -> io::Result<BinaryHeader> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != BINARY_MAGIC {
@@ -174,22 +185,73 @@ pub fn read_edge_list_binary(path: &Path) -> io::Result<EdgeList> {
             format!("header claims {m} edges but the file has room for {max_edges}"),
         ));
     }
-    let mut edges = Vec::with_capacity(m as usize);
-    let mut buf4 = [0u8; 4];
-    for _ in 0..m {
-        r.read_exact(&mut buf4)?;
-        let s = u32::from_le_bytes(buf4);
-        r.read_exact(&mut buf4)?;
-        let t = u32::from_le_bytes(buf4);
-        if u64::from(s) >= n || u64::from(t) >= n {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!("edge ({s}, {t}) out of bounds for n = {n}"),
-            ));
+    Ok(BinaryHeader { num_nodes: n, num_edges: m })
+}
+
+/// Decode `m` records from `r` in [`READ_CHUNK_EDGES`]-sized chunks,
+/// validating every id against `n`. A short read surfaces as
+/// `InvalidData` (the count was vouched for by a validated header, so
+/// missing records mean the file was truncated under us).
+fn read_records_chunked(r: &mut impl Read, n: u64, m: u64) -> io::Result<Vec<Edge>> {
+    let mut edges: Vec<Edge> = Vec::with_capacity(m as usize);
+    let mut bytes = vec![0u8; READ_CHUNK_EDGES.min(m as usize).max(1) * BINARY_EDGE_LEN as usize];
+    let mut remaining = m;
+    while remaining > 0 {
+        let take = remaining.min(READ_CHUNK_EDGES as u64) as usize;
+        let buf = &mut bytes[..take * BINARY_EDGE_LEN as usize];
+        r.read_exact(buf).map_err(|e| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("edge records truncated: {e}"))
+        })?;
+        for rec in buf.chunks_exact(BINARY_EDGE_LEN as usize) {
+            let s = u32::from_le_bytes(rec[..4].try_into().expect("4-byte slice"));
+            let t = u32::from_le_bytes(rec[4..].try_into().expect("4-byte slice"));
+            if u64::from(s) >= n || u64::from(t) >= n {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("edge ({s}, {t}) out of bounds for n = {n}"),
+                ));
+            }
+            edges.push((s, t));
         }
-        edges.push((s, t));
+        remaining -= take as u64;
     }
-    Ok(EdgeList::from_edges(n as usize, edges))
+    Ok(edges)
+}
+
+/// Open `path` and validate its `MAGQEDG1` header without touching the
+/// body: magic bytes, node-count cap, and the claimed edge count against
+/// the actual file size. One cheap (24-byte) read per file — the scan
+/// pass of a scan-then-merge pipeline.
+pub fn read_binary_header(path: &Path) -> io::Result<BinaryHeader> {
+    let mut file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    read_header(&mut file, file_len)
+}
+
+/// Read the body of a file whose header was already validated by
+/// [`read_binary_header`], skipping the header bytes and streaming the
+/// records in large chunks. Ids are still validated against
+/// `header.num_nodes` and a file truncated since the scan surfaces as
+/// `InvalidData`, so a stale header cannot smuggle bad data through.
+pub fn read_binary_body(path: &Path, header: &BinaryHeader) -> io::Result<Vec<Edge>> {
+    let mut file = File::open(path)?;
+    file.seek(SeekFrom::Start(BINARY_HEADER_LEN))?;
+    read_records_chunked(&mut file, header.num_nodes, header.num_edges)
+}
+
+/// Read the binary format.
+///
+/// The header is untrusted input: the claimed edge count is checked
+/// against the actual file size before any allocation (a 24-byte corrupt
+/// file must not trigger a multi-GB `Vec::with_capacity`), and every edge
+/// id is validated against `n` before the list is returned — also in
+/// release builds, where `EdgeList::from_edges` only debug-asserts.
+pub fn read_edge_list_binary(path: &Path) -> io::Result<EdgeList> {
+    let mut file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let header = read_header(&mut file, file_len)?;
+    let edges = read_records_chunked(&mut file, header.num_nodes, header.num_edges)?;
+    Ok(EdgeList::from_edges(header.num_nodes as usize, edges))
 }
 
 #[cfg(test)]
@@ -371,6 +433,52 @@ mod tests {
         std::fs::write(&p, &patched).unwrap();
         let g = read_edge_list_binary(&p).unwrap();
         assert_eq!(g.edges(), &edges);
+    }
+
+    #[test]
+    fn header_body_split_matches_whole_file_read() {
+        // The scan-then-merge path: validate the header once, read the
+        // body later — must see exactly what read_edge_list_binary sees.
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("split.bin");
+        let g = sample();
+        write_edge_list_binary(&g, &p).unwrap();
+        let h = read_binary_header(&p).unwrap();
+        assert_eq!(h, BinaryHeader { num_nodes: 5, num_edges: 3 });
+        let body = read_binary_body(&p, &h).unwrap();
+        assert_eq!(body, g.edges());
+    }
+
+    #[test]
+    fn body_read_rejects_truncation_after_header_scan() {
+        // A file that shrinks between the scan pass and the body read
+        // must fail loud, not deliver fewer edges.
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("shrunk.bin");
+        let g = sample();
+        write_edge_list_binary(&g, &p).unwrap();
+        let h = read_binary_header(&p).unwrap();
+        let f = std::fs::OpenOptions::new().write(true).open(&p).unwrap();
+        f.set_len(BINARY_HEADER_LEN + BINARY_EDGE_LEN).unwrap();
+        drop(f);
+        let err = read_binary_body(&p, &h).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn chunked_reader_crosses_chunk_boundaries() {
+        // More edges than one decode chunk: the large-read loop must
+        // reassemble records exactly across chunk seams.
+        let dir = std::env::temp_dir().join("magquilt_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("many.bin");
+        let m = READ_CHUNK_EDGES + 17;
+        let edges: Vec<Edge> = (0..m as u32).map(|i| (i, i.wrapping_mul(31) % m as u32)).collect();
+        let g = EdgeList::from_edges(m, edges);
+        write_edge_list_binary(&g, &p).unwrap();
+        assert_eq!(read_edge_list_binary(&p).unwrap(), g);
     }
 
     #[test]

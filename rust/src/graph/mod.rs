@@ -15,8 +15,9 @@ mod spill;
 pub use algorithms::{clustering_coefficient, largest_scc_size, largest_wcc_size, scc_sizes};
 pub use csr::Csr;
 pub use edgelist::EdgeList;
-pub use io::{read_edge_list_binary, read_edge_list_text, write_edge_list_binary,
-             write_edge_list_text, BinaryEdgeWriter, BINARY_MAGIC};
+pub use io::{read_binary_body, read_binary_header, read_edge_list_binary, read_edge_list_text,
+             write_edge_list_binary, write_edge_list_text, BinaryEdgeWriter, BinaryHeader,
+             BINARY_MAGIC};
 pub use sink::{summarize_spill, BinaryFileSink, CollectSink, CountingSink, DegreeCounts,
                EdgeSink, ShardDisposition, ShardMergeStats, ShardMerger, ShardSpec,
                SpillSummary, DEFAULT_SPILL_BUDGET};

@@ -249,7 +249,18 @@ pub struct ShardMerger {
 impl ShardMerger {
     /// Empty merger for shard `shard`.
     pub fn new(shard: usize) -> Self {
-        ShardMerger { run: Vec::new(), stats: ShardMergeStats { shard, ..Default::default() } }
+        Self::with_capacity(shard, 0)
+    }
+
+    /// Empty merger for shard `shard` with room for `edges` edges — when
+    /// the incoming total is known up front (e.g. from validated segment
+    /// headers), pre-sizing skips the doubling reallocations of the first
+    /// absorbs. The pre-dedup total is a safe upper bound for the run.
+    pub fn with_capacity(shard: usize, edges: usize) -> Self {
+        ShardMerger {
+            run: Vec::with_capacity(edges),
+            stats: ShardMergeStats { shard, ..Default::default() },
+        }
     }
 
     /// Absorb one (unsorted, possibly duplicated) batch of edges.

@@ -228,6 +228,19 @@ impl AdoptMemo {
     pub fn new(depth: usize) -> Self {
         AdoptMemo { levels: vec![FastMap::default(); depth + 1] }
     }
+
+    /// Empty memo pre-sized for adopting **all** of `src`: each level's
+    /// map reserves one slot per source class, so a full-forest adoption
+    /// (the trie-merge path) never rehashes mid-merge.
+    pub fn for_source(src: &ConfigForest) -> Self {
+        AdoptMemo {
+            levels: src
+                .levels
+                .iter()
+                .map(|lvl| crate::hashutil::fast_map_with_capacity(lvl.len()))
+                .collect(),
+        }
+    }
 }
 
 /// One registered configuration set: root class into a [`ConfigForest`]

@@ -2,9 +2,10 @@
 //!
 //! The vendored crate set has no rayon, so the parallel setup phases
 //! (chunked attribute sampling, the prefix-sum partition build, the
-//! sharded trie build, and the product-DAG mass aggregation) share this
-//! one primitive: map a closure over an indexed work list on
-//! `std::thread::scope` threads.
+//! sharded trie build, and the product-DAG mass aggregation) share two
+//! primitives: [`map_indexed`] maps a closure over an indexed work list
+//! on `std::thread::scope` threads, and [`tree_reduce`] folds a work
+//! list down pairwise in `O(log n)` combining levels.
 //!
 //! Determinism contract: work item `i` is processed by thread
 //! `i % threads` and results are reassembled **by index**, so the output
@@ -63,6 +64,37 @@ where
     out.into_iter().map(|o| o.expect("every index filled exactly once")).collect()
 }
 
+/// Fold `items` down to one value by a deterministic pairwise tree
+/// reduction: level by level, element `2j` combines with `2j + 1` (an odd
+/// leftover passes through unchanged), and each level's pairs run on up
+/// to `threads` scoped threads via [`map_indexed`]. Returns `None` for an
+/// empty input.
+///
+/// The pairing is a pure function of the item order — never of the thread
+/// count or the OS schedule — so for an **associative** `combine` the
+/// result equals the left-to-right serial fold, and even a
+/// non-associative combine is at least reproducible for a fixed input.
+/// `O(log n)` combining levels replace the serial `O(n)` fold wall.
+pub fn tree_reduce<T, F>(items: Vec<T>, threads: usize, combine: F) -> Option<T>
+where
+    T: Send,
+    F: Fn(T, T) -> T + Sync,
+{
+    let mut level = items;
+    while level.len() > 1 {
+        let mut pairs: Vec<(T, Option<T>)> = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            pairs.push((a, it.next()));
+        }
+        level = map_indexed(pairs, threads, |_, (a, b)| match b {
+            Some(b) => combine(a, b),
+            None => a,
+        });
+    }
+    level.pop()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +117,24 @@ mod tests {
         assert!(out.is_empty());
         let out = map_indexed(vec![7u32], 4, |i, x| x + i as u32);
         assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn tree_reduce_matches_serial_fold() {
+        // String concat is associative but not commutative: any pairing
+        // mistake (swapped operands, skipped leftover) changes the result.
+        for n in [0usize, 1, 2, 3, 5, 8, 13, 64] {
+            let expect: String = (0..n).map(|i| format!("<{i}>")).collect();
+            for threads in [1usize, 2, 3, 8] {
+                let items: Vec<String> = (0..n).map(|i| format!("<{i}>")).collect();
+                let got = tree_reduce(items, threads, |a, b| a + &b);
+                if n == 0 {
+                    assert!(got.is_none());
+                } else {
+                    assert_eq!(got.unwrap(), expect, "n={n} threads={threads}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -22,11 +22,14 @@
 //!   and the per-set maps are therefore **bit-for-bit identical** to the
 //!   sequential scan for every thread count.
 //!
-//! The same two-phase story applies downstream: [`Partition::build_tries`]
-//! has a sharded sibling ([`Partition::build_tries_parallel`]) that
-//! registers sets into per-shard [`ConfigForest`] arenas concurrently and
-//! merges them with a final hash-consing pass
-//! ([`ConfigForest::adopt_trie`]) into the *serial* arena, and
+//! Neither half keeps a serial wall: the exclusive prefix-sum across
+//! chunk histograms runs as a two-pass tree reduction (up-sweep of merged
+//! counts, key-filtered down-sweep of offsets — both parallel per level),
+//! and the per-shard [`ConfigForest`] arenas of the sharded trie build
+//! ([`Partition::build_tries_parallel`]) fold together by a deterministic
+//! pairwise tree-merge of hash-consing passes
+//! ([`ConfigForest::adopt_trie`]) that lands on the *serial* arena —
+//! class ids included — for every thread count.
 //! [`Partition::conditioned_sampler_threaded`] parallelizes the product
 //! DAG's bottom-up mass aggregation per level.
 
@@ -71,6 +74,146 @@ pub struct Partition {
     /// diagnostic surface (tests/tooling), not consulted by the descent.
     forest: Option<ConfigForest>,
     tries: Vec<ConfigTrie>,
+    /// Wall-clock of the trie build's shard-merge phase (0 when the build
+    /// ran serially). Timing only — never consulted by the sampling path.
+    trie_merge_ms: f64,
+}
+
+/// One shard's private trie arena plus its registered tries tagged with
+/// their **global** set index (ascending — shard `s` of `S` holds sets
+/// `s, s + S, …`). The unit the pairwise tree-merge folds over.
+struct ShardForest {
+    forest: ConfigForest,
+    tries: Vec<(usize, ConfigTrie)>,
+}
+
+/// Combine two shard forests into one by re-interning every trie of both
+/// into a fresh arena in **ascending global set order** (a two-pointer
+/// merge of the two sorted lists), with one pre-sized [`AdoptMemo`] per
+/// source so shared suffix structure is re-interned once.
+///
+/// Adoption creates classes in the target in first-visit DFS post-order —
+/// exactly the order [`ConfigForest::register_set`] creates them — so the
+/// combined arena is *the* canonical arena of the merged set list. The
+/// pairwise tree over shards therefore converges to the serial build's
+/// arena (class ids included) regardless of the pairing shape, which is
+/// what keeps the output bit-for-bit identical for every thread count.
+fn merge_shard_forests(depth: usize, a: ShardForest, b: ShardForest) -> ShardForest {
+    let mut forest = ConfigForest::new(depth);
+    let mut memo_a = AdoptMemo::for_source(&a.forest);
+    let mut memo_b = AdoptMemo::for_source(&b.forest);
+    let mut tries = Vec::with_capacity(a.tries.len() + b.tries.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.tries.len() || j < b.tries.len() {
+        let from_a = match (a.tries.get(i), b.tries.get(j)) {
+            (Some((ia, _)), Some((jb, _))) => ia < jb,
+            (Some(_), None) => true,
+            (None, _) => false,
+        };
+        if from_a {
+            let (idx, trie) = &a.tries[i];
+            tries.push((*idx, forest.adopt_trie(&a.forest, trie, &mut memo_a)));
+            i += 1;
+        } else {
+            let (idx, trie) = &b.tries[j];
+            tries.push((*idx, forest.adopt_trie(&b.forest, trie, &mut memo_b)));
+            j += 1;
+        }
+    }
+    ShardForest { forest, tries }
+}
+
+/// The exclusive prefix-sum across per-chunk config histograms, as a
+/// two-pass tree reduction (Blelloch-style up/down-sweep over maps).
+/// Returns `(total, starts)`: the global `config → multiplicity` map and,
+/// per chunk, the rank its first occurrence of each config starts at.
+///
+/// * **Up-sweep** (parallel per level): node `j` of level `k + 1` merges
+///   the histograms of children `2j` and `2j + 1` of level `k`; the root
+///   is the global multiplicity map. Every level is kept.
+/// * **Down-sweep** (parallel per level): a node's offset map holds, for
+///   each config, how many occurrences precede its subtree — the left
+///   child inherits the parent's offsets, the right child adds the left
+///   sibling's counts. Crucially each offset map is **key-filtered to
+///   its own subtree's configs**: that keeps memory `O(total histogram
+///   entries)` per level instead of `O(chunks × unique)`, and it makes
+///   the leaf maps carry exactly their chunk's key set — a config first
+///   appearing in chunk `i` maps to 0 there — which is precisely the
+///   serial fold's `starts[i]` contents that phase 3 indexes into.
+///
+/// Counts are exact integer sums, so the result is identical to the
+/// serial left-to-right fold for every thread count; `threads <= 1` runs
+/// the serial fold directly.
+fn exclusive_chunk_offsets(
+    histograms: Vec<FastMap<Config, u32>>,
+    threads: usize,
+) -> (FastMap<Config, u32>, Vec<FastMap<Config, u32>>) {
+    if threads <= 1 || histograms.len() <= 2 {
+        let entries: usize = histograms.iter().map(|h| h.len()).sum();
+        let mut total: FastMap<Config, u32> = fast_map_with_capacity(entries);
+        let mut starts: Vec<FastMap<Config, u32>> = Vec::with_capacity(histograms.len());
+        for h in &histograms {
+            let mut s: FastMap<Config, u32> = fast_map_with_capacity(h.len());
+            for (&c, &cnt) in h {
+                let t = total.entry(c).or_insert(0);
+                s.insert(c, *t);
+                *t += cnt;
+            }
+            starts.push(s);
+        }
+        return (total, starts);
+    }
+
+    // Up-sweep.
+    let mut levels: Vec<Vec<FastMap<Config, u32>>> = vec![histograms];
+    while levels.last().is_some_and(|l| l.len() > 1) {
+        let src = levels.last().expect("non-empty by construction");
+        let pair_ids: Vec<usize> = (0..src.len().div_ceil(2)).collect();
+        let next: Vec<FastMap<Config, u32>> =
+            crate::parallel::map_indexed(pair_ids, threads, |_, j| {
+                let mut m = src[2 * j].clone();
+                if let Some(right) = src.get(2 * j + 1) {
+                    for (&c, &cnt) in right {
+                        *m.entry(c).or_insert(0) += cnt;
+                    }
+                }
+                m
+            });
+        levels.push(next);
+    }
+
+    // Down-sweep.
+    let top = levels.len() - 1;
+    let root = &levels[top][0];
+    let mut root_off: FastMap<Config, u32> = fast_map_with_capacity(root.len());
+    for &c in root.keys() {
+        root_off.insert(c, 0);
+    }
+    let mut offs = vec![root_off];
+    for k in (0..top).rev() {
+        let parents = offs;
+        let src = &levels[k];
+        let ids: Vec<usize> = (0..src.len()).collect();
+        offs = crate::parallel::map_indexed(ids, threads, |_, j| {
+            let p = &parents[j / 2];
+            let mut m: FastMap<Config, u32> = fast_map_with_capacity(src[j].len());
+            if j % 2 == 0 {
+                for &c in src[j].keys() {
+                    m.insert(c, p.get(&c).copied().unwrap_or(0));
+                }
+            } else {
+                let left = &src[j - 1];
+                for &c in src[j].keys() {
+                    let before =
+                        p.get(&c).copied().unwrap_or(0) + left.get(&c).copied().unwrap_or(0);
+                    m.insert(c, before);
+                }
+            }
+            m
+        });
+    }
+    let total = levels.pop().expect("root level").pop().expect("root node");
+    (total, offs)
 }
 
 impl Partition {
@@ -91,17 +234,18 @@ impl Partition {
             sets[idx].push(i as NodeId);
             maps[idx].insert(c, i as NodeId);
         }
-        Partition { sets, maps, dense: Vec::new(), forest: None, tries: Vec::new() }
+        Partition { sets, maps, dense: Vec::new(), forest: None, tries: Vec::new(), trie_merge_ms: 0.0 }
     }
 
     /// Parallel [`Partition::build`] over `threads` setup threads.
     ///
     /// Three passes replace the sequential multiplicity scan: per-chunk
     /// config histograms (parallel), an exclusive prefix-sum across the
-    /// chunk histograms (serial, `O(unique configs)` per chunk), and a
-    /// per-chunk rank assignment (parallel) whose chunk-start offsets come
-    /// from the prefix sums — node `i`'s rank equals the number of earlier
-    /// nodes with its config, exactly as in the sequential scan. Output is
+    /// chunk histograms (a two-pass tree reduction, parallel per level —
+    /// `O(log chunks)` sweeps instead of a serial fold), and a per-chunk
+    /// rank assignment (parallel) whose chunk-start offsets come from the
+    /// prefix sums — node `i`'s rank equals the number of earlier nodes
+    /// with its config, exactly as in the sequential scan. Output is
     /// identical for every `threads`; `threads <= 1` or small inputs
     /// delegate to the sequential build.
     pub fn build_parallel(configs: &[Config], threads: usize) -> Self {
@@ -143,19 +287,10 @@ impl Partition {
                 h
             });
 
-        // Phase 2 (serial, O(unique per chunk)): exclusive prefix sums —
-        // the occurrence rank each config starts at in each chunk.
-        let mut total: FastMap<Config, u32> = fast_map_with_capacity(len);
-        let mut starts: Vec<FastMap<Config, u32>> = Vec::with_capacity(num_chunks);
-        for h in &histograms {
-            let mut s: FastMap<Config, u32> = fast_map_with_capacity(h.len());
-            for (&c, &cnt) in h {
-                let t = total.entry(c).or_insert(0);
-                s.insert(c, *t);
-                *t += cnt;
-            }
-            starts.push(s);
-        }
+        // Phase 2 (two-pass tree reduction, parallel per level): exclusive
+        // prefix sums — the occurrence rank each config starts at in each
+        // chunk — plus the global multiplicity map.
+        let (total, starts) = exclusive_chunk_offsets(histograms, threads);
         let b = total.values().copied().max().unwrap_or(0) as usize;
         // |D_r| = number of configs with multiplicity > r (exact
         // capacities for phase 4's pushes).
@@ -207,7 +342,7 @@ impl Partition {
                 m
             });
 
-        Partition { sets, maps, dense: Vec::new(), forest: None, tries: Vec::new() }
+        Partition { sets, maps, dense: Vec::new(), forest: None, tries: Vec::new(), trie_merge_ms: 0.0 }
     }
 
     /// Build restricted to a subset of nodes (used by the hybrid sampler's
@@ -228,7 +363,7 @@ impl Partition {
             sets[idx].push(i);
             maps[idx].insert(c, i);
         }
-        Partition { sets, maps, dense: Vec::new(), forest: None, tries: Vec::new() }
+        Partition { sets, maps, dense: Vec::new(), forest: None, tries: Vec::new(), trie_merge_ms: 0.0 }
     }
 
     /// Build the per-set prefix tries (and per-level reachability masks)
@@ -242,11 +377,15 @@ impl Partition {
 
     /// Parallel [`Partition::build_tries`]: set `c` is registered into the
     /// private forest of shard `c % shards` (shards build concurrently),
-    /// then the shard tries are re-interned into one arena **in set
-    /// order** by [`ConfigForest::adopt_trie`]. Adoption creates classes
-    /// in exactly the order serial registration would have, so the merged
-    /// forest — class ids included — and the tries are bit-for-bit the
-    /// serial build's for every thread count. Idempotent.
+    /// then the shard forests fold together by a deterministic pairwise
+    /// tree-merge ([`merge_shard_forests`] via
+    /// [`crate::parallel::tree_reduce`]) whose every combine re-interns
+    /// tries in ascending set order. Adoption creates classes in exactly
+    /// the order serial registration would have, so the merged forest —
+    /// class ids included — and the tries are bit-for-bit the serial
+    /// build's for every thread count; the merge itself takes `O(log
+    /// shards)` parallel levels instead of one serial re-interning loop.
+    /// Idempotent.
     pub fn build_tries_parallel(&mut self, depth: usize, threads: usize) {
         if let Some(forest) = &self.forest {
             debug_assert_eq!(
@@ -269,32 +408,43 @@ impl Partition {
             let mut forest = ConfigForest::new(depth);
             self.tries = cfg_lists.iter().map(|cfgs| forest.register_set(cfgs)).collect();
             self.forest = Some(forest);
+            self.trie_merge_ms = 0.0;
             return;
         }
         // Shard build (parallel): shard s registers sets s, s+shards, …
         let cfg_ref = &cfg_lists;
         let shard_ids: Vec<usize> = (0..shards).collect();
-        let shard_forests: Vec<(ConfigForest, Vec<ConfigTrie>)> =
+        let shard_forests: Vec<ShardForest> =
             crate::parallel::map_indexed(shard_ids, threads, |_, s| {
                 let mut forest = ConfigForest::new(depth);
                 let tries = cfg_ref
                     .iter()
+                    .enumerate()
                     .skip(s)
                     .step_by(shards)
-                    .map(|cfgs| forest.register_set(cfgs))
+                    .map(|(idx, cfgs)| (idx, forest.register_set(cfgs)))
                     .collect();
-                (forest, tries)
+                ShardForest { forest, tries }
             });
-        // Merge (serial hash-consing pass, in set order).
-        let mut forest = ConfigForest::new(depth);
-        let mut memos: Vec<AdoptMemo> = (0..shards).map(|_| AdoptMemo::new(depth)).collect();
-        let mut tries = Vec::with_capacity(cfg_lists.len());
-        for idx in 0..cfg_lists.len() {
-            let (src, shard_tries) = &shard_forests[idx % shards];
-            tries.push(forest.adopt_trie(src, &shard_tries[idx / shards], &mut memos[idx % shards]));
-        }
-        self.tries = tries;
-        self.forest = Some(forest);
+        // Merge (pairwise tree of hash-consing passes, parallel per level).
+        let merge_start = std::time::Instant::now();
+        let merged = crate::parallel::tree_reduce(shard_forests, threads, |a, b| {
+            merge_shard_forests(depth, a, b)
+        })
+        .expect("shards >= 1");
+        self.trie_merge_ms = merge_start.elapsed().as_secs_f64() * 1e3;
+        debug_assert!(
+            merged.tries.iter().enumerate().all(|(k, (idx, _))| k == *idx),
+            "tree-merge must yield every set's trie in global order"
+        );
+        self.tries = merged.tries.into_iter().map(|(_, t)| t).collect();
+        self.forest = Some(merged.forest);
+    }
+
+    /// Wall-clock milliseconds the last [`Partition::build_tries_parallel`]
+    /// spent in its shard-merge phase (0 for serial builds).
+    pub fn trie_merge_ms(&self) -> f64 {
+        self.trie_merge_ms
     }
 
     /// Whether [`Partition::build_tries`] has run.
@@ -575,7 +725,8 @@ mod tests {
         let depth = 13;
         let mut serial = Partition::build(&configs);
         serial.build_tries(depth);
-        for threads in [2usize, 3, 8] {
+        assert_eq!(serial.trie_merge_ms(), 0.0, "serial build has no merge phase");
+        for threads in [1usize, 2, 3, 8] {
             let mut par = Partition::build_parallel(&configs, threads);
             par.build_tries_parallel(depth, threads);
             assert_eq!(
@@ -585,6 +736,31 @@ mod tests {
             );
             for c in 0..serial.size() {
                 assert_eq!(par.trie(c), serial.trie(c), "trie {c} at threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_prefix_sum_matches_serial_fold() {
+        // The up/down-sweep must reproduce the serial fold's exact maps:
+        // same total multiplicities, and per chunk exactly that chunk's
+        // key set (first appearances at 0) with the serial start ranks.
+        let mut rng = crate::rng::Rng::new(59);
+        for num_chunks in [3usize, 4, 7, 16, 33] {
+            let histograms: Vec<FastMap<Config, u32>> = (0..num_chunks)
+                .map(|_| {
+                    let mut h: FastMap<Config, u32> = FastMap::default();
+                    for _ in 0..rng.below(50) {
+                        *h.entry(rng.below(30)).or_insert(0) += 1 + rng.below(4) as u32;
+                    }
+                    h
+                })
+                .collect();
+            let (serial_total, serial_starts) = exclusive_chunk_offsets(histograms.clone(), 1);
+            for threads in [2usize, 3, 8] {
+                let (total, starts) = exclusive_chunk_offsets(histograms.clone(), threads);
+                assert_eq!(total, serial_total, "chunks={num_chunks} threads={threads}");
+                assert_eq!(starts, serial_starts, "chunks={num_chunks} threads={threads}");
             }
         }
     }

@@ -11,7 +11,7 @@ use std::path::{Path, PathBuf};
 use magquilt::config::{ModelSpec, RunSpec, SamplerKind};
 use magquilt::coordinator::Coordinator;
 use magquilt::dist::{self, ShardPlan};
-use magquilt::graph::{read_edge_list_binary, BinaryFileSink, EdgeList};
+use magquilt::graph::{read_edge_list_binary, BinaryFileSink, EdgeList, DEFAULT_SPILL_BUDGET};
 use magquilt::kpgm::Initiator;
 use magquilt::magm::{AttrSampleMode, AttributeAssignment, MagmParams};
 use magquilt::quilt::{HybridSampler, PieceMode, QuiltSampler};
@@ -42,6 +42,14 @@ fn params_of(model: &ModelSpec) -> MagmParams {
 }
 
 /// Run every worker of `plan` in-process, then merge into `out`.
+///
+/// Before the final (input-consuming) merge, the parallel merge is
+/// exercised: `--merge-threads` ∈ {2, 8} — plus 8 under a zero spill
+/// budget, forcing every out-of-order delivery through a spill file —
+/// must write files byte-identical to the serial T = 1 merge, for every
+/// sampler, piece mode, and worker count the callers sweep. The scratch
+/// outputs live in a sibling directory: the scan owns every name inside
+/// the segment dir itself.
 fn run_pipeline(plan: &ShardPlan, dir: &Path, out: &Path) -> dist::MergeReport {
     for w in 0..plan.num_workers() {
         let report = dist::run_worker(plan, w, dir).unwrap();
@@ -52,6 +60,44 @@ fn run_pipeline(plan: &ShardPlan, dir: &Path, out: &Path) -> dist::MergeReport {
             "worker {w} wrote every owned shard"
         );
     }
+    let aux = dir.with_file_name(format!(
+        "{}_aux",
+        dir.file_name().unwrap().to_string_lossy()
+    ));
+    let _ = std::fs::remove_dir_all(&aux);
+    std::fs::create_dir_all(&aux).unwrap();
+    let serial_out = aux.join("serial.bin");
+    let serial = dist::merge_segments_with(
+        dir,
+        plan,
+        &serial_out,
+        &dist::MergeOptions { merge_threads: 1, remove_inputs: false, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(serial.merge_threads, 1);
+    let serial_bytes = std::fs::read(&serial_out).unwrap();
+    for (threads, budget) in [(2usize, DEFAULT_SPILL_BUDGET), (8, DEFAULT_SPILL_BUDGET), (8, 0)]
+    {
+        let par_out = aux.join(format!("t{threads}_b{budget}.bin"));
+        let rep = dist::merge_segments_with(
+            dir,
+            plan,
+            &par_out,
+            &dist::MergeOptions {
+                merge_threads: threads,
+                spill_budget: budget,
+                remove_inputs: false,
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            std::fs::read(&par_out).unwrap(),
+            serial_bytes,
+            "parallel merge T={threads} budget={budget} must be byte-identical"
+        );
+        assert_eq!(rep.shards, serial.shards, "rows T={threads} budget={budget}");
+    }
+    let _ = std::fs::remove_dir_all(&aux);
     dist::merge_segments(dir, plan, out, true).unwrap()
 }
 
@@ -169,8 +215,26 @@ fn forced_overflow_routes_cross_worker_edges() {
                 e.as_ref().unwrap().file_name().to_string_lossy().ends_with(".ovf")
             })
             .count();
+        // A parallel merge with a zero spill budget on this
+        // overflow-heavy layout (output in a sibling dir: the scan owns
+        // every name in the segment dir) …
+        let aux = tmp(&format!("overflow_{seed}_aux"));
+        let par_out = aux.join("par.bin");
+        dist::merge_segments_with(
+            &dir,
+            &plan,
+            &par_out,
+            &dist::MergeOptions { merge_threads: 8, spill_budget: 0, remove_inputs: false },
+        )
+        .unwrap();
+        // … must byte-match the serial consuming merge.
         let out = dir.join("merged.bin");
         let report = dist::merge_segments(&dir, &plan, &out, true).unwrap();
+        assert_eq!(
+            std::fs::read(&par_out).unwrap(),
+            std::fs::read(&out).unwrap(),
+            "forced-spill parallel merge differs at seed {seed}"
+        );
         assert_eq!(report.overflow_runs(), ovf_files);
         assert_eq!(read_edge_list_binary(&out).unwrap(), sequential_baseline(&plan), "seed {seed}");
         if ovf_files > 0 {
@@ -372,6 +436,22 @@ fn cli_standalone_worker_and_merge_pipeline() {
         "stats", seg_dir.to_str().unwrap(), "--plan", plan_path.to_str().unwrap(),
     ]);
     assert_success(&out, "stats segment dir");
+    // A parallel rehearsal merge first (segments kept, output beside —
+    // not inside — the segment dir): it must report its thread count
+    // and byte-match the consuming serial merge below.
+    let merged_par = dir.join("merged_par.bin");
+    let out = run_bin(&[
+        "merge-segments", "--segments", seg_dir.to_str().unwrap(),
+        "--plan", plan_path.to_str().unwrap(),
+        "--merge-threads", "4",
+        "--out", merged_par.to_str().unwrap(),
+    ]);
+    assert_success(&out, "merge-segments --merge-threads 4");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("4 merge thread"),
+        "merge timing line missing from:\n{stdout}"
+    );
     let merged = dir.join("merged.bin");
     let out = run_bin(&[
         "merge-segments", "--segments", seg_dir.to_str().unwrap(),
@@ -380,6 +460,7 @@ fn cli_standalone_worker_and_merge_pipeline() {
     ]);
     assert_success(&out, "merge-segments");
     assert_eq!(std::fs::read_dir(&seg_dir).unwrap().count(), 0, "--remove-segments drained");
+    assert_eq!(std::fs::read(&merged_par).unwrap(), std::fs::read(&merged).unwrap());
     // Equal to the all-in-one driver for the same spec.
     let driver_out = dir.join("driver.bin");
     let out = run_bin(&[
