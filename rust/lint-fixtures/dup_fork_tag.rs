@@ -1,0 +1,7 @@
+// maglint fixture: two registry constants with the same tag value.
+
+/// First stream.
+pub const STREAM_A: u64 = 0xabc;
+
+/// Second stream accidentally reuses the value.
+pub const STREAM_B: u64 = 0xabc;

@@ -1,0 +1,6 @@
+// maglint fixture: wall-clock in an output-determining module.
+
+pub fn elapsed_ms() -> u128 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_millis()
+}

@@ -1,0 +1,5 @@
+// maglint fixture: raw hex fork tag at a call site.
+
+pub fn sample(rng: &Rng) -> u64 {
+    rng.fork(0x1234).next_u64()
+}

@@ -1,0 +1,16 @@
+// maglint fixture: panic path in an I/O module.
+
+pub fn read_len(buf: &[u8]) -> usize {
+    let head: [u8; 4] =
+        buf[..4].try_into().unwrap();
+    u32::from_le_bytes(head) as usize
+}
+pub fn first(buf: &[u8]) -> u8 { *buf.first().expect("nonempty") } // lint: panic-ok(fixture annotation)
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn in_tests_unwrap_is_fine() {
+        Some(1u32).unwrap();
+    }
+}

@@ -1,0 +1,30 @@
+// maglint fixture: a ShardPlan field with no declared hash fate and a
+// RunSpec field missing from the fate lists. Parsed by tests, not compiled.
+
+pub struct ShardPlan {
+    /// Hashed in canonical().
+    pub seed: u64,
+    /// Exempt per-host knob.
+    pub workers: usize,
+    /// Exempt; the stale-entry test rewrites its list entry.
+    pub extra_stale: usize,
+    /// Neither hashed nor exempt: the tripwire target.
+    pub extra_knob: usize,
+}
+
+impl ShardPlan {
+    fn canonical(&self) -> String {
+        format!("plan|seed={}", self.seed)
+    }
+}
+
+const HASH_EXEMPT: &[&str] = &["workers", "extra_stale"];
+
+pub struct RunSpec {
+    pub seed: u64,
+    pub workers: usize,
+    pub new_run_field: usize,
+}
+
+const RUNSPEC_HASHED: &[&str] = &["seed"];
+const RUNSPEC_EXEMPT: &[&str] = &["workers"];

@@ -1,0 +1,11 @@
+// maglint fixture: FastMap iteration order reaching the output.
+
+pub fn emit(counts: &FastMap<u64, u32>) -> Vec<u64> {
+    let mut out = Vec::new();
+    for (&k, _) in counts.iter() {
+        out.push(k);
+    }
+    let mut ordered: Vec<u64> = counts.keys().copied().collect(); // lint: order-ok(sorted on the next line)
+    ordered.sort_unstable();
+    out
+}

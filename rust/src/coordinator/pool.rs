@@ -674,14 +674,15 @@ impl Coordinator {
             span_counts.iter().map(|&c| AtomicUsize::new(c)).collect();
 
         let kpgm = BallDropSampler::new(plan.params.thetas().clone());
-        // Matches the single-threaded samplers' fork tags so coordinated
-        // and sequential sampling agree for the same seed.
+        // The registry constants are the same ones the single-threaded
+        // samplers fork, so coordinated and sequential sampling read
+        // identical streams for the same seed.
         let piece_base = Rng::new(plan.seed).fork(if plan.hybrid.is_some() {
-            0x4b1d
+            crate::rngtags::HYBRID_PIECE_STREAM
         } else {
-            0x9011_7ed
+            crate::rngtags::QUILT_PIECE_STREAM
         });
-        let er_base = Rng::new(plan.seed).fork(0xe4b10c);
+        let er_base = Rng::new(plan.seed).fork(crate::rngtags::ER_STREAM);
 
         let next_job = AtomicUsize::new(0);
         let dropped_total = AtomicU64::new(0);
@@ -777,8 +778,22 @@ impl Coordinator {
                                 }
                             }
                             Job::ErBlock { src, dst, fork_id } => {
-                                let hybrid =
-                                    plan_ref.hybrid.as_ref().expect("ER block without plan");
+                                // A planner bug, not a data error — but a
+                                // panic here would poison the run with a
+                                // hung merger; surface it through the
+                                // abort path like any other worker error.
+                                let Some(hybrid) = plan_ref.hybrid.as_ref() else {
+                                    route_error_ref
+                                        .lock()
+                                        .unwrap_or_else(|p| p.into_inner())
+                                        .get_or_insert_with(|| {
+                                            "planner emitted an ER block without a hybrid \
+                                             plan"
+                                                .to_string()
+                                        });
+                                    aborted_ref.store(true, Ordering::Relaxed);
+                                    break;
+                                };
                                 let (ci, nodes_i) = block(hybrid, src);
                                 let (cj, nodes_j) = block(hybrid, dst);
                                 let p = crate::kpgm::edge_probability(
@@ -853,9 +868,12 @@ impl Coordinator {
                             (None, None) => None,
                         };
                         if let Some(error) = error {
+                            // A poisoned lock means a sibling panicked
+                            // mid-report; recover the inner value — the
+                            // first recorded error still wins.
                             route_error_ref
                                 .lock()
-                                .expect("route-error mutex poisoned")
+                                .unwrap_or_else(|p| p.into_inner())
                                 .get_or_insert(error);
                             aborted_ref.store(true, Ordering::Relaxed);
                             break;
@@ -899,10 +917,20 @@ impl Coordinator {
                 shard_stats.push(stats);
             }
             for handle in merger_handles {
-                handle.join().expect("shard merger panicked");
+                if handle.join().is_err() {
+                    // Don't re-panic on the coordinator thread: record the
+                    // failure so it surfaces as an error through the same
+                    // path as routing errors, with the sink result intact.
+                    route_error
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .get_or_insert_with(|| "a shard merger thread panicked".to_string());
+                    aborted.store(true, Ordering::Relaxed);
+                }
             }
         });
-        if let Some(msg) = route_error.into_inner().expect("route-error mutex poisoned") {
+        let route_error = route_error.into_inner().unwrap_or_else(|p| p.into_inner());
+        if let Some(msg) = route_error {
             return Err(io::Error::new(io::ErrorKind::InvalidData, msg));
         }
         sink_result?;

@@ -110,6 +110,73 @@ pub struct ShardPlan {
     pub ranges: Vec<(usize, usize)>,
 }
 
+/// [`ShardPlan`] fields deliberately left OUT of the content hash: per-host
+/// wall-clock knobs that never change a byte of output, so two hosts
+/// running the same plan with different thread counts still agree on the
+/// segment-file hash tag.
+///
+/// maglint's plan-hash tripwire parses this list and `canonical()` and
+/// requires every `ShardPlan` field to appear in exactly one of them —
+/// adding a field without deciding its hash fate fails
+/// `cargo run --bin maglint` (and the crate's self-lint test).
+pub const HASH_EXEMPT: &[&str] = &["workers", "setup_threads", "merge_threads"];
+
+/// [`crate::config::RunSpec`] fields whose values flow into the plan's
+/// hashed (output-determining) fields via [`ShardPlan::new`].
+pub const RUNSPEC_HASHED: &[&str] =
+    &["seed", "shards", "attr_mode", "sampler", "piece_mode", "dist_workers"];
+
+/// [`crate::config::RunSpec`] fields that never influence output bytes:
+/// per-host parallelism knobs, output/scratch locations, and the
+/// experiment repeat count. maglint requires every `RunSpec` field to
+/// appear in exactly one of [`RUNSPEC_HASHED`] / this list.
+pub const RUNSPEC_EXEMPT: &[&str] = &[
+    "workers",
+    "setup_threads",
+    "merge_threads",
+    "output",
+    "spill_dir",
+    "spill_budget",
+    "segment_dir",
+    "trials",
+];
+
+/// Compile-time companion to the fate lists: exhaustively destructures
+/// (no `..`) the plan, model, and run structs, so adding a field without
+/// visiting this function — and the lists above — fails the build even
+/// before the lint runs.
+#[allow(dead_code)]
+fn hash_disposition_witness(plan: &ShardPlan, run: &RunSpec) {
+    let ShardPlan {
+        model: ModelSpec { theta: _, mu: _, log2_nodes: _, attributes: _ }, // hashed
+        seed: _,          // hashed via canonical()
+        sampler: _,       // hashed
+        piece_mode: _,    // hashed
+        attr_mode: _,     // hashed
+        workers: _,       // HASH_EXEMPT
+        setup_threads: _, // HASH_EXEMPT
+        merge_threads: _, // HASH_EXEMPT
+        num_shards: _,    // hashed
+        ranges: _,        // hashed
+    } = plan;
+    let RunSpec {
+        seed: _,          // RUNSPEC_HASHED
+        workers: _,       // RUNSPEC_EXEMPT
+        shards: _,        // RUNSPEC_HASHED (clamped into num_shards)
+        setup_threads: _, // RUNSPEC_EXEMPT
+        attr_mode: _,     // RUNSPEC_HASHED (resolved into plan.attr_mode)
+        sampler: _,       // RUNSPEC_HASHED
+        piece_mode: _,    // RUNSPEC_HASHED
+        output: _,        // RUNSPEC_EXEMPT
+        spill_dir: _,     // RUNSPEC_EXEMPT
+        spill_budget: _,  // RUNSPEC_EXEMPT
+        dist_workers: _,  // RUNSPEC_HASHED (shapes num_shards and ranges)
+        segment_dir: _,   // RUNSPEC_EXEMPT
+        merge_threads: _, // RUNSPEC_EXEMPT
+        trials: _,        // RUNSPEC_EXEMPT
+    } = run;
+}
+
 impl ShardPlan {
     /// Build a plan from a model + run spec for `dist_workers` processes.
     ///
@@ -481,6 +548,32 @@ mod tests {
             }
             plan.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn run_nonce_never_reaches_hashed_plan_fields() {
+        // The spill-path run nonce (graph::run_nonce) is intentionally
+        // wall-clock-derived; the plan hash must be blind to it. Drawing
+        // the nonce (any number of times) must not move the hash, and the
+        // canonical string is a pure function of the plan fields.
+        let mut run = RunSpec::default_spec();
+        run.seed = 23;
+        run.shards = 4;
+        let plan = ShardPlan::new(&model(9), &run, 2).unwrap();
+        let before = plan.hash64();
+        let n1 = crate::graph::run_nonce();
+        assert_eq!(plan.hash64(), before, "drawing the nonce moved the plan hash");
+        let n2 = crate::graph::run_nonce();
+        assert_eq!(n1, n2, "the nonce is per-process state, stable within the process");
+        let rebuilt = ShardPlan::new(&model(9), &run, 2).unwrap();
+        assert_eq!(
+            rebuilt.canonical(),
+            plan.canonical(),
+            "canonical() must be a pure function of the plan fields"
+        );
+        // Belt and braces: the manifest text (the full serialized surface)
+        // carries no nonce-derived bytes either.
+        assert_eq!(rebuilt.to_toml(), plan.to_toml());
     }
 
     #[test]

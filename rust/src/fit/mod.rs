@@ -27,9 +27,11 @@ use crate::magm::AttributeAssignment;
 /// observed edges.
 #[derive(Debug, Clone)]
 pub struct SufficientStats {
-    /// Packed profile key → (pair count, edge count). Key packs
-    /// (n00, n01, n10) base (d+1); n11 = d − the rest.
-    classes: FastMap<u64, (u64, u64)>,
+    /// `(packed profile key, (pair count, edge count))`, sorted by key.
+    /// Key packs (n00, n01, n10) base (d+1); n11 = d − the rest. Stored
+    /// sorted — not as a hash map — so the float accumulation order in
+    /// [`Self::loglik`] is fixed by the data, never by hasher state.
+    classes: Vec<(u64, (u64, u64))>,
     depth: u32,
 }
 
@@ -49,23 +51,26 @@ impl SufficientStats {
         let d = attrs.depth();
         let base = (d + 1) as u64;
         let counts = attrs.config_counts();
-        let mut classes: FastMap<u64, (u64, u64)> = FastMap::default();
+        let mut acc: FastMap<u64, (u64, u64)> = FastMap::default();
 
         // Pair totals over distinct configuration pairs.
         for &(ci, mi) in &counts {
             for &(cj, mj) in &counts {
                 let key = profile_key(ci, cj, d, base);
-                classes.entry(key).or_insert((0, 0)).0 += mi as u64 * mj as u64;
+                acc.entry(key).or_insert((0, 0)).0 += mi as u64 * mj as u64;
             }
         }
         // Edge counts over observed edges.
         for &(s, t) in graph.edges() {
             let key = profile_key(attrs.config(s), attrs.config(t), d, base);
-            classes
-                .get_mut(&key)
+            acc.get_mut(&key)
                 .expect("edge profile must exist among pair profiles")
                 .1 += 1;
         }
+        // Freeze into key order so every later float sum over the classes
+        // is order-deterministic regardless of hasher internals.
+        let mut classes: Vec<(u64, (u64, u64))> = acc.into_iter().collect(); // lint: order-ok(sorted on the next line)
+        classes.sort_unstable_by_key(|&(key, _)| key);
         SufficientStats { classes, depth: d }
     }
 
@@ -84,7 +89,7 @@ impl SufficientStats {
             theta.get(1, 1).max(1e-300).ln(),
         ];
         let mut total = 0.0;
-        for (&key, &(pairs, edges)) in &self.classes {
+        for &(key, (pairs, edges)) in &self.classes {
             let n10 = (key % base) as f64;
             let n01 = ((key / base) % base) as f64;
             let n00 = (key / (base * base)) as f64;

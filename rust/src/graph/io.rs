@@ -203,8 +203,8 @@ fn read_records_chunked(r: &mut impl Read, n: u64, m: u64) -> io::Result<Vec<Edg
             io::Error::new(io::ErrorKind::InvalidData, format!("edge records truncated: {e}"))
         })?;
         for rec in buf.chunks_exact(BINARY_EDGE_LEN as usize) {
-            let s = u32::from_le_bytes(rec[..4].try_into().expect("4-byte slice"));
-            let t = u32::from_le_bytes(rec[4..].try_into().expect("4-byte slice"));
+            let s = u32::from_le_bytes(rec[..4].try_into().expect("4-byte slice")); // lint: panic-ok(chunks_exact(8) guarantees the width)
+            let t = u32::from_le_bytes(rec[4..].try_into().expect("4-byte slice")); // lint: panic-ok(chunks_exact(8) guarantees the width)
             if u64::from(s) >= n || u64::from(t) >= n {
                 return Err(io::Error::new(
                     io::ErrorKind::InvalidData,

@@ -314,7 +314,7 @@ fn merge_sorted_into(run: &mut Vec<Edge>, batch: &[Edge]) -> usize {
     }
     // Fast path: the batch lies entirely after the run (common when jobs
     // write localized blocks).
-    if *run.last().expect("non-empty") < batch[0] {
+    if *run.last().expect("non-empty") < batch[0] { // lint: panic-ok(guarded by the is_empty early return above)
         run.extend_from_slice(batch);
         return 0;
     }
@@ -544,7 +544,10 @@ impl EdgeSink for CountingSink {
     }
 
     fn accept_shard(&mut self, index: usize, run: Vec<Edge>) -> io::Result<ShardDisposition> {
-        let counts = self.counts.as_mut().expect("begin not called");
+        let counts = self
+            .counts
+            .as_mut()
+            .ok_or_else(|| io::Error::other("accept_shard before begin"))?;
         let seen = self
             .seen
             .get_mut(index)
@@ -659,7 +662,10 @@ impl BinaryFileSink {
 
     /// Append one run to the file.
     fn write_run(&mut self, run: &[Edge]) -> io::Result<()> {
-        let w = self.writer.as_mut().expect("begin not called");
+        let w = self
+            .writer
+            .as_mut()
+            .ok_or_else(|| io::Error::other("write_run before begin"))?;
         w.write_edges(run)?;
         self.num_edges += run.len() as u64;
         Ok(())
@@ -675,7 +681,10 @@ impl BinaryFileSink {
                     self.write_run(&run)?;
                 }
                 PendingShard::Spilled(spill) => {
-                    let writer = self.writer.as_mut().expect("begin not called");
+                    let writer = self
+                        .writer
+                        .as_mut()
+                        .ok_or_else(|| io::Error::other("drain_pending before begin"))?;
                     let mut written = 0u64;
                     spill.for_each_chunk(SPILL_READ_CHUNK, |chunk| {
                         writer.write_edges(chunk)?;

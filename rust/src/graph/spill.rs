@@ -40,7 +40,7 @@ pub const SPILL_READ_CHUNK: usize = 128 * 1024;
 pub fn run_nonce() -> u64 {
     static NONCE: OnceLock<u64> = OnceLock::new();
     *NONCE.get_or_init(|| {
-        let t = std::time::SystemTime::now()
+        let t = std::time::SystemTime::now() // lint: time-ok(run nonce, never output-determining)
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_nanos() as u64)
             .unwrap_or(0);
@@ -174,8 +174,8 @@ impl SpillRun {
             })?;
             edges.clear();
             for rec in buf.chunks_exact(SPILL_EDGE_LEN as usize) {
-                let s = u32::from_le_bytes(rec[..4].try_into().expect("4-byte slice"));
-                let t = u32::from_le_bytes(rec[4..].try_into().expect("4-byte slice"));
+                let s = u32::from_le_bytes(rec[..4].try_into().expect("4-byte slice")); // lint: panic-ok(chunks_exact(8) guarantees the width)
+                let t = u32::from_le_bytes(rec[4..].try_into().expect("4-byte slice")); // lint: panic-ok(chunks_exact(8) guarantees the width)
                 edges.push((s, t));
             }
             f(&edges)?;

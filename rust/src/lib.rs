@@ -30,6 +30,18 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 //!
+//! ## Determinism contract
+//!
+//! Everything above is bit-for-bit reproducible from `(model, seed, S)`
+//! across worker/thread counts and across the single-process vs
+//! distributed paths. The conventions that make that true — the RNG
+//! stream registry ([`rngtags`]), no unordered-container iteration into
+//! output order, no wall-clock/environment reads in output-determining
+//! modules, and an explicit hash fate for every plan field — are written
+//! down in `docs/determinism.md` and enforced statically by [`lint`]
+//! (`cargo run --bin maglint`), which runs in CI and in this crate's own
+//! test suite.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -43,6 +55,8 @@
 //! println!("sampled {} edges", graph.num_edges());
 //! ```
 
+#![forbid(unsafe_code)]
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -52,12 +66,14 @@ pub mod fit;
 pub mod graph;
 pub mod hashutil;
 pub mod kpgm;
+pub mod lint;
 pub mod magm;
 pub mod metrics;
 pub mod parallel;
 pub mod proptest;
 pub mod quilt;
 pub mod rng;
+pub mod rngtags;
 pub mod runtime;
 pub mod stats;
 

@@ -1,0 +1,1015 @@
+//! `maglint`: the determinism-invariant static-analysis pass.
+//!
+//! Every guarantee this crate makes — samples that are bit-for-bit stable
+//! across `--workers`/`--setup-threads`/`--merge-threads`, a distributed
+//! merge byte-identical to the single-process sink — rests on conventions
+//! that the type system cannot see: unique RNG fork tags, never letting a
+//! hash map's iteration order reach the output, keeping wall-clock state
+//! out of output-determining modules, and deciding the hash fate of every
+//! plan field. This module enforces those conventions as a line-based
+//! static pass over `rust/src`, run by `cargo run --bin maglint`, by the
+//! `lint` CI job, and by the self-run test below.
+//!
+//! The five rules (see `docs/determinism.md` for the rationale and the
+//! annotation syntax):
+//!
+//! 1. **RNG stream registry** — fork tags live in `rust/src/rngtags.rs`
+//!    as named constants; tag values must be pairwise distinct, and a raw
+//!    hex literal inside a `fork(...)` call anywhere else is an error.
+//! 2. **Order leak** — `.keys()`/`.values()`/`.drain()` (and `.iter()` on
+//!    a receiver declared as `FastMap`/`FastSet`/`HashMap`/`HashSet`) in
+//!    non-test code is an error unless the line carries
+//!    `// lint: order-ok(<reason>)` or the receiver is an ordered
+//!    (`BTreeMap`/`BTreeSet`) container.
+//! 3. **Nondeterminism source** — `SystemTime::now`, `Instant::now`,
+//!    `available_parallelism` and `std::env` are forbidden inside the
+//!    output-determining modules (`kpgm/`, `quilt/`, `magm/`,
+//!    `dist/plan.rs`) unless annotated `// lint: time-ok(...)` /
+//!    `// lint: env-ok(...)`.
+//! 4. **Panic path** — `unwrap()`/`expect(`/`panic!` outside `#[cfg(test)]`
+//!    in the I/O-facing modules (`graph/io.rs`, `graph/sink.rs`,
+//!    `graph/spill.rs`, `dist/`) must be annotated
+//!    `// lint: panic-ok(<reason>)` or converted to propagated errors.
+//! 5. **Plan-hash drift** — every `ShardPlan` field must be referenced by
+//!    `fn canonical` or named in `HASH_EXEMPT`, and every `RunSpec` field
+//!    must appear in exactly one of `RUNSPEC_HASHED`/`RUNSPEC_EXEMPT`
+//!    (both in `dist/plan.rs`), so adding a config field without deciding
+//!    its hash fate fails the lint.
+//!
+//! The pass is deliberately line-based (zero new dependencies, no syntax
+//! tree): string literals and `//` comments are stripped before matching,
+//! the test region of a file starts at a `#[cfg(test)]` that gates a
+//! `mod`, and receivers are resolved by walking identifier characters —
+//! heuristics that are exact on this codebase and conservative (annotate
+//! to override) on code they cannot see through.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Which invariant a finding violates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// Raw hex literal inside a `fork(...)` call outside the registry.
+    RawForkTag,
+    /// Two registry constants share a tag value.
+    DuplicateForkTag,
+    /// Malformed registry entry (not a parseable `u64` constant).
+    Registry,
+    /// Unordered-container iteration order can reach the output.
+    OrderLeak,
+    /// Wall-clock / environment state in an output-determining module.
+    NondetSource,
+    /// Panic path in an I/O-facing module.
+    PanicPath,
+    /// Plan/run field with an undecided hash fate.
+    HashDrift,
+}
+
+impl Rule {
+    /// Stable short name used in output and asserted by the fixture tests.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::RawForkTag => "raw-fork-tag",
+            Rule::DuplicateForkTag => "duplicate-fork-tag",
+            Rule::Registry => "registry",
+            Rule::OrderLeak => "order-leak",
+            Rule::NondetSource => "nondet-source",
+            Rule::PanicPath => "panic-path",
+            Rule::HashDrift => "hash-drift",
+        }
+    }
+}
+
+/// One lint violation, anchored to a file and 1-based line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule violated.
+    pub rule: Rule,
+    /// Path relative to `rust/src`.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description with the fix direction.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule.name(), self.message)
+    }
+}
+
+/// Does the raw line carry a `// lint: <kind>-ok(...)` annotation?
+fn annotated(raw_line: &str, kind: &str) -> bool {
+    let needle = format!("lint: {kind}-ok(");
+    raw_line.contains(&needle)
+}
+
+/// Strip string literals, char literals, and `//` comments so pattern
+/// matching sees only code. Stripped spans are replaced by spaces to keep
+/// column positions meaningful.
+fn sanitize(line: &str) -> String {
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < chars.len() {
+                if chars[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            out.push(' ');
+            continue;
+        }
+        if c == '\'' {
+            // Char literal ('x', '\n') vs lifetime ('a with no closing
+            // quote): consume only when a closing quote is adjacent.
+            if i + 3 < chars.len() && chars[i + 1] == '\\' && chars[i + 3] == '\'' {
+                out.push_str("    ");
+                i += 4;
+                continue;
+            }
+            if i + 2 < chars.len() && chars[i + 2] == '\'' {
+                out.push_str("   ");
+                i += 3;
+                continue;
+            }
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < chars.len() && chars[i + 1] == '/' {
+            break;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// 1-based line numbers (exclusive start) of each file's test region: the
+/// first `#[cfg(test)]` attribute that gates a `mod` opens it and it runs
+/// to end of file (test modules sit at the bottom of every file here). A
+/// `#[cfg(test)]` on a single non-`mod` item does NOT open the region, so
+/// code between such an item and the real test module stays linted.
+fn test_region_start(lines: &[&str]) -> usize {
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim_start().starts_with("#[cfg(test)]") {
+            for follow in lines.iter().skip(i + 1) {
+                let t = follow.trim_start();
+                if t.is_empty() || t.starts_with("#[") {
+                    continue;
+                }
+                if t.starts_with("mod ") || t.starts_with("pub mod ") {
+                    return i;
+                }
+                break;
+            }
+        }
+    }
+    lines.len()
+}
+
+/// Identifier (walking `[A-Za-z0-9_]`) ending exactly at byte `end` of
+/// `code`, or `None` if the preceding token is not a plain identifier.
+fn ident_ending_at(code: &str, end: usize) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut start = end;
+    while start > 0 {
+        let b = bytes[start - 1] as char;
+        if b.is_ascii_alphanumeric() || b == '_' {
+            start -= 1;
+        } else {
+            break;
+        }
+    }
+    if start == end {
+        return None;
+    }
+    let ident = &code[start..end];
+    if ident.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    Some(ident.to_string())
+}
+
+/// Container kinds the order-leak rule tracks.
+const UNORDERED_TYPES: &[&str] = &["FastMap", "FastSet", "HashMap", "HashSet"];
+const ORDERED_TYPES: &[&str] = &["BTreeMap", "BTreeSet"];
+const UNORDERED_CTORS: &[&str] = &[
+    "FastMap::",
+    "FastSet::",
+    "HashMap::new",
+    "HashSet::new",
+    "fast_map_with_capacity",
+    "fast_set_with_capacity",
+];
+const ORDERED_CTORS: &[&str] = &["BTreeMap::new", "BTreeSet::new"];
+
+/// Is `seg` (the text between a declaration's `:` and its type name) a
+/// plain type position — optional `&`/`mut` and path segments only? This
+/// rejects nested positions like `: Vec<FastMap<...>>`, whose *outer*
+/// container is ordered.
+fn plain_type_position(seg: &str) -> bool {
+    let mut rest = seg.trim();
+    loop {
+        rest = rest.trim_start();
+        if let Some(r) = rest.strip_prefix('&') {
+            rest = r;
+            continue;
+        }
+        if let Some(r) = rest.strip_prefix("mut ") {
+            rest = r;
+            continue;
+        }
+        break;
+    }
+    // Remaining must be zero or more `ident::` path segments.
+    while let Some(pos) = rest.find("::") {
+        let seg_name = &rest[..pos];
+        if !seg_name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return false;
+        }
+        rest = &rest[pos + 2..];
+    }
+    rest.trim().is_empty()
+}
+
+/// Find identifiers declared on this line with one of `types` as their
+/// outermost container: `name: [&][path::]T<...>` or
+/// `[let [mut]] name = [path::]ctor...`.
+fn declared_idents(code: &str, types: &[&str], ctors: &[&str]) -> Vec<String> {
+    let mut out = Vec::new();
+    for t in types {
+        let pat = format!("{t}<");
+        let mut from = 0;
+        while let Some(p) = code[from..].find(&pat) {
+            let abs = from + p;
+            from = abs + pat.len();
+            // Word boundary before the type name.
+            if ident_ending_at(code, abs).is_some() {
+                continue;
+            }
+            let before = &code[..abs];
+            // Last single `:` (not `::`) before the type.
+            let bytes = before.as_bytes();
+            let mut colon = None;
+            let mut k = 0;
+            while k < bytes.len() {
+                if bytes[k] == b':' {
+                    if k + 1 < bytes.len() && bytes[k + 1] == b':' {
+                        k += 2;
+                        continue;
+                    }
+                    colon = Some(k);
+                }
+                k += 1;
+            }
+            let Some(cpos) = colon else { continue };
+            if !plain_type_position(&before[cpos + 1..]) {
+                continue;
+            }
+            if let Some(name) = ident_ending_at(before, cpos) {
+                out.push(name);
+            }
+        }
+    }
+    for ctor in ctors {
+        let pat = format!("= {ctor}");
+        if let Some(p) = code.find(&pat) {
+            let before = code[..p].trim_end();
+            if let Some(name) = ident_ending_at(before, before.len()) {
+                out.push(name);
+            }
+        }
+    }
+    out
+}
+
+/// Methods that expose a map/set's internal order directly.
+const KEY_METHODS: &[&str] =
+    &[".keys()", ".values()", ".values_mut()", ".into_keys()", ".into_values()", ".drain("];
+/// Methods that expose order only when the receiver is a tracked
+/// unordered container (otherwise they are ordinary slice/Vec iteration).
+const ITER_METHODS: &[&str] = &[".iter()", ".iter_mut()", ".into_iter()"];
+
+/// Is `relpath` (relative to `rust/src`) inside the output-determining
+/// scope of the nondeterminism-source rule?
+fn in_nondet_scope(relpath: &str) -> bool {
+    relpath.starts_with("kpgm/")
+        || relpath.starts_with("quilt/")
+        || relpath.starts_with("magm/")
+        || relpath == "dist/plan.rs"
+}
+
+/// Is `relpath` inside the panic-path rule's I/O-facing scope?
+fn in_panic_scope(relpath: &str) -> bool {
+    relpath == "graph/io.rs"
+        || relpath == "graph/sink.rs"
+        || relpath == "graph/spill.rs"
+        || relpath.starts_with("dist/")
+}
+
+const NONDET_PATTERNS: &[&str] =
+    &["SystemTime::now", "Instant::now", "available_parallelism", "std::env"];
+const PANIC_PATTERNS: &[&str] = &[".unwrap()", ".expect(", "panic!(", "unreachable!("];
+
+/// Lint one source file (rules 1–4). `relpath` is relative to `rust/src`
+/// and selects the module-scoped rules; the registry file itself is
+/// linted with [`lint_registry`] instead.
+pub fn lint_source(relpath: &str, source: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = source.lines().collect();
+    let test_start = test_region_start(&lines);
+    let mut findings = Vec::new();
+    let mut unordered: Vec<String> = Vec::new();
+    let mut ordered: Vec<String> = Vec::new();
+    let fork_call = ".fork(";
+    let hex_prefix = "0x";
+
+    for (idx, raw) in lines.iter().enumerate() {
+        let code = sanitize(raw);
+        for name in declared_idents(&code, UNORDERED_TYPES, UNORDERED_CTORS) {
+            if !unordered.contains(&name) {
+                unordered.push(name);
+            }
+        }
+        for name in declared_idents(&code, ORDERED_TYPES, ORDERED_CTORS) {
+            if !ordered.contains(&name) {
+                ordered.push(name);
+            }
+        }
+        if idx >= test_start {
+            continue;
+        }
+        let lineno = idx + 1;
+
+        // Rule 1: raw hex fork tags outside the registry.
+        if let Some(p) = code.find(fork_call) {
+            if code[p..].contains(hex_prefix) {
+                findings.push(Finding {
+                    rule: Rule::RawForkTag,
+                    file: relpath.to_string(),
+                    line: lineno,
+                    message: "raw hex literal in fork(...); name the stream in \
+                              rngtags.rs and fork the constant"
+                        .to_string(),
+                });
+            }
+        }
+
+        // Rule 2: order leaks.
+        if !annotated(raw, "order") {
+            for m in KEY_METHODS {
+                let mut from = 0;
+                while let Some(p) = code[from..].find(m) {
+                    let abs = from + p;
+                    from = abs + m.len();
+                    let recv = ident_ending_at(&code, abs);
+                    let is_ordered =
+                        recv.as_ref().map(|r| ordered.contains(r)).unwrap_or(false);
+                    if !is_ordered {
+                        findings.push(Finding {
+                            rule: Rule::OrderLeak,
+                            file: relpath.to_string(),
+                            line: lineno,
+                            message: format!(
+                                "{m} on an unordered (or unresolvable) container; sort the \
+                                 result or annotate the line with lint: order-ok(reason)"
+                            ),
+                        });
+                    }
+                }
+            }
+            for m in ITER_METHODS {
+                let mut from = 0;
+                while let Some(p) = code[from..].find(m) {
+                    let abs = from + p;
+                    from = abs + m.len();
+                    if let Some(recv) = ident_ending_at(&code, abs) {
+                        if unordered.contains(&recv) && !ordered.contains(&recv) {
+                            findings.push(Finding {
+                                rule: Rule::OrderLeak,
+                                file: relpath.to_string(),
+                                line: lineno,
+                                message: format!(
+                                    "{m} on unordered container `{recv}`; sort the result \
+                                     or annotate with lint: order-ok(reason)"
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+            // `for x in &map` / `in &mut map` / `in &self.map` forms.
+            let mut from = 0;
+            while let Some(p) = code[from..].find(" in &") {
+                let abs = from + p + " in &".len();
+                from = abs;
+                let mut rest = &code[abs..];
+                if let Some(r) = rest.strip_prefix("mut ") {
+                    rest = r;
+                }
+                if let Some(r) = rest.strip_prefix("self.") {
+                    rest = r;
+                }
+                let name: String =
+                    rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+                if !name.is_empty() && unordered.contains(&name) && !ordered.contains(&name) {
+                    findings.push(Finding {
+                        rule: Rule::OrderLeak,
+                        file: relpath.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "iteration over unordered container `{name}`; sort the result \
+                             or annotate with lint: order-ok(reason)"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // Rule 3: nondeterminism sources in output-determining modules.
+        if in_nondet_scope(relpath) && !annotated(raw, "time") && !annotated(raw, "env") {
+            for pat in NONDET_PATTERNS {
+                if code.contains(pat) {
+                    findings.push(Finding {
+                        rule: Rule::NondetSource,
+                        file: relpath.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "{pat} in an output-determining module; derive from the plan/seed \
+                             or annotate with lint: time-ok(...) / lint: env-ok(...)"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // Rule 4: panic paths in I/O-facing modules.
+        if in_panic_scope(relpath) && !annotated(raw, "panic") {
+            for pat in PANIC_PATTERNS {
+                if code.contains(pat) {
+                    findings.push(Finding {
+                        rule: Rule::PanicPath,
+                        file: relpath.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "{pat} outside #[cfg(test)]; propagate an error or annotate \
+                             with lint: panic-ok(reason)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    findings
+}
+
+/// One parsed registry constant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegistryTag {
+    /// Constant name.
+    pub name: String,
+    /// Tag value.
+    pub value: u64,
+    /// 1-based line of the declaration.
+    pub line: usize,
+}
+
+/// Parse `pub const NAME: u64 = <literal>;` declarations out of the
+/// registry source.
+pub fn parse_registry(source: &str) -> (Vec<RegistryTag>, Vec<(usize, String)>) {
+    let mut tags = Vec::new();
+    let mut errors = Vec::new();
+    for (idx, raw) in source.lines().enumerate() {
+        let t = raw.trim_start();
+        let Some(rest) = t.strip_prefix("pub const ") else { continue };
+        let Some((name, after)) = rest.split_once(':') else { continue };
+        let after = after.trim_start();
+        if !after.starts_with("u64") {
+            continue;
+        }
+        let Some((_, value_part)) = after.split_once('=') else {
+            errors.push((idx + 1, format!("constant {} has no value", name.trim())));
+            continue;
+        };
+        let value_text = value_part.trim().trim_end_matches(';').trim().replace('_', "");
+        let parsed = if let Some(hex) = value_text.strip_prefix("0x") {
+            u64::from_str_radix(hex, 16)
+        } else {
+            value_text.parse::<u64>()
+        };
+        match parsed {
+            Ok(value) => {
+                tags.push(RegistryTag { name: name.trim().to_string(), value, line: idx + 1 })
+            }
+            Err(_) => errors.push((
+                idx + 1,
+                format!("constant {} is not a literal u64 tag: {value_text:?}", name.trim()),
+            )),
+        }
+    }
+    (tags, errors)
+}
+
+/// Lint the registry file: every `u64` constant must parse and tag values
+/// must be pairwise distinct.
+pub fn lint_registry(relpath: &str, source: &str) -> Vec<Finding> {
+    let (tags, errors) = parse_registry(source);
+    let mut findings: Vec<Finding> = errors
+        .into_iter()
+        .map(|(line, message)| Finding {
+            rule: Rule::Registry,
+            file: relpath.to_string(),
+            line,
+            message,
+        })
+        .collect();
+    if tags.is_empty() {
+        findings.push(Finding {
+            rule: Rule::Registry,
+            file: relpath.to_string(),
+            line: 1,
+            message: "registry declares no fork-tag constants".to_string(),
+        });
+    }
+    for (i, a) in tags.iter().enumerate() {
+        for b in &tags[i + 1..] {
+            if a.value == b.value {
+                findings.push(Finding {
+                    rule: Rule::DuplicateForkTag,
+                    file: relpath.to_string(),
+                    line: b.line,
+                    message: format!(
+                        "tag {} duplicates the value {:#x} of {} (line {}); streams sharing \
+                         a tag must share one constant",
+                        b.name, b.value, a.name, a.line
+                    ),
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// Field names of `pub struct <name> { ... }` in `source`, with 1-based
+/// declaration lines.
+fn struct_fields(source: &str, name: &str) -> Vec<(String, usize)> {
+    let header = format!("pub struct {name} {{");
+    let mut fields = Vec::new();
+    let mut inside = false;
+    for (idx, raw) in source.lines().enumerate() {
+        let t = raw.trim();
+        if !inside {
+            if t.starts_with(&header) {
+                inside = true;
+            }
+            continue;
+        }
+        if t == "}" {
+            break;
+        }
+        if t.starts_with("///") || t.starts_with("#[") || t.is_empty() {
+            continue;
+        }
+        let decl = t.strip_prefix("pub ").unwrap_or(t);
+        if let Some((field, _)) = decl.split_once(':') {
+            let f = field.trim();
+            if f.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') && !f.is_empty() {
+                fields.push((f.to_string(), idx + 1));
+            }
+        }
+    }
+    fields
+}
+
+/// Extract the body of `fn <name>` (brace-balanced from its first `{`).
+fn fn_body<'a>(source: &'a str, name: &str) -> Option<(String, usize)> {
+    let needle = format!("fn {name}(");
+    let lines: Vec<&str> = source.lines().collect();
+    let start = lines.iter().position(|l| l.contains(&needle))?;
+    let mut depth = 0i64;
+    let mut opened = false;
+    let mut body = String::new();
+    for line in lines.iter().skip(start) {
+        let code = sanitize(line);
+        for c in code.chars() {
+            if c == '{' {
+                depth += 1;
+                opened = true;
+            }
+            if c == '}' {
+                depth -= 1;
+            }
+        }
+        body.push_str(&code);
+        body.push('\n');
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    Some((body, start + 1))
+}
+
+/// Quoted strings of the `const <name>` array starting at its declaration
+/// line and running to the closing `]`.
+fn const_string_list(source: &str, name: &str) -> Option<(Vec<String>, usize)> {
+    let needle = format!("const {name}:");
+    let lines: Vec<&str> = source.lines().collect();
+    let start = lines.iter().position(|l| l.contains(&needle))?;
+    let mut out = Vec::new();
+    // Scan only after the `=`: the `&[&str]` type annotation on the
+    // declaration line contains a `]` that must not end the list.
+    let mut past_eq = false;
+    for line in lines.iter().skip(start) {
+        let mut rest: &str = line;
+        if !past_eq {
+            let Some(p) = rest.find('=') else { continue };
+            past_eq = true;
+            rest = &rest[p + 1..];
+        }
+        let close = rest.contains(']');
+        while let Some(p) = rest.find('"') {
+            let after = &rest[p + 1..];
+            let Some(q) = after.find('"') else { break };
+            out.push(after[..q].to_string());
+            rest = &after[q + 1..];
+        }
+        if close {
+            break;
+        }
+    }
+    Some((out, start + 1))
+}
+
+/// Does `body` reference `self.<field>` as a whole identifier?
+fn references_field(body: &str, field: &str) -> bool {
+    let needle = format!("self.{field}");
+    let mut from = 0;
+    while let Some(p) = body[from..].find(&needle) {
+        let end = from + p + needle.len();
+        let next = body[end..].chars().next();
+        if !next.is_some_and(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Rule 5: the plan-hash drift tripwire. `plan_src` must declare
+/// `ShardPlan`, `fn canonical`, `HASH_EXEMPT`, `RUNSPEC_HASHED` and
+/// `RUNSPEC_EXEMPT`; `spec_src` declares `RunSpec`. Every field must have
+/// exactly one hash fate, and the fate lists must not go stale.
+pub fn check_plan_hash(
+    plan_path: &str,
+    plan_src: &str,
+    spec_path: &str,
+    spec_src: &str,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let missing = |line: usize, message: String| Finding {
+        rule: Rule::HashDrift,
+        file: plan_path.to_string(),
+        line,
+        message,
+    };
+
+    let plan_fields = struct_fields(plan_src, "ShardPlan");
+    if plan_fields.is_empty() {
+        findings.push(missing(1, "no `pub struct ShardPlan` found".to_string()));
+        return findings;
+    }
+    let Some((canonical, _)) = fn_body(plan_src, "canonical") else {
+        findings.push(missing(1, "no `fn canonical` found to hash ShardPlan".to_string()));
+        return findings;
+    };
+    let Some((exempt, exempt_line)) = const_string_list(plan_src, "HASH_EXEMPT") else {
+        findings.push(missing(1, "no `HASH_EXEMPT` list found".to_string()));
+        return findings;
+    };
+    for (field, line) in &plan_fields {
+        let hashed = references_field(&canonical, field);
+        let exempted = exempt.iter().any(|e| e == field);
+        if hashed && exempted {
+            findings.push(missing(
+                *line,
+                format!("ShardPlan.{field} is both hashed in canonical() and HASH_EXEMPT"),
+            ));
+        }
+        if !hashed && !exempted {
+            findings.push(missing(
+                *line,
+                format!(
+                    "ShardPlan.{field} is neither hashed in canonical() nor named in \
+                     HASH_EXEMPT; decide its hash fate"
+                ),
+            ));
+        }
+    }
+    for entry in &exempt {
+        if !plan_fields.iter().any(|(f, _)| f == entry) {
+            findings.push(missing(
+                exempt_line,
+                format!("HASH_EXEMPT names {entry:?}, which is not a ShardPlan field"),
+            ));
+        }
+    }
+
+    let spec_fields = struct_fields(spec_src, "RunSpec");
+    if spec_fields.is_empty() {
+        findings.push(Finding {
+            rule: Rule::HashDrift,
+            file: spec_path.to_string(),
+            line: 1,
+            message: "no `pub struct RunSpec` found".to_string(),
+        });
+        return findings;
+    }
+    let hashed_list = const_string_list(plan_src, "RUNSPEC_HASHED");
+    let exempt_list = const_string_list(plan_src, "RUNSPEC_EXEMPT");
+    let (Some((run_hashed, rh_line)), Some((run_exempt, re_line))) = (hashed_list, exempt_list)
+    else {
+        findings.push(missing(
+            1,
+            "RUNSPEC_HASHED / RUNSPEC_EXEMPT lists not found; every RunSpec field needs a \
+             declared hash fate"
+                .to_string(),
+        ));
+        return findings;
+    };
+    for (field, _) in &spec_fields {
+        let h = run_hashed.iter().any(|e| e == field);
+        let e = run_exempt.iter().any(|e| e == field);
+        if h && e {
+            findings.push(missing(
+                rh_line,
+                format!("RunSpec.{field} appears in both RUNSPEC_HASHED and RUNSPEC_EXEMPT"),
+            ));
+        }
+        if !h && !e {
+            findings.push(Finding {
+                rule: Rule::HashDrift,
+                file: spec_path.to_string(),
+                line: spec_fields.iter().find(|(f, _)| f == field).map(|(_, l)| *l).unwrap_or(1),
+                message: format!(
+                    "RunSpec.{field} is in neither RUNSPEC_HASHED nor RUNSPEC_EXEMPT \
+                     (dist/plan.rs); decide whether it determines the output"
+                ),
+            });
+        }
+    }
+    for entry in run_hashed.iter().chain(run_exempt.iter()) {
+        if !spec_fields.iter().any(|(f, _)| f == entry) {
+            findings.push(missing(
+                if run_hashed.contains(entry) { rh_line } else { re_line },
+                format!("RunSpec fate list names {entry:?}, which is not a RunSpec field"),
+            ));
+        }
+    }
+    findings
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted by path so the
+/// report order (and any future caching) is deterministic.
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Registry location relative to `rust/src`.
+pub const REGISTRY_PATH: &str = "rngtags.rs";
+/// Plan module location relative to `rust/src` (rule 5).
+pub const PLAN_PATH: &str = "dist/plan.rs";
+/// Run-spec module location relative to `rust/src` (rule 5).
+pub const SPEC_PATH: &str = "config/spec.rs";
+
+/// Lint the whole tree rooted at the repo root (the directory holding
+/// `Cargo.toml` and `rust/src`). Returns findings sorted by file/line;
+/// an empty vector means the tree is clean.
+pub fn lint_tree(repo_root: &Path) -> Result<Vec<Finding>> {
+    let src_root = repo_root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs_files(&src_root, &mut files)?;
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let source =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        if rel == REGISTRY_PATH {
+            findings.extend(lint_registry(&rel, &source));
+        } else {
+            findings.extend(lint_source(&rel, &source));
+        }
+    }
+    let plan_file = src_root.join(PLAN_PATH);
+    let spec_file = src_root.join(SPEC_PATH);
+    let plan_src = std::fs::read_to_string(&plan_file)
+        .with_context(|| format!("reading {}", plan_file.display()))?;
+    let spec_src = std::fs::read_to_string(&spec_file)
+        .with_context(|| format!("reading {}", spec_file.display()))?;
+    findings.extend(check_plan_hash(PLAN_PATH, &plan_src, SPEC_PATH, &spec_src));
+    findings.sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)));
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn fixture(name: &str) -> String {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("rust")
+            .join("lint-fixtures")
+            .join(name);
+        std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {name}: {e}"))
+    }
+
+    #[test]
+    fn sanitize_strips_strings_and_comments() {
+        assert_eq!(sanitize("let x = 1; // .unwrap()"), "let x = 1; ");
+        let s = sanitize(r#"let p = ".keys()"; m.keys();"#);
+        assert!(!s.contains(".keys()\""));
+        assert!(s.contains("m.keys()"));
+        let s = sanitize(r#"let c = '"'; m.values();"#);
+        assert!(s.contains("m.values()"));
+    }
+
+    #[test]
+    fn test_region_needs_a_gated_mod() {
+        let src = "fn a() {}\n#[cfg(test)]\nfn helper() {}\nfn b() {}\n#[cfg(test)]\nmod tests {}\n";
+        let lines: Vec<&str> = src.lines().collect();
+        assert_eq!(test_region_start(&lines), 4, "only the mod-gating attribute opens it");
+    }
+
+    #[test]
+    fn declared_idents_resolve_outer_container() {
+        let u = declared_idents(
+            "let mut counts: FastMap<u64, u32> = fast_map_with_capacity(4);",
+            UNORDERED_TYPES,
+            UNORDERED_CTORS,
+        );
+        assert_eq!(u, vec!["counts".to_string()]);
+        // Nested unordered inside an ordered/sequential outer container
+        // does not track the identifier.
+        let u = declared_idents(
+            "let maps: Vec<FastMap<u64, u32>> = Vec::new();",
+            UNORDERED_TYPES,
+            UNORDERED_CTORS,
+        );
+        assert!(u.is_empty(), "{u:?}");
+        let o = declared_idents(
+            "    pub overflow: BTreeMap<usize, SegmentMeta>,",
+            ORDERED_TYPES,
+            ORDERED_CTORS,
+        );
+        assert_eq!(o, vec!["overflow".to_string()]);
+    }
+
+    #[test]
+    fn fixture_duplicate_fork_tag_trips() {
+        let f = lint_registry("rngtags.rs", &fixture("dup_fork_tag.rs"));
+        assert!(
+            f.iter().any(|x| x.rule == Rule::DuplicateForkTag && x.line == 7),
+            "expected a duplicate-fork-tag finding on line 7, got {f:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_raw_fork_trips() {
+        let f = lint_source("quilt/bad.rs", &fixture("raw_fork.rs"));
+        assert!(
+            f.iter().any(|x| x.rule == Rule::RawForkTag && x.line == 4),
+            "expected a raw-fork-tag finding on line 4, got {f:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_unsorted_iteration_trips() {
+        let f = lint_source("quilt/bad.rs", &fixture("unsorted_iter.rs"));
+        assert!(
+            f.iter().any(|x| x.rule == Rule::OrderLeak && x.line == 5),
+            "expected an order-leak finding on line 5, got {f:?}"
+        );
+        // The annotated line stays clean.
+        assert!(
+            !f.iter().any(|x| x.line == 8),
+            "annotated iteration must not be flagged: {f:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_instant_in_kpgm_trips() {
+        let f = lint_source("kpgm/bad.rs", &fixture("instant_in_kpgm.rs"));
+        assert!(
+            f.iter().any(|x| x.rule == Rule::NondetSource && x.line == 4),
+            "expected a nondet-source finding on line 4, got {f:?}"
+        );
+        // The same file outside the scope is fine.
+        let f = lint_source("stats/fine.rs", &fixture("instant_in_kpgm.rs"));
+        assert!(!f.iter().any(|x| x.rule == Rule::NondetSource), "{f:?}");
+    }
+
+    #[test]
+    fn fixture_unannotated_unwrap_trips() {
+        let f = lint_source("dist/bad.rs", &fixture("unannotated_unwrap.rs"));
+        assert!(
+            f.iter().any(|x| x.rule == Rule::PanicPath && x.line == 5),
+            "expected a panic-path finding on line 5, got {f:?}"
+        );
+        assert!(
+            !f.iter().any(|x| x.line == 8),
+            "annotated unwrap must not be flagged: {f:?}"
+        );
+        // Test code is exempt.
+        assert!(!f.iter().any(|x| x.line > 10), "{f:?}");
+    }
+
+    #[test]
+    fn fixture_unhashed_plan_field_trips() {
+        let src = fixture("unhashed_plan_field.rs");
+        let f = check_plan_hash("dist/plan.rs", &src, "config/spec.rs", &src);
+        assert!(
+            f.iter().any(|x| x.rule == Rule::HashDrift
+                && x.message.contains("extra_knob")
+                && x.line == 12),
+            "expected a hash-drift finding for extra_knob on line 12, got {f:?}"
+        );
+        assert!(
+            f.iter().any(|x| x.rule == Rule::HashDrift && x.message.contains("new_run_field")),
+            "expected a hash-drift finding for new_run_field, got {f:?}"
+        );
+    }
+
+    #[test]
+    fn stale_hash_exempt_entry_trips() {
+        let src = fixture("unhashed_plan_field.rs")
+            .replace("\"extra_stale\"", "\"not_a_field_anymore\"");
+        let f = check_plan_hash("dist/plan.rs", &src, "config/spec.rs", &src);
+        assert!(
+            f.iter().any(|x| x.message.contains("not_a_field_anymore")),
+            "stale HASH_EXEMPT entries must be flagged, got {f:?}"
+        );
+    }
+
+    #[test]
+    fn shipped_tree_is_clean() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let findings = lint_tree(&root).expect("lint walks the tree");
+        assert!(
+            findings.is_empty(),
+            "maglint found {} violation(s) in the shipped tree:\n{}",
+            findings.len(),
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn removing_a_hash_exempt_entry_fails_the_tripwire() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let plan_src =
+            std::fs::read_to_string(root.join("rust/src").join(PLAN_PATH)).expect("plan source");
+        let spec_src =
+            std::fs::read_to_string(root.join("rust/src").join(SPEC_PATH)).expect("spec source");
+        // The shipped pair is clean…
+        assert!(check_plan_hash(PLAN_PATH, &plan_src, SPEC_PATH, &spec_src).is_empty());
+        // …and dropping any single fate-list entry trips it. Edit only
+        // from the HASH_EXEMPT declaration onward so the replacement hits
+        // a fate list, never a TOML key string earlier in the file.
+        let lists_at = plan_src.find("HASH_EXEMPT").expect("plan declares HASH_EXEMPT");
+        let (head, lists) = plan_src.split_at(lists_at);
+        for knob in ["\"workers\"", "\"setup_threads\"", "\"merge_threads\""] {
+            let broken = format!("{head}{}", lists.replacen(knob, "\"knob_gone\"", 1));
+            let f = check_plan_hash(PLAN_PATH, &broken, SPEC_PATH, &spec_src);
+            assert!(!f.is_empty(), "dropping {knob} from the fate lists must trip the lint");
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! `maglint` — the determinism-invariant lint, as a standalone binary.
+//!
+//! Usage: `cargo run --bin maglint [repo-root]` (the root defaults to the
+//! directory holding `Cargo.toml`). Exits 0 when the tree is clean and 1
+//! when any invariant is violated, printing findings as
+//! `file:line: [rule] message` relative to `rust/src`. The rules and the
+//! annotation syntax are documented in `docs/determinism.md` and in the
+//! module docs of `rust/src/lint/mod.rs`.
+//!
+//! The engine is included by path rather than through the library crate,
+//! so this binary has no code dependency on the library: when the library
+//! is mid-refactor and failing to compile, the lint can still be built
+//! and run directly (`rustc --edition 2021 rust/src/maglint.rs` after
+//! vendoring `anyhow`, or from any checkout whose lib builds, pointing it
+//! at the broken tree via the path argument) — a linter that dies with
+//! the patient is no use during surgery.
+
+#[path = "lint/mod.rs"]
+mod lint;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    match lint::lint_tree(&root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("maglint: clean ({})", root.join("rust/src").display());
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            eprintln!("maglint: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(err) => {
+            eprintln!("maglint: error: {err:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

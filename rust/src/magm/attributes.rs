@@ -57,8 +57,8 @@ impl AttrSampleMode {
 pub const ATTR_CHUNK: usize = 4096;
 
 /// Fork tag separating the chunked attribute streams from every other
-/// consumer of the base seed.
-const ATTR_FORK_TAG: u64 = 0xa77c_0de5;
+/// consumer of the base seed (named in the [`crate::rngtags`] registry).
+const ATTR_FORK_TAG: u64 = crate::rngtags::ATTR_STREAM;
 
 /// The sampled attribute assignment `F = (f(1), …, f(n))`, stored as packed
 /// configurations.
@@ -174,7 +174,7 @@ impl AttributeAssignment {
         for &c in &self.configs {
             *counts.entry(c).or_insert(0) += 1;
         }
-        let mut out: Vec<(Config, u32)> = counts.into_iter().collect();
+        let mut out: Vec<(Config, u32)> = counts.into_iter().collect(); // lint: order-ok(sorted on the next line)
         out.sort_unstable();
         out
     }

@@ -69,21 +69,21 @@ where
     for case in 0..config.cases {
         let mut rng = base.fork(case as u64);
         let x = lo + rng.below(hi - lo + 1);
-        let mut check_rng = base.fork(case as u64 ^ 0xdead_beef);
+        let mut check_rng = base.fork(case as u64 ^ crate::rngtags::SHRINK_CHECK_XOR);
         if prop(x, &mut check_rng).is_err() {
             // Shrink: bisect toward lo while still failing.
             let mut bad = x;
             let mut floor = lo;
             while floor < bad {
                 let mid = floor + (bad - floor) / 2;
-                let mut rng2 = base.fork(case as u64 ^ 0xdead_beef);
+                let mut rng2 = base.fork(case as u64 ^ crate::rngtags::SHRINK_CHECK_XOR);
                 if prop(mid, &mut rng2).is_err() {
                     bad = mid;
                 } else {
                     floor = mid + 1;
                 }
             }
-            let mut rng3 = base.fork(case as u64 ^ 0xdead_beef);
+            let mut rng3 = base.fork(case as u64 ^ crate::rngtags::SHRINK_CHECK_XOR);
             let msg = prop(bad, &mut rng3).unwrap_err();
             panic!(
                 "property failed; minimal x={bad} (case {case}, seed={:#x}): {msg}",

@@ -53,7 +53,7 @@ impl GeneralQuiltSampler {
         }
         let b = partition.size();
         let kpgm = GenBallDropSampler::new(self.params.thetas().clone());
-        let base = Rng::new(self.seed).fork(0x9e11_e4a1);
+        let base = Rng::new(self.seed).fork(crate::rngtags::GENERAL_QUILT_STREAM);
         let mut out = EdgeList::new(self.params.num_nodes());
         for k in 0..b {
             for l in 0..b {

@@ -229,7 +229,7 @@ impl HybridSampler {
         let thetas = self.params.thetas();
         let mut out = EdgeList::new(n);
         let mut dropped = 0u64;
-        let base = Rng::new(self.seed).fork(0x4b1d);
+        let base = Rng::new(self.seed).fork(crate::rngtags::HYBRID_PIECE_STREAM);
 
         // --- 1. W × W by Algorithm 2 on the light subset. --------------
         let w_nodes = plan.w_nodes();
@@ -251,8 +251,11 @@ impl HybridSampler {
         }
 
         // --- 2. heavy × heavy ER blocks. --------------------------------
-        // Fork ids must not collide with the W-piece ids; offset by a tag.
-        let er_base = Rng::new(self.seed).fork(0xe4b10c);
+        // ER_STREAM is deliberately the same constant coordinator::pool
+        // forks, so the parallel runner reads these exact streams; it is
+        // distinct from HYBRID_PIECE_STREAM so ER-block ids can never
+        // collide with W-piece ids under the same seed.
+        let er_base = Rng::new(self.seed).fork(crate::rngtags::ER_STREAM);
         let mut er_id = 0u64;
         for (ci, nodes_i) in &plan.heavy {
             for (cj, nodes_j) in &plan.heavy {

@@ -186,7 +186,7 @@ fn exclusive_chunk_offsets(
     let top = levels.len() - 1;
     let root = &levels[top][0];
     let mut root_off: FastMap<Config, u32> = fast_map_with_capacity(root.len());
-    for &c in root.keys() {
+    for &c in root.keys() { // lint: order-ok(builds a keyed map; insertion order never observed)
         root_off.insert(c, 0);
     }
     let mut offs = vec![root_off];
@@ -198,12 +198,12 @@ fn exclusive_chunk_offsets(
             let p = &parents[j / 2];
             let mut m: FastMap<Config, u32> = fast_map_with_capacity(src[j].len());
             if j % 2 == 0 {
-                for &c in src[j].keys() {
+                for &c in src[j].keys() { // lint: order-ok(builds a keyed map; insertion order never observed)
                     m.insert(c, p.get(&c).copied().unwrap_or(0));
                 }
             } else {
                 let left = &src[j - 1];
-                for &c in src[j].keys() {
+                for &c in src[j].keys() { // lint: order-ok(builds a keyed map; insertion order never observed)
                     let before =
                         p.get(&c).copied().unwrap_or(0) + left.get(&c).copied().unwrap_or(0);
                     m.insert(c, before);
@@ -291,11 +291,11 @@ impl Partition {
         // prefix sums — the occurrence rank each config starts at in each
         // chunk — plus the global multiplicity map.
         let (total, starts) = exclusive_chunk_offsets(histograms, threads);
-        let b = total.values().copied().max().unwrap_or(0) as usize;
+        let b = total.values().copied().max().unwrap_or(0) as usize; // lint: order-ok(max is order-independent)
         // |D_r| = number of configs with multiplicity > r (exact
         // capacities for phase 4's pushes).
         let mut set_sizes = vec![0usize; b];
-        for &m in total.values() {
+        for &m in total.values() { // lint: order-ok(integer increments commute; counts are order-independent)
             for size in set_sizes.iter_mut().take(m as usize) {
                 *size += 1;
             }
@@ -399,7 +399,7 @@ impl Partition {
         let map_refs: Vec<&FastMap<Config, NodeId>> = self.maps.iter().collect();
         let cfg_lists: Vec<Vec<Config>> =
             crate::parallel::map_indexed(map_refs, threads, |_, m| {
-                let mut cfgs: Vec<Config> = m.keys().copied().collect();
+                let mut cfgs: Vec<Config> = m.keys().copied().collect(); // lint: order-ok(sorted on the next line)
                 cfgs.sort_unstable();
                 cfgs
             });
@@ -427,7 +427,7 @@ impl Partition {
                 ShardForest { forest, tries }
             });
         // Merge (pairwise tree of hash-consing passes, parallel per level).
-        let merge_start = std::time::Instant::now();
+        let merge_start = std::time::Instant::now(); // lint: time-ok(setup timing stat, never output-determining)
         let merged = crate::parallel::tree_reduce(shard_forests, threads, |a, b| {
             merge_shard_forests(depth, a, b)
         })

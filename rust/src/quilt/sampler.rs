@@ -159,7 +159,7 @@ impl QuiltSampler {
         let mut partition = Partition::build(attrs.configs());
         maybe_build_dense(&mut partition, self.params.depth());
         let jobs = self.plan(&partition);
-        let base = Rng::new(self.seed).fork(0x9011_7ed);
+        let base = Rng::new(self.seed).fork(crate::rngtags::QUILT_PIECE_STREAM);
         let mut out = EdgeList::new(self.params.num_nodes());
         let mut dropped = 0u64;
         let kpgm = BallDropSampler::new(self.params.thetas().clone());

@@ -1,0 +1,112 @@
+//! The RNG stream registry: every named fork tag in the crate.
+//!
+//! Determinism in this crate rests on disjoint RNG streams derived with
+//! [`crate::rng::Rng::fork`]. A stream is identified by a tag; two call
+//! sites that fork the same parent with the same tag read the *same*
+//! stream, so tags must either be unique or be deliberately shared — and
+//! "deliberately" must be visible in the code, not an accident of two
+//! equal magic numbers.
+//!
+//! This module is that visibility: the single home of every fork-tag
+//! constant. `maglint` (the determinism lint, `cargo run --bin maglint`)
+//! parses this file, verifies the tag values are pairwise distinct, and
+//! flags any raw hex literal passed to `fork(...)` elsewhere in the tree,
+//! so a new stream can only be introduced by naming it here. See
+//! `docs/determinism.md` for the full invariant and how to add a stream.
+//!
+//! Tags only need to be distinct *under the same parent RNG*: per-piece
+//! fork ids (small integers derived from job indices) live under a
+//! stream-tagged parent, so they never collide with the tags below.
+
+/// The uniform ER-block stream of the §5 hybrid sampler.
+///
+/// **Deliberately shared** between `quilt::hybrid` (single-threaded
+/// sampling) and `coordinator::pool` (the parallel job runner): both
+/// derive per-block RNGs as `Rng::new(seed).fork(ER_STREAM).fork(block)`,
+/// and the S × workers equivalence sweeps require the parallel path to
+/// read bit-for-bit the same stream the sequential sampler reads. One
+/// constant, two readers — not two coincidentally-equal literals.
+pub const ER_STREAM: u64 = 0xe4b10c;
+
+/// Per-piece streams of the plain quilt sampler (Algorithm 2): piece
+/// `p` samples from `Rng::new(seed).fork(QUILT_PIECE_STREAM).fork(p)`.
+/// Shared by `quilt::sampler` and the coordinator for the same
+/// equivalence reason as [`ER_STREAM`].
+pub const QUILT_PIECE_STREAM: u64 = 0x9011_7ed;
+
+/// Per-piece streams of the hybrid sampler's W-pieces. Distinct from
+/// [`QUILT_PIECE_STREAM`] so a hybrid run and a quilt run with the same
+/// seed stay decorrelated, and distinct from [`ER_STREAM`] so W-piece
+/// ids can never collide with ER-block ids under the same seed.
+pub const HYBRID_PIECE_STREAM: u64 = 0x4b1d;
+
+/// Per-piece streams of the general (K×K initiator) quilt sampler.
+pub const GENERAL_QUILT_STREAM: u64 = 0x9e11_e4a1;
+
+/// The attribute-assignment stream: chunk `c` of the chunked attribute
+/// sampler draws from `Rng::new(seed).fork(ATTR_STREAM).fork(c)`,
+/// keeping attribute randomness disjoint from every edge-sampling
+/// stream under the same seed.
+pub const ATTR_STREAM: u64 = 0xa77c_0de5;
+
+/// XOR mask decorrelating the property-test shrink-check streams from
+/// the primary per-case streams: case `i` re-checks shrunken inputs on
+/// `base.fork(i ^ SHRINK_CHECK_XOR)`.
+pub const SHRINK_CHECK_XOR: u64 = 0xdead_beef;
+
+/// Every registered tag as `(name, value)` — the introspection surface
+/// the registry tests and maglint's self-checks share.
+pub const ALL_TAGS: &[(&str, u64)] = &[
+    ("ER_STREAM", ER_STREAM),
+    ("QUILT_PIECE_STREAM", QUILT_PIECE_STREAM),
+    ("HYBRID_PIECE_STREAM", HYBRID_PIECE_STREAM),
+    ("GENERAL_QUILT_STREAM", GENERAL_QUILT_STREAM),
+    ("ATTR_STREAM", ATTR_STREAM),
+    ("SHRINK_CHECK_XOR", SHRINK_CHECK_XOR),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_are_pairwise_distinct() {
+        for (i, &(na, va)) in ALL_TAGS.iter().enumerate() {
+            for &(nb, vb) in &ALL_TAGS[i + 1..] {
+                assert_ne!(va, vb, "fork tags {na} and {nb} collide on {va:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_tags_lists_every_constant() {
+        // Keep the introspection list in sync with the constants: each
+        // value here must appear in ALL_TAGS under its name.
+        let expect = [
+            ("ER_STREAM", ER_STREAM),
+            ("QUILT_PIECE_STREAM", QUILT_PIECE_STREAM),
+            ("HYBRID_PIECE_STREAM", HYBRID_PIECE_STREAM),
+            ("GENERAL_QUILT_STREAM", GENERAL_QUILT_STREAM),
+            ("ATTR_STREAM", ATTR_STREAM),
+            ("SHRINK_CHECK_XOR", SHRINK_CHECK_XOR),
+        ];
+        assert_eq!(ALL_TAGS, &expect);
+    }
+
+    #[test]
+    fn forked_streams_differ_per_tag() {
+        use crate::rng::Rng;
+        let parent = Rng::new(42);
+        let firsts: Vec<u64> =
+            ALL_TAGS.iter().map(|&(_, tag)| parent.fork(tag).next_u64()).collect();
+        for i in 0..firsts.len() {
+            for j in i + 1..firsts.len() {
+                assert_ne!(
+                    firsts[i], firsts[j],
+                    "streams {} and {} start identically",
+                    ALL_TAGS[i].0, ALL_TAGS[j].0
+                );
+            }
+        }
+    }
+}

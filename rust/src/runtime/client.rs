@@ -12,6 +12,10 @@ use anyhow::{bail, Context, Result};
 use crate::hashutil::FastMap;
 
 use super::artifacts::{default_artifacts_dir, EntrySpec, Manifest};
+// The real `xla` crate is not vendored in this build; `xla_stub` mirrors
+// the exact API slice used below so this module compiles and reports the
+// backend as unavailable. Swap this alias for the real crate to enable it.
+use super::xla_stub as xla;
 
 /// A loaded PJRT runtime with compiled entry points.
 pub struct XlaRuntime {
@@ -22,9 +26,11 @@ pub struct XlaRuntime {
 
 impl std::fmt::Debug for XlaRuntime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut entries: Vec<&String> = self.executables.keys().collect(); // lint: order-ok(sorted on the next line)
+        entries.sort();
         f.debug_struct("XlaRuntime")
             .field("platform", &self.client.platform_name())
-            .field("entries", &self.executables.keys().collect::<Vec<_>>())
+            .field("entries", &entries)
             .finish()
     }
 }

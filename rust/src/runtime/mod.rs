@@ -18,6 +18,7 @@ mod artifacts;
 mod client;
 pub mod json;
 mod kernels;
+mod xla_stub;
 
 pub use artifacts::{default_artifacts_dir, EntrySpec, Manifest, TensorSpec};
 pub use client::XlaRuntime;
