@@ -1,0 +1,8 @@
+// maglint fixture: fault-injection hook in an output-determining module.
+
+pub fn sample_block(edges: &mut Vec<(u32, u32)>) {
+    edges.push((0, 1));
+    super::fault::inject_fault("crash-after-segments");
+}
+
+pub fn probe(f: &FaultPlan) -> bool { f.armed } // lint: fault-ok(fixture annotation)

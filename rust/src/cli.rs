@@ -9,12 +9,15 @@
 //!                   [--sink KIND] [--output PATH] [--spill-dir DIR]
 //!                   [--spill-budget BYTES] [--binary] [--stats]
 //! magquilt sample …         (alias of generate; accepts --out for --output;
-//!                   add --dist-workers W for a multi-process run)
+//!                   add --dist-workers W for a multi-process run with
+//!                   [--worker-retries R] [--worker-backoff-ms MS])
 //! magquilt shard-plan [model/run flags] --dist-workers W [--plan-out F]
 //! magquilt shard-worker --plan F --worker I [--segment-dir DIR]
+//!                   [--resume] [--inject-fault SPEC]
 //! magquilt merge-segments --segments DIR [--plan F] --out PATH
 //!                   [--merge-threads T] [--spill-budget BYTES]
 //!                   [--remove-segments]
+//! magquilt doctor <segment dir> [--plan F] [--fix]
 //! magquilt stats <edge-list file | segment dir>
 //! magquilt experiment <fig1|fig5|...|fig14|all> [--max-log2n N]
 //!                   [--naive-max-log2n N] [--trials T] [--seed S]
@@ -114,14 +117,18 @@ USAGE:
                       [--sink KIND] [--output PATH] [--spill-dir DIR]
                       [--spill-budget BYTES] [--binary] [--stats]
     magquilt sample   … (alias of generate; --out is accepted for --output)
-    magquilt sample   --dist-workers W --out PATH [--segment-dir DIR] …
-                      (distributed: spawn W local worker processes, merge
-                      their segments — bit-for-bit the single-process file)
+    magquilt sample   --dist-workers W --out PATH [--segment-dir DIR]
+                      [--worker-retries R] [--worker-backoff-ms MS] …
+                      (distributed: spawn W supervised local worker
+                      processes, restart crashed/stalled ones in place,
+                      merge — bit-for-bit the single-process file)
     magquilt shard-plan [model/run flags] --dist-workers W [--plan-out F]
     magquilt shard-worker --plan F --worker I [--segment-dir DIR]
+                      [--resume] [--inject-fault SPEC]
     magquilt merge-segments --segments DIR [--plan F] --out PATH
                       [--merge-threads T] [--spill-budget BYTES]
                       [--remove-segments]
+    magquilt doctor <segment dir> [--plan F] [--fix]
     magquilt stats <edge-list file | segment dir>
     magquilt experiment <id|all> [--max-log2n N] [--naive-max-log2n N]
                       [--trials T] [--seed S] [--out DIR]
@@ -148,7 +155,16 @@ DISTRIBUTED: one plan manifest seals the run (`shard-plan`); each worker
        --merge-threads T worker threads (0 = auto; byte-identical for
        every count); `stats <dir>` inspects a segment directory before
        merging. `sample --dist-workers W` runs plan → workers → merge
-       locally.
+       locally, supervised: a crashed or stalled worker is restarted with
+       --resume (up to --worker-retries R times, backoff doubling from
+       --worker-backoff-ms MS), and a restarted worker skips every shard
+       whose output is already durable — the merged file is byte-identical
+       either way. `doctor <dir> [--fix]` classifies every file in a
+       segment directory (complete / truncated / stale temp / foreign
+       plan / orphaned overflow / stale marker) and repairs or
+       quarantines; `shard-worker --inject-fault SPEC` (or
+       `sample --inject-fault SPEC@wN`) deterministically crashes a
+       chosen write window for testing — see docs/fault-tolerance.md.
 EXPERIMENTS: fig1 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14 | all
 ";
 
@@ -164,6 +180,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "shard-plan" => cmd_shard_plan(rest),
         "shard-worker" => cmd_shard_worker(rest),
         "merge-segments" => cmd_merge_segments(rest),
+        "doctor" => cmd_doctor(rest),
         "stats" => cmd_stats(rest),
         "experiment" => cmd_experiment(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
@@ -244,6 +261,12 @@ fn specs_from_args(args: &Args) -> Result<(ModelSpec, RunSpec)> {
     if let Some(t) = args.get_parsed::<usize>("merge-threads")? {
         run.merge_threads = t;
     }
+    if let Some(r) = args.get_parsed::<usize>("worker-retries")? {
+        run.worker_retries = r;
+    }
+    if let Some(b) = args.get_parsed::<u64>("worker-backoff-ms")? {
+        run.worker_backoff_ms = b;
+    }
     model.validate()?;
     Ok((model, run))
 }
@@ -287,7 +310,8 @@ fn cmd_generate(raw: &[String]) -> Result<()> {
 }
 
 /// Distributed driver: build the plan, spawn one local `shard-worker`
-/// process per worker, monitor them, merge their segments into the
+/// process per worker, supervise them (bounded retries with backoff,
+/// stall detection, resume-on-restart), merge their segments into the
 /// output, and drain the segment directory. The result is bit-for-bit
 /// the single-process binary sink's file for the same plan.
 fn cmd_generate_dist(args: &Args, model: &ModelSpec, run: &RunSpec) -> Result<()> {
@@ -316,16 +340,30 @@ fn cmd_generate_dist(args: &Args, model: &ModelSpec, run: &RunSpec) -> Result<()
     };
     let exe =
         std::env::current_exe().context("locating the magquilt binary to spawn workers")?;
+    let mut opts = dist::SuperviseOptions::from_plan(&plan);
+    if let Some(spec) = args.get("inject-fault") {
+        let (fault, target) = dist::parse_driver_fault(spec)?;
+        let target = target.ok_or_else(|| {
+            anyhow!("driver-level --inject-fault needs a target worker: {spec}@wN")
+        })?;
+        opts.fault = Some((target, fault.spec().to_string()));
+    }
     eprintln!(
-        "dist: plan {} | {} worker process(es) x {} shard(s), segments in {}",
+        "dist: plan {} | {} worker process(es) x {} shard(s), segments in {} \
+         (retries {}, backoff {} ms)",
         plan.hash_hex(),
         plan.num_workers(),
         plan.num_shards,
-        segment_dir.display()
+        segment_dir.display(),
+        opts.retries,
+        opts.backoff_ms,
     );
     let start = std::time::Instant::now();
-    let report = dist::run_distributed(&plan, &segment_dir, out, &exe)?;
+    let report = dist::run_distributed_with(&plan, &segment_dir, out, &exe, &opts)?;
     let ms = start.elapsed().as_secs_f64() * 1e3;
+    if report.restarts > 0 {
+        println!("dist: {} worker restart(s) recovered by resume", report.restarts);
+    }
     println!(
         "dist: merged {} shard(s) from {} worker(s); {} overflow run(s), \
          {} cross-worker duplicate(s) collapsed",
@@ -390,8 +428,11 @@ fn cmd_shard_plan(raw: &[String]) -> Result<()> {
 
 /// Execute one worker's slice of a plan (the per-host command of a
 /// multi-host run, and what `sample --dist-workers` spawns locally).
+/// `--resume` skips work whose output a previous (crashed) attempt
+/// already landed; `--inject-fault SPEC` deterministically fails a
+/// chosen write window (tests / CI only).
 fn cmd_shard_worker(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &[])?;
+    let args = Args::parse(raw, &["resume"])?;
     let plan_path = args
         .get("plan")
         .ok_or_else(|| anyhow!("usage: magquilt shard-worker --plan F --worker I"))?;
@@ -407,9 +448,25 @@ fn cmd_shard_worker(raw: &[String]) -> Result<()> {
             _ => PathBuf::from("."),
         },
     };
-    let report = dist::run_worker(&plan, worker, &segment_dir)?;
+    let opts = dist::WorkerOptions {
+        resume: args.has_flag("resume"),
+        fault: args.get("inject-fault").map(dist::FaultPlan::parse).transpose()?,
+    };
+    // The heartbeat tells a supervising driver this process is alive;
+    // it stops (and its file is removed) when the guard drops, whether
+    // the run succeeds or errors out.
+    let heartbeat = dist::Heartbeat::start(&segment_dir, &plan.hash_hex(), worker);
+    let report = dist::run_worker_with(&plan, worker, &segment_dir, &opts);
+    drop(heartbeat);
+    let report = report?;
     warn_dropped(report.stats.dropped_resamples);
     print_setup(&report.stats.setup);
+    if report.resumed_shards > 0 {
+        println!(
+            "worker {}: resumed — {} owned shard(s) already on disk, skipped",
+            report.worker, report.resumed_shards,
+        );
+    }
     println!(
         "worker {}: shards [{}, {}), ran {} of {} job(s); {} owned segment(s) \
          ({} edges), {} overflow run(s) ({} edges) in {:.1} ms",
@@ -424,6 +481,73 @@ fn cmd_shard_worker(raw: &[String]) -> Result<()> {
         report.summary.overflow_edges,
         report.stats.wall_ms,
     );
+    Ok(())
+}
+
+/// Classify (and with `--fix`, repair or quarantine) every file in a
+/// segment directory — see [`crate::dist::doctor`].
+fn cmd_doctor(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["fix"])?;
+    let dir = args
+        .positional(0)
+        .ok_or_else(|| anyhow!("usage: magquilt doctor <segment dir> [--plan F] [--fix]"))?;
+    let dir = Path::new(dir);
+    if !dir.is_dir() {
+        bail!("doctor: {} is not a directory", dir.display());
+    }
+    // Plan resolution: --plan wins, then the directory's own manifest;
+    // without either the doctor still runs name-and-header checks against
+    // the majority plan hash.
+    let plan = match args.get("plan") {
+        Some(p) => Some(ShardPlan::load(Path::new(p))?),
+        None => {
+            let local = dir.join(dist::PLAN_FILE);
+            if local.is_file() { Some(ShardPlan::load(&local)?) } else { None }
+        }
+    };
+    let fix = args.has_flag("fix");
+    let report = dist::doctor(dir, plan.as_ref(), fix)?;
+    match (&report.hash, &plan) {
+        (Some(h), Some(_)) => println!("doctor: {} | plan {h}", dir.display()),
+        (Some(h), None) => println!(
+            "doctor: {} | no plan manifest; majority hash {h} (topology checks skipped)",
+            dir.display()
+        ),
+        (None, _) => println!("doctor: {} | no recognizable artifacts", dir.display()),
+    }
+    for entry in &report.entries {
+        let reason = match &entry.status {
+            dist::FileStatus::Truncated(r)
+            | dist::FileStatus::ForeignPlan(r)
+            | dist::FileStatus::OrphanedOverflow(r)
+            | dist::FileStatus::Misplaced(r)
+            | dist::FileStatus::StaleMarker(r) => format!(" ({r})"),
+            _ => String::new(),
+        };
+        let action = match entry.action {
+            dist::DoctorAction::Kept => "kept",
+            dist::DoctorAction::Removed => "removed",
+            dist::DoctorAction::Quarantined => "quarantined",
+            dist::DoctorAction::WouldRemove => "would remove (--fix)",
+            dist::DoctorAction::WouldQuarantine => "would quarantine (--fix)",
+        };
+        println!("  {:18} {:24} {}{}", entry.status.label(), action, entry.name, reason);
+    }
+    if report.healthy() {
+        println!("doctor: directory is healthy ({} file(s))", report.entries.len());
+    } else if fix {
+        println!(
+            "doctor: removed {} file(s), quarantined {} into {}/",
+            report.removed,
+            report.quarantined,
+            dir.join(dist::QUARANTINE_DIR).display()
+        );
+    } else {
+        println!(
+            "doctor: {} file(s) to remove, {} to quarantine — rerun with --fix to apply",
+            report.removed, report.quarantined
+        );
+    }
     Ok(())
 }
 
@@ -946,6 +1070,45 @@ mod tests {
         assert!(run(&s(&["shard-worker", "--plan", "/nonexistent/plan.toml", "--worker", "0"]))
             .is_err());
         assert!(run(&s(&["merge-segments", "--segments", "/tmp"])).is_err(), "needs --out");
+    }
+
+    #[test]
+    fn fault_tolerance_flags_from_cli() {
+        let a = Args::parse(
+            &s(&["--worker-retries", "5", "--worker-backoff-ms", "125"]),
+            &[],
+        )
+        .unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.worker_retries, 5);
+        assert_eq!(run.worker_backoff_ms, 125);
+        // Defaults come from RunSpec.
+        let a = Args::parse(&s(&[]), &[]).unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.worker_retries, 2);
+        assert_eq!(run.worker_backoff_ms, 500);
+        // Non-numeric values rejected.
+        let a = Args::parse(&s(&["--worker-retries", "many"]), &[]).unwrap();
+        assert!(specs_from_args(&a).is_err());
+    }
+
+    #[test]
+    fn doctor_and_fault_misuse_are_errors() {
+        // doctor needs a directory.
+        assert!(run(&s(&["doctor"])).is_err());
+        assert!(run(&s(&["doctor", "/nonexistent/segdir"])).is_err());
+        // A driver-level fault spec must name a target worker…
+        assert!(run(&s(&[
+            "sample", "--log2-nodes", "6", "--dist-workers", "2", "--out", "/tmp/x.bin",
+            "--inject-fault", "crash-before-marker"
+        ]))
+        .is_err());
+        // …and a bogus spec is rejected before anything runs.
+        assert!(run(&s(&[
+            "sample", "--log2-nodes", "6", "--dist-workers", "2", "--out", "/tmp/x.bin",
+            "--inject-fault", "explode@w0"
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -182,6 +182,14 @@ pub struct RunSpec {
     /// Merge worker threads for the distributed segment merge (0 = auto;
     /// the merged file is byte-identical for every thread count).
     pub merge_threads: usize,
+    /// Supervised restart budget per distributed worker process: how many
+    /// times the driver relaunches a crashed/stalled worker before giving
+    /// up on the run. Restarts resume from the segments already on disk,
+    /// so this is a robustness knob — it never changes output bytes.
+    pub worker_retries: usize,
+    /// Base delay in milliseconds between supervised worker restarts
+    /// (doubles per retry, capped). Wall-clock only.
+    pub worker_backoff_ms: u64,
     /// Number of repeated samples (experiments average over trials).
     pub trials: u32,
 }
@@ -206,6 +214,8 @@ impl RunSpec {
             dist_workers: 0,
             segment_dir: None,
             merge_threads: 0,
+            worker_retries: 2,
+            worker_backoff_ms: 500,
             trials: 1,
         }
     }
@@ -289,6 +299,21 @@ impl RunSpec {
                 bail!("run.merge_threads must be >= 0, got {w}");
             }
             spec.merge_threads = w as usize;
+        }
+        if let Some(v) = sec.get("worker_retries") {
+            let r = v.as_int().ok_or_else(|| anyhow!("run.worker_retries must be an integer"))?;
+            if r < 0 {
+                bail!("run.worker_retries must be >= 0, got {r}");
+            }
+            spec.worker_retries = r as usize;
+        }
+        if let Some(v) = sec.get("worker_backoff_ms") {
+            let b =
+                v.as_int().ok_or_else(|| anyhow!("run.worker_backoff_ms must be an integer"))?;
+            if b < 0 {
+                bail!("run.worker_backoff_ms must be >= 0, got {b}");
+            }
+            spec.worker_backoff_ms = b as u64;
         }
         if let Some(v) = sec.get("trials") {
             spec.trials =
@@ -384,6 +409,21 @@ mod tests {
         let bad = parse_toml("[run]\nsegment_dir = 9\n").unwrap();
         assert!(RunSpec::from_section(bad.get("run")).is_err());
         let bad = parse_toml("[run]\nmerge_threads = -1\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
+    }
+
+    #[test]
+    fn supervision_knobs_parse_from_config() {
+        let m = parse_toml("[run]\nworker_retries = 5\nworker_backoff_ms = 125\n").unwrap();
+        let spec = RunSpec::from_section(m.get("run")).unwrap();
+        assert_eq!(spec.worker_retries, 5);
+        assert_eq!(spec.worker_backoff_ms, 125);
+        // Defaults: a couple of restarts with a half-second base backoff.
+        assert_eq!(RunSpec::default_spec().worker_retries, 2);
+        assert_eq!(RunSpec::default_spec().worker_backoff_ms, 500);
+        let bad = parse_toml("[run]\nworker_retries = -1\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
+        let bad = parse_toml("[run]\nworker_backoff_ms = -10\n").unwrap();
         assert!(RunSpec::from_section(bad.get("run")).is_err());
     }
 

@@ -1,0 +1,568 @@
+//! `magquilt doctor`: classify, repair, or quarantine the contents of a
+//! segment directory after a crash.
+//!
+//! A segment directory is an append-only ledger of atomic renames, so
+//! after any crash its files fall into a small set of classes:
+//!
+//! * **complete** — a validly named segment/overflow file whose header
+//!   checks out against the plan; kept.
+//! * **truncated** — a final-named file that fails validation (short
+//!   header, wrong magic, size/edge-count mismatch, wrong node count).
+//!   Final names are only produced by renames of complete files, so this
+//!   means external corruption; quarantined.
+//! * **stale temp** — a `magquilt-tmp-*` leftover from a dead attempt
+//!   (the crash-before-rename and mid-write windows leave these);
+//!   removed.
+//! * **foreign plan** — any artifact carrying a different plan hash;
+//!   quarantined (it may be another run's unmerged work — never deleted).
+//! * **orphaned / misplaced** — a file whose name contradicts the plan's
+//!   topology (overflow from the shard's own owner, out-of-range shard
+//!   or worker, owner segment from a non-owner); quarantined.
+//! * **stale marker / heartbeat** — completion markers that disagree
+//!   with the segments actually on disk, and leftover liveness beacons;
+//!   removed (a marker is cheap to re-earn by re-running the worker).
+//!
+//! Quarantine moves files into a `quarantine/` subdirectory instead of
+//! deleting them: the doctor's job is to make the directory mergeable
+//! again without destroying evidence (or another plan's data). Without
+//! `--fix`, the doctor only reports what it *would* do.
+//!
+//! When no plan manifest is available, the doctor falls back to a
+//! majority vote over the hashes embedded in the file names (ties break
+//! to the lexicographically smallest hash) and skips the plan-dependent
+//! checks (node counts, ownership topology).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::read_binary_header;
+
+use super::plan::ShardPlan;
+use super::worker::{
+    parse_marker, parse_meta_file_name, parse_segment_file_name, MetaFileKind, SegmentKind,
+};
+
+/// Subdirectory quarantined files are moved into.
+pub const QUARANTINE_DIR: &str = "quarantine";
+
+/// What the doctor concluded about one file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FileStatus {
+    /// A valid segment/overflow file (or trusted marker) of this plan.
+    Complete,
+    /// A final-named segment that fails validation.
+    Truncated(String),
+    /// A `magquilt-tmp-*` leftover from a dead attempt.
+    StaleTemp,
+    /// An artifact from a different plan (its hash).
+    ForeignPlan(String),
+    /// An overflow file contradicting the plan's topology.
+    OrphanedOverflow(String),
+    /// An owner segment contradicting the plan's topology.
+    Misplaced(String),
+    /// A completion marker that disagrees with the disk.
+    StaleMarker(String),
+    /// A leftover liveness beacon.
+    StaleHeartbeat,
+    /// A name the runtime never produces.
+    Unrecognized,
+}
+
+impl FileStatus {
+    /// Human-readable label (the reason travels separately).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FileStatus::Complete => "complete",
+            FileStatus::Truncated(_) => "truncated",
+            FileStatus::StaleTemp => "stale-temp",
+            FileStatus::ForeignPlan(_) => "foreign-plan",
+            FileStatus::OrphanedOverflow(_) => "orphaned-overflow",
+            FileStatus::Misplaced(_) => "misplaced",
+            FileStatus::StaleMarker(_) => "stale-marker",
+            FileStatus::StaleHeartbeat => "stale-heartbeat",
+            FileStatus::Unrecognized => "unrecognized",
+        }
+    }
+
+    /// The repair this status calls for.
+    fn remedy(&self) -> Remedy {
+        match self {
+            FileStatus::Complete => Remedy::Keep,
+            FileStatus::StaleTemp | FileStatus::StaleMarker(_) | FileStatus::StaleHeartbeat => {
+                Remedy::Remove
+            }
+            FileStatus::Truncated(_)
+            | FileStatus::ForeignPlan(_)
+            | FileStatus::OrphanedOverflow(_)
+            | FileStatus::Misplaced(_)
+            | FileStatus::Unrecognized => Remedy::Quarantine,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Remedy {
+    Keep,
+    Remove,
+    Quarantine,
+}
+
+/// What happened (or would happen) to one file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DoctorAction {
+    /// Healthy; left in place.
+    Kept,
+    /// Deleted (`--fix`).
+    Removed,
+    /// Moved into `quarantine/` (`--fix`).
+    Quarantined,
+    /// Would be deleted without `--fix`.
+    WouldRemove,
+    /// Would be quarantined without `--fix`.
+    WouldQuarantine,
+}
+
+/// One examined file.
+#[derive(Debug, Clone)]
+pub struct DoctorEntry {
+    /// File name inside the segment directory.
+    pub name: String,
+    /// The diagnosis.
+    pub status: FileStatus,
+    /// What was (or would be) done about it.
+    pub action: DoctorAction,
+}
+
+/// The doctor's full findings for one directory.
+#[derive(Debug)]
+pub struct DoctorReport {
+    /// The reference plan hash the classification ran against (absent
+    /// only for a directory with no recognizable artifacts at all).
+    pub hash: Option<String>,
+    /// Per-file rows, sorted by name.
+    pub entries: Vec<DoctorEntry>,
+    /// Files deleted (or that would be).
+    pub removed: usize,
+    /// Files quarantined (or that would be).
+    pub quarantined: usize,
+}
+
+impl DoctorReport {
+    /// Whether the directory needs (or needed) any repair at all.
+    pub fn healthy(&self) -> bool {
+        self.removed == 0 && self.quarantined == 0
+    }
+}
+
+/// Pick the reference hash by majority vote over all hash-carrying file
+/// names (ties break to the lexicographically smallest hash).
+fn majority_hash(names: &[String]) -> Option<String> {
+    let mut votes: BTreeMap<String, usize> = BTreeMap::new();
+    for name in names {
+        let hash = parse_segment_file_name(name)
+            .map(|i| i.hash_hex)
+            .or_else(|| parse_meta_file_name(name).map(|i| i.hash_hex));
+        if let Some(h) = hash {
+            *votes.entry(h).or_insert(0) += 1;
+        }
+    }
+    // BTreeMap iterates in key order, so with `>` on the count the first
+    // (lexicographically smallest) hash wins ties.
+    let mut best: Option<(String, usize)> = None;
+    for (h, n) in votes {
+        if best.as_ref().map_or(true, |(_, bn)| n > *bn) {
+            best = Some((h, n));
+        }
+    }
+    best.map(|(h, _)| h)
+}
+
+/// Move `path` into `dir/quarantine/`, suffixing the name on collision.
+fn quarantine(dir: &Path, name: &str) -> Result<()> {
+    let qdir = dir.join(QUARANTINE_DIR);
+    std::fs::create_dir_all(&qdir)
+        .with_context(|| format!("creating {}", qdir.display()))?;
+    let mut target = qdir.join(name);
+    let mut suffix = 0;
+    while target.exists() {
+        suffix += 1;
+        if suffix > 1000 {
+            bail!("cannot find a free quarantine name for {name}");
+        }
+        target = qdir.join(format!("{name}.{suffix}"));
+    }
+    std::fs::rename(dir.join(name), &target)
+        .with_context(|| format!("quarantining {name} into {}", target.display()))
+}
+
+/// Examine `dir` and classify every file; with `fix`, apply the
+/// remedies (delete stale files, move damaged/foreign ones into
+/// `quarantine/`). `plan` enables the plan-dependent checks; without it
+/// the reference hash comes from a majority vote over the file names.
+pub fn doctor(dir: &Path, plan: Option<&ShardPlan>, fix: bool) -> Result<DoctorReport> {
+    let mut names: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("reading segment directory {}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name == super::PLAN_FILE || (name == QUARANTINE_DIR && entry.path().is_dir()) {
+            continue;
+        }
+        names.push(name);
+    }
+    names.sort();
+    let hash = match plan {
+        Some(p) => Some(p.hash_hex()),
+        None => majority_hash(&names),
+    };
+
+    // First pass: segments and overflow files (markers are judged
+    // against the set of valid segments, so they need a second pass).
+    let mut statuses: BTreeMap<String, FileStatus> = BTreeMap::new();
+    // worker → (segments present and valid, their edge total).
+    let mut valid_owned: BTreeMap<usize, (usize, u64)> = BTreeMap::new();
+    for name in &names {
+        if name.starts_with("magquilt-tmp-") {
+            statuses.insert(name.clone(), FileStatus::StaleTemp);
+            continue;
+        }
+        if parse_meta_file_name(name).is_some() {
+            continue; // second pass
+        }
+        let Some(info) = parse_segment_file_name(name) else {
+            statuses.insert(name.clone(), FileStatus::Unrecognized);
+            continue;
+        };
+        if hash.as_deref() != Some(info.hash_hex.as_str()) {
+            statuses.insert(name.clone(), FileStatus::ForeignPlan(info.hash_hex));
+            continue;
+        }
+        if let Some(p) = plan {
+            let topology = if info.shard >= p.num_shards {
+                Some(format!("shard {} out of range (plan has {})", info.shard, p.num_shards))
+            } else if info.worker >= p.num_workers() {
+                Some(format!(
+                    "worker {} out of range (plan has {})",
+                    info.worker,
+                    p.num_workers()
+                ))
+            } else {
+                let owner = p.owner_of_shard(info.shard);
+                match info.kind {
+                    SegmentKind::Owned if info.worker != owner => {
+                        Some(format!("shard {} is owned by worker {owner}", info.shard))
+                    }
+                    SegmentKind::Overflow if info.worker == owner => Some(format!(
+                        "worker {owner} owns shard {} and cannot overflow into it",
+                        info.shard
+                    )),
+                    _ => None,
+                }
+            };
+            if let Some(reason) = topology {
+                let status = match info.kind {
+                    SegmentKind::Owned => FileStatus::Misplaced(reason),
+                    SegmentKind::Overflow => FileStatus::OrphanedOverflow(reason),
+                };
+                statuses.insert(name.clone(), status);
+                continue;
+            }
+        }
+        let header = match read_binary_header(&dir.join(name)) {
+            Ok(h) => h,
+            Err(e) => {
+                statuses.insert(name.clone(), FileStatus::Truncated(e.to_string()));
+                continue;
+            }
+        };
+        if let Some(p) = plan {
+            if header.num_nodes != p.model.num_nodes() as u64 {
+                statuses.insert(
+                    name.clone(),
+                    FileStatus::Truncated(format!(
+                        "claims {} nodes but the plan's model has {}",
+                        header.num_nodes,
+                        p.model.num_nodes()
+                    )),
+                );
+                continue;
+            }
+        }
+        if info.kind == SegmentKind::Owned {
+            let slot = valid_owned.entry(info.worker).or_insert((0, 0));
+            slot.0 += 1;
+            slot.1 += header.num_edges;
+        }
+        statuses.insert(name.clone(), FileStatus::Complete);
+    }
+
+    // Second pass: markers and heartbeats.
+    for name in &names {
+        let Some(meta) = parse_meta_file_name(name) else { continue };
+        if hash.as_deref() != Some(meta.hash_hex.as_str()) {
+            statuses.insert(name.clone(), FileStatus::ForeignPlan(meta.hash_hex));
+            continue;
+        }
+        if meta.kind == MetaFileKind::Heartbeat {
+            // Any heartbeat the doctor sees is a dead worker's: doctoring
+            // a directory with live workers is already undefined.
+            statuses.insert(name.clone(), FileStatus::StaleHeartbeat);
+            continue;
+        }
+        let verdict = std::fs::read_to_string(dir.join(name))
+            .ok()
+            .and_then(|text| parse_marker(&text))
+            .map_or(Some("unparseable contents".to_string()), |(h, w, s)| {
+                if h != meta.hash_hex || w != meta.worker {
+                    return Some("contents disagree with the file name".to_string());
+                }
+                let Some(p) = plan else { return None };
+                let Ok(owned) = p.worker_range(w) else {
+                    return Some(format!("worker {w} out of the plan's range"));
+                };
+                let width = owned.1 - owned.0;
+                let (have, edges) = valid_owned.get(&w).copied().unwrap_or((0, 0));
+                if s.owned_segments != width || have != width || s.owned_edges != edges {
+                    return Some(format!(
+                        "records {} segments / {} edges but {have} valid segments / {edges} \
+                         edges are on disk",
+                        s.owned_segments, s.owned_edges
+                    ));
+                }
+                None
+            });
+        let status = match verdict {
+            None => FileStatus::Complete,
+            Some(reason) => FileStatus::StaleMarker(reason),
+        };
+        statuses.insert(name.clone(), status);
+    }
+
+    // Apply remedies.
+    let mut report =
+        DoctorReport { hash, entries: Vec::with_capacity(names.len()), removed: 0, quarantined: 0 };
+    for name in &names {
+        let status = statuses
+            .remove(name)
+            .unwrap_or(FileStatus::Unrecognized);
+        let action = match status.remedy() {
+            Remedy::Keep => DoctorAction::Kept,
+            Remedy::Remove => {
+                report.removed += 1;
+                if fix {
+                    std::fs::remove_file(dir.join(name))
+                        .with_context(|| format!("removing {name}"))?;
+                    DoctorAction::Removed
+                } else {
+                    DoctorAction::WouldRemove
+                }
+            }
+            Remedy::Quarantine => {
+                report.quarantined += 1;
+                if fix {
+                    quarantine(dir, name)?;
+                    DoctorAction::Quarantined
+                } else {
+                    DoctorAction::WouldQuarantine
+                }
+            }
+        };
+        report.entries.push(DoctorEntry { name: name.clone(), status, action });
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelSpec, RunSpec};
+    use crate::dist::worker::{
+        heartbeat_file_name, marker_file_name, overflow_file_name, segment_file_name,
+        write_marker, SegmentSummary,
+    };
+    use crate::graph::{write_edge_list_binary, EdgeList};
+
+    fn test_plan() -> ShardPlan {
+        let mut model = ModelSpec::default_spec();
+        model.log2_nodes = 4;
+        model.attributes = 4;
+        let mut run = RunSpec::default_spec();
+        run.shards = 4;
+        ShardPlan::new(&model, &run, 2).unwrap()
+    }
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("magquilt_doctor_test").join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn status_of<'r>(report: &'r DoctorReport, name: &str) -> &'r DoctorEntry {
+        report.entries.iter().find(|e| e.name == name).unwrap()
+    }
+
+    #[test]
+    fn classifies_and_repairs_every_crash_residue() {
+        let plan = test_plan();
+        let hash = plan.hash_hex();
+        let dir = fresh_dir("classify");
+        let n = 16;
+        // Worker 0 owns shards {0,1}; worker 1 owns {2,3}.
+        let good_seg = segment_file_name(&hash, 0, 0);
+        write_edge_list_binary(&EdgeList::from_edges(n, vec![(0, 1)]), &dir.join(&good_seg))
+            .unwrap();
+        let good_ovf = overflow_file_name(&hash, 2, 0);
+        write_edge_list_binary(&EdgeList::from_edges(n, vec![(8, 0)]), &dir.join(&good_ovf))
+            .unwrap();
+        let truncated = segment_file_name(&hash, 1, 0);
+        std::fs::write(dir.join(&truncated), b"MAGQ").unwrap();
+        let foreign = segment_file_name("deadbeefdeadbeef", 0, 0);
+        std::fs::write(dir.join(&foreign), b"other").unwrap();
+        let temp = "magquilt-tmp-12-00ff-0-seg.part";
+        std::fs::write(dir.join(temp), b"junk").unwrap();
+        let self_ovf = overflow_file_name(&hash, 0, 0);
+        write_edge_list_binary(&EdgeList::from_edges(n, vec![(0, 2)]), &dir.join(&self_ovf))
+            .unwrap();
+        let misplaced = segment_file_name(&hash, 2, 0);
+        write_edge_list_binary(&EdgeList::from_edges(n, vec![(8, 1)]), &dir.join(&misplaced))
+            .unwrap();
+        let hb = heartbeat_file_name(&hash, 0);
+        std::fs::write(dir.join(&hb), b"").unwrap();
+        // Marker claiming worker 0 finished: stale (shard 1 is truncated).
+        let summary = SegmentSummary {
+            owned_segments: 2,
+            owned_edges: 2,
+            overflow_files: 1,
+            overflow_edges: 1,
+        };
+        write_marker(&dir, &hash, 0, &summary).unwrap();
+        let marker = marker_file_name(&hash, 0);
+        std::fs::write(dir.join("notes.txt"), "?").unwrap();
+        std::fs::write(dir.join(super::super::PLAN_FILE), "ignored").unwrap();
+
+        // Dry run: everything classified, nothing touched.
+        let report = doctor(&dir, Some(&plan), false).unwrap();
+        assert_eq!(report.hash.as_deref(), Some(hash.as_str()));
+        assert!(!report.healthy());
+        assert_eq!(status_of(&report, &good_seg).status, FileStatus::Complete);
+        assert_eq!(status_of(&report, &good_ovf).status, FileStatus::Complete);
+        assert!(matches!(status_of(&report, &truncated).status, FileStatus::Truncated(_)));
+        assert!(matches!(status_of(&report, &foreign).status, FileStatus::ForeignPlan(_)));
+        assert_eq!(status_of(&report, temp).status, FileStatus::StaleTemp);
+        assert!(matches!(
+            status_of(&report, &self_ovf).status,
+            FileStatus::OrphanedOverflow(_)
+        ));
+        assert!(matches!(status_of(&report, &misplaced).status, FileStatus::Misplaced(_)));
+        assert_eq!(status_of(&report, &hb).status, FileStatus::StaleHeartbeat);
+        assert!(matches!(status_of(&report, &marker).status, FileStatus::StaleMarker(_)));
+        assert_eq!(status_of(&report, "notes.txt").status, FileStatus::Unrecognized);
+        assert_eq!(status_of(&report, temp).action, DoctorAction::WouldRemove);
+        assert_eq!(status_of(&report, &foreign).action, DoctorAction::WouldQuarantine);
+        assert!(dir.join(&truncated).exists(), "dry run touches nothing");
+        assert!(dir.join(temp).exists());
+
+        // Fix: stale files removed, damaged/foreign quarantined.
+        let report = doctor(&dir, Some(&plan), true).unwrap();
+        assert_eq!(report.removed, 3, "temp + heartbeat + marker");
+        assert_eq!(report.quarantined, 5, "truncated + foreign + ovf + misplaced + notes");
+        assert!(dir.join(&good_seg).exists());
+        assert!(dir.join(&good_ovf).exists());
+        assert!(!dir.join(temp).exists());
+        assert!(!dir.join(&hb).exists());
+        assert!(!dir.join(&marker).exists());
+        let q = dir.join(QUARANTINE_DIR);
+        assert!(q.join(&truncated).exists());
+        assert!(q.join(&foreign).exists());
+        assert!(q.join(&self_ovf).exists());
+        assert!(q.join(&misplaced).exists());
+        assert!(q.join("notes.txt").exists());
+
+        // The directory is now healthy (the quarantine dir is ignored).
+        let report = doctor(&dir, Some(&plan), false).unwrap();
+        assert!(report.healthy(), "{report:?}");
+    }
+
+    #[test]
+    fn trusted_marker_is_kept() {
+        let plan = test_plan();
+        let hash = plan.hash_hex();
+        let dir = fresh_dir("marker_ok");
+        let n = 16;
+        write_edge_list_binary(
+            &EdgeList::from_edges(n, vec![(0, 1), (2, 0)]),
+            &dir.join(segment_file_name(&hash, 0, 0)),
+        )
+        .unwrap();
+        write_edge_list_binary(
+            &EdgeList::from_edges(n, vec![(4, 4)]),
+            &dir.join(segment_file_name(&hash, 1, 0)),
+        )
+        .unwrap();
+        let summary = SegmentSummary {
+            owned_segments: 2,
+            owned_edges: 3,
+            overflow_files: 0,
+            overflow_edges: 0,
+        };
+        write_marker(&dir, &hash, 0, &summary).unwrap();
+        let report = doctor(&dir, Some(&plan), false).unwrap();
+        assert!(report.healthy(), "{report:?}");
+        assert_eq!(
+            status_of(&report, &marker_file_name(&hash, 0)).status,
+            FileStatus::Complete
+        );
+    }
+
+    #[test]
+    fn majority_hash_breaks_ties_lexicographically() {
+        let names = vec![
+            segment_file_name("bbbbbbbbbbbbbbbb", 0, 0),
+            segment_file_name("aaaaaaaaaaaaaaaa", 0, 0),
+            segment_file_name("bbbbbbbbbbbbbbbb", 1, 0),
+            segment_file_name("aaaaaaaaaaaaaaaa", 1, 0),
+            "notes.txt".to_string(),
+        ];
+        assert_eq!(majority_hash(&names).as_deref(), Some("aaaaaaaaaaaaaaaa"));
+        let names = vec![
+            segment_file_name("bbbbbbbbbbbbbbbb", 0, 0),
+            segment_file_name("bbbbbbbbbbbbbbbb", 1, 0),
+            segment_file_name("aaaaaaaaaaaaaaaa", 0, 0),
+        ];
+        assert_eq!(majority_hash(&names).as_deref(), Some("bbbbbbbbbbbbbbbb"));
+        assert_eq!(majority_hash(&["x.txt".to_string()]), None);
+    }
+
+    #[test]
+    fn planless_mode_still_classifies_by_name_and_header() {
+        let dir = fresh_dir("planless");
+        let n = 16;
+        let hash = "aaaaaaaaaaaaaaaa";
+        write_edge_list_binary(
+            &EdgeList::from_edges(n, vec![(0, 1)]),
+            &dir.join(segment_file_name(hash, 0, 0)),
+        )
+        .unwrap();
+        write_edge_list_binary(
+            &EdgeList::from_edges(n, vec![(1, 1)]),
+            &dir.join(segment_file_name(hash, 1, 0)),
+        )
+        .unwrap();
+        let foreign = segment_file_name("ffffffffffffffff", 0, 0);
+        std::fs::write(dir.join(&foreign), b"other plan").unwrap();
+        let truncated = segment_file_name(hash, 2, 1);
+        std::fs::write(dir.join(&truncated), b"MAGQ").unwrap();
+        let report = doctor(&dir, None, false).unwrap();
+        assert_eq!(report.hash.as_deref(), Some(hash));
+        assert!(matches!(status_of(&report, &foreign).status, FileStatus::ForeignPlan(_)));
+        assert!(matches!(status_of(&report, &truncated).status, FileStatus::Truncated(_)));
+        assert_eq!(
+            status_of(&report, &segment_file_name(hash, 0, 0)).status,
+            FileStatus::Complete
+        );
+    }
+}

@@ -1,0 +1,215 @@
+//! Deterministic fault injection for the distributed runtime.
+//!
+//! A [`FaultPlan`] makes every crash window in the worker's write path
+//! reachable on demand, so the kill-and-resume equivalence tests (and the
+//! CI crash-inject smoke) can place a failure at an exact point instead
+//! of hoping a `kill -9` lands somewhere interesting. Faults surface as
+//! ordinary [`io::Error`]s carrying an `injected fault:` message: the
+//! coordinator aborts the run exactly as it would for a real disk error,
+//! and the CLI worker exits non-zero, which is what the supervisor sees
+//! from a genuine crash.
+//!
+//! The spec grammar (CLI `--inject-fault`, test-only):
+//!
+//! * `crash-after-segments=K` — let `K` owned segments reach their final
+//!   names, then fail the next owned-segment write before it starts.
+//! * `crash-before-rename` — write a complete, finalized temp file, then
+//!   fail before the atomic rename — deliberately **leaking the temp**,
+//!   exactly the on-disk state a real crash in that window leaves.
+//! * `crash-before-marker` — finish every segment, then fail before the
+//!   completion marker is written (the `K = all-but-marker` case).
+//! * `fail-write-shard=I` — fail shard `I`'s body write mid-stream
+//!   (disk-full simulation), leaving a truncated, unfinalized temp.
+//!
+//! The driver form appends `@wN` (e.g. `crash-after-segments=1@w1`):
+//! the supervisor injects the fault into worker `N`'s **first attempt
+//! only**, so the supervised retry runs clean and must resume.
+//!
+//! Faults are confined to the I/O/driver layers by construction — maglint
+//! rule 6 (`fault-hook`) fails the build if any of these names shows up
+//! in an output-determining module. An injected crash can change *when*
+//! bytes reach disk, never *which* bytes the sampler derives.
+
+use std::io;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Where in the write path an injected fault fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail before writing the `(K+1)`-th owned segment of this process.
+    CrashAfterSegments(usize),
+    /// Fail after the temp file is complete, before the atomic rename
+    /// (the temp is left behind, as a real crash would leave it).
+    CrashBeforeRename,
+    /// Fail after every segment is final, before the completion marker.
+    CrashBeforeMarker,
+    /// Fail shard `I`'s segment body write, leaving a truncated temp.
+    FailWriteShard(usize),
+}
+
+/// A parsed `--inject-fault` spec. See the [module docs](self).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The crash window to hit.
+    pub kind: FaultKind,
+    spec: String,
+}
+
+impl FaultPlan {
+    /// Parse a worker-level spec (no `@wN` suffix).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let kind = if let Some(k) = spec.strip_prefix("crash-after-segments=") {
+            FaultKind::CrashAfterSegments(
+                k.parse()
+                    .map_err(|_| anyhow!("crash-after-segments wants an integer, got {k:?}"))?,
+            )
+        } else if spec == "crash-before-rename" {
+            FaultKind::CrashBeforeRename
+        } else if spec == "crash-before-marker" {
+            FaultKind::CrashBeforeMarker
+        } else if let Some(i) = spec.strip_prefix("fail-write-shard=") {
+            FaultKind::FailWriteShard(
+                i.parse().map_err(|_| anyhow!("fail-write-shard wants an integer, got {i:?}"))?,
+            )
+        } else {
+            bail!(
+                "unknown fault spec {spec:?} (expected crash-after-segments=K | \
+                 crash-before-rename | crash-before-marker | fail-write-shard=I)"
+            );
+        };
+        Ok(FaultPlan { kind, spec: spec.to_string() })
+    }
+
+    /// The spec string this plan was parsed from (without any `@wN`
+    /// suffix) — what a driver forwards to the targeted worker process.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// The error every fired fault returns — distinctive, so test
+    /// assertions and log readers can tell an injected crash from a real
+    /// one.
+    fn fire(&self) -> io::Error {
+        io::Error::other(format!("injected fault: {}", self.spec))
+    }
+
+    /// Gate before an owned segment is written; `written` counts owned
+    /// segments this process has already landed under final names.
+    pub fn before_owned_segment(&self, written: usize) -> io::Result<()> {
+        match self.kind {
+            FaultKind::CrashAfterSegments(k) if written >= k => Err(self.fire()),
+            _ => Ok(()),
+        }
+    }
+
+    /// Gate between a shard's temp-file creation and its body write.
+    pub fn before_shard_body(&self, shard: usize) -> io::Result<()> {
+        match self.kind {
+            FaultKind::FailWriteShard(i) if i == shard => Err(self.fire()),
+            _ => Ok(()),
+        }
+    }
+
+    /// Gate between a finalized temp file and its atomic rename.
+    pub fn before_rename(&self) -> io::Result<()> {
+        match self.kind {
+            FaultKind::CrashBeforeRename => Err(self.fire()),
+            _ => Ok(()),
+        }
+    }
+
+    /// Gate between the last finalized segment and the completion marker.
+    pub fn before_marker(&self) -> io::Result<()> {
+        match self.kind {
+            FaultKind::CrashBeforeMarker => Err(self.fire()),
+            _ => Ok(()),
+        }
+    }
+
+    /// Does firing this fault leave the in-flight temp file on disk (the
+    /// crash windows where a real process death would)?
+    pub fn leaks_temp(&self) -> bool {
+        matches!(self.kind, FaultKind::CrashBeforeRename | FaultKind::FailWriteShard(_))
+    }
+}
+
+/// Parse a driver-level spec `<fault>[@wN]`: the fault plus the worker
+/// whose **first attempt** it is injected into (`None` = no worker
+/// targeting, legal only for the standalone `shard-worker` form).
+pub fn parse_driver_fault(spec: &str) -> Result<(FaultPlan, Option<usize>)> {
+    match spec.rsplit_once("@w") {
+        Some((fault, worker)) => {
+            let w = worker
+                .parse()
+                .map_err(|_| anyhow!("fault spec {spec:?}: @w wants a worker index"))?;
+            Ok((FaultPlan::parse(fault)?, Some(w)))
+        }
+        None => Ok((FaultPlan::parse(spec)?, None)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_parse_and_reject() {
+        assert_eq!(
+            FaultPlan::parse("crash-after-segments=3").unwrap().kind,
+            FaultKind::CrashAfterSegments(3)
+        );
+        assert_eq!(
+            FaultPlan::parse("crash-before-rename").unwrap().kind,
+            FaultKind::CrashBeforeRename
+        );
+        assert_eq!(
+            FaultPlan::parse("crash-before-marker").unwrap().kind,
+            FaultKind::CrashBeforeMarker
+        );
+        assert_eq!(
+            FaultPlan::parse("fail-write-shard=7").unwrap().kind,
+            FaultKind::FailWriteShard(7)
+        );
+        assert!(FaultPlan::parse("crash-after-segments=x").is_err());
+        assert!(FaultPlan::parse("explode").is_err());
+        assert!(FaultPlan::parse("").is_err());
+    }
+
+    #[test]
+    fn driver_specs_carry_the_target_worker() {
+        let (fault, worker) = parse_driver_fault("crash-after-segments=1@w1").unwrap();
+        assert_eq!(fault.kind, FaultKind::CrashAfterSegments(1));
+        assert_eq!(worker, Some(1));
+        let (fault, worker) = parse_driver_fault("crash-before-marker").unwrap();
+        assert_eq!(fault.kind, FaultKind::CrashBeforeMarker);
+        assert_eq!(worker, None);
+        assert!(parse_driver_fault("crash-before-marker@wtwo").is_err());
+    }
+
+    #[test]
+    fn gates_fire_exactly_where_aimed() {
+        let f = FaultPlan::parse("crash-after-segments=2").unwrap();
+        assert!(f.before_owned_segment(0).is_ok());
+        assert!(f.before_owned_segment(1).is_ok());
+        assert!(f.before_owned_segment(2).is_err());
+        assert!(f.before_shard_body(0).is_ok());
+        assert!(f.before_rename().is_ok());
+        assert!(f.before_marker().is_ok());
+        assert!(!f.leaks_temp());
+
+        let f = FaultPlan::parse("fail-write-shard=3").unwrap();
+        assert!(f.before_shard_body(2).is_ok());
+        let err = f.before_shard_body(3).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        assert!(f.leaks_temp());
+
+        let f = FaultPlan::parse("crash-before-rename").unwrap();
+        assert!(f.before_rename().is_err());
+        assert!(f.leaks_temp());
+
+        let f = FaultPlan::parse("crash-before-marker").unwrap();
+        assert!(f.before_marker().is_err());
+        assert!(f.before_owned_segment(99).is_ok());
+    }
+}

@@ -45,7 +45,7 @@ use crate::graph::{
 };
 
 use super::plan::ShardPlan;
-use super::worker::{parse_segment_file_name, SegmentKind};
+use super::worker::{parse_meta_file_name, parse_segment_file_name, SegmentKind};
 
 /// Hard cap on merge worker threads, mirroring the coordinator's shard
 /// cap: `std::thread::scope` aborts the process if a spawn fails, so an
@@ -117,6 +117,24 @@ pub fn scan_segments(dir: &Path, plan: &ShardPlan) -> Result<SegmentCatalog> {
         let name = entry.file_name();
         let name = name.to_string_lossy();
         if name == super::PLAN_FILE {
+            continue;
+        }
+        if name == super::doctor::QUARANTINE_DIR && entry.path().is_dir() {
+            // The doctor's quarantine holds files already ruled out of
+            // this merge; its contents are deliberately not scanned.
+            continue;
+        }
+        if let Some(meta) = parse_meta_file_name(&name) {
+            // Completion markers and heartbeats are resume/supervision
+            // state, not merge inputs — but a foreign-plan marker is the
+            // same mixed-directory mistake as a foreign segment.
+            if meta.hash_hex != hash {
+                bail!(
+                    "marker {name} was produced under plan {} but this plan hashes to {hash} — \
+                     refusing to merge mixed plans",
+                    meta.hash_hex
+                );
+            }
             continue;
         }
         if name.starts_with("magquilt-tmp-") {
@@ -492,6 +510,19 @@ pub fn merge_segments_with(
                     .with_context(|| format!("removing consumed overflow {}", m.path.display()))?;
             }
         }
+        // Drain this plan's completion markers and heartbeats too — they
+        // only describe the segments just consumed, and leaving them
+        // behind would make a later run in the same directory look
+        // half-resumed.
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if parse_meta_file_name(&name).is_some_and(|m| m.hash_hex == plan.hash_hex()) {
+                std::fs::remove_file(entry.path())
+                    .with_context(|| format!("removing consumed marker {name}"))?;
+            }
+        }
     }
     report.merge_ms = start.elapsed().as_secs_f64() * 1e3;
     Ok(report)
@@ -697,6 +728,47 @@ mod tests {
         write_run(&dir, &segment_file_name(&hash, 1, 1), 16, &[]);
         // A stray segment from some other plan.
         write_run(&dir, &segment_file_name("deadbeefdeadbeef", 0, 0), 16, &[]);
+        let err = scan_segments(&dir, &plan).unwrap_err();
+        assert!(err.to_string().contains("mixed plans"), "{err}");
+    }
+
+    #[test]
+    fn markers_and_quarantine_are_tolerated_and_drained() {
+        use crate::dist::worker::{heartbeat_file_name, marker_file_name};
+        // A resumed run's directory also carries completion markers,
+        // heartbeat files, and possibly a doctor quarantine subdir. The
+        // scan must look past all of them, and remove_inputs must drain
+        // this plan's markers so the directory ends up empty of run
+        // state — while a *foreign* marker is still a mixed-plan error.
+        let plan = plan_for(4, 2, 2);
+        let hash = plan.hash_hex();
+        let dir = fresh_dir("markers");
+        write_run(&dir, &segment_file_name(&hash, 0, 0), 16, &[(0, 1)]);
+        write_run(&dir, &segment_file_name(&hash, 1, 1), 16, &[(9, 2)]);
+        std::fs::write(dir.join(marker_file_name(&hash, 0)), "format = 1\n").unwrap();
+        std::fs::write(dir.join(heartbeat_file_name(&hash, 1)), "").unwrap();
+        std::fs::create_dir_all(dir.join(super::super::doctor::QUARANTINE_DIR)).unwrap();
+        std::fs::write(
+            dir.join(super::super::doctor::QUARANTINE_DIR).join("junk.seg"),
+            "x",
+        )
+        .unwrap();
+        let out = dir.join("merged.bin");
+        let report = merge_segments(&dir, &plan, &out, true).unwrap();
+        assert_eq!(report.total_edges, 2);
+        let mut left: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        left.sort();
+        assert_eq!(left, vec!["merged.bin".to_string(), "quarantine".to_string()]);
+
+        // Foreign-plan markers are refused like foreign segments.
+        let dir = fresh_dir("foreign_marker");
+        write_run(&dir, &segment_file_name(&hash, 0, 0), 16, &[]);
+        write_run(&dir, &segment_file_name(&hash, 1, 1), 16, &[]);
+        std::fs::write(dir.join(marker_file_name("deadbeefdeadbeef", 0)), "format = 1\n")
+            .unwrap();
         let err = scan_segments(&dir, &plan).unwrap_err();
         assert!(err.to_string().contains("mixed plans"), "{err}");
     }

@@ -31,7 +31,8 @@
 //!
 //! `magquilt sample --dist-workers W --out g.bin` runs the whole pipeline
 //! on one machine: it builds the plan, spawns `W` local `shard-worker`
-//! processes, monitors them, merges, and drains the segment directory.
+//! processes, supervises them (restarting crashed or stalled workers in
+//! place — see [`supervise`]), merges, and drains the segment directory.
 //! Each stage is equally usable standalone.
 //!
 //! # Plan manifest (`plan.toml`)
@@ -41,12 +42,14 @@
 //! per-worker shard ranges (`shard_starts[w] .. shard_ends[w]`);
 //! `[model]` and `[run]` — the config-file schema. The hash digests the
 //! output-determining fields only (model, seed, sampler, piece/attr mode,
-//! `S`, ranges) — never the per-host thread knobs — and every segment
-//! file embeds it, so segments from different plans can never be stitched
-//! together. Inside a plan the attribute mode defaults to **chunked**
-//! (there are no sequential-stream goldens to protect in dist mode, and
-//! chunked is what parallelizes each worker's setup pipeline); the
-//! resolved mode is recorded in the manifest so every worker agrees.
+//! `S`, ranges) — never the per-host thread knobs (including the
+//! fault-tolerance knobs `worker_retries` / `worker_backoff_ms`) — and
+//! every segment file embeds it, so segments from different plans can
+//! never be stitched together. Inside a plan the attribute mode defaults
+//! to **chunked** (there are no sequential-stream goldens to protect in
+//! dist mode, and chunked is what parallelizes each worker's setup
+//! pipeline); the resolved mode is recorded in the manifest so every
+//! worker agrees.
 //!
 //! # Segment files
 //!
@@ -61,6 +64,13 @@
 //! * `ovf-<hash>-s<shard:05>-w<worker:04>.ovf` — edges a wide-span job
 //!   owned by `worker` sampled into a *foreign* shard's source range,
 //!   keyed by that destination shard. Written only when non-empty.
+//! * `done-<hash>-w<worker:04>.ok` — the worker's completion marker,
+//!   written **after** every segment/overflow file is durable. Records
+//!   the [`SegmentSummary`] so a resumed run can trust it without
+//!   re-sampling (see [`worker::run_worker_with`]).
+//! * `hb-<hash>-w<worker:04>.beat` — a liveness heartbeat the worker
+//!   touches while running; the supervisor treats a stale one as a hung
+//!   worker. Never merged; drained with the segments.
 //!
 //! Files are written under a pid + run-nonce temp name and atomically
 //! renamed, so any number of workers — across hosts on a shared
@@ -79,6 +89,22 @@
 //! through [`crate::graph::BinaryEdgeWriter`] reproduces the
 //! single-process file byte for byte.
 //!
+//! # Crash tolerance
+//!
+//! Workers are **resumable**, not stateless: the segment directory is an
+//! append-only ledger of atomic renames, so whatever survives a crash is
+//! trustworthy by construction. A rerun with `--resume` scans the
+//! directory, skips every job whose outputs are already complete
+//! (component-granular — see [`worker`]), re-runs the rest, and
+//! byte-identical idempotent writes make overlap harmless. The local
+//! driver supervises its workers with bounded retries, capped exponential
+//! backoff, and a heartbeat-based stall detector ([`supervise`]); a
+//! directory damaged by external causes is diagnosed and repaired by
+//! `magquilt doctor` ([`doctor`]); and every crash window is reachable
+//! deterministically through `--inject-fault` ([`fault`]). The full
+//! protocol and its determinism argument live in
+//! [`docs/fault-tolerance.md`](../../../docs/fault-tolerance.md).
+//!
 //! # Multi-host runbook
 //!
 //! ```text
@@ -89,6 +115,8 @@
 //! host0$ magquilt shard-worker --plan plan.toml --worker 0 --segment-dir segs/
 //! host1$ magquilt shard-worker --plan plan.toml --worker 1 --segment-dir segs/
 //! ...
+//! #    A crashed host reruns the same command with --resume appended:
+//! #    completed shards are detected on disk and skipped.
 //! # 3. Collect the segment files onto one host (scp/rsync; names are
 //! #    collision-free by construction) and merge. --merge-threads is a
 //! #    per-host knob (0 = auto): the output is byte-identical for any
@@ -97,22 +125,31 @@
 //!          --merge-threads 8 --out graph.bin
 //! # 4. Optional pre-merge inspection (counts, spans, truncation, hashes):
 //! magquilt stats segs/
+//! #    If the merge refuses (truncated/foreign files), classify and fix:
+//! magquilt doctor segs/ --fix
 //! ```
-//!
-//! Workers are stateless: a crashed worker is rerun with the same
-//! command and atomically overwrites its own files.
 
+pub mod doctor;
+pub mod fault;
 pub mod merge;
 pub mod plan;
+pub mod supervise;
 pub mod worker;
 
+pub use doctor::{doctor, DoctorAction, DoctorEntry, DoctorReport, FileStatus, QUARANTINE_DIR};
+pub use fault::{parse_driver_fault, FaultKind, FaultPlan};
 pub use merge::{merge_segments, merge_segments_with, scan_segments, validate_segments,
                 MergeOptions, MergeReport, MergedShardReport, SegmentCatalog, SegmentMeta,
                 ShardSegments};
 pub use plan::{ShardPlan, PLAN_FORMAT};
-pub use worker::{job_owners, overflow_file_name, parse_segment_file_name, run_worker,
-                 segment_file_name, SegmentFileInfo, SegmentKind, SegmentSink, SegmentSummary,
-                 WorkerReport};
+pub use supervise::{backoff_delay_ms, supervise_workers, Heartbeat, SuperviseOptions,
+                    SuperviseReport, WorkerFailure, WorkerOutcome, DEFAULT_STALL_MS,
+                    MAX_BACKOFF_MS};
+pub use worker::{heartbeat_file_name, job_owners, marker_file_name, overflow_file_name,
+                 parse_marker, parse_meta_file_name, parse_segment_file_name, run_worker,
+                 run_worker_with, scan_resume_state, segment_file_name, write_marker,
+                 MetaFileInfo, MetaFileKind, ResumeState, SegmentFileInfo, SegmentKind,
+                 SegmentSink, SegmentSummary, WorkerOptions, WorkerReport, MARKER_FORMAT};
 
 use std::path::Path;
 use std::process::{Command, Stdio};
@@ -125,16 +162,22 @@ pub const PLAN_FILE: &str = "plan.toml";
 /// Outcome of a full local distributed run.
 #[derive(Debug)]
 pub struct DistReport {
-    /// Worker processes spawned.
+    /// Worker processes spawned (not counting restarts).
     pub workers: usize,
+    /// Worker restarts the supervisor performed (0 on a clean run).
+    /// Restarted workers resume: their own logs report how many shards
+    /// they skipped ahead over.
+    pub restarts: usize,
     /// The merge outcome (totals + per-shard rows).
     pub merge: MergeReport,
 }
 
-/// Remove artifacts a previous attempt at **this same plan** may have
-/// left in the directory: segment/overflow files carrying this plan's
-/// hash, in-flight temp files, and a stale manifest. Segment files from a
-/// *different* plan are never deleted — they may be another run's
+/// Prepare a directory for (re)running **this same plan**: remove
+/// in-flight temp files, stale heartbeats, and a stale manifest, while
+/// **keeping** this plan's segment/overflow files and completion markers
+/// — they are exactly the resume state a restarted worker skips ahead
+/// on, and rewriting them is byte-identical anyway. Artifacts carrying a
+/// *different* plan's hash are never deleted — they may be another run's
 /// collected (not yet merged) multi-host work — and instead fail the run
 /// up front, before any sampling time is spent.
 fn clean_stale_artifacts(dir: &Path, plan: &ShardPlan) -> Result<()> {
@@ -146,40 +189,88 @@ fn clean_stale_artifacts(dir: &Path, plan: &ShardPlan) -> Result<()> {
         let entry = entry?;
         let name = entry.file_name();
         let name = name.to_string_lossy().into_owned();
-        if let Some(info) = parse_segment_file_name(&name) {
-            if info.hash_hex != hash {
-                bail!(
-                    "segment dir {} holds {name} from plan {} — refusing to overwrite another \
-                     run's segments; merge or remove them, or pick a different --segment-dir",
-                    dir.display(),
-                    info.hash_hex
-                );
+        let foreign = if let Some(info) = parse_segment_file_name(&name) {
+            (info.hash_hex != hash).then_some(info.hash_hex)
+        } else if let Some(meta) = parse_meta_file_name(&name) {
+            if meta.hash_hex == hash && meta.kind == MetaFileKind::Heartbeat {
+                // A heartbeat can only be stale here: our workers are not
+                // running yet, and a *live* foreign worker would imply a
+                // foreign plan hash (caught below).
+                std::fs::remove_file(entry.path())
+                    .with_context(|| format!("removing stale {name}"))?;
+                continue;
             }
-            std::fs::remove_file(entry.path())
-                .with_context(|| format!("removing stale {name}"))?;
-        } else if name == PLAN_FILE || name.starts_with("magquilt-tmp-") {
-            std::fs::remove_file(entry.path())
-                .with_context(|| format!("removing stale {name}"))?;
+            (meta.hash_hex != hash).then_some(meta.hash_hex)
+        } else {
+            if name == PLAN_FILE || name.starts_with("magquilt-tmp-") {
+                std::fs::remove_file(entry.path())
+                    .with_context(|| format!("removing stale {name}"))?;
+            }
+            continue;
+        };
+        if let Some(other) = foreign {
+            bail!(
+                "segment dir {} holds {name} from plan {other} — refusing to overwrite another \
+                 run's segments; merge or remove them, or pick a different --segment-dir",
+                dir.display(),
+            );
         }
     }
     Ok(())
 }
 
+/// Remove every `magquilt-tmp-*` leftover in `dir`. Crashed worker
+/// attempts leak their in-flight temp file by design (the atomic-rename
+/// protocol's whole point), and the merge refuses to run over temps; the
+/// driver calls this once all children are provably dead, when deleting
+/// them is safe.
+fn sweep_temp_files(dir: &Path) -> Result<usize> {
+    let mut swept = 0;
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        if name.to_string_lossy().starts_with("magquilt-tmp-") {
+            std::fs::remove_file(entry.path())
+                .with_context(|| format!("sweeping {}", name.to_string_lossy()))?;
+            swept += 1;
+        }
+    }
+    Ok(swept)
+}
+
 /// Run a whole distributed sample on this machine: write the plan
 /// manifest into `segment_dir`, spawn one `shard-worker` process per
 /// worker (using `worker_exe`, normally the current `magquilt` binary),
-/// wait for all of them, merge the segments into `out`, and drain the
-/// segment directory.
-///
-/// Worker stdout/stderr are inherited, so per-worker progress lines
-/// interleave with the driver's. Any worker failing (or dying on a
-/// signal) fails the run; its segments are left in place for inspection
-/// and are cleaned up by the next attempt.
+/// supervise them to completion, merge the segments into `out`, and
+/// drain the segment directory. Equivalent to [`run_distributed_with`]
+/// with the plan's own retry/backoff knobs.
 pub fn run_distributed(
     plan: &ShardPlan,
     segment_dir: &Path,
     out: &Path,
     worker_exe: &Path,
+) -> Result<DistReport> {
+    run_distributed_with(plan, segment_dir, out, worker_exe, &SuperviseOptions::from_plan(plan))
+}
+
+/// [`run_distributed`] with explicit supervision options (retry budget,
+/// backoff, stall deadline, and the optional first-attempt fault
+/// injection used by the crash tests and the CI smoke leg).
+///
+/// Worker stdout/stderr are inherited, so per-worker progress lines
+/// interleave with the driver's. Workers always run with `--resume`:
+/// the first attempt finds nothing to resume (the directory was cleaned
+/// up front), and every restart skips ahead over whatever its crashed
+/// predecessor completed. A worker exhausting its retry budget fails the
+/// run; the supervisor kills and reaps the remaining children, and the
+/// segments are left in place — rerunning the same command resumes from
+/// them.
+pub fn run_distributed_with(
+    plan: &ShardPlan,
+    segment_dir: &Path,
+    out: &Path,
+    worker_exe: &Path,
+    opts: &SuperviseOptions,
 ) -> Result<DistReport> {
     plan.validate()?;
     std::fs::create_dir_all(segment_dir)
@@ -188,56 +279,37 @@ pub fn run_distributed(
     let plan_path = segment_dir.join(PLAN_FILE);
     plan.save(&plan_path)?;
 
-    let mut children = Vec::new();
-    for w in 0..plan.num_workers() {
-        let spawned = Command::new(worker_exe)
-            .arg("shard-worker")
-            .arg("--plan")
-            .arg(&plan_path)
-            .arg("--worker")
-            .arg(w.to_string())
-            .arg("--segment-dir")
-            .arg(segment_dir)
-            .stdin(Stdio::null())
-            .spawn()
-            .with_context(|| {
-                format!("spawning worker {w} ({} shard-worker)", worker_exe.display())
-            });
-        match spawned {
-            Ok(child) => children.push((w, child)),
-            Err(e) => {
-                // Don't leak the workers already running.
-                for (_, mut child) in children {
-                    let _ = child.kill();
-                    let _ = child.wait();
-                }
-                return Err(e);
+    let hash = plan.hash_hex();
+    let supervised =
+        supervise_workers(plan.num_workers(), segment_dir, &hash, opts, |w, fault| {
+            let mut cmd = Command::new(worker_exe);
+            cmd.arg("shard-worker")
+                .arg("--plan")
+                .arg(&plan_path)
+                .arg("--worker")
+                .arg(w.to_string())
+                .arg("--segment-dir")
+                .arg(segment_dir)
+                .arg("--resume")
+                .stdin(Stdio::null());
+            if let Some(spec) = fault {
+                cmd.arg("--inject-fault").arg(spec);
             }
-        }
-    }
-    let mut failed = Vec::new();
-    for (w, mut child) in children {
-        let status = child.wait().with_context(|| format!("waiting for worker {w}"))?;
-        if !status.success() {
-            failed.push(format!("worker {w}: {status}"));
-        }
-    }
-    if !failed.is_empty() {
-        bail!(
-            "{} of {} workers failed ({}); segments left in {} for inspection",
-            failed.len(),
-            plan.num_workers(),
-            failed.join(", "),
-            segment_dir.display()
-        );
-    }
+            cmd
+        })?;
+
+    // All children are reaped (success or not), so leftover temps from
+    // crashed attempts are provably dead and safe to sweep; the merge
+    // would otherwise refuse to run over them.
+    sweep_temp_files(segment_dir)?;
 
     let merge = merge_segments(segment_dir, plan, out, true)?;
     std::fs::remove_file(&plan_path).ok();
     // Remove the directory if we own all of it (ignore failure: the user
-    // may have pointed --segment-dir at a shared location).
+    // may have pointed --segment-dir at a shared location, or the doctor
+    // may have quarantined files there).
     std::fs::remove_dir(segment_dir).ok();
-    Ok(DistReport { workers: plan.num_workers(), merge })
+    Ok(DistReport { workers: plan.num_workers(), restarts: supervised.restarts, merge })
 }
 
 #[cfg(test)]
@@ -245,7 +317,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn clean_stale_artifacts_only_touches_this_plans_files() {
+    fn clean_stale_artifacts_keeps_resume_state_and_guards_foreign_plans() {
         let dir = std::env::temp_dir().join("magquilt_dist_clean_test");
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
@@ -257,24 +329,61 @@ mod tests {
         .unwrap();
         let hash = plan.hash_hex();
         std::fs::write(dir.join(PLAN_FILE), "stale").unwrap();
-        std::fs::write(dir.join(segment_file_name(&hash, 0, 0)), "stale").unwrap();
-        std::fs::write(dir.join(overflow_file_name(&hash, 1, 1)), "stale").unwrap();
+        std::fs::write(dir.join(segment_file_name(&hash, 0, 0)), "resume me").unwrap();
+        std::fs::write(dir.join(overflow_file_name(&hash, 1, 1)), "resume me").unwrap();
+        std::fs::write(dir.join(marker_file_name(&hash, 0)), "resume me").unwrap();
+        std::fs::write(dir.join(heartbeat_file_name(&hash, 1)), "").unwrap();
         std::fs::write(dir.join("magquilt-tmp-1-x-0-seg.part"), "stale").unwrap();
         std::fs::write(dir.join("keep.txt"), "user data").unwrap();
         clean_stale_artifacts(&dir, &plan).unwrap();
-        let left: Vec<String> = std::fs::read_dir(&dir)
+        let mut left: Vec<String> = std::fs::read_dir(&dir)
             .unwrap()
             .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
             .collect();
-        assert_eq!(left, vec!["keep.txt".to_string()]);
+        left.sort();
+        // Resume state (segments, overflow, marker) survives; the temp,
+        // the stale heartbeat, and the stale manifest are gone.
+        assert_eq!(
+            left,
+            vec![
+                "keep.txt".to_string(),
+                marker_file_name(&hash, 0),
+                overflow_file_name(&hash, 1, 1),
+                segment_file_name(&hash, 0, 0),
+            ]
+        );
 
-        // Another plan's segments are sacred: the driver must refuse, not
-        // silently destroy a different run's collected (unmerged) work.
+        // Another plan's artifacts are sacred: the driver must refuse,
+        // not silently destroy a different run's collected (unmerged)
+        // work — whether segments or markers.
         let foreign = dir.join("seg-deadbeefdeadbeef-s00000-w0000.seg");
         std::fs::write(&foreign, "another run").unwrap();
         let err = clean_stale_artifacts(&dir, &plan).unwrap_err();
         assert!(err.to_string().contains("refusing to overwrite"), "{err}");
         assert!(foreign.exists(), "foreign segment must survive");
+        std::fs::remove_file(&foreign).unwrap();
+        let foreign_marker = dir.join("done-deadbeefdeadbeef-w0000.ok");
+        std::fs::write(&foreign_marker, "another run").unwrap();
+        let err = clean_stale_artifacts(&dir, &plan).unwrap_err();
+        assert!(err.to_string().contains("refusing to overwrite"), "{err}");
+        assert!(foreign_marker.exists(), "foreign marker must survive");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_temp_files_removes_only_temps() {
+        let dir = std::env::temp_dir().join("magquilt_dist_sweep_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("magquilt-tmp-9-aa-0-seg.part"), "dead").unwrap();
+        std::fs::write(dir.join("magquilt-tmp-9-aa-1-ovf.part"), "dead").unwrap();
+        std::fs::write(dir.join("seg-0000000000000000-s00000-w0000.seg"), "keep").unwrap();
+        assert_eq!(sweep_temp_files(&dir).unwrap(), 2);
+        let left: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(left, vec!["seg-0000000000000000-s00000-w0000.seg".to_string()]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

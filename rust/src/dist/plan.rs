@@ -102,6 +102,12 @@ pub struct ShardPlan {
     /// Merge worker threads for `merge-segments` (0 = auto; wall-clock
     /// only — the merged file is byte-identical for any count).
     pub merge_threads: usize,
+    /// Supervised restart budget per worker process (driver only;
+    /// robustness knob — restarts resume, so output bytes never move).
+    pub worker_retries: usize,
+    /// Base backoff in milliseconds between supervised restarts (doubles
+    /// per retry, capped; wall-clock only).
+    pub worker_backoff_ms: u64,
     /// Effective shard count S (already clamped to the merger cap and
     /// the node count, so every process agrees without re-clamping).
     pub num_shards: usize,
@@ -119,7 +125,8 @@ pub struct ShardPlan {
 /// requires every `ShardPlan` field to appear in exactly one of them —
 /// adding a field without deciding its hash fate fails
 /// `cargo run --bin maglint` (and the crate's self-lint test).
-pub const HASH_EXEMPT: &[&str] = &["workers", "setup_threads", "merge_threads"];
+pub const HASH_EXEMPT: &[&str] =
+    &["workers", "setup_threads", "merge_threads", "worker_retries", "worker_backoff_ms"];
 
 /// [`crate::config::RunSpec`] fields whose values flow into the plan's
 /// hashed (output-determining) fields via [`ShardPlan::new`].
@@ -138,6 +145,8 @@ pub const RUNSPEC_EXEMPT: &[&str] = &[
     "spill_dir",
     "spill_budget",
     "segment_dir",
+    "worker_retries",
+    "worker_backoff_ms",
     "trials",
 ];
 
@@ -153,11 +162,13 @@ fn hash_disposition_witness(plan: &ShardPlan, run: &RunSpec) {
         sampler: _,       // hashed
         piece_mode: _,    // hashed
         attr_mode: _,     // hashed
-        workers: _,       // HASH_EXEMPT
-        setup_threads: _, // HASH_EXEMPT
-        merge_threads: _, // HASH_EXEMPT
-        num_shards: _,    // hashed
-        ranges: _,        // hashed
+        workers: _,           // HASH_EXEMPT
+        setup_threads: _,     // HASH_EXEMPT
+        merge_threads: _,     // HASH_EXEMPT
+        worker_retries: _,    // HASH_EXEMPT
+        worker_backoff_ms: _, // HASH_EXEMPT
+        num_shards: _,        // hashed
+        ranges: _,            // hashed
     } = plan;
     let RunSpec {
         seed: _,          // RUNSPEC_HASHED
@@ -170,10 +181,12 @@ fn hash_disposition_witness(plan: &ShardPlan, run: &RunSpec) {
         output: _,        // RUNSPEC_EXEMPT
         spill_dir: _,     // RUNSPEC_EXEMPT
         spill_budget: _,  // RUNSPEC_EXEMPT
-        dist_workers: _,  // RUNSPEC_HASHED (shapes num_shards and ranges)
-        segment_dir: _,   // RUNSPEC_EXEMPT
-        merge_threads: _, // RUNSPEC_EXEMPT
-        trials: _,        // RUNSPEC_EXEMPT
+        dist_workers: _,      // RUNSPEC_HASHED (shapes num_shards and ranges)
+        segment_dir: _,       // RUNSPEC_EXEMPT
+        merge_threads: _,     // RUNSPEC_EXEMPT
+        worker_retries: _,    // RUNSPEC_EXEMPT
+        worker_backoff_ms: _, // RUNSPEC_EXEMPT
+        trials: _,            // RUNSPEC_EXEMPT
     } = run;
 }
 
@@ -234,6 +247,8 @@ impl ShardPlan {
             workers: run.workers,
             setup_threads: run.setup_threads,
             merge_threads: run.merge_threads,
+            worker_retries: run.worker_retries,
+            worker_backoff_ms: run.worker_backoff_ms,
             num_shards,
             ranges,
         })
@@ -323,7 +338,9 @@ impl ShardPlan {
              attr_mode = \"{attr}\"\n\
              workers = {workers}\n\
              setup_threads = {setup}\n\
-             merge_threads = {merge}\n",
+             merge_threads = {merge}\n\
+             worker_retries = {retries}\n\
+             worker_backoff_ms = {backoff}\n",
             hash = self.hash_hex(),
             shards = self.num_shards,
             starts = starts.join(", "),
@@ -342,6 +359,8 @@ impl ShardPlan {
             workers = self.workers,
             setup = self.setup_threads,
             merge = self.merge_threads,
+            retries = self.worker_retries,
+            backoff = self.worker_backoff_ms,
         )
     }
 
@@ -417,6 +436,24 @@ impl ShardPlan {
                 .ok_or_else(|| anyhow!("run.merge_threads must be a non-negative integer"))?
                 as usize,
         };
+        // Optional too (pre-supervision manifests lack them): hash-exempt
+        // robustness knobs, defaulting to the RunSpec defaults.
+        let worker_retries = match run_sec.get("worker_retries") {
+            None => 2,
+            Some(v) => v
+                .as_int()
+                .filter(|&x| x >= 0)
+                .ok_or_else(|| anyhow!("run.worker_retries must be a non-negative integer"))?
+                as usize,
+        };
+        let worker_backoff_ms = match run_sec.get("worker_backoff_ms") {
+            None => 500,
+            Some(v) => v
+                .as_int()
+                .filter(|&x| x >= 0)
+                .ok_or_else(|| anyhow!("run.worker_backoff_ms must be a non-negative integer"))?
+                as u64,
+        };
 
         let plan = ShardPlan {
             model,
@@ -427,6 +464,8 @@ impl ShardPlan {
             workers,
             setup_threads,
             merge_threads,
+            worker_retries,
+            worker_backoff_ms,
             num_shards,
             ranges,
         };
@@ -597,6 +636,8 @@ mod tests {
         run.workers = 7;
         run.setup_threads = 3;
         run.merge_threads = 5;
+        run.worker_retries = 9;
+        run.worker_backoff_ms = 10;
         let same = ShardPlan::new(&model(9), &run, 2).unwrap();
         assert_eq!(base.hash_hex(), same.hash_hex());
         // The seed does change the output.
@@ -632,16 +673,27 @@ mod tests {
         let text = plan.to_toml().replace("merge_threads = 0", "merge_threads = -2");
         let err = ShardPlan::parse(&text).unwrap_err();
         assert!(err.to_string().contains("non-negative"), "{err}");
+        let text = plan.to_toml().replace("worker_retries = 2", "worker_retries = -1");
+        assert!(ShardPlan::parse(&text).is_err());
+        let text = plan.to_toml().replace("worker_backoff_ms = 500", "worker_backoff_ms = -9");
+        assert!(ShardPlan::parse(&text).is_err());
     }
 
     #[test]
     fn manifests_without_merge_threads_still_parse() {
         // Plans written before the parallel merge omit the knob; it is
         // hash-exempt, so older manifests keep loading with auto threads.
+        // Same for the (newer) supervision knobs.
         let plan = ShardPlan::new(&model(8), &RunSpec::default_spec(), 2).unwrap();
-        let text = plan.to_toml().replace("merge_threads = 0\n", "");
+        let text = plan
+            .to_toml()
+            .replace("merge_threads = 0\n", "")
+            .replace("worker_retries = 2\n", "")
+            .replace("worker_backoff_ms = 500\n", "");
         let back = ShardPlan::parse(&text).unwrap();
         assert_eq!(back.merge_threads, 0);
+        assert_eq!(back.worker_retries, 2);
+        assert_eq!(back.worker_backoff_ms, 500);
         assert_eq!(back.hash_hex(), plan.hash_hex());
     }
 

@@ -1,0 +1,565 @@
+//! Driver-side supervision of shard-worker processes: bounded restarts
+//! with capped exponential backoff, heartbeat-based stall detection, and
+//! kill-everything semantics on the first unrecoverable failure.
+//!
+//! The original driver spawned `W` children and waited for them one by
+//! one — a single crashed worker failed the whole run (after every other
+//! worker finished its now-wasted work), and a *hung* worker blocked the
+//! driver forever. The supervisor fixes both: every worker gets
+//! `worker_retries` restarts (each restart resumes from the segments its
+//! predecessor landed — see the worker's resume rules), restarts are
+//! spaced by `worker_backoff_ms · 2^(attempt-1)` capped at
+//! [`MAX_BACKOFF_MS`], and a worker whose heartbeat file goes quiet for
+//! `stall_ms` is killed and counted as [`WorkerFailure::Stalled`]. When
+//! any worker exhausts its budget, the remaining children are killed
+//! *and reaped* immediately — no orphans, no indefinite waits.
+//!
+//! Both knobs are hash-exempt: they change when work happens, never
+//! which bytes a worker derives.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime};
+
+use anyhow::{bail, Context, Result};
+
+use super::plan::ShardPlan;
+use super::worker::heartbeat_file_name;
+
+/// Hard ceiling on one backoff delay, whatever the exponent says.
+pub const MAX_BACKOFF_MS: u64 = 30_000;
+
+/// Default heartbeat-silence deadline before a worker counts as stalled.
+pub const DEFAULT_STALL_MS: u64 = 60_000;
+
+/// How often the supervisor polls its children.
+const POLL_MS: u64 = 25;
+
+/// How often a supervised worker touches its heartbeat file.
+const BEAT_MS: u64 = 500;
+
+/// Why one worker attempt failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkerFailure {
+    /// The process could not be spawned at all.
+    Spawn(String),
+    /// The process exited with a non-zero code (or an unclassifiable
+    /// status, reported as code `-1`).
+    Exit(i32),
+    /// The process died on a signal (SIGKILL from the OOM killer, a
+    /// `kill -9`, …).
+    Signal(i32),
+    /// The heartbeat file went silent for this many milliseconds; the
+    /// supervisor killed the process.
+    Stalled(u64),
+}
+
+impl std::fmt::Display for WorkerFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkerFailure::Spawn(e) => write!(f, "spawn failed: {e}"),
+            WorkerFailure::Exit(code) => write!(f, "exit code {code}"),
+            WorkerFailure::Signal(sig) => write!(f, "killed by signal {sig}"),
+            WorkerFailure::Stalled(ms) => write!(f, "stalled (no heartbeat for {ms} ms)"),
+        }
+    }
+}
+
+/// Classify a reaped child's exit status.
+fn classify(status: std::process::ExitStatus) -> WorkerFailure {
+    if let Some(code) = status.code() {
+        return WorkerFailure::Exit(code);
+    }
+    #[cfg(unix)]
+    {
+        use std::os::unix::process::ExitStatusExt;
+        if let Some(sig) = status.signal() {
+            return WorkerFailure::Signal(sig);
+        }
+    }
+    WorkerFailure::Exit(-1)
+}
+
+/// One worker's supervision history.
+#[derive(Debug, Clone)]
+pub struct WorkerOutcome {
+    /// Worker index.
+    pub worker: usize,
+    /// Attempts launched (1 = succeeded first try).
+    pub attempts: usize,
+    /// The failure behind each non-final attempt (empty on a clean run).
+    pub failures: Vec<WorkerFailure>,
+}
+
+/// Knobs for [`supervise_workers`]. All wall-clock-only.
+#[derive(Debug, Clone)]
+pub struct SuperviseOptions {
+    /// Restarts allowed per worker after its first attempt.
+    pub retries: usize,
+    /// Base delay before a restart; doubles per consecutive failure,
+    /// capped at [`MAX_BACKOFF_MS`].
+    pub backoff_ms: u64,
+    /// Heartbeat-silence deadline before a worker counts as stalled
+    /// (0 disables stall detection).
+    pub stall_ms: u64,
+    /// Deterministic fault injection: pass the spec to this worker's
+    /// **first** attempt only (tests / CI). Retries run clean.
+    pub fault: Option<(usize, String)>,
+}
+
+impl SuperviseOptions {
+    /// The plan's supervision knobs with the default stall deadline.
+    pub fn from_plan(plan: &ShardPlan) -> Self {
+        SuperviseOptions {
+            retries: plan.worker_retries,
+            backoff_ms: plan.worker_backoff_ms,
+            stall_ms: DEFAULT_STALL_MS,
+            fault: None,
+        }
+    }
+}
+
+/// What the supervisor saw across the whole fleet.
+#[derive(Debug)]
+pub struct SuperviseReport {
+    /// Per-worker histories, in worker order.
+    pub outcomes: Vec<WorkerOutcome>,
+    /// Total restarts across workers (0 on a clean run).
+    pub restarts: usize,
+}
+
+/// The delay before restart number `attempt` (1-based count of failures
+/// so far): `backoff_ms · 2^(attempt-1)`, saturating, capped at
+/// [`MAX_BACKOFF_MS`].
+pub fn backoff_delay_ms(backoff_ms: u64, attempt: usize) -> u64 {
+    let shift = attempt.saturating_sub(1).min(16) as u32;
+    backoff_ms.saturating_mul(1u64 << shift).min(MAX_BACKOFF_MS)
+}
+
+/// Milliseconds since the worker last proved liveness: its heartbeat
+/// file's mtime, or the attempt start when no heartbeat exists yet.
+fn ms_since_alive(hb_path: &Path, started: SystemTime) -> u64 {
+    let last = std::fs::metadata(hb_path)
+        .and_then(|m| m.modified())
+        .unwrap_or(started)
+        .max(started); // a stale beat from a *previous* attempt is not liveness
+    SystemTime::now() // lint: time-ok(liveness deadline, never output-determining)
+        .duration_since(last)
+        .unwrap_or(Duration::ZERO)
+        .as_millis() as u64
+}
+
+/// One supervised child slot.
+enum Slot {
+    /// Child running; `started` anchors the stall clock.
+    Running { child: Child, started: SystemTime, attempt: usize },
+    /// Between attempts, waiting out the backoff.
+    Waiting { resume_at: Instant, attempt: usize },
+    /// Finished successfully.
+    Done,
+}
+
+/// Spawn and supervise `num_workers` children built by `make_command`
+/// (called with the worker index and, when armed for that attempt, the
+/// fault spec to inject). Returns when every worker has succeeded;
+/// fails — after killing and reaping every remaining child — as soon as
+/// any worker exhausts its retry budget.
+pub fn supervise_workers(
+    num_workers: usize,
+    segment_dir: &Path,
+    hash_hex: &str,
+    opts: &SuperviseOptions,
+    mut make_command: impl FnMut(usize, Option<&str>) -> Command,
+) -> Result<SuperviseReport> {
+    let mut outcomes: Vec<WorkerOutcome> = (0..num_workers)
+        .map(|worker| WorkerOutcome { worker, attempts: 0, failures: Vec::new() })
+        .collect();
+    let mut slots: Vec<Slot> = Vec::with_capacity(num_workers);
+
+    let mut launch = |w: usize, attempt: usize, outcome: &mut WorkerOutcome| -> Slot {
+        let fault = match &opts.fault {
+            Some((fw, spec)) if *fw == w && attempt == 1 => Some(spec.as_str()),
+            _ => None,
+        };
+        outcome.attempts = attempt;
+        match make_command(w, fault).spawn() {
+            Ok(child) => Slot::Running { child, started: SystemTime::now(), attempt }, // lint: time-ok(stall clock, never output-determining)
+            Err(e) => {
+                // A spawn failure consumes an attempt like any other
+                // failure; the backoff gives a transient cause (fd/pid
+                // exhaustion) room to clear.
+                outcome.failures.push(WorkerFailure::Spawn(e.to_string()));
+                Slot::Waiting {
+                    resume_at: Instant::now()
+                        + Duration::from_millis(backoff_delay_ms(opts.backoff_ms, attempt)),
+                    attempt,
+                }
+            }
+        }
+    };
+
+    for w in 0..num_workers {
+        let slot = launch(w, 1, &mut outcomes[w]);
+        slots.push(slot);
+    }
+
+    let kill_all = |slots: &mut [Slot]| {
+        for slot in slots.iter_mut() {
+            if let Slot::Running { child, .. } = slot {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            *slot = Slot::Done;
+        }
+    };
+
+    loop {
+        let mut all_done = true;
+        for w in 0..num_workers {
+            // Take the slot out so the arms below can both consume the
+            // child and write a successor state without aliasing.
+            let slot = std::mem::replace(&mut slots[w], Slot::Done);
+            let next = match slot {
+                Slot::Done => Slot::Done,
+                Slot::Waiting { resume_at, attempt } => {
+                    all_done = false;
+                    if Instant::now() < resume_at {
+                        Slot::Waiting { resume_at, attempt }
+                    } else {
+                        launch(w, attempt + 1, &mut outcomes[w])
+                    }
+                }
+                Slot::Running { mut child, started, attempt } => {
+                    all_done = false;
+                    let reaped = match child.try_wait() {
+                        Ok(r) => r,
+                        Err(e) => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            kill_all(&mut slots);
+                            return Err(e).with_context(|| format!("polling worker {w}"));
+                        }
+                    };
+                    let failure = match reaped {
+                        Some(status) if status.success() => {
+                            slots[w] = Slot::Done;
+                            continue;
+                        }
+                        Some(status) => classify(status),
+                        None => {
+                            let stalled_for = if opts.stall_ms == 0 {
+                                None
+                            } else {
+                                let hb = segment_dir.join(heartbeat_file_name(hash_hex, w));
+                                let silent = ms_since_alive(&hb, started);
+                                (silent >= opts.stall_ms).then_some(silent)
+                            };
+                            match stalled_for {
+                                None => {
+                                    slots[w] = Slot::Running { child, started, attempt };
+                                    continue;
+                                }
+                                Some(silent) => {
+                                    let _ = child.kill();
+                                    let _ = child.wait();
+                                    WorkerFailure::Stalled(silent)
+                                }
+                            }
+                        }
+                    };
+                    outcomes[w].failures.push(failure);
+                    if attempt > opts.retries {
+                        let history = outcomes[w]
+                            .failures
+                            .iter()
+                            .map(|f| f.to_string())
+                            .collect::<Vec<_>>()
+                            .join("; ");
+                        kill_all(&mut slots);
+                        bail!(
+                            "worker {w} failed {attempt} attempt(s), retry budget of {} \
+                             exhausted ({history}); segments left in {} for inspection",
+                            opts.retries,
+                            segment_dir.display()
+                        );
+                    }
+                    Slot::Waiting {
+                        resume_at: Instant::now()
+                            + Duration::from_millis(backoff_delay_ms(opts.backoff_ms, attempt)),
+                        attempt,
+                    }
+                }
+            };
+            slots[w] = next;
+        }
+        // A spawn failure lands in Waiting without ever running; it can
+        // exhaust the budget too, and must fail rather than retry
+        // forever against a permanently unspawnable binary.
+        for w in 0..num_workers {
+            if let Slot::Waiting { attempt, .. } = &slots[w] {
+                if *attempt > opts.retries {
+                    let attempt = *attempt;
+                    let history = outcomes[w]
+                        .failures
+                        .iter()
+                        .map(|f| f.to_string())
+                        .collect::<Vec<_>>()
+                        .join("; ");
+                    kill_all(&mut slots);
+                    bail!(
+                        "worker {w} failed {attempt} attempt(s), retry budget of {} exhausted \
+                         ({history}); segments left in {} for inspection",
+                        opts.retries,
+                        segment_dir.display()
+                    );
+                }
+            }
+        }
+        if all_done {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(POLL_MS));
+    }
+
+    let restarts = outcomes.iter().map(|o| o.attempts.saturating_sub(1)).sum();
+    Ok(SuperviseReport { outcomes, restarts })
+}
+
+/// Liveness beacon for a supervised worker process: a background thread
+/// touches the worker's heartbeat file every [`BEAT_MS`] until the guard
+/// drops (then the thread is stopped, joined, and the file removed).
+/// Only the file's mtime carries information.
+#[derive(Debug)]
+pub struct Heartbeat {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    path: PathBuf,
+}
+
+impl Heartbeat {
+    /// Start beating for `worker` under `hash_hex` in `dir` (created if
+    /// missing). Never fails: a heartbeat that cannot write simply goes
+    /// silent, and the supervisor's stall deadline handles the rest.
+    pub fn start(dir: &Path, hash_hex: &str, worker: usize) -> Heartbeat {
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(heartbeat_file_name(hash_hex, worker));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (stop2, path2) = (Arc::clone(&stop), path.clone());
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                let _ = std::fs::write(&path2, b"");
+                let mut slept = 0;
+                while slept < BEAT_MS && !stop2.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(25));
+                    slept += 25;
+                }
+            }
+        });
+        Heartbeat { stop, handle: Some(handle), path }
+    }
+}
+
+impl Drop for Heartbeat {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sh(script: &str) -> Command {
+        let mut cmd = Command::new("sh");
+        cmd.arg("-c").arg(script).stdin(std::process::Stdio::null());
+        cmd
+    }
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("magquilt_supervise_test").join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn opts(retries: usize) -> SuperviseOptions {
+        SuperviseOptions { retries, backoff_ms: 1, stall_ms: 0, fault: None }
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(backoff_delay_ms(500, 1), 500);
+        assert_eq!(backoff_delay_ms(500, 2), 1000);
+        assert_eq!(backoff_delay_ms(500, 3), 2000);
+        assert_eq!(backoff_delay_ms(500, 12), MAX_BACKOFF_MS);
+        assert_eq!(backoff_delay_ms(0, 5), 0);
+        assert_eq!(backoff_delay_ms(u64::MAX, 64), MAX_BACKOFF_MS, "saturates, no overflow");
+    }
+
+    #[test]
+    fn clean_fleet_reports_no_restarts() {
+        let dir = fresh_dir("clean");
+        let report =
+            supervise_workers(3, &dir, "00ff00ff00ff00ff", &opts(2), |_, _| sh("exit 0"))
+                .unwrap();
+        assert_eq!(report.restarts, 0);
+        assert_eq!(report.outcomes.len(), 3);
+        for o in &report.outcomes {
+            assert_eq!(o.attempts, 1);
+            assert!(o.failures.is_empty());
+        }
+    }
+
+    #[test]
+    fn flaky_worker_is_retried_until_it_succeeds() {
+        let dir = fresh_dir("flaky");
+        // Worker 1 fails until a state file exists, created on its first
+        // failing attempt — so attempt 1 fails, attempt 2 succeeds.
+        let state = dir.join("state");
+        let state_str = state.to_string_lossy().into_owned();
+        let report = supervise_workers(2, &dir, "00ff00ff00ff00ff", &opts(2), |w, _| {
+            if w == 1 {
+                sh(&format!("if [ -e {state_str} ]; then exit 0; else touch {state_str}; exit 3; fi"))
+            } else {
+                sh("exit 0")
+            }
+        })
+        .unwrap();
+        assert_eq!(report.restarts, 1);
+        assert_eq!(report.outcomes[1].attempts, 2);
+        assert_eq!(report.outcomes[1].failures, vec![WorkerFailure::Exit(3)]);
+        assert_eq!(report.outcomes[0].attempts, 1);
+    }
+
+    #[test]
+    fn exhausted_budget_fails_and_reports_history() {
+        let dir = fresh_dir("exhausted");
+        let err = supervise_workers(1, &dir, "00ff00ff00ff00ff", &opts(1), |_, _| sh("exit 7"))
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("retry budget of 1 exhausted"), "{msg}");
+        assert!(msg.contains("exit code 7"), "{msg}");
+    }
+
+    #[test]
+    fn unrecoverable_failure_kills_the_rest_of_the_fleet() {
+        let dir = fresh_dir("killrest");
+        let long_file = dir.join("long-running");
+        let long_str = long_file.to_string_lossy().into_owned();
+        // Worker 0 fails instantly with no retries; worker 1 would run
+        // for 60s and leave a file when *finishing cleanly*. The
+        // supervisor must return quickly (killing worker 1), so the file
+        // never appears.
+        let start = Instant::now();
+        let err = supervise_workers(2, &dir, "00ff00ff00ff00ff", &opts(0), |w, _| {
+            if w == 0 {
+                sh("exit 9")
+            } else {
+                sh(&format!("sleep 60; touch {long_str}"))
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("worker 0"), "{err}");
+        assert!(start.elapsed() < Duration::from_secs(30), "did not wait for the sleeper");
+        assert!(!long_file.exists(), "sleeper was killed, not awaited");
+    }
+
+    #[test]
+    fn signal_death_is_classified_as_signal() {
+        let dir = fresh_dir("signal");
+        let err = supervise_workers(
+            1,
+            &dir,
+            "00ff00ff00ff00ff",
+            &opts(0),
+            // The shell kills itself with SIGKILL (9).
+            |_, _| sh("kill -9 $$"),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("killed by signal 9"), "{err}");
+    }
+
+    #[test]
+    fn stalled_worker_is_killed_and_classified() {
+        let dir = fresh_dir("stall");
+        let opts = SuperviseOptions { retries: 0, backoff_ms: 1, stall_ms: 200, fault: None };
+        // The worker sleeps far past the stall deadline and never beats.
+        let start = Instant::now();
+        let err = supervise_workers(1, &dir, "00ff00ff00ff00ff", &opts, |_, _| sh("sleep 60"))
+            .unwrap_err();
+        assert!(err.to_string().contains("stalled"), "{err}");
+        assert!(start.elapsed() < Duration::from_secs(30), "stall deadline enforced");
+    }
+
+    #[test]
+    fn heartbeat_keeps_a_slow_worker_alive() {
+        let dir = fresh_dir("beat");
+        let hash = "00ff00ff00ff00ff";
+        let opts = SuperviseOptions { retries: 0, backoff_ms: 1, stall_ms: 1500, fault: None };
+        // The worker runs well past the stall deadline but beats its
+        // heartbeat file the whole time (mirroring what the CLI worker's
+        // Heartbeat guard does), so it must NOT be classified as stalled.
+        let hb = dir.join(heartbeat_file_name(hash, 0));
+        let hb_str = hb.to_string_lossy().into_owned();
+        let report = supervise_workers(1, &dir, hash, &opts, |_, _| {
+            sh(&format!(
+                "i=0; while [ $i -lt 25 ]; do touch {hb_str}; sleep 0.1; i=$((i+1)); done"
+            ))
+        })
+        .unwrap();
+        assert_eq!(report.restarts, 0);
+    }
+
+    #[test]
+    fn fault_spec_reaches_only_the_first_attempt_of_the_target() {
+        let dir = fresh_dir("fault");
+        let opts = SuperviseOptions {
+            retries: 1,
+            backoff_ms: 1,
+            stall_ms: 0,
+            fault: Some((1, "crash-after-segments=0".to_string())),
+        };
+        let mut seen: Vec<(usize, Option<String>)> = Vec::new();
+        let report = supervise_workers(2, &dir, "00ff00ff00ff00ff", &opts, |w, fault| {
+            seen.push((w, fault.map(str::to_string)));
+            // The faulted attempt "crashes" (exit 5); everything else
+            // succeeds.
+            if fault.is_some() {
+                sh("exit 5")
+            } else {
+                sh("exit 0")
+            }
+        })
+        .unwrap();
+        assert_eq!(report.restarts, 1);
+        assert_eq!(report.outcomes[1].failures, vec![WorkerFailure::Exit(5)]);
+        let w1: Vec<_> = seen.iter().filter(|(w, _)| *w == 1).collect();
+        assert_eq!(w1.len(), 2);
+        assert_eq!(w1[0].1.as_deref(), Some("crash-after-segments=0"));
+        assert_eq!(w1[1].1, None, "retry runs clean");
+        assert!(seen.iter().filter(|(w, _)| *w == 0).all(|(_, f)| f.is_none()));
+    }
+
+    #[test]
+    fn heartbeat_guard_beats_and_cleans_up() {
+        let dir = fresh_dir("guard");
+        let hash = "00ff00ff00ff00ff";
+        let path = dir.join(heartbeat_file_name(hash, 4));
+        {
+            let _guard = Heartbeat::start(&dir, hash, 4);
+            // The first beat is written synchronously-ish; give it a beat.
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while !path.exists() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            assert!(path.exists(), "guard touches the heartbeat file");
+        }
+        assert!(!path.exists(), "guard removes the file on drop");
+    }
+}

@@ -27,27 +27,52 @@
 //!
 //! * one `seg-<hash>-s<shard>-w<worker>.seg` per **owned** shard (even
 //!   when empty — emptiness is information; a *missing* owner segment
-//!   means an incomplete run and fails the merge), and
+//!   means an incomplete run and fails the merge),
 //! * one `ovf-<hash>-s<shard>-w<worker>.ovf` per **foreign** shard this
-//!   worker sampled any edges for.
+//!   worker sampled any edges for, and
+//! * one `done-<hash>-w<worker>.ok` **completion marker** once every
+//!   segment is durably in place, recording the [`SegmentSummary`].
 //!
-//! Both are complete `MAGQEDG1` files (header + sorted deduplicated
+//! Segments are complete `MAGQEDG1` files (header + sorted deduplicated
 //! records), written to a pid+nonce temp name and atomically renamed, so
 //! a crashed worker can never leave a half-written file under a final
 //! name — and any number of workers can share the directory.
+//!
+//! # Crash-resume
+//!
+//! With [`WorkerOptions::resume`], the worker first scans the directory
+//! for its own prior output. A trusted completion marker (plan hash,
+//! worker index, and per-segment counts all agree with the files on
+//! disk) means the previous run finished: nothing re-runs. Otherwise the
+//! worker skips work at the granularity of **connected components** of
+//! the job↔shard graph (each retained job links every shard in its
+//! source span): a component is skipped only when *every* shard in it is
+//! owned by this worker and already has a valid final segment. That rule
+//! is what makes resumption exact — a surviving owned segment cannot
+//! prove that the job which produced it also finished its *overflow*
+//! writes into foreign shards, so any job whose span touches a foreign
+//! (or missing) shard re-runs in full. Re-runs are idempotent: the same
+//! plan re-derives byte-identical runs, and [`SegmentSink`] treats a
+//! rewrite that matches the existing file as success (and a mismatch as
+//! hard corruption). The net effect, proven by the kill-and-resume tests:
+//! for every crash point, crash + resume yields a segment directory
+//! byte-identical to a crash-free run. See `docs/fault-tolerance.md`.
 
-use std::io;
+use std::collections::BTreeMap;
+use std::io::{self, Read};
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::SamplerKind;
-use crate::coordinator::{Coordinator, RunStats};
-use crate::graph::{unique_temp_path, BinaryEdgeWriter, Edge, EdgeSink, ShardDisposition};
+use crate::coordinator::{Coordinator, RunStats, SetupStats};
+use crate::graph::{read_binary_header, unique_temp_path, write_atomic, BinaryEdgeWriter, Edge,
+                   EdgeSink, ShardDisposition, SpillSummary};
 use crate::kpgm::Initiator;
 use crate::magm::{AttributeAssignment, MagmParams};
 use crate::rng::Rng;
 
+use super::fault::FaultPlan;
 use super::plan::ShardPlan;
 
 /// File name of the owner segment for `shard` written by `worker`.
@@ -59,6 +84,17 @@ pub fn segment_file_name(hash_hex: &str, shard: usize, worker: usize) -> String 
 /// `worker`.
 pub fn overflow_file_name(hash_hex: &str, shard: usize, worker: usize) -> String {
     format!("ovf-{hash_hex}-s{shard:05}-w{worker:04}.ovf")
+}
+
+/// File name of `worker`'s completion marker.
+pub fn marker_file_name(hash_hex: &str, worker: usize) -> String {
+    format!("done-{hash_hex}-w{worker:04}.ok")
+}
+
+/// File name of `worker`'s liveness heartbeat (touched periodically by a
+/// supervised worker; only its mtime carries information).
+pub fn heartbeat_file_name(hash_hex: &str, worker: usize) -> String {
+    format!("hb-{hash_hex}-w{worker:04}.beat")
 }
 
 /// What kind of segment a file in the segment directory holds.
@@ -106,10 +142,48 @@ pub fn parse_segment_file_name(name: &str) -> Option<SegmentFileInfo> {
     Some(SegmentFileInfo { kind, hash_hex: hash.to_string(), shard, worker })
 }
 
+/// What kind of metadata file (non-segment run state) a name denotes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetaFileKind {
+    /// A `done-…​.ok` completion marker.
+    Marker,
+    /// A `hb-…​.beat` liveness heartbeat.
+    Heartbeat,
+}
+
+/// Parsed identity of a marker/heartbeat file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MetaFileInfo {
+    /// Marker or heartbeat.
+    pub kind: MetaFileKind,
+    /// The plan hash embedded in the name.
+    pub hash_hex: String,
+    /// The worker the file belongs to.
+    pub worker: usize,
+}
+
+/// Parse a file name produced by [`marker_file_name`] /
+/// [`heartbeat_file_name`]. Returns `None` for anything else.
+pub fn parse_meta_file_name(name: &str) -> Option<MetaFileInfo> {
+    let (kind, rest) = if let Some(r) = name.strip_prefix("done-") {
+        (MetaFileKind::Marker, r.strip_suffix(".ok")?)
+    } else if let Some(r) = name.strip_prefix("hb-") {
+        (MetaFileKind::Heartbeat, r.strip_suffix(".beat")?)
+    } else {
+        return None;
+    };
+    let (hash, worker) = rest.split_once('-')?;
+    if hash.len() != 16 || !hash.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    let worker = worker.strip_prefix('w')?.parse().ok()?;
+    Some(MetaFileInfo { kind, hash_hex: hash.to_string(), worker })
+}
+
 /// What one worker produced: the counters the driver and tests assert on.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SegmentSummary {
-    /// Owned shards written as segment files (== the owned range width).
+    /// Owned shards present as segment files (== the owned range width).
     pub owned_segments: usize,
     /// Edges across the owned segments.
     pub owned_edges: u64,
@@ -117,6 +191,77 @@ pub struct SegmentSummary {
     pub overflow_files: usize,
     /// Edges across the overflow files.
     pub overflow_edges: u64,
+}
+
+/// Format tag on the first line of a completion marker.
+pub const MARKER_FORMAT: &str = "magquilt-marker-v1";
+
+/// Atomically write `worker`'s completion marker recording `summary`.
+/// This is the **last** thing a worker does: its existence asserts that
+/// every segment and overflow file is durably under its final name.
+pub fn write_marker(
+    dir: &Path,
+    hash_hex: &str,
+    worker: usize,
+    summary: &SegmentSummary,
+) -> io::Result<()> {
+    let body = format!(
+        "format = {MARKER_FORMAT}\n\
+         plan = {hash_hex}\n\
+         worker = {worker}\n\
+         owned_segments = {}\n\
+         owned_edges = {}\n\
+         overflow_files = {}\n\
+         overflow_edges = {}\n",
+        summary.owned_segments, summary.owned_edges, summary.overflow_files,
+        summary.overflow_edges,
+    );
+    write_atomic(dir, &marker_file_name(hash_hex, worker), body.as_bytes())
+}
+
+/// Parse a completion marker's contents into `(plan hash, worker,
+/// summary)`. Returns `None` for anything malformed — a marker that does
+/// not parse is stale and is simply re-earned by re-running.
+pub fn parse_marker(text: &str) -> Option<(String, usize, SegmentSummary)> {
+    let mut map: BTreeMap<&str, &str> = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once('=')?;
+        map.insert(k.trim(), v.trim());
+    }
+    if *map.get("format")? != MARKER_FORMAT {
+        return None;
+    }
+    let summary = SegmentSummary {
+        owned_segments: map.get("owned_segments")?.parse().ok()?,
+        owned_edges: map.get("owned_edges")?.parse().ok()?,
+        overflow_files: map.get("overflow_files")?.parse().ok()?,
+        overflow_edges: map.get("overflow_edges")?.parse().ok()?,
+    };
+    let worker = map.get("worker")?.parse().ok()?;
+    Some((map.get("plan")?.to_string(), worker, summary))
+}
+
+/// Byte-compare two files (length first, then 64 KiB chunks).
+fn files_identical(a: &Path, b: &Path) -> io::Result<bool> {
+    let (mut fa, mut fb) = (std::fs::File::open(a)?, std::fs::File::open(b)?);
+    if fa.metadata()?.len() != fb.metadata()?.len() {
+        return Ok(false);
+    }
+    let (mut ba, mut bb) = (vec![0u8; 64 * 1024], vec![0u8; 64 * 1024]);
+    loop {
+        let na = fa.read(&mut ba)?;
+        if na == 0 {
+            return Ok(true);
+        }
+        fb.read_exact(&mut bb[..na])?;
+        if ba[..na] != bb[..na] {
+            return Ok(false);
+        }
+    }
 }
 
 /// [`crate::graph::EdgeSink`] that lands every finished shard in its own
@@ -133,6 +278,16 @@ pub struct SegmentSink {
     owned: (usize, usize),
     num_nodes: usize,
     expected_shards: usize,
+    /// Resume: owned shards whose valid segment already exists (shard →
+    /// pre-scanned header edge count). Their deliveries must be empty
+    /// (every job that could route edges there was skipped) and are
+    /// counted into the summary without touching the file.
+    satisfied: BTreeMap<usize, u64>,
+    /// Owned segments freshly written *by this process* — the counter
+    /// the `crash-after-segments=K` fault gates on (satisfied shards
+    /// don't advance it: they represent a previous process's writes).
+    owned_written: usize,
+    fault: Option<FaultPlan>,
     summary: SegmentSummary,
 }
 
@@ -154,18 +309,61 @@ impl SegmentSink {
             owned,
             num_nodes: 0,
             expected_shards,
+            satisfied: BTreeMap::new(),
+            owned_written: 0,
+            fault: None,
             summary: SegmentSummary::default(),
         }
     }
 
+    /// Declare owned shards whose valid final segments already exist
+    /// (from a resume scan); they are counted, not rewritten.
+    pub fn with_resume(mut self, satisfied: BTreeMap<usize, u64>) -> Self {
+        self.satisfied = satisfied;
+        self
+    }
+
+    /// Arm deterministic fault injection (tests / CI only).
+    pub fn with_fault(mut self, fault: Option<FaultPlan>) -> Self {
+        self.fault = fault;
+        self
+    }
+
     /// Write `run` as a complete `MAGQEDG1` file at `dir/name`, via a
-    /// pid+nonce temp name and an atomic rename.
-    fn write_segment(&self, name: &str, run: &[Edge]) -> io::Result<()> {
+    /// pid+nonce temp name and an atomic rename. If the final name
+    /// already exists (a resumed run re-deriving a file a previous
+    /// attempt completed), a byte-identical rewrite is success and a
+    /// mismatch is a hard error — same plan hash + different bytes can
+    /// only mean corruption.
+    fn write_segment(&self, shard: usize, name: &str, run: &[Edge]) -> io::Result<()> {
         let tmp = unique_temp_path(&self.dir, "seg", "part");
         let mut w = BinaryEdgeWriter::create(&tmp, self.num_nodes)?;
+        if let Some(f) = &self.fault {
+            // Fires between temp creation and the body write, leaving the
+            // truncated temp behind — exactly a mid-write crash's residue.
+            f.before_shard_body(shard)?;
+        }
         w.write_edges(run)?;
         w.finalize(run.len() as u64)?;
-        let result = std::fs::rename(&tmp, self.dir.join(name));
+        if let Some(f) = &self.fault {
+            // Fires with the temp complete but un-renamed — the window a
+            // crash leaves a finished file under a temp name.
+            f.before_rename()?;
+        }
+        let final_path = self.dir.join(name);
+        if final_path.exists() {
+            let same = files_identical(&tmp, &final_path)?;
+            let _ = std::fs::remove_file(&tmp);
+            if same {
+                return Ok(());
+            }
+            return Err(io::Error::other(format!(
+                "segment {name} already exists with different contents — the same plan can \
+                 only re-derive identical bytes, so the file is corrupt; run \
+                 `magquilt doctor --fix` on the directory"
+            )));
+        }
+        let result = std::fs::rename(&tmp, final_path);
         if result.is_err() {
             let _ = std::fs::remove_file(&tmp);
         }
@@ -192,15 +390,39 @@ impl EdgeSink for SegmentSink {
         if index >= self.expected_shards {
             return Err(io::Error::other(format!("shard index {index} out of range")));
         }
+        if let Some(&edges) = self.satisfied.get(&index) {
+            // Every job that could route edges to a satisfied shard was
+            // skipped, so its delivery must be empty; anything else means
+            // the component bookkeeping is broken and the on-disk file
+            // can no longer be trusted to equal a fresh run's.
+            if !run.is_empty() {
+                return Err(io::Error::other(format!(
+                    "resume error: shard {index} was marked satisfied but received {} fresh \
+                     edges",
+                    run.len()
+                )));
+            }
+            self.summary.owned_segments += 1;
+            self.summary.owned_edges += edges;
+            return Ok(ShardDisposition::Streamed);
+        }
         if (self.owned.0..self.owned.1).contains(&index) {
-            self.write_segment(&segment_file_name(&self.hash_hex, index, self.worker), &run)?;
+            if let Some(f) = &self.fault {
+                f.before_owned_segment(self.owned_written)?;
+            }
+            self.write_segment(index, &segment_file_name(&self.hash_hex, index, self.worker), &run)?;
+            self.owned_written += 1;
             self.summary.owned_segments += 1;
             self.summary.owned_edges += run.len() as u64;
         } else if !run.is_empty() {
             // A foreign shard only gets a file when a wide-span owned job
             // actually sampled edges there; an empty foreign delivery is
             // the common case and writes nothing.
-            self.write_segment(&overflow_file_name(&self.hash_hex, index, self.worker), &run)?;
+            self.write_segment(
+                index,
+                &overflow_file_name(&self.hash_hex, index, self.worker),
+                &run,
+            )?;
             self.summary.overflow_files += 1;
             self.summary.overflow_edges += run.len() as u64;
         }
@@ -219,6 +441,188 @@ impl EdgeSink for SegmentSink {
     }
 }
 
+/// What a pre-run scan of the segment directory found for one worker.
+#[derive(Debug, Default)]
+pub struct ResumeState {
+    /// Owned shards whose final segment exists and header-validates:
+    /// shard index → edge count claimed by the validated header.
+    pub valid_segments: BTreeMap<usize, u64>,
+    /// The completion marker's summary, when present and consistent with
+    /// the plan, the worker, and the segments actually on disk.
+    pub marker: Option<SegmentSummary>,
+}
+
+/// Scan `dir` for worker `worker`'s prior output under `plan`. Foreign
+/// plan hashes and unrecognized files fail the scan (resuming into a
+/// mixed directory silently corrupts the merge); an invalid *final*
+/// segment of this worker fails too, pointing at `magquilt doctor` —
+/// final names are only ever produced by atomic renames of complete
+/// files, so an invalid one means external corruption, not a crash.
+/// A stale marker (wrong counts for the files on disk) is deleted and
+/// re-earned. Other workers' files and leftover temp files are ignored.
+pub fn scan_resume_state(dir: &Path, plan: &ShardPlan, worker: usize) -> Result<ResumeState> {
+    let mut state = ResumeState::default();
+    if !dir.exists() {
+        return Ok(state);
+    }
+    let hash = plan.hash_hex();
+    let owned = plan.worker_range(worker)?;
+    let mut marker_path = None;
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("resume scan of {}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name == super::PLAN_FILE || name.starts_with("magquilt-tmp-") {
+            // A dead attempt's temps are harmless here (unique names, and
+            // never inputs); the driver / doctor sweeps them before merge.
+            continue;
+        }
+        if name == super::doctor::QUARANTINE_DIR && entry.path().is_dir() {
+            continue;
+        }
+        if let Some(meta) = parse_meta_file_name(&name) {
+            if meta.hash_hex != hash {
+                bail!(
+                    "segment dir {} holds {name} from a different plan ({}) — refusing to \
+                     resume into a mixed directory",
+                    dir.display(),
+                    meta.hash_hex
+                );
+            }
+            if meta.kind == MetaFileKind::Marker && meta.worker == worker {
+                marker_path = Some(entry.path());
+            }
+            continue;
+        }
+        let Some(info) = parse_segment_file_name(&name) else {
+            bail!(
+                "unrecognized file {name} in segment directory {} — run `magquilt doctor` to \
+                 classify it",
+                dir.display()
+            );
+        };
+        if info.hash_hex != hash {
+            bail!(
+                "segment {name} was produced under plan {} but this plan hashes to {hash} — \
+                 refusing to resume into a mixed directory",
+                info.hash_hex
+            );
+        }
+        if info.worker != worker {
+            continue; // other workers' files are their own resume state
+        }
+        match info.kind {
+            SegmentKind::Owned => {
+                if !(owned.0..owned.1).contains(&info.shard) {
+                    bail!(
+                        "segment {name} says worker {worker} owns shard {} but its range is \
+                         {}..{} — run `magquilt doctor`",
+                        info.shard,
+                        owned.0,
+                        owned.1
+                    );
+                }
+                let header = read_binary_header(&entry.path()).with_context(|| {
+                    format!(
+                        "resume scan: final segment {name} does not validate — run \
+                         `magquilt doctor --fix` to quarantine it"
+                    )
+                })?;
+                if header.num_nodes != plan.model.num_nodes() as u64 {
+                    bail!(
+                        "segment {name} claims {} nodes but the plan's model has {} — run \
+                         `magquilt doctor`",
+                        header.num_nodes,
+                        plan.model.num_nodes()
+                    );
+                }
+                state.valid_segments.insert(info.shard, header.num_edges);
+            }
+            SegmentKind::Overflow => {
+                // Presence of an overflow file cannot prove the producing
+                // job's *other* writes landed, so it earns no skip: the
+                // component rule re-runs its job, and the idempotent
+                // rewrite in `write_segment` absorbs the existing file.
+            }
+        }
+    }
+    if let Some(path) = marker_path {
+        let owned_width = owned.1 - owned.0;
+        let trusted = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| parse_marker(&text))
+            .filter(|(h, w, s)| {
+                *h == hash
+                    && *w == worker
+                    && s.owned_segments == owned_width
+                    && state.valid_segments.len() == owned_width
+                    && s.owned_edges == state.valid_segments.values().sum::<u64>()
+            });
+        match trusted {
+            Some((_, _, summary)) => state.marker = Some(summary),
+            None => {
+                // Stale marker (e.g. from a plan whose hash-exempt knobs
+                // changed the worker count): delete it and re-earn it.
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("removing stale marker {}", path.display()))?;
+            }
+        }
+    }
+    Ok(state)
+}
+
+/// Partition the retained jobs and this worker's shards into skippable
+/// work: over the connected components of the job↔shard graph (each job
+/// links every shard in its inclusive source span `lo..=hi`), a
+/// component is satisfied iff **every** shard in it lies in `owned` and
+/// appears in `valid`. Returns per-job skip flags (aligned with `spans`)
+/// and the satisfied shards with their validated edge counts.
+fn satisfied_components(
+    num_shards: usize,
+    owned: (usize, usize),
+    spans: &[Option<(usize, usize)>],
+    valid: &BTreeMap<usize, u64>,
+) -> (Vec<bool>, BTreeMap<usize, u64>) {
+    fn find(parent: &mut [usize], mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]];
+            x = parent[x];
+        }
+        x
+    }
+    let mut parent: Vec<usize> = (0..num_shards).collect();
+    for &(lo, hi) in spans.iter().flatten() {
+        for k in lo..hi.min(num_shards - 1) {
+            let a = find(&mut parent, k);
+            let b = find(&mut parent, k + 1);
+            parent[a] = b;
+        }
+    }
+    let mut component_ok = vec![true; num_shards];
+    for shard in 0..num_shards {
+        if !(owned.0..owned.1).contains(&shard) || !valid.contains_key(&shard) {
+            let root = find(&mut parent, shard);
+            component_ok[root] = false;
+        }
+    }
+    let skip = spans
+        .iter()
+        .map(|span| match span {
+            // A span-less job emits nothing; re-running it is free and
+            // avoids trusting anything.
+            None => false,
+            Some((lo, _)) => component_ok[find(&mut parent, *lo)],
+        })
+        .collect();
+    let satisfied = (owned.0..owned.1)
+        .filter(|&shard| component_ok[find(&mut parent, shard)])
+        .filter_map(|shard| valid.get(&shard).map(|&e| (shard, e)))
+        .collect();
+    (skip, satisfied)
+}
+
 /// What [`run_worker`] reports back to the driver / CLI.
 #[derive(Debug)]
 pub struct WorkerReport {
@@ -226,11 +630,15 @@ pub struct WorkerReport {
     pub worker: usize,
     /// Owned shard range `[start, end)`.
     pub owned: (usize, usize),
-    /// Jobs in the full plan (identical on every worker).
+    /// Jobs in the full plan (identical on every worker; 0 when the
+    /// marker fast path skipped the setup pipeline entirely).
     pub jobs_total: usize,
-    /// Jobs this worker owned and executed.
+    /// Jobs this worker owned and actually executed this process.
     pub jobs_run: usize,
-    /// Files + edge counters of what was written.
+    /// Owned shards satisfied by a previous attempt's segments and
+    /// skipped (0 on a fresh run).
+    pub resumed_shards: usize,
+    /// Files + edge counters of what is on disk for this worker.
     pub summary: SegmentSummary,
     /// The underlying coordinated-run statistics.
     pub stats: RunStats,
@@ -301,25 +709,88 @@ pub fn plan_coordinator(plan: &ShardPlan) -> Coordinator {
         .piece_mode(plan.piece_mode)
 }
 
+/// Knobs for [`run_worker_with`].
+#[derive(Debug, Clone, Default)]
+pub struct WorkerOptions {
+    /// Scan the segment directory first and skip work whose output a
+    /// previous attempt already landed (see the module docs' resume
+    /// rules). Off by default: a plain `run_worker` never reads the
+    /// directory.
+    pub resume: bool,
+    /// Deterministic fault injection (tests / CI only).
+    pub fault: Option<FaultPlan>,
+}
+
 /// Execute worker `worker`'s slice of `plan`, writing segment and
 /// overflow files into `segment_dir`. The whole deterministic prologue
 /// runs here (identically on every host); only the owned jobs sample.
 pub fn run_worker(plan: &ShardPlan, worker: usize, segment_dir: &Path) -> Result<WorkerReport> {
+    run_worker_with(plan, worker, segment_dir, &WorkerOptions::default())
+}
+
+/// [`run_worker`] with resume / fault-injection knobs.
+pub fn run_worker_with(
+    plan: &ShardPlan,
+    worker: usize,
+    segment_dir: &Path,
+    opts: &WorkerOptions,
+) -> Result<WorkerReport> {
     plan.validate()?;
     let owned = plan.worker_range(worker)?;
+    let resume =
+        if opts.resume { scan_resume_state(segment_dir, plan, worker)? } else { ResumeState::default() };
+
+    // Fast path: a trusted completion marker means the previous attempt
+    // finished every write — skip even the setup pipeline.
+    if let Some(summary) = resume.marker {
+        let stats = RunStats {
+            partition_size: 0,
+            num_jobs: 0,
+            workers: 0,
+            num_shards: plan.num_shards,
+            num_edges: summary.owned_edges + summary.overflow_edges,
+            wall_ms: 0.0,
+            edges_per_sec: 0.0,
+            dropped_resamples: 0,
+            shard_stats: Vec::new(),
+            spill: SpillSummary::default(),
+            setup: SetupStats::default(),
+        };
+        return Ok(WorkerReport {
+            worker,
+            owned,
+            jobs_total: 0,
+            jobs_run: 0,
+            resumed_shards: owned.1 - owned.0,
+            summary,
+            stats,
+        });
+    }
+
     let coord = plan_coordinator(plan);
     let (mut job_plan, _attrs) = build_job_plan(plan, &coord);
     let owners = job_owners(plan, &job_plan);
     let jobs_total = job_plan.len();
     job_plan.retain_jobs(|i| owners[i] == worker);
+    // Resume: spans must be recomputed on the *retained* plan — the
+    // retain above shifted job indices.
+    let mut satisfied = BTreeMap::new();
+    if !resume.valid_segments.is_empty() {
+        let spans = job_plan.job_source_spans(&plan.shard_spec());
+        let (skip, sat) = satisfied_components(
+            plan.num_shards,
+            owned,
+            &spans,
+            &resume.valid_segments,
+        );
+        job_plan.retain_jobs(|i| !skip[i]);
+        satisfied = sat;
+    }
     let jobs_run = job_plan.len();
-    let sink = SegmentSink::new(
-        segment_dir,
-        plan.hash_hex(),
-        worker,
-        owned,
-        plan.num_shards,
-    );
+    let resumed_shards = satisfied.len();
+    let sink = SegmentSink::new(segment_dir, plan.hash_hex(), worker, owned, plan.num_shards)
+        .with_resume(satisfied)
+        .with_fault(opts.fault.clone());
     let (summary, stats) = coord
         .run_with_sink(job_plan, sink)
         .with_context(|| format!("worker {worker} sampling its job slice"))?;
@@ -330,7 +801,14 @@ pub fn run_worker(plan: &ShardPlan, worker: usize, segment_dir: &Path) -> Result
             plan.num_shards
         );
     }
-    Ok(WorkerReport { worker, owned, jobs_total, jobs_run, summary, stats })
+    if let Some(f) = &opts.fault {
+        // The last crash window: all segments final, marker not yet
+        // written.
+        f.before_marker()?;
+    }
+    write_marker(segment_dir, &plan.hash_hex(), worker, &summary)
+        .with_context(|| format!("worker {worker} writing its completion marker"))?;
+    Ok(WorkerReport { worker, owned, jobs_total, jobs_run, resumed_shards, summary, stats })
 }
 
 #[cfg(test)]
@@ -353,6 +831,24 @@ mod tests {
     }
 
     #[test]
+    fn meta_names_roundtrip() {
+        let hash = "00ff00ff00ff00ff";
+        let done = marker_file_name(hash, 7);
+        assert_eq!(done, "done-00ff00ff00ff00ff-w0007.ok");
+        let info = parse_meta_file_name(&done).unwrap();
+        assert_eq!(info.kind, MetaFileKind::Marker);
+        assert_eq!((info.hash_hex.as_str(), info.worker), (hash, 7));
+        let hb = heartbeat_file_name(hash, 12);
+        assert_eq!(hb, "hb-00ff00ff00ff00ff-w0012.beat");
+        let info = parse_meta_file_name(&hb).unwrap();
+        assert_eq!(info.kind, MetaFileKind::Heartbeat);
+        assert_eq!((info.hash_hex.as_str(), info.worker), (hash, 12));
+        // Meta names never parse as segments and vice versa.
+        assert!(parse_segment_file_name(&done).is_none());
+        assert!(parse_meta_file_name(&segment_file_name(hash, 0, 0)).is_none());
+    }
+
+    #[test]
     fn foreign_names_are_rejected() {
         for name in [
             "plan.toml",
@@ -364,6 +860,38 @@ mod tests {
         ] {
             assert!(parse_segment_file_name(name).is_none(), "{name}");
         }
+        for name in [
+            "done-xyz-w0000.ok",
+            "done-00ff00ff00ff00ff-0.ok",
+            "done-00ff00ff00ff00ff-w0000.beat",
+            "hb-00ff00ff00ff00ff-w0000.ok",
+            "quarantine",
+        ] {
+            assert!(parse_meta_file_name(name).is_none(), "{name}");
+        }
+    }
+
+    #[test]
+    fn marker_roundtrips_and_rejects_garbage() {
+        let dir = std::env::temp_dir().join("magquilt_marker_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let hash = "0123456789abcdef";
+        let summary = SegmentSummary {
+            owned_segments: 4,
+            owned_edges: 1234,
+            overflow_files: 2,
+            overflow_edges: 99,
+        };
+        write_marker(&dir, hash, 3, &summary).unwrap();
+        let text = std::fs::read_to_string(dir.join(marker_file_name(hash, 3))).unwrap();
+        let (h, w, s) = parse_marker(&text).unwrap();
+        assert_eq!((h.as_str(), w), (hash, 3));
+        assert_eq!(s, summary);
+        assert!(parse_marker("").is_none());
+        assert!(parse_marker("format = wrong\nplan = x\n").is_none());
+        assert!(parse_marker(&text.replace("owned_edges = 1234", "owned_edges = ten")).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -414,5 +942,168 @@ mod tests {
         sink.accept_shard(0, vec![(0, 1)]).unwrap();
         // Shard 1 never delivered: the summary must not pretend success.
         assert!(sink.finalize().is_err());
+    }
+
+    #[test]
+    fn rewriting_an_identical_segment_is_success_and_mismatch_is_corruption() {
+        let dir = std::env::temp_dir().join("magquilt_segment_sink_idempotent");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let hash = "0123456789abcdef".to_string();
+        let run: Vec<Edge> = vec![(0, 3), (1, 1)];
+        let write = |run: &[Edge]| -> io::Result<SegmentSummary> {
+            let mut sink = SegmentSink::new(&dir, hash.clone(), 0, (0, 1), 2);
+            sink.begin(8, 2).unwrap();
+            sink.accept_shard(0, run.to_vec())?;
+            sink.accept_shard(1, Vec::new())?;
+            sink.finalize()
+        };
+        write(&run).unwrap();
+        let path = dir.join(segment_file_name(&hash, 0, 0));
+        let bytes = std::fs::read(&path).unwrap();
+        // Identical rewrite: success, file untouched, no temps.
+        write(&run).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), bytes);
+        // Different bytes under the same name: hard error.
+        let err = write(&[(0, 5)]).unwrap_err();
+        assert!(err.to_string().contains("different contents"), "{err}");
+        assert_eq!(std::fs::read(&path).unwrap(), bytes, "existing file untouched");
+        let leftovers = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().starts_with("magquilt-tmp-")
+            })
+            .count();
+        assert_eq!(leftovers, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn satisfied_shards_are_counted_not_rewritten() {
+        let dir = std::env::temp_dir().join("magquilt_segment_sink_satisfied");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let hash = "0123456789abcdef".to_string();
+        let mut satisfied = BTreeMap::new();
+        satisfied.insert(0usize, 7u64);
+        let mut sink =
+            SegmentSink::new(&dir, hash.clone(), 0, (0, 2), 2).with_resume(satisfied.clone());
+        sink.begin(8, 2).unwrap();
+        sink.accept_shard(0, Vec::new()).unwrap();
+        sink.accept_shard(1, vec![(4, 0)]).unwrap();
+        let summary = sink.finalize().unwrap();
+        assert_eq!(summary.owned_segments, 2);
+        assert_eq!(summary.owned_edges, 8, "7 resumed + 1 fresh");
+        // The satisfied shard's file was never touched (it doesn't even
+        // exist here — the sink trusts the resume scan).
+        assert!(!dir.join(segment_file_name(&hash, 0, 0)).exists());
+        // A non-empty delivery to a satisfied shard is a hard error.
+        let mut sink = SegmentSink::new(&dir, hash, 0, (0, 2), 2).with_resume(satisfied);
+        sink.begin(8, 2).unwrap();
+        let err = sink.accept_shard(0, vec![(0, 1)]).unwrap_err();
+        assert!(err.to_string().contains("marked satisfied"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn components_skip_only_fully_owned_valid_spans() {
+        // 6 shards, worker owns [0, 3). Jobs: A spans 0..=1 (owned),
+        // B spans 2..=4 (crosses into foreign shards), C spans 5..=5
+        // (foreign), D has no span.
+        let spans = vec![Some((0, 1)), Some((2, 4)), Some((5, 5)), None];
+        let mut valid = BTreeMap::new();
+        for s in 0..3usize {
+            valid.insert(s, 10 + s as u64);
+        }
+        let (skip, satisfied) = satisfied_components(6, (0, 3), &spans, &valid);
+        // A's component {0,1} is fully owned+valid → skipped.
+        // B touches shards 3,4 (foreign) → runs. C foreign → runs.
+        // D span-less → runs.
+        assert_eq!(skip, vec![true, false, false, false]);
+        // Shards 0,1 satisfied; shard 2 sits in B's component → re-run.
+        assert_eq!(
+            satisfied.into_iter().collect::<Vec<_>>(),
+            vec![(0, 10), (1, 11)]
+        );
+
+        // Same topology but shard 1's segment is missing: A must re-run.
+        valid.remove(&1);
+        let (skip, satisfied) = satisfied_components(6, (0, 3), &spans, &valid);
+        assert_eq!(skip, vec![false, false, false, false]);
+        assert!(satisfied.is_empty());
+    }
+
+    #[test]
+    fn resume_scan_classifies_markers_and_rejects_foreign_files() {
+        use crate::config::{ModelSpec, RunSpec};
+        let mut model = ModelSpec::default_spec();
+        model.log2_nodes = 4;
+        model.attributes = 4;
+        let mut run = RunSpec::default_spec();
+        run.shards = 4;
+        let plan = ShardPlan::new(&model, &run, 2).unwrap();
+        let hash = plan.hash_hex();
+        let dir = std::env::temp_dir().join("magquilt_resume_scan_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // Missing directory → empty state.
+        let state = scan_resume_state(&dir.join("nope"), &plan, 0).unwrap();
+        assert!(state.valid_segments.is_empty() && state.marker.is_none());
+
+        // Worker 0 owns shards {0, 1}. One valid owned segment, one
+        // foreign-worker file (ignored), temps and heartbeats (ignored).
+        let g = crate::graph::EdgeList::from_edges(16, vec![(0, 1), (3, 2)]);
+        crate::graph::write_edge_list_binary(&g, &dir.join(segment_file_name(&hash, 0, 0)))
+            .unwrap();
+        crate::graph::write_edge_list_binary(
+            &crate::graph::EdgeList::from_edges(16, vec![(8, 0)]),
+            &dir.join(segment_file_name(&hash, 2, 1)),
+        )
+        .unwrap();
+        std::fs::write(dir.join("magquilt-tmp-1-x-0-seg.part"), "junk").unwrap();
+        std::fs::write(dir.join(heartbeat_file_name(&hash, 0)), "").unwrap();
+        let state = scan_resume_state(&dir, &plan, 0).unwrap();
+        assert_eq!(state.valid_segments.into_iter().collect::<Vec<_>>(), vec![(0, 2)]);
+        assert!(state.marker.is_none());
+
+        // A marker whose counts don't match the disk is stale: removed.
+        let summary = SegmentSummary {
+            owned_segments: 2,
+            owned_edges: 99,
+            overflow_files: 0,
+            overflow_edges: 0,
+        };
+        write_marker(&dir, &hash, 0, &summary).unwrap();
+        let state = scan_resume_state(&dir, &plan, 0).unwrap();
+        assert!(state.marker.is_none());
+        assert!(!dir.join(marker_file_name(&hash, 0)).exists(), "stale marker removed");
+
+        // Complete worker 0's output and write a consistent marker.
+        crate::graph::write_edge_list_binary(
+            &crate::graph::EdgeList::from_edges(16, vec![(4, 4)]),
+            &dir.join(segment_file_name(&hash, 1, 0)),
+        )
+        .unwrap();
+        let summary = SegmentSummary {
+            owned_segments: 2,
+            owned_edges: 3,
+            overflow_files: 0,
+            overflow_edges: 0,
+        };
+        write_marker(&dir, &hash, 0, &summary).unwrap();
+        let state = scan_resume_state(&dir, &plan, 0).unwrap();
+        assert_eq!(state.marker, Some(summary));
+        assert_eq!(state.valid_segments.len(), 2);
+
+        // A foreign-plan file poisons the scan.
+        std::fs::write(
+            dir.join(segment_file_name("deadbeefdeadbeef", 0, 0)),
+            "other plan",
+        )
+        .unwrap();
+        let err = scan_resume_state(&dir, &plan, 0).unwrap_err();
+        assert!(err.to_string().contains("refusing to resume"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -21,7 +21,8 @@ pub use io::{read_binary_body, read_binary_header, read_edge_list_binary, read_e
 pub use sink::{summarize_spill, BinaryFileSink, CollectSink, CountingSink, DegreeCounts,
                EdgeSink, ShardDisposition, ShardMergeStats, ShardMerger, ShardSpec,
                SpillSummary, DEFAULT_SPILL_BUDGET};
-pub use spill::{run_nonce, unique_spill_path, unique_temp_path, SpillRun, SpillWriter};
+pub use spill::{run_nonce, unique_spill_path, unique_temp_path, write_atomic, SpillRun,
+                SpillWriter};
 
 /// Node identifier. u32 covers n up to 4.29e9, well past the paper's 2^23.
 pub type NodeId = u32;

@@ -72,6 +72,26 @@ pub fn unique_spill_path(dir: &Path, tag: &str) -> PathBuf {
     unique_temp_path(dir, tag, "run")
 }
 
+/// Write `bytes` to `dir/name` atomically: stream into a process-unique
+/// temp file, `sync_all`, then rename over the final name. A reader (or
+/// a crash-resumed worker) therefore sees either no file or the complete
+/// contents — never a torn write. Used for the distributed runtime's
+/// small metadata files (completion markers); the temp is removed on any
+/// failure.
+pub fn write_atomic(dir: &Path, name: &str, bytes: &[u8]) -> io::Result<()> {
+    let tmp = unique_temp_path(dir, "meta", "part");
+    let write = (|| -> io::Result<()> {
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, dir.join(name))
+    })();
+    if write.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    write
+}
+
 /// Streaming writer for one spill run.
 pub struct SpillWriter {
     writer: BufWriter<File>,
@@ -280,6 +300,23 @@ mod tests {
         assert!(name.contains(&std::process::id().to_string()), "pid in {name}");
         assert!(name.contains(&format!("{:016x}", run_nonce())), "nonce in {name}");
         assert!(name.ends_with("-seg3.part"), "tag + extension in {name}");
+    }
+
+    #[test]
+    fn write_atomic_lands_complete_and_leaves_no_temp() {
+        let dir = tmp_dir().join("atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_atomic(&dir, "marker.ok", b"format = 1\n").unwrap();
+        assert_eq!(std::fs::read(dir.join("marker.ok")).unwrap(), b"format = 1\n");
+        // Overwrite is atomic too (rename replaces the old contents).
+        write_atomic(&dir, "marker.ok", b"format = 2\n").unwrap();
+        assert_eq!(std::fs::read(dir.join("marker.ok")).unwrap(), b"format = 2\n");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n.starts_with("magquilt-tmp-"))
+            .collect();
+        assert!(leftovers.is_empty(), "temps left behind: {leftovers:?}");
     }
 
     #[test]

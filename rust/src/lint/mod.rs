@@ -10,7 +10,7 @@
 //! static pass over `rust/src`, run by `cargo run --bin maglint`, by the
 //! `lint` CI job, and by the self-run test below.
 //!
-//! The five rules (see `docs/determinism.md` for the rationale and the
+//! The six rules (see `docs/determinism.md` for the rationale and the
 //! annotation syntax):
 //!
 //! 1. **RNG stream registry** — fork tags live in `rust/src/rngtags.rs`
@@ -35,6 +35,12 @@
 //!    must appear in exactly one of `RUNSPEC_HASHED`/`RUNSPEC_EXEMPT`
 //!    (both in `dist/plan.rs`), so adding a config field without deciding
 //!    its hash fate fails the lint.
+//! 6. **Fault hook** — the fault-injection machinery (`FaultPlan`,
+//!    `inject_fault`, `crash_point`) is confined to the I/O and driver
+//!    layers; a reference inside an output-determining module (the rule-3
+//!    scope) is an error unless annotated `// lint: fault-ok(<reason>)`,
+//!    so an injected crash can change *when* bytes hit disk but never
+//!    *which* bytes the sampler derives.
 //!
 //! The pass is deliberately line-based (zero new dependencies, no syntax
 //! tree): string literals and `//` comments are stripped before matching,
@@ -65,6 +71,8 @@ pub enum Rule {
     PanicPath,
     /// Plan/run field with an undecided hash fate.
     HashDrift,
+    /// Fault-injection hook in an output-determining module.
+    FaultHook,
 }
 
 impl Rule {
@@ -78,6 +86,7 @@ impl Rule {
             Rule::NondetSource => "nondet-source",
             Rule::PanicPath => "panic-path",
             Rule::HashDrift => "hash-drift",
+            Rule::FaultHook => "fault-hook",
         }
     }
 }
@@ -325,6 +334,10 @@ fn in_panic_scope(relpath: &str) -> bool {
 const NONDET_PATTERNS: &[&str] =
     &["SystemTime::now", "Instant::now", "available_parallelism", "std::env"];
 const PANIC_PATTERNS: &[&str] = &[".unwrap()", ".expect(", "panic!(", "unreachable!("];
+/// Names of the fault-injection machinery (rule 6). Kept in sync with
+/// `dist/fault.rs` — the lint is what proves the hooks never migrate into
+/// the sampling layers.
+const FAULT_PATTERNS: &[&str] = &["FaultPlan", "inject_fault", "crash_point"];
 
 /// Lint one source file (rules 1–4). `relpath` is relative to `rust/src`
 /// and selects the module-scoped rules; the registry file itself is
@@ -451,6 +464,24 @@ pub fn lint_source(relpath: &str, source: &str) -> Vec<Finding> {
                         message: format!(
                             "{pat} in an output-determining module; derive from the plan/seed \
                              or annotate with lint: time-ok(...) / lint: env-ok(...)"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // Rule 6: fault-injection hooks in output-determining modules.
+        if in_nondet_scope(relpath) && !annotated(raw, "fault") {
+            for pat in FAULT_PATTERNS {
+                if code.contains(pat) {
+                    findings.push(Finding {
+                        rule: Rule::FaultHook,
+                        file: relpath.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "{pat} referenced in an output-determining module; fault injection \
+                             belongs to the I/O/driver layers (dist/fault.rs) — move it or \
+                             annotate with lint: fault-ok(reason)"
                         ),
                     });
                 }
@@ -981,6 +1012,33 @@ mod tests {
     }
 
     #[test]
+    fn fixture_fault_hook_in_kpgm_trips() {
+        let f = lint_source("kpgm/bad.rs", &fixture("fault_in_kpgm.rs"));
+        assert!(
+            f.iter().any(|x| x.rule == Rule::FaultHook && x.line == 5),
+            "expected a fault-hook finding on line 5, got {f:?}"
+        );
+        assert!(
+            !f.iter().any(|x| x.rule == Rule::FaultHook && x.line == 8),
+            "annotated fault hook must not be flagged: {f:?}"
+        );
+        // The same source outside the output-determining scope is fine:
+        // dist/fault.rs and its callers are exactly where the hooks live.
+        let f = lint_source("dist/fault.rs", &fixture("fault_in_kpgm.rs"));
+        assert!(!f.iter().any(|x| x.rule == Rule::FaultHook), "{f:?}");
+    }
+
+    #[test]
+    fn supervise_module_is_in_panic_scope() {
+        // The supervisor kills child processes on unrecoverable errors; an
+        // unannotated panic there would leak workers. The dist/ prefix rule
+        // must keep covering it (and the doctor / fault modules).
+        for file in ["dist/supervise.rs", "dist/doctor.rs", "dist/fault.rs"] {
+            assert!(in_panic_scope(file), "{file} must be panic-path linted");
+        }
+    }
+
+    #[test]
     fn shipped_tree_is_clean() {
         let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
         let findings = lint_tree(&root).expect("lint walks the tree");
@@ -1006,7 +1064,13 @@ mod tests {
         // a fate list, never a TOML key string earlier in the file.
         let lists_at = plan_src.find("HASH_EXEMPT").expect("plan declares HASH_EXEMPT");
         let (head, lists) = plan_src.split_at(lists_at);
-        for knob in ["\"workers\"", "\"setup_threads\"", "\"merge_threads\""] {
+        for knob in [
+            "\"workers\"",
+            "\"setup_threads\"",
+            "\"merge_threads\"",
+            "\"worker_retries\"",
+            "\"worker_backoff_ms\"",
+        ] {
             let broken = format!("{head}{}", lists.replacen(knob, "\"knob_gone\"", 1));
             let f = check_plan_hash(PLAN_PATH, &broken, SPEC_PATH, &spec_src);
             assert!(!f.is_empty(), "dropping {knob} from the fate lists must trip the lint");

@@ -351,6 +351,160 @@ fn stats_reads_binary_by_magic_not_extension() {
     magquilt::cli::run(&["stats".to_string(), seg.to_str().unwrap().to_string()]).unwrap();
 }
 
+#[test]
+fn crash_and_resume_is_byte_identical_across_crash_points() {
+    // The fault-tolerance acceptance matrix: crash worker 0 at every
+    // reachable window — after K ∈ {0, 1, mid} owned segments, before an
+    // atomic rename, mid-body-write, and after everything but the
+    // completion marker — then resume it, run the rest, and merge. The
+    // result must be byte-identical to the crash-free run, for both
+    // samplers × both piece modes × W ∈ {2, 4}.
+    for (sampler, mu, seed) in
+        [(SamplerKind::Quilt, 0.5, 17u64), (SamplerKind::Hybrid, 0.85, 23)]
+    {
+        let m = model(7, mu);
+        let mut run = RunSpec::default_spec();
+        run.sampler = sampler;
+        run.seed = seed;
+        run.shards = 6;
+        for mode in [PieceMode::Conditioned, PieceMode::Rejection] {
+            run.piece_mode = mode;
+            for workers in [2usize, 4] {
+                let plan = ShardPlan::new(&m, &run, workers).unwrap();
+                let tag = format!("{}_{mode:?}_{workers}", run.sampler.name());
+
+                // Crash-free baseline.
+                let dir = tmp(&format!("crash_base_{tag}"));
+                let base_out = dir.join("merged.bin");
+                for w in 0..plan.num_workers() {
+                    dist::run_worker(&plan, w, &dir).unwrap();
+                }
+                dist::merge_segments(&dir, &plan, &base_out, true).unwrap();
+                let baseline = std::fs::read(&base_out).unwrap();
+
+                let (lo, hi) = plan.worker_range(0).unwrap();
+                let width = hi - lo;
+                let mut specs = vec![
+                    "crash-before-marker".to_string(),
+                    "crash-before-rename".to_string(),
+                    format!("fail-write-shard={lo}"),
+                ];
+                for k in [0, 1, width / 2] {
+                    let s = format!("crash-after-segments={k}");
+                    if k < width && !specs.contains(&s) {
+                        specs.push(s);
+                    }
+                }
+                for spec in &specs {
+                    let dir = tmp(&format!("crash_{tag}_{spec}"));
+                    let opts = dist::WorkerOptions {
+                        resume: true,
+                        fault: Some(dist::FaultPlan::parse(spec).unwrap()),
+                    };
+                    let err = dist::run_worker_with(&plan, 0, &dir, &opts)
+                        .expect_err(&format!("{tag} {spec}: fault must fire"));
+                    assert!(
+                        format!("{err:#}").contains("injected fault"),
+                        "{tag} {spec}: unexpected error {err:#}"
+                    );
+                    // A crashed attempt may leak an in-flight temp file —
+                    // exactly what the driver sweeps once the process is
+                    // provably dead. Do the same before resuming.
+                    for e in std::fs::read_dir(&dir).unwrap() {
+                        let e = e.unwrap();
+                        if e.file_name().to_string_lossy().starts_with("magquilt-tmp-") {
+                            std::fs::remove_file(e.path()).unwrap();
+                        }
+                    }
+                    let resumed = dist::run_worker_with(
+                        &plan,
+                        0,
+                        &dir,
+                        &dist::WorkerOptions { resume: true, fault: None },
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        resumed.summary.owned_segments, width,
+                        "{tag} {spec}: resume must land every owned shard"
+                    );
+                    for w in 1..plan.num_workers() {
+                        dist::run_worker(&plan, w, &dir).unwrap();
+                    }
+                    let out = dir.join("merged.bin");
+                    dist::merge_segments(&dir, &plan, &out, true).unwrap();
+                    assert_eq!(
+                        std::fs::read(&out).unwrap(),
+                        baseline,
+                        "{tag} {spec}: resumed output differs from crash-free run"
+                    );
+                    let leftover: Vec<String> = std::fs::read_dir(&dir)
+                        .unwrap()
+                        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+                        .filter(|n| n != "merged.bin")
+                        .collect();
+                    assert!(leftover.is_empty(), "{tag} {spec}: not drained: {leftover:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn resume_after_marker_skips_all_work_and_changes_nothing() {
+    // A worker that already finished (marker on disk) must resume to a
+    // no-op: identical directory bytes, zero jobs run.
+    let m = model(7, 0.5);
+    let mut run = RunSpec::default_spec();
+    run.shards = 4;
+    let plan = ShardPlan::new(&m, &run, 2).unwrap();
+    let dir = tmp("resume_noop");
+    let first = dist::run_worker_with(
+        &plan,
+        0,
+        &dir,
+        &dist::WorkerOptions { resume: true, fault: None },
+    )
+    .unwrap();
+    let snapshot: Vec<(String, Vec<u8>)> = {
+        let mut v: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| {
+                let e = e.unwrap();
+                (
+                    e.file_name().to_string_lossy().into_owned(),
+                    std::fs::read(e.path()).unwrap(),
+                )
+            })
+            .collect();
+        v.sort();
+        v
+    };
+    let again = dist::run_worker_with(
+        &plan,
+        0,
+        &dir,
+        &dist::WorkerOptions { resume: true, fault: None },
+    )
+    .unwrap();
+    assert_eq!(again.jobs_run, 0, "trusted marker must skip every job");
+    assert_eq!(again.summary, first.summary);
+    let after: Vec<(String, Vec<u8>)> = {
+        let mut v: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| {
+                let e = e.unwrap();
+                (
+                    e.file_name().to_string_lossy().into_owned(),
+                    std::fs::read(e.path()).unwrap(),
+                )
+            })
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(after, snapshot, "marker fast path must not touch the directory");
+}
+
 // ---------------------------------------------------------------------
 // True multi-process coverage: spawn the real magquilt binary.
 // ---------------------------------------------------------------------
@@ -469,4 +623,161 @@ fn cli_standalone_worker_and_merge_pipeline() {
     ]);
     assert_success(&out, "driver");
     assert_eq!(std::fs::read(&merged).unwrap(), std::fs::read(&driver_out).unwrap());
+}
+
+#[test]
+fn cli_driver_supervises_injected_crash_and_matches_single_process() {
+    // Inject a deterministic crash into worker 1's first attempt: the
+    // supervisor must restart it with --resume and the final file must
+    // still be byte-identical to the single-process run.
+    let dir = tmp("cli_crash_supervised");
+    let seg_dir = dir.join("segs");
+    let dist_out = dir.join("dist.bin");
+    let single_out = dir.join("single.bin");
+    let out = run_bin(&[
+        "sample", "--log2-nodes", "8", "--seed", "7", "--shards", "6",
+        "--dist-workers", "2",
+        "--worker-retries", "2", "--worker-backoff-ms", "10",
+        "--inject-fault", "crash-after-segments=1@w1",
+        "--segment-dir", seg_dir.to_str().unwrap(),
+        "--out", dist_out.to_str().unwrap(),
+    ]);
+    assert_success(&out, "supervised dist driver");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("1 worker restart(s) recovered by resume"),
+        "restart line missing from:\n{stdout}"
+    );
+    assert!(stdout.contains("from 2 worker(s)"), "merge line missing from:\n{stdout}");
+    let out = run_bin(&[
+        "sample", "--log2-nodes", "8", "--seed", "7", "--shards", "6",
+        "--attr-mode", "chunked", "--sink", "binary",
+        "--out", single_out.to_str().unwrap(),
+    ]);
+    assert_success(&out, "single-process baseline");
+    assert_eq!(
+        std::fs::read(&dist_out).unwrap(),
+        std::fs::read(&single_out).unwrap(),
+        "crash-injected supervised run must still be byte-identical"
+    );
+    assert!(
+        !seg_dir.exists() || std::fs::read_dir(&seg_dir).unwrap().next().is_none(),
+        "segment dir not drained after supervised recovery"
+    );
+}
+
+#[test]
+fn cli_driver_exhausted_retries_then_rerun_resumes() {
+    // With a zero retry budget the injected crash is fatal; the segments
+    // survive, and rerunning the same command (no fault) resumes from
+    // them and completes byte-identically.
+    let dir = tmp("cli_crash_exhausted");
+    let seg_dir = dir.join("segs");
+    let dist_out = dir.join("dist.bin");
+    let single_out = dir.join("single.bin");
+    let failing = [
+        "sample", "--log2-nodes", "8", "--seed", "7", "--shards", "6",
+        "--dist-workers", "2",
+        "--worker-retries", "0", "--worker-backoff-ms", "10",
+        "--inject-fault", "crash-after-segments=0@w0",
+        "--segment-dir", seg_dir.to_str().unwrap(),
+        "--out", dist_out.to_str().unwrap(),
+    ];
+    let out = run_bin(&failing);
+    assert!(!out.status.success(), "zero-retry crash must fail the driver");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("retry budget"), "budget message missing from:\n{stderr}");
+    assert!(seg_dir.is_dir(), "segments must be left for inspection/resume");
+
+    // Same command without the "--inject-fault <spec>" pair: picks the
+    // directory back up.
+    let mut retry: Vec<&str> = Vec::new();
+    let mut skip_next = false;
+    for a in failing {
+        if skip_next {
+            skip_next = false;
+        } else if a == "--inject-fault" {
+            skip_next = true;
+        } else {
+            retry.push(a);
+        }
+    }
+    let out = run_bin(&retry);
+    assert_success(&out, "resuming driver rerun");
+    let out = run_bin(&[
+        "sample", "--log2-nodes", "8", "--seed", "7", "--shards", "6",
+        "--attr-mode", "chunked", "--sink", "binary",
+        "--out", single_out.to_str().unwrap(),
+    ]);
+    assert_success(&out, "single-process baseline");
+    assert_eq!(
+        std::fs::read(&dist_out).unwrap(),
+        std::fs::read(&single_out).unwrap(),
+        "resumed rerun must be byte-identical"
+    );
+}
+
+#[test]
+fn cli_doctor_classifies_then_fixes_then_merge_succeeds() {
+    // Build a real segment directory, contaminate it with every residue
+    // class, and check doctor reports then repairs it — after which the
+    // merge goes through untouched.
+    let dir = tmp("cli_doctor");
+    let plan_path = dir.join("plan.toml");
+    let seg_dir = dir.join("segs");
+    std::fs::create_dir_all(&seg_dir).unwrap();
+    assert_success(
+        &run_bin(&[
+            "shard-plan", "--log2-nodes", "7", "--seed", "3", "--shards", "4",
+            "--dist-workers", "2", "--plan-out", plan_path.to_str().unwrap(),
+        ]),
+        "shard-plan",
+    );
+    for w in ["0", "1"] {
+        assert_success(
+            &run_bin(&[
+                "shard-worker", "--plan", plan_path.to_str().unwrap(),
+                "--worker", w, "--segment-dir", seg_dir.to_str().unwrap(),
+            ]),
+            "shard-worker",
+        );
+    }
+    // Residue: a dead attempt's temp and a foreign-plan segment.
+    std::fs::write(seg_dir.join("magquilt-tmp-99-00aa-0-seg.part"), b"junk").unwrap();
+    std::fs::write(
+        seg_dir.join("seg-deadbeefdeadbeef-s00000-w0000.seg"),
+        b"other plan",
+    )
+    .unwrap();
+
+    // Dry run reports, changes nothing.
+    let out = run_bin(&[
+        "doctor", seg_dir.to_str().unwrap(), "--plan", plan_path.to_str().unwrap(),
+    ]);
+    assert_success(&out, "doctor dry run");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("stale-temp"), "missing stale-temp row:\n{stdout}");
+    assert!(stdout.contains("foreign-plan"), "missing foreign-plan row:\n{stdout}");
+    assert!(stdout.contains("rerun with --fix"), "missing fix hint:\n{stdout}");
+    assert!(seg_dir.join("magquilt-tmp-99-00aa-0-seg.part").exists());
+
+    // Fix, then merge.
+    let out = run_bin(&[
+        "doctor", seg_dir.to_str().unwrap(), "--plan", plan_path.to_str().unwrap(), "--fix",
+    ]);
+    assert_success(&out, "doctor --fix");
+    assert!(!seg_dir.join("magquilt-tmp-99-00aa-0-seg.part").exists(), "temp removed");
+    assert!(
+        seg_dir.join("quarantine").join("seg-deadbeefdeadbeef-s00000-w0000.seg").exists(),
+        "foreign segment quarantined, not deleted"
+    );
+    let merged = dir.join("merged.bin");
+    assert_success(
+        &run_bin(&[
+            "merge-segments", "--segments", seg_dir.to_str().unwrap(),
+            "--plan", plan_path.to_str().unwrap(),
+            "--out", merged.to_str().unwrap(),
+        ]),
+        "merge after doctor --fix",
+    );
 }
