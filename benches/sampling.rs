@@ -6,20 +6,23 @@
 //! counts (per-phase attrs/partition/trie/trie-merge/DAG timings), the
 //! distributed-runtime sweep over worker counts (partitioned sampling +
 //! segment merge), and the segment-merge sweep over merge-thread counts
-//! (one fixed segment directory, T ∈ {1, 2, 4, 8}). Summaries are
+//! (one fixed segment directory, T ∈ {1, 2, 4, 8}), and the setup-reuse
+//! sweep (fresh setup + sample vs hydrating the same run from a saved
+//! `MAGQART1` setup artifact — docs/setup-artifact.md). Summaries are
 //! emitted to `BENCH_quilt.json` for the perf trajectory.
 //!
 //! `MAGQUILT_BENCH_FAST=1` shrinks the sweeps for smoke runs.
 
 use std::time::Instant;
 
-use magquilt::config::{ModelSpec, RunSpec};
+use magquilt::config::{ModelSpec, RunSpec, SamplerKind};
 use magquilt::coordinator::Coordinator;
 use magquilt::dist::{self, ShardPlan};
 use magquilt::kpgm::Initiator;
 use magquilt::magm::{naive_sample, AttributeAssignment, MagmParams};
 use magquilt::quilt::{HybridSampler, Partition, PieceMode, QuiltSampler};
 use magquilt::rng::Rng;
+use magquilt::setup::SetupArtifact;
 
 fn fast() -> bool {
     std::env::var("MAGQUILT_BENCH_FAST").is_ok()
@@ -452,6 +455,95 @@ fn merge_sweep() -> String {
     )
 }
 
+/// Setup-reuse sweep: the same run end to end with fresh setup vs
+/// hydrated from a saved `MAGQART1` setup artifact (load + rebuild of
+/// the derived state + sampling). The outputs are bit-for-bit identical
+/// (asserted by the test suite); the sweep prices what `--artifact`
+/// saves per run and what the one-time build + save costs. Returns the
+/// JSON rows for `BENCH_quilt.json`.
+fn setup_reuse_sweep() -> String {
+    let (ds, trials): (&[u32], u64) = if fast() { (&[12], 2) } else { (&[14, 16], 3) };
+    let dir = std::env::temp_dir().join("magquilt_bench_artifact");
+    std::fs::create_dir_all(&dir).unwrap();
+    println!("\n# bench: setup reuse sweep (theta1, fresh vs artifact-hydrated quilt run)");
+    println!(
+        "{:>6} {:>10} {:>12} {:>10} {:>9} {:>12} {:>9} {:>12}",
+        "log2n", "fresh_ms", "build_ms", "save_ms", "load_ms", "hydrated_ms", "reuse", "bytes"
+    );
+    let mut rows = Vec::new();
+    for &d in ds {
+        let mut model = ModelSpec::default_spec();
+        model.log2_nodes = d;
+        model.attributes = d;
+        let params = MagmParams::homogeneous(
+            Initiator::new(model.theta),
+            model.mu,
+            1usize << d,
+            model.attributes,
+        );
+        let coord = Coordinator::new();
+        let path = dir.join(format!("setup_{d}.art"));
+        let mut fresh_ms = Vec::new();
+        let mut build_ms = Vec::new();
+        let mut save_ms = Vec::new();
+        let mut load_ms = Vec::new();
+        let mut hydrated_ms = Vec::new();
+        let mut bytes = 0u64;
+        for t in 0..trials {
+            let start = Instant::now();
+            let fresh = coord.sample_quilt(&params, t);
+            fresh_ms.push(start.elapsed().as_secs_f64() * 1e3);
+
+            let start = Instant::now();
+            let artifact =
+                coord.build_setup(&model, t, SamplerKind::Quilt).expect("bench setup build");
+            build_ms.push(start.elapsed().as_secs_f64() * 1e3);
+
+            let start = Instant::now();
+            artifact.save(&path).expect("bench artifact save");
+            save_ms.push(start.elapsed().as_secs_f64() * 1e3);
+            bytes = std::fs::metadata(&path).expect("bench artifact stat").len();
+
+            let start = Instant::now();
+            let loaded = SetupArtifact::load(&path).expect("bench artifact load");
+            let lm = start.elapsed().as_secs_f64() * 1e3;
+            load_ms.push(lm);
+
+            let start = Instant::now();
+            let hydrated =
+                coord.sample_with_artifact(loaded, lm).expect("bench hydrated run");
+            hydrated_ms.push(start.elapsed().as_secs_f64() * 1e3);
+            // The full byte-identity is asserted by the test suite; keep
+            // the cheap invariant hot in the bench too.
+            assert_eq!(fresh.graph.num_edges(), hydrated.graph.num_edges());
+        }
+        let _ = std::fs::remove_file(&path);
+        let (f, b, s, l, h) = (
+            median(&mut fresh_ms),
+            median(&mut build_ms),
+            median(&mut save_ms),
+            median(&mut load_ms),
+            median(&mut hydrated_ms),
+        );
+        let reuse = f / h.max(1e-9);
+        println!(
+            "{:>6} {:>10.2} {:>12.2} {:>10.2} {:>9.2} {:>12.2} {:>8.2}x {:>12}",
+            d, f, b, s, l, h, reuse, bytes
+        );
+        rows.push(format!(
+            "      {{\"log2_nodes\": {d}, \"fresh_ms\": {f:.3}, \"build_ms\": {b:.3}, \
+             \"save_ms\": {s:.3}, \"load_ms\": {l:.3}, \"hydrated_ms\": {h:.3}, \
+             \"setup_reuse\": {reuse:.2}, \"artifact_bytes\": {bytes}}}"
+        ));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    format!(
+        "  \"setup_reuse\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \
+         \"sampler\": \"quilt\", \"trials\": {trials},\n    \"results\": [\n{}\n    ]\n  }}",
+        rows.join(",\n")
+    )
+}
+
 fn main() {
     let (d_max, naive_max, trials) = if fast() { (12, 9, 2) } else { (17, 11, 3) };
     println!("# bench: sampling (paper Fig. 10/11) — trials={trials}");
@@ -524,8 +616,10 @@ fn main() {
     let setup_rows = setup_sweep();
     let dist_rows = dist_sweep();
     let merge_rows = merge_sweep();
-    let sections =
-        [piece_rows, shard_rows, spill_rows, setup_rows, dist_rows, merge_rows].join(",\n");
+    let reuse_rows = setup_reuse_sweep();
+    let sections = [piece_rows, shard_rows, spill_rows, setup_rows, dist_rows, merge_rows,
+                    reuse_rows]
+        .join(",\n");
     let json = format!("{{\n  \"bench\": \"quilt\",\n{sections}\n}}\n");
     match std::fs::write("BENCH_quilt.json", &json) {
         Ok(()) => println!("wrote BENCH_quilt.json"),

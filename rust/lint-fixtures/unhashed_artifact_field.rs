@@ -1,0 +1,29 @@
+// maglint fixture: an ArtifactHeader field with no declared hash fate,
+// and a witness that misses a field. Parsed by tests, not compiled.
+
+pub struct ArtifactHeader {
+    /// Hashed in canonical().
+    pub seed: u64,
+    /// Exempt provenance.
+    pub setup_ms: f64,
+    /// Exempt; the stale-entry test rewrites its list entry.
+    pub extra_stale: usize,
+    /// Neither hashed nor exempt: the tripwire target.
+    pub extra_knob: usize,
+}
+
+impl ArtifactHeader {
+    fn canonical(&self) -> String {
+        format!("artifact|seed={}", self.seed)
+    }
+}
+
+const ART_HASH_EXEMPT: &[&str] = &["setup_ms", "extra_stale"];
+
+fn artifact_hash_disposition_witness(header: &ArtifactHeader) {
+    let ArtifactHeader {
+        seed: _,        // hashed
+        setup_ms: _,    // ART_HASH_EXEMPT
+        extra_stale: _, // ART_HASH_EXEMPT
+    } = *header;
+}

@@ -10,15 +10,19 @@
 //!                   [--spill-budget BYTES] [--binary] [--stats]
 //! magquilt sample …         (alias of generate; accepts --out for --output;
 //!                   add --dist-workers W for a multi-process run with
-//!                   [--worker-retries R] [--worker-backoff-ms MS])
+//!                   [--worker-retries R] [--worker-backoff-ms MS];
+//!                   add --artifact F to reuse — or build and persist —
+//!                   the setup prologue)
+//! magquilt setup [model/run flags | --plan F] [--out F]
+//! magquilt artifact info <file>
 //! magquilt shard-plan [model/run flags] --dist-workers W [--plan-out F]
 //! magquilt shard-worker --plan F --worker I [--segment-dir DIR]
-//!                   [--resume] [--inject-fault SPEC]
+//!                   [--resume] [--artifact F] [--inject-fault SPEC]
 //! magquilt merge-segments --segments DIR [--plan F] --out PATH
 //!                   [--merge-threads T] [--spill-budget BYTES]
 //!                   [--remove-segments]
 //! magquilt doctor <segment dir> [--plan F] [--fix]
-//! magquilt stats <edge-list file | segment dir>
+//! magquilt stats <edge-list file | segment dir | setup artifact>
 //! magquilt experiment <fig1|fig5|...|fig14|all> [--max-log2n N]
 //!                   [--naive-max-log2n N] [--trials T] [--seed S]
 //!                   [--out DIR]
@@ -122,14 +126,18 @@ USAGE:
                       (distributed: spawn W supervised local worker
                       processes, restart crashed/stalled ones in place,
                       merge — bit-for-bit the single-process file)
+    magquilt setup    [model/run flags | --plan F] [--out F]
+                      (build the deterministic setup prologue once and
+                      persist it as a content-addressed .art file)
+    magquilt artifact info <file>
     magquilt shard-plan [model/run flags] --dist-workers W [--plan-out F]
     magquilt shard-worker --plan F --worker I [--segment-dir DIR]
-                      [--resume] [--inject-fault SPEC]
+                      [--resume] [--artifact F] [--inject-fault SPEC]
     magquilt merge-segments --segments DIR [--plan F] --out PATH
                       [--merge-threads T] [--spill-budget BYTES]
                       [--remove-segments]
     magquilt doctor <segment dir> [--plan F] [--fix]
-    magquilt stats <edge-list file | segment dir>
+    magquilt stats <edge-list file | segment dir | setup artifact>
     magquilt experiment <id|all> [--max-log2n N] [--naive-max-log2n N]
                       [--trials T] [--seed S] [--out DIR]
     magquilt artifacts-check [--dir DIR]
@@ -165,6 +173,17 @@ DISTRIBUTED: one plan manifest seals the run (`shard-plan`); each worker
        quarantines; `shard-worker --inject-fault SPEC` (or
        `sample --inject-fault SPEC@wN`) deterministically crashes a
        chosen write window for testing — see docs/fault-tolerance.md.
+SETUP ARTIFACTS: the deterministic prologue (attributes, partition,
+       tries, product DAG) can be built once (`setup`) into a
+       content-addressed MAGQART1 file and reused: `sample --artifact F`
+       loads it (building and persisting on first use) and skips every
+       setup phase; `sample --dist-workers W --artifact F` hands it to
+       all workers; `shard-worker --artifact F` hydrates instead of
+       re-running setup; `artifact info F` (and `stats F`) describe a
+       file. Artifacts are cross-checked by identity hash before use —
+       a stale or mismatched file is an error, never silent drift — and
+       hydrated runs are bit-for-bit identical to fresh ones. See
+       docs/setup-artifact.md.
 EXPERIMENTS: fig1 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14 | all
 ";
 
@@ -177,6 +196,8 @@ pub fn run(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd {
         "generate" | "sample" => cmd_generate(rest),
+        "setup" => cmd_setup(rest),
+        "artifact" => cmd_artifact(rest),
         "shard-plan" => cmd_shard_plan(rest),
         "shard-worker" => cmd_shard_worker(rest),
         "merge-segments" => cmd_merge_segments(rest),
@@ -267,6 +288,9 @@ fn specs_from_args(args: &Args) -> Result<(ModelSpec, RunSpec)> {
     if let Some(b) = args.get_parsed::<u64>("worker-backoff-ms")? {
         run.worker_backoff_ms = b;
     }
+    if let Some(a) = args.get("artifact") {
+        run.artifact = Some(a.to_string());
+    }
     model.validate()?;
     Ok((model, run))
 }
@@ -302,9 +326,9 @@ fn cmd_generate(raw: &[String]) -> Result<()> {
         return cmd_generate_dist(&args, &model, &run);
     }
     match sink {
-        "collect" => cmd_generate_collect(&args, &params, &run),
-        "counting" => cmd_generate_counting(&params, &run),
-        "binary" => cmd_generate_binary(&args, &params, &run),
+        "collect" => cmd_generate_collect(&args, &model, &params, &run),
+        "counting" => cmd_generate_counting(&model, &params, &run),
+        "binary" => cmd_generate_binary(&args, &model, &params, &run),
         other => bail!("unknown sink {other:?} (expected collect|counting|binary)"),
     }
 }
@@ -341,6 +365,26 @@ fn cmd_generate_dist(args: &Args, model: &ModelSpec, run: &RunSpec) -> Result<()
     let exe =
         std::env::current_exe().context("locating the magquilt binary to spawn workers")?;
     let mut opts = dist::SuperviseOptions::from_plan(&plan);
+    if let Some(p) = &run.artifact {
+        let path = PathBuf::from(p);
+        if path.exists() {
+            // Validate once in the driver: one clear error beats W
+            // identical worker failures.
+            let artifact = crate::setup::SetupArtifact::load(&path)?;
+            artifact.check_matches(&crate::setup::ArtifactHeader::from_plan(&plan))?;
+            eprintln!("artifact: workers will load {} ({})", path.display(), artifact.hash_hex());
+        } else {
+            let artifact = dist::build_plan_artifact(&plan)?;
+            ensure_parent_dir(&path)?;
+            artifact.save(&path)?;
+            eprintln!(
+                "artifact: built and wrote {} ({}) — workers will load it",
+                path.display(),
+                artifact.hash_hex()
+            );
+        }
+        opts.artifact = Some(path);
+    }
     if let Some(spec) = args.get("inject-fault") {
         let (fault, target) = dist::parse_driver_fault(spec)?;
         let target = target.ok_or_else(|| {
@@ -409,6 +453,9 @@ fn cmd_shard_plan(raw: &[String]) -> Result<()> {
         plan.sampler.name(),
         plan.attr_mode.name(),
     );
+    println!("# optional: build the shared setup prologue once (workers then");
+    println!("# append `--artifact setup.art` and skip their setup phases):");
+    println!("#   magquilt setup --plan {} --out setup.art", out.display());
     println!("# run one worker per host (any order, reruns are safe):");
     for w in 0..plan.num_workers() {
         let (lo, hi) = plan.worker_range(w).expect("range");
@@ -422,6 +469,98 @@ fn cmd_shard_plan(raw: &[String]) -> Result<()> {
     println!(
         "#   magquilt merge-segments --segments segs/ --plan {} --out graph.bin",
         out.display()
+    );
+    Ok(())
+}
+
+/// Build the deterministic setup prologue once and persist it as a
+/// content-addressed artifact (see docs/setup-artifact.md). With
+/// `--plan F` the prologue is exactly the one every worker of that plan
+/// would build; otherwise the model/run flags describe it.
+fn cmd_setup(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    let artifact = match args.get("plan") {
+        Some(p) => {
+            let plan = ShardPlan::load(Path::new(p))?;
+            dist::build_plan_artifact(&plan)?
+        }
+        None => {
+            let (model, run) = specs_from_args(&args)?;
+            coordinator_from(&run).build_setup(&model, run.seed, run.sampler)?
+        }
+    };
+    let out = match args.get("out").or_else(|| args.get("output")) {
+        Some(o) => PathBuf::from(o),
+        None => PathBuf::from(crate::setup::artifact_file_name(&artifact.hash_hex())),
+    };
+    ensure_parent_dir(&out)?;
+    artifact.save(&out)?;
+    let h = artifact.header();
+    println!(
+        "wrote {} (artifact {}, sampler={}, pieces={}, attrs={}, n=2^{}, d={}, seed={}, \
+         built in {:.1} ms on {} setup thread(s))",
+        out.display(),
+        artifact.hash_hex(),
+        h.sampler.name(),
+        h.piece_mode.name(),
+        h.attr_mode.name(),
+        h.log2_nodes,
+        h.attributes,
+        h.seed,
+        h.setup_ms,
+        h.setup_threads,
+    );
+    Ok(())
+}
+
+/// `magquilt artifact info <file>`: describe a setup artifact without
+/// hydrating a run from it.
+fn cmd_artifact(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    match args.positional(0) {
+        Some("info") => {
+            let path = args
+                .positional(1)
+                .ok_or_else(|| anyhow!("usage: magquilt artifact info <file>"))?;
+            print_artifact_info(Path::new(path))
+        }
+        _ => bail!("usage: magquilt artifact info <file>"),
+    }
+}
+
+/// Full decode + describe of one artifact file (also what
+/// `magquilt stats <file>.art` prints). Loading validates the integrity
+/// hash, so a clean printout doubles as a corruption check.
+fn print_artifact_info(path: &Path) -> Result<()> {
+    let bytes = std::fs::metadata(path)
+        .with_context(|| format!("reading setup artifact {}", path.display()))?
+        .len();
+    let artifact = crate::setup::SetupArtifact::load(path)?;
+    let h = artifact.header();
+    println!("artifact: {} ({} bytes, integrity OK)", path.display(), bytes);
+    println!("identity: {}", artifact.hash_hex());
+    println!(
+        "model: n=2^{} d={} mu={} theta={:?}",
+        h.log2_nodes, h.attributes, h.mu, h.theta
+    );
+    println!(
+        "run: sampler={} pieces={} attrs={} seed={}",
+        h.sampler.name(),
+        h.piece_mode.name(),
+        h.attr_mode.name(),
+        h.seed
+    );
+    println!(
+        "payload: {} node configuration(s), partition of {} set(s) over {} node(s), \
+         product DAG: {}",
+        artifact.attrs().num_nodes(),
+        artifact.partition().size(),
+        artifact.partition().num_nodes(),
+        if artifact.conditioner().is_some() { "yes" } else { "no" },
+    );
+    println!(
+        "provenance: built in {:.1} ms on {} setup thread(s)",
+        h.setup_ms, h.setup_threads
     );
     Ok(())
 }
@@ -450,6 +589,7 @@ fn cmd_shard_worker(raw: &[String]) -> Result<()> {
     };
     let opts = dist::WorkerOptions {
         resume: args.has_flag("resume"),
+        artifact: args.get("artifact").map(PathBuf::from),
         fault: args.get("inject-fault").map(dist::FaultPlan::parse).transpose()?,
     };
     // The heartbeat tells a supervising driver this process is alive;
@@ -598,9 +738,30 @@ fn cmd_merge_segments(raw: &[String]) -> Result<()> {
 }
 
 /// The default path: collect the graph in memory, optionally write/stat it.
-fn cmd_generate_collect(args: &Args, params: &MagmParams, run: &RunSpec) -> Result<()> {
+fn cmd_generate_collect(
+    args: &Args,
+    model: &ModelSpec,
+    params: &MagmParams,
+    run: &RunSpec,
+) -> Result<()> {
     let start = std::time::Instant::now();
-    let graph = sample_with(params, run)?;
+    let graph = match &run.artifact {
+        Some(p) => {
+            let coord = match run.sampler {
+                SamplerKind::Quilt | SamplerKind::Hybrid => coordinator_from(run),
+                other => bail!(
+                    "--artifact needs the quilt or hybrid sampler, not {}",
+                    other.name()
+                ),
+            };
+            let (artifact, load_ms) = obtain_artifact(model, run, &coord, Path::new(p))?;
+            let report = coord.sample_with_artifact(artifact, load_ms)?;
+            warn_dropped(report.dropped_resamples);
+            print_setup(&report.setup);
+            report.graph
+        }
+        None => sample_with(params, run)?,
+    };
     let ms = start.elapsed().as_secs_f64() * 1e3;
     println!(
         "sampled {} edges over {} nodes in {:.1} ms ({:.0} edges/s)",
@@ -627,19 +788,25 @@ fn cmd_generate_collect(args: &Args, params: &MagmParams, run: &RunSpec) -> Resu
 }
 
 /// Degrees-and-counts-only run: the graph is never held in memory.
-fn cmd_generate_counting(params: &MagmParams, run: &RunSpec) -> Result<()> {
+fn cmd_generate_counting(model: &ModelSpec, params: &MagmParams, run: &RunSpec) -> Result<()> {
     if run.output.is_some() {
         bail!("--sink counting never writes a graph; drop --output or use --sink binary");
     }
     let coord = coordinator_for(run)?;
-    let (counts, stats) = match run.sampler {
-        SamplerKind::Quilt => {
-            coord.sample_quilt_with_sink(params, run.seed, CountingSink::new())?
+    let (counts, stats) = match &run.artifact {
+        Some(p) => {
+            let (artifact, load_ms) = obtain_artifact(model, run, &coord, Path::new(p))?;
+            coord.sample_with_artifact_sink(artifact, load_ms, CountingSink::new())?
         }
-        SamplerKind::Hybrid => {
-            coord.sample_hybrid_with_sink(params, run.seed, CountingSink::new())?
-        }
-        _ => unreachable!("coordinator_for rejects other samplers"),
+        None => match run.sampler {
+            SamplerKind::Quilt => {
+                coord.sample_quilt_with_sink(params, run.seed, CountingSink::new())?
+            }
+            SamplerKind::Hybrid => {
+                coord.sample_hybrid_with_sink(params, run.seed, CountingSink::new())?
+            }
+            _ => unreachable!("coordinator_for rejects other samplers"),
+        },
     };
     warn_dropped(stats.dropped_resamples);
     print_setup(&stats.setup);
@@ -663,7 +830,12 @@ fn cmd_generate_counting(params: &MagmParams, run: &RunSpec) -> Result<()> {
 }
 
 /// Stream the sample straight into the binary edge-list file.
-fn cmd_generate_binary(args: &Args, params: &MagmParams, run: &RunSpec) -> Result<()> {
+fn cmd_generate_binary(
+    args: &Args,
+    model: &ModelSpec,
+    params: &MagmParams,
+    run: &RunSpec,
+) -> Result<()> {
     if args.has_flag("stats") {
         bail!("--stats needs the collect sink; run `magquilt stats <file>` on the output");
     }
@@ -681,10 +853,16 @@ fn cmd_generate_binary(args: &Args, params: &MagmParams, run: &RunSpec) -> Resul
     if let Some(bytes) = run.spill_budget {
         sink = sink.spill_budget(bytes);
     }
-    let (written, stats) = match run.sampler {
-        SamplerKind::Quilt => coord.sample_quilt_with_sink(params, run.seed, sink)?,
-        SamplerKind::Hybrid => coord.sample_hybrid_with_sink(params, run.seed, sink)?,
-        _ => unreachable!("coordinator_for rejects other samplers"),
+    let (written, stats) = match &run.artifact {
+        Some(p) => {
+            let (artifact, load_ms) = obtain_artifact(model, run, &coord, Path::new(p))?;
+            coord.sample_with_artifact_sink(artifact, load_ms, sink)?
+        }
+        None => match run.sampler {
+            SamplerKind::Quilt => coord.sample_quilt_with_sink(params, run.seed, sink)?,
+            SamplerKind::Hybrid => coord.sample_hybrid_with_sink(params, run.seed, sink)?,
+            _ => unreachable!("coordinator_for rejects other samplers"),
+        },
     };
     warn_dropped(stats.dropped_resamples);
     print_setup(&stats.setup);
@@ -715,16 +893,22 @@ fn ensure_parent_dir(path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// A coordinator configured from the run spec (no sampler gate — let the
+/// caller produce the right error for its context).
+fn coordinator_from(run: &RunSpec) -> Coordinator {
+    Coordinator::new()
+        .workers(run.workers)
+        .shards(run.shards)
+        .setup_threads(run.setup_threads)
+        .attr_mode(run.effective_attr_mode())
+        .piece_mode(run.piece_mode)
+}
+
 /// A coordinator configured from the run spec; the streaming sinks only
 /// make sense for the coordinated samplers.
 fn coordinator_for(run: &RunSpec) -> Result<Coordinator> {
     match run.sampler {
-        SamplerKind::Quilt | SamplerKind::Hybrid => Ok(Coordinator::new()
-            .workers(run.workers)
-            .shards(run.shards)
-            .setup_threads(run.setup_threads)
-            .attr_mode(run.effective_attr_mode())
-            .piece_mode(run.piece_mode)),
+        SamplerKind::Quilt | SamplerKind::Hybrid => Ok(coordinator_from(run)),
         other => bail!(
             "sink counting|binary needs the quilt or hybrid sampler, not {}",
             other.name()
@@ -732,8 +916,57 @@ fn coordinator_for(run: &RunSpec) -> Result<Coordinator> {
     }
 }
 
-/// One-line setup-pipeline timing breakdown (leader-side phases).
+/// Load the setup artifact at `path` (cross-checked against this run's
+/// identity), or build and persist it when the file is absent. Returns
+/// the artifact plus the load time (0.0 on a fresh build).
+fn obtain_artifact(
+    model: &ModelSpec,
+    run: &RunSpec,
+    coord: &Coordinator,
+    path: &Path,
+) -> Result<(crate::setup::SetupArtifact, f64)> {
+    if path.exists() {
+        let expected = crate::setup::ArtifactHeader::from_model(
+            model,
+            run.seed,
+            run.sampler,
+            run.piece_mode,
+            run.effective_attr_mode(),
+        );
+        let start = std::time::Instant::now();
+        let artifact = crate::setup::SetupArtifact::load(path)?;
+        let load_ms = start.elapsed().as_secs_f64() * 1e3;
+        artifact.check_matches(&expected)?;
+        eprintln!("artifact: loaded {} ({})", path.display(), artifact.hash_hex());
+        Ok((artifact, load_ms))
+    } else {
+        let artifact = coord.build_setup(model, run.seed, run.sampler)?;
+        ensure_parent_dir(path)?;
+        artifact.save(path)?;
+        eprintln!(
+            "artifact: built and wrote {} ({}) — later runs will load it",
+            path.display(),
+            artifact.hash_hex()
+        );
+        Ok((artifact, 0.0))
+    }
+}
+
+/// One-line setup-pipeline timing breakdown (leader-side phases). A
+/// hydrated run prints the artifact identity instead of phase timings —
+/// the non-zero hash is the visible witness that setup was skipped.
 fn print_setup(setup: &crate::coordinator::SetupStats) {
+    if setup.artifact_hash != 0 {
+        println!(
+            "setup: artifact {:016x} hydrated in {:.1} ms — attrs/partition/tries/dag skipped \
+             ({} setup threads at build, {} attrs)",
+            setup.artifact_hash,
+            setup.artifact_load_ms,
+            setup.setup_threads,
+            setup.attr_mode.name(),
+        );
+        return;
+    }
     println!(
         "setup: attrs {:.1} ms | partition {:.1} ms | tries {:.1} ms (merge {:.1} ms) \
          | dag {:.1} ms ({} setup threads, {} attrs)",
@@ -817,6 +1050,12 @@ fn cmd_stats(raw: &[String]) -> Result<()> {
     let path = Path::new(path);
     if path.is_dir() {
         return cmd_stats_segments(&args, path);
+    }
+    if path
+        .file_name()
+        .is_some_and(|n| crate::setup::is_artifact_file(&n.to_string_lossy()))
+    {
+        return print_artifact_info(path);
     }
     let graph = read_graph_sniffed(path)?;
     let summary = summarize(&graph, 2000, 0);
@@ -1165,5 +1404,76 @@ mod tests {
     #[test]
     fn unknown_command_fails() {
         assert!(run(&s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn artifact_flag_lands_in_run_spec() {
+        let a = Args::parse(&s(&["--artifact", "cache/setup.art"]), &[]).unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.artifact.as_deref(), Some("cache/setup.art"));
+        let a = Args::parse(&s(&[]), &[]).unwrap();
+        let (_, run) = specs_from_args(&a).unwrap();
+        assert_eq!(run.artifact, None);
+    }
+
+    #[test]
+    fn setup_and_artifact_round_trip_through_cli() {
+        let dir = std::env::temp_dir().join("magquilt_cli_artifact");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let art = dir.join("setup.art");
+        let art_s = art.to_string_lossy().into_owned();
+        run(&s(&["setup", "--log2-nodes", "6", "--seed", "9", "--out", &art_s])).unwrap();
+        assert!(art.exists());
+        // Describe it — both spellings decode (and integrity-check) it.
+        run(&s(&["artifact", "info", &art_s])).unwrap();
+        run(&s(&["stats", &art_s])).unwrap();
+        // A hydrated sample is byte-identical to a fresh one.
+        let out_a = dir.join("a.bin").to_string_lossy().into_owned();
+        let out_f = dir.join("f.bin").to_string_lossy().into_owned();
+        run(&s(&[
+            "sample", "--log2-nodes", "6", "--seed", "9", "--artifact", &art_s, "--out", &out_a,
+        ]))
+        .unwrap();
+        run(&s(&["sample", "--log2-nodes", "6", "--seed", "9", "--out", &out_f])).unwrap();
+        assert_eq!(
+            std::fs::read(dir.join("a.bin")).unwrap(),
+            std::fs::read(dir.join("f.bin")).unwrap()
+        );
+        // --artifact on a missing path builds and persists it first.
+        let built = dir.join("built.art");
+        let built_s = built.to_string_lossy().into_owned();
+        let out_b = dir.join("b.bin").to_string_lossy().into_owned();
+        run(&s(&[
+            "sample", "--log2-nodes", "6", "--seed", "9", "--artifact", &built_s, "--out", &out_b,
+        ]))
+        .unwrap();
+        assert!(built.exists(), "--artifact persists a freshly built prologue");
+        assert_eq!(
+            std::fs::read(dir.join("b.bin")).unwrap(),
+            std::fs::read(dir.join("f.bin")).unwrap()
+        );
+        // Mismatched run parameters are rejected, not silently resampled.
+        let err = run(&s(&[
+            "sample", "--log2-nodes", "6", "--seed", "10", "--artifact", &art_s, "--out", &out_a,
+        ]))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("does not match"), "{err:#}");
+    }
+
+    #[test]
+    fn setup_and_artifact_misuse_are_errors() {
+        // No prologue exists for the naive samplers.
+        assert!(run(&s(&["setup", "--log2-nodes", "6", "--sampler", "naive"])).is_err());
+        assert!(run(&s(&[
+            "sample", "--log2-nodes", "6", "--sampler", "naive", "--artifact", "/tmp/x.art"
+        ]))
+        .is_err());
+        // artifact needs a subcommand and a file.
+        assert!(run(&s(&["artifact"])).is_err());
+        assert!(run(&s(&["artifact", "info"])).is_err());
+        assert!(run(&s(&["artifact", "info", "/nonexistent/setup.art"])).is_err());
+        // setup from a missing plan manifest.
+        assert!(run(&s(&["setup", "--plan", "/nonexistent/plan.toml"])).is_err());
     }
 }

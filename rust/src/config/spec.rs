@@ -192,6 +192,13 @@ pub struct RunSpec {
     pub worker_backoff_ms: u64,
     /// Number of repeated samples (experiments average over trials).
     pub trials: u32,
+    /// Path to a serialized setup artifact (`magquilt setup --out F`).
+    /// When set, runs hydrate the deterministic prologue from this file
+    /// instead of recomputing it (building and saving it on first use);
+    /// distributed drivers hand it to every worker. A cache location
+    /// only — the artifact's own identity hash guards against mismatch,
+    /// so this field never influences output bytes.
+    pub artifact: Option<String>,
 }
 
 impl RunSpec {
@@ -217,6 +224,7 @@ impl RunSpec {
             worker_retries: 2,
             worker_backoff_ms: 500,
             trials: 1,
+            artifact: None,
         }
     }
 
@@ -318,6 +326,11 @@ impl RunSpec {
         if let Some(v) = sec.get("trials") {
             spec.trials =
                 v.as_int().ok_or_else(|| anyhow!("run.trials must be an integer"))? as u32;
+        }
+        if let Some(v) = sec.get("artifact") {
+            spec.artifact = Some(
+                v.as_str().ok_or_else(|| anyhow!("run.artifact must be a string"))?.to_string(),
+            );
         }
         Ok(spec)
     }
@@ -439,6 +452,16 @@ mod tests {
         let bad = parse_toml("[run]\nspill_budget = -5\n").unwrap();
         assert!(RunSpec::from_section(bad.get("run")).is_err());
         let bad = parse_toml("[run]\nspill_dir = 7\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
+    }
+
+    #[test]
+    fn artifact_path_parses_from_config() {
+        let m = parse_toml("[run]\nartifact = \"setup.art\"\n").unwrap();
+        let spec = RunSpec::from_section(m.get("run")).unwrap();
+        assert_eq!(spec.artifact.as_deref(), Some("setup.art"));
+        assert_eq!(RunSpec::default_spec().artifact, None);
+        let bad = parse_toml("[run]\nartifact = 3\n").unwrap();
         assert!(RunSpec::from_section(bad.get("run")).is_err());
     }
 

@@ -30,6 +30,15 @@
 //! Per-phase wall-clock lands in [`SetupStats`] (on [`RunStats`] /
 //! [`SampleReport`]), surfacing where setup time goes.
 //!
+//! The whole prologue can also be **built once and reused**:
+//! [`Coordinator::build_setup`] packages it as a content-addressed
+//! [`crate::setup::SetupArtifact`] file, and
+//! [`Coordinator::plan_from_artifact`] hydrates a plan from one —
+//! skipping every setup phase while producing byte-identical output
+//! ([`SetupStats::artifact_hash`] is the non-zero witness that the
+//! pipeline was skipped). See the [`crate::setup`] module docs for the
+//! format and the cross-check contract.
+//!
 //! # Phase 2 — piece sampling and merge
 //!
 //! The quilting algorithm is embarrassingly parallel at the piece level —

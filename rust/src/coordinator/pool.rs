@@ -5,13 +5,17 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
+use anyhow::{bail, Result};
+
+use crate::config::{ModelSpec, SamplerKind};
 use crate::graph::{summarize_spill, CollectSink, Edge, EdgeList, EdgeSink, NodeId,
                    ShardMergeStats, ShardMerger, ShardSpec, SpillSummary};
-use crate::kpgm::{BallDropSampler, ConditionedBallDropSampler};
+use crate::kpgm::{BallDropSampler, ConditionedBallDropSampler, Initiator};
 use crate::magm::{AttrSampleMode, AttributeAssignment, MagmParams};
 use crate::quilt::{sample_er_block, HybridPlan, HybridSampler, Partition, PieceBackend,
                    PieceJob, PieceMode, QuiltSampler};
 use crate::rng::Rng;
+use crate::setup::{ArtifactHeader, SetupArtifact};
 
 /// Reference to a node block in a hybrid plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,6 +70,14 @@ pub struct SetupStats {
     pub setup_threads: usize,
     /// How the attribute assignment consumed randomness.
     pub attr_mode: AttrSampleMode,
+    /// Identity hash of the [`crate::setup::SetupArtifact`] this plan was
+    /// hydrated from, or 0 for a fresh setup run. Non-zero proves the
+    /// setup pipeline was *skipped*: the phase timings above are then the
+    /// original build's provenance-free zeros, not re-run phases.
+    pub artifact_hash: u64,
+    /// Wall-clock spent loading + validating the artifact (0 for fresh
+    /// runs) — the replacement cost for the skipped pipeline.
+    pub artifact_load_ms: f64,
 }
 
 impl Default for SetupStats {
@@ -78,6 +90,8 @@ impl Default for SetupStats {
             dag_ms: 0.0,
             setup_threads: 1,
             attr_mode: AttrSampleMode::Sequential,
+            artifact_hash: 0,
+            artifact_load_ms: 0.0,
         }
     }
 }
@@ -426,6 +440,8 @@ impl Coordinator {
                 dag_ms,
                 setup_threads: st,
                 attr_mode: self.attr_mode,
+                artifact_hash: 0,
+                artifact_load_ms: 0.0,
             },
         };
         plan.order_by_cost();
@@ -471,38 +487,7 @@ impl Coordinator {
         let partition_ms = start.elapsed().as_secs_f64() * 1e3;
         let (conditioner, trie_ms, trie_merge_ms, dag_ms) =
             self.build_conditioner(&mut partition, params, st);
-        let mut jobs: Vec<Job> = QuiltSampler::new(params.clone())
-            .plan(&partition)
-            .into_iter()
-            .map(Job::Piece)
-            .collect();
-        let mut er_id = 0u64;
-        for hi in 0..plan.heavy.len() {
-            for hj in 0..plan.heavy.len() {
-                jobs.push(Job::ErBlock {
-                    src: BlockRef::Heavy(hi),
-                    dst: BlockRef::Heavy(hj),
-                    fork_id: er_id,
-                });
-                er_id += 1;
-            }
-        }
-        for li in 0..plan.light.len() {
-            for hj in 0..plan.heavy.len() {
-                jobs.push(Job::ErBlock {
-                    src: BlockRef::Light(li),
-                    dst: BlockRef::Heavy(hj),
-                    fork_id: er_id,
-                });
-                er_id += 1;
-                jobs.push(Job::ErBlock {
-                    src: BlockRef::Heavy(hj),
-                    dst: BlockRef::Light(li),
-                    fork_id: er_id,
-                });
-                er_id += 1;
-            }
-        }
+        let jobs = assemble_hybrid_jobs(params, &partition, &plan);
         let mut job_plan = JobPlan {
             jobs,
             partition,
@@ -519,6 +504,8 @@ impl Coordinator {
                 dag_ms,
                 setup_threads: st,
                 attr_mode: self.attr_mode,
+                artifact_hash: 0,
+                artifact_load_ms: 0.0,
             },
         };
         job_plan.order_by_cost();
@@ -566,6 +553,179 @@ impl Coordinator {
         let mut plan = self.plan_hybrid(params, &attrs, seed);
         plan.setup.attrs_ms = attrs_ms;
         self.run_with_sink(plan, sink)
+    }
+
+    /// Run the full deterministic setup prologue — attributes, partition
+    /// (full for quilt, the §5 W subset for hybrid), and in conditioned
+    /// mode the tries + product DAG — and package it as a
+    /// [`SetupArtifact`] ready to [`SetupArtifact::save`].
+    ///
+    /// Only the homogeneous MAGM of the CLI config surface is supported
+    /// (the artifact header stores the [`ModelSpec`] fields; a
+    /// heterogeneous [`MagmParams`] has no such compact identity). The
+    /// dense config→set index is deliberately **not** built here: it is
+    /// a derived cache the hydration path rebuilds, so the artifact stays
+    /// smaller and the build faster.
+    pub fn build_setup(
+        &self,
+        model: &ModelSpec,
+        seed: u64,
+        sampler: SamplerKind,
+    ) -> Result<SetupArtifact> {
+        let start = Instant::now();
+        let params = MagmParams::homogeneous(
+            Initiator::new(model.theta),
+            model.mu,
+            model.num_nodes(),
+            model.attributes,
+        );
+        let st = self.effective_setup_threads();
+        let (attrs, _attrs_ms) = self.sample_attrs(&params, seed);
+        let mut partition = match sampler {
+            SamplerKind::Quilt => Partition::build_parallel(attrs.configs(), st),
+            SamplerKind::Hybrid => {
+                // The hybrid split is a pure function of the attrs, so
+                // only its W-subset partition needs to be persisted; the
+                // hydration path re-derives the split itself.
+                let plan = HybridSampler::new(params.clone()).seed(seed).plan(&attrs);
+                Partition::build_subset_parallel(attrs.configs(), &plan.w_nodes(), st)
+            }
+            other => bail!(
+                "setup artifacts cover the quilt and hybrid samplers; `{}` has no \
+                 partition prologue to persist",
+                other.name()
+            ),
+        };
+        let (conditioner, _trie_ms, _trie_merge_ms, _dag_ms) =
+            self.build_conditioner(&mut partition, &params, st);
+        let mut header =
+            ArtifactHeader::from_model(model, seed, sampler, self.piece_mode, self.attr_mode);
+        header.setup_threads = st;
+        header.setup_ms = start.elapsed().as_secs_f64() * 1e3;
+        Ok(SetupArtifact::new(header, attrs, partition, conditioner))
+    }
+
+    /// Hydrate a [`JobPlan`] from a setup artifact, **skipping the whole
+    /// setup pipeline**: attrs, partition, tries, and DAG come straight
+    /// from the artifact; only the derived pieces are recomputed (the
+    /// dense index, the job list, and — for hybrid — the split, a pure
+    /// function of the attrs). The resulting plan samples byte-identical
+    /// output to one built fresh under the same model/seed/modes.
+    ///
+    /// `load_ms` is the wall-clock the caller spent loading + validating
+    /// the artifact; it lands in [`SetupStats::artifact_load_ms`], and
+    /// [`SetupStats::artifact_hash`] is set to the artifact's identity
+    /// hash (non-zero is the "setup was skipped" witness).
+    ///
+    /// The artifact's piece and attr modes must match this coordinator's
+    /// — a conditioned run cannot borrow a rejection artifact's partition
+    /// (no DAG), and an attr-mode mismatch means a different assignment
+    /// than the seed would sample here.
+    pub fn plan_from_artifact(
+        &self,
+        artifact: SetupArtifact,
+        load_ms: f64,
+    ) -> Result<JobPlan> {
+        let (header, attrs, mut partition, conditioner) = artifact.into_parts();
+        if header.piece_mode != self.piece_mode {
+            bail!(
+                "setup artifact was built for piece mode `{}`, this run wants `{}` — \
+                 regenerate with `magquilt setup`",
+                header.piece_mode.name(),
+                self.piece_mode.name()
+            );
+        }
+        if header.attr_mode != self.attr_mode {
+            bail!(
+                "setup artifact was built for attr mode `{}`, this run wants `{}` — \
+                 regenerate with `magquilt setup`",
+                header.attr_mode.name(),
+                self.attr_mode.name()
+            );
+        }
+        if header.piece_mode == PieceMode::Conditioned && conditioner.is_none() {
+            bail!("conditioned setup artifact is missing its product DAG");
+        }
+        let params = MagmParams::homogeneous(
+            Initiator::new(header.theta),
+            header.mu,
+            header.num_nodes(),
+            header.attributes,
+        );
+        crate::quilt::maybe_build_dense_index(&mut partition, params.depth());
+        let setup = SetupStats {
+            attrs_ms: 0.0,
+            partition_ms: 0.0,
+            trie_ms: 0.0,
+            trie_merge_ms: 0.0,
+            dag_ms: 0.0,
+            setup_threads: header.setup_threads.max(1),
+            attr_mode: header.attr_mode,
+            artifact_hash: header.hash64(),
+            artifact_load_ms: load_ms,
+        };
+        let seed = header.seed;
+        let mut plan = match header.sampler {
+            SamplerKind::Quilt => {
+                let jobs = QuiltSampler::new(params.clone())
+                    .plan(&partition)
+                    .into_iter()
+                    .map(Job::Piece)
+                    .collect();
+                JobPlan {
+                    jobs,
+                    partition,
+                    hybrid: None,
+                    params,
+                    seed,
+                    mode: self.piece_mode,
+                    conditioner,
+                    setup,
+                }
+            }
+            SamplerKind::Hybrid => {
+                let hybrid = HybridSampler::new(params.clone()).seed(seed).plan(&attrs);
+                let jobs = assemble_hybrid_jobs(&params, &partition, &hybrid);
+                JobPlan {
+                    jobs,
+                    partition,
+                    hybrid: Some(hybrid),
+                    params,
+                    seed,
+                    mode: self.piece_mode,
+                    conditioner,
+                    setup,
+                }
+            }
+            other => bail!(
+                "setup artifact names sampler `{}`, which has no artifact-backed plan",
+                other.name()
+            ),
+        };
+        plan.order_by_cost();
+        Ok(plan)
+    }
+
+    /// Sample from a hydrated artifact, collecting the graph in memory.
+    /// See [`Self::plan_from_artifact`] for the equivalence contract.
+    pub fn sample_with_artifact(
+        &self,
+        artifact: SetupArtifact,
+        load_ms: f64,
+    ) -> Result<SampleReport> {
+        let plan = self.plan_from_artifact(artifact, load_ms)?;
+        Ok(self.run(plan))
+    }
+
+    /// Sample from a hydrated artifact, delivering edges to `sink`.
+    pub fn sample_with_artifact_sink<K: EdgeSink>(
+        &self,
+        artifact: SetupArtifact,
+        load_ms: f64,
+        sink: K,
+    ) -> Result<(K::Output, RunStats)> {
+        let plan = self.plan_from_artifact(artifact, load_ms)?;
+        Ok(self.run_with_sink(plan, sink)?)
     }
 
     /// Execute a plan on the pool, collecting the merged graph in memory.
@@ -963,6 +1123,50 @@ fn block(plan: &HybridPlan, r: BlockRef) -> (u64, &[NodeId]) {
     }
 }
 
+/// Assemble the §5 hybrid job list: W-subset quilt pieces first, then the
+/// ER blocks (heavy×heavy, then light↔heavy both directions) with
+/// sequential fork ids. Shared by [`Coordinator::plan_hybrid`] and the
+/// artifact hydration path so both derive bit-identical job streams.
+fn assemble_hybrid_jobs(
+    params: &MagmParams,
+    partition: &Partition,
+    plan: &HybridPlan,
+) -> Vec<Job> {
+    let mut jobs: Vec<Job> = QuiltSampler::new(params.clone())
+        .plan(partition)
+        .into_iter()
+        .map(Job::Piece)
+        .collect();
+    let mut er_id = 0u64;
+    for hi in 0..plan.heavy.len() {
+        for hj in 0..plan.heavy.len() {
+            jobs.push(Job::ErBlock {
+                src: BlockRef::Heavy(hi),
+                dst: BlockRef::Heavy(hj),
+                fork_id: er_id,
+            });
+            er_id += 1;
+        }
+    }
+    for li in 0..plan.light.len() {
+        for hj in 0..plan.heavy.len() {
+            jobs.push(Job::ErBlock {
+                src: BlockRef::Light(li),
+                dst: BlockRef::Heavy(hj),
+                fork_id: er_id,
+            });
+            er_id += 1;
+            jobs.push(Job::ErBlock {
+                src: BlockRef::Heavy(hj),
+                dst: BlockRef::Light(li),
+                fork_id: er_id,
+            });
+            er_id += 1;
+        }
+    }
+    jobs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1259,6 +1463,89 @@ mod tests {
         assert_eq!(rep.spill.spill_runs, 0);
         assert_eq!(rep.spill.spill_bytes, 0);
         assert!(rep.shard_stats.iter().all(|s| s.spill_runs == 0 && s.spill_bytes == 0));
+    }
+
+    fn spec(log2_nodes: u32, attributes: u32, mu: f64) -> ModelSpec {
+        let mut m = ModelSpec::default_spec();
+        m.log2_nodes = log2_nodes;
+        m.attributes = attributes;
+        m.mu = mu;
+        m
+    }
+
+    fn spec_params(m: &ModelSpec) -> MagmParams {
+        MagmParams::homogeneous(Initiator::new(m.theta), m.mu, m.num_nodes(), m.attributes)
+    }
+
+    #[test]
+    fn artifact_hydrated_equals_fresh_setup_sweep() {
+        // The tentpole guarantee: a coordinator hydrated from a (wire
+        // round-tripped) setup artifact produces bit-for-bit the output
+        // of one that ran fresh setup — for both samplers, both piece
+        // modes, and every shard/worker combination.
+        for sampler in [SamplerKind::Quilt, SamplerKind::Hybrid] {
+            for mode in [PieceMode::Conditioned, PieceMode::Rejection] {
+                let m = spec(8, 8, if sampler == SamplerKind::Hybrid { 0.85 } else { 0.5 });
+                let p = spec_params(&m);
+                let art =
+                    Coordinator::new().piece_mode(mode).build_setup(&m, 51, sampler).unwrap();
+                // Hydrate from decoded bytes so the sweep exercises the
+                // wire format end to end, not just the in-memory struct.
+                let art = SetupArtifact::from_bytes(&art.to_bytes()).unwrap();
+                for shards in [1usize, 2, 4] {
+                    for workers in [1usize, 2, 4] {
+                        let tag = format!("{sampler:?}/{mode:?} S={shards} W={workers}");
+                        let coord =
+                            Coordinator::new().workers(workers).shards(shards).piece_mode(mode);
+                        let fresh = match sampler {
+                            SamplerKind::Quilt => coord.sample_quilt(&p, 51),
+                            _ => coord.sample_hybrid(&p, 51),
+                        };
+                        assert_eq!(fresh.setup.artifact_hash, 0, "fresh run, no hash ({tag})");
+                        let rep = coord.sample_with_artifact(art.clone(), 1.5).unwrap();
+                        assert_eq!(rep.graph, fresh.graph, "{tag}");
+                        // Hydration skipped the pipeline and says so.
+                        assert_eq!(rep.setup.artifact_hash, art.hash64(), "{tag}");
+                        assert_eq!(rep.setup.artifact_load_ms, 1.5, "{tag}");
+                        assert_eq!(rep.setup.partition_ms, 0.0, "{tag}");
+                        assert_eq!(rep.setup.dag_ms, 0.0, "{tag}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn artifact_mode_mismatches_are_rejected() {
+        let m = spec(7, 6, 0.5);
+        let art = Coordinator::new().build_setup(&m, 5, SamplerKind::Quilt).unwrap();
+        let err = Coordinator::new()
+            .piece_mode(PieceMode::Rejection)
+            .plan_from_artifact(art.clone(), 0.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("piece mode"), "{err}");
+        let err = Coordinator::new()
+            .attr_mode(AttrSampleMode::Chunked)
+            .plan_from_artifact(art, 0.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("attr mode"), "{err}");
+        let err =
+            Coordinator::new().build_setup(&m, 5, SamplerKind::Naive).unwrap_err().to_string();
+        assert!(err.contains("naive"), "{err}");
+    }
+
+    #[test]
+    fn artifact_sink_run_matches_collected() {
+        let m = spec(8, 8, 0.5);
+        let art = Coordinator::new().build_setup(&m, 9, SamplerKind::Quilt).unwrap();
+        let coord = Coordinator::new().workers(2).shards(2);
+        let rep = coord.sample_with_artifact(art.clone(), 0.0).unwrap();
+        let (counts, stats) =
+            coord.sample_with_artifact_sink(art, 0.0, CountingSink::new()).unwrap();
+        assert_eq!(counts.num_edges, rep.graph.num_edges() as u64);
+        assert_eq!(stats.setup.artifact_hash, rep.setup.artifact_hash);
     }
 
     #[test]

@@ -21,6 +21,9 @@
 //! * **stale marker / heartbeat** — completion markers that disagree
 //!   with the segments actually on disk, and leftover liveness beacons;
 //!   removed (a marker is cheap to re-earn by re-running the worker).
+//! * **setup artifact** — a shared `setup-*.art` prologue file
+//!   ([`crate::setup`]); an input the workers read, not run state, and
+//!   self-validating on load; kept.
 //!
 //! Quarantine moves files into a `quarantine/` subdirectory instead of
 //! deleting them: the doctor's job is to make the directory mergeable
@@ -66,6 +69,8 @@ pub enum FileStatus {
     StaleMarker(String),
     /// A leftover liveness beacon.
     StaleHeartbeat,
+    /// A shared setup artifact (`setup-*.art`): an input, not run state.
+    Artifact,
     /// A name the runtime never produces.
     Unrecognized,
 }
@@ -82,6 +87,7 @@ impl FileStatus {
             FileStatus::Misplaced(_) => "misplaced",
             FileStatus::StaleMarker(_) => "stale-marker",
             FileStatus::StaleHeartbeat => "stale-heartbeat",
+            FileStatus::Artifact => "artifact",
             FileStatus::Unrecognized => "unrecognized",
         }
     }
@@ -89,7 +95,7 @@ impl FileStatus {
     /// The repair this status calls for.
     fn remedy(&self) -> Remedy {
         match self {
-            FileStatus::Complete => Remedy::Keep,
+            FileStatus::Complete | FileStatus::Artifact => Remedy::Keep,
             FileStatus::StaleTemp | FileStatus::StaleMarker(_) | FileStatus::StaleHeartbeat => {
                 Remedy::Remove
             }
@@ -227,6 +233,12 @@ pub fn doctor(dir: &Path, plan: Option<&ShardPlan>, fix: bool) -> Result<DoctorR
     for name in &names {
         if name.starts_with("magquilt-tmp-") {
             statuses.insert(name.clone(), FileStatus::StaleTemp);
+            continue;
+        }
+        if crate::setup::is_artifact_file(name) {
+            // A setup artifact is a run *input* (self-validating on load),
+            // not crash residue; never remove or quarantine it.
+            statuses.insert(name.clone(), FileStatus::Artifact);
             continue;
         }
         if parse_meta_file_name(name).is_some() {
@@ -443,6 +455,8 @@ mod tests {
         let marker = marker_file_name(&hash, 0);
         std::fs::write(dir.join("notes.txt"), "?").unwrap();
         std::fs::write(dir.join(super::super::PLAN_FILE), "ignored").unwrap();
+        let artifact = "setup-0011223344556677.art";
+        std::fs::write(dir.join(artifact), b"opaque to the doctor").unwrap();
 
         // Dry run: everything classified, nothing touched.
         let report = doctor(&dir, Some(&plan), false).unwrap();
@@ -461,6 +475,8 @@ mod tests {
         assert_eq!(status_of(&report, &hb).status, FileStatus::StaleHeartbeat);
         assert!(matches!(status_of(&report, &marker).status, FileStatus::StaleMarker(_)));
         assert_eq!(status_of(&report, "notes.txt").status, FileStatus::Unrecognized);
+        assert_eq!(status_of(&report, artifact).status, FileStatus::Artifact);
+        assert_eq!(status_of(&report, artifact).action, DoctorAction::Kept);
         assert_eq!(status_of(&report, temp).action, DoctorAction::WouldRemove);
         assert_eq!(status_of(&report, &foreign).action, DoctorAction::WouldQuarantine);
         assert!(dir.join(&truncated).exists(), "dry run touches nothing");
@@ -472,6 +488,7 @@ mod tests {
         assert_eq!(report.quarantined, 5, "truncated + foreign + ovf + misplaced + notes");
         assert!(dir.join(&good_seg).exists());
         assert!(dir.join(&good_ovf).exists());
+        assert!(dir.join(artifact).exists(), "setup artifacts are inputs, never repaired away");
         assert!(!dir.join(temp).exists());
         assert!(!dir.join(&hb).exists());
         assert!(!dir.join(&marker).exists());

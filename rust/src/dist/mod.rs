@@ -111,7 +111,14 @@
 //! # 1. One plan, anywhere:
 //! magquilt shard-plan --log2-nodes 23 --seed 7 --dist-workers 4 \
 //!          --shards 64 --plan-out plan.toml
-//! # 2. Ship plan.toml to every host; run one worker per host:
+//! # 1b. Optional: run the deterministic setup prologue ONCE and ship the
+//! #     resulting artifact with the plan, so every worker skips its own
+//! #     (identical) setup pipeline. The artifact embeds a content hash
+//! #     cross-checked against the plan, so a stale or mismatched file is
+//! #     refused, never silently used (docs/setup-artifact.md):
+//! magquilt setup --plan plan.toml --out setup.art
+//! # 2. Ship plan.toml (and setup.art) to every host; run one worker per
+//! #    host (append --artifact setup.art to skip per-worker setup):
 //! host0$ magquilt shard-worker --plan plan.toml --worker 0 --segment-dir segs/
 //! host1$ magquilt shard-worker --plan plan.toml --worker 1 --segment-dir segs/
 //! ...
@@ -145,11 +152,12 @@ pub use plan::{ShardPlan, PLAN_FORMAT};
 pub use supervise::{backoff_delay_ms, supervise_workers, Heartbeat, SuperviseOptions,
                     SuperviseReport, WorkerFailure, WorkerOutcome, DEFAULT_STALL_MS,
                     MAX_BACKOFF_MS};
-pub use worker::{heartbeat_file_name, job_owners, marker_file_name, overflow_file_name,
-                 parse_marker, parse_meta_file_name, parse_segment_file_name, run_worker,
-                 run_worker_with, scan_resume_state, segment_file_name, write_marker,
-                 MetaFileInfo, MetaFileKind, ResumeState, SegmentFileInfo, SegmentKind,
-                 SegmentSink, SegmentSummary, WorkerOptions, WorkerReport, MARKER_FORMAT};
+pub use worker::{build_job_plan_from_artifact, build_plan_artifact, heartbeat_file_name,
+                 job_owners, marker_file_name, overflow_file_name, parse_marker,
+                 parse_meta_file_name, parse_segment_file_name, run_worker, run_worker_with,
+                 scan_resume_state, segment_file_name, write_marker, MetaFileInfo,
+                 MetaFileKind, ResumeState, SegmentFileInfo, SegmentKind, SegmentSink,
+                 SegmentSummary, WorkerOptions, WorkerReport, MARKER_FORMAT};
 
 use std::path::Path;
 use std::process::{Command, Stdio};
@@ -292,6 +300,9 @@ pub fn run_distributed_with(
                 .arg(segment_dir)
                 .arg("--resume")
                 .stdin(Stdio::null());
+            if let Some(artifact) = &opts.artifact {
+                cmd.arg("--artifact").arg(artifact);
+            }
             if let Some(spec) = fault {
                 cmd.arg("--inject-fault").arg(spec);
             }

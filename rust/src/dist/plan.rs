@@ -37,15 +37,7 @@ use crate::quilt::PieceMode;
 /// Manifest format version this build writes and accepts.
 pub const PLAN_FORMAT: i64 = 1;
 
-/// FNV-1a 64 over a canonical byte string — deliberately dependency-free
-/// and platform-stable, so plans hashed on one host validate on another.
-fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
-    }
-    h
-}
+use crate::hashutil::fnv1a64;
 
 /// Required key lookup inside one parsed manifest section.
 fn required<'a>(
@@ -148,6 +140,7 @@ pub const RUNSPEC_EXEMPT: &[&str] = &[
     "worker_retries",
     "worker_backoff_ms",
     "trials",
+    "artifact",
 ];
 
 /// Compile-time companion to the fate lists: exhaustively destructures
@@ -187,6 +180,8 @@ fn hash_disposition_witness(plan: &ShardPlan, run: &RunSpec) {
         worker_retries: _,    // RUNSPEC_EXEMPT
         worker_backoff_ms: _, // RUNSPEC_EXEMPT
         trials: _,            // RUNSPEC_EXEMPT
+        artifact: _,          // RUNSPEC_EXEMPT (a cache location; the artifact's own
+                              // identity hash covers the output-determining fields)
     } = run;
 }
 

@@ -104,6 +104,12 @@ pub struct SuperviseOptions {
     /// Heartbeat-silence deadline before a worker counts as stalled
     /// (0 disables stall detection).
     pub stall_ms: u64,
+    /// Shared setup artifact every spawned worker hydrates from
+    /// (`--artifact`), skipping its per-process setup pipeline. `None`
+    /// (the default) re-runs setup in every worker. Hash-exempt like the
+    /// thread knobs: the artifact is cross-checked against the plan, so
+    /// it can never change which bytes a worker derives.
+    pub artifact: Option<PathBuf>,
     /// Deterministic fault injection: pass the spec to this worker's
     /// **first** attempt only (tests / CI). Retries run clean.
     pub fault: Option<(usize, String)>,
@@ -116,6 +122,7 @@ impl SuperviseOptions {
             retries: plan.worker_retries,
             backoff_ms: plan.worker_backoff_ms,
             stall_ms: DEFAULT_STALL_MS,
+            artifact: None,
             fault: None,
         }
     }
@@ -389,7 +396,7 @@ mod tests {
     }
 
     fn opts(retries: usize) -> SuperviseOptions {
-        SuperviseOptions { retries, backoff_ms: 1, stall_ms: 0, fault: None }
+        SuperviseOptions { retries, backoff_ms: 1, stall_ms: 0, artifact: None, fault: None }
     }
 
     #[test]
@@ -488,7 +495,13 @@ mod tests {
     #[test]
     fn stalled_worker_is_killed_and_classified() {
         let dir = fresh_dir("stall");
-        let opts = SuperviseOptions { retries: 0, backoff_ms: 1, stall_ms: 200, fault: None };
+        let opts = SuperviseOptions {
+            retries: 0,
+            backoff_ms: 1,
+            stall_ms: 200,
+            artifact: None,
+            fault: None,
+        };
         // The worker sleeps far past the stall deadline and never beats.
         let start = Instant::now();
         let err = supervise_workers(1, &dir, "00ff00ff00ff00ff", &opts, |_, _| sh("sleep 60"))
@@ -501,7 +514,13 @@ mod tests {
     fn heartbeat_keeps_a_slow_worker_alive() {
         let dir = fresh_dir("beat");
         let hash = "00ff00ff00ff00ff";
-        let opts = SuperviseOptions { retries: 0, backoff_ms: 1, stall_ms: 1500, fault: None };
+        let opts = SuperviseOptions {
+            retries: 0,
+            backoff_ms: 1,
+            stall_ms: 1500,
+            artifact: None,
+            fault: None,
+        };
         // The worker runs well past the stall deadline but beats its
         // heartbeat file the whole time (mirroring what the CLI worker's
         // Heartbeat guard does), so it must NOT be classified as stalled.
@@ -523,6 +542,7 @@ mod tests {
             retries: 1,
             backoff_ms: 1,
             stall_ms: 0,
+            artifact: None,
             fault: Some((1, "crash-after-segments=0".to_string())),
         };
         let mut seen: Vec<(usize, Option<String>)> = Vec::new();

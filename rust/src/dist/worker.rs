@@ -5,7 +5,13 @@
 //! (attributes → partition → tries → product DAG — bit-for-bit identical
 //! on every host), recomputes every job's source span, keeps exactly the
 //! jobs the **ownership rule** assigns to worker `i`, and executes them
-//! through the ordinary pooled coordinator. The only distributed part is
+//! through the ordinary pooled coordinator. With `--artifact F`
+//! ([`WorkerOptions::artifact`]) the setup pipeline is **skipped**
+//! entirely: the worker loads the shared [`crate::setup::SetupArtifact`],
+//! cross-checks its identity hash against the plan's
+//! ([`crate::setup::SetupArtifact::check_matches`]), and hydrates the
+//! same job plan from it — byte-identical output, witnessed by
+//! [`crate::coordinator::SetupStats::artifact_hash`]. The only distributed part is
 //! the sink: a [`SegmentSink`] that writes each finished shard to its own
 //! `MAGQEDG1` file instead of one growing output.
 //!
@@ -479,6 +485,11 @@ pub fn scan_resume_state(dir: &Path, plan: &ShardPlan, worker: usize) -> Result<
             // never inputs); the driver / doctor sweeps them before merge.
             continue;
         }
+        if crate::setup::is_artifact_file(&name) {
+            // A shared setup artifact often lives next to the segments;
+            // it is an input, not run state, and never blocks a resume.
+            continue;
+        }
         if name == super::doctor::QUARANTINE_DIR && entry.path().is_dir() {
             continue;
         }
@@ -687,6 +698,30 @@ pub fn build_job_plan(
     (job_plan, attrs)
 }
 
+/// Build the [`crate::setup::SetupArtifact`] a plan's workers can share,
+/// exactly as the plan prescribes (`magquilt setup` builds through this
+/// so the hash and the payload match what `--artifact` workers expect).
+pub fn build_plan_artifact(plan: &ShardPlan) -> Result<crate::setup::SetupArtifact> {
+    plan_coordinator(plan).build_setup(&plan.model, plan.seed, plan.sampler)
+}
+
+/// As [`build_job_plan`], but hydrated from a setup artifact file instead
+/// of re-running the setup pipeline. The artifact's identity hash is
+/// cross-checked against the header the plan expects before anything is
+/// trusted; `artifact_load_ms` on the resulting plan's
+/// [`crate::coordinator::SetupStats`] records the load + validation cost.
+pub fn build_job_plan_from_artifact(
+    plan: &ShardPlan,
+    coord: &Coordinator,
+    artifact_path: &Path,
+) -> Result<crate::coordinator::JobPlan> {
+    let start = std::time::Instant::now();
+    let artifact = crate::setup::SetupArtifact::load(artifact_path)?;
+    artifact.check_matches(&crate::setup::ArtifactHeader::from_plan(plan))?;
+    let load_ms = start.elapsed().as_secs_f64() * 1e3;
+    coord.plan_from_artifact(artifact, load_ms)
+}
+
 /// The owner worker of every job in `job_plan` under `plan`'s ownership
 /// rule: the worker owning the first shard of the job's source span (a
 /// job with no source nodes emits nothing and belongs to worker 0).
@@ -717,6 +752,9 @@ pub struct WorkerOptions {
     /// rules). Off by default: a plain `run_worker` never reads the
     /// directory.
     pub resume: bool,
+    /// Hydrate the job plan from this setup artifact instead of running
+    /// the setup pipeline (the file's identity hash must match the plan).
+    pub artifact: Option<PathBuf>,
     /// Deterministic fault injection (tests / CI only).
     pub fault: Option<FaultPlan>,
 }
@@ -768,7 +806,11 @@ pub fn run_worker_with(
     }
 
     let coord = plan_coordinator(plan);
-    let (mut job_plan, _attrs) = build_job_plan(plan, &coord);
+    let mut job_plan = match &opts.artifact {
+        Some(path) => build_job_plan_from_artifact(plan, &coord, path)
+            .with_context(|| format!("worker {worker} hydrating its setup artifact"))?,
+        None => build_job_plan(plan, &coord).0,
+    };
     let owners = job_owners(plan, &job_plan);
     let jobs_total = job_plan.len();
     job_plan.retain_jobs(|i| owners[i] == worker);
@@ -1031,6 +1073,65 @@ mod tests {
         let (skip, satisfied) = satisfied_components(6, (0, 3), &spans, &valid);
         assert_eq!(skip, vec![false, false, false, false]);
         assert!(satisfied.is_empty());
+    }
+
+    #[test]
+    fn worker_with_artifact_skips_setup_and_matches_fresh() {
+        use crate::config::{ModelSpec, RunSpec};
+        let mut model = ModelSpec::default_spec();
+        model.log2_nodes = 8;
+        model.attributes = 8;
+        let mut run = RunSpec::default_spec();
+        run.shards = 4;
+        run.seed = 21;
+        let plan = ShardPlan::new(&model, &run, 2).unwrap();
+        let base = std::env::temp_dir().join("magquilt_worker_artifact_test");
+        let _ = std::fs::remove_dir_all(&base);
+
+        // Build + save the shared artifact the way `magquilt setup` does.
+        let art = build_plan_artifact(&plan).unwrap();
+        let art_path =
+            base.join("cache").join(crate::setup::artifact_file_name(&art.hash_hex()));
+        art.save(&art_path).unwrap();
+
+        let fresh_dir = base.join("fresh");
+        let art_dir = base.join("hydrated");
+        let opts =
+            WorkerOptions { artifact: Some(art_path.clone()), ..WorkerOptions::default() };
+        for w in 0..2 {
+            let fresh = run_worker(&plan, w, &fresh_dir).unwrap();
+            let rep = run_worker_with(&plan, w, &art_dir, &opts).unwrap();
+            assert_eq!(rep.summary, fresh.summary, "worker {w}");
+            // The artifact path skipped the setup pipeline and says so.
+            assert_eq!(rep.stats.setup.artifact_hash, art.hash64());
+            assert_eq!(rep.stats.setup.partition_ms, 0.0);
+            assert_eq!(rep.stats.setup.dag_ms, 0.0);
+            assert!(rep.stats.setup.artifact_load_ms > 0.0);
+            assert_eq!(fresh.stats.setup.artifact_hash, 0);
+        }
+        // Every segment file is byte-identical between the two runs.
+        for entry in std::fs::read_dir(&fresh_dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            let a = std::fs::read(fresh_dir.join(&name)).unwrap();
+            let b = std::fs::read(art_dir.join(&name)).unwrap();
+            assert_eq!(a, b, "{name:?}");
+        }
+        // An artifact stored inside the segment directory is skipped by
+        // the resume scan (which bails on unrecognized names).
+        art.save(&art_dir.join("setup-cache.art")).unwrap();
+        let opts_resume = WorkerOptions {
+            artifact: Some(art_path),
+            resume: true,
+            ..WorkerOptions::default()
+        };
+        let rep = run_worker_with(&plan, 0, &art_dir, &opts_resume).unwrap();
+        assert_eq!(rep.jobs_run, 0, "marker fast path after a completed run");
+        // An artifact from a different plan is refused before sampling.
+        run.seed = 22;
+        let other = ShardPlan::new(&model, &run, 2).unwrap();
+        let err = run_worker_with(&other, 0, &base.join("x"), &opts_resume).unwrap_err();
+        assert!(format!("{err:#}").contains("does not match"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

@@ -42,8 +42,11 @@
 //! rejections; each piece draws `≈ m_kl` balls, so total sampling work is
 //! `O(d · |E|)` instead of `O(B² · d · |E_KPGM|)`.
 
+use anyhow::{bail, Result};
+
 use crate::hashutil::FastMap;
 use crate::rng::Rng;
+use crate::setup::wire::{Reader, Writer};
 
 use super::ThetaSeq;
 
@@ -213,6 +216,78 @@ impl ConfigForest {
         memo.levels[level].insert(id, g);
         g
     }
+
+    /// Classes at level 0 (for validating trie roots decoded alongside
+    /// this forest).
+    pub(crate) fn num_root_classes(&self) -> usize {
+        self.levels[0].len()
+    }
+
+    /// Serialize into a setup-artifact body: the class arena level by
+    /// level, in its exact serial interning order (class ids are
+    /// meaningful — the tries and the product DAG index into them). The
+    /// interner maps are derived state and are rebuilt on decode.
+    pub(crate) fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.depth as u32);
+        for level in &self.levels {
+            w.put_u64(level.len() as u64);
+            for node in level {
+                w.put_u32(node.children[0]);
+                w.put_u32(node.children[1]);
+            }
+        }
+    }
+
+    /// Decode the counterpart of [`ConfigForest::encode`] from untrusted
+    /// bytes: validates the leaf level, every child link, and hash-consing
+    /// uniqueness, then rebuilds the per-level interners — so the decoded
+    /// forest compares equal to the source and keeps absorbing
+    /// `register_set`/`adopt_trie` calls exactly as the fresh one would.
+    pub(crate) fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let depth = r.take_u32("forest depth")? as usize;
+        if !(1..=63).contains(&depth) {
+            bail!("artifact body corrupt: forest depth {depth} outside [1, 63]");
+        }
+        let mut levels = Vec::with_capacity(depth + 1);
+        for _ in 0..=depth {
+            let n = r.take_len(8, "forest classes")?;
+            let mut level = Vec::with_capacity(n);
+            for _ in 0..n {
+                let c0 = r.take_u32("forest class child")?;
+                let c1 = r.take_u32("forest class child")?;
+                level.push(ClassNode { children: [c0, c1] });
+            }
+            levels.push(level);
+        }
+        if levels[depth].len() != 1 || levels[depth][0].children != [NONE, NONE] {
+            bail!("artifact body corrupt: forest leaf level is not the single empty-suffix class");
+        }
+        let mut interners: Vec<FastMap<u64, u32>> = (0..=depth)
+            .map(|l| crate::hashutil::fast_map_with_capacity(levels[l].len()))
+            .collect();
+        for level in 0..depth {
+            let next_len = levels[level + 1].len() as u64;
+            for (id, node) in levels[level].iter().enumerate() {
+                let [c0, c1] = node.children;
+                for c in [c0, c1] {
+                    if c != NONE && c as u64 >= next_len {
+                        bail!(
+                            "artifact body corrupt: forest class link {c} outside level {}",
+                            level + 1
+                        );
+                    }
+                }
+                let key = ((c0 as u64) << 32) | c1 as u64;
+                if interners[level].insert(key, id as u32).is_some() {
+                    bail!(
+                        "artifact body corrupt: duplicate hash-consed class in forest level \
+                         {level}"
+                    );
+                }
+            }
+        }
+        Ok(ConfigForest { depth, levels, interners })
+    }
 }
 
 /// Per-source-forest memo for [`ConfigForest::adopt_trie`]: source class
@@ -281,6 +356,47 @@ impl ConfigTrie {
         let mask = self.masks.get(level)?;
         let p = prefix as usize;
         Some((mask[p >> 6] >> (p & 63)) & 1 == 1)
+    }
+
+    /// Serialize into a setup-artifact body.
+    pub(crate) fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.root);
+        w.put_u64(self.num_configs as u64);
+        w.put_u64(self.masks.len() as u64);
+        for mask in &self.masks {
+            for &word in mask {
+                w.put_u64(word);
+            }
+        }
+    }
+
+    /// Decode the counterpart of [`ConfigTrie::encode`] from untrusted
+    /// bytes. Mask levels are gated at build time, so the word counts are
+    /// implied by the level index — a claimed level count beyond the gate
+    /// is rejected before any allocation.
+    pub(crate) fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let root = r.take_u32("trie root")?;
+        let num_configs = usize::try_from(r.take_u64("trie config count")?)
+            .map_err(|_| anyhow::anyhow!("artifact body corrupt: trie config count overflow"))?;
+        let num_levels = usize::try_from(r.take_u64("trie mask levels")?)
+            .map_err(|_| anyhow::anyhow!("artifact body corrupt: trie mask level overflow"))?;
+        if num_levels > MASK_LEVEL_GATE + 1 {
+            bail!(
+                "artifact body corrupt: {num_levels} trie mask levels exceeds the gate \
+                 ({})",
+                MASK_LEVEL_GATE + 1
+            );
+        }
+        let mut masks = Vec::with_capacity(num_levels);
+        for l in 0..num_levels {
+            let words = (1usize << l).div_ceil(64);
+            let mut mask = Vec::with_capacity(words);
+            for _ in 0..words {
+                mask.push(r.take_u64("trie mask word")?);
+            }
+            masks.push(mask);
+        }
+        Ok(ConfigTrie { root, num_configs, masks })
     }
 }
 
@@ -549,6 +665,119 @@ impl ConditionedBallDropSampler {
     pub fn piece(&self, k: usize, l: usize) -> Option<PieceSampler<'_>> {
         assert!(k < self.num_sets && l < self.num_sets, "piece ({k},{l}) out of range");
         self.roots[k * self.num_sets + l].map(|root| PieceSampler { dag: self, root })
+    }
+
+    /// Serialize into a setup-artifact body: pair nodes level by level
+    /// (ids meaningful, as with [`ConfigForest::encode`]), then the
+    /// row-major `B²` piece roots. Thresholds are exact u64s and the
+    /// masses round-trip by bit pattern, so a hydrated DAG drives the
+    /// identical descent draws.
+    pub(crate) fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.depth as u32);
+        w.put_u64(self.num_sets as u64);
+        for level in &self.levels {
+            w.put_u64(level.len() as u64);
+            for node in level {
+                for &c in &node.children {
+                    w.put_u32(c);
+                }
+                for &t in &node.thresholds {
+                    w.put_u64(t);
+                }
+                w.put_u8(node.fallback);
+            }
+        }
+        for root in &self.roots {
+            match root {
+                None => w.put_u8(0),
+                Some(pr) => {
+                    w.put_u8(1);
+                    w.put_u32(pr.node);
+                    w.put_f64(pr.mass);
+                    w.put_f64(pr.mass_sq);
+                    w.put_u64(pr.num_cells);
+                }
+            }
+        }
+    }
+
+    /// Decode the counterpart of
+    /// [`ConditionedBallDropSampler::encode`] from untrusted bytes, with
+    /// every pair-node child link, quadrant fallback, and piece-root id
+    /// bounds-checked (a corrupt link would otherwise panic mid-descent).
+    pub(crate) fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let depth = r.take_u32("dag depth")? as usize;
+        if !(1..=63).contains(&depth) {
+            bail!("artifact body corrupt: dag depth {depth} outside [1, 63]");
+        }
+        let num_sets = usize::try_from(r.take_u64("dag set count")?)
+            .map_err(|_| anyhow::anyhow!("artifact body corrupt: dag set count overflow"))?;
+        let mut levels = Vec::with_capacity(depth);
+        for _ in 0..depth {
+            // 4 children (u32) + 3 thresholds (u64) + fallback (u8).
+            let n = r.take_len(4 * 4 + 3 * 8 + 1, "dag pair nodes")?;
+            let mut nodes = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut children = [0u32; 4];
+                for slot in &mut children {
+                    *slot = r.take_u32("pair-node child")?;
+                }
+                let mut thresholds = [0u64; 3];
+                for slot in &mut thresholds {
+                    *slot = r.take_u64("pair-node threshold")?;
+                }
+                let fallback = r.take_u8("pair-node fallback")?;
+                if fallback > 3 {
+                    bail!("artifact body corrupt: pair-node fallback quadrant {fallback}");
+                }
+                nodes.push(PairNode { children, thresholds, fallback });
+            }
+            levels.push(nodes);
+        }
+        // Child links of level ℓ index level ℓ+1 (the last level's point
+        // into the implicit leaf layer and are never dereferenced).
+        for level in 0..depth.saturating_sub(1) {
+            let next_len = levels[level + 1].len() as u64;
+            for node in &levels[level] {
+                for &c in &node.children {
+                    if c != NONE && c as u64 >= next_len {
+                        bail!(
+                            "artifact body corrupt: pair-node link {c} outside dag level {}",
+                            level + 1
+                        );
+                    }
+                }
+            }
+        }
+        let num_roots = num_sets
+            .checked_mul(num_sets)
+            .ok_or_else(|| anyhow::anyhow!("artifact body corrupt: dag set count overflow"))?;
+        if num_roots > r.remaining() {
+            bail!(
+                "artifact body truncated: dag claims {num_sets}\u{b2} piece roots but only {} \
+                 bytes remain",
+                r.remaining()
+            );
+        }
+        let top = levels.first().map_or(0, |l| l.len());
+        let mut roots = Vec::with_capacity(num_roots);
+        for _ in 0..num_roots {
+            match r.take_u8("piece-root flag")? {
+                0 => roots.push(None),
+                1 => {
+                    let node = r.take_u32("piece-root node")?;
+                    if node as usize >= top {
+                        bail!("artifact body corrupt: piece root {node} outside dag level 0");
+                    }
+                    let mass = r.take_f64("piece-root mass")?;
+                    let mass_sq = r.take_f64("piece-root mass_sq")?;
+                    let num_cells = r.take_u64("piece-root cells")?;
+                    roots.push(Some(PieceRoot { node, mass, mass_sq, num_cells }));
+                }
+                b => bail!("artifact body corrupt: piece-root flag byte {b}"),
+            }
+        }
+        Ok(ConditionedBallDropSampler { depth, num_sets, levels, roots })
     }
 }
 
@@ -828,6 +1057,99 @@ mod tests {
         // Unbudgeted build conditions everything.
         let all = ConditionedBallDropSampler::build(&thetas, &forest, &tries);
         assert!(all.piece(0, 0).is_some());
+    }
+
+    #[test]
+    fn forest_trie_and_dag_round_trip_through_wire() {
+        let d = 6;
+        let thetas = ThetaSeq::homogeneous(Initiator::THETA1, d as u32);
+        let a: Vec<u64> = vec![0, 3, 7, 12, 21, 30, 41, 63];
+        let b: Vec<u64> = vec![3, 8, 21, 31, 41];
+        let (forest, tries) = forest_with(d, &[&a, &b]);
+        let dag = ConditionedBallDropSampler::build(&thetas, &forest, &tries);
+
+        let mut w = Writer::new();
+        forest.encode(&mut w);
+        for t in &tries {
+            t.encode(&mut w);
+        }
+        dag.encode(&mut w);
+        let bytes = w.into_bytes();
+
+        let mut r = Reader::new(&bytes);
+        let forest2 = ConfigForest::decode(&mut r).unwrap();
+        let tries2: Vec<ConfigTrie> =
+            (0..tries.len()).map(|_| ConfigTrie::decode(&mut r).unwrap()).collect();
+        let dag2 = ConditionedBallDropSampler::decode(&mut r).unwrap();
+        assert!(r.is_empty());
+        // Equality includes the forest's interner maps: decode rebuilds
+        // them from the arena, so hash-consing keeps working.
+        assert_eq!(forest2, forest);
+        assert_eq!(tries2, tries);
+        assert_eq!(dag2, dag);
+        // The rebuilt interners dedupe: registering a set already present
+        // returns the existing root instead of growing the arena.
+        let mut forest3 = forest2.clone();
+        let classes_before = forest3.num_classes();
+        let re = forest3.register_set(&a);
+        assert_eq!(re.root(), tries[0].root());
+        assert_eq!(forest3.num_classes(), classes_before);
+        // A hydrated DAG drives the identical descent: same seed, same
+        // cells drawn.
+        let mut r1 = Rng::new(433);
+        let mut r2 = Rng::new(433);
+        let p1 = dag.piece(0, 1).unwrap();
+        let p2 = dag2.piece(0, 1).unwrap();
+        assert_eq!(p1.restricted_mass().to_bits(), p2.restricted_mass().to_bits());
+        for _ in 0..500 {
+            assert_eq!(p1.drop_one(&mut r1), p2.drop_one(&mut r2));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_links_and_flags() {
+        let d = 3;
+        let thetas = ThetaSeq::homogeneous(Initiator::THETA1, d as u32);
+        let (forest, tries) = forest_with(d, &[&[0, 3, 7], &[5]]);
+        let dag = ConditionedBallDropSampler::build(&thetas, &forest, &tries);
+
+        // Forest: a class link pointing outside the next level.
+        let mut w = Writer::new();
+        forest.encode(&mut w);
+        let good = w.into_bytes();
+        assert!(ConfigForest::decode(&mut Reader::new(&good)).is_ok());
+        let mut bad = good.clone();
+        // depth u32, then level-0 count u64, then the first child u32.
+        let child_off = 4 + 8;
+        bad[child_off..child_off + 4].copy_from_slice(&9999u32.to_le_bytes());
+        let err = ConfigForest::decode(&mut Reader::new(&bad)).unwrap_err().to_string();
+        assert!(err.contains("outside level"), "{err}");
+        // Truncation anywhere is an error.
+        assert!(ConfigForest::decode(&mut Reader::new(&good[..good.len() - 3])).is_err());
+
+        // Trie: a mask-level count past the gate is rejected pre-allocation.
+        let mut w = Writer::new();
+        w.put_u32(0);
+        w.put_u64(1);
+        w.put_u64(u64::MAX);
+        let bytes = w.into_bytes();
+        let err = ConfigTrie::decode(&mut Reader::new(&bytes)).unwrap_err().to_string();
+        assert!(err.contains("mask level"), "{err}");
+
+        // DAG: fallback quadrant out of range.
+        let mut w = Writer::new();
+        dag.encode(&mut w);
+        let good = w.into_bytes();
+        assert!(ConditionedBallDropSampler::decode(&mut Reader::new(&good)).is_ok());
+        // depth u32 + num_sets u64 + level-0 count u64, then node 0:
+        // children 16 B + thresholds 24 B, fallback next.
+        let fb_off = 4 + 8 + 8 + 16 + 24;
+        let mut bad = good.clone();
+        bad[fb_off] = 7;
+        let err =
+            ConditionedBallDropSampler::decode(&mut Reader::new(&bad)).unwrap_err().to_string();
+        assert!(err.contains("fallback"), "{err}");
+        assert!(ConditionedBallDropSampler::decode(&mut Reader::new(&good[..fb_off])).is_err());
     }
 
     #[test]

@@ -75,6 +75,7 @@ pub mod quilt;
 pub mod rng;
 pub mod rngtags;
 pub mod runtime;
+pub mod setup;
 pub mod stats;
 
 /// Crate version (mirrors Cargo.toml).

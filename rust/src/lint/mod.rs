@@ -34,7 +34,11 @@
 //!    `fn canonical` or named in `HASH_EXEMPT`, and every `RunSpec` field
 //!    must appear in exactly one of `RUNSPEC_HASHED`/`RUNSPEC_EXEMPT`
 //!    (both in `dist/plan.rs`), so adding a config field without deciding
-//!    its hash fate fails the lint.
+//!    its hash fate fails the lint. The same tripwire covers the setup
+//!    artifact's identity (`setup/mod.rs`): every `ArtifactHeader` field
+//!    must be hashed by its `fn canonical` or named in `ART_HASH_EXEMPT`,
+//!    and the exhaustive-destructuring witness
+//!    (`artifact_hash_disposition_witness`) must name every field.
 //! 6. **Fault hook** — the fault-injection machinery (`FaultPlan`,
 //!    `inject_fault`, `crash_point`) is confined to the I/O and driver
 //!    layers; a reference inside an output-determining module (the rule-3
@@ -813,6 +817,86 @@ pub fn check_plan_hash(
     findings
 }
 
+/// Rule 5 (artifact leg): the setup-artifact hash-drift tripwire.
+/// `setup_src` must declare `ArtifactHeader`, its `fn canonical`,
+/// `ART_HASH_EXEMPT`, and the `artifact_hash_disposition_witness`
+/// destructuring witness. Every header field needs exactly one hash
+/// fate, the exempt list must not go stale, and the witness must name
+/// every field (its destructuring is what makes a new field a compile
+/// error until its fate is decided).
+pub fn check_artifact_hash(setup_path: &str, setup_src: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let missing = |line: usize, message: String| Finding {
+        rule: Rule::HashDrift,
+        file: setup_path.to_string(),
+        line,
+        message,
+    };
+
+    let fields = struct_fields(setup_src, "ArtifactHeader");
+    if fields.is_empty() {
+        findings.push(missing(1, "no `pub struct ArtifactHeader` found".to_string()));
+        return findings;
+    }
+    let Some((canonical, _)) = fn_body(setup_src, "canonical") else {
+        findings.push(missing(1, "no `fn canonical` found to hash ArtifactHeader".to_string()));
+        return findings;
+    };
+    let Some((exempt, exempt_line)) = const_string_list(setup_src, "ART_HASH_EXEMPT") else {
+        findings.push(missing(1, "no `ART_HASH_EXEMPT` list found".to_string()));
+        return findings;
+    };
+    for (field, line) in &fields {
+        let hashed = references_field(&canonical, field);
+        let exempted = exempt.iter().any(|e| e == field);
+        if hashed && exempted {
+            findings.push(missing(
+                *line,
+                format!("ArtifactHeader.{field} is both hashed in canonical() and ART_HASH_EXEMPT"),
+            ));
+        }
+        if !hashed && !exempted {
+            findings.push(missing(
+                *line,
+                format!(
+                    "ArtifactHeader.{field} is neither hashed in canonical() nor named in \
+                     ART_HASH_EXEMPT; decide its hash fate"
+                ),
+            ));
+        }
+    }
+    for entry in &exempt {
+        if !fields.iter().any(|(f, _)| f == entry) {
+            findings.push(missing(
+                exempt_line,
+                format!("ART_HASH_EXEMPT names {entry:?}, which is not an ArtifactHeader field"),
+            ));
+        }
+    }
+    match fn_body(setup_src, "artifact_hash_disposition_witness") {
+        Some((witness, wline)) => {
+            for (field, _) in &fields {
+                if !witness.contains(&format!("{field}:")) {
+                    findings.push(missing(
+                        wline,
+                        format!(
+                            "artifact_hash_disposition_witness does not destructure \
+                             ArtifactHeader.{field}; the witness must stay exhaustive"
+                        ),
+                    ));
+                }
+            }
+        }
+        None => findings.push(missing(
+            1,
+            "no `fn artifact_hash_disposition_witness` found; the exhaustive destructuring \
+             is what forces a hash decision on every new ArtifactHeader field"
+                .to_string(),
+        )),
+    }
+    findings
+}
+
 /// Recursively collect `.rs` files under `dir`, sorted by path so the
 /// report order (and any future caching) is deterministic.
 fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
@@ -837,6 +921,9 @@ pub const REGISTRY_PATH: &str = "rngtags.rs";
 pub const PLAN_PATH: &str = "dist/plan.rs";
 /// Run-spec module location relative to `rust/src` (rule 5).
 pub const SPEC_PATH: &str = "config/spec.rs";
+/// Setup-artifact module location relative to `rust/src` (rule 5's
+/// artifact leg).
+pub const SETUP_PATH: &str = "setup/mod.rs";
 
 /// Lint the whole tree rooted at the repo root (the directory holding
 /// `Cargo.toml` and `rust/src`). Returns findings sorted by file/line;
@@ -867,6 +954,10 @@ pub fn lint_tree(repo_root: &Path) -> Result<Vec<Finding>> {
     let spec_src = std::fs::read_to_string(&spec_file)
         .with_context(|| format!("reading {}", spec_file.display()))?;
     findings.extend(check_plan_hash(PLAN_PATH, &plan_src, SPEC_PATH, &spec_src));
+    let setup_file = src_root.join(SETUP_PATH);
+    let setup_src = std::fs::read_to_string(&setup_file)
+        .with_context(|| format!("reading {}", setup_file.display()))?;
+    findings.extend(check_artifact_hash(SETUP_PATH, &setup_src));
     findings.sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)));
     Ok(findings)
 }
@@ -997,6 +1088,62 @@ mod tests {
         assert!(
             f.iter().any(|x| x.rule == Rule::HashDrift && x.message.contains("new_run_field")),
             "expected a hash-drift finding for new_run_field, got {f:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_unhashed_artifact_field_trips() {
+        let src = fixture("unhashed_artifact_field.rs");
+        let f = check_artifact_hash("setup/mod.rs", &src);
+        assert!(
+            f.iter().any(|x| x.rule == Rule::HashDrift
+                && x.message.contains("extra_knob")
+                && x.message.contains("decide its hash fate")
+                && x.line == 12),
+            "expected a hash-drift finding for extra_knob on line 12, got {f:?}"
+        );
+        // The fixture's witness also misses that field.
+        assert!(
+            f.iter().any(|x| x.message.contains("witness")
+                && x.message.contains("extra_knob")
+                && x.line == 23),
+            "expected a witness finding for extra_knob on line 23, got {f:?}"
+        );
+        // Fields with a declared fate stay clean.
+        assert!(!f.iter().any(|x| x.message.contains(".seed")), "{f:?}");
+        assert!(!f.iter().any(|x| x.message.contains("setup_ms")), "{f:?}");
+    }
+
+    #[test]
+    fn stale_artifact_exempt_entry_trips() {
+        let src = fixture("unhashed_artifact_field.rs")
+            .replace("\"extra_stale\"", "\"not_a_field_anymore\"");
+        let f = check_artifact_hash("setup/mod.rs", &src);
+        assert!(
+            f.iter().any(|x| x.message.contains("not_a_field_anymore")),
+            "stale ART_HASH_EXEMPT entries must be flagged, got {f:?}"
+        );
+    }
+
+    #[test]
+    fn removing_an_artifact_exempt_entry_fails_the_tripwire() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let setup_src = std::fs::read_to_string(root.join("rust/src").join(SETUP_PATH))
+            .expect("setup source");
+        // The shipped header is clean…
+        assert!(check_artifact_hash(SETUP_PATH, &setup_src).is_empty());
+        // …and dropping either provenance knob from ART_HASH_EXEMPT (or
+        // blinding the witness) trips it.
+        for knob in ["\"setup_threads\"", "\"setup_ms\""] {
+            let broken = setup_src.replacen(knob, "\"knob_gone\"", 1);
+            let f = check_artifact_hash(SETUP_PATH, &broken);
+            assert!(!f.is_empty(), "dropping {knob} from ART_HASH_EXEMPT must trip the lint");
+        }
+        let blinded = setup_src.replace("artifact_hash_disposition_witness", "renamed_away");
+        let f = check_artifact_hash(SETUP_PATH, &blinded);
+        assert!(
+            f.iter().any(|x| x.message.contains("witness")),
+            "removing the witness must trip the lint, got {f:?}"
         );
     }
 

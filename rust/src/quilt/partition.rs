@@ -33,11 +33,14 @@
 //! [`Partition::conditioned_sampler_threaded`] parallelizes the product
 //! DAG's bottom-up mass aggregation per level.
 
+use anyhow::{bail, Result};
+
 use crate::hashutil::{fast_map_with_capacity, FastMap};
 
 use crate::graph::NodeId;
 use crate::kpgm::{AdoptMemo, ConditionedBallDropSampler, ConfigForest, ConfigTrie, ThetaSeq};
 use crate::magm::Config;
+use crate::setup::wire::{Reader, Writer};
 
 /// Nodes per chunk in [`Partition::build_parallel`]. Fixed — never
 /// derived from the thread count — so chunk histograms and prefix sums
@@ -570,6 +573,122 @@ impl Partition {
     pub fn num_nodes(&self) -> usize {
         self.sets.iter().map(|s| s.len()).sum()
     }
+
+    /// Serialize into a setup-artifact body (`crate::setup`): the sets,
+    /// the per-set maps (entries in ascending config order, so the byte
+    /// stream is canonical), the trie forest, and the per-set tries.
+    /// Derived state is *not* written — the dense index is rebuilt on
+    /// hydration and `trie_merge_ms` is build provenance.
+    pub(crate) fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.sets.len() as u64);
+        for set in &self.sets {
+            w.put_u64(set.len() as u64);
+            for &node in set {
+                w.put_u32(node);
+            }
+        }
+        for m in &self.maps {
+            w.put_u64(m.len() as u64);
+            let mut pairs: Vec<(Config, NodeId)> =
+                m.iter().map(|(&c, &n)| (c, n)).collect(); // lint: order-ok(sorted on the next line)
+            pairs.sort_unstable();
+            for (c, n) in pairs {
+                w.put_u64(c);
+                w.put_u32(n);
+            }
+        }
+        match &self.forest {
+            None => w.put_u8(0),
+            Some(f) => {
+                w.put_u8(1);
+                f.encode(w);
+            }
+        }
+        w.put_u64(self.tries.len() as u64);
+        for t in &self.tries {
+            t.encode(w);
+        }
+    }
+
+    /// Decode the counterpart of [`Partition::encode`] from untrusted
+    /// bytes, with structural validation (map/set cardinality agreement,
+    /// no repeated configs, tries iff forest). The dense index comes back
+    /// empty — hydration rebuilds it — and `trie_merge_ms` is 0.
+    pub(crate) fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let num_sets = r.take_len(8, "partition sets")?;
+        let mut sets = Vec::with_capacity(num_sets);
+        for _ in 0..num_sets {
+            let len = r.take_len(4, "partition set nodes")?;
+            let mut set = Vec::with_capacity(len);
+            for _ in 0..len {
+                set.push(r.take_u32("partition node")?);
+            }
+            sets.push(set);
+        }
+        let mut maps = Vec::with_capacity(num_sets);
+        for (c, set) in sets.iter().enumerate() {
+            let len = r.take_len(12, "partition map entries")?;
+            if len != set.len() {
+                bail!(
+                    "artifact body corrupt: set {c} holds {} nodes but its map claims {len} \
+                     entries",
+                    set.len()
+                );
+            }
+            let mut m: FastMap<Config, NodeId> = fast_map_with_capacity(len);
+            for _ in 0..len {
+                let cfg = r.take_u64("map config")?;
+                let node = r.take_u32("map node")?;
+                if m.insert(cfg, node).is_some() {
+                    bail!("artifact body corrupt: config {cfg:#x} repeated in set {c}'s map");
+                }
+            }
+            maps.push(m);
+        }
+        let forest = match r.take_u8("forest flag")? {
+            0 => None,
+            1 => Some(ConfigForest::decode(r)?),
+            b => bail!("artifact body corrupt: forest flag byte {b}"),
+        };
+        let num_tries = r.take_len(4, "tries")?;
+        match &forest {
+            None if num_tries != 0 => {
+                bail!("artifact body corrupt: {num_tries} tries without a forest")
+            }
+            Some(_) if num_tries != num_sets => bail!(
+                "artifact body corrupt: {num_tries} tries for {num_sets} partition sets"
+            ),
+            _ => {}
+        }
+        let mut tries = Vec::with_capacity(num_tries);
+        for _ in 0..num_tries {
+            tries.push(ConfigTrie::decode(r)?);
+        }
+        if let Some(f) = &forest {
+            for (c, t) in tries.iter().enumerate() {
+                if (t.root() as usize) >= f.num_root_classes() {
+                    bail!(
+                        "artifact body corrupt: trie {c} root {} outside the forest's level 0",
+                        t.root()
+                    );
+                }
+            }
+        }
+        Ok(Partition { sets, maps, dense: Vec::new(), forest, tries, trie_merge_ms: 0.0 })
+    }
+}
+
+/// Equality over the partition *content*: sets, maps, forest, tries.
+/// Deliberately manual — the dense index is a derived cache (identical
+/// lookups either way) and `trie_merge_ms` is build provenance, so
+/// neither may distinguish a hydrated partition from a fresh one.
+impl PartialEq for Partition {
+    fn eq(&self, other: &Self) -> bool {
+        self.sets == other.sets
+            && self.maps == other.maps
+            && self.forest == other.forest
+            && self.tries == other.tries
+    }
 }
 
 #[cfg(test)]
@@ -794,6 +913,101 @@ mod tests {
         assert_eq!(p.lookup(1, 0), Some(num_configs as NodeId));
         assert_eq!(p.lookup(1, 77), None);
         assert_eq!(p.lookup(40, 0), Some((num_configs + 39) as NodeId));
+    }
+
+    #[test]
+    fn wire_round_trip_with_and_without_tries() {
+        let configs = chunky_configs(PARTITION_CHUNK, 700, 61);
+        // Bare partition (rejection-mode artifacts carry no tries).
+        let bare = Partition::build(&configs);
+        let mut w = Writer::new();
+        bare.encode(&mut w);
+        let bytes = w.into_bytes();
+        let back = Partition::decode(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(back, bare);
+        assert!(!back.has_tries());
+        // With forest + tries (conditioned-mode artifacts).
+        let mut full = Partition::build(&configs);
+        full.build_tries(12);
+        let mut w = Writer::new();
+        full.encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut back = Partition::decode(&mut Reader::new(&bytes)).unwrap();
+        assert_eq!(back, full);
+        assert_eq!(back.config_forest(), full.config_forest());
+        for c in 0..full.size() {
+            assert_eq!(back.trie(c), full.trie(c), "trie {c}");
+        }
+        // The decoded forest's interners were rebuilt from the arena:
+        // registering the same sets again must dedupe onto the existing
+        // classes, and the trie rebuild short-circuits (idempotence).
+        back.build_tries(12);
+        assert_eq!(back.config_forest(), full.config_forest());
+        // The dense index is rebuilt, not deserialized, and equality is
+        // blind to it (derived cache).
+        back.build_dense_index(1 << 12);
+        assert_eq!(back, full);
+        for c in 0..full.size() {
+            for &node in full.set(c) {
+                assert_eq!(back.lookup(c, configs[node as usize]), Some(node));
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_inconsistent_bodies() {
+        let configs = vec![1u64, 1, 2];
+        let p = Partition::build(&configs);
+        let mut w = Writer::new();
+        p.encode(&mut w);
+        let good = w.into_bytes();
+        assert!(Partition::decode(&mut Reader::new(&good)).is_ok());
+        // Truncated anywhere → structured error.
+        for cut in [0, 4, good.len() / 2, good.len() - 1] {
+            assert!(Partition::decode(&mut Reader::new(&good[..cut])).is_err(), "cut {cut}");
+        }
+        // A map claiming more entries than its set holds nodes.
+        let mut w = Writer::new();
+        w.put_u64(1); // one set
+        w.put_u64(1); // with one node
+        w.put_u32(0);
+        w.put_u64(2); // but a two-entry map
+        w.put_u64(1);
+        w.put_u32(0);
+        w.put_u64(2);
+        w.put_u32(0);
+        w.put_u8(0);
+        w.put_u64(0);
+        let bytes = w.into_bytes();
+        let err = Partition::decode(&mut Reader::new(&bytes)).unwrap_err().to_string();
+        assert!(err.contains("map claims"), "{err}");
+        // A repeated config inside one set's map.
+        let mut w = Writer::new();
+        w.put_u64(1);
+        w.put_u64(2);
+        w.put_u32(0);
+        w.put_u32(1);
+        w.put_u64(2);
+        w.put_u64(5);
+        w.put_u32(0);
+        w.put_u64(5);
+        w.put_u32(1);
+        w.put_u8(0);
+        w.put_u64(0);
+        let bytes = w.into_bytes();
+        let err = Partition::decode(&mut Reader::new(&bytes)).unwrap_err().to_string();
+        assert!(err.contains("repeated"), "{err}");
+        // Tries without a forest.
+        let mut w = Writer::new();
+        w.put_u64(0); // no sets
+        w.put_u8(0); // no forest
+        w.put_u64(3); // but three tries
+        w.put_u32(0); // (payload present so the length check passes and
+        w.put_u32(0); //  the structural tries-without-forest check fires)
+        w.put_u32(0);
+        let bytes = w.into_bytes();
+        let err = Partition::decode(&mut Reader::new(&bytes)).unwrap_err().to_string();
+        assert!(err.contains("without a forest"), "{err}");
     }
 
     #[test]

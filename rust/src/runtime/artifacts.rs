@@ -1,9 +1,14 @@
 //! AOT artifact manifest: the shape contract between `python/compile/aot.py`
-//! and the Rust runtime.
+//! and the Rust runtime — plus the setup-artifact side of the cache: the
+//! same directory that holds the lowered HLO can hold content-addressed
+//! [`crate::setup::SetupArtifact`] files, so an accelerated run reuses the
+//! deterministic prologue exactly like a distributed one does.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
+
+use crate::setup::{artifact_file_name, ArtifactHeader, SetupArtifact};
 
 use super::json::Json;
 
@@ -151,6 +156,36 @@ pub fn default_artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
+/// Canonical location of a setup artifact with this identity hash inside
+/// an artifacts directory.
+pub fn setup_artifact_path(dir: &Path, hash_hex: &str) -> PathBuf {
+    dir.join(artifact_file_name(hash_hex))
+}
+
+/// Look up a cached setup artifact by its content address. `Ok(None)`
+/// means a cache miss (build and [`store_setup_artifact`] it); a file
+/// that exists but is corrupt or belongs to a different prologue is an
+/// error, never a silent miss.
+pub fn load_setup_artifact(dir: &Path, expected: &ArtifactHeader) -> Result<Option<SetupArtifact>> {
+    let path = setup_artifact_path(dir, &expected.hash_hex());
+    if !path.exists() {
+        return Ok(None);
+    }
+    let artifact = SetupArtifact::load(&path)?;
+    artifact.check_matches(expected)?;
+    Ok(Some(artifact))
+}
+
+/// Persist a setup artifact into the cache under its canonical
+/// content-addressed name (atomic rename; see [`SetupArtifact::save`]).
+pub fn store_setup_artifact(dir: &Path, artifact: &SetupArtifact) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifacts directory {}", dir.display()))?;
+    let path = setup_artifact_path(dir, &artifact.hash_hex());
+    artifact.save(&path)?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,5 +227,40 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let err = Manifest::load(&dir).unwrap_err().to_string();
         assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn setup_artifact_cache_round_trips() {
+        use crate::config::{ModelSpec, SamplerKind};
+        use crate::coordinator::Coordinator;
+        use crate::magm::AttrSampleMode;
+        use crate::quilt::PieceMode;
+
+        let dir = std::env::temp_dir().join("magquilt_setup_cache");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut model = ModelSpec::default_spec();
+        model.log2_nodes = 6;
+        model.attributes = 6;
+        let expected = ArtifactHeader::from_model(
+            &model,
+            7,
+            SamplerKind::Quilt,
+            PieceMode::Conditioned,
+            AttrSampleMode::Sequential,
+        );
+        // Miss on an absent cache directory: not an error.
+        assert!(load_setup_artifact(&dir, &expected).unwrap().is_none());
+        let art = Coordinator::new().build_setup(&model, 7, SamplerKind::Quilt).unwrap();
+        let path = store_setup_artifact(&dir, &art).unwrap();
+        assert_eq!(path, setup_artifact_path(&dir, &art.hash_hex()));
+        let cached = load_setup_artifact(&dir, &expected).unwrap().expect("cache hit");
+        assert_eq!(cached.hash64(), art.hash64());
+        assert_eq!(cached.attrs(), art.attrs());
+        // A different prologue identity misses even with a populated cache.
+        let other = ArtifactHeader { seed: 8, ..expected };
+        assert!(load_setup_artifact(&dir, &other).unwrap().is_none());
+        // Corruption under the canonical name is an error, not a miss.
+        std::fs::write(&path, b"MAGQART1 but mangled").unwrap();
+        assert!(load_setup_artifact(&dir, &expected).is_err());
     }
 }

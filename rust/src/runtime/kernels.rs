@@ -187,6 +187,26 @@ pub fn naive_xla_sample(
     Ok(g)
 }
 
+/// Run the accelerated baseline over a hydrated setup artifact instead of
+/// re-running the attribute draw: the artifact pins the exact per-node
+/// configurations (and the model identity in its header), so the XLA
+/// baseline samples the same world a quilt/hybrid run of that artifact
+/// did — the cross-sampler comparison needs no separate setup pass.
+pub fn naive_xla_sample_from_artifact(
+    runtime: &XlaRuntime,
+    artifact: &crate::setup::SetupArtifact,
+    rng: &mut Rng,
+) -> Result<EdgeList> {
+    let h = artifact.header();
+    let params = MagmParams::homogeneous(
+        crate::kpgm::Initiator::new(h.theta),
+        h.mu,
+        h.num_nodes(),
+        h.attributes,
+    );
+    naive_xla_sample(runtime, &params, artifact.attrs(), rng)
+}
+
 /// Expected out-degrees for every node, computed block-wise through the
 /// `expected_degree_contrib` kernel over the distinct-configuration
 /// representation (cost `O((#configs / b)² )` kernel calls).

@@ -8,7 +8,13 @@
 //! * [`MagmKernels`] — model-bound wrappers (coefficient transform,
 //!   padding, block iteration),
 //! * [`naive_xla_sample`] — the accelerated `O(n²)` baseline sampler,
-//! * [`expected_out_degrees`] — analysis helper used by examples/stats.
+//! * [`expected_out_degrees`] — analysis helper used by examples/stats,
+//! * [`load_setup_artifact`] / [`store_setup_artifact`] — the setup-artifact
+//!   side of the cache: the artifacts directory also holds content-addressed
+//!   [`crate::setup::SetupArtifact`] files, and
+//!   [`naive_xla_sample_from_artifact`] runs the baseline over a hydrated
+//!   artifact's attribute assignment (same world as the quilt run, no
+//!   separate setup pass).
 //!
 //! Everything degrades gracefully when `artifacts/` is missing: loading
 //! returns an error telling the user to run `make artifacts`; nothing else
@@ -20,9 +26,15 @@ pub mod json;
 mod kernels;
 mod xla_stub;
 
-pub use artifacts::{default_artifacts_dir, EntrySpec, Manifest, TensorSpec};
+pub use artifacts::{
+    default_artifacts_dir, load_setup_artifact, setup_artifact_path, store_setup_artifact,
+    EntrySpec, Manifest, TensorSpec,
+};
 pub use client::XlaRuntime;
-pub use kernels::{expected_out_degrees, naive_xla_sample, theta_to_coef, MagmKernels};
+pub use kernels::{
+    expected_out_degrees, naive_xla_sample, naive_xla_sample_from_artifact, theta_to_coef,
+    MagmKernels,
+};
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,675 @@
+//! Setup artifacts: the deterministic prologue, serialized.
+//!
+//! Every magquilt run front-loads the same expensive, fully deterministic
+//! setup pipeline — attribute assignment, the partition `D_1 … D_B`, the
+//! hash-consed [`crate::kpgm::ConfigForest`] prefix tries, and (in
+//! conditioned mode) the product DAG — before the first ball drops. A
+//! [`SetupArtifact`] is that prologue as a file: build it once with
+//! [`crate::coordinator::Coordinator::build_setup`] (CLI: `magquilt setup
+//! --out F`), then hydrate any number of runs from it (`sample --artifact
+//! F`, `shard-worker --artifact F`) with a **bit-for-bit guarantee**: a
+//! coordinator hydrated from an artifact produces byte-identical output
+//! to one that ran fresh setup, because the hydrated partition, forest,
+//! tries, and conditioned DAG *are* the fresh ones (asserted structure by
+//! structure in the round-trip tests, and end to end by the equivalence
+//! sweeps in [`crate::coordinator`] and [`crate::dist::worker`]).
+//!
+//! # File format (`MAGQART1`)
+//!
+//! ```text
+//! magic    8 B   b"MAGQART1"
+//! version  4 B   u32 LE — readers reject any version they don't know
+//! integrity 8 B  u64 LE — FNV-1a over every body byte
+//! body_len 8 B   u64 LE — must equal the bytes that follow exactly
+//! body     …     header, attrs, partition, conditioner (see [`wire`])
+//! ```
+//!
+//! The body serializes the [`ArtifactHeader`] followed by the attribute
+//! configurations, the partition sets **and** per-set `config → node`
+//! maps (entries in sorted config order, so the byte stream is canonical),
+//! the [`crate::kpgm::ConfigForest`] arena level by level in its exact
+//! serial interning order, the per-set tries, and the conditioned DAG's
+//! pair nodes and piece roots. Cheaply derivable state is *not* stored
+//! and is rebuilt on hydration: the dense lookup tables, the forest's
+//! interner maps (reconstructed from the arena), the job list, and the
+//! hybrid split (a pure function of the attrs).
+//!
+//! # Two hashes
+//!
+//! * The **identity hash** ([`ArtifactHeader::hash64`]) digests the
+//!   output-determining header fields — the same fields the
+//!   [`crate::dist::ShardPlan`] hash seals (model, seed, sampler, piece
+//!   and attr mode) — and is the artifact's content address: consumers
+//!   cross-check it against the hash derived from their own plan/config
+//!   ([`ArtifactHeader::from_plan`] + [`SetupArtifact::check_matches`])
+//!   before trusting the payload. Provenance fields (`setup_threads`,
+//!   `setup_ms`) are exempt, with the fate of every field enforced by
+//!   maglint's hash-drift tripwire exactly as for `ShardPlan`.
+//! * The **integrity hash** (in the file header) digests every body byte
+//!   and rejects truncation and tampering — including tampering of the
+//!   hash-exempt provenance fields, which the identity hash would miss.
+//!
+//! Writes go through the atomic temp-file + rename protocol of
+//! [`crate::graph::write_atomic`], so a crashed `magquilt setup` never
+//! leaves a plausible-looking partial artifact under the final name.
+
+pub mod wire;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelSpec, SamplerKind};
+use crate::dist::ShardPlan;
+use crate::graph::write_atomic;
+use crate::kpgm::ConditionedBallDropSampler;
+use crate::magm::{AttrSampleMode, AttributeAssignment};
+use crate::quilt::{Partition, PieceMode};
+
+use wire::{Reader, Writer};
+
+/// File magic, first 8 bytes of every artifact.
+pub const ARTIFACT_MAGIC: [u8; 8] = *b"MAGQART1";
+
+/// Format version; readers reject anything else.
+pub const ARTIFACT_FORMAT: u32 = 1;
+
+/// Artifact file extension (`magquilt stats`/`doctor` recognize it and
+/// the workers' resume scan skips it).
+pub const ARTIFACT_EXT: &str = "art";
+
+/// Header fields excluded from the identity hash: build provenance that
+/// never determines output. Mirrors `ShardPlan`'s `HASH_EXEMPT` contract
+/// and is enforced by the same maglint tripwire
+/// (`artifact_hash_disposition_witness` is the compile witness).
+pub const ART_HASH_EXEMPT: &[&str] = &["setup_threads", "setup_ms"];
+
+/// The output-determining identity of a setup artifact plus build
+/// provenance. Every field is either digested by
+/// [`ArtifactHeader::canonical`] or listed in [`ART_HASH_EXEMPT`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactHeader {
+    /// KPGM initiator θ (row-major 2×2).
+    pub theta: [f64; 4],
+    /// Bernoulli attribute parameter μ.
+    pub mu: f64,
+    /// log2 of the node count.
+    pub log2_nodes: u32,
+    /// Attribute depth d.
+    pub attributes: u32,
+    /// Base RNG seed the attrs were drawn from.
+    pub seed: u64,
+    /// Sampler the prologue was built for (quilt or hybrid — the
+    /// partition differs: full vs the hybrid's W subset).
+    pub sampler: SamplerKind,
+    /// Piece mode (conditioned artifacts carry the product DAG).
+    pub piece_mode: PieceMode,
+    /// Attribute sampling mode the assignment was drawn with.
+    pub attr_mode: AttrSampleMode,
+    /// Setup threads used by the build (provenance only — the prologue
+    /// is bit-for-bit identical for every thread count).
+    pub setup_threads: usize,
+    /// Wall-clock the build spent in fresh setup (provenance only).
+    pub setup_ms: f64,
+}
+
+impl ArtifactHeader {
+    /// Canonical string over the output-determining fields; the identity
+    /// hash digests exactly this. Same shape as `ShardPlan::canonical`.
+    fn canonical(&self) -> String {
+        format!(
+            "magquilt-artifact-v{ARTIFACT_FORMAT}|theta={:?}|mu={:?}|log2_nodes={}\
+             |attributes={}|seed={}|sampler={}|piece_mode={}|attr_mode={}",
+            self.theta,
+            self.mu,
+            self.log2_nodes,
+            self.attributes,
+            self.seed,
+            self.sampler.name(),
+            self.piece_mode.name(),
+            self.attr_mode.name(),
+        )
+    }
+
+    /// The identity (content-address) hash.
+    pub fn hash64(&self) -> u64 {
+        crate::hashutil::fnv1a64(self.canonical().as_bytes())
+    }
+
+    /// The identity hash as 16 hex digits (the `ShardPlan` convention).
+    pub fn hash_hex(&self) -> String {
+        format!("{:016x}", self.hash64())
+    }
+
+    /// Number of nodes `2^log2_nodes`.
+    pub fn num_nodes(&self) -> usize {
+        1usize << self.log2_nodes
+    }
+
+    /// The header a fresh build under this model/config would carry
+    /// (provenance fields zeroed — they are hash-exempt either way).
+    pub fn from_model(
+        model: &ModelSpec,
+        seed: u64,
+        sampler: SamplerKind,
+        piece_mode: PieceMode,
+        attr_mode: AttrSampleMode,
+    ) -> Self {
+        ArtifactHeader {
+            theta: model.theta,
+            mu: model.mu,
+            log2_nodes: model.log2_nodes,
+            attributes: model.attributes,
+            seed,
+            sampler,
+            piece_mode,
+            attr_mode,
+            setup_threads: 0,
+            setup_ms: 0.0,
+        }
+    }
+
+    /// The header a distributed plan expects its shared artifact to
+    /// carry — the cross-check workers run before skipping setup.
+    pub fn from_plan(plan: &ShardPlan) -> Self {
+        Self::from_model(&plan.model, plan.seed, plan.sampler, plan.piece_mode, plan.attr_mode)
+    }
+
+    fn encode(&self, w: &mut Writer) {
+        for &t in &self.theta {
+            w.put_f64(t);
+        }
+        w.put_f64(self.mu);
+        w.put_u32(self.log2_nodes);
+        w.put_u32(self.attributes);
+        w.put_u64(self.seed);
+        w.put_u8(sampler_to_byte(self.sampler));
+        w.put_u8(match self.piece_mode {
+            PieceMode::Conditioned => 0,
+            PieceMode::Rejection => 1,
+        });
+        w.put_u8(match self.attr_mode {
+            AttrSampleMode::Sequential => 0,
+            AttrSampleMode::Chunked => 1,
+        });
+        w.put_u64(self.setup_threads as u64);
+        w.put_f64(self.setup_ms);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let mut theta = [0.0f64; 4];
+        for slot in &mut theta {
+            *slot = r.take_f64("theta")?;
+        }
+        let mu = r.take_f64("mu")?;
+        let log2_nodes = r.take_u32("log2_nodes")?;
+        let attributes = r.take_u32("attributes")?;
+        if !(1..=48).contains(&log2_nodes) {
+            bail!("artifact header corrupt: log2_nodes {log2_nodes} outside [1, 48]");
+        }
+        if !(1..=63).contains(&attributes) {
+            bail!("artifact header corrupt: attributes {attributes} outside [1, 63]");
+        }
+        let seed = r.take_u64("seed")?;
+        let sampler = byte_to_sampler(r.take_u8("sampler")?)?;
+        let piece_mode = match r.take_u8("piece_mode")? {
+            0 => PieceMode::Conditioned,
+            1 => PieceMode::Rejection,
+            b => bail!("artifact header corrupt: unknown piece mode byte {b}"),
+        };
+        let attr_mode = match r.take_u8("attr_mode")? {
+            0 => AttrSampleMode::Sequential,
+            1 => AttrSampleMode::Chunked,
+            b => bail!("artifact header corrupt: unknown attr mode byte {b}"),
+        };
+        let setup_threads = r.take_u64("setup_threads")? as usize;
+        let setup_ms = r.take_f64("setup_ms")?;
+        Ok(ArtifactHeader {
+            theta,
+            mu,
+            log2_nodes,
+            attributes,
+            seed,
+            sampler,
+            piece_mode,
+            attr_mode,
+            setup_threads,
+            setup_ms,
+        })
+    }
+}
+
+/// Compile-time witness that every [`ArtifactHeader`] field has an
+/// explicit hash fate: destructuring is exhaustive, so adding a field
+/// without deciding its fate breaks this function, and maglint checks
+/// each fate comment against [`ArtifactHeader::canonical`] /
+/// [`ART_HASH_EXEMPT`].
+#[allow(dead_code)]
+fn artifact_hash_disposition_witness(header: &ArtifactHeader) {
+    let ArtifactHeader {
+        theta: _,         // hashed
+        mu: _,            // hashed
+        log2_nodes: _,    // hashed
+        attributes: _,    // hashed
+        seed: _,          // hashed
+        sampler: _,       // hashed
+        piece_mode: _,    // hashed
+        attr_mode: _,     // hashed
+        setup_threads: _, // ART_HASH_EXEMPT (per-host knob; output identical for any count)
+        setup_ms: _,      // ART_HASH_EXEMPT (wall-clock provenance)
+    } = *header;
+}
+
+fn sampler_to_byte(s: SamplerKind) -> u8 {
+    match s {
+        SamplerKind::Quilt => 0,
+        SamplerKind::Hybrid => 1,
+        SamplerKind::Naive => 2,
+        SamplerKind::NaiveXla => 3,
+    }
+}
+
+fn byte_to_sampler(b: u8) -> Result<SamplerKind> {
+    Ok(match b {
+        0 => SamplerKind::Quilt,
+        1 => SamplerKind::Hybrid,
+        2 => SamplerKind::Naive,
+        3 => SamplerKind::NaiveXla,
+        _ => bail!("artifact header corrupt: unknown sampler byte {b}"),
+    })
+}
+
+/// Canonical artifact file name for an identity hash.
+pub fn artifact_file_name(hash_hex: &str) -> String {
+    format!("setup-{hash_hex}.{ARTIFACT_EXT}")
+}
+
+/// Whether a segment-directory entry is a setup artifact (by extension —
+/// users may name artifacts freely, so recognition must not depend on
+/// the canonical name).
+pub fn is_artifact_file(name: &str) -> bool {
+    std::path::Path::new(name).extension().is_some_and(|e| e == ARTIFACT_EXT)
+}
+
+/// The serialized setup prologue: header + attrs + partition (+ the
+/// conditioned product DAG). See the module docs for the format and the
+/// bit-for-bit hydration guarantee.
+#[derive(Debug, Clone)]
+pub struct SetupArtifact {
+    header: ArtifactHeader,
+    attrs: AttributeAssignment,
+    partition: Partition,
+    conditioner: Option<ConditionedBallDropSampler>,
+}
+
+impl SetupArtifact {
+    /// Assemble an artifact from freshly built setup state (the
+    /// coordinator's `build_setup` is the only intended caller).
+    pub fn new(
+        header: ArtifactHeader,
+        attrs: AttributeAssignment,
+        partition: Partition,
+        conditioner: Option<ConditionedBallDropSampler>,
+    ) -> Self {
+        SetupArtifact { header, attrs, partition, conditioner }
+    }
+
+    /// The identity header.
+    pub fn header(&self) -> &ArtifactHeader {
+        &self.header
+    }
+
+    /// The hydrated attribute assignment.
+    pub fn attrs(&self) -> &AttributeAssignment {
+        &self.attrs
+    }
+
+    /// The hydrated partition (with forest/tries when conditioned).
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// The hydrated conditioned product DAG, if the artifact carries one.
+    pub fn conditioner(&self) -> Option<&ConditionedBallDropSampler> {
+        self.conditioner.as_ref()
+    }
+
+    /// Identity hash (content address) — see [`ArtifactHeader::hash64`].
+    pub fn hash64(&self) -> u64 {
+        self.header.hash64()
+    }
+
+    /// Identity hash as 16 hex digits.
+    pub fn hash_hex(&self) -> String {
+        self.header.hash_hex()
+    }
+
+    /// Tear down into parts for hydration into a `JobPlan`.
+    pub fn into_parts(
+        self,
+    ) -> (
+        ArtifactHeader,
+        AttributeAssignment,
+        Partition,
+        Option<ConditionedBallDropSampler>,
+    ) {
+        (self.header, self.attrs, self.partition, self.conditioner)
+    }
+
+    /// Cross-check this artifact's identity against what a consumer's
+    /// own plan/config expects, rejecting with both canonical strings on
+    /// mismatch. Consumers MUST call this before trusting the payload —
+    /// the integrity hash proves the file is intact, not that it belongs
+    /// to this run.
+    pub fn check_matches(&self, expected: &ArtifactHeader) -> Result<()> {
+        if self.header.hash64() != expected.hash64() {
+            bail!(
+                "setup artifact does not match this run: artifact is {} ({}), the run expects \
+                 {} ({}) — regenerate with `magquilt setup`",
+                self.header.hash_hex(),
+                self.header.canonical(),
+                expected.hash_hex(),
+                expected.canonical(),
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize to the `MAGQART1` wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut body = Writer::new();
+        self.header.encode(&mut body);
+        body.put_u32(self.attrs.depth());
+        body.put_u64(self.attrs.configs().len() as u64);
+        for &c in self.attrs.configs() {
+            body.put_u64(c);
+        }
+        self.partition.encode(&mut body);
+        match &self.conditioner {
+            None => body.put_u8(0),
+            Some(dag) => {
+                body.put_u8(1);
+                dag.encode(&mut body);
+            }
+        }
+        let body = body.into_bytes();
+        let mut out = Vec::with_capacity(28 + body.len());
+        out.extend_from_slice(&ARTIFACT_MAGIC);
+        out.extend_from_slice(&ARTIFACT_FORMAT.to_le_bytes());
+        out.extend_from_slice(&crate::hashutil::fnv1a64(&body).to_le_bytes());
+        out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Parse and validate the `MAGQART1` wire format: magic, version,
+    /// exact length, integrity hash, then the bounds-checked body decode.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 28 {
+            bail!("not a setup artifact: {} bytes is shorter than the file header", bytes.len());
+        }
+        if bytes[0..8] != ARTIFACT_MAGIC {
+            bail!("not a setup artifact: bad magic (want MAGQART1)");
+        }
+        let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+        if version != ARTIFACT_FORMAT {
+            bail!("unsupported artifact format version {version} (this build reads {ARTIFACT_FORMAT})");
+        }
+        let stored_integrity = u64::from_le_bytes([
+            bytes[12], bytes[13], bytes[14], bytes[15], bytes[16], bytes[17], bytes[18], bytes[19],
+        ]);
+        let body_len = u64::from_le_bytes([
+            bytes[20], bytes[21], bytes[22], bytes[23], bytes[24], bytes[25], bytes[26], bytes[27],
+        ]);
+        let body = &bytes[28..];
+        if (body.len() as u64) < body_len {
+            bail!(
+                "setup artifact truncated: header claims {body_len} body bytes, file holds {}",
+                body.len()
+            );
+        }
+        if (body.len() as u64) > body_len {
+            bail!(
+                "setup artifact corrupt: {} trailing bytes past the declared body",
+                body.len() as u64 - body_len
+            );
+        }
+        let actual = crate::hashutil::fnv1a64(body);
+        if actual != stored_integrity {
+            bail!(
+                "setup artifact corrupt: integrity hash {actual:016x} does not match stored \
+                 {stored_integrity:016x} (truncated or tampered)"
+            );
+        }
+
+        let mut r = Reader::new(body);
+        let header = ArtifactHeader::decode(&mut r)?;
+        let depth = r.take_u32("attr depth")?;
+        if depth != header.attributes {
+            bail!("artifact body corrupt: attr depth {depth} disagrees with header {}", header.attributes);
+        }
+        let n = r.take_len(8, "attr configs")?;
+        if n != header.num_nodes() {
+            bail!(
+                "artifact body corrupt: {n} attr configs but the header's model has {} nodes",
+                header.num_nodes()
+            );
+        }
+        let mut configs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = r.take_u64("attr config")?;
+            if depth < 64 && c >= (1u64 << depth) {
+                bail!("artifact body corrupt: config {c:#x} outside the 2^{depth} space");
+            }
+            configs.push(c);
+        }
+        let attrs = AttributeAssignment::from_configs(configs, depth);
+        let partition = Partition::decode(&mut r)?;
+        let conditioner = match r.take_u8("conditioner flag")? {
+            0 => None,
+            1 => Some(ConditionedBallDropSampler::decode(&mut r)?),
+            b => bail!("artifact body corrupt: conditioner flag byte {b}"),
+        };
+        if !r.is_empty() {
+            bail!("artifact body corrupt: {} undeclared trailing bytes", r.remaining());
+        }
+        Ok(SetupArtifact { header, attrs, partition, conditioner })
+    }
+
+    /// Write to `path` via the atomic temp-file + rename protocol (a
+    /// crash never leaves a partial artifact under the final name).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let dir = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => std::path::PathBuf::from("."),
+        };
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            bail!("artifact path {} has no file name", path.display());
+        };
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating artifact directory {}", dir.display()))?;
+        write_atomic(&dir, name, &self.to_bytes())
+            .with_context(|| format!("writing setup artifact {}", path.display()))
+    }
+
+    /// Read and validate an artifact file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading setup artifact {}", path.display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("parsing setup artifact {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Coordinator;
+
+    fn model(log2_nodes: u32, attributes: u32) -> ModelSpec {
+        // default_spec() theta is Θ1; shrink n and d to test scale.
+        let mut m = ModelSpec::default_spec();
+        m.mu = 0.55;
+        m.log2_nodes = log2_nodes;
+        m.attributes = attributes;
+        m
+    }
+
+    fn header() -> ArtifactHeader {
+        ArtifactHeader::from_model(
+            &model(8, 8),
+            42,
+            SamplerKind::Quilt,
+            PieceMode::Conditioned,
+            AttrSampleMode::Chunked,
+        )
+    }
+
+    fn build(sampler: SamplerKind, piece_mode: PieceMode) -> SetupArtifact {
+        Coordinator::new()
+            .piece_mode(piece_mode)
+            .attr_mode(AttrSampleMode::Chunked)
+            .build_setup(&model(8, 8), 42, sampler)
+            .unwrap()
+    }
+
+    #[test]
+    fn identity_hash_covers_output_fields_and_skips_provenance() {
+        let base = header();
+        // Provenance fields never move the identity hash...
+        let mut h = base.clone();
+        h.setup_threads = 16;
+        h.setup_ms = 123.4;
+        assert_eq!(h.hash64(), base.hash64());
+        // ...but every output-determining field does.
+        let mut h = base.clone();
+        h.seed = 43;
+        assert_ne!(h.hash64(), base.hash64());
+        let mut h = base.clone();
+        h.theta[2] += 1e-9;
+        assert_ne!(h.hash64(), base.hash64());
+        let mut h = base.clone();
+        h.piece_mode = PieceMode::Rejection;
+        assert_ne!(h.hash64(), base.hash64());
+        let mut h = base.clone();
+        h.attr_mode = AttrSampleMode::Sequential;
+        assert_ne!(h.hash64(), base.hash64());
+        let mut h = base.clone();
+        h.sampler = SamplerKind::Hybrid;
+        assert_ne!(h.hash64(), base.hash64());
+        assert_eq!(base.hash_hex().len(), 16);
+    }
+
+    #[test]
+    fn round_trip_is_structurally_identical() {
+        for (sampler, piece_mode) in [
+            (SamplerKind::Quilt, PieceMode::Conditioned),
+            (SamplerKind::Quilt, PieceMode::Rejection),
+            (SamplerKind::Hybrid, PieceMode::Conditioned),
+            (SamplerKind::Hybrid, PieceMode::Rejection),
+        ] {
+            let art = build(sampler, piece_mode);
+            let bytes = art.to_bytes();
+            let back = SetupArtifact::from_bytes(&bytes).unwrap();
+            assert_eq!(back.header, art.header, "{sampler:?}/{piece_mode:?}");
+            assert_eq!(back.attrs, art.attrs, "{sampler:?}/{piece_mode:?}");
+            assert_eq!(back.partition, art.partition, "{sampler:?}/{piece_mode:?}");
+            assert_eq!(back.conditioner, art.conditioner, "{sampler:?}/{piece_mode:?}");
+            assert_eq!(
+                piece_mode == PieceMode::Conditioned,
+                back.conditioner.is_some(),
+                "conditioned artifacts carry the DAG, rejection ones don't"
+            );
+            // Serialization is canonical: re-encoding reproduces the bytes.
+            assert_eq!(back.to_bytes(), bytes);
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips_on_disk() {
+        let dir = std::env::temp_dir().join("magquilt_artifact_io_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let art = build(SamplerKind::Quilt, PieceMode::Conditioned);
+        let path = dir.join(artifact_file_name(&art.hash_hex()));
+        art.save(&path).unwrap();
+        let back = SetupArtifact::load(&path).unwrap();
+        assert_eq!(back.header, art.header);
+        assert_eq!(back.partition, art.partition);
+        // No temp residue from the atomic write.
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names.len(), 1, "{names:?}");
+        assert!(is_artifact_file(&names[0]));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation_and_tamper() {
+        let art = build(SamplerKind::Quilt, PieceMode::Rejection);
+        let good = art.to_bytes();
+        assert!(SetupArtifact::from_bytes(&good).is_ok());
+
+        // Too short for the file header.
+        let err = SetupArtifact::from_bytes(&good[..10]).unwrap_err().to_string();
+        assert!(err.contains("shorter"), "{err}");
+        // Wrong magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        let err = SetupArtifact::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+        // Unknown version.
+        let mut bad = good.clone();
+        bad[8] = 99;
+        let err = SetupArtifact::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        // Truncated body.
+        let err = SetupArtifact::from_bytes(&good[..good.len() - 5]).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // Trailing garbage past the declared body.
+        let mut bad = good.clone();
+        bad.extend_from_slice(b"junk");
+        let err = SetupArtifact::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+        // A flipped body byte fails the integrity hash — even in the
+        // hash-exempt provenance region (the first body bytes are header).
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        let err = SetupArtifact::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("integrity"), "{err}");
+        let mut bad = good.clone();
+        bad[28] ^= 0x01;
+        let err = SetupArtifact::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("integrity"), "{err}");
+    }
+
+    #[test]
+    fn check_matches_cross_checks_the_plan_identity() {
+        let art = build(SamplerKind::Quilt, PieceMode::Conditioned);
+        let mut run = crate::config::RunSpec::default_spec();
+        run.seed = 42;
+        run.attr_mode = Some(AttrSampleMode::Chunked);
+        let plan = ShardPlan::new(&model(8, 8), &run, 2).unwrap();
+        art.check_matches(&ArtifactHeader::from_plan(&plan)).unwrap();
+        // A different seed is a different prologue: refuse.
+        run.seed = 43;
+        let other = ShardPlan::new(&model(8, 8), &run, 2).unwrap();
+        let err =
+            art.check_matches(&ArtifactHeader::from_plan(&other)).unwrap_err().to_string();
+        assert!(err.contains("does not match"), "{err}");
+        assert!(err.contains("magquilt setup"), "{err}");
+    }
+
+    #[test]
+    fn artifact_file_names() {
+        let name = artifact_file_name("00ff00ff00ff00ff");
+        assert_eq!(name, "setup-00ff00ff00ff00ff.art");
+        assert!(is_artifact_file(&name));
+        assert!(is_artifact_file("anything.art"));
+        assert!(!is_artifact_file("plan.toml"));
+        assert!(!is_artifact_file("seg-00-s00000-w0000.seg"));
+        assert!(!is_artifact_file("art"));
+    }
+}

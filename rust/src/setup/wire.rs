@@ -1,0 +1,197 @@
+//! Minimal byte-level encoder/decoder for the `MAGQART1` artifact body.
+//!
+//! Fixed-width little-endian primitives only — no varints, no framing —
+//! so every logical value has exactly one byte representation and the
+//! artifact's integrity hash is a pure function of its content. The
+//! [`Reader`] treats its input as untrusted: every take checks the
+//! remaining length, and length prefixes are validated against the bytes
+//! actually present *before* any allocation (the same discipline as the
+//! `MAGQEDG1` reader in [`crate::graph`]).
+
+use anyhow::{bail, Result};
+
+/// Append-only little-endian byte buffer.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// Empty buffer.
+    pub fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Consume the writer, yielding the bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append one byte.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u32`, little-endian.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64`, little-endian.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f64` as its exact IEEE-754 bit pattern (round-trips
+    /// NaN payloads and signed zeros — the artifact must reproduce the
+    /// setup floats bit for bit, not value-approximately).
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+}
+
+/// Bounds-checked little-endian cursor over an untrusted byte slice.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Cursor at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Whether the cursor is at the end.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("artifact body truncated: {what} needs {n} bytes, {} left", self.remaining());
+        }
+        let slice = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(slice)
+    }
+
+    /// Read one byte.
+    pub fn take_u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn take_u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn take_u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Read an `f64` from its bit pattern.
+    pub fn take_f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.take_u64(what)?))
+    }
+
+    /// Read a `u64` element count and validate that `count · elem_bytes`
+    /// of payload are actually present before the caller allocates for
+    /// them — a declared-length-vs-file-size check in the style of the
+    /// `MAGQEDG1` header validation.
+    pub fn take_len(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.take_u64(what)?;
+        let Ok(n) = usize::try_from(n) else {
+            bail!("artifact body corrupt: {what} count {n} exceeds the address space");
+        };
+        if n.saturating_mul(elem_bytes) > self.remaining() {
+            bail!(
+                "artifact body truncated: {what} claims {n} entries ({} bytes) but only {} \
+                 bytes remain",
+                n.saturating_mul(elem_bytes),
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut w = Writer::new();
+        assert!(w.is_empty());
+        w.put_u8(7);
+        w.put_u32(0xdead_beef);
+        w.put_u64(u64::MAX - 3);
+        w.put_f64(-0.0);
+        w.put_f64(f64::NAN);
+        assert_eq!(w.len(), 1 + 4 + 8 + 8 + 8);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.take_u8("a").unwrap(), 7);
+        assert_eq!(r.take_u32("b").unwrap(), 0xdead_beef);
+        assert_eq!(r.take_u64("c").unwrap(), u64::MAX - 3);
+        // Bit-exact: -0.0 keeps its sign, NaN keeps its payload.
+        assert_eq!(r.take_f64("d").unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.take_f64("e").unwrap().is_nan());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let bytes = [1u8, 2, 3];
+        let mut r = Reader::new(&bytes);
+        let err = r.take_u64("field").unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        assert!(err.contains("field"), "{err}");
+        // The failed take consumed nothing.
+        assert_eq!(r.remaining(), 3);
+    }
+
+    #[test]
+    fn length_prefix_validated_before_allocation() {
+        // Claims 2^60 8-byte entries in a 16-byte buffer: must fail on the
+        // declared-length check, never attempt the allocation.
+        let mut w = Writer::new();
+        w.put_u64(1u64 << 60);
+        w.put_u64(0);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let err = r.take_len(8, "nodes").unwrap_err().to_string();
+        assert!(err.contains("claims"), "{err}");
+    }
+
+    #[test]
+    fn oversize_count_rejected() {
+        let mut w = Writer::new();
+        w.put_u64(u64::MAX);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        // On 64-bit the usize conversion succeeds and the size check
+        // fires; either way it is an error, not a panic.
+        assert!(r.take_len(1, "huge").is_err());
+    }
+}

@@ -399,6 +399,7 @@ fn crash_and_resume_is_byte_identical_across_crash_points() {
                     let dir = tmp(&format!("crash_{tag}_{spec}"));
                     let opts = dist::WorkerOptions {
                         resume: true,
+                        artifact: None,
                         fault: Some(dist::FaultPlan::parse(spec).unwrap()),
                     };
                     let err = dist::run_worker_with(&plan, 0, &dir, &opts)
@@ -420,7 +421,7 @@ fn crash_and_resume_is_byte_identical_across_crash_points() {
                         &plan,
                         0,
                         &dir,
-                        &dist::WorkerOptions { resume: true, fault: None },
+                        &dist::WorkerOptions { resume: true, artifact: None, fault: None },
                     )
                     .unwrap();
                     assert_eq!(
@@ -462,7 +463,7 @@ fn resume_after_marker_skips_all_work_and_changes_nothing() {
         &plan,
         0,
         &dir,
-        &dist::WorkerOptions { resume: true, fault: None },
+        &dist::WorkerOptions { resume: true, artifact: None, fault: None },
     )
     .unwrap();
     let snapshot: Vec<(String, Vec<u8>)> = {
@@ -483,7 +484,7 @@ fn resume_after_marker_skips_all_work_and_changes_nothing() {
         &plan,
         0,
         &dir,
-        &dist::WorkerOptions { resume: true, fault: None },
+        &dist::WorkerOptions { resume: true, artifact: None, fault: None },
     )
     .unwrap();
     assert_eq!(again.jobs_run, 0, "trusted marker must skip every job");
