@@ -8,8 +8,12 @@
 //! segment merge), and the segment-merge sweep over merge-thread counts
 //! (one fixed segment directory, T ∈ {1, 2, 4, 8}), and the setup-reuse
 //! sweep (fresh setup + sample vs hydrating the same run from a saved
-//! `MAGQART1` setup artifact — docs/setup-artifact.md). Summaries are
-//! emitted to `BENCH_quilt.json` for the perf trajectory.
+//! `MAGQART1` setup artifact — docs/setup-artifact.md), and the
+//! trace-overhead sweep (the identical run with telemetry off vs on —
+//! docs/observability.md). Summaries are emitted to `BENCH_quilt.json`
+//! for the perf trajectory; every section renders through the shared
+//! report serializer (`magquilt::trace::report`), so the bench and
+//! `report.json` agree on field names by construction.
 //!
 //! `MAGQUILT_BENCH_FAST=1` shrinks the sweeps for smoke runs.
 
@@ -23,9 +27,17 @@ use magquilt::magm::{naive_sample, AttributeAssignment, MagmParams};
 use magquilt::quilt::{HybridSampler, Partition, PieceMode, QuiltSampler};
 use magquilt::rng::Rng;
 use magquilt::setup::SetupArtifact;
+use magquilt::trace::report::{shard_stats_obj, spill_obj, JsonObj};
+use magquilt::trace::TraceHandle;
 
 fn fast() -> bool {
     std::env::var("MAGQUILT_BENCH_FAST").is_ok()
+}
+
+/// One `BENCH_quilt.json` section: meta fields plus result rows, all
+/// rendered through the shared report serializer.
+fn section(name: &str, meta: JsonObj, rows: Vec<String>) -> String {
+    format!("  \"{name}\": {}", meta.arr("results", rows).render())
 }
 
 /// Attribute assignment with exactly `b`-fold multiplicity for each of
@@ -82,17 +94,26 @@ fn piece_mode_sweep() -> String {
             "{:>4} {:>8} {:>8} {:>12.2} {:>12.2} {:>9.1}x",
             b, n, cond_edges, cond, rej, speedup
         );
-        rows.push(format!(
-            "    {{\"b\": {b}, \"n\": {n}, \"edges_conditioned\": {cond_edges}, \
-             \"edges_rejection\": {rej_edges}, \
-             \"conditioned_ms\": {cond:.3}, \"rejection_ms\": {rej:.3}, \
-             \"speedup\": {speedup:.2}}}"
-        ));
+        rows.push(
+            JsonObj::new()
+                .uint("b", b as u64)
+                .uint("n", n as u64)
+                .uint("edges_conditioned", cond_edges as u64)
+                .uint("edges_rejection", rej_edges as u64)
+                .float("conditioned_ms", cond)
+                .float("rejection_ms", rej)
+                .float("speedup", speedup)
+                .render(),
+        );
     }
-    format!(
-        "  \"piece_modes\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
-         \"trials\": {trials},\n    \"results\": [\n{}\n    ]\n  }}",
-        rows.join(",\n")
+    section(
+        "piece_modes",
+        JsonObj::new()
+            .text("theta", "theta1")
+            .float("mu", 0.5)
+            .uint("d", d as u64)
+            .uint("trials", trials),
+        rows,
     )
 }
 
@@ -132,32 +153,30 @@ fn shard_sweep() -> String {
             "{:>4} {:>8} {:>10.2} {:>14.0} {:>14} {:>12}",
             s, edges, wall, eps, peak_max, dups
         );
-        let per_shard: Vec<String> = rep
-            .shard_stats
-            .iter()
-            .map(|st| {
-                format!(
-                    "{{\"shard\": {}, \"edges\": {}, \"batches\": {}, \"max_batch\": {}, \
-                     \"duplicates_dropped\": {}, \"peak_resident\": {}, \
-                     \"deferred\": {}, \"spill_runs\": {}, \"spill_bytes\": {}}}",
-                    st.shard, st.edges, st.batches, st.max_batch, st.duplicates_dropped,
-                    st.peak_resident, st.deferred, st.spill_runs, st.spill_bytes
-                )
-            })
-            .collect();
-        rows.push(format!(
-            "      {{\"shards\": {s}, \"workers\": {}, \"edges\": {edges}, \
-             \"wall_ms\": {wall:.3}, \"edges_per_sec\": {eps:.0}, \
-             \"batches_total\": {batches}, \"duplicates_dropped\": {dups}, \
-             \"peak_resident_max\": {peak_max},\n       \"per_shard\": [{}]}}",
-            rep.workers,
-            per_shard.join(", ")
-        ));
+        let per_shard: Vec<String> =
+            rep.shard_stats.iter().map(|st| shard_stats_obj(st).render()).collect();
+        rows.push(
+            JsonObj::new()
+                .uint("shards", s as u64)
+                .uint("workers", rep.workers as u64)
+                .uint("edges", edges as u64)
+                .float("wall_ms", wall)
+                .float("edges_per_sec", eps)
+                .uint("batches_total", batches)
+                .uint("duplicates_dropped", dups)
+                .uint("peak_resident_max", peak_max as u64)
+                .arr("per_shard", per_shard)
+                .render(),
+        );
     }
-    format!(
-        "  \"shard_sweep\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
-         \"trials\": {trials},\n    \"results\": [\n{}\n    ]\n  }}",
-        rows.join(",\n")
+    section(
+        "shard_sweep",
+        JsonObj::new()
+            .text("theta", "theta1")
+            .float("mu", 0.5)
+            .uint("d", d as u64)
+            .uint("trials", trials),
+        rows,
     )
 }
 
@@ -201,18 +220,26 @@ fn spill_sweep() -> String {
             "{:>4} {:>10} {:>10.2} {:>14} {:>12} {:>14}",
             s, written, wall, sp.deferred_shards, sp.spilled_shards, sp.spill_bytes
         );
-        rows.push(format!(
-            "      {{\"shards\": {s}, \"workers\": {}, \"edges\": {written}, \
-             \"wall_ms\": {wall:.3}, \"deferred_shards\": {}, \"spilled_shards\": {}, \
-             \"spill_runs\": {}, \"spill_bytes\": {}}}",
-            stats.workers, sp.deferred_shards, sp.spilled_shards, sp.spill_runs, sp.spill_bytes
-        ));
+        rows.push(
+            JsonObj::new()
+                .uint("shards", s as u64)
+                .uint("workers", stats.workers as u64)
+                .uint("edges", written)
+                .float("wall_ms", wall)
+                .obj("spill", spill_obj(&sp))
+                .render(),
+        );
         let _ = std::fs::remove_file(&path);
     }
-    format!(
-        "  \"spill_sweep\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
-         \"trials\": {trials}, \"spill_budget\": 0,\n    \"results\": [\n{}\n    ]\n  }}",
-        rows.join(",\n")
+    section(
+        "spill_sweep",
+        JsonObj::new()
+            .text("theta", "theta1")
+            .float("mu", 0.5)
+            .uint("d", d as u64)
+            .uint("trials", trials)
+            .uint("spill_budget", 0),
+        rows,
     )
 }
 
@@ -277,17 +304,28 @@ fn setup_sweep() -> String {
             dm,
             a + pm + tm + dm
         );
-        rows.push(format!(
-            "      {{\"setup_threads\": {t}, \"attrs_ms\": {a:.3}, \
-             \"partition_ms\": {pm:.3}, \"trie_ms\": {tm:.3}, \"trie_merge_ms\": {tmm:.3}, \
-             \"dag_ms\": {dm:.3}, \"total_ms\": {:.3}, \"pair_nodes\": {pair_nodes}}}",
-            a + pm + tm + dm
-        ));
+        rows.push(
+            JsonObj::new()
+                .uint("setup_threads", t as u64)
+                .float("attrs_ms", a)
+                .float("partition_ms", pm)
+                .float("trie_ms", tm)
+                .float("trie_merge_ms", tmm)
+                .float("dag_ms", dm)
+                .float("total_ms", a + pm + tm + dm)
+                .uint("pair_nodes", pair_nodes as u64)
+                .render(),
+        );
     }
-    format!(
-        "  \"setup_sweep\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
-         \"trials\": {trials}, \"attr_mode\": \"chunked\",\n    \"results\": [\n{}\n    ]\n  }}",
-        rows.join(",\n")
+    section(
+        "setup_sweep",
+        JsonObj::new()
+            .text("theta", "theta1")
+            .float("mu", 0.5)
+            .uint("d", d as u64)
+            .uint("trials", trials)
+            .text("attr_mode", "chunked"),
+        rows,
     )
 }
 
@@ -356,22 +394,30 @@ fn dist_sweep() -> String {
             report.overflow_runs(),
             ovf_edges
         );
-        rows.push(format!(
-            "      {{\"dist_workers\": {w}, \"shards\": {shards}, \"edges\": {}, \
-             \"workers_ms\": {wm:.3}, \"merge_ms\": {mm:.3}, \"total_ms\": {:.3}, \
-             \"overflow_runs\": {}, \"overflow_edges\": {ovf_edges}, \
-             \"cross_worker_duplicates\": {}}}",
-            report.total_edges,
-            wm + mm,
-            report.overflow_runs(),
-            report.duplicates_dropped()
-        ));
+        rows.push(
+            JsonObj::new()
+                .uint("dist_workers", w as u64)
+                .uint("shards", shards as u64)
+                .uint("edges", report.total_edges)
+                .float("workers_ms", wm)
+                .float("merge_ms", mm)
+                .float("total_ms", wm + mm)
+                .uint("overflow_runs", report.overflow_runs() as u64)
+                .uint("overflow_edges", ovf_edges as u64)
+                .uint("cross_worker_duplicates", report.duplicates_dropped())
+                .render(),
+        );
     }
     let _ = std::fs::remove_dir_all(&dir);
-    format!(
-        "  \"dist_sweep\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
-         \"shards\": {shards}, \"trials\": {trials},\n    \"results\": [\n{}\n    ]\n  }}",
-        rows.join(",\n")
+    section(
+        "dist_sweep",
+        JsonObj::new()
+            .text("theta", "theta1")
+            .float("mu", 0.5)
+            .uint("d", d as u64)
+            .uint("shards", shards as u64)
+            .uint("trials", trials),
+        rows,
     )
 }
 
@@ -433,25 +479,31 @@ fn merge_sweep() -> String {
             "{:>3} {:>10} {:>10.2} {:>14.0} {:>10} {:>9}",
             t, report.total_edges, wall, eps, report.deferred_shards, report.spilled_shards
         );
-        rows.push(format!(
-            "      {{\"merge_threads\": {t}, \"resolved_threads\": {}, \"edges\": {}, \
-             \"merge_ms\": {wall:.3}, \"edges_per_sec\": {eps:.0}, \
-             \"deferred_shards\": {}, \"spilled_shards\": {}, \"overflow_runs\": {}, \
-             \"cross_worker_duplicates\": {}}}",
-            report.merge_threads,
-            report.total_edges,
-            report.deferred_shards,
-            report.spilled_shards,
-            report.overflow_runs(),
-            report.duplicates_dropped()
-        ));
+        rows.push(
+            JsonObj::new()
+                .uint("merge_threads", t as u64)
+                .uint("resolved_threads", report.merge_threads as u64)
+                .uint("edges", report.total_edges)
+                .float("merge_ms", wall)
+                .float("edges_per_sec", eps)
+                .uint("deferred_shards", report.deferred_shards as u64)
+                .uint("spilled_shards", report.spilled_shards as u64)
+                .uint("overflow_runs", report.overflow_runs() as u64)
+                .uint("cross_worker_duplicates", report.duplicates_dropped())
+                .render(),
+        );
     }
     let _ = std::fs::remove_dir_all(&dir);
-    format!(
-        "  \"merge_sweep\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \"d\": {d}, \
-         \"workers\": {workers}, \"shards\": {shards}, \"trials\": {trials},\n    \
-         \"results\": [\n{}\n    ]\n  }}",
-        rows.join(",\n")
+    section(
+        "merge_sweep",
+        JsonObj::new()
+            .text("theta", "theta1")
+            .float("mu", 0.5)
+            .uint("d", d as u64)
+            .uint("workers", workers as u64)
+            .uint("shards", shards as u64)
+            .uint("trials", trials),
+        rows,
     )
 }
 
@@ -530,17 +582,100 @@ fn setup_reuse_sweep() -> String {
             "{:>6} {:>10.2} {:>12.2} {:>10.2} {:>9.2} {:>12.2} {:>8.2}x {:>12}",
             d, f, b, s, l, h, reuse, bytes
         );
-        rows.push(format!(
-            "      {{\"log2_nodes\": {d}, \"fresh_ms\": {f:.3}, \"build_ms\": {b:.3}, \
-             \"save_ms\": {s:.3}, \"load_ms\": {l:.3}, \"hydrated_ms\": {h:.3}, \
-             \"setup_reuse\": {reuse:.2}, \"artifact_bytes\": {bytes}}}"
-        ));
+        rows.push(
+            JsonObj::new()
+                .uint("log2_nodes", d as u64)
+                .float("fresh_ms", f)
+                .float("build_ms", b)
+                .float("save_ms", s)
+                .float("load_ms", l)
+                .float("hydrated_ms", h)
+                .float("setup_reuse", reuse)
+                .uint("artifact_bytes", bytes)
+                .render(),
+        );
     }
     let _ = std::fs::remove_dir_all(&dir);
-    format!(
-        "  \"setup_reuse\": {{\n    \"theta\": \"theta1\", \"mu\": 0.5, \
-         \"sampler\": \"quilt\", \"trials\": {trials},\n    \"results\": [\n{}\n    ]\n  }}",
-        rows.join(",\n")
+    section(
+        "setup_reuse",
+        JsonObj::new()
+            .text("theta", "theta1")
+            .float("mu", 0.5)
+            .text("sampler", "quilt")
+            .uint("trials", trials),
+        rows,
+    )
+}
+
+/// Trace-overhead sweep: the identical coordinator run with telemetry
+/// off (the default) and on (an in-memory `TraceHandle`). The sampled
+/// graphs are identical either way — the trace-sink lint keeps the
+/// telemetry write-only — so the `trace_overhead` column prices exactly
+/// what turning tracing on costs: pay for what you use, nothing when it
+/// is off. Returns the JSON rows for `BENCH_quilt.json`.
+fn trace_overhead_sweep() -> String {
+    let (ds, trials): (&[u32], u64) = if fast() { (&[12], 2) } else { (&[14, 16], 3) };
+    let dir = std::env::temp_dir().join("magquilt_bench_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    println!("\n# bench: trace overhead sweep (theta1, untraced vs traced coordinator run)");
+    println!(
+        "{:>6} {:>10} {:>12} {:>11} {:>15} {:>8}",
+        "log2n", "edges", "untraced_ms", "traced_ms", "trace_overhead", "events"
+    );
+    let mut rows = Vec::new();
+    for &d in ds {
+        let n = 1usize << d;
+        let params = MagmParams::homogeneous(Initiator::THETA1, 0.5, n, d);
+        let mut untraced_ms = Vec::new();
+        let mut traced_ms = Vec::new();
+        let mut edges = 0usize;
+        let mut events = 0usize;
+        for t in 0..trials {
+            let start = Instant::now();
+            let plain = Coordinator::new().sample_quilt(&params, t);
+            untraced_ms.push(start.elapsed().as_secs_f64() * 1e3);
+
+            let trace = TraceHandle::new("bench", "sample", None);
+            let coord = Coordinator::new().trace(trace.clone());
+            let start = Instant::now();
+            let traced = coord.sample_quilt(&params, t);
+            traced_ms.push(start.elapsed().as_secs_f64() * 1e3);
+            // Full byte-identity is asserted by the test suite; keep the
+            // cheap invariant hot in the bench too.
+            assert_eq!(plain.graph.num_edges(), traced.graph.num_edges());
+            edges = plain.graph.num_edges();
+
+            let path = dir.join(format!("trace_{d}.jsonl"));
+            trace.write_to(&path).expect("bench trace write");
+            let text = std::fs::read_to_string(&path).expect("bench trace read");
+            events = text.lines().count().saturating_sub(1);
+        }
+        let (u, tr) = (median(&mut untraced_ms), median(&mut traced_ms));
+        let overhead = tr - u;
+        println!(
+            "{:>6} {:>10} {:>12.2} {:>11.2} {:>15.3} {:>8}",
+            d, edges, u, tr, overhead, events
+        );
+        rows.push(
+            JsonObj::new()
+                .uint("log2_nodes", d as u64)
+                .uint("edges", edges as u64)
+                .float("untraced_ms", u)
+                .float("traced_ms", tr)
+                .float("trace_overhead", overhead)
+                .uint("trace_events", events as u64)
+                .render(),
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    section(
+        "trace_overhead",
+        JsonObj::new()
+            .text("theta", "theta1")
+            .float("mu", 0.5)
+            .text("sampler", "quilt")
+            .uint("trials", trials),
+        rows,
     )
 }
 
@@ -617,9 +752,12 @@ fn main() {
     let dist_rows = dist_sweep();
     let merge_rows = merge_sweep();
     let reuse_rows = setup_reuse_sweep();
-    let sections = [piece_rows, shard_rows, spill_rows, setup_rows, dist_rows, merge_rows,
-                    reuse_rows]
-        .join(",\n");
+    let trace_rows = trace_overhead_sweep();
+    let sections = [
+        piece_rows, shard_rows, spill_rows, setup_rows, dist_rows, merge_rows, reuse_rows,
+        trace_rows,
+    ]
+    .join(",\n");
     let json = format!("{{\n  \"bench\": \"quilt\",\n{sections}\n}}\n");
     match std::fs::write("BENCH_quilt.json", &json) {
         Ok(()) => println!("wrote BENCH_quilt.json"),

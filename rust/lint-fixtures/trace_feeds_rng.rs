@@ -1,0 +1,12 @@
+// maglint fixture: telemetry flowing against the write-only trace boundary.
+
+pub fn leak_into_sampler(piece_seed: u64, t: &TraceHandle) -> u64 {
+    let observed = t.lines().len() as u64;
+    piece_seed ^ observed
+}
+
+pub fn status(t: &TraceHandle) { t.emit("note", &[]); } // lint: trace-ok(fixture annotation)
+
+pub fn hash_trace_events(events: &[u8]) -> u64 {
+    crate::hashutil::fnv1a(events)
+}

@@ -199,6 +199,15 @@ pub struct RunSpec {
     /// only — the artifact's own identity hash guards against mismatch,
     /// so this field never influences output bytes.
     pub artifact: Option<String>,
+    /// Optional path for the run's structured trace stream
+    /// (`MAGQTRC1` JSONL, see `trace`). Telemetry is write-only — the
+    /// lint's trace-sink invariant guarantees it never influences
+    /// output bytes.
+    pub trace: Option<String>,
+    /// Optional path for the run's machine-readable report
+    /// (`MAGQRPT1` JSON, see `trace::report`). Write-only, like
+    /// `trace`.
+    pub report: Option<String>,
 }
 
 impl RunSpec {
@@ -225,6 +234,8 @@ impl RunSpec {
             worker_backoff_ms: 500,
             trials: 1,
             artifact: None,
+            trace: None,
+            report: None,
         }
     }
 
@@ -331,6 +342,14 @@ impl RunSpec {
             spec.artifact = Some(
                 v.as_str().ok_or_else(|| anyhow!("run.artifact must be a string"))?.to_string(),
             );
+        }
+        if let Some(v) = sec.get("trace") {
+            spec.trace =
+                Some(v.as_str().ok_or_else(|| anyhow!("run.trace must be a string"))?.to_string());
+        }
+        if let Some(v) = sec.get("report") {
+            spec.report =
+                Some(v.as_str().ok_or_else(|| anyhow!("run.report must be a string"))?.to_string());
         }
         Ok(spec)
     }
@@ -462,6 +481,22 @@ mod tests {
         assert_eq!(spec.artifact.as_deref(), Some("setup.art"));
         assert_eq!(RunSpec::default_spec().artifact, None);
         let bad = parse_toml("[run]\nartifact = 3\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
+    }
+
+    #[test]
+    fn telemetry_paths_parse_from_config() {
+        let m =
+            parse_toml("[run]\ntrace = \"run.trace.jsonl\"\nreport = \"report.json\"\n").unwrap();
+        let spec = RunSpec::from_section(m.get("run")).unwrap();
+        assert_eq!(spec.trace.as_deref(), Some("run.trace.jsonl"));
+        assert_eq!(spec.report.as_deref(), Some("report.json"));
+        // Telemetry is off by default.
+        assert_eq!(RunSpec::default_spec().trace, None);
+        assert_eq!(RunSpec::default_spec().report, None);
+        let bad = parse_toml("[run]\ntrace = 3\n").unwrap();
+        assert!(RunSpec::from_section(bad.get("run")).is_err());
+        let bad = parse_toml("[run]\nreport = 3\n").unwrap();
         assert!(RunSpec::from_section(bad.get("run")).is_err());
     }
 

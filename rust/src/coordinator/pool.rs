@@ -2,7 +2,7 @@
 
 use std::io;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -16,6 +16,7 @@ use crate::quilt::{sample_er_block, HybridPlan, HybridSampler, Partition, PieceB
                    PieceJob, PieceMode, QuiltSampler};
 use crate::rng::Rng;
 use crate::setup::{ArtifactHeader, SetupArtifact};
+use crate::trace::{progress::ProgressState, Fv, TraceHandle};
 
 /// Reference to a node block in a hybrid plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -292,6 +293,26 @@ pub struct SampleReport {
     pub setup: SetupStats,
 }
 
+impl SampleReport {
+    /// The run in [`RunStats`] form — what `report.json` serializes.
+    /// `num_edges` comes from the collected graph.
+    pub fn stats(&self) -> RunStats {
+        RunStats {
+            partition_size: self.partition_size,
+            num_jobs: self.num_jobs,
+            workers: self.workers,
+            num_shards: self.num_shards,
+            num_edges: self.graph.num_edges() as u64,
+            wall_ms: self.wall_ms,
+            edges_per_sec: self.edges_per_sec,
+            dropped_resamples: self.dropped_resamples,
+            shard_stats: self.shard_stats.clone(),
+            spill: self.spill,
+            setup: self.setup,
+        }
+    }
+}
+
 /// Upper bound on shard mergers (each is a thread). Public because the
 /// distributed planner must clamp its shard count the same way every
 /// worker process will.
@@ -309,6 +330,13 @@ pub struct Coordinator {
     setup_threads: usize,
     /// How attribute sampling consumes randomness.
     attr_mode: AttrSampleMode,
+    /// Write-only telemetry stream (disabled by default; the sampled
+    /// output is byte-identical either way — the trace-sink lint keeps
+    /// telemetry out of every output-determining module).
+    trace: TraceHandle,
+    /// Live progress counters, bumped as jobs complete and shards seal
+    /// (None = no live progress).
+    progress: Option<Arc<ProgressState>>,
 }
 
 impl Default for Coordinator {
@@ -329,6 +357,8 @@ impl Coordinator {
             shards: 0,
             setup_threads: 0,
             attr_mode: AttrSampleMode::default(),
+            trace: TraceHandle::disabled(),
+            progress: None,
         }
     }
 
@@ -380,6 +410,23 @@ impl Coordinator {
     /// is required for the attribute phase to parallelize.
     pub fn attr_mode(mut self, mode: AttrSampleMode) -> Self {
         self.attr_mode = mode;
+        self
+    }
+
+    /// Attach a telemetry stream. Events (setup, job plan, per-job and
+    /// per-shard completions, run summary) are emitted as the run
+    /// progresses; the sampled output is byte-identical with tracing on
+    /// or off.
+    pub fn trace(mut self, trace: TraceHandle) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Attach live progress counters (shared with a heartbeat thread or
+    /// a status printer). Observability only — never read back into the
+    /// run.
+    pub fn progress(mut self, progress: Arc<ProgressState>) -> Self {
+        self.progress = Some(progress);
         self
     }
 
@@ -815,6 +862,32 @@ impl Coordinator {
         }
         sink.begin(n, num_shards)?;
         let n64 = n as u64;
+        self.trace.emit(
+            "setup",
+            &[
+                ("threads", Fv::U(plan.setup.setup_threads as u64)),
+                ("attr_mode", Fv::S(plan.setup.attr_mode.name().to_string())),
+                ("artifact", Fv::S(format!("{:016x}", plan.setup.artifact_hash))),
+                ("attrs_ms", Fv::F(plan.setup.attrs_ms)),
+                ("partition_ms", Fv::F(plan.setup.partition_ms)),
+                ("trie_ms", Fv::F(plan.setup.trie_ms)),
+                ("trie_merge_ms", Fv::F(plan.setup.trie_merge_ms)),
+                ("dag_ms", Fv::F(plan.setup.dag_ms)),
+                ("artifact_load_ms", Fv::F(plan.setup.artifact_load_ms)),
+            ],
+        );
+        self.trace.emit(
+            "job_plan",
+            &[
+                ("jobs", Fv::U(num_jobs as u64)),
+                ("partition", Fv::U(partition_size as u64)),
+                ("shards", Fv::U(num_shards as u64)),
+                ("workers", Fv::U(workers as u64)),
+            ],
+        );
+        if let Some(progress) = self.progress.as_deref() {
+            progress.jobs_total.fetch_add(num_jobs as u64, Ordering::Relaxed);
+        }
 
         // Per-job *source span* ([`JobPlan::job_source_spans`]): shards
         // count their contributing jobs; when a shard's count hits zero
@@ -883,6 +956,8 @@ impl Coordinator {
             let aborted_ref = &aborted;
             let spans_ref = &job_spans;
             let remaining_ref = &remaining;
+            let trace_ref = &self.trace;
+            let progress_ref = self.progress.as_deref();
 
             // Shard mergers: each drains its own channel, folding batches
             // into a sorted, deduplicated run as they arrive, and reports
@@ -972,6 +1047,7 @@ impl Coordinator {
                         // out-of-range id must fail the run, not have
                         // the source clamped into the last shard.
                         let run = local.into_edges();
+                        let job_edges = run.len() as u64;
                         let mut bad: Option<Edge> = None;
                         let mut closed_shard: Option<usize> = None;
                         if num_shards == 1 {
@@ -1050,6 +1126,13 @@ impl Coordinator {
                                 }
                             }
                         }
+                        trace_ref.emit(
+                            "job_done",
+                            &[("job", Fv::U(idx as u64)), ("edges", Fv::U(job_edges))],
+                        );
+                        if let Some(progress) = progress_ref {
+                            progress.jobs_done.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                 });
             }
@@ -1073,6 +1156,21 @@ impl Coordinator {
                         // the job queue before reporting.
                         aborted.store(true, Ordering::Relaxed);
                     }
+                }
+                self.trace.emit(
+                    "shard_seal",
+                    &[
+                        ("shard", Fv::U(index as u64)),
+                        ("edges", Fv::U(stats.edges as u64)),
+                        ("deferred", Fv::B(stats.deferred)),
+                        ("spill_runs", Fv::U(stats.spill_runs)),
+                        ("spill_bytes", Fv::U(stats.spill_bytes)),
+                    ],
+                );
+                if let Some(progress) = self.progress.as_deref() {
+                    progress.edges.fetch_add(stats.edges as u64, Ordering::Relaxed);
+                    progress.shards_sealed.fetch_add(1, Ordering::Relaxed);
+                    progress.bytes_written.fetch_add(stats.edges as u64 * 8, Ordering::Relaxed);
                 }
                 shard_stats.push(stats);
             }
@@ -1112,6 +1210,16 @@ impl Coordinator {
             shard_stats,
             setup: plan.setup,
         };
+        self.trace.emit(
+            "run_done",
+            &[
+                ("edges", Fv::U(stats.num_edges)),
+                ("shards", Fv::U(stats.num_shards as u64)),
+                ("jobs", Fv::U(stats.num_jobs as u64)),
+                ("dropped_resamples", Fv::U(stats.dropped_resamples)),
+                ("wall_ms", Fv::F(stats.wall_ms)),
+            ],
+        );
         Ok((sink.finalize()?, stats))
     }
 }
@@ -1600,5 +1708,75 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn tracing_does_not_change_output_sweep() {
+        // The telemetry acceptance matrix: with a live trace stream and
+        // progress counters attached, the sampled graph must stay
+        // byte-identical to the untraced run — for both samplers, both
+        // piece modes, and several shard/worker shapes.
+        let pq = params(256, 8, 0.5);
+        let ph = params(300, 9, 0.85);
+        for mode in [PieceMode::Conditioned, PieceMode::Rejection] {
+            for (shards, workers) in [(1usize, 1usize), (3, 4), (8, 2)] {
+                let tag = format!("{mode:?} S={shards} W={workers}");
+                let plain = Coordinator::new().workers(workers).shards(shards).piece_mode(mode);
+                let traced = plain
+                    .clone()
+                    .trace(TraceHandle::new("equiv", "run", None))
+                    .progress(Arc::new(ProgressState::new()));
+                assert_eq!(
+                    plain.sample_quilt(&pq, 71).graph,
+                    traced.sample_quilt(&pq, 71).graph,
+                    "quilt {tag}"
+                );
+                assert_eq!(
+                    plain.sample_hybrid(&ph, 73).graph,
+                    traced.sample_hybrid(&ph, 73).graph,
+                    "hybrid {tag}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trace_streams_are_deterministic_across_runs() {
+        // Two same-seed runs race their workers differently, but after
+        // stripping the hash-exempt fields (seq, timings, ...) the
+        // canonicalized streams must be identical.
+        let p = params(256, 8, 0.5);
+        let mut canonical = Vec::new();
+        for _ in 0..2 {
+            let trace = TraceHandle::new("det", "run", None);
+            let coord = Coordinator::new().workers(4).shards(3).trace(trace.clone());
+            let rep = coord.sample_quilt(&p, 83);
+            assert!(rep.graph.num_edges() > 0);
+            let lines = trace.lines();
+            for name in [
+                "\"event\":\"setup\"",
+                "\"event\":\"job_plan\"",
+                "\"event\":\"shard_seal\"",
+                "\"event\":\"run_done\"",
+            ] {
+                assert!(lines.iter().any(|l| l.contains(name)), "missing {name}");
+            }
+            canonical.push(crate::trace::canonical_stream(&lines));
+        }
+        assert_eq!(canonical[0], canonical[1], "canonical trace streams diverged");
+    }
+
+    #[test]
+    fn progress_counters_track_the_run() {
+        let p = params(256, 8, 0.5);
+        let progress = Arc::new(ProgressState::new());
+        let coord = Coordinator::new().workers(3).shards(3).progress(progress.clone());
+        let rep = coord.sample_quilt(&p, 91);
+        let snap = progress.snapshot();
+        assert_eq!(snap.jobs_total, rep.num_jobs as u64);
+        assert_eq!(snap.jobs_done, rep.num_jobs as u64);
+        assert_eq!(snap.edges, rep.graph.num_edges() as u64);
+        assert_eq!(snap.shards_sealed, rep.num_shards as u64);
+        assert_eq!(snap.bytes_written, rep.graph.num_edges() as u64 * 8);
     }
 }

@@ -24,6 +24,10 @@
 //! * **setup artifact** — a shared `setup-*.art` prologue file
 //!   ([`crate::setup`]); an input the workers read, not run state, and
 //!   self-validating on load; kept.
+//! * **telemetry** — a worker's `trc-*.trace.jsonl` / `rpt-*.report.json`
+//!   ([`crate::trace`]); write-only observability that never feeds the
+//!   merge, and evidence worth preserving after a crash; kept (foreign
+//!   telemetry follows the foreign-plan rule like everything else).
 //!
 //! Quarantine moves files into a `quarantine/` subdirectory instead of
 //! deleting them: the doctor's job is to make the directory mergeable
@@ -71,6 +75,9 @@ pub enum FileStatus {
     StaleHeartbeat,
     /// A shared setup artifact (`setup-*.art`): an input, not run state.
     Artifact,
+    /// This plan's trace/report telemetry: write-only observability,
+    /// kept as post-crash evidence.
+    Telemetry,
     /// A name the runtime never produces.
     Unrecognized,
 }
@@ -88,6 +95,7 @@ impl FileStatus {
             FileStatus::StaleMarker(_) => "stale-marker",
             FileStatus::StaleHeartbeat => "stale-heartbeat",
             FileStatus::Artifact => "artifact",
+            FileStatus::Telemetry => "telemetry",
             FileStatus::Unrecognized => "unrecognized",
         }
     }
@@ -95,7 +103,7 @@ impl FileStatus {
     /// The repair this status calls for.
     fn remedy(&self) -> Remedy {
         match self {
-            FileStatus::Complete | FileStatus::Artifact => Remedy::Keep,
+            FileStatus::Complete | FileStatus::Artifact | FileStatus::Telemetry => Remedy::Keep,
             FileStatus::StaleTemp | FileStatus::StaleMarker(_) | FileStatus::StaleHeartbeat => {
                 Remedy::Remove
             }
@@ -324,6 +332,10 @@ pub fn doctor(dir: &Path, plan: Option<&ShardPlan>, fix: bool) -> Result<DoctorR
             statuses.insert(name.clone(), FileStatus::StaleHeartbeat);
             continue;
         }
+        if matches!(meta.kind, MetaFileKind::Trace | MetaFileKind::Report) {
+            statuses.insert(name.clone(), FileStatus::Telemetry);
+            continue;
+        }
         let verdict = std::fs::read_to_string(dir.join(name))
             .ok()
             .and_then(|text| parse_marker(&text))
@@ -392,8 +404,8 @@ mod tests {
     use super::*;
     use crate::config::{ModelSpec, RunSpec};
     use crate::dist::worker::{
-        heartbeat_file_name, marker_file_name, overflow_file_name, segment_file_name,
-        write_marker, SegmentSummary,
+        heartbeat_file_name, marker_file_name, overflow_file_name, report_file_name,
+        segment_file_name, trace_file_name, write_marker, SegmentSummary,
     };
     use crate::graph::{write_edge_list_binary, EdgeList};
 
@@ -457,6 +469,12 @@ mod tests {
         std::fs::write(dir.join(super::super::PLAN_FILE), "ignored").unwrap();
         let artifact = "setup-0011223344556677.art";
         std::fs::write(dir.join(artifact), b"opaque to the doctor").unwrap();
+        let trace = trace_file_name(&hash, 0);
+        std::fs::write(dir.join(&trace), "{\"format\":\"MAGQTRC1\"}\n").unwrap();
+        let rpt = report_file_name(&hash, 1);
+        std::fs::write(dir.join(&rpt), "{\"format\":\"MAGQRPT1\"}").unwrap();
+        let foreign_trace = trace_file_name("deadbeefdeadbeef", 0);
+        std::fs::write(dir.join(&foreign_trace), "other run's telemetry").unwrap();
 
         // Dry run: everything classified, nothing touched.
         let report = doctor(&dir, Some(&plan), false).unwrap();
@@ -477,6 +495,13 @@ mod tests {
         assert_eq!(status_of(&report, "notes.txt").status, FileStatus::Unrecognized);
         assert_eq!(status_of(&report, artifact).status, FileStatus::Artifact);
         assert_eq!(status_of(&report, artifact).action, DoctorAction::Kept);
+        assert_eq!(status_of(&report, &trace).status, FileStatus::Telemetry);
+        assert_eq!(status_of(&report, &trace).action, DoctorAction::Kept);
+        assert_eq!(status_of(&report, &rpt).status, FileStatus::Telemetry);
+        assert!(matches!(
+            status_of(&report, &foreign_trace).status,
+            FileStatus::ForeignPlan(_)
+        ));
         assert_eq!(status_of(&report, temp).action, DoctorAction::WouldRemove);
         assert_eq!(status_of(&report, &foreign).action, DoctorAction::WouldQuarantine);
         assert!(dir.join(&truncated).exists(), "dry run touches nothing");
@@ -485,10 +510,16 @@ mod tests {
         // Fix: stale files removed, damaged/foreign quarantined.
         let report = doctor(&dir, Some(&plan), true).unwrap();
         assert_eq!(report.removed, 3, "temp + heartbeat + marker");
-        assert_eq!(report.quarantined, 5, "truncated + foreign + ovf + misplaced + notes");
+        assert_eq!(
+            report.quarantined,
+            6,
+            "truncated + foreign seg + foreign trace + ovf + misplaced + notes"
+        );
         assert!(dir.join(&good_seg).exists());
         assert!(dir.join(&good_ovf).exists());
         assert!(dir.join(artifact).exists(), "setup artifacts are inputs, never repaired away");
+        assert!(dir.join(&trace).exists(), "this plan's telemetry is evidence, kept");
+        assert!(dir.join(&rpt).exists());
         assert!(!dir.join(temp).exists());
         assert!(!dir.join(&hb).exists());
         assert!(!dir.join(&marker).exists());
@@ -497,6 +528,7 @@ mod tests {
         assert!(q.join(&foreign).exists());
         assert!(q.join(&self_ovf).exists());
         assert!(q.join(&misplaced).exists());
+        assert!(q.join(&foreign_trace).exists());
         assert!(q.join("notes.txt").exists());
 
         // The directory is now healthy (the quarantine dir is ignored).

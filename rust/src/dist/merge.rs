@@ -43,6 +43,8 @@ use crate::graph::{
     read_binary_body, read_binary_header, BinaryFileSink, BinaryHeader, Edge, EdgeSink,
     ShardDisposition, ShardMerger, ShardSpec, DEFAULT_SPILL_BUDGET,
 };
+use crate::trace::report::{report_header, JsonObj};
+use crate::trace::{Fv, TraceHandle};
 
 use super::plan::ShardPlan;
 use super::worker::{parse_meta_file_name, parse_segment_file_name, SegmentKind};
@@ -282,6 +284,51 @@ impl MergeReport {
     }
 }
 
+/// Serialize one merged shard row for `report.json`.
+pub fn merged_shard_obj(row: &MergedShardReport) -> JsonObj {
+    JsonObj::new()
+        .uint("shard", row.shard as u64)
+        .uint("owner_edges", row.owner_edges as u64)
+        .uint("overflow_runs", row.overflow_runs as u64)
+        .uint("overflow_edges", row.overflow_edges as u64)
+        .uint("duplicates_dropped", row.duplicates_dropped)
+        .uint("merged_edges", row.merged_edges as u64)
+}
+
+/// Serialize a [`MergeReport`] (the `merge` object every driver and
+/// `merge-segments` report embeds).
+pub fn merge_obj(report: &MergeReport) -> JsonObj {
+    JsonObj::new()
+        .uint("total_edges", report.total_edges)
+        .uint("merge_threads", report.merge_threads as u64)
+        .float("merge_ms", report.merge_ms)
+        .uint("overflow_runs", report.overflow_runs() as u64)
+        .uint("duplicates_dropped", report.duplicates_dropped())
+        .uint("deferred_shards", report.deferred_shards as u64)
+        .uint("spilled_shards", report.spilled_shards as u64)
+        .arr("shards", report.shards.iter().map(|s| merged_shard_obj(s).render()).collect())
+}
+
+/// Render a standalone `merge-segments` report (kind `merge`).
+pub fn merge_report_json(run_id: &str, report: &MergeReport) -> String {
+    report_header("merge", run_id).obj("merge", merge_obj(report)).render()
+}
+
+/// Emit the per-shard trace event for one delivered row.
+fn emit_shard_event(trace: &TraceHandle, row: &MergedShardReport) {
+    trace.emit(
+        "merge_shard",
+        &[
+            ("shard", Fv::U(row.shard as u64)),
+            ("owner_edges", Fv::U(row.owner_edges as u64)),
+            ("overflow_runs", Fv::U(row.overflow_runs as u64)),
+            ("overflow_edges", Fv::U(row.overflow_edges as u64)),
+            ("duplicates_dropped", Fv::U(row.duplicates_dropped)),
+            ("merged_edges", Fv::U(row.merged_edges as u64)),
+        ],
+    );
+}
+
 /// Knobs for [`merge_segments_with`].
 #[derive(Debug, Clone)]
 pub struct MergeOptions {
@@ -296,6 +343,9 @@ pub struct MergeOptions {
     /// Delete consumed segment/overflow files after the output is
     /// finalized (durable), leaving the directory drained.
     pub remove_inputs: bool,
+    /// Trace sink for `merge_shard` / `merge_done` events (disabled by
+    /// default; write-only — see the `trace-sink` lint invariant).
+    pub trace: TraceHandle,
 }
 
 impl Default for MergeOptions {
@@ -304,6 +354,7 @@ impl Default for MergeOptions {
             merge_threads: 0,
             spill_budget: DEFAULT_SPILL_BUDGET,
             remove_inputs: false,
+            trace: TraceHandle::disabled(),
         }
     }
 }
@@ -423,6 +474,7 @@ pub fn merge_segments_with(
             sink.begin_shard(shard, run.len())?;
             sink.accept_shard(shard, run)
                 .with_context(|| format!("writing shard {shard}"))?;
+            emit_shard_event(&opts.trace, &row);
             report.shards.push(row);
         }
     } else {
@@ -480,6 +532,7 @@ pub fn merge_segments_with(
                                 continue;
                             }
                         }
+                        emit_shard_event(&opts.trace, &row);
                         report.shards.push(row);
                     }
                     Err(e) => {
@@ -525,6 +578,19 @@ pub fn merge_segments_with(
         }
     }
     report.merge_ms = start.elapsed().as_secs_f64() * 1e3;
+    opts.trace.emit(
+        "merge_done",
+        &[
+            ("shards", Fv::U(report.shards.len() as u64)),
+            ("total_edges", Fv::U(report.total_edges)),
+            ("overflow_runs", Fv::U(report.overflow_runs() as u64)),
+            ("duplicates_dropped", Fv::U(report.duplicates_dropped())),
+            ("deferred", Fv::U(report.deferred_shards as u64)),
+            ("spilled", Fv::U(report.spilled_shards as u64)),
+            ("merge_threads", Fv::U(report.merge_threads as u64)),
+            ("merge_ms", Fv::F(report.merge_ms)),
+        ],
+    );
     Ok(report)
 }
 
@@ -825,6 +891,39 @@ mod tests {
         write_run(&dir, &segment_file_name(&hash, 1, 1), 16, &[]);
         let err = merge_segments(&dir, &plan, &dir.join("out.bin"), false).unwrap_err();
         assert!(err.to_string().contains("nodes"), "{err}");
+    }
+
+    #[test]
+    fn traced_merge_is_byte_identical_and_reports_render() {
+        let (plan, dir) = build_overflow_dir("traced");
+        let out_plain = dir.parent().unwrap().join("traced_plain.bin");
+        let plain =
+            merge_segments_with(&dir, &plan, &out_plain, &MergeOptions::default()).unwrap();
+        let trace = TraceHandle::new(&plan.hash_hex(), "merge", None);
+        let out_traced = dir.parent().unwrap().join("traced_traced.bin");
+        let traced = merge_segments_with(
+            &dir,
+            &plan,
+            &out_traced,
+            &MergeOptions { trace: trace.clone(), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(
+            std::fs::read(&out_plain).unwrap(),
+            std::fs::read(&out_traced).unwrap(),
+            "tracing never changes the merged bytes"
+        );
+        assert_eq!(plain.total_edges, traced.total_edges);
+        let lines = trace.lines();
+        let shard_events =
+            lines.iter().filter(|l| l.contains("\"event\":\"merge_shard\"")).count();
+        assert_eq!(shard_events, 8, "one merge_shard event per shard");
+        assert!(lines.iter().any(|l| l.contains("\"event\":\"merge_done\"")));
+        // The merge report renders through the shared serializer and
+        // validates as kind `merge`.
+        let json = merge_report_json(&plan.hash_hex(), &traced);
+        assert_eq!(crate::trace::report::validate_report(&json).unwrap(), "merge");
+        assert!(json.contains("\"total_edges\":40"), "{json}");
     }
 
     #[test]

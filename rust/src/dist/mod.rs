@@ -70,7 +70,16 @@
 //!   re-sampling (see [`worker::run_worker_with`]).
 //! * `hb-<hash>-w<worker:04>.beat` — a liveness heartbeat the worker
 //!   touches while running; the supervisor treats a stale one as a hung
-//!   worker. Never merged; drained with the segments.
+//!   worker. Its body carries a live progress record
+//!   ([`crate::trace::progress`]) the driver and `magquilt top`
+//!   aggregate into one `progress:` line. Never merged; drained with the
+//!   segments.
+//! * `trc-<hash>-w<worker:04>.trace.jsonl` /
+//!   `rpt-<hash>-w<worker:04>.report.json` — optional telemetry
+//!   (`--trace` / `--report`): the worker's structured trace stream and
+//!   machine-readable run report (see [`crate::trace`] and
+//!   `docs/observability.md`). Write-only observability, never merge
+//!   inputs; the driver collects them before draining the directory.
 //!
 //! Files are written under a pid + run-nonce temp name and atomically
 //! renamed, so any number of workers — across hosts on a shared
@@ -145,24 +154,28 @@ pub mod worker;
 
 pub use doctor::{doctor, DoctorAction, DoctorEntry, DoctorReport, FileStatus, QUARANTINE_DIR};
 pub use fault::{parse_driver_fault, FaultKind, FaultPlan};
-pub use merge::{merge_segments, merge_segments_with, scan_segments, validate_segments,
-                MergeOptions, MergeReport, MergedShardReport, SegmentCatalog, SegmentMeta,
-                ShardSegments};
+pub use merge::{merge_obj, merge_report_json, merge_segments, merge_segments_with,
+                merged_shard_obj, scan_segments, validate_segments, MergeOptions, MergeReport,
+                MergedShardReport, SegmentCatalog, SegmentMeta, ShardSegments};
 pub use plan::{ShardPlan, PLAN_FORMAT};
-pub use supervise::{backoff_delay_ms, supervise_workers, Heartbeat, SuperviseOptions,
-                    SuperviseReport, WorkerFailure, WorkerOutcome, DEFAULT_STALL_MS,
-                    MAX_BACKOFF_MS};
+pub use supervise::{backoff_delay_ms, fleet_progress_line, supervise_workers, Heartbeat,
+                    SuperviseOptions, SuperviseReport, WorkerFailure, WorkerOutcome,
+                    DEFAULT_STALL_MS, MAX_BACKOFF_MS};
 pub use worker::{build_job_plan_from_artifact, build_plan_artifact, heartbeat_file_name,
                  job_owners, marker_file_name, overflow_file_name, parse_marker,
-                 parse_meta_file_name, parse_segment_file_name, run_worker, run_worker_with,
-                 scan_resume_state, segment_file_name, write_marker, MetaFileInfo,
-                 MetaFileKind, ResumeState, SegmentFileInfo, SegmentKind, SegmentSink,
-                 SegmentSummary, WorkerOptions, WorkerReport, MARKER_FORMAT};
+                 parse_meta_file_name, parse_segment_file_name, report_file_name, run_worker,
+                 run_worker_with, scan_resume_state, segment_file_name, trace_file_name,
+                 worker_report_json, write_marker, MetaFileInfo, MetaFileKind, ResumeState,
+                 SegmentFileInfo, SegmentKind, SegmentSink, SegmentSummary, WorkerOptions,
+                 WorkerReport, MARKER_FORMAT};
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::{Command, Stdio};
 
 use anyhow::{bail, Context, Result};
+
+use crate::trace::report::report_header;
+use crate::trace::{Fv, TraceHandle};
 
 /// File name of the plan manifest inside a segment directory.
 pub const PLAN_FILE: &str = "plan.toml";
@@ -178,6 +191,34 @@ pub struct DistReport {
     pub restarts: usize,
     /// The merge outcome (totals + per-shard rows).
     pub merge: MergeReport,
+}
+
+/// Telemetry outputs for the local distributed driver. Both default off;
+/// either one also turns on the matching worker-side flag so the driver
+/// can collect the per-worker artifacts before the merge drains them.
+#[derive(Debug, Clone, Default)]
+pub struct DistTelemetry {
+    /// Write the driver's trace stream (its own events, the merge's, and
+    /// every worker's absorbed stream) to this path.
+    pub trace: Option<PathBuf>,
+    /// Write the driver's `report.json` (kind `driver`) to this path.
+    pub report: Option<PathBuf>,
+}
+
+/// Render the driver's `report.json` (kind `driver`): fleet shape,
+/// restart count, the merge outcome, and the worker reports collected
+/// before the merge drained them (raw JSON objects, embedded verbatim).
+pub fn driver_report_json(
+    hash_hex: &str,
+    report: &DistReport,
+    worker_reports: Vec<String>,
+) -> String {
+    report_header("driver", hash_hex)
+        .uint("workers", report.workers as u64)
+        .uint("restarts", report.restarts as u64)
+        .obj("merge", merge_obj(&report.merge))
+        .arr("worker_reports", worker_reports)
+        .render()
 }
 
 /// Prepare a directory for (re)running **this same plan**: remove
@@ -200,10 +241,11 @@ fn clean_stale_artifacts(dir: &Path, plan: &ShardPlan) -> Result<()> {
         let foreign = if let Some(info) = parse_segment_file_name(&name) {
             (info.hash_hex != hash).then_some(info.hash_hex)
         } else if let Some(meta) = parse_meta_file_name(&name) {
-            if meta.hash_hex == hash && meta.kind == MetaFileKind::Heartbeat {
-                // A heartbeat can only be stale here: our workers are not
-                // running yet, and a *live* foreign worker would imply a
-                // foreign plan hash (caught below).
+            if meta.hash_hex == hash && meta.kind != MetaFileKind::Marker {
+                // Heartbeats and telemetry (trace/report) can only be
+                // stale here: our workers are not running yet, a *live*
+                // foreign worker would imply a foreign plan hash (caught
+                // below), and only markers carry resume state.
                 std::fs::remove_file(entry.path())
                     .with_context(|| format!("removing stale {name}"))?;
                 continue;
@@ -280,6 +322,27 @@ pub fn run_distributed_with(
     worker_exe: &Path,
     opts: &SuperviseOptions,
 ) -> Result<DistReport> {
+    run_distributed_telemetry(plan, segment_dir, out, worker_exe, opts, &DistTelemetry::default())
+}
+
+/// [`run_distributed_with`] plus telemetry outputs: when
+/// [`DistTelemetry::trace`] is set, each worker runs with `--trace`, the
+/// driver absorbs every worker's trace stream into its own (plus its
+/// driver/merge lifecycle events) and writes the combined JSONL to that
+/// path; when [`DistTelemetry::report`] is set, workers run with
+/// `--report` and the driver composes their reports plus the merge
+/// outcome into one `report.json` of kind `driver`. The worker telemetry
+/// files are collected *before* the merge drains the segment directory.
+/// Telemetry is write-only: the output file is byte-identical with it on
+/// or off (the trace-sink lint makes that structural).
+pub fn run_distributed_telemetry(
+    plan: &ShardPlan,
+    segment_dir: &Path,
+    out: &Path,
+    worker_exe: &Path,
+    opts: &SuperviseOptions,
+    telemetry: &DistTelemetry,
+) -> Result<DistReport> {
     plan.validate()?;
     std::fs::create_dir_all(segment_dir)
         .with_context(|| format!("creating segment dir {}", segment_dir.display()))?;
@@ -288,6 +351,18 @@ pub fn run_distributed_with(
     plan.save(&plan_path)?;
 
     let hash = plan.hash_hex();
+    let trace = if telemetry.trace.is_some() {
+        TraceHandle::new(&hash, "driver", None)
+    } else {
+        TraceHandle::disabled()
+    };
+    trace.emit(
+        "driver_start",
+        &[
+            ("workers", Fv::U(plan.num_workers() as u64)),
+            ("shards", Fv::U(plan.num_shards as u64)),
+        ],
+    );
     let supervised =
         supervise_workers(plan.num_workers(), segment_dir, &hash, opts, |w, fault| {
             let mut cmd = Command::new(worker_exe);
@@ -303,24 +378,66 @@ pub fn run_distributed_with(
             if let Some(artifact) = &opts.artifact {
                 cmd.arg("--artifact").arg(artifact);
             }
+            if telemetry.trace.is_some() {
+                cmd.arg("--trace");
+            }
+            if telemetry.report.is_some() {
+                cmd.arg("--report");
+            }
             if let Some(spec) = fault {
                 cmd.arg("--inject-fault").arg(spec);
             }
             cmd
         })?;
+    trace.emit("workers_done", &[("restarts", Fv::U(supervised.restarts as u64))]);
+
+    // Collect worker telemetry *before* the merge: remove_inputs drains
+    // every same-plan meta file, telemetry included.
+    let mut worker_reports = Vec::new();
+    for w in 0..plan.num_workers() {
+        if telemetry.trace.is_some() {
+            let path = segment_dir.join(trace_file_name(&hash, w));
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                trace.absorb_stream(&text);
+            }
+        }
+        if telemetry.report.is_some() {
+            let path = segment_dir.join(report_file_name(&hash, w));
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                worker_reports.push(text.trim().to_string());
+            }
+        }
+    }
 
     // All children are reaped (success or not), so leftover temps from
     // crashed attempts are provably dead and safe to sweep; the merge
     // would otherwise refuse to run over them.
     sweep_temp_files(segment_dir)?;
 
-    let merge = merge_segments(segment_dir, plan, out, true)?;
+    let merge_opts = MergeOptions {
+        merge_threads: plan.merge_threads,
+        remove_inputs: true,
+        trace: trace.clone(),
+        ..Default::default()
+    };
+    let merge = merge_segments_with(segment_dir, plan, out, &merge_opts)?;
     std::fs::remove_file(&plan_path).ok();
     // Remove the directory if we own all of it (ignore failure: the user
     // may have pointed --segment-dir at a shared location, or the doctor
     // may have quarantined files there).
     std::fs::remove_dir(segment_dir).ok();
-    Ok(DistReport { workers: plan.num_workers(), restarts: supervised.restarts, merge })
+    let report = DistReport { workers: plan.num_workers(), restarts: supervised.restarts, merge };
+    if let Some(path) = &telemetry.trace {
+        trace.write_to(path)?;
+    }
+    if let Some(path) = &telemetry.report {
+        let (dir, name) = crate::trace::split_dir_name(path)
+            .with_context(|| format!("driver report path {} has no file name", path.display()))?;
+        let body = driver_report_json(&hash, &report, worker_reports);
+        crate::graph::write_atomic(&dir, &name, body.as_bytes())
+            .with_context(|| format!("writing driver report {}", path.display()))?;
+    }
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -344,6 +461,8 @@ mod tests {
         std::fs::write(dir.join(overflow_file_name(&hash, 1, 1)), "resume me").unwrap();
         std::fs::write(dir.join(marker_file_name(&hash, 0)), "resume me").unwrap();
         std::fs::write(dir.join(heartbeat_file_name(&hash, 1)), "").unwrap();
+        std::fs::write(dir.join(trace_file_name(&hash, 0)), "stale telemetry").unwrap();
+        std::fs::write(dir.join(report_file_name(&hash, 1)), "stale telemetry").unwrap();
         std::fs::write(dir.join("magquilt-tmp-1-x-0-seg.part"), "stale").unwrap();
         std::fs::write(dir.join("keep.txt"), "user data").unwrap();
         clean_stale_artifacts(&dir, &plan).unwrap();
@@ -353,7 +472,8 @@ mod tests {
             .collect();
         left.sort();
         // Resume state (segments, overflow, marker) survives; the temp,
-        // the stale heartbeat, and the stale manifest are gone.
+        // the stale heartbeat, the stale telemetry, and the stale
+        // manifest are gone.
         assert_eq!(
             left,
             vec![
@@ -379,6 +499,30 @@ mod tests {
         assert!(err.to_string().contains("refusing to overwrite"), "{err}");
         assert!(foreign_marker.exists(), "foreign marker must survive");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn driver_report_renders_and_validates() {
+        let report = DistReport {
+            workers: 3,
+            restarts: 1,
+            merge: MergeReport {
+                shards: Vec::new(),
+                total_edges: 42,
+                merge_threads: 2,
+                merge_ms: 1.5,
+                deferred_shards: 0,
+                spilled_shards: 0,
+            },
+        };
+        let worker_report = r#"{"format":"MAGQRPT1","kind":"worker"}"#.to_string();
+        let json = driver_report_json("00ff00ff00ff00ff", &report, vec![worker_report]);
+        let kind = crate::trace::report::validate_report(&json).unwrap();
+        assert_eq!(kind, "driver");
+        assert!(json.contains("\"workers\":3"), "{json}");
+        assert!(json.contains("\"restarts\":1"), "{json}");
+        assert!(json.contains("\"total_edges\":42"), "{json}");
+        assert!(json.contains("\"kind\":\"worker\""), "{json}");
     }
 
     #[test]

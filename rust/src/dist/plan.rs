@@ -141,6 +141,8 @@ pub const RUNSPEC_EXEMPT: &[&str] = &[
     "worker_backoff_ms",
     "trials",
     "artifact",
+    "trace",
+    "report",
 ];
 
 /// Compile-time companion to the fate lists: exhaustively destructures
@@ -182,6 +184,9 @@ fn hash_disposition_witness(plan: &ShardPlan, run: &RunSpec) {
         trials: _,            // RUNSPEC_EXEMPT
         artifact: _,          // RUNSPEC_EXEMPT (a cache location; the artifact's own
                               // identity hash covers the output-determining fields)
+        trace: _,             // RUNSPEC_EXEMPT (write-only telemetry path; the
+                              // trace-sink lint keeps it out of output state)
+        report: _,            // RUNSPEC_EXEMPT (write-only report path, ditto)
     } = run;
 }
 

@@ -25,6 +25,9 @@ use std::time::{Duration, Instant, SystemTime};
 
 use anyhow::{bail, Context, Result};
 
+use crate::trace::console;
+use crate::trace::progress::{aggregate, parse_progress, ProgressState};
+
 use super::plan::ShardPlan;
 use super::worker::heartbeat_file_name;
 
@@ -39,6 +42,9 @@ const POLL_MS: u64 = 25;
 
 /// How often a supervised worker touches its heartbeat file.
 const BEAT_MS: u64 = 500;
+
+/// Minimum gap between the driver's live-progress lines.
+const PROGRESS_MS: u64 = 1_000;
 
 /// Why one worker attempt failed.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -113,6 +119,10 @@ pub struct SuperviseOptions {
     /// Deterministic fault injection: pass the spec to this worker's
     /// **first** attempt only (tests / CI). Retries run clean.
     pub fault: Option<(usize, String)>,
+    /// Print a throttled aggregate `progress:` line while the fleet
+    /// runs, built from the workers' heartbeat progress records (see
+    /// [`crate::trace::progress`]). Observability only.
+    pub live_progress: bool,
 }
 
 impl SuperviseOptions {
@@ -124,8 +134,29 @@ impl SuperviseOptions {
             stall_ms: DEFAULT_STALL_MS,
             artifact: None,
             fault: None,
+            live_progress: false,
         }
     }
+}
+
+/// Read, parse, and aggregate every worker's heartbeat payload under
+/// `hash_hex` in `segment_dir` into one console `progress:` line.
+/// Workers with no heartbeat — or a legacy empty one — simply don't
+/// count as reporting. Shared by the supervising driver and
+/// `magquilt top`.
+pub fn fleet_progress_line(num_workers: usize, segment_dir: &Path, hash_hex: &str) -> String {
+    let mut records = Vec::new();
+    for w in 0..num_workers {
+        let path = segment_dir.join(heartbeat_file_name(hash_hex, w));
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Some(record) = parse_progress(&text) {
+                records.push(record);
+            }
+        }
+    }
+    let reporting = records.len();
+    let agg = aggregate(&records);
+    console::progress_line(reporting, num_workers, agg.jobs_done, agg.jobs_total, agg.edges)
 }
 
 /// What the supervisor saw across the whole fleet.
@@ -211,6 +242,8 @@ pub fn supervise_workers(
         let slot = launch(w, 1, &mut outcomes[w]);
         slots.push(slot);
     }
+
+    let mut last_progress: Option<Instant> = None;
 
     let kill_all = |slots: &mut [Slot]| {
         for slot in slots.iter_mut() {
@@ -327,6 +360,15 @@ pub fn supervise_workers(
         if all_done {
             break;
         }
+        if opts.live_progress {
+            let due = last_progress
+                .map(|t| t.elapsed() >= Duration::from_millis(PROGRESS_MS))
+                .unwrap_or(true);
+            if due {
+                println!("{}", fleet_progress_line(num_workers, segment_dir, hash_hex));
+                last_progress = Some(Instant::now());
+            }
+        }
         std::thread::sleep(Duration::from_millis(POLL_MS));
     }
 
@@ -350,13 +392,31 @@ impl Heartbeat {
     /// missing). Never fails: a heartbeat that cannot write simply goes
     /// silent, and the supervisor's stall deadline handles the rest.
     pub fn start(dir: &Path, hash_hex: &str, worker: usize) -> Heartbeat {
+        Heartbeat::start_with_progress(dir, hash_hex, worker, None)
+    }
+
+    /// As [`Heartbeat::start`], but each beat also publishes the current
+    /// [`crate::trace::progress`] counters as the file body, giving the
+    /// supervising driver (and `magquilt top`) something to aggregate.
+    /// With `None` the body stays empty — a legacy mtime-only beat.
+    pub fn start_with_progress(
+        dir: &Path,
+        hash_hex: &str,
+        worker: usize,
+        progress: Option<Arc<ProgressState>>,
+    ) -> Heartbeat {
         let _ = std::fs::create_dir_all(dir);
         let path = dir.join(heartbeat_file_name(hash_hex, worker));
         let stop = Arc::new(AtomicBool::new(false));
         let (stop2, path2) = (Arc::clone(&stop), path.clone());
+        let hash = hash_hex.to_string();
         let handle = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
-                let _ = std::fs::write(&path2, b"");
+                let body = match &progress {
+                    Some(p) => p.render(&hash, worker),
+                    None => String::new(),
+                };
+                let _ = std::fs::write(&path2, body.as_bytes());
                 let mut slept = 0;
                 while slept < BEAT_MS && !stop2.load(Ordering::Relaxed) {
                     std::thread::sleep(Duration::from_millis(25));
@@ -396,7 +456,14 @@ mod tests {
     }
 
     fn opts(retries: usize) -> SuperviseOptions {
-        SuperviseOptions { retries, backoff_ms: 1, stall_ms: 0, artifact: None, fault: None }
+        SuperviseOptions {
+            retries,
+            backoff_ms: 1,
+            stall_ms: 0,
+            artifact: None,
+            fault: None,
+            live_progress: false,
+        }
     }
 
     #[test]
@@ -495,13 +562,7 @@ mod tests {
     #[test]
     fn stalled_worker_is_killed_and_classified() {
         let dir = fresh_dir("stall");
-        let opts = SuperviseOptions {
-            retries: 0,
-            backoff_ms: 1,
-            stall_ms: 200,
-            artifact: None,
-            fault: None,
-        };
+        let opts = SuperviseOptions { stall_ms: 200, ..opts(0) };
         // The worker sleeps far past the stall deadline and never beats.
         let start = Instant::now();
         let err = supervise_workers(1, &dir, "00ff00ff00ff00ff", &opts, |_, _| sh("sleep 60"))
@@ -514,13 +575,7 @@ mod tests {
     fn heartbeat_keeps_a_slow_worker_alive() {
         let dir = fresh_dir("beat");
         let hash = "00ff00ff00ff00ff";
-        let opts = SuperviseOptions {
-            retries: 0,
-            backoff_ms: 1,
-            stall_ms: 1500,
-            artifact: None,
-            fault: None,
-        };
+        let opts = SuperviseOptions { stall_ms: 1500, ..opts(0) };
         // The worker runs well past the stall deadline but beats its
         // heartbeat file the whole time (mirroring what the CLI worker's
         // Heartbeat guard does), so it must NOT be classified as stalled.
@@ -539,11 +594,8 @@ mod tests {
     fn fault_spec_reaches_only_the_first_attempt_of_the_target() {
         let dir = fresh_dir("fault");
         let opts = SuperviseOptions {
-            retries: 1,
-            backoff_ms: 1,
-            stall_ms: 0,
-            artifact: None,
             fault: Some((1, "crash-after-segments=0".to_string())),
+            ..opts(1)
         };
         let mut seen: Vec<(usize, Option<String>)> = Vec::new();
         let report = supervise_workers(2, &dir, "00ff00ff00ff00ff", &opts, |w, fault| {
@@ -581,5 +633,50 @@ mod tests {
             assert!(path.exists(), "guard touches the heartbeat file");
         }
         assert!(!path.exists(), "guard removes the file on drop");
+    }
+
+    #[test]
+    fn heartbeat_with_progress_publishes_parseable_records() {
+        let dir = fresh_dir("hb_progress");
+        let hash = "00ff00ff00ff00ff";
+        let progress = Arc::new(ProgressState::new());
+        progress.jobs_total.store(8, Ordering::Relaxed);
+        progress.jobs_done.store(3, Ordering::Relaxed);
+        progress.edges.store(1000, Ordering::Relaxed);
+        let path = dir.join(heartbeat_file_name(hash, 2));
+        {
+            let _guard =
+                Heartbeat::start_with_progress(&dir, hash, 2, Some(Arc::clone(&progress)));
+            let deadline = Instant::now() + Duration::from_secs(5);
+            let mut record = None;
+            while record.is_none() && Instant::now() < deadline {
+                record = std::fs::read_to_string(&path).ok().and_then(|t| parse_progress(&t));
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            let record = record.expect("heartbeat published a progress record");
+            assert_eq!(record.plan, hash);
+            assert_eq!(record.worker, 2);
+            assert_eq!(record.counts.jobs_done, 3);
+            assert_eq!(record.counts.jobs_total, 8);
+            assert_eq!(record.counts.edges, 1000);
+        }
+        assert!(!path.exists(), "guard removes the file on drop");
+    }
+
+    #[test]
+    fn fleet_progress_line_aggregates_heartbeat_payloads() {
+        let dir = fresh_dir("fleet_line");
+        let hash = "00ff00ff00ff00ff";
+        // Worker 0 reports counters; worker 1 is a legacy empty
+        // heartbeat; worker 2 has no heartbeat at all. Only worker 0
+        // counts as reporting.
+        let state = ProgressState::new();
+        state.jobs_total.store(512, Ordering::Relaxed);
+        state.jobs_done.store(400, Ordering::Relaxed);
+        state.edges.store(1_234, Ordering::Relaxed);
+        std::fs::write(dir.join(heartbeat_file_name(hash, 0)), state.render(hash, 0)).unwrap();
+        std::fs::write(dir.join(heartbeat_file_name(hash, 1)), "").unwrap();
+        let line = fleet_progress_line(3, &dir, hash);
+        assert_eq!(line, "progress: w1/3 jobs 400/512 edges 1.2k");
     }
 }

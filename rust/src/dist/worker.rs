@@ -67,6 +67,7 @@
 use std::collections::BTreeMap;
 use std::io::{self, Read};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -77,6 +78,9 @@ use crate::graph::{read_binary_header, unique_temp_path, write_atomic, BinaryEdg
 use crate::kpgm::Initiator;
 use crate::magm::{AttributeAssignment, MagmParams};
 use crate::rng::Rng;
+use crate::trace::progress::ProgressState;
+use crate::trace::report::{report_header, run_stats_obj, JsonObj};
+use crate::trace::{Fv, TraceHandle};
 
 use super::fault::FaultPlan;
 use super::plan::ShardPlan;
@@ -98,9 +102,22 @@ pub fn marker_file_name(hash_hex: &str, worker: usize) -> String {
 }
 
 /// File name of `worker`'s liveness heartbeat (touched periodically by a
-/// supervised worker; only its mtime carries information).
+/// supervised worker; its mtime carries liveness, its body an optional
+/// progress record — see [`crate::trace::progress`]).
 pub fn heartbeat_file_name(hash_hex: &str, worker: usize) -> String {
     format!("hb-{hash_hex}-w{worker:04}.beat")
+}
+
+/// File name of `worker`'s structured trace stream (`MAGQTRC1` JSONL,
+/// written once at the end of the run when tracing is enabled).
+pub fn trace_file_name(hash_hex: &str, worker: usize) -> String {
+    format!("trc-{hash_hex}-w{worker:04}.trace.jsonl")
+}
+
+/// File name of `worker`'s machine-readable run report (`MAGQRPT1`
+/// JSON, written once at the end of the run when reporting is enabled).
+pub fn report_file_name(hash_hex: &str, worker: usize) -> String {
+    format!("rpt-{hash_hex}-w{worker:04}.report.json")
 }
 
 /// What kind of segment a file in the segment directory holds.
@@ -155,6 +172,10 @@ pub enum MetaFileKind {
     Marker,
     /// A `hb-…​.beat` liveness heartbeat.
     Heartbeat,
+    /// A `trc-…​.trace.jsonl` structured trace stream.
+    Trace,
+    /// A `rpt-…​.report.json` run report.
+    Report,
 }
 
 /// Parsed identity of a marker/heartbeat file.
@@ -169,12 +190,17 @@ pub struct MetaFileInfo {
 }
 
 /// Parse a file name produced by [`marker_file_name`] /
-/// [`heartbeat_file_name`]. Returns `None` for anything else.
+/// [`heartbeat_file_name`] / [`trace_file_name`] / [`report_file_name`].
+/// Returns `None` for anything else.
 pub fn parse_meta_file_name(name: &str) -> Option<MetaFileInfo> {
     let (kind, rest) = if let Some(r) = name.strip_prefix("done-") {
         (MetaFileKind::Marker, r.strip_suffix(".ok")?)
     } else if let Some(r) = name.strip_prefix("hb-") {
         (MetaFileKind::Heartbeat, r.strip_suffix(".beat")?)
+    } else if let Some(r) = name.strip_prefix("trc-") {
+        (MetaFileKind::Trace, r.strip_suffix(".trace.jsonl")?)
+    } else if let Some(r) = name.strip_prefix("rpt-") {
+        (MetaFileKind::Report, r.strip_suffix(".report.json")?)
     } else {
         return None;
     };
@@ -655,6 +681,28 @@ pub struct WorkerReport {
     pub stats: RunStats,
 }
 
+/// Render a worker's `report.json` (kind `worker`) through the shared
+/// [`crate::trace::report`] serializer.
+pub fn worker_report_json(hash_hex: &str, report: &WorkerReport) -> String {
+    report_header("worker", hash_hex)
+        .uint("worker", report.worker as u64)
+        .uint("owned_lo", report.owned.0 as u64)
+        .uint("owned_hi", report.owned.1 as u64)
+        .uint("jobs_total", report.jobs_total as u64)
+        .uint("jobs_run", report.jobs_run as u64)
+        .uint("resumed_shards", report.resumed_shards as u64)
+        .obj(
+            "summary",
+            JsonObj::new()
+                .uint("owned_segments", report.summary.owned_segments as u64)
+                .uint("owned_edges", report.summary.owned_edges)
+                .uint("overflow_files", report.summary.overflow_files as u64)
+                .uint("overflow_edges", report.summary.overflow_edges),
+        )
+        .obj("stats", run_stats_obj(&report.stats))
+        .render()
+}
+
 /// Model parameters for a plan's model spec.
 pub fn plan_params(plan: &ShardPlan) -> MagmParams {
     MagmParams::homogeneous(
@@ -757,6 +805,16 @@ pub struct WorkerOptions {
     pub artifact: Option<PathBuf>,
     /// Deterministic fault injection (tests / CI only).
     pub fault: Option<FaultPlan>,
+    /// Write a `trc-…​.trace.jsonl` structured trace stream into the
+    /// segment directory at the end of the run.
+    pub trace: bool,
+    /// Write a `rpt-…​.report.json` run report into the segment
+    /// directory at the end of the run.
+    pub report: bool,
+    /// Live progress counters to bump while sampling (a supervised
+    /// worker's heartbeat publishes their snapshots; see
+    /// [`crate::trace::progress`]).
+    pub progress: Option<Arc<ProgressState>>,
 }
 
 /// Execute worker `worker`'s slice of `plan`, writing segment and
@@ -805,7 +863,13 @@ pub fn run_worker_with(
         });
     }
 
-    let coord = plan_coordinator(plan);
+    let hash = plan.hash_hex();
+    let trace = if opts.trace {
+        TraceHandle::new(&hash, "worker", Some(worker))
+    } else {
+        TraceHandle::disabled()
+    };
+    let mut coord = plan_coordinator(plan);
     let mut job_plan = match &opts.artifact {
         Some(path) => build_job_plan_from_artifact(plan, &coord, path)
             .with_context(|| format!("worker {worker} hydrating its setup artifact"))?,
@@ -830,7 +894,21 @@ pub fn run_worker_with(
     }
     let jobs_run = job_plan.len();
     let resumed_shards = satisfied.len();
-    let sink = SegmentSink::new(segment_dir, plan.hash_hex(), worker, owned, plan.num_shards)
+    trace.emit(
+        "worker_start",
+        &[
+            ("owned_lo", Fv::U(owned.0 as u64)),
+            ("owned_hi", Fv::U(owned.1 as u64)),
+            ("jobs_total", Fv::U(jobs_total as u64)),
+            ("jobs_owned", Fv::U(jobs_run as u64)),
+            ("resumed_shards", Fv::U(resumed_shards as u64)),
+        ],
+    );
+    coord = coord.trace(trace.clone());
+    if let Some(progress) = &opts.progress {
+        coord = coord.progress(Arc::clone(progress));
+    }
+    let sink = SegmentSink::new(segment_dir, hash.clone(), worker, owned, plan.num_shards)
         .with_resume(satisfied)
         .with_fault(opts.fault.clone());
     let (summary, stats) = coord
@@ -843,14 +921,40 @@ pub fn run_worker_with(
             plan.num_shards
         );
     }
+    let report =
+        WorkerReport { worker, owned, jobs_total, jobs_run, resumed_shards, summary, stats };
+    trace.emit(
+        "worker_done",
+        &[
+            ("jobs_run", Fv::U(report.jobs_run as u64)),
+            ("owned_edges", Fv::U(report.summary.owned_edges)),
+            ("overflow_files", Fv::U(report.summary.overflow_files as u64)),
+            ("overflow_edges", Fv::U(report.summary.overflow_edges)),
+        ],
+    );
+    // Telemetry lands before the completion marker so the marker stays
+    // the last write of the run; both are plain overwrites on a re-run.
+    if opts.trace {
+        trace
+            .write_to(&segment_dir.join(trace_file_name(&hash, worker)))
+            .with_context(|| format!("worker {worker} writing its trace stream"))?;
+    }
+    if opts.report {
+        write_atomic(
+            segment_dir,
+            &report_file_name(&hash, worker),
+            worker_report_json(&hash, &report).as_bytes(),
+        )
+        .with_context(|| format!("worker {worker} writing its run report"))?;
+    }
     if let Some(f) = &opts.fault {
         // The last crash window: all segments final, marker not yet
         // written.
         f.before_marker()?;
     }
-    write_marker(segment_dir, &plan.hash_hex(), worker, &summary)
+    write_marker(segment_dir, &hash, worker, &report.summary)
         .with_context(|| format!("worker {worker} writing its completion marker"))?;
-    Ok(WorkerReport { worker, owned, jobs_total, jobs_run, resumed_shards, summary, stats })
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -885,8 +989,19 @@ mod tests {
         let info = parse_meta_file_name(&hb).unwrap();
         assert_eq!(info.kind, MetaFileKind::Heartbeat);
         assert_eq!((info.hash_hex.as_str(), info.worker), (hash, 12));
+        let trc = trace_file_name(hash, 2);
+        assert_eq!(trc, "trc-00ff00ff00ff00ff-w0002.trace.jsonl");
+        let info = parse_meta_file_name(&trc).unwrap();
+        assert_eq!(info.kind, MetaFileKind::Trace);
+        assert_eq!((info.hash_hex.as_str(), info.worker), (hash, 2));
+        let rpt = report_file_name(hash, 9);
+        assert_eq!(rpt, "rpt-00ff00ff00ff00ff-w0009.report.json");
+        let info = parse_meta_file_name(&rpt).unwrap();
+        assert_eq!(info.kind, MetaFileKind::Report);
+        assert_eq!((info.hash_hex.as_str(), info.worker), (hash, 9));
         // Meta names never parse as segments and vice versa.
         assert!(parse_segment_file_name(&done).is_none());
+        assert!(parse_segment_file_name(&trc).is_none());
         assert!(parse_meta_file_name(&segment_file_name(hash, 0, 0)).is_none());
     }
 
@@ -907,6 +1022,10 @@ mod tests {
             "done-00ff00ff00ff00ff-0.ok",
             "done-00ff00ff00ff00ff-w0000.beat",
             "hb-00ff00ff00ff00ff-w0000.ok",
+            "trc-00ff00ff00ff00ff-w0000.jsonl",
+            "trc-xyz-w0000.trace.jsonl",
+            "rpt-00ff00ff00ff00ff-0.report.json",
+            "rpt-00ff00ff00ff00ff-w0000.json",
             "quarantine",
         ] {
             assert!(parse_meta_file_name(name).is_none(), "{name}");
@@ -1206,5 +1325,72 @@ mod tests {
         let err = scan_resume_state(&dir, &plan, 0).unwrap_err();
         assert!(err.to_string().contains("refusing to resume"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_telemetry_is_equivalent_and_resume_tolerates_its_files() {
+        use std::sync::atomic::Ordering;
+
+        use crate::config::{ModelSpec, RunSpec};
+        let mut model = ModelSpec::default_spec();
+        model.log2_nodes = 8;
+        model.attributes = 8;
+        let mut run = RunSpec::default_spec();
+        run.shards = 4;
+        run.seed = 31;
+        let plan = ShardPlan::new(&model, &run, 2).unwrap();
+        let hash = plan.hash_hex();
+        let base = std::env::temp_dir().join("magquilt_worker_telemetry_test");
+        let _ = std::fs::remove_dir_all(&base);
+        let plain_dir = base.join("plain");
+        let traced_dir = base.join("traced");
+        let progress = Arc::new(ProgressState::new());
+        let opts = WorkerOptions {
+            trace: true,
+            report: true,
+            progress: Some(Arc::clone(&progress)),
+            ..WorkerOptions::default()
+        };
+        for w in 0..2 {
+            let plain = run_worker(&plan, w, &plain_dir).unwrap();
+            let traced = run_worker_with(&plan, w, &traced_dir, &opts).unwrap();
+            assert_eq!(traced.summary, plain.summary, "worker {w}");
+        }
+        // Every run-state file (segments, overflows, markers) is
+        // byte-identical; telemetry only ever adds files.
+        for entry in std::fs::read_dir(&plain_dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            let a = std::fs::read(plain_dir.join(&name)).unwrap();
+            let b = std::fs::read(traced_dir.join(&name)).unwrap();
+            assert_eq!(a, b, "{name:?}");
+        }
+        // The shared progress counters saw both workers' slices through.
+        assert!(progress.jobs_done.load(Ordering::Relaxed) > 0);
+        assert_eq!(
+            progress.jobs_done.load(Ordering::Relaxed),
+            progress.jobs_total.load(Ordering::Relaxed)
+        );
+        // The trace stream carries the worker lifecycle events.
+        let text =
+            std::fs::read_to_string(traced_dir.join(trace_file_name(&hash, 0))).unwrap();
+        assert!(text.starts_with("{\"format\":\"MAGQTRC1\""), "{text}");
+        for event in ["worker_start", "run_done", "worker_done"] {
+            assert!(text.contains(&format!("\"event\":\"{event}\"")), "{event}");
+        }
+        // The report validates as kind `worker`.
+        let report =
+            std::fs::read_to_string(traced_dir.join(report_file_name(&hash, 1))).unwrap();
+        assert_eq!(crate::trace::report::validate_report(&report).unwrap(), "worker");
+        // A resume scan tolerates the telemetry files: the marker fast
+        // path still short-circuits the whole run.
+        let resumed = run_worker_with(
+            &plan,
+            0,
+            &traced_dir,
+            &WorkerOptions { resume: true, ..WorkerOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(resumed.jobs_run, 0, "marker fast path with telemetry present");
+        let _ = std::fs::remove_dir_all(&base);
     }
 }

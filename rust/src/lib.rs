@@ -77,6 +77,7 @@ pub mod rngtags;
 pub mod runtime;
 pub mod setup;
 pub mod stats;
+pub mod trace;
 
 /// Crate version (mirrors Cargo.toml).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

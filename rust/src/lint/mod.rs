@@ -10,7 +10,7 @@
 //! static pass over `rust/src`, run by `cargo run --bin maglint`, by the
 //! `lint` CI job, and by the self-run test below.
 //!
-//! The six rules (see `docs/determinism.md` for the rationale and the
+//! The seven rules (see `docs/determinism.md` for the rationale and the
 //! annotation syntax):
 //!
 //! 1. **RNG stream registry** — fork tags live in `rust/src/rngtags.rs`
@@ -45,6 +45,14 @@
 //!    scope) is an error unless annotated `// lint: fault-ok(<reason>)`,
 //!    so an injected crash can change *when* bytes hit disk but never
 //!    *which* bytes the sampler derives.
+//! 7. **Trace sink** — telemetry is write-only, in both directions: the
+//!    trace machinery (`TraceWriter`, `TraceHandle`, `ProgressState`,
+//!    `trace::`) may not be named inside an output-determining module
+//!    (the rule-3 scope) unless annotated `// lint: trace-ok(<reason>)`,
+//!    and the sources under `trace/` may not name the stream-fork or
+//!    hashing machinery (`Rng`, `.fork(`, `fnv1a`) at all — so a trace
+//!    value can never feed a stream fork, a hash, or any
+//!    output-determining state (see `docs/observability.md`).
 //!
 //! The pass is deliberately line-based (zero new dependencies, no syntax
 //! tree): string literals and `//` comments are stripped before matching,
@@ -77,6 +85,8 @@ pub enum Rule {
     HashDrift,
     /// Fault-injection hook in an output-determining module.
     FaultHook,
+    /// Telemetry flowing against the write-only trace boundary.
+    TraceSink,
 }
 
 impl Rule {
@@ -91,6 +101,7 @@ impl Rule {
             Rule::PanicPath => "panic-path",
             Rule::HashDrift => "hash-drift",
             Rule::FaultHook => "fault-hook",
+            Rule::TraceSink => "trace-sink",
         }
     }
 }
@@ -335,6 +346,12 @@ fn in_panic_scope(relpath: &str) -> bool {
         || relpath.starts_with("dist/")
 }
 
+/// Is `relpath` inside the telemetry layer itself (rule 7's write-only
+/// side)?
+fn in_trace_scope(relpath: &str) -> bool {
+    relpath.starts_with("trace/")
+}
+
 const NONDET_PATTERNS: &[&str] =
     &["SystemTime::now", "Instant::now", "available_parallelism", "std::env"];
 const PANIC_PATTERNS: &[&str] = &[".unwrap()", ".expect(", "panic!(", "unreachable!("];
@@ -342,6 +359,14 @@ const PANIC_PATTERNS: &[&str] = &[".unwrap()", ".expect(", "panic!(", "unreachab
 /// `dist/fault.rs` — the lint is what proves the hooks never migrate into
 /// the sampling layers.
 const FAULT_PATTERNS: &[&str] = &["FaultPlan", "inject_fault", "crash_point"];
+/// Names of the telemetry machinery (rule 7, outward direction): an
+/// output-determining module naming these could route trace state back
+/// into the sample. Kept in sync with `trace/mod.rs`.
+const TRACE_MACHINERY: &[&str] = &["TraceWriter", "TraceHandle", "ProgressState", "trace::"];
+/// Stream-fork / hashing machinery banned inside `trace/` itself
+/// (rule 7, inward direction): trace code that cannot even name these
+/// cannot fold telemetry into anything output-determining.
+const TRACE_FORBIDDEN: &[&str] = &["Rng", ".fork(", "fnv1a"];
 
 /// Lint one source file (rules 1–4). `relpath` is relative to `rust/src`
 /// and selects the module-scoped rules; the registry file itself is
@@ -486,6 +511,44 @@ pub fn lint_source(relpath: &str, source: &str) -> Vec<Finding> {
                             "{pat} referenced in an output-determining module; fault injection \
                              belongs to the I/O/driver layers (dist/fault.rs) — move it or \
                              annotate with lint: fault-ok(reason)"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // Rule 7: the trace boundary is write-only, checked from both
+        // sides. Outward: output-determining modules may not name the
+        // telemetry machinery (a sampler that can read a TraceHandle can
+        // fold observability back into the sample). Inward: trace/ may
+        // not name the stream-fork or hashing machinery at all.
+        if in_nondet_scope(relpath) && !annotated(raw, "trace") {
+            for pat in TRACE_MACHINERY {
+                if code.contains(pat) {
+                    findings.push(Finding {
+                        rule: Rule::TraceSink,
+                        file: relpath.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "{pat} referenced in an output-determining module; telemetry is \
+                             write-only — emit from the coordinator/driver layers or annotate \
+                             with lint: trace-ok(reason)"
+                        ),
+                    });
+                }
+            }
+        }
+        if in_trace_scope(relpath) && !annotated(raw, "trace") {
+            for pat in TRACE_FORBIDDEN {
+                if code.contains(pat) {
+                    findings.push(Finding {
+                        rule: Rule::TraceSink,
+                        file: relpath.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "{pat} referenced inside trace/; the telemetry layer may not \
+                             touch RNG streams or output hashing — move the computation out \
+                             or annotate with lint: trace-ok(reason)"
                         ),
                     });
                 }
@@ -1173,6 +1236,38 @@ mod tests {
         // dist/fault.rs and its callers are exactly where the hooks live.
         let f = lint_source("dist/fault.rs", &fixture("fault_in_kpgm.rs"));
         assert!(!f.iter().any(|x| x.rule == Rule::FaultHook), "{f:?}");
+    }
+
+    #[test]
+    fn fixture_trace_feeds_rng_trips() {
+        // Outward direction: the sampler naming the trace machinery.
+        let f = lint_source("kpgm/bad.rs", &fixture("trace_feeds_rng.rs"));
+        assert!(
+            f.iter().any(|x| x.rule == Rule::TraceSink && x.line == 3),
+            "expected a trace-sink finding on line 3, got {f:?}"
+        );
+        assert!(
+            !f.iter().any(|x| x.rule == Rule::TraceSink && x.line == 8),
+            "annotated trace use must not be flagged: {f:?}"
+        );
+        // Inward direction: trace/ touching the hashing machinery.
+        let f = lint_source("trace/bad.rs", &fixture("trace_feeds_rng.rs"));
+        assert!(
+            f.iter().any(|x| x.rule == Rule::TraceSink && x.line == 11),
+            "expected a trace-sink finding on line 11, got {f:?}"
+        );
+        // Outside both scopes the same source is fine: the coordinator
+        // and the driver layers are exactly where trace handles live.
+        let f = lint_source("coordinator/pool.rs", &fixture("trace_feeds_rng.rs"));
+        assert!(!f.iter().any(|x| x.rule == Rule::TraceSink), "{f:?}");
+    }
+
+    #[test]
+    fn trace_scope_covers_the_telemetry_layer() {
+        for file in ["trace/mod.rs", "trace/console.rs", "trace/progress.rs", "trace/report.rs"] {
+            assert!(in_trace_scope(file), "{file} must be trace-sink linted");
+        }
+        assert!(!in_trace_scope("coordinator/pool.rs"));
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! One home for the CLI's human-readable status lines.
+//!
+//! CI's release-smoke job greps several of these strings verbatim
+//! (`.github/workflows/ci.yml`); before this module they were `format!`
+//! literals scattered through `cli.rs`, so a wording tweak silently
+//! broke the smoke legs. The unit tests below pin the exact renderings
+//! the smoke greps match — change a string here and the test names the
+//! CI leg you are about to break.
+
+use crate::coordinator::SetupStats;
+use crate::graph::SpillSummary;
+
+/// The `setup:` line: phase timings for a fresh build, or the artifact
+/// identity when the prologue was hydrated (the non-zero hash is the
+/// visible witness that setup was skipped).
+/// CI grep: `setup: artifact [0-9a-f]{16} hydrated` and `setup:`.
+pub fn setup_line(setup: &SetupStats) -> String {
+    if setup.artifact_hash != 0 {
+        return format!(
+            "setup: artifact {:016x} hydrated in {:.1} ms — attrs/partition/tries/dag skipped \
+             ({} setup threads at build, {} attrs)",
+            setup.artifact_hash,
+            setup.artifact_load_ms,
+            setup.setup_threads,
+            setup.attr_mode.name(),
+        );
+    }
+    format!(
+        "setup: attrs {:.1} ms | partition {:.1} ms | tries {:.1} ms (merge {:.1} ms) \
+         | dag {:.1} ms ({} setup threads, {} attrs)",
+        setup.attrs_ms,
+        setup.partition_ms,
+        setup.trie_ms,
+        setup.trie_merge_ms,
+        setup.dag_ms,
+        setup.setup_threads,
+        setup.attr_mode.name(),
+    )
+}
+
+/// The `spill:` line for the binary sink.
+/// CI grep: `spill: [0-9]+ shard\(s\) spilled`.
+pub fn spill_line(spill: &SpillSummary) -> String {
+    format!(
+        "spill: {} shard(s) spilled, {} bytes in {} run(s); {} shard(s) deferred in memory",
+        spill.spilled_shards,
+        spill.spill_bytes,
+        spill.spill_runs,
+        spill.deferred_shards - spill.spilled_shards,
+    )
+}
+
+/// The `merge:` timing line (driver and `merge-segments`).
+/// CI grep: `merge: .* 4 merge thread`.
+pub fn merge_line(merge_ms: f64, merge_threads: usize, deferred: usize, spilled: usize) -> String {
+    format!(
+        "merge: {merge_ms:.1} ms on {merge_threads} merge thread(s) \
+         ({deferred} deferred, {spilled} spilled)"
+    )
+}
+
+/// The `dist:` restart-recovery line.
+/// CI grep: `dist: 1 worker restart\(s\) recovered by resume`.
+pub fn dist_restart_line(restarts: usize) -> String {
+    format!("dist: {restarts} worker restart(s) recovered by resume")
+}
+
+/// The `dist:` merge-summary line.
+/// CI grep: `dist: merged 8 shard\(s\) from 2 worker\(s\)`.
+pub fn dist_merged_line(
+    shards: usize,
+    workers: usize,
+    overflow_runs: u64,
+    duplicates_dropped: u64,
+) -> String {
+    format!(
+        "dist: merged {shards} shard(s) from {workers} worker(s); {overflow_runs} overflow \
+         run(s), {duplicates_dropped} cross-worker duplicate(s) collapsed"
+    )
+}
+
+/// The `merged ...` summary line printed by `merge-segments`.
+pub fn merged_summary_line(
+    shards: usize,
+    overflow_runs: u64,
+    duplicates_dropped: u64,
+) -> String {
+    format!(
+        "merged {shards} shard(s): {overflow_runs} overflow run(s), \
+         {duplicates_dropped} cross-worker duplicate(s) collapsed"
+    )
+}
+
+/// The throttled live-progress line the distributed driver prints (and
+/// `magquilt top` renders from a shared segment directory).
+/// CI grep: `^progress: w[0-9]+/[0-9]+ jobs`.
+pub fn progress_line(
+    workers_reporting: usize,
+    workers_total: usize,
+    jobs_done: u64,
+    jobs_total: u64,
+    edges: u64,
+) -> String {
+    format!(
+        "progress: w{workers_reporting}/{workers_total} jobs {jobs_done}/{jobs_total} edges {}",
+        human_count(edges)
+    )
+}
+
+/// Compact human count: `812`, `1.2k`, `3.4M`, `1.2G`, `7.0T`.
+pub fn human_count(n: u64) -> String {
+    const UNITS: [(u64, &str); 4] =
+        [(1_000_000_000_000, "T"), (1_000_000_000, "G"), (1_000_000, "M"), (1_000, "k")];
+    for (scale, suffix) in UNITS {
+        if n >= scale {
+            return format!("{:.1}{suffix}", n as f64 / scale as f64);
+        }
+    }
+    format!("{n}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::magm::AttrSampleMode;
+
+    fn fresh_setup() -> SetupStats {
+        SetupStats {
+            attrs_ms: 1.25,
+            partition_ms: 2.5,
+            trie_ms: 3.75,
+            trie_merge_ms: 0.5,
+            dag_ms: 4.0,
+            setup_threads: 4,
+            attr_mode: AttrSampleMode::Chunked,
+            artifact_hash: 0,
+            artifact_load_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn setup_line_fresh_matches_ci_grep() {
+        let line = setup_line(&fresh_setup());
+        assert_eq!(
+            line,
+            "setup: attrs 1.2 ms | partition 2.5 ms | tries 3.8 ms (merge 0.5 ms) \
+             | dag 4.0 ms (4 setup threads, chunked attrs)"
+        );
+        // ci.yml parallel-setup smoke: grep -q "setup:"
+        assert!(line.starts_with("setup:"));
+    }
+
+    #[test]
+    fn setup_line_hydrated_matches_ci_grep() {
+        let mut s = fresh_setup();
+        s.artifact_hash = 0x00ff_00ff_00ff_00ff;
+        s.artifact_load_ms = 7.5;
+        let line = setup_line(&s);
+        assert_eq!(
+            line,
+            "setup: artifact 00ff00ff00ff00ff hydrated in 7.5 ms — \
+             attrs/partition/tries/dag skipped (4 setup threads at build, chunked attrs)"
+        );
+        // ci.yml setup-artifact smoke: grep -E "setup: artifact [0-9a-f]{16} hydrated"
+        assert!(line.contains("setup: artifact 00ff00ff00ff00ff hydrated"));
+    }
+
+    #[test]
+    fn spill_line_matches_ci_grep() {
+        let spill = SpillSummary {
+            deferred_shards: 5,
+            spilled_shards: 2,
+            spill_runs: 3,
+            spill_bytes: 4096,
+        };
+        let line = spill_line(&spill);
+        assert_eq!(
+            line,
+            "spill: 2 shard(s) spilled, 4096 bytes in 3 run(s); 3 shard(s) deferred in memory"
+        );
+        // ci.yml forced-spill smoke: grep -E "spill: [0-9]+ shard\(s\) spilled"
+        assert!(line.starts_with("spill: 2 shard(s) spilled"));
+    }
+
+    #[test]
+    fn merge_line_matches_ci_grep() {
+        let line = merge_line(12.34, 4, 1, 2);
+        assert_eq!(line, "merge: 12.3 ms on 4 merge thread(s) (1 deferred, 2 spilled)");
+        // ci.yml parallel-merge smoke: grep -E "merge: .* 4 merge thread"
+        assert!(line.contains("4 merge thread"));
+    }
+
+    #[test]
+    fn dist_lines_match_ci_greps() {
+        // ci.yml crash-inject smoke: "dist: 1 worker restart\(s\) recovered by resume"
+        assert_eq!(dist_restart_line(1), "dist: 1 worker restart(s) recovered by resume");
+        let line = dist_merged_line(8, 2, 5, 7);
+        assert_eq!(
+            line,
+            "dist: merged 8 shard(s) from 2 worker(s); 5 overflow run(s), \
+             7 cross-worker duplicate(s) collapsed"
+        );
+        // ci.yml distributed smoke: grep -E "dist: merged 8 shard\(s\) from 2 worker\(s\)"
+        assert!(line.starts_with("dist: merged 8 shard(s) from 2 worker(s)"));
+    }
+
+    #[test]
+    fn merged_summary_line_is_stable() {
+        assert_eq!(
+            merged_summary_line(8, 5, 7),
+            "merged 8 shard(s): 5 overflow run(s), 7 cross-worker duplicate(s) collapsed"
+        );
+    }
+
+    #[test]
+    fn progress_line_matches_ci_grep() {
+        let line = progress_line(3, 4, 812, 1024, 1_200_000_000);
+        assert_eq!(line, "progress: w3/4 jobs 812/1024 edges 1.2G");
+        // ci.yml telemetry smoke: grep -E "^progress: w[0-9]+/[0-9]+ jobs"
+        assert!(line.starts_with("progress: w3/4 jobs"));
+    }
+
+    #[test]
+    fn human_count_scales() {
+        assert_eq!(human_count(812), "812");
+        assert_eq!(human_count(1_234), "1.2k");
+        assert_eq!(human_count(3_400_000), "3.4M");
+        assert_eq!(human_count(1_200_000_000), "1.2G");
+        assert_eq!(human_count(7_000_000_000_000), "7.0T");
+    }
+}

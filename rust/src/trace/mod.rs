@@ -1,0 +1,461 @@
+//! Structured run telemetry: versioned JSONL trace streams.
+//!
+//! Every run (single-process sample, distributed worker, driver, merge)
+//! can emit a trace: one JSON object per line, first line a `MAGQTRC1`
+//! header, then typed events (`setup`, `job_plan`, `job_done`,
+//! `shard_seal`, `worker_start`, `worker_done`, `fault_armed`,
+//! `worker_restarts`, `merge_shard`, `merge_done`, `run_done`) with
+//! monotonic sequence numbers and run/worker ids. Files are written
+//! atomically (temp + rename) via [`crate::graph::write_atomic`].
+//!
+//! **Telemetry is write-only.** Trace values never feed stream forks,
+//! hashes, or any output-determining state — maglint invariant 7
+//! (`trace-sink`, see `docs/determinism.md` and `docs/observability.md`)
+//! enforces this structurally in both directions: output-determining
+//! modules cannot name the trace machinery, and this module's sources
+//! cannot name the RNG or hashing machinery.
+//!
+//! Wall-clock readings appear only in *hash-exempt* fields (`seq`,
+//! `pid`, `host`, any `*_ms`); completion-order-dependent fields
+//! (`disposition`, `*_bytes`, `*_runs`, `deferred`) are exempt too.
+//! [`canonical_line`] strips the exempt fields, and `finish` sorts the
+//! buffered events by their canonical rendering, so two same-seed runs
+//! produce identical event streams after stripping — the property the
+//! trace-determinism tests pin.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+pub mod console;
+pub mod progress;
+pub mod report;
+
+/// Trace stream format tag (first line of every `.trace.jsonl`).
+pub const TRACE_FORMAT: &str = "MAGQTRC1";
+
+/// A typed field value attached to a trace event.
+#[derive(Debug, Clone)]
+pub enum Fv {
+    /// Unsigned integer.
+    U(u64),
+    /// Float (rendered with 3 decimals).
+    F(f64),
+    /// String.
+    S(String),
+    /// Boolean.
+    B(bool),
+}
+
+impl Fv {
+    fn render(&self) -> String {
+        match self {
+            Fv::U(v) => format!("{v}"),
+            Fv::F(v) => format!("{v:.3}"),
+            Fv::S(v) => format!("\"{}\"", esc(v)),
+            Fv::B(v) => format!("{v}"),
+        }
+    }
+}
+
+/// Whether a field is exempt from the determinism contract: wall-clock
+/// readings, process identity, and completion-order-dependent values.
+/// Everything else in a trace stream must be bit-for-bit reproducible
+/// from `(model, seed, S)`.
+pub fn is_exempt_field(name: &str) -> bool {
+    matches!(name, "seq" | "pid" | "host" | "disposition" | "deferred" | "spilled")
+        || name.ends_with("_ms")
+        || name.ends_with("_bytes")
+        || name.ends_with("_runs")
+}
+
+/// JSON string escaping (the subset `runtime::json` round-trips).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One buffered event: name, emission order, wall-clock offset, fields.
+#[derive(Debug, Clone)]
+struct Event {
+    name: String,
+    seq: u64,
+    t_ms: f64,
+    fields: Vec<(String, Fv)>,
+}
+
+/// Buffering JSONL trace writer. Events are accumulated in memory (a
+/// trace is O(jobs + shards), never O(edges)) and written in one atomic
+/// temp+rename at the end of the run.
+#[derive(Debug)]
+pub struct TraceWriter {
+    run_id: String,
+    kind: String,
+    worker: Option<u64>,
+    epoch: Instant,
+    next_seq: u64,
+    events: Vec<Event>,
+    /// Pre-rendered event lines absorbed from child runs (the driver
+    /// appends its workers' streams after its own, in worker order).
+    absorbed: Vec<String>,
+}
+
+impl TraceWriter {
+    /// New writer for a run. `kind` is one of `sample`, `worker`,
+    /// `driver`, `merge`; `run_id` is the plan hash (or a descriptive
+    /// id for plan-less runs) — it is computed by the caller, never
+    /// here.
+    pub fn new(run_id: &str, kind: &str, worker: Option<usize>) -> TraceWriter {
+        TraceWriter {
+            run_id: run_id.to_string(),
+            kind: kind.to_string(),
+            worker: worker.map(|w| w as u64),
+            epoch: Instant::now(),
+            next_seq: 0,
+            events: Vec::new(),
+            absorbed: Vec::new(),
+        }
+    }
+
+    /// Record one event. `seq` and `t_ms` are assigned here, at emission
+    /// (real order); both are exempt fields, and `finish_lines` later
+    /// sorts by canonical (non-exempt) content so thread interleaving
+    /// never shows in the stripped stream.
+    pub fn emit(&mut self, name: &str, fields: &[(&str, Fv)]) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.events.push(Event {
+            name: name.to_string(),
+            seq,
+            t_ms: self.epoch.elapsed().as_secs_f64() * 1e3,
+            fields: fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        });
+    }
+
+    /// Append pre-rendered event lines from a child stream.
+    pub fn absorb(&mut self, lines: impl IntoIterator<Item = String>) {
+        self.absorbed.extend(lines);
+    }
+
+    /// The stream header line.
+    pub fn header_line(&self) -> String {
+        let mut s = format!(
+            "{{\"format\":\"{TRACE_FORMAT}\",\"run\":\"{}\",\"kind\":\"{}\"",
+            esc(&self.run_id),
+            esc(&self.kind),
+        );
+        if let Some(w) = self.worker {
+            s.push_str(&format!(",\"worker\":{w}"));
+        }
+        s.push_str(&format!(",\"pid\":{}}}", std::process::id()));
+        s
+    }
+
+    fn render_event(&self, e: &Event) -> String {
+        let mut s = format!("{{\"event\":\"{}\"", esc(&e.name));
+        if let Some(w) = self.worker {
+            s.push_str(&format!(",\"worker\":{w}"));
+        }
+        for (k, v) in &e.fields {
+            s.push_str(&format!(",\"{}\":{}", esc(k), v.render()));
+        }
+        s.push_str(&format!(",\"seq\":{},\"t_ms\":{:.3}}}", e.seq, e.t_ms));
+        s
+    }
+
+    /// The canonical (sort) key of an event: its name plus every
+    /// non-exempt field, in emission field order.
+    fn canonical_key(&self, e: &Event) -> String {
+        let mut s = e.name.clone();
+        for (k, v) in &e.fields {
+            if !is_exempt_field(k) {
+                s.push_str(&format!("|{k}={}", v.render()));
+            }
+        }
+        s
+    }
+
+    /// Finalize: header, then events stable-sorted by canonical key,
+    /// then absorbed child streams verbatim.
+    pub fn finish_lines(&self) -> Vec<String> {
+        let mut keyed: Vec<(String, String)> = self
+            .events
+            .iter()
+            .map(|e| (self.canonical_key(e), self.render_event(e)))
+            .collect();
+        keyed.sort_by(|a, b| a.0.cmp(&b.0)); // stable: ties keep emission order
+        let mut out = Vec::with_capacity(1 + keyed.len() + self.absorbed.len());
+        out.push(self.header_line());
+        out.extend(keyed.into_iter().map(|(_, line)| line));
+        out.extend(self.absorbed.iter().cloned());
+        out
+    }
+}
+
+/// Cheap-clone handle threaded through the coordinator, sinks, and the
+/// distributed runtime. Disabled (the default) it is a no-op with no
+/// allocation per event — pay-for-what-you-use.
+#[derive(Debug, Clone, Default)]
+pub struct TraceHandle(Option<Arc<Mutex<TraceWriter>>>);
+
+impl TraceHandle {
+    /// The no-op handle.
+    pub fn disabled() -> TraceHandle {
+        TraceHandle(None)
+    }
+
+    /// An enabled handle for one run.
+    pub fn new(run_id: &str, kind: &str, worker: Option<usize>) -> TraceHandle {
+        TraceHandle(Some(Arc::new(Mutex::new(TraceWriter::new(run_id, kind, worker)))))
+    }
+
+    /// Whether events are being recorded.
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    fn with<T>(&self, f: impl FnOnce(&mut TraceWriter) -> T) -> Option<T> {
+        let cell = self.0.as_ref()?;
+        // A panicked emitter cannot corrupt a buffer of rendered lines;
+        // recover the poisoned lock rather than cascading the panic.
+        let mut w = match cell.lock() {
+            Ok(w) => w,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        Some(f(&mut w))
+    }
+
+    /// Record one event (no-op when disabled).
+    pub fn emit(&self, name: &str, fields: &[(&str, Fv)]) {
+        self.with(|w| w.emit(name, fields));
+    }
+
+    /// Append a child run's rendered stream (its header line removed).
+    pub fn absorb_stream(&self, text: &str) {
+        self.with(|w| {
+            w.absorb(
+                text.lines()
+                    .skip(1) // the child's header
+                    .filter(|l| !l.trim().is_empty())
+                    .map(|l| l.to_string()),
+            );
+        });
+    }
+
+    /// The finalized stream (for tests and for the driver's absorption
+    /// of worker streams). Empty when disabled.
+    pub fn lines(&self) -> Vec<String> {
+        self.with(|w| w.finish_lines()).unwrap_or_default()
+    }
+
+    /// Atomically write the finalized stream to `path` (no-op when
+    /// disabled).
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        let Some(lines) = self.with(|w| w.finish_lines()) else {
+            return Ok(());
+        };
+        let mut body = lines.join("\n");
+        body.push('\n');
+        let (dir, name) = split_dir_name(path)
+            .with_context(|| format!("trace path {} has no file name", path.display()))?;
+        crate::graph::write_atomic(&dir, &name, body.as_bytes())
+            .with_context(|| format!("writing trace stream {}", path.display()))
+    }
+}
+
+/// Split a path into (parent dir, file name) for `write_atomic`.
+pub(crate) fn split_dir_name(path: &Path) -> Option<(std::path::PathBuf, String)> {
+    let name = path.file_name()?.to_string_lossy().into_owned();
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    Some((dir, name))
+}
+
+/// Canonicalize one rendered trace line for determinism comparison:
+/// parse it, drop the exempt fields, and re-render with sorted keys.
+/// Returns `None` for non-JSON lines.
+pub fn canonical_line(line: &str) -> Option<String> {
+    let parsed = crate::runtime::json::Json::parse(line).ok()?;
+    let crate::runtime::json::Json::Obj(map) = parsed else {
+        return None;
+    };
+    let mut out = String::from("{");
+    let mut first = true;
+    for (k, v) in &map {
+        // BTreeMap iteration is sorted by key — deterministic. lint: order-ok(sorted map)
+        if is_exempt_field(k) {
+            continue;
+        }
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!("\"{}\":{}", esc(k), render_json(v)));
+    }
+    out.push('}');
+    Some(out)
+}
+
+fn render_json(v: &crate::runtime::json::Json) -> String {
+    use crate::runtime::json::Json;
+    match v {
+        Json::Null => "null".to_string(),
+        Json::Bool(b) => format!("{b}"),
+        Json::Num(n) => format!("{n}"),
+        Json::Str(s) => format!("\"{}\"", esc(s)),
+        Json::Arr(items) => {
+            let inner: Vec<String> = items.iter().map(render_json).collect();
+            format!("[{}]", inner.join(","))
+        }
+        Json::Obj(map) => {
+            let inner: Vec<String> = map
+                .iter() // lint: order-ok(sorted map)
+                .map(|(k, v)| format!("\"{}\":{}", esc(k), render_json(v)))
+                .collect();
+            format!("{{{}}}", inner.join(","))
+        }
+    }
+}
+
+/// Strip the exempt fields from a whole rendered stream — the
+/// comparison form used by the trace-determinism tests.
+pub fn canonical_stream(lines: &[String]) -> Vec<String> {
+    lines.iter().filter_map(|l| canonical_line(l)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_is_a_noop() {
+        let t = TraceHandle::disabled();
+        assert!(!t.is_enabled());
+        t.emit("setup", &[("setup_threads", Fv::U(4))]);
+        assert!(t.lines().is_empty());
+        assert!(t.write_to(Path::new("/nonexistent/dir/x.trace.jsonl")).is_ok());
+    }
+
+    #[test]
+    fn header_and_events_render_as_json() {
+        let t = TraceHandle::new("00ff00ff00ff00ff", "worker", Some(3));
+        t.emit("shard_seal", &[("shard", Fv::U(2)), ("edges", Fv::U(17))]);
+        t.emit("note", &[("msg", Fv::S("a \"quoted\"\npath".into()))]);
+        let lines = t.lines();
+        assert_eq!(lines.len(), 3);
+        let header = crate::runtime::json::Json::parse(&lines[0]).unwrap();
+        assert_eq!(header.get("format").unwrap().as_str(), Some(TRACE_FORMAT));
+        assert_eq!(header.get("run").unwrap().as_str(), Some("00ff00ff00ff00ff"));
+        assert_eq!(header.get("kind").unwrap().as_str(), Some("worker"));
+        assert_eq!(header.get("worker").unwrap().as_u64(), Some(3));
+        for line in &lines[1..] {
+            let e = crate::runtime::json::Json::parse(line).unwrap();
+            assert!(e.get("event").is_some());
+            assert!(e.get("seq").is_some());
+            assert!(e.get("t_ms").is_some());
+            assert_eq!(e.get("worker").unwrap().as_u64(), Some(3));
+        }
+        let note = crate::runtime::json::Json::parse(&lines[2]).unwrap();
+        assert_eq!(note.get("msg").unwrap().as_str(), Some("a \"quoted\"\npath"));
+    }
+
+    #[test]
+    fn seq_is_monotonic_in_emission_order() {
+        let t = TraceHandle::new("r", "sample", None);
+        for i in 0..5u64 {
+            t.emit("job_done", &[("job", Fv::U(i))]);
+        }
+        let mut seqs: Vec<u64> = t.lines()[1..]
+            .iter()
+            .map(|l| {
+                crate::runtime::json::Json::parse(l).unwrap().get("seq").unwrap().as_u64().unwrap()
+            })
+            .collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn canonical_sort_neutralizes_emission_order() {
+        // The same logical events emitted in two different thread
+        // interleavings produce identical streams after stripping the
+        // exempt fields — the trace-determinism contract.
+        let a = TraceHandle::new("run", "sample", None);
+        a.emit("shard_seal", &[("shard", Fv::U(0)), ("edges", Fv::U(10))]);
+        a.emit("shard_seal", &[("shard", Fv::U(1)), ("edges", Fv::U(20))]);
+        a.emit("run_done", &[("edges", Fv::U(30)), ("wall_ms", Fv::F(1.5))]);
+        let b = TraceHandle::new("run", "sample", None);
+        b.emit("shard_seal", &[("shard", Fv::U(1)), ("edges", Fv::U(20))]);
+        b.emit("run_done", &[("edges", Fv::U(30)), ("wall_ms", Fv::F(99.0))]);
+        b.emit("shard_seal", &[("shard", Fv::U(0)), ("edges", Fv::U(10))]);
+        assert_eq!(canonical_stream(&a.lines()), canonical_stream(&b.lines()));
+    }
+
+    #[test]
+    fn exempt_fields_are_stripped_by_canonical_line() {
+        let line = r#"{"event":"shard_seal","shard":1,"edges":9,"disposition":"spilled","spill_bytes":64,"seq":4,"t_ms":0.120}"#;
+        let canon = canonical_line(line).unwrap();
+        assert_eq!(canon, r#"{"edges":9,"event":"shard_seal","shard":1}"#);
+        assert!(is_exempt_field("t_ms"));
+        assert!(is_exempt_field("artifact_load_ms"));
+        assert!(is_exempt_field("spill_bytes"));
+        assert!(is_exempt_field("seq"));
+        assert!(!is_exempt_field("edges"));
+        assert!(!is_exempt_field("shard"));
+        assert!(!is_exempt_field("seed"));
+    }
+
+    #[test]
+    fn absorbed_child_streams_append_after_own_events() {
+        let worker = TraceHandle::new("p", "worker", Some(1));
+        worker.emit("worker_done", &[("owned_edges", Fv::U(7))]);
+        let child_text = format!("{}\n", worker.lines().join("\n"));
+        let driver = TraceHandle::new("p", "driver", None);
+        driver.emit("worker_restarts", &[("restarts", Fv::U(0))]);
+        driver.absorb_stream(&child_text);
+        let lines = driver.lines();
+        assert_eq!(lines.len(), 3); // header + own event + child event
+        assert!(lines[1].contains("\"event\":\"worker_restarts\""));
+        assert!(lines[2].contains("\"event\":\"worker_done\""));
+        assert!(!lines[2].contains("\"format\""), "child header must be dropped");
+    }
+
+    #[test]
+    fn write_to_lands_a_parseable_stream() {
+        let dir = std::env::temp_dir().join("magquilt_trace_write");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = TraceHandle::new("deadbeefdeadbeef", "merge", None);
+        t.emit("merge_done", &[("total_edges", Fv::U(123)), ("merge_ms", Fv::F(4.25))]);
+        let path = dir.join("run.trace.jsonl");
+        t.write_to(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            crate::runtime::json::Json::parse(line).unwrap();
+        }
+        assert!(lines[0].contains("\"format\":\"MAGQTRC1\""));
+        // No temp residue next to the stream.
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["run.trace.jsonl".to_string()]);
+    }
+}

@@ -1,0 +1,211 @@
+//! Live progress records: the PR-8 heartbeat files, upgraded.
+//!
+//! A worker's heartbeat file (`hb-<plan>-wNNNN.beat`) used to be an
+//! empty mtime-only touch. It now carries a small `magquilt-progress-v1`
+//! key=value record (same self-describing text convention as the
+//! `done-*.ok` markers) that the supervising driver — and `magquilt top`
+//! on a shared filesystem — parses into a one-line aggregate status:
+//!
+//! ```text
+//! progress: w3/4 jobs 812/1024 edges 1.2G
+//! ```
+//!
+//! An empty or unparseable heartbeat is tolerated everywhere (a legacy
+//! worker binary still supervises fine); progress is observability only
+//! and never feeds the merge or any output-determining state.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Progress record format tag.
+pub const PROGRESS_FORMAT: &str = "magquilt-progress-v1";
+
+/// Shared live counters, bumped from sampler worker threads and the
+/// sink delivery loop with relaxed atomics (no ordering requirement —
+/// a progress snapshot is allowed to be slightly stale).
+#[derive(Debug, Default)]
+pub struct ProgressState {
+    /// Sampling jobs completed.
+    pub jobs_done: AtomicU64,
+    /// Total sampling jobs planned (0 until planning finishes).
+    pub jobs_total: AtomicU64,
+    /// Edges emitted through sealed shards.
+    pub edges: AtomicU64,
+    /// Shards sealed (delivered to the sink).
+    pub shards_sealed: AtomicU64,
+    /// Bytes of edge payload written (8 bytes per binary edge).
+    pub bytes_written: AtomicU64,
+}
+
+impl ProgressState {
+    /// New zeroed state.
+    pub fn new() -> ProgressState {
+        ProgressState::default()
+    }
+
+    /// Point-in-time copy.
+    pub fn snapshot(&self) -> ProgressSnapshot {
+        ProgressSnapshot {
+            jobs_done: self.jobs_done.load(Ordering::Relaxed),
+            jobs_total: self.jobs_total.load(Ordering::Relaxed),
+            edges: self.edges.load(Ordering::Relaxed),
+            shards_sealed: self.shards_sealed.load(Ordering::Relaxed),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Render the heartbeat-file payload for `worker` of plan `plan`.
+    pub fn render(&self, plan: &str, worker: usize) -> String {
+        self.snapshot().render(plan, worker)
+    }
+}
+
+/// Plain-value snapshot of a [`ProgressState`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProgressSnapshot {
+    /// Sampling jobs completed.
+    pub jobs_done: u64,
+    /// Total sampling jobs planned.
+    pub jobs_total: u64,
+    /// Edges emitted through sealed shards.
+    pub edges: u64,
+    /// Shards sealed.
+    pub shards_sealed: u64,
+    /// Bytes of edge payload written.
+    pub bytes_written: u64,
+}
+
+impl ProgressSnapshot {
+    /// Render as a `magquilt-progress-v1` record.
+    pub fn render(&self, plan: &str, worker: usize) -> String {
+        format!(
+            "format = {PROGRESS_FORMAT}\nplan = {plan}\nworker = {worker}\n\
+             jobs_done = {}\njobs_total = {}\nedges = {}\nshards_sealed = {}\n\
+             bytes_written = {}\n",
+            self.jobs_done, self.jobs_total, self.edges, self.shards_sealed, self.bytes_written,
+        )
+    }
+}
+
+/// A parsed progress record: the snapshot plus its provenance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProgressRecord {
+    /// Plan hash the worker is executing.
+    pub plan: String,
+    /// Worker index.
+    pub worker: usize,
+    /// The counters.
+    pub counts: ProgressSnapshot,
+}
+
+/// Parse a heartbeat payload. Returns `None` for empty files (legacy
+/// mtime-only heartbeats), wrong format tags, or malformed records —
+/// progress is best-effort by design.
+pub fn parse_progress(text: &str) -> Option<ProgressRecord> {
+    let mut plan = None;
+    let mut worker = None;
+    let mut counts = ProgressSnapshot::default();
+    let mut format_ok = false;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line.split_once('=')?;
+        let (key, value) = (key.trim(), value.trim());
+        match key {
+            "format" => format_ok = value == PROGRESS_FORMAT,
+            "plan" => plan = Some(value.to_string()),
+            "worker" => worker = value.parse().ok(),
+            "jobs_done" => counts.jobs_done = value.parse().ok()?,
+            "jobs_total" => counts.jobs_total = value.parse().ok()?,
+            "edges" => counts.edges = value.parse().ok()?,
+            "shards_sealed" => counts.shards_sealed = value.parse().ok()?,
+            "bytes_written" => counts.bytes_written = value.parse().ok()?,
+            _ => {} // forward-compatible: ignore unknown keys
+        }
+    }
+    if !format_ok {
+        return None;
+    }
+    Some(ProgressRecord { plan: plan?, worker: worker?, counts })
+}
+
+/// Sum worker records into the driver's aggregate view.
+pub fn aggregate(records: &[ProgressRecord]) -> ProgressSnapshot {
+    let mut total = ProgressSnapshot::default();
+    for r in records {
+        total.jobs_done += r.counts.jobs_done;
+        total.jobs_total += r.counts.jobs_total;
+        total.edges += r.counts.edges;
+        total.shards_sealed += r.counts.shards_sealed;
+        total.bytes_written += r.counts.bytes_written;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_parse_round_trip() {
+        let state = ProgressState::new();
+        state.jobs_total.store(1024, Ordering::Relaxed);
+        state.jobs_done.store(812, Ordering::Relaxed);
+        state.edges.store(5_000_000, Ordering::Relaxed);
+        state.shards_sealed.store(6, Ordering::Relaxed);
+        state.bytes_written.store(40_000_000, Ordering::Relaxed);
+        let text = state.render("00ff00ff00ff00ff", 3);
+        assert!(text.starts_with("format = magquilt-progress-v1\n"));
+        let rec = parse_progress(&text).unwrap();
+        assert_eq!(rec.plan, "00ff00ff00ff00ff");
+        assert_eq!(rec.worker, 3);
+        assert_eq!(rec.counts, state.snapshot());
+    }
+
+    #[test]
+    fn legacy_empty_heartbeat_parses_to_none() {
+        assert_eq!(parse_progress(""), None);
+        assert_eq!(parse_progress("\n\n"), None);
+    }
+
+    #[test]
+    fn malformed_records_parse_to_none() {
+        assert!(parse_progress("format = magquilt-progress-v1\nplan = x\n").is_none()); // no worker
+        assert!(parse_progress("plan = x\nworker = 0\n").is_none()); // no format tag
+        assert!(parse_progress("format = magquilt-progress-v2\nplan = x\nworker = 0\n").is_none());
+        assert!(parse_progress("format = magquilt-progress-v1\nplan = x\nworker = zero\n")
+            .is_none());
+        assert!(parse_progress("format = magquilt-progress-v1\nnot a kv line\n").is_none());
+    }
+
+    #[test]
+    fn unknown_keys_are_forward_compatible() {
+        let text = "format = magquilt-progress-v1\nplan = p\nworker = 1\n\
+                    jobs_done = 2\njobs_total = 4\nedges = 10\nshards_sealed = 1\n\
+                    bytes_written = 80\nfuture_key = 9\n";
+        let rec = parse_progress(text).unwrap();
+        assert_eq!(rec.counts.jobs_done, 2);
+        assert_eq!(rec.counts.bytes_written, 80);
+    }
+
+    #[test]
+    fn aggregate_sums_workers() {
+        let mk = |w: usize, done: u64, total: u64, edges: u64| ProgressRecord {
+            plan: "p".into(),
+            worker: w,
+            counts: ProgressSnapshot {
+                jobs_done: done,
+                jobs_total: total,
+                edges,
+                shards_sealed: 1,
+                bytes_written: edges * 8,
+            },
+        };
+        let agg = aggregate(&[mk(0, 400, 512, 100), mk(1, 412, 512, 250)]);
+        assert_eq!(agg.jobs_done, 812);
+        assert_eq!(agg.jobs_total, 1024);
+        assert_eq!(agg.edges, 350);
+        assert_eq!(agg.bytes_written, 2800);
+    }
+}

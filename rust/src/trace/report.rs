@@ -1,0 +1,375 @@
+//! Machine-readable run reports (`report.json`, format `MAGQRPT1`).
+//!
+//! One ordered-field JSON serializer ([`JsonObj`]) is shared by the run
+//! reports and by `benches/sampling.rs` — BENCH_quilt.json and
+//! `report.json` agree on field names by construction, so a MAGFIT-style
+//! A/B comparison can join them without a translation table.
+//!
+//! Report kinds: `sample` (single-process run), `worker` (one dist
+//! worker), `driver` (supervised dist run, embeds per-worker reports),
+//! `merge` (standalone `merge-segments`). `magquilt report <file>
+//! [--compare <file>]` pretty-prints and diffs them; [`validate_report`]
+//! is the schema gate the tests and the CI telemetry leg run.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{RunStats, SetupStats};
+use crate::graph::{ShardMergeStats, SpillSummary};
+use crate::runtime::json::Json;
+
+/// Report format tag (the `format` field of every report.json).
+pub const REPORT_FORMAT: &str = "MAGQRPT1";
+
+/// An insertion-ordered JSON object builder: the zero-dependency
+/// serializer half of [`crate::runtime::json`] (which only parses).
+#[derive(Debug, Clone, Default)]
+pub struct JsonObj {
+    parts: Vec<(String, String)>,
+}
+
+impl JsonObj {
+    /// New empty object.
+    pub fn new() -> JsonObj {
+        JsonObj::default()
+    }
+
+    fn push(mut self, key: &str, rendered: String) -> JsonObj {
+        self.parts.push((key.to_string(), rendered));
+        self
+    }
+
+    /// Unsigned integer field.
+    pub fn uint(self, key: &str, v: u64) -> JsonObj {
+        self.push(key, format!("{v}"))
+    }
+
+    /// Float field (3 decimals).
+    pub fn float(self, key: &str, v: f64) -> JsonObj {
+        self.push(key, format!("{v:.3}"))
+    }
+
+    /// String field.
+    pub fn text(self, key: &str, v: &str) -> JsonObj {
+        self.push(key, format!("\"{}\"", esc(v)))
+    }
+
+    /// Boolean field.
+    pub fn flag(self, key: &str, v: bool) -> JsonObj {
+        self.push(key, format!("{v}"))
+    }
+
+    /// Nested object field.
+    pub fn obj(self, key: &str, v: JsonObj) -> JsonObj {
+        let rendered = v.render();
+        self.push(key, rendered)
+    }
+
+    /// Array field of pre-rendered JSON values.
+    pub fn arr(self, key: &str, items: Vec<String>) -> JsonObj {
+        self.push(key, format!("[{}]", items.join(",")))
+    }
+
+    /// Render compactly, fields in insertion order.
+    pub fn render(&self) -> String {
+        let inner: Vec<String> =
+            self.parts.iter().map(|(k, v)| format!("\"{}\":{}", esc(k), v)).collect();
+        format!("{{{}}}", inner.join(","))
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize [`SetupStats`] — the field names every report kind and the
+/// bench `setup_sweep` section share.
+pub fn setup_obj(setup: &SetupStats) -> JsonObj {
+    JsonObj::new()
+        .float("attrs_ms", setup.attrs_ms)
+        .float("partition_ms", setup.partition_ms)
+        .float("trie_ms", setup.trie_ms)
+        .float("trie_merge_ms", setup.trie_merge_ms)
+        .float("dag_ms", setup.dag_ms)
+        .uint("setup_threads", setup.setup_threads as u64)
+        .text("attr_mode", setup.attr_mode.name())
+        .text("artifact_hash", &format!("{:016x}", setup.artifact_hash))
+        .float("artifact_load_ms", setup.artifact_load_ms)
+}
+
+/// Serialize one [`ShardMergeStats`] row (shared with the bench
+/// `shard_sweep` per-shard output).
+pub fn shard_stats_obj(s: &ShardMergeStats) -> JsonObj {
+    JsonObj::new()
+        .uint("shard", s.shard as u64)
+        .uint("edges", s.edges as u64)
+        .uint("batches", s.batches)
+        .uint("max_batch", s.max_batch as u64)
+        .uint("duplicates_dropped", s.duplicates_dropped)
+        .uint("peak_resident", s.peak_resident as u64)
+        .flag("deferred", s.deferred)
+        .uint("spill_runs", s.spill_runs)
+        .uint("spill_bytes", s.spill_bytes)
+}
+
+/// Serialize a [`SpillSummary`].
+pub fn spill_obj(spill: &SpillSummary) -> JsonObj {
+    JsonObj::new()
+        .uint("deferred_shards", spill.deferred_shards as u64)
+        .uint("spilled_shards", spill.spilled_shards as u64)
+        .uint("spill_runs", spill.spill_runs)
+        .uint("spill_bytes", spill.spill_bytes)
+}
+
+/// Serialize a full [`RunStats`] (setup + spill + per-shard rows).
+pub fn run_stats_obj(stats: &RunStats) -> JsonObj {
+    JsonObj::new()
+        .uint("partition_size", stats.partition_size as u64)
+        .uint("num_jobs", stats.num_jobs as u64)
+        .uint("workers", stats.workers as u64)
+        .uint("num_shards", stats.num_shards as u64)
+        .uint("num_edges", stats.num_edges as u64)
+        .float("wall_ms", stats.wall_ms)
+        .float("edges_per_sec", stats.edges_per_sec)
+        .uint("dropped_resamples", stats.dropped_resamples)
+        .obj("setup", setup_obj(&stats.setup))
+        .obj("spill", spill_obj(&stats.spill))
+        .arr(
+            "shards",
+            stats.shard_stats.iter().map(|s| shard_stats_obj(s).render()).collect(),
+        )
+}
+
+/// The common report envelope: format tag, kind, run id, peak RSS.
+pub fn report_header(kind: &str, run_id: &str) -> JsonObj {
+    JsonObj::new()
+        .text("format", REPORT_FORMAT)
+        .text("kind", kind)
+        .text("run", run_id)
+        .uint("peak_rss_kb", crate::metrics::peak_rss_kb())
+}
+
+/// `kind: sample` — a single-process run.
+pub fn sample_report(run_id: &str, stats: &RunStats) -> String {
+    report_header("sample", run_id).obj("stats", run_stats_obj(stats)).render()
+}
+
+/// Required keys per kind, used by [`validate_report`].
+fn required_keys(kind: &str) -> Option<&'static [&'static str]> {
+    match kind {
+        "sample" => Some(&["stats"]),
+        "worker" => Some(&["worker", "jobs_run", "jobs_total", "summary", "stats"]),
+        "driver" => Some(&["workers", "restarts", "merge"]),
+        "merge" => Some(&["merge"]),
+        _ => None,
+    }
+}
+
+/// Parse and schema-check a report: the format tag, a known kind, and
+/// that kind's required fields. Returns the kind.
+pub fn validate_report(text: &str) -> Result<String> {
+    let doc = Json::parse(text).context("report.json is not valid JSON")?;
+    let format = doc.get("format").and_then(Json::as_str).unwrap_or("");
+    if format != REPORT_FORMAT {
+        bail!("report format {format:?} is not {REPORT_FORMAT:?}");
+    }
+    let kind = doc.get("kind").and_then(Json::as_str).unwrap_or("").to_string();
+    let Some(required) = required_keys(&kind) else {
+        bail!("unknown report kind {kind:?}");
+    };
+    for key in required {
+        if doc.get(key).is_none() {
+            bail!("report kind {kind:?} is missing required field {key:?}");
+        }
+    }
+    if doc.get("run").and_then(Json::as_str).is_none() {
+        bail!("report is missing its run id");
+    }
+    Ok(kind)
+}
+
+/// Pretty-print a report for `magquilt report <file>`.
+pub fn pretty(text: &str) -> Result<String> {
+    let doc = Json::parse(text).context("report.json is not valid JSON")?;
+    let mut out = String::new();
+    pretty_into(&doc, 0, &mut out);
+    out.push('\n');
+    Ok(out)
+}
+
+fn pretty_into(v: &Json, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent + 1);
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(&format!("{b}")),
+        Json::Num(n) => out.push_str(&format!("{n}")),
+        Json::Str(s) => out.push_str(&format!("\"{}\"", esc(s))),
+        Json::Arr(items) if items.is_empty() => out.push_str("[]"),
+        Json::Arr(items) => {
+            out.push_str("[\n");
+            for (i, item) in items.iter().enumerate() {
+                out.push_str(&pad);
+                pretty_into(item, indent + 1, out);
+                if i + 1 < items.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&"  ".repeat(indent));
+            out.push(']');
+        }
+        Json::Obj(map) if map.is_empty() => out.push_str("{}"),
+        Json::Obj(map) => {
+            out.push_str("{\n");
+            let n = map.len();
+            for (i, (k, val)) in map.iter().enumerate() {
+                // lint: order-ok(sorted map)
+                out.push_str(&format!("{pad}\"{}\": ", esc(k)));
+                pretty_into(val, indent + 1, out);
+                if i + 1 < n {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&"  ".repeat(indent));
+            out.push('}');
+        }
+    }
+}
+
+/// Flatten a report into dotted-path leaves for comparison.
+fn flatten(v: &Json, prefix: &str, out: &mut BTreeMap<String, String>) {
+    match v {
+        Json::Obj(map) => {
+            for (k, val) in map {
+                // lint: order-ok(sorted map)
+                let path = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten(val, &path, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                flatten(item, &format!("{prefix}[{i}]"), out);
+            }
+        }
+        Json::Null => {
+            out.insert(prefix.to_string(), "null".to_string());
+        }
+        Json::Bool(b) => {
+            out.insert(prefix.to_string(), format!("{b}"));
+        }
+        Json::Num(n) => {
+            out.insert(prefix.to_string(), format!("{n}"));
+        }
+        Json::Str(s) => {
+            out.insert(prefix.to_string(), format!("\"{}\"", esc(s)));
+        }
+    }
+}
+
+/// Field-by-field diff of two reports for `magquilt report A --compare B`.
+/// Numeric fields get a delta; fields present on one side only are
+/// listed. Returns an empty string when the reports agree everywhere.
+pub fn compare(a_text: &str, b_text: &str) -> Result<String> {
+    let a = Json::parse(a_text).context("first report is not valid JSON")?;
+    let b = Json::parse(b_text).context("second report is not valid JSON")?;
+    let (mut fa, mut fb) = (BTreeMap::new(), BTreeMap::new());
+    flatten(&a, "", &mut fa);
+    flatten(&b, "", &mut fb);
+    let mut out = String::new();
+    for (path, va) in &fa {
+        match fb.get(path) {
+            None => out.push_str(&format!("- {path}: {va} (only in first)\n")),
+            Some(vb) if va == vb => {}
+            Some(vb) => match (va.parse::<f64>(), vb.parse::<f64>()) {
+                (Ok(na), Ok(nb)) => {
+                    out.push_str(&format!("~ {path}: {va} -> {vb} (delta {:+.3})\n", nb - na));
+                }
+                _ => out.push_str(&format!("~ {path}: {va} -> {vb}\n")),
+            },
+        }
+    }
+    for (path, vb) in &fb {
+        if !fa.contains_key(path) {
+            out.push_str(&format!("+ {path}: {vb} (only in second)\n"));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_obj_renders_in_insertion_order() {
+        let o = JsonObj::new()
+            .uint("z", 1)
+            .float("a", 2.5)
+            .text("m", "hi \"there\"")
+            .flag("ok", true)
+            .obj("inner", JsonObj::new().uint("x", 7))
+            .arr("items", vec!["1".to_string(), "2".to_string()]);
+        assert_eq!(
+            o.render(),
+            r#"{"z":1,"a":2.500,"m":"hi \"there\"","ok":true,"inner":{"x":7},"items":[1,2]}"#
+        );
+        // And it parses back through the runtime reader.
+        let j = Json::parse(&o.render()).unwrap();
+        assert_eq!(j.get("inner").unwrap().get("x").unwrap().as_u64(), Some(7));
+        assert_eq!(j.get("m").unwrap().as_str(), Some("hi \"there\""));
+    }
+
+    #[test]
+    fn validate_rejects_bad_reports() {
+        assert!(validate_report("not json").is_err());
+        assert!(validate_report(r#"{"format":"NOPE","kind":"sample"}"#).is_err());
+        assert!(validate_report(r#"{"format":"MAGQRPT1","kind":"mystery","run":"r"}"#).is_err());
+        // Right kind, missing required field.
+        assert!(validate_report(r#"{"format":"MAGQRPT1","kind":"driver","run":"r"}"#).is_err());
+        // Missing run id.
+        assert!(validate_report(
+            r#"{"format":"MAGQRPT1","kind":"driver","workers":2,"restarts":0,"merge":{}}"#
+        )
+        .is_err());
+        // Minimal valid driver report.
+        let ok = r#"{"format":"MAGQRPT1","kind":"driver","run":"r","workers":2,"restarts":0,"merge":{}}"#;
+        assert_eq!(validate_report(ok).unwrap(), "driver");
+    }
+
+    #[test]
+    fn pretty_round_trips_through_the_parser() {
+        let text = r#"{"format":"MAGQRPT1","kind":"merge","run":"r","merge":{"shards":[{"shard":0,"edges":3}],"total_edges":3}}"#;
+        let p = pretty(text).unwrap();
+        assert!(p.contains("\"total_edges\": 3"));
+        let reparsed = Json::parse(&p).unwrap();
+        assert_eq!(reparsed, Json::parse(text).unwrap());
+    }
+
+    #[test]
+    fn compare_reports_numeric_deltas_and_asymmetries() {
+        let a = r#"{"wall_ms":10.0,"edges":100,"only_a":1,"name":"x"}"#;
+        let b = r#"{"wall_ms":12.5,"edges":100,"only_b":2,"name":"y"}"#;
+        let d = compare(a, b).unwrap();
+        assert!(d.contains("~ wall_ms: 10 -> 12.5 (delta +2.500)"));
+        assert!(d.contains("- only_a: 1 (only in first)"));
+        assert!(d.contains("+ only_b: 2 (only in second)"));
+        assert!(d.contains("~ name: \"x\" -> \"y\""));
+        assert!(!d.contains("edges:"), "equal fields are not reported");
+        // Identical reports diff to nothing.
+        assert_eq!(compare(a, a).unwrap(), "");
+    }
+}
